@@ -1,0 +1,115 @@
+//! End-to-end driver (DESIGN.md §End-to-end validation): the full system —
+//! synthetic workload → AOT'd Pallas kernels through PJRT → thread-per-VM
+//! cloud runtime with latency-injected blob/queue services → the paper's
+//! headline metric (normalized distortion vs real wall-clock, and the
+//! scale-up across M).
+//!
+//! This is the FIG4 pipeline on a real small workload, with every layer
+//! composed: L1/L2 artifacts on the worker hot path, L3 coordination over
+//! real threads and real (injected) latency.
+//!
+//! Testbed note: each simulated VM is paced to `point_compute` seconds per
+//! point (here 100 µs — a 2012-Azure-worker rate), so a single host core
+//! can carry the whole fleet the way the paper's 32 VMs carried theirs;
+//! PJRT dispatch (~5 µs/pt) fits well inside the pacing budget up to
+//! M = 16 on one core.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example cloud_e2e
+//! ```
+
+use std::path::Path;
+
+use dalvq::cloud::run_cloud;
+use dalvq::config::{CloudConfig, ExperimentConfig, SchemeConfig};
+use dalvq::metrics::time_to_threshold;
+use dalvq::runtime::EngineSpec;
+use dalvq::sim::DelayModel;
+use dalvq::vq::Schedule;
+use dalvq::Result;
+
+fn main() -> Result<()> {
+    let artifacts = Path::new("artifacts");
+    let have_artifacts = artifacts.join("manifest.json").exists();
+    if !have_artifacts {
+        eprintln!(
+            "warning: artifacts/ missing — run `make artifacts`; \
+             using the native engine"
+        );
+    }
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.scheme = SchemeConfig::AsyncDelta {
+        tau: 10,
+        up_delay: DelayModel::Instant, // latency comes from the services
+        down_delay: DelayModel::Instant,
+    };
+    cfg.vq.init = dalvq::vq::InitMethod::Gaussian;
+    cfg.run.points_per_worker = 20_000;
+    cfg.run.eval_interval = 0.01;
+    cfg.vq.schedule = Schedule::InverseTime { eps0: 0.005, half_life: 50_000.0 };
+    cfg.engine = if have_artifacts {
+        EngineSpec::Pjrt { artifacts_dir: artifacts.into(), variant: "k16d16".into() }
+    } else {
+        EngineSpec::Native
+    };
+    let mut cloud = CloudConfig::default();
+    cloud.point_compute = 1e-4; // 10k pts/s per "VM" (2012-class worker)
+    cloud.service_latency = 0.005; // 5 ms one-way — cloud-storage scale
+    cloud.points_per_exchange = 100;
+
+    println!("== cloud end-to-end: async delta merge (paper eq. 9) ==");
+    println!(
+        "engine = {}, kappa = {}, d = {}, tau = {}, {} pts/worker @ {:.0} µs/pt, \
+         service latency {:.1} ms ± {:.0}%",
+        if have_artifacts { "pjrt(k16d16)" } else { "native" },
+        cfg.vq.kappa,
+        cfg.dim(),
+        cfg.scheme.tau(),
+        cfg.run.points_per_worker,
+        cloud.point_compute * 1e6,
+        cloud.service_latency * 1e3,
+        cloud.latency_jitter * 100.0,
+    );
+
+    // Threshold fixed from the M = 1 curve (80% of its improvement) and
+    // reused for every M — the paper's time-to-performance notion.
+    let mut threshold: Option<f64> = None;
+    let mut baseline_time: Option<f64> = None;
+    println!(
+        "\n{:>4} | {:>10} | {:>10} | {:>8} | {:>9} | {:>9} | {}",
+        "M", "C(start)", "C(end)", "merges", "wall (s)", "t@thresh", "scale-up"
+    );
+    for m in [1usize, 2, 4, 8, 16] {
+        let mut cfg_m = cfg.clone();
+        cfg_m.m = m;
+        let out = run_cloud(&cfg_m, &cloud)?;
+        let th = *threshold.get_or_insert_with(|| {
+            let s0 = out.series.first_value();
+            s0 + (out.series.min_value() - s0) * 0.9
+        });
+        let t = time_to_threshold(&out.series, th);
+        if m == 1 {
+            baseline_time = t;
+        }
+        let scaleup = match (baseline_time, t) {
+            (Some(b), Some(t)) if t > 0.0 => format!("{:.2}x", b / t),
+            _ => "-".into(),
+        };
+        println!(
+            "{:>4} | {:>10.5} | {:>10.5} | {:>8} | {:>9.3} | {:>9} | {}",
+            m,
+            out.series.first_value(),
+            out.series.last_value(),
+            out.merges,
+            out.series.last_wall(),
+            t.map(|t| format!("{t:.3}s")).unwrap_or_else(|| "never".into()),
+            scaleup,
+        );
+    }
+    println!(
+        "\nExpected shape (paper Figure 4): distortion descends faster as M \
+         grows,\nwith diminishing returns toward large M."
+    );
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Quickstart: cluster a 2-D synthetic mixture with the parallel VQ stack,
+//! running the compute hot path on the **PJRT engine** (the AOT-compiled
+//! Pallas kernels in `artifacts/`).
+//!
+//! ```bash
+//! make artifacts                   # once: lower the JAX/Pallas kernels
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Falls back to the native engine with a warning if artifacts are absent,
+//! so the example always runs.
+
+use dalvq::config::presets;
+use dalvq::coordinator::Orchestrator;
+use dalvq::runtime::EngineSpec;
+use dalvq::vq::{compression_report, nearest};
+use dalvq::Result;
+
+fn main() -> Result<()> {
+    let mut cfg = presets::quickstart();
+    // The preset points at artifacts/k8d2; verify they exist.
+    if let EngineSpec::Pjrt { artifacts_dir, .. } = &cfg.engine {
+        if !artifacts_dir.join("manifest.json").exists() {
+            eprintln!(
+                "warning: {} not found — run `make artifacts`; \
+                 falling back to the native engine",
+                artifacts_dir.join("manifest.json").display()
+            );
+            cfg.engine = EngineSpec::Native;
+        }
+    }
+
+    println!("== dalvq quickstart ==");
+    println!(
+        "data: {} points, {} clusters in R^{}; kappa = {}, M = {}, scheme = {}",
+        cfg.data.n_total,
+        cfg.data.mixture.components,
+        cfg.dim(),
+        cfg.vq.kappa,
+        cfg.m,
+        cfg.scheme.label(),
+    );
+
+    let orch = Orchestrator::new();
+    let outcome = orch.run_experiment(&cfg)?;
+
+    println!("\nfinal prototypes (2-D):");
+    for i in 0..outcome.final_shared.kappa() {
+        let row = outcome.final_shared.row(i);
+        println!("  w[{i}] = ({:+.3}, {:+.3})", row[0], row[1]);
+    }
+
+    // Sanity: every true mixture center should have a prototype nearby.
+    let centers = cfg.data.mixture.centers(cfg.seed);
+    let mut worst = 0.0f32;
+    for c in centers.chunks_exact(cfg.dim()) {
+        let i = nearest(&outcome.final_shared, c);
+        let w = outcome.final_shared.row(i);
+        let d = ((w[0] - c[0]).powi(2) + (w[1] - c[1]).powi(2)).sqrt();
+        worst = worst.max(d);
+    }
+    println!("\nworst center-to-prototype distance: {worst:.3}");
+    println!(
+        "distortion: {:.4} -> {:.4} over {:.3}s of virtual wall time",
+        outcome.series.first_value(),
+        outcome.series.last_value(),
+        outcome.series.last_wall(),
+    );
+
+    // The paper's motivation: the codebook is a dataset summary. Use it
+    // as a codec and report the compression it buys.
+    let data = cfg.data.mixture.dataset(cfg.data.n_total, cfg.seed);
+    let report = compression_report(&outcome.final_shared, data.flat());
+    println!(
+        "as a codec: {} -> {} bits/point ({}x compression) at MSE {:.4}",
+        report.raw_bits_per_point,
+        report.coded_bits_per_point,
+        report.ratio.round(),
+        report.mse,
+    );
+    Ok(())
+}

@@ -1,0 +1,114 @@
+"""AOT compile path: lower every L2 entry point to HLO **text** artifacts.
+
+HLO text (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<entry>__<variant>.hlo.txt`` per (entry point, variant) plus a
+``manifest.json`` describing shapes, so the Rust runtime is fully
+manifest-driven.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .variants import VARIANTS
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entry_points(v):
+    """(name, fn, example_args) for every export of variant ``v``."""
+    k, d, tau = v.kappa, v.dim, v.tau
+    s, b, bt = v.scan_chunks, v.eval_batch, v.eval_tile
+    return [
+        (
+            "vq_chunk",
+            model.vq_chunk,
+            (_spec(k, d), _spec(tau, d), _spec(tau)),
+        ),
+        (
+            "multi_chunk",
+            model.multi_chunk,
+            (_spec(k, d), _spec(s, tau, d), _spec(s, tau)),
+        ),
+        (
+            "distortion_sum",
+            functools.partial(model.distortion_sum, eval_tile=bt),
+            (_spec(k, d), _spec(b, d)),
+        ),
+        (
+            "batch_kmeans_step",
+            functools.partial(model.batch_kmeans_step, eval_tile=bt),
+            (_spec(k, d), _spec(b, d)),
+        ),
+    ]
+
+
+def lower_all(out_dir: str, variant_names=None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text/return-tuple", "variants": {}}
+    for v in VARIANTS:
+        if variant_names and v.name not in variant_names:
+            continue
+        entry_manifest = {}
+        for name, fn, args in entry_points(v):
+            lowered = jax.jit(fn).lower(*args)
+            text = to_hlo_text(lowered)
+            fname = f"{name}__{v.name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            entry_manifest[name] = {
+                "file": fname,
+                "inputs": [
+                    {"shape": list(a.shape), "dtype": str(a.dtype)}
+                    for a in args
+                ],
+            }
+            print(f"  lowered {fname} ({len(text)} chars)")
+        manifest["variants"][v.name] = {
+            "params": v.to_dict(),
+            "entries": entry_manifest,
+        }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['variants'])} variants")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument(
+        "--variants",
+        nargs="*",
+        default=None,
+        help="subset of variant names to lower (default: all)",
+    )
+    args = p.parse_args()
+    lower_all(args.out_dir, args.variants)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Layer-1 Pallas kernels for the parallel stochastic VQ stack.
+
+Every kernel is authored with `jax.experimental.pallas` and lowered with
+``interpret=True`` so the resulting HLO executes on the CPU PJRT client used
+by the Rust runtime (real-TPU Mosaic lowering is compile-only in this image;
+see DESIGN.md §Hardware-Adaptation).
+
+Kernels:
+  - ``vq_chunk``     : a tau-point sequential online-VQ walk (paper eq. 1),
+                       returning the new codebook and the accumulated
+                       displacement Delta (paper eq. 7).
+  - ``distortion``   : tiled empirical distortion partial sums (paper eq. 2).
+  - ``kmeans_assign``: tiled per-cluster sums/counts for the batch k-means
+                       baseline (Lloyd iteration substrate).
+"""
+
+from .vq_chunk import vq_chunk_pallas
+from .distortion import distortion_partials_pallas
+from .kmeans import kmeans_partials_pallas
+
+__all__ = [
+    "vq_chunk_pallas",
+    "distortion_partials_pallas",
+    "kmeans_partials_pallas",
+]

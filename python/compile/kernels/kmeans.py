@@ -1,0 +1,62 @@
+"""Pallas kernel: per-tile assignment sums/counts for batch k-means.
+
+Substrate for the baseline the paper's introduction contrasts against: the
+(batch) k-means / Lloyd iteration *is* embarrassingly parallel, and this
+kernel is exactly its parallel inner step. Each grid step assigns a
+(bt, d) tile of points to their nearest prototype (same matmul-form distance
+as the distortion kernel) and emits per-cluster partial sums and counts;
+the L2 wrapper reduces partials and forms the new centroids.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kmeans_kernel(w_ref, z_ref, sums_ref, counts_ref):
+    z = z_ref[...]  # (bt, d)
+    w = w_ref[...]  # (kappa, d)
+    kappa = w.shape[0]
+    zn = jnp.sum(z * z, axis=1, keepdims=True)
+    wn = jnp.sum(w * w, axis=1)[None, :]
+    cross = jnp.dot(z, w.T, preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(zn - 2.0 * cross + wn, 0.0)  # (bt, kappa)
+    assign = jnp.argmin(d2, axis=1)  # (bt,)
+    onehot = (assign[:, None] == jax.lax.iota(jnp.int32, kappa)[None, :]).astype(
+        jnp.float32
+    )  # (bt, kappa)
+    sums_ref[...] = jnp.dot(onehot.T, z, preferred_element_type=jnp.float32)[
+        None
+    ]  # (1, kappa, d)
+    counts_ref[...] = jnp.sum(onehot, axis=0)[None]  # (1, kappa)
+
+
+def kmeans_partials_pallas(w, z, *, block_points: int = 256):
+    """Per-tile cluster sums and counts.
+
+    Returns:
+      sums:   (grid, kappa, d)
+      counts: (grid, kappa)
+    """
+    n, d = z.shape
+    kappa = w.shape[0]
+    bt = min(block_points, n)
+    assert n % bt == 0, f"batch {n} not a multiple of tile {bt}"
+    grid = n // bt
+    return pl.pallas_call(
+        _kmeans_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((kappa, d), lambda i: (0, 0)),
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, kappa, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, kappa), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((grid, kappa, d), jnp.float32),
+            jax.ShapeDtypeStruct((grid, kappa), jnp.float32),
+        ),
+        interpret=True,
+    )(w, z)

@@ -1,0 +1,64 @@
+"""Pure-jnp correctness oracles for every L1 kernel.
+
+These are deliberately written in the most literal, paper-faithful way
+(no matmul tricks, no masking cleverness) so the pytest/hypothesis suites
+can pin the Pallas kernels against an independent implementation of the
+same math.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def vq_step_ref(w, z, eps):
+    """One step of the paper's recursion (eq. 1).
+
+    Returns (w_next, upd) where ``upd`` is this step's contribution to
+    Delta (eq. 7): eps * (w_l - z) on the winning row, zero elsewhere.
+    """
+    diff = w - z[None, :]
+    dists = jnp.sum(diff * diff, axis=1)
+    winner = jnp.argmin(dists)  # first-minimum tie break
+    upd = jnp.zeros_like(w).at[winner].set(eps * diff[winner])
+    return w - upd, upd
+
+
+def vq_chunk_ref(w, z, eps):
+    """tau sequential steps of eq. 1; returns (w_out, delta)."""
+
+    def body(carry, inp):
+        w, delta = carry
+        zt, et = inp
+        w, upd = vq_step_ref(w, zt, et)
+        return (w, delta + upd), None
+
+    (w_out, delta), _ = jax.lax.scan(
+        body, (w, jnp.zeros_like(w)), (z, eps)
+    )
+    return w_out, delta
+
+
+def distortion_ref(w, z):
+    """Exact un-normalized empirical distortion (eq. 2): sum over the batch
+    of the squared distance to the nearest prototype."""
+    d2 = jnp.sum((z[:, None, :] - w[None, :, :]) ** 2, axis=2)  # (n, kappa)
+    return jnp.sum(jnp.min(d2, axis=1))
+
+
+def assignments_ref(w, z):
+    """Nearest-prototype index for each point (first-minimum tie break)."""
+    d2 = jnp.sum((z[:, None, :] - w[None, :, :]) ** 2, axis=2)
+    return jnp.argmin(d2, axis=1)
+
+
+def kmeans_step_ref(w, z):
+    """One Lloyd iteration; empty clusters keep their old prototype."""
+    assign = assignments_ref(w, z)
+    kappa = w.shape[0]
+    onehot = (assign[:, None] == jnp.arange(kappa)[None, :]).astype(z.dtype)
+    sums = onehot.T @ z  # (kappa, d)
+    counts = jnp.sum(onehot, axis=0)  # (kappa,)
+    new_w = jnp.where(
+        counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], w
+    )
+    return new_w, counts

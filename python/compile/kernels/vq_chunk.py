@@ -1,0 +1,80 @@
+"""Pallas kernel: a tau-point sequential stochastic-VQ walk.
+
+This is the hot spot of the whole system. The paper's recursion (eq. 1):
+
+    l(t)      = argmin_i || z_{t+1} - w_i(t) ||^2
+    w_i(t+1)  = w_i(t) - eps_{t+1} (w_i(t) - z_{t+1})   if i == l(t)
+              = w_i(t)                                   otherwise
+
+has a loop-carried dependence from step to step — that sequentiality is the
+*point* of the paper (online VQ is not embarrassingly parallel). The kernel
+therefore parallelizes across the *codebook* dimension instead: each step is
+a fully vectorized (kappa, d) masked update (one-hot selection of the
+winning prototype), and the tau steps run in a ``fori_loop`` with the
+codebook and the running displacement held in registers/VMEM.
+
+Outputs:
+  w_out  — the codebook after tau steps,
+  delta  — the accumulated displacement
+           Delta = sum_t eps_t * H(z_t, w(t))            (paper eq. 7)
+           so that  w_out == w_in - delta  exactly. ``delta`` is what
+           schemes B (eq. 8) and C (eq. 9) ship to the reducer.
+
+TPU shaping (DESIGN.md §Hardware-Adaptation): w, delta and the tau-point
+block of z all live in VMEM for the duration of the walk; footprint is
+(2*kappa*d + tau*d + tau) f32, e.g. ~10 KiB for kappa=d=16, tau=10.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vq_chunk_kernel(w_ref, z_ref, eps_ref, w_out_ref, delta_ref, *, tau: int):
+    w0 = w_ref[...]  # (kappa, d)
+    z = z_ref[...]  # (tau, d)
+    eps = eps_ref[...]  # (tau,)
+    kappa = w0.shape[0]
+
+    def body(t, carry):
+        w, delta = carry
+        zt = jax.lax.dynamic_index_in_dim(z, t, axis=0, keepdims=False)  # (d,)
+        et = jax.lax.dynamic_index_in_dim(eps, t, axis=0, keepdims=False)
+        diff = w - zt[None, :]  # (kappa, d)
+        dists = jnp.sum(diff * diff, axis=1)  # (kappa,)
+        # First-minimum tie break, mirrored bit-for-bit by the Rust engine.
+        winner = jnp.argmin(dists)
+        mask = (jax.lax.iota(jnp.int32, kappa) == winner).astype(w.dtype)
+        upd = et * mask[:, None] * diff  # eps_t * (w_l - z_t) on row l
+        return w - upd, delta + upd
+
+    w_final, delta = jax.lax.fori_loop(
+        0, tau, body, (w0, jnp.zeros_like(w0))
+    )
+    w_out_ref[...] = w_final
+    delta_ref[...] = delta
+
+
+def vq_chunk_pallas(w, z, eps):
+    """Run ``tau = z.shape[0]`` sequential VQ steps as one fused kernel.
+
+    Args:
+      w:   (kappa, d) float32 codebook.
+      z:   (tau, d)   float32 data chunk.
+      eps: (tau,)     float32 per-step learning rates.
+
+    Returns:
+      (w_out, delta): both (kappa, d); ``w_out == w - delta``.
+    """
+    tau = z.shape[0]
+    kernel = functools.partial(_vq_chunk_kernel, tau=tau)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+        ),
+        interpret=True,
+    )(w, z, eps)

@@ -1,0 +1,73 @@
+"""Layer-2 JAX model: the exported compute-graph entry points.
+
+Each function here composes the L1 Pallas kernels into the computation the
+Rust coordinator dispatches on its hot path. ``aot.py`` lowers every entry
+point once per variant to HLO text; Python never runs at serve time.
+
+Entry points (all f32):
+  vq_chunk(w, z, eps)          -> (w_out, delta)        [paper eq. 1 + 7]
+  multi_chunk(w, zs, eps)      -> (w_out, delta_total)  [S chunks via scan]
+  distortion_sum(w, z)         -> scalar sum            [paper eq. 2, un-normalized]
+  batch_kmeans_step(w, z)      -> (new_w, counts)       [Lloyd baseline]
+
+Normalization of eq. 2 by 1/(nM) happens in Rust, where n and M live.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    vq_chunk_pallas,
+    distortion_partials_pallas,
+    kmeans_partials_pallas,
+)
+
+
+def vq_chunk(w, z, eps):
+    """One tau-point sequential VQ walk (the L1 kernel, re-exported)."""
+    return vq_chunk_pallas(w, z, eps)
+
+
+def multi_chunk(w, zs, eps):
+    """S consecutive tau-point walks, scanned to amortize dispatch.
+
+    Args:
+      w:   (kappa, d)
+      zs:  (S, tau, d)
+      eps: (S, tau)
+
+    Returns:
+      (w_out, delta_total) with ``w_out == w - delta_total`` (delta
+      additivity, DESIGN.md invariant 2).
+    """
+
+    def body(carry, inp):
+        w, acc = carry
+        z_c, e_c = inp
+        w_next, delta = vq_chunk_pallas(w, z_c, e_c)
+        return (w_next, acc + delta), None
+
+    (w_out, delta_total), _ = jax.lax.scan(
+        body, (w, jnp.zeros_like(w)), (zs, eps)
+    )
+    return w_out, delta_total
+
+
+def distortion_sum(w, z, *, eval_tile: int = 256):
+    """Un-normalized empirical distortion over a batch (eq. 2 numerator)."""
+    partials = distortion_partials_pallas(w, z, block_points=eval_tile)
+    return jnp.sum(partials)
+
+
+def batch_kmeans_step(w, z, *, eval_tile: int = 256):
+    """One Lloyd iteration over the batch; empty clusters keep their old
+    prototype. Returns (new_w, counts)."""
+    sums, counts = kmeans_partials_pallas(w, z, block_points=eval_tile)
+    sums = jnp.sum(sums, axis=0)  # (kappa, d)
+    counts = jnp.sum(counts, axis=0)  # (kappa,)
+    new_w = jnp.where(
+        counts[:, None] > 0.0,
+        sums / jnp.maximum(counts, 1.0)[:, None],
+        w,
+    )
+    return new_w, counts

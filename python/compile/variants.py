@@ -1,0 +1,56 @@
+"""AOT artifact variants.
+
+Every entry point in ``model.py`` is lowered once per variant; the Rust
+runtime selects a variant by name through ``artifacts/manifest.json``.
+Shapes are static in HLO, so anything the coordinator wants to run on the
+PJRT hot path must appear here.
+
+Fields:
+  kappa        — number of prototypes (paper: kappa)
+  dim          — sample dimension d
+  tau          — chunk length = points per vq_chunk call = the paper's
+                 synchronization period tau (tau=10 in all figures)
+  eval_batch   — batch size for the distortion / k-means entry points
+  eval_tile    — Pallas tile (block_points) inside the eval kernels
+  scan_chunks  — S for the multi_chunk entry point (S*tau points per call)
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class Variant:
+    name: str
+    kappa: int
+    dim: int
+    tau: int
+    eval_batch: int
+    eval_tile: int
+    scan_chunks: int
+
+    def to_dict(self):
+        return asdict(self)
+
+
+VARIANTS = [
+    # The paper's figure configuration: tau = 10. kappa/d chosen to be
+    # MXU-friendly powers of two; see DESIGN.md §Substitutions for the data.
+    Variant("k16d16", kappa=16, dim=16, tau=10, eval_batch=1024,
+            eval_tile=256, scan_chunks=16),
+    # Higher-kappa / lower-d variant (stresses the argmin side).
+    Variant("k32d8", kappa=32, dim=8, tau=10, eval_batch=1024,
+            eval_tile=256, scan_chunks=16),
+    # 2-D variant for the quickstart example (human-inspectable output).
+    Variant("k8d2", kappa=8, dim=2, tau=10, eval_batch=1024,
+            eval_tile=256, scan_chunks=16),
+    # tau = 1 variant for the ABL-tau ablation (merge every point).
+    Variant("k16d16t1", kappa=16, dim=16, tau=1, eval_batch=1024,
+            eval_tile=256, scan_chunks=16),
+]
+
+
+def by_name(name: str) -> Variant:
+    for v in VARIANTS:
+        if v.name == name:
+            return v
+    raise KeyError(f"unknown variant {name!r}")

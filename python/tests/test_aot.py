@@ -1,0 +1,44 @@
+"""AOT lowering smoke tests: HLO text emission and manifest integrity."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.variants import VARIANTS, by_name
+
+
+def test_variants_well_formed():
+    names = [v.name for v in VARIANTS]
+    assert len(names) == len(set(names))
+    for v in VARIANTS:
+        assert v.kappa >= 1 and v.dim >= 1 and v.tau >= 1
+        assert v.eval_batch % v.eval_tile == 0
+    assert by_name("k16d16").tau == 10
+
+
+def test_lower_vq_chunk_to_hlo_text():
+    spec = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)  # noqa: E731
+    lowered = jax.jit(model.vq_chunk).lower(spec(8, 2), spec(10, 2), spec(10))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert len(text) > 200
+
+
+def test_lower_all_one_variant(tmp_path):
+    out = str(tmp_path / "artifacts")
+    manifest = aot.lower_all(out, variant_names=["k8d2"])
+    assert "k8d2" in manifest["variants"]
+    entries = manifest["variants"]["k8d2"]["entries"]
+    assert set(entries) == {
+        "vq_chunk", "multi_chunk", "distortion_sum", "batch_kmeans_step"}
+    for e in entries.values():
+        path = os.path.join(out, e["file"])
+        assert os.path.exists(path)
+        with open(path) as f:
+            assert "HloModule" in f.read(200)
+    with open(os.path.join(out, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk["variants"]["k8d2"]["params"]["kappa"] == 8

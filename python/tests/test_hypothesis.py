@@ -1,0 +1,72 @@
+"""Property-based sweeps of the Pallas kernels (hypothesis).
+
+Shapes, scales and degenerate inputs (ties, duplicates, zero steps) are
+drawn at random; every draw must agree with the pure-jnp oracle.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import vq_chunk_pallas, distortion_partials_pallas
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def vq_instance(draw):
+    kappa = draw(st.integers(1, 24))
+    d = draw(st.integers(1, 24))
+    tau = draw(st.integers(1, 16))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    scale = draw(st.sampled_from([0.1, 1.0, 10.0]))
+    w = rng.normal(size=(kappa, d), scale=scale).astype(np.float32)
+    z = rng.normal(size=(tau, d), scale=scale).astype(np.float32)
+    # occasionally force exact duplicates of prototypes into the data (ties)
+    if draw(st.booleans()) and tau >= 2 and kappa >= 2:
+        z[0] = w[0]
+        z[1] = w[min(1, kappa - 1)]
+    eps = rng.uniform(0.0, 1.0, size=(tau,)).astype(np.float32)
+    if draw(st.booleans()):
+        eps[: tau // 2] = 0.0  # zero-step prefix
+    return w, z, eps
+
+
+@given(vq_instance())
+@settings(**SETTINGS)
+def test_vq_chunk_property(inst):
+    w, z, eps = (jnp.asarray(a) for a in inst)
+    w_k, delta_k = vq_chunk_pallas(w, z, eps)
+    w_r, delta_r = ref.vq_chunk_ref(w, z, eps)
+    np.testing.assert_allclose(w_k, w_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(delta_k, delta_r, rtol=1e-5, atol=1e-5)
+    # invariant: w_out == w - delta
+    np.testing.assert_allclose(
+        np.asarray(w_k), np.asarray(w - delta_k), rtol=1e-5, atol=1e-5)
+
+
+@st.composite
+def distortion_instance(draw):
+    kappa = draw(st.integers(1, 32))
+    d = draw(st.integers(1, 24))
+    tiles = draw(st.integers(1, 6))
+    bt = draw(st.sampled_from([8, 16, 64]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    scale = draw(st.sampled_from([0.5, 5.0]))
+    w = rng.normal(size=(kappa, d), scale=scale).astype(np.float32)
+    z = rng.normal(size=(tiles * bt, d), scale=scale).astype(np.float32)
+    return w, z, bt
+
+
+@given(distortion_instance())
+@settings(**SETTINGS)
+def test_distortion_property(inst):
+    w, z, bt = inst
+    w, z = jnp.asarray(w), jnp.asarray(z)
+    got = float(jnp.sum(distortion_partials_pallas(w, z, block_points=bt)))
+    want = float(ref.distortion_ref(w, z))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-4)
+    assert got >= 0.0

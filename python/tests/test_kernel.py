@@ -1,0 +1,184 @@
+"""Kernel-vs-oracle correctness: the CORE signal for the L1 layer.
+
+Every Pallas kernel is pinned against the literal pure-jnp implementation
+in kernels/ref.py.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import (
+    vq_chunk_pallas,
+    distortion_partials_pallas,
+    kmeans_partials_pallas,
+)
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def rand(*shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape, scale=scale), dtype=jnp.float32)
+
+
+def eps_seq(tau, t0=0, a=0.5, b=50.0):
+    """The classical Robbins-Monro schedule eps_t = a / (1 + (t0+t)/b)."""
+    t = np.arange(t0, t0 + tau, dtype=np.float32)
+    return jnp.asarray(a / (1.0 + t / b), dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------- vq_chunk
+
+
+@pytest.mark.parametrize("kappa,d,tau", [(16, 16, 10), (32, 8, 10),
+                                         (8, 2, 10), (16, 16, 1),
+                                         (4, 4, 32), (1, 3, 7)])
+def test_vq_chunk_matches_ref(kappa, d, tau):
+    w = rand(kappa, d)
+    z = rand(tau, d)
+    eps = eps_seq(tau)
+    w_k, delta_k = vq_chunk_pallas(w, z, eps)
+    w_r, delta_r = ref.vq_chunk_ref(w, z, eps)
+    np.testing.assert_allclose(w_k, w_r, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(delta_k, delta_r, rtol=1e-6, atol=1e-6)
+
+
+def test_vq_chunk_w_minus_delta_identity():
+    """DESIGN.md invariant 1: w_out == w - delta, exactly."""
+    w = rand(16, 16)
+    z = rand(10, 16)
+    eps = eps_seq(10)
+    w_out, delta = vq_chunk_pallas(w, z, eps)
+    np.testing.assert_allclose(np.asarray(w_out), np.asarray(w - delta),
+                               rtol=0, atol=1e-6)
+
+
+def test_vq_chunk_delta_additivity():
+    """DESIGN.md invariant 2: Delta_{0->2tau} = Delta_{0->tau} + Delta_{tau->2tau}."""
+    w = rand(8, 4)
+    z = rand(20, 4)
+    eps = eps_seq(20)
+    w_full, delta_full = vq_chunk_pallas(w, z, eps)
+    w_half, delta_a = vq_chunk_pallas(w, z[:10], eps[:10])
+    w_out, delta_b = vq_chunk_pallas(w_half, z[10:], eps[10:])
+    np.testing.assert_allclose(w_full, w_out, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(delta_full, delta_a + delta_b,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_vq_chunk_single_step_explicit():
+    """Hand-computed single eq.-1 step."""
+    w = jnp.asarray([[0.0, 0.0], [10.0, 10.0]], dtype=jnp.float32)
+    z = jnp.asarray([[1.0, 1.0]], dtype=jnp.float32)
+    eps = jnp.asarray([0.5], dtype=jnp.float32)
+    w_out, delta = vq_chunk_pallas(w, z, eps)
+    # winner is prototype 0; w0 <- w0 - 0.5*(w0 - z) = [0.5, 0.5]
+    np.testing.assert_allclose(
+        np.asarray(w_out), [[0.5, 0.5], [10.0, 10.0]], atol=1e-7)
+    np.testing.assert_allclose(
+        np.asarray(delta), [[-0.5, -0.5], [0.0, 0.0]], atol=1e-7)
+
+
+def test_vq_chunk_tie_breaks_to_first():
+    """Equidistant prototypes: the first minimum must win (matches Rust)."""
+    w = jnp.asarray([[1.0, 0.0], [-1.0, 0.0]], dtype=jnp.float32)
+    z = jnp.asarray([[0.0, 0.0]], dtype=jnp.float32)
+    eps = jnp.asarray([1.0], dtype=jnp.float32)
+    w_out, _ = vq_chunk_pallas(w, z, eps)
+    # prototype 0 moves onto z; prototype 1 untouched
+    np.testing.assert_allclose(
+        np.asarray(w_out), [[0.0, 0.0], [-1.0, 0.0]], atol=1e-7)
+
+
+def test_vq_chunk_zero_eps_is_identity():
+    w = rand(8, 8)
+    z = rand(10, 8)
+    eps = jnp.zeros((10,), dtype=jnp.float32)
+    w_out, delta = vq_chunk_pallas(w, z, eps)
+    np.testing.assert_allclose(w_out, w, atol=0)
+    np.testing.assert_allclose(delta, jnp.zeros_like(w), atol=0)
+
+
+def test_vq_chunk_eps_one_snaps_to_point():
+    """eps=1 moves the winner exactly onto the data point."""
+    w = rand(4, 3)
+    z = rand(1, 3)
+    eps = jnp.ones((1,), dtype=jnp.float32)
+    w_out, _ = vq_chunk_pallas(w, z, eps)
+    d2 = np.sum((np.asarray(w) - np.asarray(z[0])) ** 2, axis=1)
+    winner = int(np.argmin(d2))
+    np.testing.assert_allclose(np.asarray(w_out)[winner], np.asarray(z[0]),
+                               atol=1e-6)
+
+
+# -------------------------------------------------------------- distortion
+
+
+@pytest.mark.parametrize("kappa,d,n,bt", [(16, 16, 1024, 256),
+                                          (32, 8, 512, 128),
+                                          (8, 2, 256, 256),
+                                          (4, 4, 64, 16)])
+def test_distortion_matches_ref(kappa, d, n, bt):
+    w = rand(kappa, d)
+    z = rand(n, d, scale=2.0)
+    partials = distortion_partials_pallas(w, z, block_points=bt)
+    assert partials.shape == (n // bt,)
+    got = float(jnp.sum(partials))
+    want = float(ref.distortion_ref(w, z))
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_distortion_nonnegative():
+    w = rand(16, 16, scale=10.0)
+    z = rand(512, 16, scale=10.0)
+    partials = distortion_partials_pallas(w, z)
+    assert float(jnp.min(partials)) >= 0.0
+
+
+def test_distortion_zero_when_prototypes_cover_points():
+    z = rand(256, 4)
+    # codebook contains every point's exact location? use 4 protos == 4 pts
+    w = z[:4]
+    zz = jnp.tile(w, (64, 1))  # batch made only of prototype locations
+    partials = distortion_partials_pallas(w, zz, block_points=64)
+    np.testing.assert_allclose(np.asarray(jnp.sum(partials)), 0.0, atol=1e-3)
+
+
+def test_distortion_permutation_invariant():
+    """DESIGN.md invariant 6."""
+    w = rand(8, 8)
+    z = rand(256, 8)
+    perm = jnp.asarray(RNG.permutation(8))
+    a = float(jnp.sum(distortion_partials_pallas(w, z)))
+    b = float(jnp.sum(distortion_partials_pallas(w[perm], z)))
+    np.testing.assert_allclose(a, b, rtol=1e-5)
+
+
+# ------------------------------------------------------------------ kmeans
+
+
+@pytest.mark.parametrize("kappa,d,n,bt", [(16, 16, 1024, 256),
+                                          (8, 2, 256, 64)])
+def test_kmeans_partials_match_ref(kappa, d, n, bt):
+    w = rand(kappa, d)
+    z = rand(n, d)
+    sums, counts = kmeans_partials_pallas(w, z, block_points=bt)
+    assign = np.asarray(ref.assignments_ref(w, z))
+    want_counts = np.bincount(assign, minlength=kappa).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(jnp.sum(counts, axis=0)), want_counts, atol=0)
+    want_sums = np.zeros((kappa, d), dtype=np.float32)
+    np.scatter_add = None  # noqa - explicit loop below for clarity
+    for i, a in enumerate(assign):
+        want_sums[a] += np.asarray(z)[i]
+    np.testing.assert_allclose(
+        np.asarray(jnp.sum(sums, axis=0)), want_sums, rtol=1e-4, atol=1e-4)
+
+
+def test_kmeans_counts_total():
+    w = rand(16, 16)
+    z = rand(512, 16)
+    _, counts = kmeans_partials_pallas(w, z, block_points=128)
+    assert float(jnp.sum(counts)) == 512.0

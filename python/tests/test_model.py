@@ -1,0 +1,76 @@
+"""L2 model-level tests: entry-point composition and shape contracts."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1)
+
+
+def rand(*shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape, scale=scale), dtype=jnp.float32)
+
+
+def test_multi_chunk_equals_repeated_vq_chunk():
+    kappa, d, tau, s = 8, 4, 10, 5
+    w = rand(kappa, d)
+    zs = rand(s, tau, d)
+    eps = jnp.abs(rand(s, tau, scale=0.1))
+    w_scan, delta_scan = model.multi_chunk(w, zs, eps)
+    w_loop = w
+    delta_loop = jnp.zeros_like(w)
+    for i in range(s):
+        w_loop, dl = model.vq_chunk(w_loop, zs[i], eps[i])
+        delta_loop = delta_loop + dl
+    np.testing.assert_allclose(w_scan, w_loop, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(delta_scan, delta_loop, rtol=1e-5, atol=1e-6)
+
+
+def test_multi_chunk_w_minus_delta():
+    w = rand(16, 16)
+    zs = rand(4, 10, 16)
+    eps = jnp.abs(rand(4, 10, scale=0.1))
+    w_out, delta = model.multi_chunk(w, zs, eps)
+    np.testing.assert_allclose(np.asarray(w_out), np.asarray(w - delta),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_distortion_sum_scalar():
+    w = rand(16, 16)
+    z = rand(1024, 16)
+    got = model.distortion_sum(w, z)
+    assert got.shape == ()
+    want = float(ref.distortion_ref(w, z))
+    np.testing.assert_allclose(float(got), want, rtol=1e-4)
+
+
+def test_batch_kmeans_step_matches_ref():
+    w = rand(16, 8)
+    z = rand(1024, 8)
+    new_w, counts = model.batch_kmeans_step(w, z)
+    want_w, want_counts = ref.kmeans_step_ref(w, z)
+    np.testing.assert_allclose(new_w, want_w, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(counts, want_counts, atol=0)
+
+
+def test_batch_kmeans_step_empty_cluster_keeps_prototype():
+    # prototype 0 is far away from all data: it must stay put
+    w = jnp.concatenate(
+        [jnp.full((1, 4), 1e6, dtype=jnp.float32), rand(7, 4)], axis=0)
+    z = rand(256, 4)
+    new_w, counts = model.batch_kmeans_step(w, z)
+    assert float(counts[0]) == 0.0
+    np.testing.assert_allclose(np.asarray(new_w)[0], np.asarray(w)[0], atol=0)
+
+
+def test_batch_kmeans_decreases_distortion():
+    """Lloyd monotonicity (DESIGN.md invariant 6) on the same batch."""
+    w = rand(8, 4, scale=3.0)
+    z = rand(1024, 4)
+    before = float(model.distortion_sum(w, z))
+    new_w, _ = model.batch_kmeans_step(w, z)
+    after = float(model.distortion_sum(new_w, z))
+    assert after <= before + 1e-3

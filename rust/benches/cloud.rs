@@ -1,0 +1,74 @@
+//! Figure-4 benchmark: the cloud runtime scale-up, `M` from 1 to 32 real
+//! worker threads against latency-injected storage services.
+//!
+//! ```bash
+//! cargo bench --bench cloud
+//! ```
+//!
+//! Scaled to 30k points/worker so the sweep finishes in ~10 s of real time
+//! (the series are real wall-clock measurements, not virtual time).
+
+#[path = "kit/mod.rs"]
+mod kit;
+
+use std::time::Instant;
+
+use dalvq::cloud::run_cloud;
+use dalvq::config::presets;
+use dalvq::metrics::{speedup_table, Series};
+
+fn main() {
+    let mut fig = presets::fig4();
+    fig.base.run.points_per_worker = 30_000;
+    let cloud = fig.cloud.clone().unwrap();
+
+    kit::section(&format!("{} — {}", fig.id, fig.title));
+    println!(
+        "service latency {:.2} ms ±{:.0}%, pacing {:.0} µs/pt, exchange \
+         window {} pts",
+        cloud.service_latency * 1e3,
+        cloud.latency_jitter * 100.0,
+        cloud.point_compute * 1e6,
+        cloud.points_per_exchange,
+    );
+
+    let mut series_all: Vec<Series> = Vec::new();
+    println!(
+        "{:>4} | {:>10} | {:>10} | {:>8} | {:>9} | {:>10}",
+        "M", "C(start)", "C(end)", "merges", "wall (s)", "real run"
+    );
+    for &m in &fig.ms {
+        let mut cfg = fig.base.clone();
+        cfg.m = m;
+        let t0 = Instant::now();
+        let out = run_cloud(&cfg, &cloud).expect("cloud run");
+        println!(
+            "{:>4} | {:>10.5} | {:>10.5} | {:>8} | {:>9.3} | {:>10}",
+            m,
+            out.series.first_value(),
+            out.series.last_value(),
+            out.merges,
+            out.series.last_wall(),
+            kit::fmt_dur(t0.elapsed()),
+        );
+        series_all.push(out.series);
+    }
+
+    // speed-up table at 90% of the M=1 improvement
+    let base = &series_all[0];
+    let threshold =
+        base.first_value() + (base.min_value() - base.first_value()) * 0.9;
+    println!();
+    for row in speedup_table(&series_all, threshold) {
+        println!(
+            "{:>6}: time-to-threshold {:>10}  scale-up {:>8}",
+            row.name,
+            row.time_to_threshold
+                .map(|t| format!("{t:.3} s"))
+                .unwrap_or_else(|| "never".into()),
+            row.speedup
+                .map(|s| format!("{s:.2}x"))
+                .unwrap_or_else(|| "-".into()),
+        );
+    }
+}

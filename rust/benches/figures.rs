@@ -1,0 +1,46 @@
+//! Figure benchmarks: regenerate the series behind paper Figures 1–3 and
+//! the two DESIGN.md ablations, timing each harness run and printing the
+//! same rows the paper reports (start/end distortion per `M`, time to
+//! threshold, speed-up vs `M = 1`).
+//!
+//! ```bash
+//! cargo bench --bench figures
+//! ```
+//!
+//! Scaled to 50k points/worker (vs 200k in `dalvq figures`) so the whole
+//! bench finishes in tens of seconds; the curve *shapes* are unchanged.
+
+#[path = "kit/mod.rs"]
+mod kit;
+
+use std::time::Instant;
+
+use dalvq::config::{presets, FigureConfig};
+use dalvq::harness;
+
+fn run_figure_bench(mut fig: FigureConfig, points: u64) {
+    fig.base.run.points_per_worker = points;
+    kit::section(&format!("{} — {}", fig.id, fig.title));
+    let t0 = Instant::now();
+    let report = harness::run_figure(&fig).expect("figure run");
+    let elapsed = t0.elapsed();
+    print!("{}", harness::format_report(&report));
+    let (threshold, rows) = harness::speedups_at(&report, 0.9);
+    print!("{}", harness::format_speedups(threshold, &rows));
+    println!("harness wall time: {}", kit::fmt_dur(elapsed));
+}
+
+fn main() {
+    // paper figures (simulator)
+    run_figure_bench(presets::fig1(), 50_000);
+    run_figure_bench(presets::fig2(), 50_000);
+    run_figure_bench(presets::fig3(), 50_000);
+
+    // DESIGN.md ablations
+    for fig in presets::ablation_tau() {
+        run_figure_bench(fig, 50_000);
+    }
+    for fig in presets::ablation_delay() {
+        run_figure_bench(fig, 50_000);
+    }
+}

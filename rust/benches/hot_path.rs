@@ -1,0 +1,115 @@
+//! Hot-path microbenchmarks: the per-layer numbers behind EXPERIMENTS.md
+//! §Perf.
+//!
+//! * native engine: `vq_chunk` (the L3 simulator's inner loop), distortion,
+//!   k-means step, delta algebra, data generation;
+//! * PJRT engine (when `artifacts/` exists): the same entry points through
+//!   the AOT Pallas kernels, plus the scanned `multi_chunk` that amortizes
+//!   dispatch.
+//!
+//! ```bash
+//! cargo bench --bench hot_path
+//! ```
+
+#[path = "kit/mod.rs"]
+mod kit;
+
+use std::path::Path;
+
+use dalvq::data::MixtureSpec;
+use dalvq::runtime::{Engine, NativeEngine, PjrtEngine};
+use dalvq::vq::{Codebook, Delta, Schedule};
+
+fn main() {
+    let kappa = 16;
+    let dim = 16;
+    let tau = 10;
+    let spec = MixtureSpec::default();
+    let points = spec.generate(1 << 14, 7, 0);
+    let eval = spec.generate(1024, 7, 1);
+    let w0 = Codebook::from_flat(kappa, dim, points[..kappa * dim].to_vec());
+    let schedule = Schedule::paper_default();
+    let mut eps = vec![0.0f32; tau];
+    schedule.fill(0, &mut eps);
+
+    kit::section("substrates");
+    {
+        let spec = spec.clone();
+        kit::bench("mixture generate 10k points (d=16)", || {
+            std::hint::black_box(spec.generate(10_000, 3, 2));
+        });
+    }
+    {
+        let mut d1 = Delta::zeros(kappa, dim);
+        let d2 = Delta::from_flat(kappa, dim, points[..kappa * dim].to_vec());
+        kit::bench("delta accumulate (16x16)", || d1.accumulate(&d2));
+    }
+
+    kit::section("native engine (L3 simulator inner loop)");
+    let mut native = NativeEngine::new();
+    {
+        let mut w = w0.clone();
+        let mut delta = Delta::zeros(kappa, dim);
+        let chunk = &points[..tau * dim];
+        let s = kit::bench("native vq_chunk tau=10 (k16,d16)", || {
+            delta.clear();
+            native.vq_chunk(&mut w, chunk, &eps, &mut delta).unwrap();
+        });
+        kit::throughput(&s, tau as u64, "pts");
+    }
+    {
+        let s = kit::bench("native distortion 1024 pts (k16,d16)", || {
+            std::hint::black_box(native.distortion_sum(&w0, &eval).unwrap());
+        });
+        kit::throughput(&s, 1024, "pts");
+    }
+    {
+        let mut w = w0.clone();
+        let s = kit::bench("native kmeans_step 1024 pts (k16,d16)", || {
+            native.kmeans_step(&mut w, &eval).unwrap();
+        });
+        kit::throughput(&s, 1024, "pts");
+    }
+
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("\n(artifacts/ missing — skipping PJRT benches; run `make artifacts`)");
+        return;
+    }
+
+    kit::section("pjrt engine (AOT Pallas artifacts)");
+    let mut pjrt = PjrtEngine::load(artifacts, "k16d16").expect("loading artifacts");
+    {
+        let mut w = w0.clone();
+        let mut delta = Delta::zeros(kappa, dim);
+        let chunk = &points[..tau * dim];
+        let s = kit::bench("pjrt vq_chunk tau=10 (k16,d16)", || {
+            delta.clear();
+            pjrt.vq_chunk(&mut w, chunk, &eps, &mut delta).unwrap();
+        });
+        kit::throughput(&s, tau as u64, "pts");
+    }
+    {
+        let scan = pjrt.params().scan_chunks;
+        let steps = scan * tau;
+        let chunks = &points[..steps * dim];
+        let mut eps_all = vec![0.0f32; steps];
+        schedule.fill(0, &mut eps_all);
+        let mut w = w0.clone();
+        let mut delta = Delta::zeros(kappa, dim);
+        let s = kit::bench(
+            "pjrt multi_chunk S=16 (160 pts, one dispatch)",
+            || {
+                delta.clear();
+                pjrt.multi_chunk(&mut w, chunks, &eps_all, &mut delta).unwrap();
+            },
+        );
+        kit::throughput(&s, steps as u64, "pts");
+    }
+    {
+        let s = kit::bench("pjrt distortion 1024 pts (k16,d16)", || {
+            std::hint::black_box(pjrt.distortion_sum(&w0, &eval).unwrap());
+        });
+        kit::throughput(&s, 1024, "pts");
+    }
+}

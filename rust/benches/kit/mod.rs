@@ -1,0 +1,104 @@
+//! Minimal benchmarking kit (the offline build carries no criterion).
+//!
+//! Auto-calibrated timing loops: each benchmark is warmed up, then run for
+//! a target wall budget; we report min / median / mean per iteration and
+//! derived throughput. Black-box via `std::hint::black_box`.
+
+#![allow(dead_code)]
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.median.as_secs_f64() * 1e9
+    }
+
+    /// items/s given `items` processed per iteration.
+    pub fn throughput(&self, items: u64) -> f64 {
+        items as f64 / self.median.as_secs_f64()
+    }
+}
+
+/// Run `f` repeatedly: ~0.3 s warmup, then ~1.2 s of timed batches.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> Stats {
+    // warmup + calibration: how many calls fit in ~30 ms?
+    let cal_start = Instant::now();
+    let mut cal_iters = 0u64;
+    while cal_start.elapsed() < Duration::from_millis(300) {
+        black_box(f());
+        cal_iters += 1;
+        if cal_iters > 10_000_000 {
+            break;
+        }
+    }
+    let per_call = cal_start.elapsed().as_secs_f64() / cal_iters as f64;
+    // batches of ~20 ms, at least 1 call
+    let batch = ((0.02 / per_call) as u64).max(1);
+    let budget = Duration::from_millis(1200);
+    let mut samples: Vec<Duration> = Vec::new();
+    let run_start = Instant::now();
+    let mut total_iters = 0u64;
+    while run_start.elapsed() < budget || samples.len() < 5 {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            black_box(f());
+        }
+        samples.push(t0.elapsed() / batch as u32);
+        total_iters += batch;
+        if samples.len() >= 200 {
+            break;
+        }
+    }
+    samples.sort();
+    let median = samples[samples.len() / 2];
+    let min = samples[0];
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    let stats =
+        Stats { name: name.to_string(), iters: total_iters, mean, median, min };
+    println!(
+        "{:<44} {:>12} med {:>12} min   ({} iters)",
+        stats.name,
+        fmt_dur(stats.median),
+        fmt_dur(stats.min),
+        stats.iters
+    );
+    stats
+}
+
+/// Print a throughput line under a benchmark.
+pub fn throughput(stats: &Stats, items: u64, unit: &str) {
+    println!(
+        "{:<44} {:>12.3} M{unit}/s",
+        format!("  -> {}", stats.name),
+        stats.throughput(items) / 1e6
+    );
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_secs_f64() * 1e9;
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

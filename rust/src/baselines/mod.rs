@@ -1,0 +1,11 @@
+//! Baselines the paper positions itself against.
+//!
+//! The introduction contrasts online VQ with “the embarrassing parallelism
+//! of the (batch) k-means”. To make that contrast measurable, the crate
+//! ships both the full-batch Lloyd iteration ([`batch_kmeans`]) and the
+//! minibatch variant ([`minibatch_kmeans`]) over the same engines and
+//! datasets, with the same wall-time cost accounting as the schemes.
+
+mod kmeans;
+
+pub use kmeans::{batch_kmeans, minibatch_kmeans, KmeansOutcome};

@@ -1,0 +1,122 @@
+//! The blob service: versioned storage of the shared prototypes
+//! (the Azure BlobStorage role in CloudDALVQ).
+
+use std::sync::mpsc;
+
+use anyhow::{anyhow, Result};
+
+use crate::vq::Codebook;
+
+use super::LatencyInjector;
+
+enum Cmd {
+    /// Replace the stored shared version (reducer only).
+    Put { w: Codebook, version: u64 },
+    /// Fetch the current shared version and its version number.
+    Get { resp: mpsc::Sender<(Codebook, u64)> },
+}
+
+/// The service thread: owns the blob state, applies operations instantly
+/// (latency is injected caller-side — see [`LatencyInjector`]).
+pub struct BlobService;
+
+impl BlobService {
+    /// Spawn the service with an initial shared version; returns the
+    /// template handle (clone it per client, re-seeding the injector).
+    /// The service thread exits when every handle is dropped.
+    pub fn spawn(initial: Codebook) -> BlobHandle {
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        std::thread::Builder::new()
+            .name("dalvq-blob".into())
+            .spawn(move || {
+                let mut state = initial;
+                let mut version = 0u64;
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Put { w, version: v } => {
+                            state = w;
+                            version = v;
+                        }
+                        Cmd::Get { resp } => {
+                            let _ = resp.send((state.clone(), version));
+                        }
+                    }
+                }
+            })
+            .expect("spawning blob service thread");
+        BlobHandle { tx, latency: LatencyInjector::noop() }
+    }
+}
+
+/// A client handle to the blob service with its own latency injector.
+#[derive(Clone)]
+pub struct BlobHandle {
+    tx: mpsc::Sender<Cmd>,
+    latency: LatencyInjector,
+}
+
+impl BlobHandle {
+    /// Re-seed this handle's latency injector (per-client network path).
+    pub fn with_latency(mut self, latency: LatencyInjector) -> Self {
+        self.latency = latency;
+        self
+    }
+
+    /// Download the shared version (one-way latency each direction).
+    pub fn get(&mut self) -> Result<(Codebook, u64)> {
+        self.latency.delay(); // request travels
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Get { resp: tx })
+            .map_err(|_| anyhow!("blob service stopped"))?;
+        let out = rx.recv().map_err(|_| anyhow!("blob service dropped reply"))?;
+        self.latency.delay(); // response travels
+        Ok(out)
+    }
+
+    /// Upload a new shared version (reducer's publish path).
+    pub fn put(&mut self, w: Codebook, version: u64) -> Result<()> {
+        self.latency.delay();
+        self.tx
+            .send(Cmd::Put { w, version })
+            .map_err(|_| anyhow!("blob service stopped"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_then_get_round_trips() {
+        let w0 = Codebook::from_flat(1, 2, vec![0.0, 0.0]);
+        let mut h = BlobService::spawn(w0.clone());
+        let (got, v) = h.get().unwrap();
+        assert_eq!(got, w0);
+        assert_eq!(v, 0);
+        let w1 = Codebook::from_flat(1, 2, vec![1.0, 2.0]);
+        h.put(w1.clone(), 7).unwrap();
+        let (got, v) = h.get().unwrap();
+        assert_eq!(got, w1);
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn concurrent_clients_see_coherent_state() {
+        let w0 = Codebook::from_flat(1, 1, vec![0.0]);
+        let h = BlobService::spawn(w0);
+        let mut joins = Vec::new();
+        for i in 0..8u64 {
+            let mut hc = h.clone();
+            joins.push(std::thread::spawn(move || {
+                hc.put(Codebook::from_flat(1, 1, vec![i as f32]), i).unwrap();
+                hc.get().unwrap()
+            }));
+        }
+        for j in joins {
+            let (w, v) = j.join().unwrap();
+            // whatever version we read, state and version must be coherent
+            assert_eq!(w.flat()[0] as u64, v);
+        }
+    }
+}

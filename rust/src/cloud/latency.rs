@@ -1,0 +1,86 @@
+//! Client-side latency injection — the “network” between a worker and the
+//! storage services.
+//!
+//! Latency lives in the *handles* (each caller has its own injector and
+//! seed), not in the services: concurrent requests must not serialize
+//! through a shared sleep, exactly as concurrent Azure calls don't.
+
+use std::time::Duration;
+
+use crate::util::Rng;
+
+/// Per-handle latency/fault model.
+#[derive(Debug, Clone)]
+pub struct LatencyInjector {
+    mean: f64,
+    jitter: f64,
+    drop_prob: f64,
+    rng: Rng,
+}
+
+impl LatencyInjector {
+    /// `mean` seconds one-way, uniform ±`jitter` fraction, and a
+    /// `drop_prob` chance that a fire-and-forget message is lost.
+    pub fn new(mean: f64, jitter: f64, drop_prob: f64, seed: u64) -> Self {
+        assert!(mean >= 0.0 && (0.0..=1.0).contains(&jitter));
+        assert!((0.0..=1.0).contains(&drop_prob));
+        Self { mean, jitter, drop_prob, rng: Rng::from_seed(seed) }
+    }
+
+    /// Zero-latency, lossless injector (unit tests, monitor, reducer).
+    pub fn noop() -> Self {
+        Self::new(0.0, 0.0, 0.0, 0)
+    }
+
+    /// Sample a one-way delay.
+    pub fn sample_delay(&mut self) -> Duration {
+        if self.mean <= 0.0 {
+            return Duration::ZERO;
+        }
+        let factor = 1.0 + self.jitter * (self.rng.f64() * 2.0 - 1.0);
+        Duration::from_secs_f64((self.mean * factor).max(0.0))
+    }
+
+    /// Whether to drop the next fire-and-forget message.
+    pub fn should_drop(&mut self) -> bool {
+        self.drop_prob > 0.0 && self.rng.bool(self.drop_prob)
+    }
+
+    /// Blocking sleep for one sampled delay (callers run on their own
+    /// threads — the whole point of the thread-per-worker design).
+    pub fn delay(&mut self) {
+        let d = self.sample_delay();
+        if d > Duration::ZERO {
+            std::thread::sleep(d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_is_instant_and_lossless() {
+        let mut l = LatencyInjector::noop();
+        assert_eq!(l.sample_delay(), Duration::ZERO);
+        assert!(!l.should_drop());
+    }
+
+    #[test]
+    fn jitter_stays_in_band() {
+        let mut l = LatencyInjector::new(0.010, 0.5, 0.0, 42);
+        for _ in 0..1000 {
+            let d = l.sample_delay().as_secs_f64();
+            assert!((0.005..=0.015).contains(&d), "{d}");
+        }
+    }
+
+    #[test]
+    fn drop_probability_is_respected() {
+        let mut l = LatencyInjector::new(0.0, 0.0, 0.3, 7);
+        let drops = (0..10_000).filter(|_| l.should_drop()).count();
+        let frac = drops as f64 / 10_000.0;
+        assert!((frac - 0.3).abs() < 0.03, "{frac}");
+    }
+}

@@ -1,0 +1,50 @@
+//! The cloud runtime — a faithful analogue of the paper's CloudDALVQ
+//! implementation on Windows Azure (Figure 4), built on real concurrency.
+//!
+//! Architecture (mirrors the paper's Section 4 description and the
+//! CloudDALVQ codebase it references):
+//!
+//! * **Workers** (`M` of them — Azure *VMs* there, dedicated OS threads
+//!   here, each with its own [`crate::runtime::Engine`]) run the local VQ
+//!   walk on their shard and exchange displacements without any barrier.
+//! * **Queue service** ([`queue`], Azure QueueStorage there) carries
+//!   worker deltas to the reducer, with injected transfer latency and
+//!   optional message drops (fault injection).
+//! * **Reducer** ([`reducer`], the paper's “dedicated unit [that]
+//!   permanently modifies the shared version with the latest updates …
+//!   without any synchronization barrier”) folds deltas as they arrive
+//!   and publishes the shared version.
+//! * **Blob service** ([`blob`], Azure BlobStorage there) stores the
+//!   current shared version; workers download it with injected latency.
+//! * **Monitor** ([`monitor`]) samples the shared version on a real
+//!   wall-clock cadence and records the `C_{n,M}` curve — the series
+//!   behind Figure 4.
+//!
+//! Concurrency substrate: plain OS threads and channels (the offline build
+//! carries no async runtime). This is, if anything, *closer* to the
+//! paper's deployment than green threads would be: every worker is a real
+//! preemptively-scheduled execution unit, like a VM, and every service
+//! interaction crosses a real thread boundary with injected latency.
+//!
+//! The substitution argument (DESIGN.md): the paper's claims concern the
+//! coordination protocol under slow, unreliable communication. Replacing
+//! Azure services with in-process services that inject the same latency
+//! distributions preserves every protocol-visible behaviour — staleness,
+//! stragglers, barrier-freedom — while making the experiment reproducible
+//! on one machine.
+
+mod blob;
+mod latency;
+mod monitor;
+mod queue;
+mod reducer;
+mod runner;
+mod worker;
+
+pub use blob::{BlobHandle, BlobService};
+pub use latency::LatencyInjector;
+pub use monitor::{run_monitor, MonitorConfig};
+pub use queue::{DeltaMsg, QueueHandle, QueueService};
+pub use reducer::{run_reducer, ReducerReport};
+pub use runner::{run_cloud, CloudOutcome};
+pub use worker::{run_worker, WorkerOutcome, WorkerParams};

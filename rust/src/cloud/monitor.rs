@@ -1,0 +1,52 @@
+//! The monitor: samples the published shared version on a real wall-clock
+//! cadence and records the Figure-4 performance curve.
+//!
+//! Measurement is out-of-band — the monitor reads the blob with a
+//! zero-latency handle and evaluates the criterion natively, consuming no
+//! protocol resources (mirrors the paper, whose curves exclude criterion
+//! computation).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::metrics::Series;
+use crate::vq;
+
+use super::blob::BlobHandle;
+
+/// Monitor parameters.
+#[derive(Debug, Clone)]
+pub struct MonitorConfig {
+    /// Real seconds between samples.
+    pub interval: f64,
+    /// Held-out evaluation sample (flat) and its dimension.
+    pub eval_points: Vec<f32>,
+    pub dim: usize,
+}
+
+/// Run until `stop` flips to `true`, then take one final sample; returns
+/// the recorded curve. Call from a dedicated thread.
+pub fn run_monitor(
+    cfg: MonitorConfig,
+    mut blob: BlobHandle,
+    start: Instant,
+    stop: Arc<AtomicBool>,
+) -> Result<Series> {
+    let n = (cfg.eval_points.len() / cfg.dim) as f64;
+    let mut series = Series::new("cloud");
+    let interval = Duration::from_secs_f64(cfg.interval);
+    loop {
+        let stopping = stop.load(Ordering::Acquire);
+        let (w, v) = blob.get()?;
+        let c = vq::distortion_sum(&w, &cfg.eval_points) / n;
+        series.push(start.elapsed().as_secs_f64(), c);
+        if stopping {
+            series.merges = v;
+            return Ok(series);
+        }
+        std::thread::sleep(interval);
+    }
+}

@@ -1,0 +1,94 @@
+//! The queue service: worker → reducer delta transport
+//! (the Azure QueueStorage role in CloudDALVQ).
+
+use std::sync::mpsc;
+
+use anyhow::{anyhow, Result};
+
+use crate::vq::Delta;
+
+use super::LatencyInjector;
+
+/// One displacement message from a worker.
+#[derive(Debug, Clone)]
+pub struct DeltaMsg {
+    pub worker: usize,
+    /// The worker's exchange sequence number (for tracing / tests).
+    pub seq: u64,
+    pub delta: Delta,
+}
+
+/// The queue service is a bounded channel; ordering across workers is
+/// arrival order (like a real cloud queue, no global ordering guarantee
+/// beyond per-sender FIFO).
+pub struct QueueService;
+
+impl QueueService {
+    /// Create the queue; the receiver side goes to the reducer.
+    pub fn create(capacity: usize) -> (QueueHandle, mpsc::Receiver<DeltaMsg>) {
+        let (tx, rx) = mpsc::sync_channel(capacity);
+        (QueueHandle { tx, latency: LatencyInjector::noop() }, rx)
+    }
+}
+
+/// A worker-side handle with its own latency/fault injector.
+#[derive(Clone)]
+pub struct QueueHandle {
+    tx: mpsc::SyncSender<DeltaMsg>,
+    latency: LatencyInjector,
+}
+
+impl QueueHandle {
+    pub fn with_latency(mut self, latency: LatencyInjector) -> Self {
+        self.latency = latency;
+        self
+    }
+
+    /// Push a delta. Injects one-way latency; may drop the message
+    /// entirely when fault injection is enabled (at-most-once transport —
+    /// the stochastic-gradient algorithm tolerates lost updates, which the
+    /// robustness tests exercise). Returns whether the message was
+    /// delivered.
+    pub fn push(&mut self, msg: DeltaMsg) -> Result<bool> {
+        if self.latency.should_drop() {
+            return Ok(false);
+        }
+        self.latency.delay();
+        self.tx
+            .send(msg)
+            .map_err(|_| anyhow!("queue service stopped"))?;
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_pop_preserves_per_sender_fifo() {
+        let (h, rx) = QueueService::create(64);
+        let mut h1 = h.clone();
+        for seq in 0..5u64 {
+            h1.push(DeltaMsg { worker: 1, seq, delta: Delta::zeros(1, 1) })
+                .unwrap();
+        }
+        drop(h);
+        drop(h1);
+        let seqs: Vec<u64> = rx.iter().map(|m| m.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn dropping_injector_loses_messages() {
+        let (h, rx) = QueueService::create(64);
+        let mut hd =
+            h.clone().with_latency(LatencyInjector::new(0.0, 0.0, 1.0, 3));
+        assert!(!hd
+            .push(DeltaMsg { worker: 0, seq: 0, delta: Delta::zeros(1, 1) })
+            .unwrap());
+        drop(h);
+        drop(hd);
+        assert!(rx.iter().next().is_none());
+    }
+}

@@ -1,0 +1,82 @@
+//! The dedicated reducer — “a dedicated unit permanently modifies the
+//! shared version with the latest updates received from the other machines
+//! without any synchronization barrier” (paper, Section 4).
+
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+use crate::vq::Codebook;
+
+use super::blob::BlobHandle;
+use super::queue::DeltaMsg;
+
+/// What the reducer reports when the queue closes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReducerReport {
+    /// Deltas folded into the shared version.
+    pub merges: u64,
+    /// Final shared version.
+    pub final_shared: Codebook,
+    /// Final published version number.
+    pub final_version: u64,
+}
+
+/// Run the reducer until every queue sender is gone: pop deltas, fold
+/// `w_srd ← w_srd − Δ`, publish to the blob. Folding is barrier-free —
+/// whatever arrives next is applied next. Runs on the caller's thread
+/// (the runner gives it a dedicated one).
+pub fn run_reducer(
+    rx: mpsc::Receiver<DeltaMsg>,
+    mut blob: BlobHandle,
+    w0: Codebook,
+) -> Result<ReducerReport> {
+    let mut w_srd = w0;
+    let mut merges: u64 = 0;
+    for msg in rx.iter() {
+        w_srd.apply_delta(&msg.delta);
+        merges += 1;
+        // Publish every fold; a real deployment may batch publishes, which
+        // only increases staleness the protocol already tolerates.
+        blob.put(w_srd.clone(), merges)?;
+    }
+    Ok(ReducerReport { merges, final_shared: w_srd, final_version: merges })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::blob::BlobService;
+    use crate::cloud::queue::QueueService;
+    use crate::vq::Delta;
+
+    #[test]
+    fn folds_every_delta_exactly_once() {
+        let w0 = Codebook::from_flat(1, 2, vec![10.0, 10.0]);
+        let blob = BlobService::spawn(w0.clone());
+        let (qh, rx) = QueueService::create(16);
+        let blob_r = blob.clone();
+        let w0_r = w0.clone();
+        let reducer =
+            std::thread::spawn(move || run_reducer(rx, blob_r, w0_r));
+
+        let mut q = qh.clone();
+        for seq in 0..4u64 {
+            q.push(DeltaMsg {
+                worker: 0,
+                seq,
+                delta: Delta::from_flat(1, 2, vec![1.0, 2.0]),
+            })
+            .unwrap();
+        }
+        drop(q);
+        drop(qh);
+        let report = reducer.join().unwrap().unwrap();
+        assert_eq!(report.merges, 4);
+        // 10 - 4*1 = 6 ; 10 - 4*2 = 2
+        assert_eq!(report.final_shared.flat(), &[6.0, 2.0]);
+        let (published, v) = blob.clone().get().unwrap();
+        assert_eq!(published, report.final_shared);
+        assert_eq!(v, 4);
+    }
+}

@@ -1,0 +1,217 @@
+//! The cloud driver: wires services, reducer, monitor and `M` workers into
+//! one run — the programmatic form of `dalvq figures --fig 4`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{CloudConfig, ExperimentConfig};
+use crate::metrics::Series;
+use crate::vq::{init_codebook, Codebook};
+
+use super::blob::BlobService;
+use super::latency::LatencyInjector;
+use super::monitor::{run_monitor, MonitorConfig};
+use super::queue::QueueService;
+use super::reducer::run_reducer;
+use super::worker::{run_worker, WorkerOutcome, WorkerParams};
+
+/// Everything a cloud run produces.
+pub struct CloudOutcome {
+    /// `(real seconds, C)` curve of the published shared version.
+    pub series: Series,
+    pub final_shared: Codebook,
+    /// Deltas folded by the reducer.
+    pub merges: u64,
+    pub workers: Vec<WorkerOutcome>,
+}
+
+/// Run the asynchronous scheme on the real-concurrency cloud runtime:
+/// `M` worker threads, a blob service, a queue service, the dedicated
+/// reducer and the monitor.
+pub fn run_cloud(cfg: &ExperimentConfig, cloud: &CloudConfig) -> Result<CloudOutcome> {
+    cfg.validate()?;
+    let tau = cfg.scheme.tau();
+    if cloud.points_per_exchange % tau != 0 {
+        return Err(anyhow!(
+            "cloud.points_per_exchange = {} must be a multiple of tau = {tau}",
+            cloud.points_per_exchange
+        ));
+    }
+    let dataset = cfg.data.mixture.dataset(cfg.data.n_total, cfg.seed);
+    let shards = dataset.split(cfg.m);
+    let w0 = init_codebook(
+        cfg.vq.init,
+        cfg.vq.kappa,
+        cfg.dim(),
+        dataset.flat(),
+        cfg.seed,
+    );
+    let eval_points = cfg.data.mixture.eval_sample(cfg.data.eval_points, cfg.seed);
+
+    let blob = BlobService::spawn(w0.clone());
+    let (queue, queue_rx) = QueueService::create(1024);
+    // Workers + the runner rendezvous once engines are built, so the
+    // monitor clock starts at fleet-ready (not at first-VM-boot).
+    let ready = Arc::new(Barrier::new(cfg.m + 1));
+
+    // Reducer: dedicated thread, zero-latency blob path (it co-locates
+    // with storage in CloudDALVQ; workers see publish latency on reads).
+    let reducer = {
+        let blob = blob.clone();
+        let w0 = w0.clone();
+        std::thread::Builder::new()
+            .name("dalvq-reducer".into())
+            .spawn(move || run_reducer(queue_rx, blob, w0))
+            .expect("spawning reducer thread")
+    };
+
+    // Workers: one thread each, private engine, private seeded latency
+    // injectors (their "network path" to the services).
+    let mut joins = Vec::with_capacity(cfg.m);
+    for (i, shard) in shards.into_iter().enumerate() {
+        let params = WorkerParams {
+            worker_id: i,
+            shard,
+            w0: w0.clone(),
+            schedule: cfg.vq.schedule,
+            tau,
+            points_per_exchange: cloud.points_per_exchange,
+            points_budget: cfg.run.points_per_worker,
+            point_compute: cloud.point_compute,
+            engine_spec: cfg.engine.clone(),
+            ready: Arc::clone(&ready),
+        };
+        let q = queue.clone().with_latency(LatencyInjector::new(
+            cloud.service_latency,
+            cloud.latency_jitter,
+            cloud.drop_prob,
+            cfg.seed ^ ((i as u64) << 8),
+        ));
+        let b = blob.clone().with_latency(LatencyInjector::new(
+            cloud.service_latency,
+            cloud.latency_jitter,
+            0.0, // blob reads are request/response; loss shows as latency
+            cfg.seed ^ ((i as u64) << 8) ^ 1,
+        ));
+        joins.push(
+            std::thread::Builder::new()
+                .name(format!("dalvq-worker-{i}"))
+                .spawn(move || run_worker(params, q, b))
+                .expect("spawning worker thread"),
+        );
+    }
+
+    // Rendezvous: all engines built; start the measured clock + monitor.
+    ready.wait();
+    let start = Instant::now();
+    let stop = Arc::new(AtomicBool::new(false));
+    let monitor = {
+        let blob = blob.clone();
+        let stop = Arc::clone(&stop);
+        let mcfg = MonitorConfig {
+            interval: cfg.run.eval_interval,
+            eval_points,
+            dim: cfg.dim(),
+        };
+        std::thread::Builder::new()
+            .name("dalvq-monitor".into())
+            .spawn(move || run_monitor(mcfg, blob, start, stop))
+            .expect("spawning monitor thread")
+    };
+
+    let mut workers: Vec<WorkerOutcome> = Vec::with_capacity(cfg.m);
+    for j in joins {
+        workers.push(j.join().map_err(|_| anyhow!("worker panicked"))??);
+    }
+    // All workers done: close the queue so the reducer drains and exits.
+    drop(queue);
+    let report = reducer.join().map_err(|_| anyhow!("reducer panicked"))??;
+    // Let the monitor take its final sample and stop.
+    stop.store(true, Ordering::Release);
+    let mut series = monitor.join().map_err(|_| anyhow!("monitor panicked"))??;
+    series.name = format!("M={}", cfg.m);
+    series.points_processed = workers.iter().map(|w| w.points_done).sum();
+    series.merges = report.merges;
+
+    Ok(CloudOutcome {
+        series,
+        final_shared: report.final_shared,
+        merges: report.merges,
+        workers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CloudConfig, SchemeConfig};
+    use crate::sim::DelayModel;
+
+    fn tiny_cfg(m: usize) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.m = m;
+        cfg.data.mixture.components = 4;
+        cfg.data.mixture.dim = 2;
+        cfg.data.n_total = 2_000;
+        cfg.data.eval_points = 256;
+        cfg.vq.kappa = 4;
+        cfg.run.points_per_worker = 5_000;
+        cfg.run.eval_interval = 0.005;
+        // stable step envelope for M*window*eps/kappa (see Schedule docs)
+        cfg.vq.schedule =
+            crate::vq::Schedule::InverseTime { eps0: 0.005, half_life: 5000.0 };
+        cfg.scheme = SchemeConfig::AsyncDelta {
+            tau: 10,
+            up_delay: DelayModel::Instant,
+            down_delay: DelayModel::Instant,
+        };
+        cfg
+    }
+
+    #[test]
+    fn cloud_run_converges_and_accounts_all_points() {
+        let cfg = tiny_cfg(4);
+        let cloud = CloudConfig {
+            service_latency: 0.0005,
+            latency_jitter: 0.5,
+            drop_prob: 0.0,
+            points_per_exchange: 50,
+            point_compute: 1e-5,
+        };
+        let out = run_cloud(&cfg, &cloud).unwrap();
+        assert_eq!(out.series.points_processed, 4 * 5_000);
+        assert!(out.merges > 0);
+        assert!(out.final_shared.is_finite());
+        assert!(
+            out.series.last_value() < out.series.first_value(),
+            "{} -> {}",
+            out.series.first_value(),
+            out.series.last_value()
+        );
+        // no drops configured -> every started exchange delivered
+        for w in &out.workers {
+            assert_eq!(w.pushes_dropped, 0);
+        }
+    }
+
+    #[test]
+    fn cloud_tolerates_message_drops() {
+        let cfg = tiny_cfg(3);
+        let cloud = CloudConfig {
+            service_latency: 0.0002,
+            latency_jitter: 0.2,
+            drop_prob: 0.3,
+            points_per_exchange: 50,
+            point_compute: 1e-5,
+        };
+        let out = run_cloud(&cfg, &cloud).unwrap();
+        let dropped: u64 = out.workers.iter().map(|w| w.pushes_dropped).sum();
+        assert!(dropped > 0, "fault injection should have dropped something");
+        assert!(out.final_shared.is_finite());
+        // the algorithm degrades gracefully: still descending
+        assert!(out.series.last_value() < out.series.first_value());
+    }
+}

@@ -1,0 +1,196 @@
+//! A cloud worker: the per-VM loop of CloudDALVQ.
+//!
+//! Each worker runs on its own OS thread (PJRT clients are
+//! thread-confined), computing `τ`-point chunks with its private engine and
+//! exchanging displacements through the storage services **without ever
+//! blocking on other workers**: uploads/downloads run on a short-lived
+//! exchange thread, and the worker folds a completed download in at the
+//! next chunk boundary — the paper's “as soon as its previous uploads and
+//! downloads are completed”.
+
+use std::sync::{mpsc, Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::data::Shard;
+use crate::runtime::EngineSpec;
+use crate::vq::{Codebook, Delta, Schedule};
+
+use super::blob::BlobHandle;
+use super::queue::{DeltaMsg, QueueHandle};
+
+/// Static parameters of one worker.
+pub struct WorkerParams {
+    pub worker_id: usize,
+    pub shard: Shard,
+    pub w0: Codebook,
+    pub schedule: Schedule,
+    /// Chunk size (the τ of the paper).
+    pub tau: usize,
+    /// Points between exchange attempts (a multiple of τ).
+    pub points_per_exchange: usize,
+    /// Total points this worker processes.
+    pub points_budget: u64,
+    /// Real seconds of compute per point (self-pacing; see
+    /// [`crate::config::CloudConfig::point_compute`]).
+    pub point_compute: f64,
+    pub engine_spec: EngineSpec,
+    /// Fleet start barrier: workers build their engines (PJRT compilation
+    /// can take seconds), then rendezvous here before the measured run —
+    /// the paper's curves measure convergence, not VM boot.
+    pub ready: Arc<Barrier>,
+}
+
+/// What a worker reports at the end of its run.
+#[derive(Debug, Clone)]
+pub struct WorkerOutcome {
+    pub worker_id: usize,
+    pub final_w: Codebook,
+    pub points_done: u64,
+    pub exchanges_started: u64,
+    pub exchanges_completed: u64,
+    /// Messages lost to fault injection (at-most-once transport).
+    pub pushes_dropped: u64,
+}
+
+/// The worker loop. Call from a dedicated thread.
+pub fn run_worker(
+    params: WorkerParams,
+    queue: QueueHandle,
+    blob: BlobHandle,
+) -> Result<WorkerOutcome> {
+    assert!(
+        params.points_per_exchange % params.tau == 0,
+        "points_per_exchange must be a multiple of tau"
+    );
+    let mut engine = params.engine_spec.build()?;
+    params.ready.wait();
+    let dim = params.shard.dim();
+    let kappa = params.w0.kappa();
+    let mut w = params.w0.clone();
+    let mut delta_window = Delta::zeros(kappa, dim);
+    let mut chunk_buf = vec![0.0f32; params.tau * dim];
+    let mut eps_buf = vec![0.0f32; params.tau];
+    let mut t: u64 = 0;
+    let mut seq: u64 = 0;
+    let mut exchanges_completed = 0u64;
+    let mut pushes_dropped = 0u64;
+    // In-flight exchange: completion arrives here as (downloaded shared
+    // version, whether the upload survived transport).
+    let mut in_flight: Option<mpsc::Receiver<(Codebook, bool)>> = None;
+    let run_start = Instant::now();
+
+    while t < params.points_budget {
+        // Self-pace to the configured per-point compute rate.
+        let target = params.point_compute * t as f64;
+        let actual = run_start.elapsed().as_secs_f64();
+        if target > actual {
+            std::thread::sleep(Duration::from_secs_f64(target - actual));
+        }
+        params.shard.fill_chunk(t, params.tau, &mut chunk_buf);
+        params.schedule.fill(t, &mut eps_buf);
+        engine.vq_chunk(&mut w, &chunk_buf, &eps_buf, &mut delta_window)?;
+        t += params.tau as u64;
+
+        // Fold in a completed exchange, if any (non-blocking).
+        if let Some(rx) = &in_flight {
+            match rx.try_recv() {
+                Ok((w_snap, delivered)) => {
+                    // Rebase: shared version minus what we accumulated
+                    // while the exchange was in flight (eq. 9).
+                    w = w_snap;
+                    w.apply_delta(&delta_window);
+                    exchanges_completed += 1;
+                    if !delivered {
+                        pushes_dropped += 1;
+                    }
+                    in_flight = None;
+                }
+                Err(mpsc::TryRecvError::Empty) => {}
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    return Err(anyhow!("exchange thread died"));
+                }
+            }
+        }
+
+        // Start a new exchange at window boundaries when the line is free.
+        if in_flight.is_none() && t % params.points_per_exchange as u64 == 0 {
+            in_flight = Some(start_exchange(
+                params.worker_id,
+                &mut seq,
+                &mut delta_window,
+                &queue,
+                &blob,
+            ));
+        }
+    }
+
+    // Drain: wait for the in-flight exchange, then flush the tail window.
+    if let Some(rx) = in_flight.take() {
+        let (w_snap, delivered) =
+            rx.recv().map_err(|_| anyhow!("exchange thread died during drain"))?;
+        w = w_snap;
+        w.apply_delta(&delta_window);
+        exchanges_completed += 1;
+        if !delivered {
+            pushes_dropped += 1;
+        }
+    }
+    if !delta_window.is_zero() {
+        let rx = start_exchange(
+            params.worker_id,
+            &mut seq,
+            &mut delta_window,
+            &queue,
+            &blob,
+        );
+        let (w_snap, delivered) =
+            rx.recv().map_err(|_| anyhow!("flush exchange thread died"))?;
+        w = w_snap; // delta_window is empty now; nothing to rebase
+        exchanges_completed += 1;
+        if !delivered {
+            pushes_dropped += 1;
+        }
+    }
+
+    Ok(WorkerOutcome {
+        worker_id: params.worker_id,
+        final_w: w,
+        points_done: t,
+        exchanges_started: seq,
+        exchanges_completed,
+        pushes_dropped,
+    })
+}
+
+/// Snapshot the current window displacement and ship it on a short-lived
+/// exchange thread; the returned receiver yields the downloaded shared
+/// version. At most one exchange thread per worker exists at any time.
+fn start_exchange(
+    worker_id: usize,
+    seq: &mut u64,
+    delta_window: &mut Delta,
+    queue: &QueueHandle,
+    blob: &BlobHandle,
+) -> mpsc::Receiver<(Codebook, bool)> {
+    let delta_snd = std::mem::replace(
+        delta_window,
+        Delta::zeros(delta_window.kappa(), delta_window.dim()),
+    );
+    let msg = DeltaMsg { worker: worker_id, seq: *seq, delta: delta_snd };
+    *seq += 1;
+    let (tx, rx) = mpsc::channel();
+    let mut queue = queue.clone();
+    let mut blob = blob.clone();
+    std::thread::Builder::new()
+        .name(format!("dalvq-xchg-{worker_id}"))
+        .spawn(move || {
+            let delivered = queue.push(msg).unwrap_or(false);
+            if let Ok((w_snap, _version)) = blob.get() {
+                let _ = tx.send((w_snap, delivered));
+            }
+        })
+        .expect("spawning exchange thread");
+    rx
+}

@@ -1,0 +1,16 @@
+//! Typed configuration: schema, validation, TOML I/O and paper presets.
+//!
+//! Every run of the system — CLI, examples, benches, tests — is described
+//! by an [`ExperimentConfig`] (one scheme, one `M`) or a [`FigureConfig`]
+//! (one paper figure = one scheme swept over several `M`). Presets in
+//! [`presets`] encode the exact parameterizations of the paper's Figures
+//! 1–4 and the two ablations from DESIGN.md.
+
+mod schema;
+
+pub mod presets;
+
+pub use schema::{
+    CloudConfig, DataConfig, ExperimentConfig, FigureConfig, RunConfig,
+    SchemeConfig, VqConfig,
+};

@@ -1,0 +1,214 @@
+//! Paper-figure presets — the exact experiment grid of the evaluation.
+//!
+//! | preset | paper artifact | scheme | M sweep | comms |
+//! |--------|----------------|--------|---------|-------|
+//! | [`fig1`] | Figure 1 | averaging (eq. 3), τ=10 | 1, 2, 10 | instantaneous |
+//! | [`fig2`] | Figure 2 | delta sync (eq. 8), τ=10 | 1, 2, 10 | instantaneous |
+//! | [`fig3`] | Figure 3 | async delta (eq. 9), τ=10 | 1, 2, 10 | geometric delays |
+//! | [`fig4`] | Figure 4 | async delta on the cloud runtime | 1…32 | latency-injected services |
+//! | [`ablation_tau`] | §3 remark | delta sync, τ swept | 10 | instantaneous |
+//! | [`ablation_delay`] | §4 remark | async delta, delay swept | 10 | geometric |
+
+use crate::sim::DelayModel;
+
+use super::{CloudConfig, ExperimentConfig, FigureConfig, SchemeConfig};
+
+/// The paper's `M` grid for the simulated figures.
+pub const PAPER_MS: [usize; 3] = [1, 2, 10];
+
+/// Figure 1 — scheme (3): averaging brings no speed-up.
+pub fn fig1() -> FigureConfig {
+    let mut base = ExperimentConfig::default();
+    base.scheme = SchemeConfig::Averaging { tau: 10 };
+    // "a simulated parallel implementation in which communications are
+    // instantaneous" — merge and broadcast cost nothing.
+    base.cost.merge_cost = 0.0;
+    base.cost.broadcast_cost = 0.0;
+    // Paper setting: "starting from a random initial w(0)" — NOT drawn
+    // from the data (a data-drawn codebook starts nearly converged and
+    // compresses every wall-clock difference the figures are about).
+    base.vq.init = crate::vq::InitMethod::Gaussian;
+    // Overlapping, imbalanced mixture: convergence stays schedule-limited
+    // over the whole run, like the paper's curves.
+    base.data.mixture.std = 1.2;
+    base.data.mixture.noise_frac = 0.05;
+    base.data.mixture.imbalance = 0.5;
+    // Slow schedule: the run stays transport-limited (prototypes still
+    // moving at the end for M = 1), which is the regime where the paper's
+    // wall-clock comparisons live.
+    base.vq.schedule =
+        crate::vq::Schedule::InverseTime { eps0: 0.005, half_life: 50_000.0 };
+    FigureConfig {
+        id: "fig1".into(),
+        title: "Performance curves for iterations (3) with tau = 10 and \
+                M = 1, 2, 10 (averaging scheme)"
+            .into(),
+        base,
+        ms: PAPER_MS.to_vec(),
+        cloud: None,
+    }
+}
+
+/// Figure 2 — scheme (8): delta merge obtains the expected speed-ups.
+pub fn fig2() -> FigureConfig {
+    let mut fig = fig1();
+    fig.id = "fig2".into();
+    fig.title = "Performance curves for iterations (8) with tau = 10 and \
+                 M = 1, 2, 10 (delta-merge scheme)"
+        .into();
+    fig.base.scheme = SchemeConfig::DeltaSync { tau: 10 };
+    fig
+}
+
+/// Figure 3 — scheme (9): asynchronous delta merge with geometric delays.
+///
+/// Delay scale: one chunk of τ=10 points costs 1e-4 s of virtual compute;
+/// a mean one-way delay of 2e-4 s (two chunks) is the paper's “small
+/// delays” regime.
+pub fn fig3() -> FigureConfig {
+    let mut fig = fig1();
+    fig.id = "fig3".into();
+    fig.title = "Performance curves for iterations (9) with tau = 10 and \
+                 M = 1, 2, 10 (asynchronous scheme, geometric delays)"
+        .into();
+    fig.base.scheme = SchemeConfig::AsyncDelta {
+        tau: 10,
+        up_delay: DelayModel::Geometric { p: 0.5, unit: 1e-4 },
+        down_delay: DelayModel::Geometric { p: 0.5, unit: 1e-4 },
+    };
+    fig
+}
+
+/// Figure 4 — the cloud implementation, scaling to 32 processing units.
+///
+/// Real thread-per-worker concurrency against latency-injected blob/queue
+/// services (the Azure substitution of DESIGN.md). Runs shorter per-worker
+/// streams than the simulator figures because this one burns real wall
+/// time.
+pub fn fig4() -> FigureConfig {
+    let mut base = ExperimentConfig::default();
+    base.scheme = SchemeConfig::AsyncDelta {
+        tau: 10,
+        up_delay: DelayModel::Instant, // delays come from the services
+        down_delay: DelayModel::Instant,
+    };
+    base.run.points_per_worker = 100_000;
+    base.run.eval_interval = 0.02;
+    // At M = 32 the staleness window is ~650 points (exchange window plus
+    // latency x pacing); keep M*window*eps/kappa well below 1
+    // (see Schedule::paper_default).
+    // eps0 = 2e-4 leaves ~4x margin below the envelope so that transient
+    // host-load spikes (which stretch real latencies and hence staleness —
+    // the paper's straggler phenomenon) cannot destabilize the run.
+    base.vq.schedule =
+        crate::vq::Schedule::InverseTime { eps0: 2e-4, half_life: 40_000.0 };
+    let mut cloud = CloudConfig::default();
+    // Exchange every 500 points: at 32 workers the reducer folds ~6/ms,
+    // well inside one core's budget, so queue backlog (which would grow
+    // the staleness window unboundedly) cannot build up.
+    cloud.points_per_exchange = 500;
+    FigureConfig {
+        id: "fig4".into(),
+        title: "Performance curves for iterations (9) on the cloud \
+                implementation, M up to 32"
+            .into(),
+        base,
+        ms: vec![1, 2, 4, 8, 16, 32],
+        cloud: Some(cloud),
+    }
+}
+
+/// ABL-τ — “the acceleration is greater when the reducing phase is
+/// frequent” (§3): delta sync at M = 10 with τ swept.
+pub fn ablation_tau() -> Vec<FigureConfig> {
+    // spans stable (tau <= 200), degraded (1000) and unstable (2000)
+    // regions of the M*tau*eps/kappa envelope
+    [1usize, 10, 50, 200, 1000, 2000]
+        .iter()
+        .map(|&tau| {
+            let mut fig = fig2();
+            fig.id = format!("abl_tau_{tau}");
+            fig.title = format!("Delta-merge scheme at M = 10, tau = {tau}");
+            fig.base.scheme = SchemeConfig::DeltaSync { tau };
+            fig.ms = vec![10];
+            fig
+        })
+        .collect()
+}
+
+/// ABL-delay — “small delays … only slightly impacts performances” (§4):
+/// async delta at M = 10 with the mean delay swept.
+pub fn ablation_delay() -> Vec<FigureConfig> {
+    // mean one-way delays in chunk-compute units (1 chunk = 1e-4 s)
+    [0.0f64, 2e-4, 1e-3, 5e-3]
+        .iter()
+        .map(|&mean| {
+            let mut fig = fig3();
+            fig.id = format!("abl_delay_{}", (mean * 1e4) as u64);
+            fig.title = format!(
+                "Asynchronous scheme at M = 10, mean one-way delay {mean} s"
+            );
+            let delay = if mean == 0.0 {
+                DelayModel::Instant
+            } else {
+                DelayModel::Geometric { p: 0.5, unit: mean * 0.5 }
+            };
+            fig.base.scheme = SchemeConfig::AsyncDelta {
+                tau: 10,
+                up_delay: delay,
+                down_delay: delay,
+            };
+            fig.ms = vec![10];
+            fig
+        })
+        .collect()
+}
+
+/// Quickstart: tiny 2-D problem on the PJRT engine (the `k8d2` artifacts).
+pub fn quickstart() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.data.mixture.components = 8;
+    cfg.data.mixture.dim = 2;
+    cfg.data.n_total = 8_000;
+    cfg.data.eval_points = 1_024;
+    cfg.vq.kappa = 8;
+    cfg.m = 4;
+    cfg.run.points_per_worker = 20_000;
+    cfg.run.eval_interval = 0.005;
+    cfg.engine = crate::runtime::EngineSpec::pjrt_default("k8d2");
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_figure_presets_validate() {
+        for fig in [fig1(), fig2(), fig3(), fig4()] {
+            fig.validate().unwrap_or_else(|e| panic!("{}: {e}", fig.id));
+        }
+        for fig in ablation_tau().into_iter().chain(ablation_delay()) {
+            fig.validate().unwrap_or_else(|e| panic!("{}: {e}", fig.id));
+        }
+    }
+
+    #[test]
+    fn fig1_uses_averaging_fig2_delta() {
+        assert!(matches!(fig1().base.scheme, SchemeConfig::Averaging { tau: 10 }));
+        assert!(matches!(fig2().base.scheme, SchemeConfig::DeltaSync { tau: 10 }));
+        assert!(matches!(fig3().base.scheme, SchemeConfig::AsyncDelta { .. }));
+    }
+
+    #[test]
+    fn fig4_scales_to_32() {
+        let f = fig4();
+        assert_eq!(*f.ms.last().unwrap(), 32);
+        assert!(f.cloud.is_some());
+    }
+
+    #[test]
+    fn quickstart_validates() {
+        quickstart().validate().unwrap();
+    }
+}

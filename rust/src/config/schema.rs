@@ -1,0 +1,608 @@
+//! Config schema, validation and JSON (de)serialization.
+//!
+//! Configs round-trip through the in-tree JSON module (`util::json`):
+//! `dalvq run --config exp.json` loads exactly what
+//! [`ExperimentConfig::to_json_string`] writes.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::MixtureSpec;
+use crate::runtime::EngineSpec;
+use crate::sim::{CostModel, DelayModel};
+use crate::util::Json;
+use crate::vq::{InitMethod, Schedule};
+
+/// Data generation parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataConfig {
+    pub mixture: MixtureSpec,
+    /// Total dataset size — split evenly across workers.
+    pub n_total: usize,
+    /// Held-out evaluation sample size for the `C_{n,M}` estimator.
+    pub eval_points: usize,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        Self { mixture: MixtureSpec::default(), n_total: 40_000, eval_points: 2_048 }
+    }
+}
+
+/// VQ algorithm parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VqConfig {
+    /// Number of prototypes κ.
+    pub kappa: usize,
+    pub schedule: Schedule,
+    pub init: InitMethod,
+}
+
+impl Default for VqConfig {
+    fn default() -> Self {
+        Self {
+            kappa: 16,
+            schedule: Schedule::paper_default(),
+            init: InitMethod::FromData,
+        }
+    }
+}
+
+/// Which parallelization scheme to run (the heart of the paper).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SchemeConfig {
+    /// Plain sequential VQ (the `M = 1` reference).
+    Sequential,
+    /// Scheme A, eq. 3: synchronous averaging every `tau` points.
+    Averaging { tau: usize },
+    /// Scheme B, eq. 8: synchronous delta merge every `tau` points.
+    DeltaSync { tau: usize },
+    /// Scheme C, eq. 9: asynchronous delta merge with stochastic delays.
+    AsyncDelta {
+        tau: usize,
+        up_delay: DelayModel,
+        down_delay: DelayModel,
+    },
+}
+
+impl SchemeConfig {
+    pub fn tau(&self) -> usize {
+        match *self {
+            SchemeConfig::Sequential => 1,
+            SchemeConfig::Averaging { tau }
+            | SchemeConfig::DeltaSync { tau }
+            | SchemeConfig::AsyncDelta { tau, .. } => tau,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchemeConfig::Sequential => "sequential",
+            SchemeConfig::Averaging { .. } => "averaging",
+            SchemeConfig::DeltaSync { .. } => "delta_sync",
+            SchemeConfig::AsyncDelta { .. } => "async_delta",
+        }
+    }
+}
+
+/// Run-length and observation parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    /// Data points each worker processes over the run.
+    pub points_per_worker: u64,
+    /// Seconds of (virtual) wall time between distortion snapshots.
+    pub eval_interval: f64,
+    /// Max trace events retained (0 disables tracing).
+    pub trace_capacity: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self { points_per_worker: 200_000, eval_interval: 0.01, trace_capacity: 0 }
+    }
+}
+
+/// Cloud-runtime (FIG4) parameters: real concurrency with latency-injected
+/// storage services.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CloudConfig {
+    /// Mean one-way blob/queue latency (seconds, real time).
+    pub service_latency: f64,
+    /// Jitter fraction of the latency (uniform ±).
+    pub latency_jitter: f64,
+    /// Probability a queue push is dropped before reaching the reducer
+    /// (fault injection).
+    pub drop_prob: f64,
+    /// Points each worker processes between exchange attempts
+    /// (the cloud analogue of tau; a multiple of tau).
+    pub points_per_exchange: usize,
+    /// Real seconds of compute per data point — the worker paces itself to
+    /// this rate, grounding the wall-clock axis the way the paper's VM
+    /// per-point cost did (the native engine is far faster than a 2012
+    /// Azure VM; without pacing the latency/compute ratio — the quantity
+    /// Figure 4 is about — would be wildly off).
+    pub point_compute: f64,
+}
+
+impl Default for CloudConfig {
+    fn default() -> Self {
+        Self {
+            service_latency: 0.0005,
+            latency_jitter: 0.5,
+            drop_prob: 0.0,
+            points_per_exchange: 100,
+            point_compute: 1e-5,
+        }
+    }
+}
+
+/// One experiment: a scheme, `M` workers, data, costs and an engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub seed: u64,
+    /// Number of computing entities `M`.
+    pub m: usize,
+    pub data: DataConfig,
+    pub vq: VqConfig,
+    pub scheme: SchemeConfig,
+    pub cost: CostModel,
+    pub run: RunConfig,
+    pub engine: EngineSpec,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            seed: 20120427, // ESANN 2012 conference date
+            m: 1,
+            data: DataConfig::default(),
+            vq: VqConfig::default(),
+            scheme: SchemeConfig::DeltaSync { tau: 10 },
+            cost: CostModel::default(),
+            run: RunConfig::default(),
+            engine: EngineSpec::Native,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Validate the whole config; aggregates every problem found.
+    pub fn validate(&self) -> Result<()> {
+        let mut errs: Vec<String> = Vec::new();
+        if self.m == 0 {
+            errs.push("m must be >= 1".into());
+        }
+        if let Err(e) = self.data.mixture.validate() {
+            errs.push(format!("mixture: {e}"));
+        }
+        if self.data.n_total < self.m {
+            errs.push(format!(
+                "n_total = {} cannot shard over m = {} workers",
+                self.data.n_total, self.m
+            ));
+        }
+        if self.data.eval_points == 0 {
+            errs.push("eval_points must be positive".into());
+        }
+        if self.vq.kappa == 0 {
+            errs.push("kappa must be >= 1".into());
+        }
+        if self.vq.kappa > self.data.n_total {
+            errs.push("kappa exceeds dataset size".into());
+        }
+        if let Err(e) = self.vq.schedule.validate() {
+            errs.push(format!("schedule: {e}"));
+        }
+        if self.scheme.tau() == 0 {
+            errs.push("tau must be >= 1".into());
+        }
+        if let SchemeConfig::AsyncDelta { up_delay, down_delay, .. } = &self.scheme {
+            if let Err(e) = up_delay.validate() {
+                errs.push(format!("up_delay: {e}"));
+            }
+            if let Err(e) = down_delay.validate() {
+                errs.push(format!("down_delay: {e}"));
+            }
+        }
+        if let Err(e) = self.cost.validate() {
+            errs.push(format!("cost: {e}"));
+        }
+        if self.run.points_per_worker == 0 {
+            errs.push("points_per_worker must be positive".into());
+        }
+        if !(self.run.eval_interval > 0.0) {
+            errs.push("eval_interval must be positive".into());
+        }
+        if self.run.points_per_worker % self.scheme.tau() as u64 != 0 {
+            errs.push(format!(
+                "points_per_worker = {} must be a multiple of tau = {}",
+                self.run.points_per_worker,
+                self.scheme.tau()
+            ));
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(anyhow!("invalid config:\n  - {}", errs.join("\n  - ")))
+        }
+    }
+
+    /// Sample dimension, derived from the mixture.
+    pub fn dim(&self) -> usize {
+        self.data.mixture.dim
+    }
+
+    // ------------------------------------------------------------- JSON
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("seed", self.seed)
+            .set("m", self.m)
+            .set(
+                "data",
+                Json::obj()
+                    .set("mixture", mixture_to_json(&self.data.mixture))
+                    .set("n_total", self.data.n_total)
+                    .set("eval_points", self.data.eval_points),
+            )
+            .set(
+                "vq",
+                Json::obj()
+                    .set("kappa", self.vq.kappa)
+                    .set("schedule", schedule_to_json(&self.vq.schedule))
+                    .set("init", init_to_json(self.vq.init)),
+            )
+            .set("scheme", scheme_to_json(&self.scheme))
+            .set("cost", cost_to_json(&self.cost))
+            .set(
+                "run",
+                Json::obj()
+                    .set("points_per_worker", self.run.points_per_worker)
+                    .set("eval_interval", self.run.eval_interval)
+                    .set("trace_capacity", self.run.trace_capacity),
+            )
+            .set("engine", engine_to_json(&self.engine))
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_pretty()
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let data = j.req("data")?;
+        let vq = j.req("vq")?;
+        let run = j.req("run")?;
+        let cfg = Self {
+            seed: j.req("seed")?.as_u64()?,
+            m: j.req("m")?.as_usize()?,
+            data: DataConfig {
+                mixture: mixture_from_json(data.req("mixture")?)?,
+                n_total: data.req("n_total")?.as_usize()?,
+                eval_points: data.req("eval_points")?.as_usize()?,
+            },
+            vq: VqConfig {
+                kappa: vq.req("kappa")?.as_usize()?,
+                schedule: schedule_from_json(vq.req("schedule")?)?,
+                init: init_from_json(vq.req("init")?)?,
+            },
+            scheme: scheme_from_json(j.req("scheme")?)?,
+            cost: cost_from_json(j.req("cost")?)?,
+            run: RunConfig {
+                points_per_worker: run.req("points_per_worker")?.as_u64()?,
+                eval_interval: run.req("eval_interval")?.as_f64()?,
+                trace_capacity: run.req("trace_capacity")?.as_usize()?,
+            },
+            engine: engine_from_json(j.req("engine")?)?,
+        };
+        Ok(cfg)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let cfg = Self::from_json(&Json::parse(text).context("parsing config JSON")?)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json_str(&text)
+    }
+}
+
+// ------------------------------------------------------- leaf converters
+
+fn mixture_to_json(m: &MixtureSpec) -> Json {
+    Json::obj()
+        .set("components", m.components)
+        .set("dim", m.dim)
+        .set("separation", m.separation as f64)
+        .set("std", m.std as f64)
+        .set("imbalance", m.imbalance as f64)
+        .set("noise_frac", m.noise_frac as f64)
+}
+
+fn mixture_from_json(j: &Json) -> Result<MixtureSpec> {
+    Ok(MixtureSpec {
+        components: j.req("components")?.as_usize()?,
+        dim: j.req("dim")?.as_usize()?,
+        separation: j.req("separation")?.as_f32()?,
+        std: j.req("std")?.as_f32()?,
+        imbalance: j.req("imbalance")?.as_f32()?,
+        noise_frac: j.req("noise_frac")?.as_f32()?,
+    })
+}
+
+fn schedule_to_json(s: &Schedule) -> Json {
+    match *s {
+        Schedule::Constant { eps0 } => {
+            Json::obj().set("kind", "constant").set("eps0", eps0 as f64)
+        }
+        Schedule::InverseTime { eps0, half_life } => Json::obj()
+            .set("kind", "inverse_time")
+            .set("eps0", eps0 as f64)
+            .set("half_life", half_life as f64),
+        Schedule::Power { eps0, half_life, alpha } => Json::obj()
+            .set("kind", "power")
+            .set("eps0", eps0 as f64)
+            .set("half_life", half_life as f64)
+            .set("alpha", alpha as f64),
+    }
+}
+
+fn schedule_from_json(j: &Json) -> Result<Schedule> {
+    Ok(match j.req("kind")?.as_str()? {
+        "constant" => Schedule::Constant { eps0: j.req("eps0")?.as_f32()? },
+        "inverse_time" => Schedule::InverseTime {
+            eps0: j.req("eps0")?.as_f32()?,
+            half_life: j.req("half_life")?.as_f32()?,
+        },
+        "power" => Schedule::Power {
+            eps0: j.req("eps0")?.as_f32()?,
+            half_life: j.req("half_life")?.as_f32()?,
+            alpha: j.req("alpha")?.as_f32()?,
+        },
+        other => bail!("unknown schedule kind {other:?}"),
+    })
+}
+
+fn init_to_json(i: InitMethod) -> Json {
+    Json::Str(
+        match i {
+            InitMethod::FromData => "from_data",
+            InitMethod::Gaussian => "gaussian",
+            InitMethod::KmeansPlusPlus => "kmeans_plus_plus",
+        }
+        .into(),
+    )
+}
+
+fn init_from_json(j: &Json) -> Result<InitMethod> {
+    Ok(match j.as_str()? {
+        "from_data" => InitMethod::FromData,
+        "gaussian" => InitMethod::Gaussian,
+        "kmeans_plus_plus" => InitMethod::KmeansPlusPlus,
+        other => bail!("unknown init method {other:?}"),
+    })
+}
+
+fn delay_to_json(d: &DelayModel) -> Json {
+    match *d {
+        DelayModel::Instant => Json::obj().set("kind", "instant"),
+        DelayModel::Fixed { secs } => {
+            Json::obj().set("kind", "fixed").set("secs", secs)
+        }
+        DelayModel::Geometric { p, unit } => Json::obj()
+            .set("kind", "geometric")
+            .set("p", p)
+            .set("unit", unit),
+    }
+}
+
+fn delay_from_json(j: &Json) -> Result<DelayModel> {
+    Ok(match j.req("kind")?.as_str()? {
+        "instant" => DelayModel::Instant,
+        "fixed" => DelayModel::Fixed { secs: j.req("secs")?.as_f64()? },
+        "geometric" => DelayModel::Geometric {
+            p: j.req("p")?.as_f64()?,
+            unit: j.req("unit")?.as_f64()?,
+        },
+        other => bail!("unknown delay kind {other:?}"),
+    })
+}
+
+fn scheme_to_json(s: &SchemeConfig) -> Json {
+    match s {
+        SchemeConfig::Sequential => Json::obj().set("kind", "sequential"),
+        SchemeConfig::Averaging { tau } => {
+            Json::obj().set("kind", "averaging").set("tau", *tau)
+        }
+        SchemeConfig::DeltaSync { tau } => {
+            Json::obj().set("kind", "delta_sync").set("tau", *tau)
+        }
+        SchemeConfig::AsyncDelta { tau, up_delay, down_delay } => Json::obj()
+            .set("kind", "async_delta")
+            .set("tau", *tau)
+            .set("up_delay", delay_to_json(up_delay))
+            .set("down_delay", delay_to_json(down_delay)),
+    }
+}
+
+fn scheme_from_json(j: &Json) -> Result<SchemeConfig> {
+    Ok(match j.req("kind")?.as_str()? {
+        "sequential" => SchemeConfig::Sequential,
+        "averaging" => SchemeConfig::Averaging { tau: j.req("tau")?.as_usize()? },
+        "delta_sync" => SchemeConfig::DeltaSync { tau: j.req("tau")?.as_usize()? },
+        "async_delta" => SchemeConfig::AsyncDelta {
+            tau: j.req("tau")?.as_usize()?,
+            up_delay: delay_from_json(j.req("up_delay")?)?,
+            down_delay: delay_from_json(j.req("down_delay")?)?,
+        },
+        other => bail!("unknown scheme kind {other:?}"),
+    })
+}
+
+fn cost_to_json(c: &CostModel) -> Json {
+    Json::obj()
+        .set("point_compute", c.point_compute)
+        .set("merge_cost", c.merge_cost)
+        .set("broadcast_cost", c.broadcast_cost)
+        .set(
+            "speed_factors",
+            Json::Arr(c.speed_factors.iter().map(|s| Json::Num(*s)).collect()),
+        )
+}
+
+fn cost_from_json(j: &Json) -> Result<CostModel> {
+    Ok(CostModel {
+        point_compute: j.req("point_compute")?.as_f64()?,
+        merge_cost: j.req("merge_cost")?.as_f64()?,
+        broadcast_cost: j.req("broadcast_cost")?.as_f64()?,
+        speed_factors: j
+            .req("speed_factors")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_f64())
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+fn engine_to_json(e: &EngineSpec) -> Json {
+    match e {
+        EngineSpec::Native => Json::obj().set("kind", "native"),
+        EngineSpec::Pjrt { artifacts_dir, variant } => Json::obj()
+            .set("kind", "pjrt")
+            .set("artifacts_dir", artifacts_dir.display().to_string())
+            .set("variant", variant.clone()),
+    }
+}
+
+fn engine_from_json(j: &Json) -> Result<EngineSpec> {
+    Ok(match j.req("kind")?.as_str()? {
+        "native" => EngineSpec::Native,
+        "pjrt" => EngineSpec::Pjrt {
+            artifacts_dir: PathBuf::from(j.req("artifacts_dir")?.as_str()?),
+            variant: j.req("variant")?.as_str()?.to_string(),
+        },
+        other => bail!("unknown engine kind {other:?}"),
+    })
+}
+
+/// A paper figure: one base experiment swept over worker counts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FigureConfig {
+    /// `"fig1"` … `"fig4"` (or an ablation id).
+    pub id: String,
+    /// Paper caption, reproduced in reports.
+    pub title: String,
+    pub base: ExperimentConfig,
+    /// The `M` values of the figure (paper: {1, 2, 10}, cloud: up to 32).
+    pub ms: Vec<usize>,
+    /// Cloud-runtime parameters (only used by the FIG4 path).
+    pub cloud: Option<CloudConfig>,
+}
+
+impl FigureConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.ms.is_empty() {
+            return Err(anyhow!("figure {} has no worker counts", self.id));
+        }
+        for &m in &self.ms {
+            let mut cfg = self.base.clone();
+            cfg.m = m;
+            cfg.validate()
+                .with_context(|| format!("figure {} at M={m}", self.id))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_round_trip_default() {
+        let cfg = ExperimentConfig::default();
+        let text = cfg.to_json_string();
+        let back = ExperimentConfig::from_json_str(&text).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn json_round_trip_async_pjrt() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.scheme = SchemeConfig::AsyncDelta {
+            tau: 10,
+            up_delay: DelayModel::Geometric { p: 0.25, unit: 1e-4 },
+            down_delay: DelayModel::Fixed { secs: 0.001 },
+        };
+        cfg.engine = EngineSpec::pjrt_default("k16d16");
+        cfg.cost.speed_factors = vec![1.0, 2.5];
+        cfg.vq.init = InitMethod::KmeansPlusPlus;
+        cfg.vq.schedule =
+            Schedule::Power { eps0: 0.4, half_life: 200.0, alpha: 0.75 };
+        let back = ExperimentConfig::from_json_str(&cfg.to_json_string()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn validation_aggregates_errors() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.m = 0;
+        cfg.vq.kappa = 0;
+        cfg.run.eval_interval = -1.0;
+        let msg = format!("{:#}", cfg.validate().unwrap_err());
+        assert!(msg.contains("m must be"), "{msg}");
+        assert!(msg.contains("kappa"), "{msg}");
+        assert!(msg.contains("eval_interval"), "{msg}");
+    }
+
+    #[test]
+    fn tau_multiple_enforced() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.scheme = SchemeConfig::DeltaSync { tau: 7 };
+        cfg.run.points_per_worker = 100; // not a multiple of 7
+        assert!(cfg.validate().is_err());
+        cfg.run.points_per_worker = 700;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn async_delay_validated() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.scheme = SchemeConfig::AsyncDelta {
+            tau: 10,
+            up_delay: DelayModel::Geometric { p: 2.0, unit: 1.0 },
+            down_delay: DelayModel::Instant,
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn figure_validates_every_m() {
+        let fig = FigureConfig {
+            id: "t".into(),
+            title: "t".into(),
+            base: ExperimentConfig::default(),
+            ms: vec![1, 2, 100_000],
+            cloud: None,
+        };
+        // 100k workers cannot shard 40k points
+        assert!(fig.validate().is_err());
+    }
+
+    #[test]
+    fn bad_json_reports_key() {
+        let mut text = ExperimentConfig::default().to_json_string();
+        text = text.replace("\"kind\": \"delta_sync\"", "\"kind\": \"nope\"");
+        let err = format!("{:#}", ExperimentConfig::from_json_str(&text).unwrap_err());
+        assert!(err.contains("nope"), "{err}");
+    }
+}

@@ -1,0 +1,147 @@
+//! The orchestrator: run lifecycle, persistence and fault policies.
+//!
+//! [`Orchestrator`] is the high-level façade `main.rs` and the examples
+//! drive: it validates configs, runs experiments or whole figures, writes
+//! CSV/JSON outputs, and prints the report tables. Straggler policies
+//! ([`inject_stragglers`]) model the paper's Section-4 observation that
+//! “the unreliability of the cloud computing hardware introduces strong
+//! straggler issues”.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::{ExperimentConfig, FigureConfig};
+use crate::harness;
+use crate::metrics::{write_json, write_report_csv, write_svg, FigureReport};
+use crate::schemes::{self, SchemeOutcome};
+use crate::sim::CostModel;
+
+/// Runs experiments and figures, optionally persisting results.
+#[derive(Debug, Clone, Default)]
+pub struct Orchestrator {
+    /// If set, reports are written to `<out_dir>/<id>.{csv,json}`.
+    pub out_dir: Option<PathBuf>,
+    /// Suppress stdout reporting.
+    pub quiet: bool,
+}
+
+impl Orchestrator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_out_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.out_dir = Some(dir.into());
+        self
+    }
+
+    /// Run a single experiment (one scheme, one `M`).
+    pub fn run_experiment(&self, cfg: &ExperimentConfig) -> Result<SchemeOutcome> {
+        cfg.validate()?;
+        let start = Instant::now();
+        let outcome = schemes::run_with_config(cfg)?;
+        if !self.quiet {
+            println!(
+                "[{}] scheme={} M={} points={} merges={} C: {:.6} -> {:.6} \
+                 ({:.2?} real)",
+                cfg.scheme.label(),
+                cfg.engine_label(),
+                cfg.m,
+                outcome.series.points_processed,
+                outcome.series.merges,
+                outcome.series.first_value(),
+                outcome.series.last_value(),
+                start.elapsed(),
+            );
+        }
+        Ok(outcome)
+    }
+
+    /// Run a whole figure, print its report + speed-up table, persist if
+    /// an output directory is configured.
+    pub fn run_figure(&self, fig: &FigureConfig) -> Result<FigureReport> {
+        let start = Instant::now();
+        let report = harness::run_figure(fig)?;
+        if !self.quiet {
+            print!("{}", harness::format_report(&report));
+            let (threshold, rows) = harness::speedups_at(&report, 0.9);
+            print!("{}", harness::format_speedups(threshold, &rows));
+            println!("(generated in {:.2?})", start.elapsed());
+        }
+        self.persist(&report)?;
+        Ok(report)
+    }
+
+    /// Run several figures (e.g. an ablation family).
+    pub fn run_figures(&self, figs: &[FigureConfig]) -> Result<Vec<FigureReport>> {
+        figs.iter().map(|f| self.run_figure(f)).collect()
+    }
+
+    fn persist(&self, report: &FigureReport) -> Result<()> {
+        if let Some(dir) = &self.out_dir {
+            std::fs::create_dir_all(dir)?;
+            write_report_csv(report, &dir.join(format!("{}.csv", report.id)))?;
+            write_json(report, &dir.join(format!("{}.json", report.id)))?;
+            write_svg(report, dir, true)?;
+            if !self.quiet {
+                println!(
+                    "wrote {}/{}.{{csv,json,svg}}",
+                    dir.display(),
+                    report.id
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+impl ExperimentConfig {
+    /// Short engine label for logs.
+    pub fn engine_label(&self) -> &'static str {
+        match self.engine {
+            crate::runtime::EngineSpec::Native => "native",
+            crate::runtime::EngineSpec::Pjrt { .. } => "pjrt",
+        }
+    }
+}
+
+/// Make `slow_count` of the `m` workers run `factor`× slower — the
+/// straggler injection used by the robustness tests and the ablations.
+pub fn inject_stragglers(cost: &mut CostModel, m: usize, slow_count: usize, factor: f64) {
+    assert!(slow_count <= m, "cannot slow more workers than exist");
+    assert!(factor >= 1.0, "straggler factor must be >= 1");
+    cost.speed_factors = (0..m)
+        .map(|i| if i < slow_count { factor } else { 1.0 })
+        .collect();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn straggler_injection_shapes_factors() {
+        let mut cost = CostModel::default();
+        inject_stragglers(&mut cost, 4, 2, 3.0);
+        assert_eq!(cost.speed_factors, vec![3.0, 3.0, 1.0, 1.0]);
+        assert!(cost.validate().is_ok());
+    }
+
+    #[test]
+    fn orchestrator_runs_and_persists() {
+        let dir = std::env::temp_dir().join("dalvq_orch_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let orch = Orchestrator { out_dir: Some(dir.clone()), quiet: true };
+        let mut fig = crate::config::presets::fig2();
+        fig.base.run.points_per_worker = 2_000;
+        fig.base.data.n_total = 2_000;
+        fig.base.data.eval_points = 256;
+        fig.ms = vec![1, 2];
+        let report = orch.run_figure(&fig).unwrap();
+        assert_eq!(report.series.len(), 2);
+        assert!(dir.join("fig2.csv").exists());
+        assert!(dir.join("fig2.json").exists());
+    }
+}

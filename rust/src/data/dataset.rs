@@ -1,0 +1,172 @@
+//! Flat datasets and the per-worker shards of the paper's setting.
+//!
+//! The paper splits the dataset “among the local memory of the computing
+//! instances”, giving worker `i` the sequence `{z_t^i}_{t=1}^n` and cycling
+//! it (`z_{t+1 mod n}` in eq. 1). [`Shard`] reproduces exactly that: a
+//! contiguous slice of the dataset walked cyclically.
+
+/// An in-memory dataset: `n` points of dimension `dim`, flat row-major.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    points: Vec<f32>,
+    dim: usize,
+}
+
+impl Dataset {
+    pub fn new(points: Vec<f32>, dim: usize) -> Self {
+        assert!(dim > 0, "dim must be positive");
+        assert_eq!(points.len() % dim, 0, "buffer not a multiple of dim");
+        Self { points, dim }
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn flat(&self) -> &[f32] {
+        &self.points
+    }
+
+    /// Point `i` as a slice.
+    pub fn point(&self, i: usize) -> &[f32] {
+        &self.points[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Split into `m` contiguous shards of (near-)equal size. The first
+    /// `len % m` shards get one extra point — every point lands in exactly
+    /// one shard.
+    pub fn split(&self, m: usize) -> Vec<Shard> {
+        assert!(m > 0, "need at least one shard");
+        let n = self.len();
+        assert!(n >= m, "fewer points than shards");
+        let base = n / m;
+        let extra = n % m;
+        let mut shards = Vec::with_capacity(m);
+        let mut start = 0usize;
+        for i in 0..m {
+            let size = base + usize::from(i < extra);
+            let pts =
+                self.points[start * self.dim..(start + size) * self.dim].to_vec();
+            shards.push(Shard::new(pts, self.dim, i));
+            start += size;
+        }
+        shards
+    }
+}
+
+/// One worker's local data `{z_t^i}`, walked cyclically.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    points: Vec<f32>,
+    dim: usize,
+    worker_id: usize,
+}
+
+impl Shard {
+    pub fn new(points: Vec<f32>, dim: usize, worker_id: usize) -> Self {
+        assert_eq!(points.len() % dim, 0, "buffer not a multiple of dim");
+        assert!(!points.is_empty(), "empty shard");
+        Self { points, dim, worker_id }
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // constructor rejects empty shards
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn worker_id(&self) -> usize {
+        self.worker_id
+    }
+
+    pub fn flat(&self) -> &[f32] {
+        &self.points
+    }
+
+    /// Point `t mod n` — the paper's cyclic walk.
+    pub fn point_mod(&self, t: u64) -> &[f32] {
+        let i = (t % self.len() as u64) as usize;
+        &self.points[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Copy the `count` points starting at global step `t0` (cyclically)
+    /// into `out` (flat, `count * dim` long). This is the chunk the engines
+    /// feed to the fused `vq_chunk` kernel.
+    pub fn fill_chunk(&self, t0: u64, count: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), count * self.dim, "chunk buffer size mismatch");
+        let n = self.len() as u64;
+        for j in 0..count {
+            let i = ((t0 + j as u64) % n) as usize;
+            out[j * self.dim..(j + 1) * self.dim]
+                .copy_from_slice(&self.points[i * self.dim..(i + 1) * self.dim]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds(n: usize, dim: usize) -> Dataset {
+        Dataset::new((0..n * dim).map(|i| i as f32).collect(), dim)
+    }
+
+    #[test]
+    fn split_covers_all_points_once() {
+        let d = ds(10, 2);
+        let shards = d.split(3);
+        assert_eq!(shards.iter().map(Shard::len).sum::<usize>(), 10);
+        assert_eq!(shards[0].len(), 4); // 10 = 4 + 3 + 3
+        let mut rebuilt = Vec::new();
+        for s in &shards {
+            rebuilt.extend_from_slice(s.flat());
+        }
+        assert_eq!(rebuilt, d.flat());
+    }
+
+    #[test]
+    fn point_mod_wraps() {
+        let d = ds(3, 2);
+        let s = &d.split(1)[0];
+        assert_eq!(s.point_mod(0), s.point_mod(3));
+        assert_eq!(s.point_mod(2), s.point_mod(5));
+        assert_ne!(s.point_mod(0), s.point_mod(1));
+    }
+
+    #[test]
+    fn fill_chunk_wraps_cyclically() {
+        let d = ds(3, 1); // points 0,1,2
+        let s = &d.split(1)[0];
+        let mut buf = [0.0f32; 5];
+        s.fill_chunk(1, 5, &mut buf);
+        assert_eq!(buf, [1.0, 2.0, 0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "fewer points than shards")]
+    fn split_rejects_more_shards_than_points() {
+        ds(2, 1).split(3);
+    }
+
+    #[test]
+    fn shard_ids_are_positional() {
+        let d = ds(9, 1);
+        for (i, s) in d.split(3).iter().enumerate() {
+            assert_eq!(s.worker_id(), i);
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Gaussian-mixture generator with separation / imbalance / noise controls.
+
+use crate::util::Rng;
+
+use super::Dataset;
+
+/// Specification of the synthetic mixture.
+///
+/// `components` cluster centers are drawn uniformly in
+/// `[-separation, separation]^dim`; each sample picks a component according
+/// to (optionally imbalanced) weights and adds `N(0, std²)` noise; a
+/// `noise_frac` fraction of samples is replaced by uniform background noise
+/// over the bounding box — the non-convexity stressor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MixtureSpec {
+    /// Number of mixture components (the “true” κ*).
+    pub components: usize,
+    /// Sample dimension `d`.
+    pub dim: usize,
+    /// Half-width of the center box.
+    pub separation: f32,
+    /// Per-component standard deviation.
+    pub std: f32,
+    /// Zipf-like imbalance exponent: weight_k ∝ 1/(k+1)^imbalance
+    /// (0 = balanced).
+    pub imbalance: f32,
+    /// Fraction of points replaced by uniform background noise.
+    pub noise_frac: f32,
+}
+
+impl Default for MixtureSpec {
+    fn default() -> Self {
+        // Paper-scale default: 16 well-separated clusters in R^16.
+        Self {
+            components: 16,
+            dim: 16,
+            separation: 5.0,
+            std: 0.6,
+            imbalance: 0.0,
+            noise_frac: 0.02,
+        }
+    }
+}
+
+impl MixtureSpec {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.components == 0 || self.dim == 0 {
+            return Err("mixture needs components > 0 and dim > 0".into());
+        }
+        if !(self.separation > 0.0 && self.separation.is_finite()) {
+            return Err("separation must be positive".into());
+        }
+        if !(self.std > 0.0 && self.std.is_finite()) {
+            return Err("std must be positive".into());
+        }
+        if !(0.0..=1.0).contains(&self.noise_frac) {
+            return Err("noise_frac must be in [0, 1]".into());
+        }
+        if self.imbalance < 0.0 {
+            return Err("imbalance must be >= 0".into());
+        }
+        Ok(())
+    }
+
+    /// Component centers for a given seed (deterministic).
+    pub fn centers(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::from_seed_stream(seed, 0xC0FF_EE00);
+        (0..self.components * self.dim)
+            .map(|_| rng.range_f32(-self.separation, self.separation))
+            .collect()
+    }
+
+    /// Component weights (normalized).
+    pub fn weights(&self) -> Vec<f64> {
+        let raw: Vec<f64> = (0..self.components)
+            .map(|k| 1.0 / ((k + 1) as f64).powf(self.imbalance as f64))
+            .collect();
+        let total: f64 = raw.iter().sum();
+        raw.into_iter().map(|w| w / total).collect()
+    }
+
+    /// Generate `n` points as a flat row-major buffer.
+    ///
+    /// Splittability: the stream for `(seed, stream_id)` is independent of
+    /// any other stream id, so shard `i` regenerates identically whether or
+    /// not the other shards were ever produced.
+    pub fn generate(&self, n: usize, seed: u64, stream_id: u64) -> Vec<f32> {
+        let centers = self.centers(seed);
+        let weights = self.weights();
+        // cumulative weights for inverse-CDF component sampling
+        let mut cum = Vec::with_capacity(weights.len());
+        let mut acc = 0.0f64;
+        for w in &weights {
+            acc += w;
+            cum.push(acc);
+        }
+        let mut rng = Rng::from_seed_stream(seed, stream_id);
+        let mut out = Vec::with_capacity(n * self.dim);
+        let bound = self.separation + 3.0 * self.std;
+        for _ in 0..n {
+            if rng.bool(self.noise_frac as f64) {
+                for _ in 0..self.dim {
+                    out.push(rng.range_f32(-bound, bound));
+                }
+            } else {
+                let u: f64 = rng.f64();
+                let k = cum.iter().position(|c| u <= *c).unwrap_or(cum.len() - 1);
+                let c = &centers[k * self.dim..(k + 1) * self.dim];
+                for ck in c {
+                    out.push(ck + self.std * rng.normal_f32());
+                }
+            }
+        }
+        out
+    }
+
+    /// Full dataset of `n` points (stream 0) plus a held-out evaluation
+    /// sample (stream `u64::MAX`), both deterministic in `seed`.
+    pub fn dataset(&self, n: usize, seed: u64) -> Dataset {
+        Dataset::new(self.generate(n, seed, 0), self.dim)
+    }
+
+    /// Held-out evaluation sample (never overlaps the training streams).
+    pub fn eval_sample(&self, n: usize, seed: u64) -> Vec<f32> {
+        self.generate(n, seed, u64::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed_and_stream() {
+        let spec = MixtureSpec::default();
+        assert_eq!(spec.generate(100, 1, 0), spec.generate(100, 1, 0));
+        assert_ne!(spec.generate(100, 1, 0), spec.generate(100, 2, 0));
+        assert_ne!(spec.generate(100, 1, 0), spec.generate(100, 1, 1));
+    }
+
+    #[test]
+    fn correct_length_and_finite() {
+        let spec = MixtureSpec { dim: 3, ..Default::default() };
+        let pts = spec.generate(50, 9, 4);
+        assert_eq!(pts.len(), 150);
+        assert!(pts.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn weights_normalized_and_imbalanced() {
+        let bal = MixtureSpec { imbalance: 0.0, ..Default::default() };
+        let w = bal.weights();
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((w[0] - w[15]).abs() < 1e-12);
+
+        let imb = MixtureSpec { imbalance: 1.0, ..Default::default() };
+        let w = imb.weights();
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(w[0] > w[15] * 10.0);
+    }
+
+    #[test]
+    fn points_cluster_near_centers_when_noiseless() {
+        let spec = MixtureSpec {
+            components: 4,
+            dim: 2,
+            separation: 10.0,
+            std: 0.1,
+            imbalance: 0.0,
+            noise_frac: 0.0,
+        };
+        let centers = spec.centers(3);
+        let pts = spec.generate(200, 3, 0);
+        for z in pts.chunks_exact(2) {
+            let min_d = centers
+                .chunks_exact(2)
+                .map(|c| (c[0] - z[0]).powi(2) + (c[1] - z[1]).powi(2))
+                .fold(f32::INFINITY, f32::min);
+            assert!(min_d < 1.0, "point {z:?} far from every center");
+        }
+    }
+
+    #[test]
+    fn eval_sample_differs_from_training_stream() {
+        let spec = MixtureSpec::default();
+        assert_ne!(spec.eval_sample(64, 7), spec.generate(64, 7, 0));
+    }
+
+    #[test]
+    fn validate_catches_bad_specs() {
+        let mut s = MixtureSpec::default();
+        s.noise_frac = 1.5;
+        assert!(s.validate().is_err());
+        let mut s = MixtureSpec::default();
+        s.components = 0;
+        assert!(s.validate().is_err());
+        assert!(MixtureSpec::default().validate().is_ok());
+    }
+}

@@ -1,0 +1,19 @@
+//! Synthetic data substrate.
+//!
+//! The paper evaluates on synthetic vector data (the generator from Patra's
+//! PhD §4.2; the original URL is dead). Per the paper — “our conclusions
+//! are more sensitive to the loss function smoothness and convexity than to
+//! the data choice” — we substitute a configurable Gaussian-mixture
+//! generator with controllable separation, imbalance and uniform background
+//! noise (DESIGN.md §Substitutions). The generator is splittable: shard `i`
+//! of a dataset is reproducible in isolation, which is what lets the cloud
+//! runtime give every worker its own shard without materializing the whole
+//! dataset on one node.
+
+mod dataset;
+mod mixture;
+mod splines;
+
+pub use dataset::{Dataset, Shard};
+pub use mixture::MixtureSpec;
+pub use splines::SplineSpec;

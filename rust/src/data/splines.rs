@@ -1,0 +1,206 @@
+//! Functional synthetic data: noisy B-spline curves sampled on a grid.
+//!
+//! The paper's original experiments (Patra's PhD, §4.2 — the generator the
+//! footnote points to) quantize *functional* data: smooth random curves
+//! built from B-splines, sampled at `d` points to give vectors in `R^d`.
+//! This module reproduces that family: `components` mean curves are drawn
+//! as random control-coefficient vectors; every sample perturbs one mean's
+//! coefficients with Gaussian noise and evaluates the cubic B-spline on a
+//! uniform grid of `dim` points.
+//!
+//! Together with the Gaussian [`super::MixtureSpec`], this covers both
+//! data regimes and backs the paper's remark that its conclusions are
+//! “more sensitive to the loss function smoothness and convexity than to
+//! the data choice” — the `functional_data` integration test reruns the
+//! scheme comparison on splines and gets the same shapes.
+
+use crate::util::Rng;
+
+use super::Dataset;
+
+/// Specification of the functional (B-spline) generator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SplineSpec {
+    /// Number of mean curves (the “true” κ*).
+    pub components: usize,
+    /// Samples per curve = the vector dimension `d`.
+    pub dim: usize,
+    /// Number of cubic-spline control coefficients per curve (≥ 4).
+    pub control_points: usize,
+    /// Scale of the mean curves' control coefficients.
+    pub amplitude: f32,
+    /// Std of the per-sample Gaussian perturbation of the coefficients.
+    pub coeff_std: f32,
+}
+
+impl Default for SplineSpec {
+    fn default() -> Self {
+        Self {
+            components: 16,
+            dim: 16,
+            control_points: 8,
+            amplitude: 5.0,
+            coeff_std: 0.6,
+        }
+    }
+}
+
+impl SplineSpec {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.components == 0 || self.dim == 0 {
+            return Err("splines need components > 0 and dim > 0".into());
+        }
+        if self.control_points < 4 {
+            return Err("cubic splines need at least 4 control points".into());
+        }
+        if !(self.amplitude > 0.0) || !(self.coeff_std > 0.0) {
+            return Err("amplitude and coeff_std must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// The `dim × control_points` cubic B-spline basis matrix on a uniform
+    /// grid over the curve's domain (row-major).
+    pub fn basis(&self) -> Vec<f32> {
+        let (d, c) = (self.dim, self.control_points);
+        let mut basis = vec![0.0f32; d * c];
+        for (row, b) in basis.chunks_exact_mut(c).enumerate() {
+            // map grid point into knot coordinates of a uniform cubic spline
+            let t = row as f64 / (d - 1).max(1) as f64 * (c - 3) as f64;
+            let seg = (t.floor() as usize).min(c - 4);
+            let u = t - seg as f64;
+            // cubic uniform B-spline segment weights (Cox–de Boor)
+            let w0 = (1.0 - u).powi(3) / 6.0;
+            let w1 = (3.0 * u.powi(3) - 6.0 * u.powi(2) + 4.0) / 6.0;
+            let w2 = (-3.0 * u.powi(3) + 3.0 * u.powi(2) + 3.0 * u + 1.0) / 6.0;
+            let w3 = u.powi(3) / 6.0;
+            b[seg] = w0 as f32;
+            b[seg + 1] = w1 as f32;
+            b[seg + 2] = w2 as f32;
+            b[seg + 3] = w3 as f32;
+        }
+        basis
+    }
+
+    /// Mean-curve control coefficients for a given seed (deterministic).
+    pub fn mean_coeffs(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::from_seed_stream(seed, 0x5B11E5); // spline stream
+        (0..self.components * self.control_points)
+            .map(|_| rng.range_f32(-self.amplitude, self.amplitude))
+            .collect()
+    }
+
+    /// Generate `n` sampled curves as a flat row-major buffer
+    /// (splittable: independent stream per `(seed, stream_id)`).
+    pub fn generate(&self, n: usize, seed: u64, stream_id: u64) -> Vec<f32> {
+        let basis = self.basis();
+        let means = self.mean_coeffs(seed);
+        let c = self.control_points;
+        let mut rng = Rng::from_seed_stream(seed ^ 0x51_1E5, stream_id);
+        let mut coeffs = vec![0.0f32; c];
+        let mut out = Vec::with_capacity(n * self.dim);
+        for _ in 0..n {
+            let k = rng.usize(self.components);
+            for (j, co) in coeffs.iter_mut().enumerate() {
+                *co = means[k * c + j] + self.coeff_std * rng.normal_f32();
+            }
+            for row in basis.chunks_exact(c) {
+                let mut v = 0.0f32;
+                for (b, co) in row.iter().zip(&coeffs) {
+                    v += b * co;
+                }
+                out.push(v);
+            }
+        }
+        out
+    }
+
+    pub fn dataset(&self, n: usize, seed: u64) -> Dataset {
+        Dataset::new(self.generate(n, seed, 0), self.dim)
+    }
+
+    pub fn eval_sample(&self, n: usize, seed: u64) -> Vec<f32> {
+        self.generate(n, seed, u64::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basis_rows_are_a_partition_of_unity() {
+        let spec = SplineSpec::default();
+        let basis = spec.basis();
+        for (i, row) in basis.chunks_exact(spec.control_points).enumerate() {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+            assert!(row.iter().all(|w| *w >= -1e-6), "negative weight row {i}");
+        }
+    }
+
+    #[test]
+    fn deterministic_and_splittable() {
+        let spec = SplineSpec::default();
+        assert_eq!(spec.generate(50, 1, 0), spec.generate(50, 1, 0));
+        assert_ne!(spec.generate(50, 1, 0), spec.generate(50, 1, 1));
+        assert_ne!(spec.generate(50, 1, 0), spec.generate(50, 2, 0));
+    }
+
+    #[test]
+    fn curves_are_smooth() {
+        // functional data: adjacent samples of a curve differ much less
+        // than its overall amplitude (no white-noise vectors)
+        let spec = SplineSpec { coeff_std: 0.1, ..Default::default() };
+        let pts = spec.generate(100, 3, 0);
+        for curve in pts.chunks_exact(spec.dim) {
+            let amp = curve.iter().fold(0.0f32, |a, x| a.max(x.abs()));
+            let max_step = curve
+                .windows(2)
+                .map(|w| (w[1] - w[0]).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                max_step < amp.max(0.5),
+                "curve jumps by {max_step} with amplitude {amp}"
+            );
+        }
+    }
+
+    #[test]
+    fn samples_cluster_around_their_mean_curves() {
+        let spec = SplineSpec { coeff_std: 0.05, ..Default::default() };
+        let basis = spec.basis();
+        let means = spec.mean_coeffs(7);
+        // evaluate the mean curves
+        let c = spec.control_points;
+        let mut mean_curves = Vec::new();
+        for k in 0..spec.components {
+            for row in basis.chunks_exact(c) {
+                let v: f32 = row
+                    .iter()
+                    .zip(&means[k * c..(k + 1) * c])
+                    .map(|(b, m)| b * m)
+                    .sum();
+                mean_curves.push(v);
+            }
+        }
+        let pts = spec.generate(200, 7, 0);
+        for z in pts.chunks_exact(spec.dim) {
+            let min_d = mean_curves
+                .chunks_exact(spec.dim)
+                .map(|m| {
+                    m.iter().zip(z).map(|(a, b)| (a - b).powi(2)).sum::<f32>()
+                })
+                .fold(f32::INFINITY, f32::min);
+            assert!(min_d < 1.0, "sample {min_d} away from every mean curve");
+        }
+    }
+
+    #[test]
+    fn validation() {
+        let mut s = SplineSpec::default();
+        s.control_points = 3;
+        assert!(s.validate().is_err());
+        assert!(SplineSpec::default().validate().is_ok());
+    }
+}

@@ -1,0 +1,89 @@
+//! The experiment harness: regenerates every table/figure of the paper.
+//!
+//! | id | regenerates | path |
+//! |----|-------------|------|
+//! | `fig1` | Figure 1 (averaging, no speed-up) | simulator |
+//! | `fig2` | Figure 2 (delta merge, speed-up) | simulator |
+//! | `fig3` | Figure 3 (async + geometric delays) | simulator |
+//! | `fig4` | Figure 4 (cloud, up to 32 units) | cloud runtime |
+//! | `abl_tau_*` | §3 remark (merge frequency) | simulator |
+//! | `abl_delay_*` | §4 remark (delay sensitivity) | simulator |
+//!
+//! Each run produces a [`FigureReport`]: one `(wall, C)` series per `M`,
+//! plus a speed-up table against the `M = 1` baseline — the paper's
+//! implicit headline number.
+
+mod report;
+
+pub use report::{format_report, format_speedups};
+
+use anyhow::Result;
+
+use crate::cloud;
+use crate::config::FigureConfig;
+use crate::metrics::{speedup_table, FigureReport, SpeedupRow};
+use crate::runtime::Engine;
+use crate::schemes;
+
+/// Run one figure preset end to end (dispatches to the simulator or the
+/// cloud runtime depending on the preset).
+pub fn run_figure(fig: &FigureConfig) -> Result<FigureReport> {
+    fig.validate()?;
+    let mut report = FigureReport::new(fig.id.clone(), fig.title.clone());
+    report.param("scheme", fig.base.scheme.label());
+    report.param("tau", fig.base.scheme.tau());
+    report.param("seed", fig.base.seed);
+    report.param("points_per_worker", fig.base.run.points_per_worker);
+
+    if let Some(cloud_cfg) = &fig.cloud {
+        report.param("runtime", "cloud");
+        for &m in &fig.ms {
+            let mut cfg = fig.base.clone();
+            cfg.m = m;
+            let outcome = cloud::run_cloud(&cfg, cloud_cfg)?;
+            report.series.push(outcome.series);
+        }
+    } else {
+        report.param("runtime", "simulator");
+        // One engine across the whole sweep (reuses a compiled PJRT
+        // engine; a no-op for the native engine).
+        let mut engine = fig.base.engine.build()?;
+        for &m in &fig.ms {
+            let mut cfg = fig.base.clone();
+            cfg.m = m;
+            let outcome = schemes::run_with_engine(&cfg, engine.as_mut())?;
+            report.series.push(outcome.series);
+        }
+    }
+    Ok(report)
+}
+
+/// Run one figure on a caller-provided engine (simulator figures only).
+pub fn run_figure_with_engine(
+    fig: &FigureConfig,
+    engine: &mut dyn Engine,
+) -> Result<FigureReport> {
+    fig.validate()?;
+    let mut report = FigureReport::new(fig.id.clone(), fig.title.clone());
+    report.param("scheme", fig.base.scheme.label());
+    for &m in &fig.ms {
+        let mut cfg = fig.base.clone();
+        cfg.m = m;
+        let outcome = schemes::run_with_engine(&cfg, engine)?;
+        report.series.push(outcome.series);
+    }
+    Ok(report)
+}
+
+/// The paper's speed-up criterion: time for each curve to reach a
+/// threshold between the `M = 1` start and end values.
+///
+/// `frac` interpolates the threshold: 0 = starting distortion (trivial),
+/// 1 = the baseline's final distortion (strict). The default in reports is
+/// 0.9 — "90% of the baseline's total improvement".
+pub fn speedups_at(report: &FigureReport, frac: f64) -> (f64, Vec<SpeedupRow>) {
+    let base = &report.series[0];
+    let threshold =
+        base.first_value() + (base.min_value() - base.first_value()) * frac;
+    (threshold, speedup_table(&report.series, threshold))
+}

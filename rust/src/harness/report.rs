@@ -1,0 +1,109 @@
+//! Plain-text rendering of figure reports — the “same rows/series the
+//! paper reports”, printable from the CLI and recorded in EXPERIMENTS.md.
+
+use std::fmt::Write as _;
+
+use crate::metrics::{FigureReport, SpeedupRow};
+
+/// Render a report: per-series start/end/min values plus a coarse
+//  ASCII sparkline of each curve over wall time.
+pub fn format_report(report: &FigureReport) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "== {} — {}", report.id, report.title);
+    for (k, v) in &report.params {
+        let _ = writeln!(out, "   {k} = {v}");
+    }
+    let _ = writeln!(
+        out,
+        "{:>8} | {:>12} | {:>12} | {:>12} | {:>10} | {}",
+        "series", "C(start)", "C(end)", "C(min)", "wall(s)", "curve"
+    );
+    for s in &report.series {
+        let _ = writeln!(
+            out,
+            "{:>8} | {:>12.6} | {:>12.6} | {:>12.6} | {:>10.4} | {}",
+            s.name,
+            s.first_value(),
+            s.last_value(),
+            s.min_value(),
+            s.last_wall(),
+            sparkline(s, 40),
+        );
+    }
+    out
+}
+
+/// Render the speed-up table (time to reach `threshold`).
+pub fn format_speedups(threshold: f64, rows: &[SpeedupRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "time to C <= {threshold:.6}:");
+    for r in rows {
+        let t = r
+            .time_to_threshold
+            .map(|t| format!("{t:.4} s"))
+            .unwrap_or_else(|| "never".into());
+        let s = r
+            .speedup
+            .map(|s| format!("{s:.2}x"))
+            .unwrap_or_else(|| "-".into());
+        let _ = writeln!(out, "{:>8} | {:>12} | speed-up {:>8}", r.name, t, s);
+    }
+    out
+}
+
+/// Downsample a curve to `width` buckets and map values to eight shades.
+fn sparkline(series: &crate::metrics::Series, width: usize) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if series.samples.is_empty() {
+        return String::new();
+    }
+    let lo = series.min_value();
+    let hi = series
+        .samples
+        .iter()
+        .map(|s| s.value)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let t0 = series.samples[0].wall;
+    let t1 = series.last_wall().max(t0 + 1e-12);
+    (0..width)
+        .map(|i| {
+            let t = t0 + (t1 - t0) * (i as f64 + 0.5) / width as f64;
+            let v = series.value_at(t);
+            let idx = (((v - lo) / span) * 7.0).round().clamp(0.0, 7.0) as usize;
+            BARS[idx]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Series;
+
+    #[test]
+    fn report_renders_all_series() {
+        let mut r = FigureReport::new("figX", "test figure");
+        for m in [1, 2] {
+            let mut s = Series::new(format!("M={m}"));
+            s.push(0.0, 1.0);
+            s.push(1.0, 0.5 / m as f64);
+            r.series.push(s);
+        }
+        let text = format_report(&r);
+        assert!(text.contains("M=1"));
+        assert!(text.contains("M=2"));
+        assert!(text.contains("figX"));
+    }
+
+    #[test]
+    fn speedup_table_renders() {
+        let rows = vec![
+            SpeedupRow { name: "M=1".into(), time_to_threshold: Some(2.0), speedup: Some(1.0) },
+            SpeedupRow { name: "M=10".into(), time_to_threshold: None, speedup: None },
+        ];
+        let text = format_speedups(0.5, &rows);
+        assert!(text.contains("never"));
+        assert!(text.contains("1.00x"));
+    }
+}

@@ -1,0 +1,62 @@
+//! # dalvq — Distributed Asynchronous Learning Vector Quantization
+//!
+//! A full reproduction of *“A Discussion on Parallelization Schemes for
+//! Stochastic Vector Quantization Algorithms”* (Durut, Patra & Rossi, 2012).
+//!
+//! The paper studies how to parallelize *online* k-means (stochastic VQ,
+//! paper eq. 1) across `M` computing entities and shows:
+//!
+//! * **Scheme A** (eq. 3) — averaging local versions every `τ` points —
+//!   brings **no** wall-clock speed-up ([`schemes::averaging`]).
+//! * **Scheme B** (eq. 8) — *adding* every worker's accumulated
+//!   displacement `Δ` to a shared version — brings real speed-ups
+//!   ([`schemes::delta_sync`]).
+//! * **Scheme C** (eq. 9) — the asynchronous, delay-tolerant variant of B —
+//!   keeps those speed-ups on slow-communication architectures
+//!   ([`schemes::async_delta`] on the event-driven [`sim`]ulator, and
+//!   [`cloud`] for the real-concurrency CloudDALVQ analogue that scales to
+//!   32 workers).
+//!
+//! ## Architecture (three layers, Python never at run time)
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the fused
+//!   `τ`-point VQ walk, tiled distortion, batch-k-means partials.
+//! * **L2** — JAX entry points (`python/compile/model.py`), lowered once by
+//!   `make artifacts` to HLO text in `artifacts/`.
+//! * **L3** — this crate: the coordination layer the paper actually
+//!   contributes, plus every substrate it needs (synthetic data, virtual
+//!   time simulator, latency-injected cloud services, metrics, config).
+//!
+//! The [`runtime`] module loads the artifacts through PJRT (the `xla`
+//! crate) and exposes them behind the [`runtime::Engine`] trait; a
+//! bit-mirrored pure-Rust [`runtime::NativeEngine`] backs property tests
+//! and very large sweeps (cross-checked against PJRT in integration tests).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use dalvq::config::presets;
+//! use dalvq::harness;
+//!
+//! // Regenerate paper Figure 2 (scheme B, tau = 10, M in {1, 2, 10}):
+//! let cfg = presets::fig2();
+//! let report = harness::run_figure(&cfg).unwrap();
+//! for series in &report.series {
+//!     println!("{}: final C = {:.4}", series.name, series.last_value());
+//! }
+//! ```
+
+pub mod baselines;
+pub mod cloud;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod metrics;
+pub mod runtime;
+pub mod schemes;
+pub mod sim;
+pub mod util;
+pub mod vq;
+
+pub use anyhow::{anyhow, Context, Result};

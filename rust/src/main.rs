@@ -1,0 +1,283 @@
+//! `dalvq` — the CLI launcher for the parallel-VQ reproduction.
+//!
+//! ```text
+//! dalvq figures --fig all            # regenerate paper Figures 1-4
+//! dalvq figures --fig 2 --points 50000 --out-dir results
+//! dalvq figures --fig 2 --pjrt-variant k16d16   # hot path on artifacts
+//! dalvq ablate --param tau           # §3 merge-frequency ablation
+//! dalvq ablate --param delay         # §4 delay-sensitivity ablation
+//! dalvq run --preset quickstart      # one experiment (PJRT engine)
+//! dalvq run --config my.json         # one experiment from a JSON config
+//! dalvq run --preset quickstart --print-config  # dump effective config
+//! dalvq baseline --kind batch --m 8  # batch k-means baseline
+//! dalvq info                         # artifact manifest summary
+//! ```
+//!
+//! (Argument parsing is hand-rolled: the offline build carries no clap.)
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Result};
+
+use dalvq::baselines;
+use dalvq::config::{presets, ExperimentConfig, FigureConfig};
+use dalvq::coordinator::Orchestrator;
+use dalvq::runtime::{EngineSpec, Manifest};
+use dalvq::sim::Evaluator;
+use dalvq::vq::init_codebook;
+
+const USAGE: &str = "\
+dalvq — Distributed Asynchronous Learning Vector Quantization
+reproduction of Durut, Patra & Rossi (2012)
+
+USAGE:
+  dalvq <COMMAND> [OPTIONS]
+
+COMMANDS:
+  figures    regenerate paper figures (1-3: simulator, 4: cloud runtime)
+  ablate     run the DESIGN.md ablations
+  run        run a single experiment from a preset or JSON config
+  baseline   run a k-means baseline
+  info       print the AOT artifact manifest summary
+  help       show this message
+
+OPTIONS (figures):
+  --fig <1|2|3|4|all>        which figure [default: all]
+  --points <N>               override points per worker
+  --pjrt-variant <NAME>      run on the PJRT engine with this variant
+  --artifacts-dir <DIR>      artifacts directory [default: artifacts]
+
+OPTIONS (ablate):
+  --param <tau|delay>        which ablation family
+  --points <N>               override points per worker
+
+OPTIONS (run):
+  --preset <quickstart|fig2-single>
+  --config <FILE.json>
+  --print-config             dump the effective config as JSON and exit
+
+OPTIONS (baseline):
+  --kind <batch|minibatch>   [default: batch]
+  --m <N>                    virtual workers [default: 8]
+  --iters <N>                iterations/steps [default: 50]
+
+GLOBAL OPTIONS:
+  --out-dir <DIR>            write CSV/JSON reports here
+  --quiet                    suppress report tables
+";
+
+/// Tiny argument scanner: flags with optional values.
+struct Args {
+    argv: Vec<String>,
+}
+
+impl Args {
+    fn take_flag(&mut self, name: &str) -> bool {
+        if let Some(i) = self.argv.iter().position(|a| a == name) {
+            self.argv.remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn take_value(&mut self, name: &str) -> Result<Option<String>> {
+        if let Some(i) = self.argv.iter().position(|a| a == name) {
+            if i + 1 >= self.argv.len() {
+                bail!("{name} requires a value");
+            }
+            self.argv.remove(i);
+            Ok(Some(self.argv.remove(i)))
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.argv.is_empty() {
+            Ok(())
+        } else {
+            bail!("unrecognized arguments: {:?}\n\n{USAGE}", self.argv)
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv.remove(0);
+    let mut args = Args { argv };
+
+    let out_dir = args.take_value("--out-dir")?.map(PathBuf::from);
+    let quiet = args.take_flag("--quiet");
+    let orch = Orchestrator { out_dir, quiet };
+
+    match cmd.as_str() {
+        "figures" => {
+            let which = args.take_value("--fig")?.unwrap_or_else(|| "all".into());
+            let points = parse_opt_u64(&mut args, "--points")?;
+            let pjrt_variant = args.take_value("--pjrt-variant")?;
+            let artifacts_dir = PathBuf::from(
+                args.take_value("--artifacts-dir")?
+                    .unwrap_or_else(|| "artifacts".into()),
+            );
+            args.finish()?;
+            let mut figs: Vec<FigureConfig> = match which.as_str() {
+                "1" => vec![presets::fig1()],
+                "2" => vec![presets::fig2()],
+                "3" => vec![presets::fig3()],
+                "4" => vec![presets::fig4()],
+                "all" => vec![
+                    presets::fig1(),
+                    presets::fig2(),
+                    presets::fig3(),
+                    presets::fig4(),
+                ],
+                other => bail!("unknown figure {other:?} (want 1|2|3|4|all)"),
+            };
+            for f in figs.iter_mut() {
+                if let Some(p) = points {
+                    f.base.run.points_per_worker = p;
+                }
+                if let Some(v) = &pjrt_variant {
+                    f.base.engine = EngineSpec::Pjrt {
+                        artifacts_dir: artifacts_dir.clone(),
+                        variant: v.clone(),
+                    };
+                }
+            }
+            orch.run_figures(&figs)?;
+        }
+        "ablate" => {
+            let param = args
+                .take_value("--param")?
+                .ok_or_else(|| anyhow!("ablate requires --param tau|delay"))?;
+            let points = parse_opt_u64(&mut args, "--points")?;
+            args.finish()?;
+            let mut figs = match param.as_str() {
+                "tau" => presets::ablation_tau(),
+                "delay" => presets::ablation_delay(),
+                other => bail!("unknown ablation {other:?} (want tau|delay)"),
+            };
+            for f in figs.iter_mut() {
+                if let Some(p) = points {
+                    f.base.run.points_per_worker = p;
+                }
+            }
+            orch.run_figures(&figs)?;
+        }
+        "run" => {
+            let preset = args.take_value("--preset")?;
+            let config = args.take_value("--config")?;
+            let print_config = args.take_flag("--print-config");
+            args.finish()?;
+            let cfg: ExperimentConfig = match (preset.as_deref(), config) {
+                (Some("quickstart"), None) => presets::quickstart(),
+                (Some("fig2-single"), None) => {
+                    let mut c = presets::fig2().base;
+                    c.m = 10;
+                    c
+                }
+                (Some(other), None) => {
+                    bail!("unknown preset {other:?} (want quickstart|fig2-single)")
+                }
+                (None, Some(path)) => {
+                    ExperimentConfig::from_file(&PathBuf::from(path))?
+                }
+                _ => bail!("pass exactly one of --preset / --config"),
+            };
+            if print_config {
+                println!("{}", cfg.to_json_string());
+                return Ok(());
+            }
+            let mut orch = orch;
+            orch.quiet = false;
+            orch.run_experiment(&cfg)?;
+        }
+        "baseline" => {
+            let kind = args.take_value("--kind")?.unwrap_or_else(|| "batch".into());
+            let m = parse_opt_u64(&mut args, "--m")?.unwrap_or(8) as usize;
+            let iters = parse_opt_u64(&mut args, "--iters")?.unwrap_or(50);
+            args.finish()?;
+            let cfg = ExperimentConfig::default();
+            let ds = cfg.data.mixture.dataset(cfg.data.n_total, cfg.seed);
+            let w0 = init_codebook(
+                dalvq::vq::InitMethod::KmeansPlusPlus,
+                cfg.vq.kappa,
+                cfg.dim(),
+                ds.flat(),
+                cfg.seed,
+            );
+            let mut engine = cfg.engine.build()?;
+            let mut eval = Evaluator::new(
+                cfg.data.mixture.eval_sample(cfg.data.eval_points, cfg.seed),
+                cfg.dim(),
+                cfg.run.eval_interval,
+            );
+            let out = match kind.as_str() {
+                "batch" => baselines::batch_kmeans(
+                    engine.as_mut(), &w0, ds.flat(), m, &cfg.cost, &mut eval,
+                    iters, 1e-6,
+                )?,
+                "minibatch" => baselines::minibatch_kmeans(
+                    engine.as_mut(), &w0, ds.flat(), 1024, m, &cfg.cost,
+                    &mut eval, iters,
+                )?,
+                other => bail!("unknown baseline {other:?} (want batch|minibatch)"),
+            };
+            println!(
+                "{}: {} iterations, C {:.6} -> {:.6} in {:.4}s virtual",
+                out.series.name,
+                out.iterations,
+                out.series.first_value(),
+                out.series.last_value(),
+                out.series.last_wall()
+            );
+        }
+        "info" => {
+            let artifacts_dir = PathBuf::from(
+                args.take_value("--artifacts-dir")?
+                    .unwrap_or_else(|| "artifacts".into()),
+            );
+            args.finish()?;
+            let m = Manifest::load(&artifacts_dir)?;
+            println!("artifact format: {}", m.format);
+            for (name, v) in &m.variants {
+                println!(
+                    "  {name}: kappa={} dim={} tau={} eval_batch={} entries={}",
+                    v.params.kappa,
+                    v.params.dim,
+                    v.params.tau,
+                    v.params.eval_batch,
+                    v.entries.len()
+                );
+            }
+        }
+        "help" | "--help" | "-h" => println!("{USAGE}"),
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+    Ok(())
+}
+
+fn parse_opt_u64(args: &mut Args, name: &str) -> Result<Option<u64>> {
+    args.take_value(name)?
+        .map(|v| {
+            v.parse::<u64>()
+                .map_err(|_| anyhow!("{name} expects an integer, got {v:?}"))
+        })
+        .transpose()
+}

@@ -1,0 +1,16 @@
+//! Metrics: time series, run records, writers and speed-up summaries.
+//!
+//! Every figure in the paper is a set of `(wall-clock time, C_{n,M})`
+//! curves; [`Series`] is that curve, [`FigureReport`] a set of them, and
+//! [`summary`] extracts the quantities the paper argues about — time to
+//! reach a distortion threshold and the speed-up of `M` workers over one.
+
+mod plot;
+mod series;
+mod summary;
+mod writer;
+
+pub use plot::{render_svg, write_svg};
+pub use series::{FigureReport, Sample, Series};
+pub use summary::{speedup_table, time_to_threshold, SpeedupRow};
+pub use writer::{write_csv, write_json, write_report_csv};

@@ -1,0 +1,276 @@
+//! SVG rendering of figure reports — the actual *figures* of the paper,
+//! as standalone vector images (`results/<id>.svg`).
+//!
+//! Dependency-free: hand-written SVG with linear axes, automatic ranges,
+//! tick labels, a legend, and one polyline per series. Log-scale on the
+//! distortion axis is supported because the paper's interesting action
+//! happens over an order of magnitude of `C`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{FigureReport, Series};
+
+const W: f64 = 720.0;
+const H: f64 = 440.0;
+const ML: f64 = 70.0; // margins
+const MR: f64 = 170.0;
+const MT: f64 = 48.0;
+const MB: f64 = 52.0;
+
+const COLORS: [&str; 8] = [
+    "#1f77b4", "#d62728", "#2ca02c", "#ff7f0e", "#9467bd", "#8c564b",
+    "#e377c2", "#17becf",
+];
+
+/// Render a report as an SVG document.
+pub fn render_svg(report: &FigureReport, log_y: bool) -> String {
+    let (x0, x1) = x_range(&report.series);
+    let (y0, y1) = y_range(&report.series, log_y);
+    let xmap = |x: f64| ML + (x - x0) / (x1 - x0).max(1e-12) * (W - ML - MR);
+    let ymap = |y: f64| {
+        let v = if log_y { y.max(1e-12).log10() } else { y };
+        H - MB - (v - y0) / (y1 - y0).max(1e-12) * (H - MT - MB)
+    };
+
+    let mut svg = String::new();
+    let _ = write!(
+        svg,
+        r##"<svg xmlns="http://www.w3.org/2000/svg" width="{W}" height="{H}" viewBox="0 0 {W} {H}" font-family="Helvetica,Arial,sans-serif">"##
+    );
+    let _ = write!(svg, r##"<rect width="{W}" height="{H}" fill="white"/>"##);
+    // title
+    let _ = write!(
+        svg,
+        r##"<text x="{}" y="24" font-size="14" text-anchor="middle">{}</text>"##,
+        (ML + W - MR) / 2.0,
+        escape(&format!("{} — {}", report.id, truncate(&report.title, 80)))
+    );
+    // plot frame
+    let _ = write!(
+        svg,
+        r##"<rect x="{ML}" y="{MT}" width="{}" height="{}" fill="none" stroke="#333" stroke-width="1"/>"##,
+        W - ML - MR,
+        H - MT - MB
+    );
+    // axis ticks: 5 on each axis
+    for i in 0..=5 {
+        let fx = i as f64 / 5.0;
+        let x = x0 + fx * (x1 - x0);
+        let px = xmap(x);
+        let _ = write!(
+            svg,
+            r##"<line x1="{px}" y1="{}" x2="{px}" y2="{}" stroke="#333"/>"##,
+            H - MB,
+            H - MB + 4.0
+        );
+        let _ = write!(
+            svg,
+            r##"<text x="{px}" y="{}" font-size="11" text-anchor="middle">{}</text>"##,
+            H - MB + 17.0,
+            fmt_num(x)
+        );
+        let vy = y0 + fx * (y1 - y0);
+        let y = if log_y { 10f64.powf(vy) } else { vy };
+        let py = ymap(y);
+        let _ = write!(
+            svg,
+            r##"<line x1="{}" y1="{py}" x2="{ML}" y2="{py}" stroke="#333"/>"##,
+            ML - 4.0
+        );
+        let _ = write!(
+            svg,
+            r##"<text x="{}" y="{}" font-size="11" text-anchor="end">{}</text>"##,
+            ML - 8.0,
+            py + 4.0,
+            fmt_num(y)
+        );
+        // light gridline
+        let _ = write!(
+            svg,
+            r##"<line x1="{ML}" y1="{py}" x2="{}" y2="{py}" stroke="#eee"/>"##,
+            W - MR
+        );
+    }
+    // axis labels
+    let _ = write!(
+        svg,
+        r##"<text x="{}" y="{}" font-size="12" text-anchor="middle">wall-clock time (s)</text>"##,
+        (ML + W - MR) / 2.0,
+        H - 14.0
+    );
+    let _ = write!(
+        svg,
+        r##"<text x="16" y="{}" font-size="12" text-anchor="middle" transform="rotate(-90 16 {})">normalized distortion C{}</text>"##,
+        (MT + H - MB) / 2.0,
+        (MT + H - MB) / 2.0,
+        if log_y { " (log)" } else { "" }
+    );
+    // series
+    for (si, s) in report.series.iter().enumerate() {
+        let color = COLORS[si % COLORS.len()];
+        let mut points = String::new();
+        for sample in &s.samples {
+            if !sample.value.is_finite() {
+                continue; // divergent tails stay off the canvas
+            }
+            let _ = write!(
+                points,
+                "{:.2},{:.2} ",
+                xmap(sample.wall),
+                ymap(sample.value)
+            );
+        }
+        let _ = write!(
+            svg,
+            r##"<polyline points="{}" fill="none" stroke="{color}" stroke-width="1.8"/>"##,
+            points.trim_end()
+        );
+        // legend
+        let ly = MT + 16.0 + si as f64 * 18.0;
+        let _ = write!(
+            svg,
+            r##"<line x1="{}" y1="{ly}" x2="{}" y2="{ly}" stroke="{color}" stroke-width="3"/>"##,
+            W - MR + 12.0,
+            W - MR + 36.0
+        );
+        let _ = write!(
+            svg,
+            r##"<text x="{}" y="{}" font-size="12">{}</text>"##,
+            W - MR + 42.0,
+            ly + 4.0,
+            escape(&s.name)
+        );
+    }
+    svg.push_str("</svg>");
+    svg
+}
+
+/// Write `<dir>/<id>.svg`.
+pub fn write_svg(report: &FigureReport, dir: &Path, log_y: bool) -> Result<()> {
+    let path = dir.join(format!("{}.svg", report.id));
+    std::fs::write(&path, render_svg(report, log_y))
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+fn x_range(series: &[Series]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for s in series {
+        for p in &s.samples {
+            lo = lo.min(p.wall);
+            hi = hi.max(p.wall);
+        }
+    }
+    if !lo.is_finite() || lo >= hi {
+        (0.0, 1.0)
+    } else {
+        (lo, hi)
+    }
+}
+
+fn y_range(series: &[Series], log_y: bool) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for s in series {
+        for p in &s.samples {
+            if p.value.is_finite() {
+                lo = lo.min(p.value);
+                hi = hi.max(p.value);
+            }
+        }
+    }
+    if !lo.is_finite() || lo >= hi {
+        return (0.0, 1.0);
+    }
+    if log_y {
+        (lo.max(1e-12).log10(), hi.max(1e-12).log10())
+    } else {
+        let pad = (hi - lo) * 0.05;
+        ((lo - pad).max(0.0), hi + pad)
+    }
+}
+
+fn fmt_num(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 1000.0 || x.abs() < 0.01 {
+        format!("{x:.1e}")
+    } else if x.abs() >= 10.0 {
+        format!("{x:.1}")
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.chars().count() <= n {
+        s.to_string()
+    } else {
+        let t: String = s.chars().take(n).collect();
+        format!("{t}…")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::FigureReport;
+
+    fn sample_report() -> FigureReport {
+        let mut r = FigureReport::new("figX", "test <figure> & more");
+        for m in [1usize, 10] {
+            let mut s = Series::new(format!("M={m}"));
+            for i in 0..50 {
+                let t = i as f64 * 0.01;
+                s.push(t, 100.0 * (-t * m as f64).exp() + 10.0);
+            }
+            r.series.push(s);
+        }
+        r
+    }
+
+    #[test]
+    fn renders_well_formed_svg() {
+        let svg = render_svg(&sample_report(), false);
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>"));
+        assert_eq!(svg.matches("<polyline").count(), 2);
+        assert!(svg.contains("M=10"));
+        assert!(svg.contains("&lt;figure&gt;"), "title must be escaped");
+        // balanced rects/texts parse as naive XML: every <tag is closed
+        assert_eq!(svg.matches("<svg").count(), svg.matches("</svg>").count());
+    }
+
+    #[test]
+    fn log_scale_handles_divergence() {
+        let mut r = sample_report();
+        r.series[0].push(0.6, f64::INFINITY); // divergent tail
+        r.series[0].push(0.7, 1e30);
+        let svg = render_svg(&r, true);
+        assert!(svg.contains("log"));
+        assert!(!svg.contains("inf"), "non-finite points must be dropped");
+    }
+
+    #[test]
+    fn writes_file_named_after_report() {
+        let dir = std::env::temp_dir().join("dalvq_plot_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_svg(&sample_report(), &dir, false).unwrap();
+        assert!(dir.join("figX.svg").exists());
+    }
+
+    #[test]
+    fn empty_report_does_not_panic() {
+        let r = FigureReport::new("empty", "no data");
+        let svg = render_svg(&r, false);
+        assert!(svg.contains("</svg>"));
+    }
+}

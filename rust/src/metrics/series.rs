@@ -1,0 +1,216 @@
+//! Time series of the quantization criterion.
+
+use anyhow::Result;
+
+use crate::util::Json;
+
+
+/// One `(wall time, value)` observation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    /// Wall-clock time (seconds — virtual for the simulator, real for the
+    /// cloud runtime).
+    pub wall: f64,
+    /// Normalized empirical distortion `C_{n,M}(w_srd)` (paper eq. 2).
+    pub value: f64,
+}
+
+/// A named performance curve — one line of a paper figure.
+#[derive(Debug, Clone)]
+pub struct Series {
+    /// e.g. `"M=10"` — the legend label used by the paper.
+    pub name: String,
+    pub samples: Vec<Sample>,
+    /// Total data points processed over the run (all workers).
+    pub points_processed: u64,
+    /// Number of merge/reduce events that occurred.
+    pub merges: u64,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), samples: Vec::new(), points_processed: 0, merges: 0 }
+    }
+
+    pub fn push(&mut self, wall: f64, value: f64) {
+        self.samples.push(Sample { wall, value });
+    }
+
+    pub fn last_value(&self) -> f64 {
+        self.samples.last().map(|s| s.value).unwrap_or(f64::NAN)
+    }
+
+    pub fn first_value(&self) -> f64 {
+        self.samples.first().map(|s| s.value).unwrap_or(f64::NAN)
+    }
+
+    pub fn last_wall(&self) -> f64 {
+        self.samples.last().map(|s| s.wall).unwrap_or(0.0)
+    }
+
+    /// Minimum value reached over the run.
+    pub fn min_value(&self) -> f64 {
+        self.samples.iter().map(|s| s.value).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Wall times are strictly non-decreasing (sanity for the simulator).
+    pub fn is_time_monotone(&self) -> bool {
+        self.samples.windows(2).all(|w| w[0].wall <= w[1].wall)
+    }
+
+    /// Linear interpolation of the curve at `wall` (clamped to range).
+    pub fn value_at(&self, wall: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        if wall <= self.samples[0].wall {
+            return self.samples[0].value;
+        }
+        for w in self.samples.windows(2) {
+            if wall <= w[1].wall {
+                let span = w[1].wall - w[0].wall;
+                if span <= 0.0 {
+                    return w[1].value;
+                }
+                let a = (wall - w[0].wall) / span;
+                return w[0].value * (1.0 - a) + w[1].value * a;
+            }
+        }
+        self.last_value()
+    }
+}
+
+/// A full figure: several curves plus metadata about the run.
+#[derive(Debug, Clone)]
+pub struct FigureReport {
+    /// e.g. `"fig2"`.
+    pub id: String,
+    /// Human description, e.g. the paper caption.
+    pub title: String,
+    pub series: Vec<Series>,
+    /// Free-form run parameters for reproducibility (tau, seed, ...).
+    pub params: Vec<(String, String)>,
+}
+
+impl FigureReport {
+    pub fn new(id: impl Into<String>, title: impl Into<String>) -> Self {
+        Self { id: id.into(), title: title.into(), series: Vec::new(), params: Vec::new() }
+    }
+
+    pub fn param(&mut self, k: impl Into<String>, v: impl ToString) -> &mut Self {
+        self.params.push((k.into(), v.to_string()));
+        self
+    }
+
+    pub fn series_named(&self, name: &str) -> Option<&Series> {
+        self.series.iter().find(|s| s.name == name)
+    }
+}
+
+
+impl Series {
+    /// Encode as JSON (for report persistence).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.clone())
+            .set("points_processed", self.points_processed)
+            .set("merges", self.merges)
+            .set(
+                "samples",
+                Json::Arr(
+                    self.samples
+                        .iter()
+                        .map(|s| {
+                            Json::Arr(vec![Json::Num(s.wall), Json::Num(s.value)])
+                        })
+                        .collect(),
+                ),
+            )
+    }
+
+    pub fn from_json(j: &Json) -> Result<Series> {
+        let mut series = Series::new(j.req("name")?.as_str()?);
+        series.points_processed = j.req("points_processed")?.as_u64()?;
+        series.merges = j.req("merges")?.as_u64()?;
+        for pair in j.req("samples")?.as_arr()? {
+            let pair = pair.as_arr()?;
+            series.push(pair[0].as_f64()?, pair[1].as_f64()?);
+        }
+        Ok(series)
+    }
+}
+
+impl FigureReport {
+    /// Encode as JSON (round-trips via [`FigureReport::from_json`]).
+    pub fn to_json(&self) -> Json {
+        let params = self.params.iter().fold(Json::obj(), |acc, (k, v)| {
+            acc.set(k, v.clone())
+        });
+        Json::obj()
+            .set("id", self.id.clone())
+            .set("title", self.title.clone())
+            .set("params", params)
+            .set(
+                "series",
+                Json::Arr(self.series.iter().map(Series::to_json).collect()),
+            )
+    }
+
+    pub fn from_json(j: &Json) -> Result<FigureReport> {
+        let mut report = FigureReport::new(
+            j.req("id")?.as_str()?,
+            j.req("title")?.as_str()?,
+        );
+        for (k, v) in j.req("params")?.as_obj()? {
+            report.params.push((k.clone(), v.as_str()?.to_string()));
+        }
+        for s in j.req("series")?.as_arr()? {
+            report.series.push(Series::from_json(s)?);
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_lookups() {
+        let mut s = Series::new("M=1");
+        s.push(0.0, 10.0);
+        s.push(1.0, 4.0);
+        s.push(2.0, 2.0);
+        assert_eq!(s.first_value(), 10.0);
+        assert_eq!(s.last_value(), 2.0);
+        assert_eq!(s.min_value(), 2.0);
+        assert!(s.is_time_monotone());
+    }
+
+    #[test]
+    fn interpolation() {
+        let mut s = Series::new("x");
+        s.push(0.0, 10.0);
+        s.push(2.0, 0.0);
+        assert_eq!(s.value_at(1.0), 5.0);
+        assert_eq!(s.value_at(-1.0), 10.0);
+        assert_eq!(s.value_at(5.0), 0.0);
+    }
+
+    #[test]
+    fn monotonicity_detects_violation() {
+        let mut s = Series::new("x");
+        s.push(1.0, 1.0);
+        s.push(0.5, 1.0);
+        assert!(!s.is_time_monotone());
+    }
+
+    #[test]
+    fn report_lookup_by_name() {
+        let mut r = FigureReport::new("fig1", "test");
+        r.series.push(Series::new("M=1"));
+        r.series.push(Series::new("M=10"));
+        assert!(r.series_named("M=10").is_some());
+        assert!(r.series_named("M=3").is_none());
+    }
+}

@@ -1,0 +1,100 @@
+//! Speed-up summaries — the paper's implicit headline metric.
+//!
+//! The paper defines speed-up as reduction of “the time needed to reach
+//! some performance threshold, using more than one computing unit”
+//! (Section 1). [`time_to_threshold`] extracts that time from a curve and
+//! [`speedup_table`] tabulates `T(M=1) / T(M)` across curves.
+
+use super::Series;
+
+/// First wall time at which the curve reaches `threshold` (linear
+/// interpolation between samples); `None` if it never does.
+pub fn time_to_threshold(series: &Series, threshold: f64) -> Option<f64> {
+    let mut prev: Option<(f64, f64)> = None;
+    for s in &series.samples {
+        if s.value <= threshold {
+            return Some(match prev {
+                Some((pw, pv)) if pv > threshold => {
+                    // interpolate crossing between (pw, pv) and (s.wall, s.value)
+                    let a = (pv - threshold) / (pv - s.value);
+                    pw + a * (s.wall - pw)
+                }
+                _ => s.wall,
+            });
+        }
+        prev = Some((s.wall, s.value));
+    }
+    None
+}
+
+/// One row of the speed-up table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpeedupRow {
+    pub name: String,
+    pub time_to_threshold: Option<f64>,
+    /// `T(baseline) / T(self)`; 1.0 for the baseline row.
+    pub speedup: Option<f64>,
+}
+
+/// Tabulate time-to-threshold and speed-up versus the first series
+/// (conventionally `M=1`).
+pub fn speedup_table(series: &[Series], threshold: f64) -> Vec<SpeedupRow> {
+    let base = series.first().and_then(|s| time_to_threshold(s, threshold));
+    series
+        .iter()
+        .map(|s| {
+            let t = time_to_threshold(s, threshold);
+            let speedup = match (base, t) {
+                (Some(b), Some(t)) if t > 0.0 => Some(b / t),
+                _ => None,
+            };
+            SpeedupRow { name: s.name.clone(), time_to_threshold: t, speedup }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(name: &str, pts: &[(f64, f64)]) -> Series {
+        let mut s = Series::new(name);
+        for (w, v) in pts {
+            s.push(*w, *v);
+        }
+        s
+    }
+
+    #[test]
+    fn threshold_interpolates_crossing() {
+        let s = line("x", &[(0.0, 10.0), (2.0, 0.0)]);
+        assert_eq!(time_to_threshold(&s, 5.0), Some(1.0));
+    }
+
+    #[test]
+    fn threshold_none_when_never_reached() {
+        let s = line("x", &[(0.0, 10.0), (2.0, 6.0)]);
+        assert_eq!(time_to_threshold(&s, 5.0), None);
+    }
+
+    #[test]
+    fn threshold_immediate_when_starting_below() {
+        let s = line("x", &[(0.5, 3.0), (2.0, 1.0)]);
+        assert_eq!(time_to_threshold(&s, 5.0), Some(0.5));
+    }
+
+    #[test]
+    fn speedups_relative_to_first() {
+        let rows = speedup_table(
+            &[
+                line("M=1", &[(0.0, 10.0), (4.0, 0.0)]),
+                line("M=2", &[(0.0, 10.0), (2.0, 0.0)]),
+                line("M=10", &[(0.0, 10.0), (10.0, 8.0)]),
+            ],
+            5.0,
+        );
+        assert_eq!(rows[0].speedup, Some(1.0));
+        assert_eq!(rows[1].speedup, Some(2.0));
+        assert_eq!(rows[2].speedup, None);
+    }
+}

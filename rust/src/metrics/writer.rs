@@ -1,0 +1,79 @@
+//! CSV / JSON persistence for figure reports.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{FigureReport, Series};
+
+/// Write one series as a two-column CSV (`wall,value`).
+pub fn write_csv(series: &Series, path: &Path) -> Result<()> {
+    let file = File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "wall,value")?;
+    for s in &series.samples {
+        writeln!(w, "{},{}", s.wall, s.value)?;
+    }
+    Ok(())
+}
+
+/// Write a whole figure as a long-format CSV (`series,wall,value`) —
+/// directly plottable with any tool.
+pub fn write_report_csv(report: &FigureReport, path: &Path) -> Result<()> {
+    let file = File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "series,wall,value")?;
+    for series in &report.series {
+        for s in &series.samples {
+            writeln!(w, "{},{},{}", series.name, s.wall, s.value)?;
+        }
+    }
+    Ok(())
+}
+
+/// Full-fidelity JSON dump of a report (round-trips via
+/// [`FigureReport::from_json`]).
+pub fn write_json(report: &FigureReport, path: &Path) -> Result<()> {
+    std::fs::write(path, report.to_json().to_pretty())
+        .with_context(|| format!("creating {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_round_trip_shape() {
+        let dir = std::env::temp_dir().join("dalvq_writer_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut s = Series::new("M=2");
+        s.push(0.0, 1.5);
+        s.push(1.0, 0.5);
+        let path = dir.join("series.csv");
+        write_csv(&s, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("wall,value"));
+
+        let mut report = FigureReport::new("figX", "t");
+        report.series.push(s);
+        let jpath = dir.join("report.json");
+        write_json(&report, &jpath).unwrap();
+        let back = FigureReport::from_json(
+            &crate::util::Json::parse(&std::fs::read_to_string(&jpath).unwrap())
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.series[0].samples.len(), 2);
+        assert_eq!(back.series[0].samples[1].value, 0.5);
+
+        let cpath = dir.join("report.csv");
+        write_report_csv(&report, &cpath).unwrap();
+        assert!(std::fs::read_to_string(&cpath).unwrap().contains("M=2,1,0.5"));
+    }
+}

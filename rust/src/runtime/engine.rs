@@ -1,0 +1,81 @@
+//! The `Engine` abstraction and the buildable spec.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::vq::{Codebook, Delta};
+
+/// A compute backend for the three exported entry points.
+///
+/// All methods take `&mut self`: engines may cache buffers or lazily
+/// compile. Implementations must use **identical math** (squared Euclidean,
+/// first-minimum tie break, update order of paper eq. 1) so that engines
+/// are interchangeable to float tolerance.
+pub trait Engine {
+    /// Backend name for logs/metrics.
+    fn name(&self) -> &'static str;
+
+    /// Advance `w` by one `τ`-point sequential VQ walk over `chunk`
+    /// (flat `τ·d`), with per-step rates `eps` (`τ`), **accumulating** the
+    /// window displacement into `delta` (paper eq. 7).
+    fn vq_chunk(
+        &mut self,
+        w: &mut Codebook,
+        chunk: &[f32],
+        eps: &[f32],
+        delta: &mut Delta,
+    ) -> Result<()>;
+
+    /// Un-normalized empirical distortion `Σ min_ℓ ‖z − w_ℓ‖²` over flat
+    /// `points`.
+    fn distortion_sum(&mut self, w: &Codebook, points: &[f32]) -> Result<f64>;
+
+    /// One Lloyd iteration over `points` (empty clusters keep their
+    /// prototype). Returns per-cluster counts.
+    fn kmeans_step(&mut self, w: &mut Codebook, points: &[f32]) -> Result<Vec<f32>>;
+}
+
+/// A buildable, sendable description of an engine.
+///
+/// The PJRT client is thread-confined, so concurrent runtimes pass this
+/// spec across threads and call [`EngineSpec::build`] on the destination
+/// thread.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineSpec {
+    /// Pure-Rust mirror (tests, huge sweeps).
+    Native,
+    /// AOT artifacts executed through PJRT (the production path).
+    Pjrt {
+        /// Directory holding `manifest.json` + `*.hlo.txt`.
+        artifacts_dir: PathBuf,
+        /// Variant name from the manifest (e.g. `"k16d16"`).
+        variant: String,
+    },
+}
+
+impl EngineSpec {
+    /// Default artifact location relative to the repo root.
+    pub fn pjrt_default(variant: &str) -> Self {
+        EngineSpec::Pjrt {
+            artifacts_dir: PathBuf::from("artifacts"),
+            variant: variant.to_string(),
+        }
+    }
+
+    /// Construct the engine on the current thread.
+    pub fn build(&self) -> Result<Box<dyn Engine>> {
+        match self {
+            EngineSpec::Native => Ok(Box::new(super::NativeEngine::new())),
+            EngineSpec::Pjrt { artifacts_dir, variant } => Ok(Box::new(
+                super::PjrtEngine::load(artifacts_dir, variant)?,
+            )),
+        }
+    }
+}
+
+impl Default for EngineSpec {
+    fn default() -> Self {
+        EngineSpec::Native
+    }
+}

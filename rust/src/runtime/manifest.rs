@@ -1,0 +1,183 @@
+//! `artifacts/manifest.json` — the contract between `aot.py` and the
+//! Rust runtime. The Python side is the writer; this is the reader
+//! (parsed with the in-tree JSON module).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+/// Static shape parameters of one AOT variant (mirrors
+/// `python/compile/variants.py`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VariantParams {
+    pub name: String,
+    pub kappa: usize,
+    pub dim: usize,
+    pub tau: usize,
+    pub eval_batch: usize,
+    pub eval_tile: usize,
+    pub scan_chunks: usize,
+}
+
+/// One lowered entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EntryManifest {
+    /// File name inside the artifacts directory.
+    pub file: String,
+    /// Input specs, in call order.
+    pub inputs: Vec<InputSpec>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One variant: parameters plus its entry points.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantManifest {
+    pub params: VariantParams,
+    pub entries: BTreeMap<String, EntryManifest>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub format: String,
+    pub variants: BTreeMap<String, VariantManifest>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text).context("parsing manifest.json")
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let format = j.req("format")?.as_str()?.to_string();
+        if format != "hlo-text/return-tuple" {
+            return Err(anyhow!(
+                "unsupported artifact format {format:?} (runtime expects \
+                 hlo-text/return-tuple)"
+            ));
+        }
+        let mut variants = BTreeMap::new();
+        for (name, v) in j.req("variants")?.as_obj()? {
+            variants.insert(name.clone(), parse_variant(name, v)?);
+        }
+        Ok(Manifest { format, variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantManifest> {
+        self.variants.get(name).ok_or_else(|| {
+            anyhow!(
+                "variant {name:?} not in manifest (have: {:?})",
+                self.variants.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+fn parse_variant(name: &str, v: &Json) -> Result<VariantManifest> {
+    let p = v.req("params").with_context(|| format!("variant {name}"))?;
+    let params = VariantParams {
+        name: p.req("name")?.as_str()?.to_string(),
+        kappa: p.req("kappa")?.as_usize()?,
+        dim: p.req("dim")?.as_usize()?,
+        tau: p.req("tau")?.as_usize()?,
+        eval_batch: p.req("eval_batch")?.as_usize()?,
+        eval_tile: p.req("eval_tile")?.as_usize()?,
+        scan_chunks: p.req("scan_chunks")?.as_usize()?,
+    };
+    let mut entries = BTreeMap::new();
+    for (entry_name, e) in v.req("entries")?.as_obj()? {
+        let mut inputs = Vec::new();
+        for input in e.req("inputs")?.as_arr()? {
+            let shape = input
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+            inputs.push(InputSpec {
+                shape,
+                dtype: input.req("dtype")?.as_str()?.to_string(),
+            });
+        }
+        entries.insert(
+            entry_name.clone(),
+            EntryManifest { file: e.req("file")?.as_str()?.to_string(), inputs },
+        );
+    }
+    Ok(VariantManifest { params, entries })
+}
+
+impl VariantManifest {
+    pub fn entry(&self, name: &str) -> Result<&EntryManifest> {
+        self.entries.get(name).ok_or_else(|| {
+            anyhow!(
+                "entry {name:?} missing from variant {:?}",
+                self.params.name
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text/return-tuple",
+      "variants": {
+        "k8d2": {
+          "params": {"name": "k8d2", "kappa": 8, "dim": 2, "tau": 10,
+                     "eval_batch": 1024, "eval_tile": 256, "scan_chunks": 16},
+          "entries": {
+            "vq_chunk": {"file": "vq_chunk__k8d2.hlo.txt",
+                         "inputs": [{"shape": [8,2], "dtype": "float32"},
+                                    {"shape": [10,2], "dtype": "float32"},
+                                    {"shape": [10], "dtype": "float32"}]}
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_python_emitted_shape() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let v = m.variant("k8d2").unwrap();
+        assert_eq!(v.params.kappa, 8);
+        let e = v.entry("vq_chunk").unwrap();
+        assert_eq!(e.inputs[1].shape, vec![10, 2]);
+        assert_eq!(e.inputs[2].dtype, "float32");
+        assert!(v.entry("nope").is_err());
+        assert!(m.variant("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("hlo-text/return-tuple", "proto");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn missing_key_is_reported() {
+        let bad = SAMPLE.replace("\"tau\": 10,", "");
+        let err = format!("{:#}", Manifest::parse(&bad).unwrap_err());
+        assert!(err.contains("tau"), "{err}");
+    }
+}

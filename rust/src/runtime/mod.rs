@@ -1,0 +1,28 @@
+//! Execution engines: PJRT-loaded AOT artifacts and their native mirror.
+//!
+//! The compute hot spots (the fused `τ`-point VQ walk, the tiled distortion
+//! criterion, the batch-k-means step) are authored once in Pallas/JAX and
+//! lowered by `make artifacts` to HLO text. [`PjrtEngine`] loads those
+//! artifacts through the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`) — this is the
+//! production path, with Python nowhere at run time.
+//!
+//! [`NativeEngine`] is a bit-mirrored pure-Rust implementation of the same
+//! math (same tie-breaking, same update order). It exists so that property
+//! tests can run millions of steps cheaply and so that very large
+//! simulations aren't bounded by PJRT dispatch; the `native_vs_pjrt`
+//! integration test pins the two together over long trajectories.
+//!
+//! `PjRtClient` is `Rc`-based and thus thread-confined; multi-threaded
+//! callers (the cloud runtime) clone an [`EngineSpec`] per worker and build
+//! a private engine on each worker's thread.
+
+mod engine;
+mod manifest;
+mod native;
+mod pjrt;
+
+pub use engine::{Engine, EngineSpec};
+pub use manifest::{EntryManifest, Manifest, VariantManifest, VariantParams};
+pub use native::NativeEngine;
+pub use pjrt::PjrtEngine;

@@ -1,0 +1,100 @@
+//! The pure-Rust engine: a bit-mirror of the L1 kernels.
+
+use anyhow::Result;
+
+use crate::vq::{self, Codebook, Delta};
+
+use super::Engine;
+
+/// Native engine — same math as the Pallas kernels, no PJRT dispatch.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeEngine {
+    _priv: (),
+}
+
+impl NativeEngine {
+    pub fn new() -> Self {
+        Self { _priv: () }
+    }
+}
+
+impl Engine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn vq_chunk(
+        &mut self,
+        w: &mut Codebook,
+        chunk: &[f32],
+        eps: &[f32],
+        delta: &mut Delta,
+    ) -> Result<()> {
+        vq::vq_chunk(w, chunk, eps, delta);
+        Ok(())
+    }
+
+    fn distortion_sum(&mut self, w: &Codebook, points: &[f32]) -> Result<f64> {
+        Ok(vq::distortion_sum(w, points))
+    }
+
+    fn kmeans_step(&mut self, w: &mut Codebook, points: &[f32]) -> Result<Vec<f32>> {
+        let dim = w.dim();
+        let kappa = w.kappa();
+        let mut sums = vec![0.0f64; kappa * dim];
+        let mut counts = vec![0.0f32; kappa];
+        for z in points.chunks_exact(dim) {
+            let a = vq::nearest(w, z);
+            counts[a] += 1.0;
+            for k in 0..dim {
+                sums[a * dim + k] += z[k] as f64;
+            }
+        }
+        for i in 0..kappa {
+            if counts[i] > 0.0 {
+                let inv = 1.0 / counts[i] as f64;
+                let row = w.row_mut(i);
+                for k in 0..dim {
+                    row[k] = (sums[i * dim + k] * inv) as f32;
+                }
+            } // empty cluster: prototype unchanged
+        }
+        Ok(counts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kmeans_step_moves_to_centroids() {
+        let mut eng = NativeEngine::new();
+        let mut w = Codebook::from_flat(2, 1, vec![0.0, 10.0]);
+        // cluster A: {1, 3} -> centroid 2 ; cluster B: {9, 11} -> 10
+        let counts = eng
+            .kmeans_step(&mut w, &[1.0, 3.0, 9.0, 11.0])
+            .unwrap();
+        assert_eq!(counts, vec![2.0, 2.0]);
+        assert_eq!(w.flat(), &[2.0, 10.0]);
+    }
+
+    #[test]
+    fn kmeans_empty_cluster_keeps_prototype() {
+        let mut eng = NativeEngine::new();
+        let mut w = Codebook::from_flat(2, 1, vec![0.0, 1000.0]);
+        let counts = eng.kmeans_step(&mut w, &[1.0, 2.0]).unwrap();
+        assert_eq!(counts, vec![2.0, 0.0]);
+        assert_eq!(w.row(1), &[1000.0]);
+    }
+
+    #[test]
+    fn vq_chunk_delegates_to_core() {
+        let mut eng = NativeEngine::new();
+        let mut w = Codebook::from_flat(1, 1, vec![0.0]);
+        let mut d = Delta::zeros(1, 1);
+        eng.vq_chunk(&mut w, &[2.0], &[0.5], &mut d).unwrap();
+        assert_eq!(w.flat(), &[1.0]);
+        assert_eq!(d.flat(), &[-1.0]);
+    }
+}

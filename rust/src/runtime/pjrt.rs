@@ -1,0 +1,229 @@
+//! The PJRT engine: loads and executes the AOT HLO-text artifacts.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO **text** is the interchange format —
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that this XLA
+//! rejects; the text parser reassigns ids.
+//!
+//! Shape discipline: HLO shapes are static. `vq_chunk` requires
+//! `eps.len() == tau` of the loaded variant; the distortion and k-means
+//! entry points consume `eval_batch`-point batches, and the (at most
+//! `eval_batch − 1`-point) remainder of an evaluation batch goes through
+//! the same math natively. Everything else is an error — silent shape
+//! adaptation would invalidate the artifact path.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::vq::{self, Codebook, Delta};
+
+use super::manifest::{Manifest, VariantParams};
+use super::Engine;
+
+/// An engine executing the four lowered entry points of one variant.
+pub struct PjrtEngine {
+    params: VariantParams,
+    vq_chunk_exe: xla::PjRtLoadedExecutable,
+    multi_chunk_exe: xla::PjRtLoadedExecutable,
+    distortion_exe: xla::PjRtLoadedExecutable,
+    kmeans_exe: xla::PjRtLoadedExecutable,
+}
+
+fn load_exe(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    file: &str,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path = dir.join(file);
+    let proto = xla::HloModuleProto::from_text_file(&path)
+        .map_err(|e| anyhow!("loading HLO text {}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+}
+
+fn lit_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), rows * cols);
+    xla::Literal::vec1(data)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+fn lit_1d(data: &[f32]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data))
+}
+
+/// Execute and unwrap the single result literal (lowered with
+/// `return_tuple=True`, so outputs arrive as one tuple literal).
+fn run(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
+    let out = exe
+        .execute::<xla::Literal>(args)
+        .map_err(|e| anyhow!("pjrt execute: {e:?}"))?;
+    out[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetching result: {e:?}"))
+}
+
+fn to_f32_vec(lit: xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e:?}"))
+}
+
+impl PjrtEngine {
+    /// Load all entry points of `variant` from `artifacts_dir` and compile
+    /// them on a fresh CPU PJRT client.
+    pub fn load(artifacts_dir: &Path, variant: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let vm = manifest.variant(variant)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        let exe = |entry: &str| -> Result<xla::PjRtLoadedExecutable> {
+            load_exe(&client, artifacts_dir, &vm.entry(entry)?.file)
+                .with_context(|| format!("entry {entry:?} of variant {variant:?}"))
+        };
+        Ok(Self {
+            params: vm.params.clone(),
+            vq_chunk_exe: exe("vq_chunk")?,
+            multi_chunk_exe: exe("multi_chunk")?,
+            distortion_exe: exe("distortion_sum")?,
+            kmeans_exe: exe("batch_kmeans_step")?,
+        })
+    }
+
+    /// Static parameters of the loaded variant.
+    pub fn params(&self) -> &VariantParams {
+        &self.params
+    }
+
+    fn check_codebook(&self, w: &Codebook) -> Result<()> {
+        if w.kappa() != self.params.kappa || w.dim() != self.params.dim {
+            return Err(anyhow!(
+                "codebook ({}, {}) does not match variant {:?} ({}, {})",
+                w.kappa(),
+                w.dim(),
+                self.params.name,
+                self.params.kappa,
+                self.params.dim
+            ));
+        }
+        Ok(())
+    }
+
+    /// `scan_chunks` consecutive walks in one dispatch (the `lax.scan`
+    /// artifact) — used by long sequential stretches to amortize dispatch
+    /// overhead. `chunks` is `(S·τ)·d` flat, `eps` is `S·τ`.
+    pub fn multi_chunk(
+        &mut self,
+        w: &mut Codebook,
+        chunks: &[f32],
+        eps: &[f32],
+        delta: &mut Delta,
+    ) -> Result<()> {
+        self.check_codebook(w)?;
+        let (s, tau, d) =
+            (self.params.scan_chunks, self.params.tau, self.params.dim);
+        if eps.len() != s * tau || chunks.len() != s * tau * d {
+            return Err(anyhow!(
+                "multi_chunk expects S*tau = {} steps, got {}",
+                s * tau,
+                eps.len()
+            ));
+        }
+        let w_lit = lit_2d(w.flat(), self.params.kappa, d)?;
+        let z_lit = xla::Literal::vec1(chunks)
+            .reshape(&[s as i64, tau as i64, d as i64])
+            .map_err(|e| anyhow!("reshape zs: {e:?}"))?;
+        let e_lit = xla::Literal::vec1(eps)
+            .reshape(&[s as i64, tau as i64])
+            .map_err(|e| anyhow!("reshape eps: {e:?}"))?;
+        let result = run(&self.multi_chunk_exe, &[w_lit, z_lit, e_lit])?;
+        let (w_out, d_out) = result
+            .to_tuple2()
+            .map_err(|e| anyhow!("unpacking multi_chunk tuple: {e:?}"))?;
+        w.flat_mut().copy_from_slice(&to_f32_vec(w_out)?);
+        let acc = Delta::from_flat(self.params.kappa, d, to_f32_vec(d_out)?);
+        delta.accumulate(&acc);
+        Ok(())
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn vq_chunk(
+        &mut self,
+        w: &mut Codebook,
+        chunk: &[f32],
+        eps: &[f32],
+        delta: &mut Delta,
+    ) -> Result<()> {
+        self.check_codebook(w)?;
+        let (tau, d) = (self.params.tau, self.params.dim);
+        if eps.len() != tau || chunk.len() != tau * d {
+            return Err(anyhow!(
+                "vq_chunk artifact is shape-static: expected tau = {tau}, got {} \
+                 (pick a variant with matching tau or use the native engine)",
+                eps.len()
+            ));
+        }
+        let w_lit = lit_2d(w.flat(), self.params.kappa, d)?;
+        let z_lit = lit_2d(chunk, tau, d)?;
+        let e_lit = lit_1d(eps)?;
+        let result = run(&self.vq_chunk_exe, &[w_lit, z_lit, e_lit])?;
+        let (w_out, d_out) = result
+            .to_tuple2()
+            .map_err(|e| anyhow!("unpacking vq_chunk tuple: {e:?}"))?;
+        w.flat_mut().copy_from_slice(&to_f32_vec(w_out)?);
+        let acc = Delta::from_flat(self.params.kappa, d, to_f32_vec(d_out)?);
+        delta.accumulate(&acc);
+        Ok(())
+    }
+
+    fn distortion_sum(&mut self, w: &Codebook, points: &[f32]) -> Result<f64> {
+        self.check_codebook(w)?;
+        let (b, d) = (self.params.eval_batch, self.params.dim);
+        let n = points.len() / d;
+        let full_batches = n / b;
+        let mut total = 0.0f64;
+        for i in 0..full_batches {
+            let batch = &points[i * b * d..(i + 1) * b * d];
+            let w_lit = lit_2d(w.flat(), self.params.kappa, d)?;
+            let z_lit = lit_2d(batch, b, d)?;
+            let result = run(&self.distortion_exe, &[w_lit, z_lit])?;
+            let scalar = result
+                .to_tuple1()
+                .map_err(|e| anyhow!("unpacking distortion tuple: {e:?}"))?;
+            total += to_f32_vec(scalar)?[0] as f64;
+        }
+        // Remainder (< eval_batch points): same math, native path.
+        let rem = &points[full_batches * b * d..];
+        if !rem.is_empty() {
+            total += vq::distortion_sum(w, rem);
+        }
+        Ok(total)
+    }
+
+    fn kmeans_step(&mut self, w: &mut Codebook, points: &[f32]) -> Result<Vec<f32>> {
+        self.check_codebook(w)?;
+        let (b, d) = (self.params.eval_batch, self.params.dim);
+        if points.len() != b * d {
+            return Err(anyhow!(
+                "batch_kmeans_step artifact consumes exactly eval_batch = {b} \
+                 points, got {} (use the native engine for full-batch Lloyd)",
+                points.len() / d
+            ));
+        }
+        let w_lit = lit_2d(w.flat(), self.params.kappa, d)?;
+        let z_lit = lit_2d(points, b, d)?;
+        let result = run(&self.kmeans_exe, &[w_lit, z_lit])?;
+        let (w_out, counts) = result
+            .to_tuple2()
+            .map_err(|e| anyhow!("unpacking kmeans tuple: {e:?}"))?;
+        w.flat_mut().copy_from_slice(&to_f32_vec(w_out)?);
+        to_f32_vec(counts)
+    }
+}

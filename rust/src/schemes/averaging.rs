@@ -1,0 +1,140 @@
+//! Scheme A — the intuitive averaging scheme (paper eq. 3, Figure 1).
+//!
+//! Every worker runs sequential VQ on its shard; every `τ` points the
+//! versions are synchronously **averaged** into a shared version which is
+//! broadcast back:
+//!
+//! ```text
+//! w_srd = (1/M) Σ_i w^i(τ)       (eq. 3)
+//! ```
+//!
+//! The paper's Section 2/3 point — reproduced by Figure 1 of the harness —
+//! is that this scheme brings **no wall-clock speed-up**: averaging the
+//! versions divides the per-sample displacement by `M`, so the effective
+//! learning rate *per processed data point* shrinks by `M` and the extra
+//! data buys exploration, not convergence.
+
+use anyhow::Result;
+
+use crate::metrics::Series;
+use crate::sim::TraceEvent;
+use crate::vq::{Codebook, Delta};
+
+use super::{SchemeInputs, SchemeOutcome};
+
+/// Run scheme A with synchronization period `tau`.
+pub fn run(inputs: &mut SchemeInputs<'_>, tau: usize) -> Result<SchemeOutcome> {
+    let m = inputs.shards.len();
+    let dim = inputs.shards[0].dim();
+    let kappa = inputs.w0.kappa();
+    let mut versions: Vec<Codebook> = vec![inputs.w0.clone(); m];
+    let mut scratch = Delta::zeros(kappa, dim); // unused displacement sink
+    let mut series = Series::new(format!("M={m}"));
+    let mut chunk_buf = vec![0.0f32; tau * dim];
+    let mut eps_buf = vec![0.0f32; tau];
+
+    let mut wall = 0.0f64;
+    let mut t: u64 = 0; // common local step count (workers are in lockstep)
+    let mut w_srd = inputs.w0.clone();
+    inputs.eval.force_record(inputs.engine, &mut series, wall, &w_srd)?;
+
+    let rounds = inputs.points_per_worker / tau as u64;
+    for round in 0..rounds {
+        inputs.schedule.fill(t, &mut eps_buf);
+        // Each worker advances tau points from its own shard (concurrently
+        // in wall time: the round costs the *slowest* worker's time).
+        let mut round_compute = 0.0f64;
+        for (i, version) in versions.iter_mut().enumerate() {
+            inputs.shards[i].fill_chunk(t, tau, &mut chunk_buf);
+            scratch.clear();
+            inputs.engine.vq_chunk(version, &chunk_buf, &eps_buf, &mut scratch)?;
+            round_compute = round_compute.max(inputs.cost.compute_time(i, tau));
+        }
+        t += tau as u64;
+        wall += round_compute
+            + inputs.cost.merge_cost * m as f64
+            + inputs.cost.broadcast_cost;
+        // The reducing phase: average and broadcast (eq. 3).
+        Codebook::average_into(&versions, &mut w_srd);
+        for v in versions.iter_mut() {
+            v.clone_from(&w_srd);
+        }
+        series.merges += 1;
+        inputs.trace.record(TraceEvent::SyncMerge { wall, round });
+        inputs.eval.maybe_record(inputs.engine, &mut series, wall, &w_srd)?;
+    }
+    inputs.eval.force_record(inputs.engine, &mut series, wall, &w_srd)?;
+    series.points_processed = t * m as u64;
+    Ok(SchemeOutcome { final_shared: w_srd, final_versions: versions, series })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::MixtureSpec;
+    use crate::runtime::NativeEngine;
+    use crate::sim::{CostModel, Evaluator, Trace};
+    use crate::vq::{init_codebook, InitMethod, Schedule};
+
+    fn setup(m: usize) -> (Vec<crate::data::Shard>, Codebook, Vec<f32>) {
+        let spec = MixtureSpec {
+            components: 4,
+            dim: 2,
+            separation: 4.0,
+            std: 0.3,
+            imbalance: 0.0,
+            noise_frac: 0.0,
+        };
+        let ds = spec.dataset(4_000, 7);
+        let shards = ds.split(m);
+        let w0 = init_codebook(InitMethod::FromData, 4, 2, ds.flat(), 7);
+        let eval = spec.eval_sample(512, 7);
+        (shards, w0, eval)
+    }
+
+    #[test]
+    fn averaging_m1_tracks_sequential_shape() {
+        let (shards, w0, eval_pts) = setup(1);
+        let mut engine = NativeEngine::new();
+        let mut eval = Evaluator::new(eval_pts, 2, 1e-3);
+        let mut trace = Trace::disabled();
+        let mut inputs = SchemeInputs {
+            engine: &mut engine,
+            shards: &shards,
+            w0,
+            schedule: Schedule::paper_default(),
+            cost: CostModel::default(),
+            points_per_worker: 10_000,
+            eval: &mut eval,
+            trace: &mut trace,
+            seed: 0,
+        };
+        let out = run(&mut inputs, 10).unwrap();
+        assert!(out.series.last_value() < out.series.first_value());
+        assert_eq!(out.series.merges, 1_000);
+        assert_eq!(out.series.points_processed, 10_000);
+    }
+
+    #[test]
+    fn versions_coincide_after_broadcast() {
+        let (shards, w0, eval_pts) = setup(3);
+        let mut engine = NativeEngine::new();
+        let mut eval = Evaluator::new(eval_pts, 2, 1e-3);
+        let mut trace = Trace::disabled();
+        let mut inputs = SchemeInputs {
+            engine: &mut engine,
+            shards: &shards,
+            w0,
+            schedule: Schedule::paper_default(),
+            cost: CostModel::default(),
+            points_per_worker: 1_000,
+            eval: &mut eval,
+            trace: &mut trace,
+            seed: 0,
+        };
+        let out = run(&mut inputs, 10).unwrap();
+        for v in &out.final_versions {
+            assert_eq!(v, &out.final_shared);
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! The paper's parallelization schemes.
+//!
+//! | module | paper | merge rule |
+//! |--------|-------|-----------|
+//! | [`sequential`] | eq. 1 | none (the `M = 1` reference) |
+//! | [`averaging`] | eq. 3 | `w_srd = (1/M) Σ_i w^i`, synchronous — **no speed-up** (Figure 1) |
+//! | [`delta_sync`] | eq. 8 | `w_srd ← w_srd − Σ_j Δ^j`, synchronous — speed-up (Figure 2) |
+//! | [`async_delta`] | eq. 9 | same merge, no barrier, stochastic delays (Figure 3) |
+//!
+//! All schemes run against the deterministic virtual-time [`crate::sim`]
+//! substrate and any [`crate::runtime::Engine`]. The cloud runtime
+//! ([`crate::cloud`]) re-implements the eq. 9 protocol on real concurrency
+//! for Figure 4.
+
+pub mod async_delta;
+pub mod averaging;
+pub mod delta_sync;
+pub mod sequential;
+
+use anyhow::Result;
+
+use crate::config::{ExperimentConfig, SchemeConfig};
+use crate::data::Shard;
+use crate::metrics::Series;
+use crate::runtime::Engine;
+use crate::sim::{CostModel, Evaluator, Trace};
+use crate::vq::{Codebook, Schedule};
+
+/// Everything a scheme needs to run, prepared by [`prepare`] (or by a test
+/// directly).
+pub struct SchemeInputs<'a> {
+    pub engine: &'a mut dyn Engine,
+    /// One shard per worker (`shards.len() == M`).
+    pub shards: &'a [Shard],
+    /// The common initial version `w^1(0) = … = w^M(0)`.
+    pub w0: Codebook,
+    pub schedule: Schedule,
+    pub cost: CostModel,
+    /// Points each worker processes over the run.
+    pub points_per_worker: u64,
+    pub eval: &'a mut Evaluator,
+    pub trace: &'a mut Trace,
+    /// Seed for scheme-internal randomness (delay sampling).
+    pub seed: u64,
+}
+
+/// What a scheme run produces.
+pub struct SchemeOutcome {
+    /// `(virtual wall time, C)` curve of the shared version.
+    pub series: Series,
+    /// The shared version at the end of the run.
+    pub final_shared: Codebook,
+    /// Per-worker versions at the end of the run.
+    pub final_versions: Vec<Codebook>,
+}
+
+/// Run the scheme selected by `cfg` end to end: generate data, shard it,
+/// initialize the common version, build the engine, run, return the curve.
+pub fn run_with_config(cfg: &ExperimentConfig) -> Result<SchemeOutcome> {
+    cfg.validate()?;
+    let mut engine = cfg.engine.build()?;
+    run_with_engine(cfg, engine.as_mut())
+}
+
+/// Like [`run_with_config`] but on a caller-provided engine (lets tests and
+/// benches reuse a compiled PJRT engine across runs).
+pub fn run_with_engine(
+    cfg: &ExperimentConfig,
+    engine: &mut dyn Engine,
+) -> Result<SchemeOutcome> {
+    let dataset = cfg.data.mixture.dataset(cfg.data.n_total, cfg.seed);
+    let shards = dataset.split(cfg.m);
+    let w0 = crate::vq::init_codebook(
+        cfg.vq.init,
+        cfg.vq.kappa,
+        cfg.dim(),
+        dataset.flat(),
+        cfg.seed,
+    );
+    let eval_points = cfg.data.mixture.eval_sample(cfg.data.eval_points, cfg.seed);
+    let mut eval = Evaluator::new(eval_points, cfg.dim(), cfg.run.eval_interval);
+    let mut trace = Trace::with_capacity(cfg.run.trace_capacity);
+    let mut inputs = SchemeInputs {
+        engine,
+        shards: &shards,
+        w0,
+        schedule: cfg.vq.schedule,
+        cost: cfg.cost.clone(),
+        points_per_worker: cfg.run.points_per_worker,
+        eval: &mut eval,
+        trace: &mut trace,
+        seed: cfg.seed,
+    };
+    match &cfg.scheme {
+        SchemeConfig::Sequential => sequential::run(&mut inputs),
+        SchemeConfig::Averaging { tau } => averaging::run(&mut inputs, *tau),
+        SchemeConfig::DeltaSync { tau } => delta_sync::run(&mut inputs, *tau),
+        SchemeConfig::AsyncDelta { tau, up_delay, down_delay } => {
+            async_delta::run(&mut inputs, *tau, *up_delay, *down_delay)
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! The sequential VQ reference (paper eq. 1, `M = 1`).
+//!
+//! Processes the first shard cyclically, chunked only for engine-dispatch
+//! efficiency (the trajectory is chunking-invariant because the fused
+//! kernel replays eq. 1 point by point).
+
+use anyhow::Result;
+
+use crate::metrics::Series;
+use crate::sim::TraceEvent;
+use crate::vq::Delta;
+
+use super::{SchemeInputs, SchemeOutcome};
+
+/// Engine-dispatch chunk size (pure batching; no algorithmic meaning).
+const CHUNK: usize = 10;
+
+/// Run sequential VQ on `inputs.shards[0]`.
+pub fn run(inputs: &mut SchemeInputs<'_>) -> Result<SchemeOutcome> {
+    let shard = &inputs.shards[0];
+    let dim = shard.dim();
+    let mut w = inputs.w0.clone();
+    let mut delta = Delta::zeros(w.kappa(), dim);
+    let mut series = Series::new("M=1");
+    let mut chunk_buf = vec![0.0f32; CHUNK * dim];
+    let mut eps_buf = vec![0.0f32; CHUNK];
+
+    let mut wall = 0.0f64;
+    let mut t: u64 = 0;
+    inputs.eval.force_record(inputs.engine, &mut series, wall, &w)?;
+    while t < inputs.points_per_worker {
+        let count = CHUNK.min((inputs.points_per_worker - t) as usize);
+        shard.fill_chunk(t, count, &mut chunk_buf[..count * dim]);
+        inputs.schedule.fill(t, &mut eps_buf[..count]);
+        delta.clear();
+        inputs.engine.vq_chunk(
+            &mut w,
+            &chunk_buf[..count * dim],
+            &eps_buf[..count],
+            &mut delta,
+        )?;
+        t += count as u64;
+        wall += inputs.cost.compute_time(0, count);
+        inputs.trace.record(TraceEvent::Chunk { wall, worker: 0, t, count });
+        inputs.eval.maybe_record(inputs.engine, &mut series, wall, &w)?;
+    }
+    inputs.eval.force_record(inputs.engine, &mut series, wall, &w)?;
+    series.points_processed = t;
+    Ok(SchemeOutcome { final_shared: w.clone(), final_versions: vec![w], series })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::runtime::NativeEngine;
+    use crate::sim::{CostModel, Evaluator, Trace};
+    use crate::vq::{Codebook, Schedule};
+
+    #[test]
+    fn sequential_converges_on_two_clusters() {
+        // points at 0 and 10; two prototypes must land near them
+        let mut pts = Vec::new();
+        for i in 0..50 {
+            pts.push((i % 2) as f32 * 10.0 + 0.01 * (i as f32 % 5.0));
+        }
+        let dataset = Dataset::new(pts, 1);
+        let shards = dataset.split(1);
+        let mut engine = NativeEngine::new();
+        let mut eval = Evaluator::new(dataset.flat().to_vec(), 1, 1e-3);
+        let mut trace = Trace::disabled();
+        let mut inputs = SchemeInputs {
+            engine: &mut engine,
+            shards: &shards,
+            w0: Codebook::from_flat(2, 1, vec![4.0, 6.0]),
+            schedule: Schedule::InverseTime { eps0: 0.5, half_life: 100.0 },
+            cost: CostModel::default(),
+            points_per_worker: 5_000,
+            eval: &mut eval,
+            trace: &mut trace,
+            seed: 0,
+        };
+        let out = run(&mut inputs).unwrap();
+        assert!(out.series.last_value() < out.series.first_value() * 0.2,
+            "distortion should drop: {} -> {}",
+            out.series.first_value(), out.series.last_value());
+        assert!(out.series.is_time_monotone());
+        assert_eq!(out.series.points_processed, 5_000);
+        // prototypes near 0 and 10 (order unknown)
+        let mut protos = [out.final_shared.row(0)[0], out.final_shared.row(1)[0]];
+        protos.sort_by(f32::total_cmp);
+        assert!(protos[0].abs() < 0.5, "{protos:?}");
+        assert!((protos[1] - 10.0).abs() < 0.5, "{protos:?}");
+    }
+}

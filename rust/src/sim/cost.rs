@@ -1,0 +1,89 @@
+//! Compute-cost model for virtual workers.
+
+
+/// Virtual time costs, in seconds.
+///
+/// The absolute scale is arbitrary (the paper compares curves, not absolute
+/// times); defaults approximate one µs-scale VQ step per point, matching
+/// the magnitude the authors report for their .NET implementation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostModel {
+    /// Seconds of worker compute per processed data point.
+    pub point_compute: f64,
+    /// Seconds the reducer spends folding one delta / averaging one
+    /// version into the shared version.
+    pub merge_cost: f64,
+    /// Seconds to broadcast the shared version back to workers in the
+    /// synchronous schemes (0 = the paper's “instantaneous communications”
+    /// setting for Figures 1 and 2).
+    pub broadcast_cost: f64,
+    /// Per-worker speed multipliers; worker `i` takes
+    /// `point_compute * speed_factor(i)` per point. Workers beyond the
+    /// vector's length run at factor 1.0. `> 1` models stragglers.
+    pub speed_factors: Vec<f64>,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            point_compute: 1e-5,
+            merge_cost: 1e-6,
+            broadcast_cost: 0.0,
+            speed_factors: Vec::new(),
+        }
+    }
+}
+
+impl CostModel {
+    pub fn speed_factor(&self, worker: usize) -> f64 {
+        self.speed_factors.get(worker).copied().unwrap_or(1.0)
+    }
+
+    /// Compute time for `count` points on `worker`.
+    pub fn compute_time(&self, worker: usize, count: usize) -> f64 {
+        self.point_compute * count as f64 * self.speed_factor(worker)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.point_compute > 0.0 && self.point_compute.is_finite()) {
+            return Err("point_compute must be positive".into());
+        }
+        if self.merge_cost < 0.0 || self.broadcast_cost < 0.0 {
+            return Err("costs must be non-negative".into());
+        }
+        if self.speed_factors.iter().any(|s| !(*s > 0.0 && s.is_finite())) {
+            return Err("speed factors must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_factor_is_one() {
+        let c = CostModel::default();
+        assert_eq!(c.speed_factor(0), 1.0);
+        assert_eq!(c.speed_factor(31), 1.0);
+    }
+
+    #[test]
+    fn straggler_factor_applies() {
+        let c = CostModel { speed_factors: vec![1.0, 3.0], ..Default::default() };
+        assert_eq!(c.compute_time(1, 10), 10.0 * 3.0 * c.point_compute);
+        assert_eq!(c.compute_time(2, 10), 10.0 * c.point_compute);
+    }
+
+    #[test]
+    fn validate_rejects_nonpositive() {
+        let mut c = CostModel::default();
+        c.point_compute = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = CostModel::default();
+        c.speed_factors = vec![-1.0];
+        assert!(c.validate().is_err());
+        assert!(CostModel::default().validate().is_ok());
+    }
+}

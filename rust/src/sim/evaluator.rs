@@ -1,0 +1,103 @@
+//! Distortion snapshots on a wall-clock cadence.
+//!
+//! The figures plot `C_{n,M}(w_srd)` against wall time; [`Evaluator`] is
+//! the observer that produces those samples. Evaluation is measurement,
+//! not part of the algorithm, so it consumes **no virtual time** (the
+//! paper's curves likewise exclude the cost of computing the criterion).
+
+use anyhow::Result;
+
+use crate::metrics::Series;
+use crate::runtime::Engine;
+use crate::vq::Codebook;
+
+/// Samples the normalized distortion of a codebook every `interval`
+/// seconds of (virtual or real) wall time.
+pub struct Evaluator {
+    eval_points: Vec<f32>,
+    dim: usize,
+    interval: f64,
+    next_due: f64,
+}
+
+impl Evaluator {
+    /// `eval_points` is a held-out flat sample of the mixture; `interval`
+    /// the cadence in seconds.
+    pub fn new(eval_points: Vec<f32>, dim: usize, interval: f64) -> Self {
+        assert!(interval > 0.0, "eval interval must be positive");
+        assert!(!eval_points.is_empty(), "empty evaluation sample");
+        assert_eq!(eval_points.len() % dim, 0);
+        Self { eval_points, dim, interval, next_due: 0.0 }
+    }
+
+    pub fn num_points(&self) -> usize {
+        self.eval_points.len() / self.dim
+    }
+
+    /// Normalized distortion of `w` on the held-out sample (the paper's
+    /// `C_{n,M}` estimator).
+    pub fn criterion(&self, engine: &mut dyn Engine, w: &Codebook) -> Result<f64> {
+        let sum = engine.distortion_sum(w, &self.eval_points)?;
+        Ok(sum / self.num_points() as f64)
+    }
+
+    /// Record a sample if `wall` has crossed the next cadence boundary.
+    pub fn maybe_record(
+        &mut self,
+        engine: &mut dyn Engine,
+        series: &mut Series,
+        wall: f64,
+        w: &Codebook,
+    ) -> Result<()> {
+        if wall >= self.next_due {
+            self.force_record(engine, series, wall, w)?;
+            // skip ahead past any boundaries the run jumped over
+            self.next_due = (wall / self.interval).floor() * self.interval
+                + self.interval;
+        }
+        Ok(())
+    }
+
+    /// Record unconditionally (used for the final sample of a run).
+    pub fn force_record(
+        &mut self,
+        engine: &mut dyn Engine,
+        series: &mut Series,
+        wall: f64,
+        w: &Codebook,
+    ) -> Result<()> {
+        let c = self.criterion(engine, w)?;
+        series.push(wall, c);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeEngine;
+
+    #[test]
+    fn cadence_skips_between_boundaries() {
+        let mut ev = Evaluator::new(vec![0.0, 0.0, 1.0, 1.0], 2, 1.0);
+        let mut eng = NativeEngine::new();
+        let w = Codebook::from_flat(1, 2, vec![0.5, 0.5]);
+        let mut s = Series::new("t");
+        ev.maybe_record(&mut eng, &mut s, 0.0, &w).unwrap(); // records (t=0)
+        ev.maybe_record(&mut eng, &mut s, 0.5, &w).unwrap(); // skipped
+        ev.maybe_record(&mut eng, &mut s, 1.2, &w).unwrap(); // records
+        ev.maybe_record(&mut eng, &mut s, 1.9, &w).unwrap(); // skipped
+        ev.maybe_record(&mut eng, &mut s, 4.0, &w).unwrap(); // records (jumped)
+        assert_eq!(s.samples.len(), 3);
+        assert!(s.is_time_monotone());
+    }
+
+    #[test]
+    fn criterion_is_mean_distortion() {
+        let ev = Evaluator::new(vec![0.0, 0.0, 2.0, 0.0], 2, 1.0);
+        let mut eng = NativeEngine::new();
+        let w = Codebook::from_flat(1, 2, vec![0.0, 0.0]);
+        // distances: 0 and 4 -> mean 2
+        assert_eq!(ev.criterion(&mut eng, &w).unwrap(), 2.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Deterministic event-driven simulator of a distributed architecture.
+//!
+//! The paper tests its schemes “using simulated distributed architecture”
+//! (Section 1): M virtual workers with a compute-cost model, a network
+//! with configurable delay distributions (instantaneous for Figures 1–2,
+//! geometric for Figure 3), and a virtual wall clock. Everything is seeded
+//! and deterministic — the same config reproduces the same trace bit for
+//! bit (DESIGN.md invariant 10), which is what makes the scheme
+//! comparisons in the figures meaningful.
+
+mod cost;
+mod event;
+mod evaluator;
+mod network;
+mod trace;
+
+pub use cost::CostModel;
+pub use event::{EventQueue, ScheduledEvent};
+pub use evaluator::Evaluator;
+pub use network::DelayModel;
+pub use trace::{Trace, TraceEvent};

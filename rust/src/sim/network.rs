@@ -1,0 +1,107 @@
+//! Network delay models.
+//!
+//! Section 4 of the paper “improve[s] the model … with random communication
+//! costs that follow a geometric distribution”. [`DelayModel::Geometric`]
+//! is that model; `Instant` is the Figures-1/2 setting; `Fixed` is useful
+//! for ablations and tests.
+
+use crate::util::Rng;
+
+/// One-way message delay distribution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DelayModel {
+    /// Zero-delay (the simulated setting of Figures 1 and 2).
+    Instant,
+    /// Deterministic delay of `secs` seconds.
+    Fixed { secs: f64 },
+    /// `unit * G` where `G ~ Geometric(p)` counts trials until first
+    /// success (support `1, 2, 3, …`; mean `1/p`). The paper's Section 4
+    /// model: mean one-way delay `unit / p`.
+    Geometric { p: f64, unit: f64 },
+}
+
+impl DelayModel {
+    /// Sample a delay (deterministic variants ignore the RNG).
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            DelayModel::Instant => 0.0,
+            DelayModel::Fixed { secs } => secs,
+            DelayModel::Geometric { p, unit } => {
+                // inverse CDF: G = 1 + floor(ln U / ln(1-p))
+                let u: f64 = rng.f64().max(f64::EPSILON);
+                let g = 1.0 + (u.ln() / (1.0 - p).ln()).floor();
+                unit * g.max(1.0)
+            }
+        }
+    }
+
+    /// Expected delay in seconds.
+    pub fn mean(&self) -> f64 {
+        match *self {
+            DelayModel::Instant => 0.0,
+            DelayModel::Fixed { secs } => secs,
+            DelayModel::Geometric { p, unit } => unit / p,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            DelayModel::Instant => Ok(()),
+            DelayModel::Fixed { secs } => {
+                if secs >= 0.0 && secs.is_finite() {
+                    Ok(())
+                } else {
+                    Err("fixed delay must be non-negative".into())
+                }
+            }
+            DelayModel::Geometric { p, unit } => {
+                if !(0.0 < p && p < 1.0) {
+                    return Err(format!("geometric p must be in (0,1), got {p}"));
+                }
+                if !(unit > 0.0 && unit.is_finite()) {
+                    return Err("geometric unit must be positive".into());
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    #[test]
+    fn instant_and_fixed_are_deterministic() {
+        let mut rng = Rng::from_seed(0);
+        assert_eq!(DelayModel::Instant.sample(&mut rng), 0.0);
+        assert_eq!(DelayModel::Fixed { secs: 0.25 }.sample(&mut rng), 0.25);
+    }
+
+    #[test]
+    fn geometric_support_and_mean() {
+        let m = DelayModel::Geometric { p: 0.25, unit: 0.01 };
+        let mut rng = Rng::from_seed(42);
+        let n = 20_000;
+        let mut total = 0.0;
+        for _ in 0..n {
+            let s = m.sample(&mut rng);
+            assert!(s >= 0.01 - 1e-12, "support starts at one unit, got {s}");
+            // integer multiples of the unit
+            let k = s / 0.01;
+            assert!((k - k.round()).abs() < 1e-9);
+            total += s;
+        }
+        let mean = total / n as f64;
+        assert!((mean - m.mean()).abs() / m.mean() < 0.05,
+            "empirical mean {mean} vs {}", m.mean());
+    }
+
+    #[test]
+    fn validate_bounds() {
+        assert!(DelayModel::Geometric { p: 0.0, unit: 1.0 }.validate().is_err());
+        assert!(DelayModel::Geometric { p: 1.0, unit: 1.0 }.validate().is_err());
+        assert!(DelayModel::Geometric { p: 0.5, unit: 0.0 }.validate().is_err());
+        assert!(DelayModel::Fixed { secs: -1.0 }.validate().is_err());
+        assert!(DelayModel::Instant.validate().is_ok());
+    }
+}

@@ -1,0 +1,134 @@
+//! Execution traces — the determinism witness.
+//!
+//! Every scheme run can record its structurally significant events
+//! (chunks, merges, exchanges). Two runs with the same config must produce
+//! identical traces (DESIGN.md invariant 10); the integration tests assert
+//! exactly that, and the traces double as debugging artifacts.
+
+
+/// One structural event of a simulated run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// Worker finished a chunk of `count` points at local step `t`.
+    Chunk { wall: f64, worker: usize, t: u64, count: usize },
+    /// A synchronous reduce round completed.
+    SyncMerge { wall: f64, round: u64 },
+    /// Worker's delta upload arrived at the reducer.
+    Upload { wall: f64, worker: usize, delta_norm_sq_bits: u64 },
+    /// Worker received and merged the shared version.
+    Download { wall: f64, worker: usize },
+}
+
+/// Bounded event log (drops silently beyond `cap` to keep memory flat).
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl Trace {
+    /// A trace retaining at most `cap` events.
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { events: Vec::new(), cap, dropped: 0 }
+    }
+
+    /// A disabled trace (records nothing).
+    pub fn disabled() -> Self {
+        Self::with_capacity(0)
+    }
+
+    pub fn record(&mut self, ev: TraceEvent) {
+        if self.events.len() < self.cap {
+            self.events.push(ev);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Stable fingerprint of the whole trace (for determinism asserts).
+    pub fn fingerprint(&self) -> u64 {
+        // FNV-1a over a canonical field encoding: stable, dependency-free.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |x: u64| {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x1000_0000_01b3);
+            }
+        };
+        for ev in &self.events {
+            match ev {
+                TraceEvent::Chunk { wall, worker, t, count } => {
+                    eat(1);
+                    eat(wall.to_bits());
+                    eat(*worker as u64);
+                    eat(*t);
+                    eat(*count as u64);
+                }
+                TraceEvent::SyncMerge { wall, round } => {
+                    eat(2);
+                    eat(wall.to_bits());
+                    eat(*round);
+                }
+                TraceEvent::Upload { wall, worker, delta_norm_sq_bits } => {
+                    eat(3);
+                    eat(wall.to_bits());
+                    eat(*worker as u64);
+                    eat(*delta_norm_sq_bits);
+                }
+                TraceEvent::Download { wall, worker } => {
+                    eat(4);
+                    eat(wall.to_bits());
+                    eat(*worker as u64);
+                }
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_bounds_memory() {
+        let mut t = Trace::with_capacity(2);
+        for i in 0..5 {
+            t.record(TraceEvent::SyncMerge { wall: i as f64, round: i });
+        }
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.dropped(), 3);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_traces() {
+        let mut a = Trace::with_capacity(10);
+        let mut b = Trace::with_capacity(10);
+        a.record(TraceEvent::SyncMerge { wall: 1.0, round: 1 });
+        b.record(TraceEvent::SyncMerge { wall: 2.0, round: 1 });
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut c = Trace::with_capacity(10);
+        c.record(TraceEvent::SyncMerge { wall: 1.0, round: 1 });
+        assert_eq!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let mut t = Trace::disabled();
+        t.record(TraceEvent::SyncMerge { wall: 0.0, round: 0 });
+        assert!(t.is_empty());
+    }
+}

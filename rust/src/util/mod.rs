@@ -1,0 +1,13 @@
+//! Self-contained substrates: RNG and JSON.
+//!
+//! The build is fully offline (no crates.io), so the two pieces a project
+//! would normally pull from `rand` and `serde_json` are implemented here,
+//! small and well-tested: a splittable counter-based RNG ([`rng::Rng`])
+//! and a minimal JSON parser/writer ([`json::Json`]) used for the artifact
+//! manifest, config files and figure reports.
+
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,158 @@
+//! The codebook: `κ` prototypes in `R^d`, stored row-major and flat.
+
+
+use super::Delta;
+
+/// `κ` prototypes `w = (w_1, …, w_κ) ∈ (R^d)^κ`, row-major.
+///
+/// This is the `w` of the paper: every scheme's *version* (`w^i`) and the
+/// *shared version* (`w_srd`) are `Codebook`s.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Codebook {
+    kappa: usize,
+    dim: usize,
+    data: Vec<f32>,
+}
+
+impl Codebook {
+    /// A codebook of zeros.
+    pub fn zeros(kappa: usize, dim: usize) -> Self {
+        assert!(kappa > 0 && dim > 0, "codebook must be non-empty");
+        Self { kappa, dim, data: vec![0.0; kappa * dim] }
+    }
+
+    /// Build from a flat row-major buffer (length must be `kappa * dim`).
+    pub fn from_flat(kappa: usize, dim: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), kappa * dim, "flat buffer length mismatch");
+        Self { kappa, dim, data }
+    }
+
+    pub fn kappa(&self) -> usize {
+        self.kappa
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Prototype `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Prototype `i`, mutable.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// The flat row-major buffer (what the PJRT engine feeds to XLA).
+    #[inline]
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn flat_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// `w ← w − Δ` — apply a displacement (the *delta merge* of schemes
+    /// B/C: the reducer folds worker deltas into the shared version).
+    pub fn apply_delta(&mut self, delta: &Delta) {
+        assert_eq!(self.data.len(), delta.flat().len(), "delta shape mismatch");
+        for (w, d) in self.data.iter_mut().zip(delta.flat()) {
+            *w -= d;
+        }
+    }
+
+    /// Element-wise average of versions — the *averaging merge* of
+    /// scheme A (paper eq. 3): `w_srd = (1/M) Σ_i w^i`.
+    pub fn average(versions: &[Codebook]) -> Codebook {
+        assert!(!versions.is_empty(), "cannot average zero versions");
+        let mut out = Codebook::zeros(versions[0].kappa, versions[0].dim);
+        Self::average_into(versions, &mut out);
+        out
+    }
+
+    /// [`Codebook::average`] into an existing buffer (the scheme-A hot
+    /// loop calls this every reduce round; no allocation).
+    pub fn average_into(versions: &[Codebook], out: &mut Codebook) {
+        assert!(!versions.is_empty(), "cannot average zero versions");
+        let (kappa, dim) = (versions[0].kappa, versions[0].dim);
+        assert_eq!((out.kappa, out.dim), (kappa, dim), "output shape mismatch");
+        out.data.iter_mut().for_each(|o| *o = 0.0);
+        for v in versions {
+            assert_eq!((v.kappa, v.dim), (kappa, dim), "version shape mismatch");
+            for (o, x) in out.data.iter_mut().zip(&v.data) {
+                *o += x;
+            }
+        }
+        let inv = 1.0 / versions.len() as f32;
+        for o in out.data.iter_mut() {
+            *o *= inv;
+        }
+    }
+
+    /// Max absolute element-wise difference to another codebook.
+    pub fn max_abs_diff(&self, other: &Codebook) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Squared Frobenius norm of the codebook.
+    pub fn norm_sq(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum()
+    }
+
+    /// True iff every entry is finite.
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_views_into_flat() {
+        let mut w = Codebook::zeros(3, 2);
+        w.row_mut(1).copy_from_slice(&[5.0, 6.0]);
+        assert_eq!(w.flat(), &[0.0, 0.0, 5.0, 6.0, 0.0, 0.0]);
+        assert_eq!(w.row(1), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn average_of_identical_is_identity() {
+        let w = Codebook::from_flat(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let avg = Codebook::average(&[w.clone(), w.clone(), w.clone()]);
+        assert_eq!(avg, w);
+    }
+
+    #[test]
+    fn average_is_elementwise_mean() {
+        let a = Codebook::from_flat(1, 2, vec![0.0, 2.0]);
+        let b = Codebook::from_flat(1, 2, vec![4.0, 6.0]);
+        let avg = Codebook::average(&[a, b]);
+        assert_eq!(avg.flat(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn apply_delta_subtracts() {
+        let mut w = Codebook::from_flat(1, 2, vec![1.0, 1.0]);
+        let d = Delta::from_flat(1, 2, vec![0.25, -0.5]);
+        w.apply_delta(&d);
+        assert_eq!(w.flat(), &[0.75, 1.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "flat buffer length mismatch")]
+    fn from_flat_checks_length() {
+        let _ = Codebook::from_flat(2, 2, vec![0.0; 3]);
+    }
+}

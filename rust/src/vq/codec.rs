@@ -1,0 +1,156 @@
+//! The quantizer as a codec — the paper's motivating use-case.
+//!
+//! “The VQ technique computes a summary of a dataset … with κ prototypes”:
+//! once trained, the codebook *is* a lossy compressor. [`encode`] maps each
+//! point to its nearest prototype's index (`⌈log2 κ⌉` bits instead of
+//! `32·d`), [`decode`] reconstructs, and [`CompressionReport`] quantifies
+//! the trade: compression ratio vs mean reconstruction error — which is
+//! exactly the distortion criterion the schemes minimize.
+
+use super::{assignments, distortion_mean, Codebook};
+
+/// Encoded form of a dataset: prototype indices against a codebook.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Encoded {
+    /// Nearest-prototype index per point.
+    pub codes: Vec<u32>,
+    kappa: usize,
+    dim: usize,
+}
+
+impl Encoded {
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    /// Bits per point at entropy-free fixed-width coding.
+    pub fn bits_per_point(&self) -> u32 {
+        (usize::BITS - (self.kappa - 1).leading_zeros()).max(1)
+    }
+}
+
+/// Quantize every point to its nearest prototype's index.
+pub fn encode(w: &Codebook, points: &[f32]) -> Encoded {
+    Encoded {
+        codes: assignments(w, points).into_iter().map(|i| i as u32).collect(),
+        kappa: w.kappa(),
+        dim: w.dim(),
+    }
+}
+
+/// Reconstruct the (lossy) dataset from codes.
+pub fn decode(w: &Codebook, encoded: &Encoded) -> Vec<f32> {
+    assert_eq!(encoded.kappa, w.kappa(), "codebook mismatch");
+    assert_eq!(encoded.dim, w.dim(), "codebook mismatch");
+    let mut out = Vec::with_capacity(encoded.codes.len() * w.dim());
+    for &c in &encoded.codes {
+        out.extend_from_slice(w.row(c as usize));
+    }
+    out
+}
+
+/// Compression accounting for a codebook on a dataset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressionReport {
+    /// Raw size: 32 bits × d per point.
+    pub raw_bits_per_point: u64,
+    /// Fixed-width code size (excluding the κ·d·32-bit codebook itself).
+    pub coded_bits_per_point: u64,
+    /// `raw / coded` (codebook amortized over the dataset).
+    pub ratio: f64,
+    /// Mean squared reconstruction error = normalized distortion `C`.
+    pub mse: f64,
+}
+
+/// Evaluate the codebook as a compressor over `points`.
+pub fn compression_report(w: &Codebook, points: &[f32]) -> CompressionReport {
+    let n = (points.len() / w.dim()) as u64;
+    let encoded = encode(w, points);
+    let raw = 32 * w.dim() as u64;
+    let coded = encoded.bits_per_point() as u64;
+    let codebook_bits = (w.kappa() * w.dim()) as u64 * 32;
+    let total_coded = coded * n + codebook_bits;
+    CompressionReport {
+        raw_bits_per_point: raw,
+        coded_bits_per_point: coded,
+        ratio: (raw * n) as f64 / total_coded.max(1) as f64,
+        mse: distortion_mean(w, points) / w.dim() as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::MixtureSpec;
+    use crate::runtime::{Engine, NativeEngine};
+    use crate::vq::{init_codebook, InitMethod};
+
+    #[test]
+    fn encode_decode_round_trip_on_prototype_points() {
+        let w = Codebook::from_flat(4, 2, vec![0., 0., 1., 0., 0., 1., 1., 1.]);
+        let pts = [1.0f32, 1.0, 0.0, 0.0, 1.0, 0.0];
+        let enc = encode(&w, &pts);
+        assert_eq!(enc.codes, vec![3, 0, 1]);
+        let dec = decode(&w, &enc);
+        assert_eq!(dec, pts, "points on prototypes reconstruct exactly");
+        assert_eq!(enc.bits_per_point(), 2);
+    }
+
+    #[test]
+    fn reconstruction_error_equals_distortion() {
+        let spec = MixtureSpec { components: 4, dim: 4, ..Default::default() };
+        let pts = spec.generate(512, 3, 0);
+        let w = init_codebook(InitMethod::FromData, 8, 4, &pts, 3);
+        let enc = encode(&w, &pts);
+        let dec = decode(&w, &enc);
+        // MSE of reconstruction == normalized distortion / d, by definition
+        let mse: f64 = pts
+            .iter()
+            .zip(&dec)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / pts.len() as f64;
+        let report = compression_report(&w, &pts);
+        let rel = (mse - report.mse).abs() / mse.max(1e-12);
+        assert!(rel < 1e-6, "{mse} vs {} (rel {rel})", report.mse);
+    }
+
+    #[test]
+    fn training_improves_the_codec() {
+        let spec = MixtureSpec {
+            components: 8,
+            dim: 8,
+            separation: 5.0,
+            std: 0.3,
+            imbalance: 0.0,
+            noise_frac: 0.0,
+        };
+        let pts = spec.generate(4_096, 9, 0);
+        let w0 = init_codebook(InitMethod::Gaussian, 8, 8, &pts, 9);
+        let before = compression_report(&w0, &pts);
+        // train with a few k-means steps (any scheme would do)
+        let mut eng = NativeEngine::new();
+        let mut w = w0;
+        for _ in 0..10 {
+            eng.kmeans_step(&mut w, &pts).unwrap();
+        }
+        let after = compression_report(&w, &pts);
+        assert!(after.mse < before.mse * 0.2, "{} -> {}", before.mse, after.mse);
+        assert_eq!(after.coded_bits_per_point, 3); // kappa = 8
+        assert!(after.ratio > 50.0, "ratio {}", after.ratio); // 256 -> ~3.5 bits
+    }
+
+    #[test]
+    fn bits_per_point_handles_non_power_of_two() {
+        let w = Codebook::zeros(5, 2);
+        let enc = encode(&w, &[0.0, 0.0]);
+        assert_eq!(enc.bits_per_point(), 3);
+        let w = Codebook::zeros(1, 2);
+        let enc = encode(&w, &[0.0, 0.0]);
+        assert_eq!(enc.bits_per_point(), 1);
+    }
+}

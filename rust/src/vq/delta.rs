@@ -1,0 +1,98 @@
+//! Displacement accumulators — the `Δ` of the paper (eq. 7).
+//!
+//! `Δ^j_{t1→t2} = Σ_{t'=t1+1}^{t2} ε_{t'+1} H(z^j, w^j(t'))` is what
+//! schemes B (eq. 8) and C (eq. 9) ship to the reducer instead of whole
+//! versions. Deltas form a commutative monoid under addition, and along a
+//! single worker's walk they are additive across windows
+//! (`Δ_{t1→t3} = Δ_{t1→t2} + Δ_{t2→t3}`) — both properties are load-bearing
+//! for the asynchronous scheme and are property-tested.
+
+
+/// Accumulated displacement, same layout as a [`super::Codebook`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Delta {
+    kappa: usize,
+    dim: usize,
+    data: Vec<f32>,
+}
+
+impl Delta {
+    pub fn zeros(kappa: usize, dim: usize) -> Self {
+        Self { kappa, dim, data: vec![0.0; kappa * dim] }
+    }
+
+    pub fn from_flat(kappa: usize, dim: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), kappa * dim, "flat buffer length mismatch");
+        Self { kappa, dim, data }
+    }
+
+    pub fn kappa(&self) -> usize {
+        self.kappa
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// `self ← self + other` (the reducer's fold; commutative).
+    pub fn accumulate(&mut self, other: &Delta) {
+        assert_eq!(self.data.len(), other.data.len(), "delta shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Reset to zero (a worker starting a fresh accumulation window).
+    pub fn clear(&mut self) {
+        self.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// True iff every entry is exactly zero.
+    pub fn is_zero(&self) -> bool {
+        self.data.iter().all(|x| *x == 0.0)
+    }
+
+    /// Squared Frobenius norm.
+    pub fn norm_sq(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum()
+    }
+
+    /// Max absolute element-wise difference.
+    pub fn max_abs_diff(&self, other: &Delta) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_is_elementwise_add() {
+        let mut a = Delta::from_flat(1, 2, vec![1.0, -1.0]);
+        let b = Delta::from_flat(1, 2, vec![0.5, 0.5]);
+        a.accumulate(&b);
+        assert_eq!(a.flat(), &[1.5, -0.5]);
+    }
+
+    #[test]
+    fn clear_zeroes() {
+        let mut a = Delta::from_flat(1, 2, vec![1.0, 2.0]);
+        a.clear();
+        assert!(a.is_zero());
+    }
+}

@@ -1,0 +1,164 @@
+//! Codebook initialization.
+//!
+//! All schemes in the paper start every worker from the *same* random
+//! initial version `w^1(0) = … = w^M(0)`; the initialization itself is a
+//! substrate choice. We provide draw-from-data (the CloudDALVQ default),
+//! standard Gaussian, and k-means++ (used to give the batch baseline its
+//! customary seeding).
+
+use crate::util::Rng;
+
+use super::Codebook;
+
+/// Initialization strategies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitMethod {
+    /// Draw `κ` distinct points from the dataset (CloudDALVQ default).
+    FromData,
+    /// i.i.d. standard Gaussian entries.
+    Gaussian,
+    /// k-means++ seeding (D² sampling) — for the batch baseline.
+    KmeansPlusPlus,
+}
+
+/// Build an initial codebook from `points` (flat row-major, `dim` columns).
+pub fn init_codebook(
+    method: InitMethod,
+    kappa: usize,
+    dim: usize,
+    points: &[f32],
+    seed: u64,
+) -> Codebook {
+    let mut rng = Rng::from_seed_stream(seed, 0x1217);
+    match method {
+        InitMethod::Gaussian => {
+            let data = (0..kappa * dim)
+                .map(|_| rng.normal_f32())
+                .collect();
+            Codebook::from_flat(kappa, dim, data)
+        }
+        InitMethod::FromData => {
+            let n = points.len() / dim;
+            assert!(n >= kappa, "need at least kappa data points to init");
+            let mut chosen = Vec::with_capacity(kappa);
+            let mut data = Vec::with_capacity(kappa * dim);
+            while chosen.len() < kappa {
+                let i = rng.usize(n);
+                if !chosen.contains(&i) {
+                    chosen.push(i);
+                    data.extend_from_slice(&points[i * dim..(i + 1) * dim]);
+                }
+            }
+            Codebook::from_flat(kappa, dim, data)
+        }
+        InitMethod::KmeansPlusPlus => {
+            let n = points.len() / dim;
+            assert!(n >= kappa, "need at least kappa data points to init");
+            let mut data = Vec::with_capacity(kappa * dim);
+            let first = rng.usize(n);
+            data.extend_from_slice(&points[first * dim..(first + 1) * dim]);
+            // d2[i] = squared distance of point i to its nearest chosen center
+            let mut d2 = vec![f32::INFINITY; n];
+            for _ in 1..kappa {
+                let last = &data[data.len() - dim..];
+                let mut total = 0.0f64;
+                for i in 0..n {
+                    let p = &points[i * dim..(i + 1) * dim];
+                    let mut d = 0.0f32;
+                    for k in 0..dim {
+                        let diff = p[k] - last[k];
+                        d += diff * diff;
+                    }
+                    d2[i] = d2[i].min(d);
+                    total += d2[i] as f64;
+                }
+                let next = if total <= 0.0 {
+                    rng.usize(n) // all mass on chosen points: uniform
+                } else {
+                    let mut target = rng.range_f64(0.0, total);
+                    let mut pick = n - 1;
+                    for (i, &dd) in d2.iter().enumerate() {
+                        target -= dd as f64;
+                        if target <= 0.0 {
+                            pick = i;
+                            break;
+                        }
+                    }
+                    pick
+                };
+                data.extend_from_slice(&points[next * dim..(next + 1) * dim]);
+            }
+            Codebook::from_flat(kappa, dim, data)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_points(n: usize, dim: usize) -> Vec<f32> {
+        (0..n * dim).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn from_data_rows_are_dataset_points() {
+        let pts = grid_points(10, 2);
+        let w = init_codebook(InitMethod::FromData, 4, 2, &pts, 7);
+        for i in 0..4 {
+            let row = w.row(i);
+            let found = pts.chunks_exact(2).any(|p| p == row);
+            assert!(found, "row {i} not a dataset point");
+        }
+    }
+
+    #[test]
+    fn from_data_rows_are_distinct() {
+        let pts = grid_points(8, 2);
+        let w = init_codebook(InitMethod::FromData, 8, 2, &pts, 3);
+        for i in 0..8 {
+            for j in (i + 1)..8 {
+                assert_ne!(w.row(i), w.row(j));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let pts = grid_points(32, 4);
+        for m in [InitMethod::FromData, InitMethod::Gaussian, InitMethod::KmeansPlusPlus] {
+            let a = init_codebook(m, 5, 4, &pts, 99);
+            let b = init_codebook(m, 5, 4, &pts, 99);
+            assert_eq!(a, b, "{m:?} not deterministic");
+            let c = init_codebook(m, 5, 4, &pts, 100);
+            assert_ne!(a, c, "{m:?} ignored the seed");
+        }
+    }
+
+    #[test]
+    fn gaussian_is_roughly_standard() {
+        let w = init_codebook(InitMethod::Gaussian, 64, 64, &[], 1);
+        let n = (64 * 64) as f64;
+        let mean: f64 = w.flat().iter().map(|x| *x as f64).sum::<f64>() / n;
+        let var: f64 =
+            w.flat().iter().map(|x| (*x as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.1, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.15, "var {var}");
+    }
+
+    #[test]
+    fn kmeanspp_spreads_centers() {
+        // two tight clusters far apart: k-means++ with kappa=2 must pick
+        // one center in each
+        let mut pts = Vec::new();
+        for i in 0..50 {
+            pts.extend_from_slice(&[0.0 + (i % 5) as f32 * 0.01, 0.0]);
+        }
+        for i in 0..50 {
+            pts.extend_from_slice(&[100.0 + (i % 5) as f32 * 0.01, 0.0]);
+        }
+        let w = init_codebook(InitMethod::KmeansPlusPlus, 2, 2, &pts, 5);
+        let (a, b) = (w.row(0)[0], w.row(1)[0]);
+        assert!((a < 50.0) != (b < 50.0), "centers {a}, {b} in same cluster");
+    }
+}

@@ -1,0 +1,24 @@
+//! Core vector-quantization math (pure Rust, mirrors the L1 kernels).
+//!
+//! This module is the native twin of the Pallas kernels: the paper's
+//! recursion (eq. 1), displacement accumulation (eq. 7), the empirical
+//! distortion criterion (eq. 2), learning-rate schedules and codebook
+//! initialization. The [`crate::runtime::NativeEngine`] is a thin wrapper
+//! over these functions; integration tests pin them against the PJRT
+//! execution of the AOT artifacts.
+
+mod codebook;
+mod codec;
+mod delta;
+mod distortion;
+mod init;
+mod schedule;
+mod step;
+
+pub use codebook::Codebook;
+pub use codec::{compression_report, decode, encode, CompressionReport, Encoded};
+pub use delta::Delta;
+pub use distortion::{assignments, distortion_mean, distortion_sum, nearest};
+pub use init::{init_codebook, InitMethod};
+pub use schedule::Schedule;
+pub use step::{vq_chunk, vq_step};

@@ -1,0 +1,137 @@
+//! Learning-rate schedules `(ε_t)_{t>0}`.
+//!
+//! The paper assumes “a satisfactory VQ implementation” whose step sequence
+//! is already adapted to the dataset, and its core argument (Section 3) is
+//! about how parallel schemes change the *effective* learning rate per
+//! processed sample. The classical Robbins–Monro family used by the
+//! CloudDALVQ code is `ε_t = ε₀ / (1 + t/T)^α`.
+//!
+//! Each *worker* indexes the schedule by its **local** step count `t` —
+//! exactly the `ε_{t'+1}` indexing of eqs. 5–9.
+
+
+/// A step-size sequence `(ε_t)_{t ≥ 0}`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    /// `ε_t = eps0` — constant step (exploration never decays).
+    Constant { eps0: f32 },
+    /// `ε_t = eps0 / (1 + t / half_life)` — the classical 1/t decay.
+    InverseTime { eps0: f32, half_life: f32 },
+    /// `ε_t = eps0 / (1 + t / half_life)^alpha` with `α ∈ (0.5, 1]`.
+    Power { eps0: f32, half_life: f32, alpha: f32 },
+}
+
+impl Schedule {
+    /// The paper-typical default: `ε_t = 0.02 / (1 + t/5000)`.
+    ///
+    /// The paper assumes “a satisfactory VQ implementation [whose] series
+    /// of steps is supposed to be adapted to the dataset”. For the *delta*
+    /// merge (eq. 8) that adaptation must respect a stability envelope:
+    /// each reduce applies ≈ `M·τ/κ` worker displacements per prototype,
+    /// so `ε` must keep `M·τ·ε/κ` below ~1 or the shared version
+    /// overshoots and diverges (demonstrated by the
+    /// `delta_merge_diverges_when_step_violates_envelope` test and the
+    /// ABL-τ ablation). `ε₀ = 0.02` keeps the paper's grid
+    /// (M ≤ 32, τ = 10, κ = 16) safely inside the envelope.
+    pub fn paper_default() -> Self {
+        Schedule::InverseTime { eps0: 0.02, half_life: 5000.0 }
+    }
+
+    /// Step size at (0-based) local iteration `t`.
+    #[inline]
+    pub fn eps(&self, t: u64) -> f32 {
+        match *self {
+            Schedule::Constant { eps0 } => eps0,
+            Schedule::InverseTime { eps0, half_life } => {
+                eps0 / (1.0 + t as f32 / half_life)
+            }
+            Schedule::Power { eps0, half_life, alpha } => {
+                eps0 / (1.0 + t as f32 / half_life).powf(alpha)
+            }
+        }
+    }
+
+    /// Fill `out` with `ε_{t0}, …, ε_{t0+out.len()-1}` (what the engines
+    /// feed to the `vq_chunk` artifact per window).
+    pub fn fill(&self, t0: u64, out: &mut [f32]) {
+        for (i, e) in out.iter_mut().enumerate() {
+            *e = self.eps(t0 + i as u64);
+        }
+    }
+
+    /// Validate parameters (positive, finite, α in range).
+    pub fn validate(&self) -> Result<(), String> {
+        let ok = |x: f32| x.is_finite() && x > 0.0;
+        match *self {
+            Schedule::Constant { eps0 } => {
+                if !ok(eps0) || eps0 > 1.0 {
+                    return Err(format!("constant eps0 must be in (0, 1], got {eps0}"));
+                }
+            }
+            Schedule::InverseTime { eps0, half_life } => {
+                if !ok(eps0) || eps0 > 1.0 || !ok(half_life) {
+                    return Err("inverse_time needs eps0 in (0,1], half_life > 0".into());
+                }
+            }
+            Schedule::Power { eps0, half_life, alpha } => {
+                if !ok(eps0) || eps0 > 1.0 || !ok(half_life) {
+                    return Err("power needs eps0 in (0,1], half_life > 0".into());
+                }
+                if !(0.5..=1.0).contains(&alpha) {
+                    return Err(format!("power alpha must be in [0.5, 1], got {alpha}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::Constant { eps0: 0.3 };
+        assert_eq!(s.eps(0), 0.3);
+        assert_eq!(s.eps(1_000_000), 0.3);
+    }
+
+    #[test]
+    fn inverse_time_halves_at_half_life() {
+        let s = Schedule::InverseTime { eps0: 0.8, half_life: 100.0 };
+        assert!((s.eps(100) - 0.4).abs() < 1e-6);
+        assert!(s.eps(0) > s.eps(10) && s.eps(10) > s.eps(1000));
+    }
+
+    #[test]
+    fn power_interpolates() {
+        let inv = Schedule::InverseTime { eps0: 0.5, half_life: 50.0 };
+        let pow1 = Schedule::Power { eps0: 0.5, half_life: 50.0, alpha: 1.0 };
+        for t in [0u64, 7, 50, 500] {
+            assert!((inv.eps(t) - pow1.eps(t)).abs() < 1e-6);
+        }
+        let pow_half = Schedule::Power { eps0: 0.5, half_life: 50.0, alpha: 0.5 };
+        assert!(pow_half.eps(500) > pow1.eps(500), "slower decay for smaller alpha");
+    }
+
+    #[test]
+    fn fill_matches_eps() {
+        let s = Schedule::paper_default();
+        let mut buf = [0.0f32; 5];
+        s.fill(42, &mut buf);
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v, s.eps(42 + i as u64));
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_params() {
+        assert!(Schedule::Constant { eps0: 0.0 }.validate().is_err());
+        assert!(Schedule::Constant { eps0: 1.5 }.validate().is_err());
+        assert!(Schedule::Power { eps0: 0.5, half_life: 10.0, alpha: 0.2 }
+            .validate()
+            .is_err());
+        assert!(Schedule::paper_default().validate().is_ok());
+    }
+}

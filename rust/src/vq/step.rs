@@ -1,0 +1,178 @@
+//! The paper's recursion (eq. 1) and the fused `τ`-point walk.
+//!
+//! This is the native mirror of the L1 Pallas `vq_chunk` kernel: identical
+//! math, identical first-minimum tie break, so the two engines can be
+//! cross-checked to float tolerance over long trajectories.
+
+use super::{Codebook, Delta};
+
+/// One step of eq. 1: find the prototype nearest to `z` (first minimum on
+/// ties), move it by `ε (w_l − z)`, and accumulate the displacement into
+/// `delta`. Returns the winning index.
+///
+/// `w(t+1)_l = w(t)_l − ε_{t+1} (w(t)_l − z)`.
+#[inline]
+pub fn vq_step(w: &mut Codebook, z: &[f32], eps: f32, delta: &mut Delta) -> usize {
+    debug_assert_eq!(z.len(), w.dim());
+    let winner = nearest_row(w, z);
+    let dim = w.dim();
+    let wrow = w.row_mut(winner);
+    let drow = delta.row_mut(winner);
+    for k in 0..dim {
+        let upd = eps * (wrow[k] - z[k]);
+        wrow[k] -= upd;
+        drow[k] += upd;
+    }
+    winner
+}
+
+/// Index of the prototype nearest to `z` (squared Euclidean, first-minimum
+/// tie break — must match `jnp.argmin` in the Pallas kernel).
+///
+/// Perf (EXPERIMENTS.md §Perf): bounds-check-free row walk via
+/// `chunks_exact` + the 4-lane [`row_dist_sq`]. Measured-and-reverted
+/// variants: partial-distance early exit (~1.7x slower at kappa=16/d=16 —
+/// the horizontal-sum checks cost more than the skipped work) and 8-lane
+/// accumulation (~12% slower than 4-lane on this core). See
+/// EXPERIMENTS.md §Perf for the iteration log.
+#[inline]
+pub(crate) fn nearest_row(w: &Codebook, z: &[f32]) -> usize {
+    let dim = z.len();
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    for (i, row) in w.flat().chunks_exact(dim).enumerate() {
+        let d = row_dist_sq(row, z);
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Squared Euclidean distance between two equal-length slices.
+///
+/// Four independent accumulator lanes: a strict sequential `sum()` cannot
+/// be vectorized by LLVM (FP addition is not associative), so the lanes
+/// re-associate explicitly and let the 4-wide chunks compile to SIMD.
+#[inline]
+pub(crate) fn row_dist_sq(row: &[f32], z: &[f32]) -> f32 {
+    debug_assert_eq!(row.len(), z.len());
+    let mut lanes = [0.0f32; 4];
+    let r4 = row.chunks_exact(4);
+    let z4 = z.chunks_exact(4);
+    let (r_tail, z_tail) = (r4.remainder(), z4.remainder());
+    for (r, zz) in r4.zip(z4) {
+        let d0 = r[0] - zz[0];
+        let d1 = r[1] - zz[1];
+        let d2 = r[2] - zz[2];
+        let d3 = r[3] - zz[3];
+        lanes[0] += d0 * d0;
+        lanes[1] += d1 * d1;
+        lanes[2] += d2 * d2;
+        lanes[3] += d3 * d3;
+    }
+    let mut d = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+    for (a, b) in r_tail.iter().zip(z_tail) {
+        let diff = a - b;
+        d += diff * diff;
+    }
+    d
+}
+
+/// A `τ`-point sequential walk (the L1 `vq_chunk` kernel): applies eq. 1 to
+/// each point of `chunk` in order, accumulating the window displacement
+/// `Δ` (eq. 7) into `delta`.
+///
+/// * `chunk` — `τ · d` flat row-major points,
+/// * `eps`   — `τ` per-step learning rates,
+///
+/// On return, `w` has advanced by `τ` steps and
+/// `w_out == w_in − (delta_out − delta_in)` exactly.
+pub fn vq_chunk(w: &mut Codebook, chunk: &[f32], eps: &[f32], delta: &mut Delta) {
+    let dim = w.dim();
+    assert_eq!(chunk.len(), eps.len() * dim, "chunk/eps length mismatch");
+    for (t, z) in chunk.chunks_exact(dim).enumerate() {
+        vq_step(w, z, eps[t], delta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w2() -> Codebook {
+        Codebook::from_flat(2, 2, vec![0.0, 0.0, 10.0, 10.0])
+    }
+
+    #[test]
+    fn single_step_moves_winner_towards_point() {
+        let mut w = w2();
+        let mut d = Delta::zeros(2, 2);
+        let winner = vq_step(&mut w, &[1.0, 1.0], 0.5, &mut d);
+        assert_eq!(winner, 0);
+        assert_eq!(w.row(0), &[0.5, 0.5]);
+        assert_eq!(w.row(1), &[10.0, 10.0]);
+        assert_eq!(d.flat(), &[-0.5, -0.5, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn eps_one_snaps_onto_point() {
+        let mut w = w2();
+        let mut d = Delta::zeros(2, 2);
+        vq_step(&mut w, &[3.0, -1.0], 1.0, &mut d);
+        assert_eq!(w.row(0), &[3.0, -1.0]);
+    }
+
+    #[test]
+    fn zero_eps_is_identity() {
+        let mut w = w2();
+        let before = w.clone();
+        let mut d = Delta::zeros(2, 2);
+        vq_step(&mut w, &[1.0, 1.0], 0.0, &mut d);
+        assert_eq!(w, before);
+        assert!(d.is_zero());
+    }
+
+    #[test]
+    fn tie_breaks_to_first_row() {
+        let mut w = Codebook::from_flat(2, 1, vec![1.0, -1.0]);
+        let mut d = Delta::zeros(2, 1);
+        let winner = vq_step(&mut w, &[0.0], 1.0, &mut d);
+        assert_eq!(winner, 0, "equidistant prototypes must pick the first");
+    }
+
+    #[test]
+    fn chunk_identity_w_equals_w0_minus_delta() {
+        let mut w = Codebook::from_flat(2, 2, vec![0.1, 0.2, 5.0, 5.0]);
+        let w0 = w.clone();
+        let mut delta = Delta::zeros(2, 2);
+        let chunk = [1.0f32, 0.0, 4.5, 5.5, 0.0, 1.0, -1.0, 0.5];
+        let eps = [0.5f32, 0.3, 0.2, 0.1];
+        vq_chunk(&mut w, &chunk, &eps, &mut delta);
+        for (i, (wv, (w0v, dv))) in w
+            .flat()
+            .iter()
+            .zip(w0.flat().iter().zip(delta.flat()))
+            .enumerate()
+        {
+            assert!((wv - (w0v - dv)).abs() < 1e-6, "mismatch at {i}");
+        }
+    }
+
+    #[test]
+    fn chunk_matches_stepwise() {
+        let mut w_a = w2();
+        let mut w_b = w2();
+        let mut d_a = Delta::zeros(2, 2);
+        let mut d_b = Delta::zeros(2, 2);
+        let chunk = [1.0f32, 1.0, 9.0, 9.0, 0.5, 0.5];
+        let eps = [0.5f32, 0.4, 0.3];
+        vq_chunk(&mut w_a, &chunk, &eps, &mut d_a);
+        for t in 0..3 {
+            vq_step(&mut w_b, &chunk[t * 2..(t + 1) * 2], eps[t], &mut d_b);
+        }
+        assert_eq!(w_a, w_b);
+        assert_eq!(d_a, d_b);
+    }
+}

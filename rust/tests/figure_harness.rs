@@ -1,0 +1,136 @@
+//! Harness-level integration: each paper figure regenerates at test scale
+//! with the expected *shape*, and reports persist/round-trip.
+
+use dalvq::config::presets;
+use dalvq::coordinator::Orchestrator;
+use dalvq::harness;
+use dalvq::metrics::FigureReport;
+use dalvq::util::Json;
+
+fn shrink(fig: &mut dalvq::config::FigureConfig, points: u64) {
+    fig.base.run.points_per_worker = points;
+    fig.base.data.n_total = 8_000;
+    fig.base.data.eval_points = 512;
+}
+
+#[test]
+fn fig1_shape_averaging_brings_no_speedup() {
+    let mut fig = presets::fig1();
+    shrink(&mut fig, 30_000);
+    let report = harness::run_figure(&fig).unwrap();
+    assert_eq!(report.series.len(), 3);
+    let (_, rows) = harness::speedups_at(&report, 0.8);
+    // the paper's negative result: no meaningful speed-up at any M
+    for row in &rows[1..] {
+        if let Some(s) = row.speedup {
+            assert!(
+                s < 1.6,
+                "{}: averaging speed-up {s:.2} should be ~1",
+                row.name
+            );
+        }
+    }
+}
+
+#[test]
+fn fig2_shape_delta_merge_speeds_up() {
+    let mut fig = presets::fig2();
+    shrink(&mut fig, 30_000);
+    let report = harness::run_figure(&fig).unwrap();
+    let (_, rows) = harness::speedups_at(&report, 0.8);
+    let m10 = rows
+        .iter()
+        .find(|r| r.name == "M=10")
+        .and_then(|r| r.speedup)
+        .expect("M=10 should reach the threshold");
+    assert!(m10 > 2.0, "delta merge M=10 speed-up {m10:.2} too small");
+    let m2 = rows
+        .iter()
+        .find(|r| r.name == "M=2")
+        .and_then(|r| r.speedup)
+        .expect("M=2 should reach the threshold");
+    assert!(m2 > 1.2, "delta merge M=2 speed-up {m2:.2} too small");
+    assert!(m10 > m2, "speed-up should grow with M");
+}
+
+#[test]
+fn fig3_shape_async_keeps_the_speedups() {
+    let mut fig2 = presets::fig2();
+    shrink(&mut fig2, 30_000);
+    let mut fig3 = presets::fig3();
+    shrink(&mut fig3, 30_000);
+    let r2 = harness::run_figure(&fig2).unwrap();
+    let r3 = harness::run_figure(&fig3).unwrap();
+    // paper: "small delays and asynchronism only slightly impacts
+    // performances, compared to the scheme given by equations (8)"
+    let horizon = r2.series[2].last_wall().min(r3.series[2].last_wall()) * 0.9;
+    let c2 = r2.series[2].value_at(horizon); // M=10 sync
+    let c3 = r3.series[2].value_at(horizon); // M=10 async+delays
+    let rel = (c3 - c2).abs() / c2.max(1e-12);
+    assert!(
+        rel < 0.35,
+        "async M=10 ({c3:.6}) strayed {rel:.2} from sync M=10 ({c2:.6})"
+    );
+}
+
+#[test]
+fn ablation_tau_frequent_merges_win() {
+    // paper §3: "the acceleration is greater when the reducing phase is
+    // frequent" — smaller tau converges at least as fast at M=10
+    let mut figs = presets::ablation_tau();
+    for f in figs.iter_mut() {
+        shrink(f, 30_000);
+        // keep points a multiple of every tau (200 divides 30k)
+    }
+    let mut finals = Vec::new();
+    for f in &figs {
+        let r = harness::run_figure(f).unwrap();
+        finals.push((f.id.clone(), r.series[0].last_value()));
+    }
+    let c_tau10 = finals.iter().find(|(id, _)| id == "abl_tau_10").unwrap().1;
+    let c_tau200 = finals.iter().find(|(id, _)| id == "abl_tau_200").unwrap().1;
+    assert!(
+        c_tau10 <= c_tau200 * 1.1,
+        "tau=10 ({c_tau10:.6}) should not lose to tau=200 ({c_tau200:.6})"
+    );
+}
+
+#[test]
+fn reports_persist_and_round_trip() {
+    let dir = std::env::temp_dir().join("dalvq_fig_harness_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let orch = Orchestrator { out_dir: Some(dir.clone()), quiet: true };
+    let mut fig = presets::fig2();
+    shrink(&mut fig, 5_000);
+    fig.ms = vec![1, 2];
+    let report = orch.run_figure(&fig).unwrap();
+
+    // CSV exists and has the long format header
+    let csv = std::fs::read_to_string(dir.join("fig2.csv")).unwrap();
+    assert!(csv.starts_with("series,wall,value"));
+    assert!(csv.contains("M=2,"));
+
+    // JSON round-trips to an equal report
+    let text = std::fs::read_to_string(dir.join("fig2.json")).unwrap();
+    let back = FigureReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back.id, report.id);
+    assert_eq!(back.series.len(), report.series.len());
+    for (a, b) in back.series.iter().zip(&report.series) {
+        assert_eq!(a.samples.len(), b.samples.len());
+        assert_eq!(a.points_processed, b.points_processed);
+    }
+}
+
+#[test]
+fn figure_runs_are_reproducible() {
+    let mut fig = presets::fig3();
+    shrink(&mut fig, 5_000);
+    fig.ms = vec![2];
+    let a = harness::run_figure(&fig).unwrap();
+    let b = harness::run_figure(&fig).unwrap();
+    assert_eq!(a.series[0].samples.len(), b.series[0].samples.len());
+    for (x, y) in a.series[0].samples.iter().zip(&b.series[0].samples) {
+        assert_eq!(x.wall, y.wall);
+        assert_eq!(x.value, y.value);
+    }
+}

@@ -1,0 +1,166 @@
+//! Engine duality: the PJRT execution of the AOT Pallas artifacts must
+//! agree with the bit-mirrored native engine to float tolerance — this is
+//! what licenses running the big sweeps natively while claiming the
+//! artifact path is the system under test.
+//!
+//! Requires `artifacts/` (run `make artifacts`); each test skips with a
+//! note when artifacts are absent so `cargo test` works pre-AOT.
+
+use std::path::{Path, PathBuf};
+
+use dalvq::data::MixtureSpec;
+use dalvq::runtime::{Engine, NativeEngine, PjrtEngine};
+use dalvq::vq::{Codebook, Delta, Schedule};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn fixture(kappa: usize, dim: usize, n: usize) -> (Codebook, Vec<f32>) {
+    let spec = MixtureSpec {
+        components: kappa,
+        dim,
+        separation: 4.0,
+        std: 0.5,
+        imbalance: 0.3,
+        noise_frac: 0.05,
+    };
+    let points = spec.generate(n, 42, 0);
+    let w0 = Codebook::from_flat(kappa, dim, points[..kappa * dim].to_vec());
+    (w0, points)
+}
+
+#[test]
+fn vq_chunk_trajectories_agree_over_long_walks() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtEngine::load(&dir, "k16d16").unwrap();
+    let mut native = NativeEngine::new();
+    let (w0, points) = fixture(16, 16, 5_000);
+    let tau = pjrt.params().tau;
+    let schedule = Schedule::paper_default();
+
+    let mut w_p = w0.clone();
+    let mut w_n = w0.clone();
+    let mut d_p = Delta::zeros(16, 16);
+    let mut d_n = Delta::zeros(16, 16);
+    let mut eps = vec![0.0f32; tau];
+    // 500 chunks = 5000 sequential steps through both engines
+    for c in 0..500u64 {
+        let start = (c as usize * tau * 16) % (points.len() - tau * 16);
+        let chunk = &points[start..start + tau * 16];
+        schedule.fill(c * tau as u64, &mut eps);
+        pjrt.vq_chunk(&mut w_p, chunk, &eps, &mut d_p).unwrap();
+        native.vq_chunk(&mut w_n, chunk, &eps, &mut d_n).unwrap();
+    }
+    let diff = w_p.max_abs_diff(&w_n);
+    assert!(diff < 1e-4, "codebooks diverged: max abs diff {diff}");
+    let ddiff = d_p.max_abs_diff(&d_n);
+    assert!(ddiff < 1e-3, "deltas diverged: max abs diff {ddiff}");
+}
+
+#[test]
+fn distortion_sums_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtEngine::load(&dir, "k16d16").unwrap();
+    let mut native = NativeEngine::new();
+    // 2.5 batches: exercises both the artifact path and the remainder path
+    let (w0, points) = fixture(16, 16, 2_560);
+    let a = pjrt.distortion_sum(&w0, &points).unwrap();
+    let b = native.distortion_sum(&w0, &points).unwrap();
+    let rel = (a - b).abs() / b.abs().max(1e-9);
+    assert!(rel < 1e-4, "distortion mismatch: pjrt {a} vs native {b}");
+}
+
+#[test]
+fn kmeans_steps_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtEngine::load(&dir, "k16d16").unwrap();
+    let mut native = NativeEngine::new();
+    let (w0, points) = fixture(16, 16, 1_024);
+    let mut w_p = w0.clone();
+    let mut w_n = w0.clone();
+    let c_p = pjrt.kmeans_step(&mut w_p, &points).unwrap();
+    let c_n = native.kmeans_step(&mut w_n, &points).unwrap();
+    assert_eq!(c_p, c_n, "assignment counts differ");
+    let diff = w_p.max_abs_diff(&w_n);
+    assert!(diff < 1e-4, "centroids differ: {diff}");
+}
+
+#[test]
+fn multi_chunk_matches_repeated_vq_chunk() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtEngine::load(&dir, "k16d16").unwrap();
+    let (w0, points) = fixture(16, 16, 2_000);
+    let (s, tau) = (pjrt.params().scan_chunks, pjrt.params().tau);
+    let steps = s * tau;
+    let schedule = Schedule::paper_default();
+    let mut eps_all = vec![0.0f32; steps];
+    schedule.fill(0, &mut eps_all);
+    let chunks = &points[..steps * 16];
+
+    let mut w_scan = w0.clone();
+    let mut d_scan = Delta::zeros(16, 16);
+    pjrt.multi_chunk(&mut w_scan, chunks, &eps_all, &mut d_scan).unwrap();
+
+    let mut w_loop = w0.clone();
+    let mut d_loop = Delta::zeros(16, 16);
+    for c in 0..s {
+        let z = &chunks[c * tau * 16..(c + 1) * tau * 16];
+        let e = &eps_all[c * tau..(c + 1) * tau];
+        pjrt.vq_chunk(&mut w_loop, z, e, &mut d_loop).unwrap();
+    }
+    assert!(w_scan.max_abs_diff(&w_loop) < 1e-5);
+    assert!(d_scan.max_abs_diff(&d_loop) < 1e-5);
+    // delta identity holds through the scanned path too
+    let mut w_check = w0.clone();
+    w_check.apply_delta(&d_scan);
+    assert!(w_check.max_abs_diff(&w_scan) < 1e-5);
+}
+
+#[test]
+fn all_variants_load_and_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = dalvq::runtime::Manifest::load(&dir).unwrap();
+    for (name, vm) in &manifest.variants {
+        let mut engine = PjrtEngine::load(&dir, name).unwrap();
+        let p = vm.params.clone();
+        let (w0, points) = fixture(p.kappa, p.dim, p.eval_batch.max(p.tau * 2));
+        let mut w = w0.clone();
+        let mut delta = Delta::zeros(p.kappa, p.dim);
+        let eps = vec![0.01f32; p.tau];
+        engine
+            .vq_chunk(&mut w, &points[..p.tau * p.dim], &eps, &mut delta)
+            .unwrap_or_else(|e| panic!("variant {name}: vq_chunk failed: {e}"));
+        assert!(w.is_finite(), "variant {name} produced non-finite codebook");
+        let c = engine
+            .distortion_sum(&w0, &points[..p.eval_batch * p.dim])
+            .unwrap_or_else(|e| panic!("variant {name}: distortion failed: {e}"));
+        assert!(c >= 0.0 && c.is_finite(), "variant {name}: bad distortion {c}");
+    }
+}
+
+#[test]
+fn pjrt_rejects_shape_mismatches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtEngine::load(&dir, "k16d16").unwrap();
+    let (w0, points) = fixture(16, 16, 100);
+    // wrong tau
+    let mut w = w0.clone();
+    let mut delta = Delta::zeros(16, 16);
+    let eps = vec![0.01f32; 7];
+    assert!(pjrt.vq_chunk(&mut w, &points[..7 * 16], &eps, &mut delta).is_err());
+    // wrong codebook shape
+    let mut w_bad = Codebook::zeros(8, 16);
+    let eps = vec![0.01f32; 10];
+    assert!(pjrt
+        .vq_chunk(&mut w_bad, &points[..10 * 16], &eps, &mut delta)
+        .is_err());
+    // unknown variant
+    assert!(PjrtEngine::load(&dir, "nope").is_err());
+}

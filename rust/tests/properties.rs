@@ -1,0 +1,295 @@
+//! Property-based tests over the DESIGN.md invariants.
+//!
+//! The offline build carries no proptest, so properties are checked with
+//! seeded random sweeps from the in-tree RNG: many independently drawn
+//! cases per property, deterministic under `DALVQ_PROP_SEED` (default 7),
+//! failures print the case seed for replay.
+
+use dalvq::config::{ExperimentConfig, SchemeConfig};
+use dalvq::data::MixtureSpec;
+use dalvq::schemes;
+use dalvq::sim::DelayModel;
+use dalvq::util::Rng;
+use dalvq::vq::{self, Codebook, Delta, Schedule};
+
+fn prop_seed() -> u64 {
+    std::env::var("DALVQ_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7)
+}
+
+/// Draw a random VQ instance: codebook, points, eps sequence.
+fn draw_instance(rng: &mut Rng) -> (Codebook, Vec<f32>, Vec<f32>) {
+    let kappa = 1 + rng.usize(24);
+    let dim = 1 + rng.usize(24);
+    let steps = 1 + rng.usize(40);
+    let scale = [0.1f32, 1.0, 10.0][rng.usize(3)];
+    let w = Codebook::from_flat(
+        kappa,
+        dim,
+        (0..kappa * dim).map(|_| rng.normal_f32() * scale).collect(),
+    );
+    let mut z: Vec<f32> =
+        (0..steps * dim).map(|_| rng.normal_f32() * scale).collect();
+    // sometimes plant exact prototype duplicates (ties)
+    if rng.bool(0.3) && steps >= 2 {
+        z[..dim].copy_from_slice(w.row(rng.usize(kappa)));
+    }
+    let eps: Vec<f32> = (0..steps).map(|_| rng.f32()).collect();
+    (w, z, eps)
+}
+
+#[test]
+fn prop_chunk_identity_w_equals_w0_minus_delta() {
+    let mut rng = Rng::from_seed_stream(prop_seed(), 1);
+    for case in 0..200 {
+        let (w0, z, eps) = draw_instance(&mut rng);
+        let mut w = w0.clone();
+        let mut delta = Delta::zeros(w.kappa(), w.dim());
+        vq::vq_chunk(&mut w, &z, &eps, &mut delta);
+        let mut w_check = w0.clone();
+        w_check.apply_delta(&delta);
+        let diff = w.max_abs_diff(&w_check);
+        assert!(diff < 1e-4, "case {case}: identity violated by {diff}");
+        assert!(w.is_finite(), "case {case}: non-finite codebook");
+    }
+}
+
+#[test]
+fn prop_delta_additivity_across_windows() {
+    let mut rng = Rng::from_seed_stream(prop_seed(), 2);
+    for case in 0..200 {
+        let (w0, z, eps) = draw_instance(&mut rng);
+        let dim = w0.dim();
+        let steps = eps.len();
+        let cut = rng.usize(steps + 1);
+
+        let mut w_full = w0.clone();
+        let mut d_full = Delta::zeros(w0.kappa(), dim);
+        vq::vq_chunk(&mut w_full, &z, &eps, &mut d_full);
+
+        let mut w_split = w0.clone();
+        let mut d_split = Delta::zeros(w0.kappa(), dim);
+        vq::vq_chunk(&mut w_split, &z[..cut * dim], &eps[..cut], &mut d_split);
+        vq::vq_chunk(&mut w_split, &z[cut * dim..], &eps[cut..], &mut d_split);
+
+        assert!(
+            w_full.max_abs_diff(&w_split) < 1e-5,
+            "case {case}: split walk diverged"
+        );
+        assert!(
+            d_full.max_abs_diff(&d_split) < 1e-5,
+            "case {case}: deltas not additive at cut {cut}"
+        );
+    }
+}
+
+#[test]
+fn prop_reducer_fold_is_order_insensitive() {
+    // DESIGN.md invariant 7: the merge is commutative up to fp tolerance.
+    let mut rng = Rng::from_seed_stream(prop_seed(), 3);
+    for case in 0..200 {
+        let kappa = 1 + rng.usize(8);
+        let dim = 1 + rng.usize(8);
+        let n_deltas = 2 + rng.usize(10);
+        let w0 = Codebook::from_flat(
+            kappa,
+            dim,
+            (0..kappa * dim).map(|_| rng.normal_f32()).collect(),
+        );
+        let deltas: Vec<Delta> = (0..n_deltas)
+            .map(|_| {
+                Delta::from_flat(
+                    kappa,
+                    dim,
+                    (0..kappa * dim).map(|_| rng.normal_f32() * 0.1).collect(),
+                )
+            })
+            .collect();
+        let mut w_fwd = w0.clone();
+        for d in &deltas {
+            w_fwd.apply_delta(d);
+        }
+        let mut w_perm = w0.clone();
+        for &i in &rng.permutation(n_deltas) {
+            w_perm.apply_delta(&deltas[i]);
+        }
+        let diff = w_fwd.max_abs_diff(&w_perm);
+        assert!(diff < 1e-4, "case {case}: fold order changed result by {diff}");
+    }
+}
+
+#[test]
+fn prop_averaging_stays_in_convex_hull() {
+    // DESIGN.md invariant 8: eq. 3's average lies in the per-coordinate
+    // hull of the versions — this is exactly why it shrinks steps.
+    let mut rng = Rng::from_seed_stream(prop_seed(), 4);
+    for case in 0..200 {
+        let kappa = 1 + rng.usize(6);
+        let dim = 1 + rng.usize(6);
+        let m = 1 + rng.usize(8);
+        let versions: Vec<Codebook> = (0..m)
+            .map(|_| {
+                Codebook::from_flat(
+                    kappa,
+                    dim,
+                    (0..kappa * dim).map(|_| rng.normal_f32()).collect(),
+                )
+            })
+            .collect();
+        let avg = Codebook::average(&versions);
+        for idx in 0..kappa * dim {
+            let lo = versions
+                .iter()
+                .map(|v| v.flat()[idx])
+                .fold(f32::INFINITY, f32::min);
+            let hi = versions
+                .iter()
+                .map(|v| v.flat()[idx])
+                .fold(f32::NEG_INFINITY, f32::max);
+            let x = avg.flat()[idx];
+            assert!(
+                x >= lo - 1e-5 && x <= hi + 1e-5,
+                "case {case}: coord {idx} = {x} outside hull [{lo}, {hi}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_distortion_nonneg_and_permutation_invariant() {
+    let mut rng = Rng::from_seed_stream(prop_seed(), 5);
+    for case in 0..100 {
+        let (w, z, _) = draw_instance(&mut rng);
+        let c = vq::distortion_sum(&w, &z);
+        assert!(c >= 0.0 && c.is_finite(), "case {case}: bad distortion {c}");
+        // permute prototypes
+        let perm = rng.permutation(w.kappa());
+        let mut data = Vec::with_capacity(w.flat().len());
+        for &i in &perm {
+            data.extend_from_slice(w.row(i));
+        }
+        let w_perm = Codebook::from_flat(w.kappa(), w.dim(), data);
+        let c_perm = vq::distortion_sum(&w_perm, &z);
+        let rel = (c - c_perm).abs() / c.max(1e-9);
+        assert!(rel < 1e-6, "case {case}: permutation changed distortion");
+    }
+}
+
+#[test]
+fn prop_schedules_are_positive_and_decay() {
+    let mut rng = Rng::from_seed_stream(prop_seed(), 6);
+    for _ in 0..100 {
+        let eps0 = 0.01 + rng.f32() * 0.98;
+        let half_life = 1.0 + rng.f32() * 10_000.0;
+        let schedules = [
+            Schedule::Constant { eps0 },
+            Schedule::InverseTime { eps0, half_life },
+            Schedule::Power { eps0, half_life, alpha: 0.5 + rng.f32() * 0.5 },
+        ];
+        for s in schedules {
+            s.validate().unwrap();
+            let mut prev = f32::INFINITY;
+            for t in [0u64, 1, 10, 100, 10_000, 1_000_000] {
+                let e = s.eps(t);
+                assert!(e > 0.0 && e <= eps0 + 1e-6, "{s:?} at {t}: {e}");
+                assert!(e <= prev + 1e-6, "{s:?} not non-increasing at {t}");
+                prev = e;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_simulator_runs_are_deterministic() {
+    // DESIGN.md invariant 10, across random configurations of scheme C.
+    let mut rng = Rng::from_seed_stream(prop_seed(), 8);
+    for case in 0..10 {
+        let mut cfg = ExperimentConfig::default();
+        cfg.seed = rng.next_u64();
+        cfg.m = 1 + rng.usize(6);
+        cfg.data.mixture.components = 4;
+        cfg.data.mixture.dim = 1 + rng.usize(4);
+        cfg.data.n_total = 2_000;
+        cfg.data.eval_points = 128;
+        cfg.vq.kappa = 4;
+        cfg.vq.schedule = Schedule::InverseTime { eps0: 0.01, half_life: 5000.0 };
+        cfg.run.points_per_worker = 2_000;
+        cfg.run.eval_interval = 1e-3;
+        cfg.run.trace_capacity = 10_000;
+        cfg.scheme = SchemeConfig::AsyncDelta {
+            tau: 10,
+            up_delay: DelayModel::Geometric { p: 0.4, unit: 5e-5 },
+            down_delay: DelayModel::Geometric { p: 0.4, unit: 5e-5 },
+        };
+        let a = schemes::run_with_config(&cfg).unwrap();
+        let b = schemes::run_with_config(&cfg).unwrap();
+        assert_eq!(
+            a.final_shared, b.final_shared,
+            "case {case} (seed {}): non-deterministic shared version",
+            cfg.seed
+        );
+        assert_eq!(a.series.merges, b.series.merges, "case {case}");
+        assert_eq!(
+            a.series.samples.len(),
+            b.series.samples.len(),
+            "case {case}"
+        );
+    }
+}
+
+#[test]
+fn prop_mixture_shards_partition_the_dataset() {
+    let mut rng = Rng::from_seed_stream(prop_seed(), 9);
+    for case in 0..50 {
+        let spec = MixtureSpec {
+            components: 1 + rng.usize(8),
+            dim: 1 + rng.usize(8),
+            separation: 1.0 + rng.f32() * 9.0,
+            std: 0.05 + rng.f32(),
+            imbalance: rng.f32(),
+            noise_frac: rng.f32() * 0.2,
+        };
+        let n = 100 + rng.usize(2_000);
+        let m = 1 + rng.usize(16);
+        if n < m {
+            continue;
+        }
+        let ds = spec.dataset(n, rng.next_u64());
+        let shards = ds.split(m);
+        assert_eq!(
+            shards.iter().map(|s| s.len()).sum::<usize>(),
+            n,
+            "case {case}: shards lost points"
+        );
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        let (lo, hi) =
+            (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(hi - lo <= 1, "case {case}: unbalanced shards {sizes:?}");
+    }
+}
+
+#[test]
+fn delta_merge_diverges_when_step_violates_envelope() {
+    // Documented negative result (see Schedule::paper_default): the delta
+    // merge is only stable when M·τ·ε/κ stays below ~1. This pins the
+    // divergence so the constraint stays visible.
+    let mut cfg = ExperimentConfig::default();
+    cfg.m = 10;
+    cfg.data.mixture.components = 4;
+    cfg.data.mixture.dim = 2;
+    cfg.data.n_total = 4_000;
+    cfg.data.eval_points = 256;
+    cfg.vq.kappa = 4;
+    cfg.vq.schedule = Schedule::Constant { eps0: 0.5 }; // envelope = 12.5
+    cfg.scheme = SchemeConfig::DeltaSync { tau: 10 };
+    cfg.run.points_per_worker = 10_000;
+    cfg.run.eval_interval = 1e-3;
+    let out = schemes::run_with_config(&cfg).unwrap();
+    assert!(
+        !out.final_shared.is_finite() || out.series.last_value() > 1e3,
+        "expected divergence outside the stability envelope, got C = {}",
+        out.series.last_value()
+    );
+}
