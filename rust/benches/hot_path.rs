@@ -14,10 +14,8 @@
 #[path = "kit/mod.rs"]
 mod kit;
 
-use std::path::Path;
-
 use dalvq::data::MixtureSpec;
-use dalvq::runtime::{Engine, NativeEngine, PjrtEngine};
+use dalvq::runtime::{Engine, NativeEngine};
 use dalvq::vq::{Codebook, Delta, Schedule};
 
 fn main() {
@@ -71,13 +69,30 @@ fn main() {
         kit::throughput(&s, 1024, "pts");
     }
 
-    let artifacts = Path::new("artifacts");
+    pjrt_benches(&w0, &points, &eval, &schedule, &eps, tau, dim);
+}
+
+/// The PJRT half: only in `--features pjrt` builds with `artifacts/` present.
+#[cfg(feature = "pjrt")]
+fn pjrt_benches(
+    w0: &Codebook,
+    points: &[f32],
+    eval: &[f32],
+    schedule: &Schedule,
+    eps: &[f32],
+    tau: usize,
+    dim: usize,
+) {
+    use dalvq::runtime::PjrtEngine;
+
+    let artifacts = std::path::Path::new("artifacts");
     if !artifacts.join("manifest.json").exists() {
         println!("\n(artifacts/ missing — skipping PJRT benches; run `make artifacts`)");
         return;
     }
 
     kit::section("pjrt engine (AOT Pallas artifacts)");
+    let kappa = w0.kappa();
     let mut pjrt = PjrtEngine::load(artifacts, "k16d16").expect("loading artifacts");
     {
         let mut w = w0.clone();
@@ -85,7 +100,7 @@ fn main() {
         let chunk = &points[..tau * dim];
         let s = kit::bench("pjrt vq_chunk tau=10 (k16,d16)", || {
             delta.clear();
-            pjrt.vq_chunk(&mut w, chunk, &eps, &mut delta).unwrap();
+            pjrt.vq_chunk(&mut w, chunk, eps, &mut delta).unwrap();
         });
         kit::throughput(&s, tau as u64, "pts");
     }
@@ -108,8 +123,21 @@ fn main() {
     }
     {
         let s = kit::bench("pjrt distortion 1024 pts (k16,d16)", || {
-            std::hint::black_box(pjrt.distortion_sum(&w0, &eval).unwrap());
+            std::hint::black_box(pjrt.distortion_sum(w0, eval).unwrap());
         });
         kit::throughput(&s, 1024, "pts");
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_benches(
+    _w0: &Codebook,
+    _points: &[f32],
+    _eval: &[f32],
+    _schedule: &Schedule,
+    _eps: &[f32],
+    _tau: usize,
+    _dim: usize,
+) {
+    println!("\n(built without the `pjrt` feature — native benches only)");
 }

@@ -1,0 +1,71 @@
+//! Serving-path benchmark: an in-process `dalvq serve` stack under the
+//! load generator, swept over connection counts and workload mixes.
+//!
+//! ```bash
+//! cargo bench --bench serve
+//! ```
+//!
+//! Reports throughput (req/s, pts/s) and latency percentiles per
+//! configuration — the serving analogue of the cloud scale-up bench.
+
+#[path = "kit/mod.rs"]
+mod kit;
+
+use std::sync::Arc;
+
+use dalvq::config::presets;
+use dalvq::serve::{run_load, LoadSpec, Server, VqService};
+
+fn main() {
+    let p = presets::serve();
+    kit::section("dalvq serve — in-process stack, native engine");
+    println!(
+        "fleet: M={} kappa={} dim={} | exchange window {} pts | pacing {:.1} us/pt",
+        p.base.m,
+        p.base.vq.kappa,
+        p.base.dim(),
+        p.serve.points_per_exchange,
+        p.serve.point_compute * 1e6,
+    );
+
+    let service = Arc::new(VqService::start(&p.base, &p.serve).expect("service"));
+    let server =
+        Server::start(Arc::clone(&service), &p.serve.addr).expect("server");
+    let addr = server.local_addr().to_string();
+    println!("listening on {addr}\n");
+
+    println!(
+        "{:>6} {:>7} {:>11} {:>12} {:>9} {:>9} {:>9}",
+        "conns", "ingest", "req/s", "pts/s", "p50", "p95", "p99"
+    );
+    for (connections, ingest_frac) in
+        [(1, 0.0), (4, 0.0), (8, 0.0), (8, 0.25), (16, 0.25), (16, 1.0)]
+    {
+        let spec = LoadSpec {
+            connections,
+            requests_per_conn: 400,
+            batch_points: 64,
+            ingest_frac,
+            seed: p.base.seed,
+        };
+        let report = run_load(&addr, &spec, &p.base.data.mixture).expect("load");
+        println!(
+            "{:>6} {:>6.0}% {:>11.0} {:>12.0} {:>6.0} us {:>6.0} us {:>6.0} us",
+            connections,
+            ingest_frac * 100.0,
+            report.throughput_rps,
+            report.points_per_sec,
+            report.p50_us,
+            report.p95_us,
+            report.p99_us,
+        );
+    }
+
+    server.shutdown().expect("server shutdown");
+    let out = service.shutdown().expect("service shutdown");
+    println!(
+        "\nfleet during the bench: {} folds merged, {} points trained",
+        out.merges,
+        out.workers.iter().map(|w| w.points_trained).sum::<u64>(),
+    );
+}

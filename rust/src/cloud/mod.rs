@@ -48,3 +48,5 @@ pub use queue::{DeltaMsg, QueueHandle, QueueService};
 pub use reducer::{run_reducer, ReducerReport};
 pub use runner::{run_cloud, CloudOutcome};
 pub use worker::{run_worker, WorkerOutcome, WorkerParams};
+
+pub(crate) use worker::start_exchange;

@@ -80,6 +80,40 @@ mod tests {
     }
 
     #[test]
+    fn fault_injection_is_seed_deterministic() {
+        // Same seed => the same subset of pushes is dropped, run after
+        // run — the fault-injection experiments replay exactly.
+        let run = |seed: u64| -> Vec<bool> {
+            let (h, rx) = QueueService::create(256);
+            let mut hd =
+                h.clone().with_latency(LatencyInjector::new(0.0, 0.0, 0.4, seed));
+            let delivered: Vec<bool> = (0..200u64)
+                .map(|seq| {
+                    hd.push(DeltaMsg { worker: 0, seq, delta: Delta::zeros(1, 1) })
+                        .unwrap()
+                })
+                .collect();
+            drop(h);
+            drop(hd);
+            // what the reducer side sees must match the sender's view
+            let received: Vec<u64> = rx.iter().map(|m| m.seq).collect();
+            let survivors: Vec<u64> = delivered
+                .iter()
+                .enumerate()
+                .filter(|(_, d)| **d)
+                .map(|(i, _)| i as u64)
+                .collect();
+            assert_eq!(received, survivors);
+            delivered
+        };
+        let a = run(77);
+        let b = run(77);
+        assert_eq!(a, b, "drop pattern must be identical for the same seed");
+        assert!(a.iter().any(|d| !d), "p=0.4 over 200 pushes must drop some");
+        assert_ne!(a, run(78), "a different seed must drop differently");
+    }
+
+    #[test]
     fn dropping_injector_loses_messages() {
         let (h, rx) = QueueService::create(64);
         let mut hd =

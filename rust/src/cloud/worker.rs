@@ -117,6 +117,7 @@ pub fn run_worker(
         // Start a new exchange at window boundaries when the line is free.
         if in_flight.is_none() && t % params.points_per_exchange as u64 == 0 {
             in_flight = Some(start_exchange(
+                "dalvq-xchg",
                 params.worker_id,
                 &mut seq,
                 &mut delta_window,
@@ -139,6 +140,7 @@ pub fn run_worker(
     }
     if !delta_window.is_zero() {
         let rx = start_exchange(
+            "dalvq-xchg",
             params.worker_id,
             &mut seq,
             &mut delta_window,
@@ -167,7 +169,10 @@ pub fn run_worker(
 /// Snapshot the current window displacement and ship it on a short-lived
 /// exchange thread; the returned receiver yields the downloaded shared
 /// version. At most one exchange thread per worker exists at any time.
-fn start_exchange(
+/// Shared with the serving fleet (`crate::serve`), which passes its own
+/// `thread_prefix`.
+pub(crate) fn start_exchange(
+    thread_prefix: &str,
     worker_id: usize,
     seq: &mut u64,
     delta_window: &mut Delta,
@@ -184,7 +189,7 @@ fn start_exchange(
     let mut queue = queue.clone();
     let mut blob = blob.clone();
     std::thread::Builder::new()
-        .name(format!("dalvq-xchg-{worker_id}"))
+        .name(format!("{thread_prefix}-{worker_id}"))
         .spawn(move || {
             let delivered = queue.push(msg).unwrap_or(false);
             if let Ok((w_snap, _version)) = blob.get() {

@@ -12,5 +12,5 @@ pub mod presets;
 
 pub use schema::{
     CloudConfig, DataConfig, ExperimentConfig, FigureConfig, RunConfig,
-    SchemeConfig, VqConfig,
+    SchemeConfig, ServeConfig, VqConfig,
 };

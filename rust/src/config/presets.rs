@@ -11,7 +11,9 @@
 
 use crate::sim::DelayModel;
 
-use super::{CloudConfig, ExperimentConfig, FigureConfig, SchemeConfig};
+use super::{
+    CloudConfig, ExperimentConfig, FigureConfig, SchemeConfig, ServeConfig,
+};
 
 /// The paper's `M` grid for the simulated figures.
 pub const PAPER_MS: [usize; 3] = [1, 2, 10];
@@ -164,6 +166,47 @@ pub fn ablation_delay() -> Vec<FigureConfig> {
         .collect()
 }
 
+/// A serving deployment: base experiment + service parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServePreset {
+    pub base: ExperimentConfig,
+    pub serve: ServeConfig,
+}
+
+impl ServePreset {
+    pub fn validate(&self) -> crate::Result<()> {
+        self.base.validate()?;
+        self.serve.validate(&self.base)
+    }
+}
+
+/// The `serve` preset: a 4-worker fleet on the native engine, constant
+/// learning rate (a *serving* codebook must keep tracking drift — a
+/// decaying schedule would freeze it), gentle pacing so the training fleet
+/// leaves CPU for the query path on small hosts.
+pub fn serve() -> ServePreset {
+    let mut base = ExperimentConfig::default();
+    base.m = 4;
+    base.data.mixture.components = 8;
+    base.data.mixture.dim = 4;
+    base.data.n_total = 16_000;
+    base.data.eval_points = 1_024;
+    base.vq.kappa = 8;
+    // Constant step: the fleet applies ~M*window*eps/kappa displacement
+    // per exchange; 0.01 stays well inside the stability envelope at M=4,
+    // window=100, kappa=8 while still tracking ingest drift in seconds.
+    base.vq.schedule = crate::vq::Schedule::Constant { eps0: 0.01 };
+    base.scheme = SchemeConfig::AsyncDelta {
+        tau: 10,
+        up_delay: DelayModel::Instant, // latency comes from ServeConfig
+        down_delay: DelayModel::Instant,
+    };
+    let mut serve = ServeConfig::default();
+    serve.points_per_exchange = 100;
+    serve.point_compute = 2e-6; // ~500k pts/s/worker cap
+    ServePreset { base, serve }
+}
+
 /// Quickstart: tiny 2-D problem on the PJRT engine (the `k8d2` artifacts).
 pub fn quickstart() -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default();
@@ -210,5 +253,14 @@ mod tests {
     #[test]
     fn quickstart_validates() {
         quickstart().validate().unwrap();
+    }
+
+    #[test]
+    fn serve_preset_validates() {
+        let p = serve();
+        p.validate().unwrap();
+        // serving must track drift: the schedule must not decay to zero
+        assert!(matches!(p.base.vq.schedule, crate::vq::Schedule::Constant { .. }));
+        assert!(matches!(p.base.scheme, SchemeConfig::AsyncDelta { .. }));
     }
 }

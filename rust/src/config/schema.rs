@@ -137,6 +137,95 @@ impl Default for CloudConfig {
     }
 }
 
+/// Serving-subsystem parameters: the long-running `dalvq serve` fleet
+/// (online eq.-9 training + query read path behind a TCP front-end).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Bind address for the TCP front-end (`:0` = ephemeral port).
+    pub addr: String,
+    /// Points each worker trains between exchange attempts (multiple of tau).
+    pub points_per_exchange: usize,
+    /// Publish a query snapshot every this many reducer folds (1 = every
+    /// fold; larger trades read freshness for reducer throughput).
+    pub publish_every: u64,
+    /// Bound on queued ingest batches per worker (admission control: full
+    /// channels shed load rather than block the query path).
+    pub ingest_queue: usize,
+    /// Max ingested points a worker absorbs per chunk boundary.
+    pub absorb_per_chunk: usize,
+    /// Real seconds of compute per trained point; 0 = free-running.
+    pub point_compute: f64,
+    /// Mean one-way latency injected on the workers' exchange path
+    /// (seconds; the serving analogue of [`CloudConfig::service_latency`]).
+    pub service_latency: f64,
+    /// Jitter fraction of that latency (uniform ±).
+    pub latency_jitter: f64,
+    /// Probability a delta upload is dropped (fault injection).
+    pub drop_prob: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".into(),
+            points_per_exchange: 100,
+            publish_every: 1,
+            ingest_queue: 64,
+            absorb_per_chunk: 1_024,
+            point_compute: 0.0,
+            service_latency: 0.0,
+            latency_jitter: 0.0,
+            drop_prob: 0.0,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Validate against the experiment it will serve.
+    pub fn validate(&self, base: &ExperimentConfig) -> Result<()> {
+        let mut errs: Vec<String> = Vec::new();
+        if self.addr.is_empty() {
+            errs.push("addr must be a host:port bind address".into());
+        }
+        let tau = base.scheme.tau();
+        if self.points_per_exchange == 0
+            || self.points_per_exchange % tau != 0
+        {
+            errs.push(format!(
+                "points_per_exchange = {} must be a positive multiple of \
+                 tau = {tau}",
+                self.points_per_exchange
+            ));
+        }
+        if self.publish_every == 0 {
+            errs.push("publish_every must be >= 1".into());
+        }
+        if self.ingest_queue == 0 {
+            errs.push("ingest_queue must be >= 1".into());
+        }
+        if self.absorb_per_chunk == 0 {
+            errs.push("absorb_per_chunk must be >= 1".into());
+        }
+        if self.point_compute < 0.0 || !self.point_compute.is_finite() {
+            errs.push("point_compute must be finite and >= 0".into());
+        }
+        if self.service_latency < 0.0 || !self.service_latency.is_finite() {
+            errs.push("service_latency must be finite and >= 0".into());
+        }
+        if !(0.0..=1.0).contains(&self.latency_jitter) {
+            errs.push("latency_jitter must be in [0, 1]".into());
+        }
+        if !(0.0..=1.0).contains(&self.drop_prob) {
+            errs.push("drop_prob must be in [0, 1]".into());
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(anyhow!("invalid serve config:\n  - {}", errs.join("\n  - ")))
+        }
+    }
+}
+
 /// One experiment: a scheme, `M` workers, data, costs and an engine.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
@@ -596,6 +685,25 @@ mod tests {
         };
         // 100k workers cannot shard 40k points
         assert!(fig.validate().is_err());
+    }
+
+    #[test]
+    fn serve_config_validates_against_its_base() {
+        let base = ExperimentConfig::default(); // tau = 10
+        ServeConfig::default().validate(&base).unwrap();
+
+        let mut s = ServeConfig::default();
+        s.points_per_exchange = 55; // not a multiple of tau
+        assert!(s.validate(&base).is_err());
+
+        let mut s = ServeConfig::default();
+        s.publish_every = 0;
+        s.drop_prob = 1.5;
+        s.addr = String::new();
+        let msg = format!("{:#}", s.validate(&base).unwrap_err());
+        assert!(msg.contains("publish_every"), "{msg}");
+        assert!(msg.contains("drop_prob"), "{msg}");
+        assert!(msg.contains("addr"), "{msg}");
     }
 
     #[test]

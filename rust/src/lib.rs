@@ -25,7 +25,10 @@
 //!   `make artifacts` to HLO text in `artifacts/`.
 //! * **L3** — this crate: the coordination layer the paper actually
 //!   contributes, plus every substrate it needs (synthetic data, virtual
-//!   time simulator, latency-injected cloud services, metrics, config).
+//!   time simulator, latency-injected cloud services, metrics, config),
+//!   and the [`serve`] subsystem that keeps an eq.-9 fleet learning while
+//!   a TCP read path answers encode/nearest/distortion queries against
+//!   atomically published codebook snapshots.
 //!
 //! The [`runtime`] module loads the artifacts through PJRT (the `xla`
 //! crate) and exposes them behind the [`runtime::Engine`] trait; a
@@ -55,6 +58,7 @@ pub mod harness;
 pub mod metrics;
 pub mod runtime;
 pub mod schemes;
+pub mod serve;
 pub mod sim;
 pub mod util;
 pub mod vq;

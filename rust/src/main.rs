@@ -10,6 +10,8 @@
 //! dalvq run --config my.json         # one experiment from a JSON config
 //! dalvq run --preset quickstart --print-config  # dump effective config
 //! dalvq baseline --kind batch --m 8  # batch k-means baseline
+//! dalvq serve                        # online VQ service (TCP front-end)
+//! dalvq loadtest --preset serve      # drive an in-process service
 //! dalvq info                         # artifact manifest summary
 //! ```
 //!
@@ -17,13 +19,16 @@
 
 use std::path::PathBuf;
 use std::process::ExitCode;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
 use dalvq::baselines;
+use dalvq::config::presets::ServePreset;
 use dalvq::config::{presets, ExperimentConfig, FigureConfig};
 use dalvq::coordinator::Orchestrator;
 use dalvq::runtime::{EngineSpec, Manifest};
+use dalvq::serve::{LoadSpec, Server, VqService};
 use dalvq::sim::Evaluator;
 use dalvq::vq::init_codebook;
 
@@ -39,6 +44,8 @@ COMMANDS:
   ablate     run the DESIGN.md ablations
   run        run a single experiment from a preset or JSON config
   baseline   run a k-means baseline
+  serve      run the online VQ service (ingest + query over TCP)
+  loadtest   drive a service with concurrent load; print a latency report
   info       print the AOT artifact manifest summary
   help       show this message
 
@@ -61,6 +68,19 @@ OPTIONS (baseline):
   --kind <batch|minibatch>   [default: batch]
   --m <N>                    virtual workers [default: 8]
   --iters <N>                iterations/steps [default: 50]
+
+OPTIONS (serve):
+  --preset <serve>           deployment preset [default: serve]
+  --addr <HOST:PORT>         bind address [default: 127.0.0.1:0]
+  --duration <SECS>          serve for N seconds then exit [default: forever]
+
+OPTIONS (loadtest):
+  --preset <serve>           preset for the in-process service + workload
+  --addr <HOST:PORT>         drive an already-running service instead
+  --connections <N>          concurrent connections [default: 8]
+  --requests <N>             requests per connection [default: 200]
+  --batch <N>                points per request [default: 64]
+  --ingest-frac <F>          fraction of ingest requests [default: 0.25]
 
 GLOBAL OPTIONS:
   --out-dir <DIR>            write CSV/JSON reports here
@@ -248,6 +268,96 @@ fn run() -> Result<()> {
                 out.series.last_wall()
             );
         }
+        "serve" => {
+            let preset = args.take_value("--preset")?.unwrap_or_else(|| "serve".into());
+            let addr = args.take_value("--addr")?;
+            let duration = parse_opt_u64(&mut args, "--duration")?;
+            args.finish()?;
+            let mut p = serve_preset(&preset)?;
+            if let Some(a) = addr {
+                p.serve.addr = a;
+            }
+            let service = Arc::new(VqService::start(&p.base, &p.serve)?);
+            let server = Server::start(Arc::clone(&service), &p.serve.addr)?;
+            println!(
+                "dalvq serve: listening on {} (M={}, kappa={}, dim={})",
+                server.local_addr(),
+                p.base.m,
+                p.base.vq.kappa,
+                p.base.dim(),
+            );
+            match duration {
+                Some(secs) => {
+                    std::thread::sleep(std::time::Duration::from_secs(secs))
+                }
+                None => loop {
+                    std::thread::sleep(std::time::Duration::from_secs(60));
+                    let s = service.stats();
+                    println!(
+                        "serve: version {} | ingested {} (shed {}) | queries {}",
+                        s.version, s.ingested, s.ingest_shed, s.queries
+                    );
+                },
+            }
+            let s = service.stats();
+            println!(
+                "serve: stopping at version {} ({} points ingested, {} queries)",
+                s.version, s.ingested, s.queries
+            );
+            server.shutdown()?;
+            let out = service.shutdown()?;
+            println!("serve: {} folds merged over the run", out.merges);
+        }
+        "loadtest" => {
+            let preset = args.take_value("--preset")?.unwrap_or_else(|| "serve".into());
+            let addr = args.take_value("--addr")?;
+            let mut spec = LoadSpec::default();
+            if let Some(n) = parse_opt_u64(&mut args, "--connections")? {
+                spec.connections = n as usize;
+            }
+            if let Some(n) = parse_opt_u64(&mut args, "--requests")? {
+                spec.requests_per_conn = n as usize;
+            }
+            if let Some(n) = parse_opt_u64(&mut args, "--batch")? {
+                spec.batch_points = n as usize;
+            }
+            if let Some(f) = args.take_value("--ingest-frac")? {
+                spec.ingest_frac = f
+                    .parse::<f64>()
+                    .map_err(|_| anyhow!("--ingest-frac expects a number, got {f:?}"))?;
+            }
+            args.finish()?;
+            let p = serve_preset(&preset)?;
+            spec.seed = p.base.seed;
+            let report = match addr {
+                // Drive an externally running service.
+                Some(addr) => dalvq::serve::run_load(&addr, &spec, &p.base.data.mixture)?,
+                // Stand up an in-process service, drive it, tear it down.
+                None => {
+                    let service = Arc::new(VqService::start(&p.base, &p.serve)?);
+                    let server = Server::start(Arc::clone(&service), &p.serve.addr)?;
+                    let addr = server.local_addr().to_string();
+                    println!("loadtest: in-process service on {addr}");
+                    let report =
+                        dalvq::serve::run_load(&addr, &spec, &p.base.data.mixture)?;
+                    server.shutdown()?;
+                    let out = service.shutdown()?;
+                    println!(
+                        "loadtest: service folded {} deltas during the run",
+                        out.merges
+                    );
+                    report
+                }
+            };
+            print!("{}", report.format());
+            if let Some(dir) = &orch.out_dir {
+                std::fs::create_dir_all(dir)?;
+                let fig = report.to_figure_report();
+                dalvq::metrics::write_json(&fig, &dir.join("loadtest.json"))?;
+                dalvq::metrics::write_report_csv(&fig, &dir.join("loadtest.csv"))?;
+                println!("wrote {}/loadtest.{{csv,json}}", dir.display());
+            }
+        }
         "info" => {
             let artifacts_dir = PathBuf::from(
                 args.take_value("--artifacts-dir")?
@@ -271,6 +381,13 @@ fn run() -> Result<()> {
         other => bail!("unknown command {other:?}\n\n{USAGE}"),
     }
     Ok(())
+}
+
+fn serve_preset(name: &str) -> Result<ServePreset> {
+    match name {
+        "serve" => Ok(presets::serve()),
+        other => bail!("unknown serve preset {other:?} (want serve)"),
+    }
 }
 
 fn parse_opt_u64(args: &mut Args, name: &str) -> Result<Option<u64>> {

@@ -84,6 +84,48 @@ mod tests {
     }
 
     #[test]
+    fn threshold_on_empty_series_is_none() {
+        let s = Series::new("empty");
+        assert_eq!(time_to_threshold(&s, 5.0), None);
+        // single sample above the threshold: also never crosses
+        let s = line("one", &[(1.0, 10.0)]);
+        assert_eq!(time_to_threshold(&s, 5.0), None);
+    }
+
+    #[test]
+    fn speedup_table_without_a_crossing_reference_does_not_panic() {
+        // the conventional M=1 reference never reaches the threshold:
+        // every speedup must be None, including rows that do cross
+        let rows = speedup_table(
+            &[
+                line("M=1", &[(0.0, 10.0), (4.0, 8.0)]),
+                line("M=2", &[(0.0, 10.0), (2.0, 0.0)]),
+            ],
+            5.0,
+        );
+        assert_eq!(rows[0].speedup, None);
+        assert_eq!(rows[0].time_to_threshold, None);
+        assert_eq!(rows[1].speedup, None);
+        assert!(rows[1].time_to_threshold.is_some());
+    }
+
+    #[test]
+    fn speedup_table_of_no_series_is_empty() {
+        assert!(speedup_table(&[], 1.0).is_empty());
+    }
+
+    #[test]
+    fn speedup_table_with_empty_reference_series_does_not_panic() {
+        let rows = speedup_table(
+            &[Series::new("M=1"), line("M=2", &[(0.0, 10.0), (2.0, 0.0)])],
+            5.0,
+        );
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].speedup, None);
+        assert_eq!(rows[1].speedup, None);
+    }
+
+    #[test]
     fn speedups_relative_to_first() {
         let rows = speedup_table(
             &[

@@ -67,8 +67,15 @@ impl EngineSpec {
     pub fn build(&self) -> Result<Box<dyn Engine>> {
         match self {
             EngineSpec::Native => Ok(Box::new(super::NativeEngine::new())),
+            #[cfg(feature = "pjrt")]
             EngineSpec::Pjrt { artifacts_dir, variant } => Ok(Box::new(
                 super::PjrtEngine::load(artifacts_dir, variant)?,
+            )),
+            #[cfg(not(feature = "pjrt"))]
+            EngineSpec::Pjrt { .. } => Err(anyhow::anyhow!(
+                "this build carries no PJRT engine (rebuild with \
+                 `--features pjrt` and run `make artifacts`), or use the \
+                 native engine"
             )),
         }
     }

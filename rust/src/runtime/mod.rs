@@ -20,9 +20,11 @@
 mod engine;
 mod manifest;
 mod native;
+#[cfg(feature = "pjrt")]
 mod pjrt;
 
 pub use engine::{Engine, EngineSpec};
 pub use manifest::{EntryManifest, Manifest, VariantManifest, VariantParams};
 pub use native::NativeEngine;
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtEngine;

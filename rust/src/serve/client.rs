@@ -1,0 +1,81 @@
+//! The in-crate client: a blocking, connection-per-`Client` counterpart of
+//! the server, used by the CLI, the load generator and the e2e tests.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::protocol::{read_frame, write_frame, Request, Response, StatsReply};
+
+/// One connection to a `dalvq serve` instance.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<Client> {
+        let stream = TcpStream::connect(&addr)
+            .with_context(|| format!("connecting to dalvq serve at {addr:?}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    fn call(&mut self, req: &Request) -> Result<Response> {
+        write_frame(&mut self.writer, &req.encode())?;
+        let payload = read_frame(&mut self.reader)?
+            .ok_or_else(|| anyhow!("server closed the connection"))?;
+        let resp = Response::decode(&payload)?;
+        if let Response::Error { message } = &resp {
+            bail!("server error: {message}");
+        }
+        Ok(resp)
+    }
+
+    /// Quantize a batch: nearest-prototype code per point, plus the
+    /// snapshot version that answered.
+    pub fn encode(&mut self, points: &[f32]) -> Result<(Vec<u32>, u64)> {
+        match self.call(&Request::Encode { points: points.to_vec() })? {
+            Response::Codes { version, codes } => Ok((codes, version)),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Nearest centroid per point: `(indices, squared distances, version)`.
+    pub fn nearest(&mut self, points: &[f32]) -> Result<(Vec<u32>, Vec<f32>, u64)> {
+        match self.call(&Request::Nearest { points: points.to_vec() })? {
+            Response::Neighbors { version, indices, dists } => {
+                Ok((indices, dists, version))
+            }
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Normalized distortion of a batch under the served codebook.
+    pub fn distortion(&mut self, points: &[f32]) -> Result<(f64, u64)> {
+        match self.call(&Request::Distortion { points: points.to_vec() })? {
+            Response::Distortion { version, value } => Ok((value, version)),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Stream points into the training fleet; `(accepted, shed)` counts.
+    pub fn ingest(&mut self, points: &[f32]) -> Result<(u64, u64)> {
+        match self.call(&Request::Ingest { points: points.to_vec() })? {
+            Response::IngestAck { accepted, shed } => Ok((accepted, shed)),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Service shape + counters.
+    pub fn stats(&mut self) -> Result<StatsReply> {
+        match self.call(&Request::Stats)? {
+            Response::Stats(s) => Ok(s),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+}

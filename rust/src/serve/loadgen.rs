@@ -1,0 +1,324 @@
+//! The load generator: N concurrent connections driving a mixed
+//! encode / nearest / distortion / ingest workload, with latency
+//! percentiles and a throughput curve recorded into the crate's standard
+//! metrics types ([`Series`] / [`FigureReport`]).
+
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::MixtureSpec;
+use crate::metrics::{FigureReport, Series};
+use crate::util::Rng;
+
+use super::client::Client;
+
+/// Workload shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadSpec {
+    /// Concurrent connections (one OS thread each).
+    pub connections: usize,
+    /// Requests each connection issues.
+    pub requests_per_conn: usize,
+    /// Points per request batch.
+    pub batch_points: usize,
+    /// Fraction of requests that are ingest (writes); the rest rotate
+    /// through encode / nearest / distortion evenly.
+    pub ingest_frac: f64,
+    pub seed: u64,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        Self {
+            connections: 8,
+            requests_per_conn: 200,
+            batch_points: 64,
+            ingest_frac: 0.25,
+            seed: 1,
+        }
+    }
+}
+
+impl LoadSpec {
+    pub fn validate(&self) -> Result<()> {
+        if self.connections == 0
+            || self.requests_per_conn == 0
+            || self.batch_points == 0
+        {
+            return Err(anyhow!(
+                "loadtest needs connections, requests and batch_points >= 1"
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.ingest_frac) {
+            return Err(anyhow!("ingest_frac must be in [0, 1]"));
+        }
+        Ok(())
+    }
+}
+
+/// Per-operation request counts.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OpCounts {
+    pub encode: u64,
+    pub nearest: u64,
+    pub distortion: u64,
+    pub ingest: u64,
+}
+
+/// What a load run measured.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub spec: LoadSpec,
+    pub requests: u64,
+    pub ops: OpCounts,
+    /// Ingested points the server shed (admission control).
+    pub points_shed: u64,
+    pub wall_secs: f64,
+    /// Completed requests per second over the whole run.
+    pub throughput_rps: f64,
+    /// Points pushed through queries+ingest per second.
+    pub points_per_sec: f64,
+    /// Request latency percentiles, microseconds.
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    /// Requests-per-second curve over the run (100 ms buckets).
+    pub series: Series,
+}
+
+/// Drive `spec` against a server at `addr`, generating query/ingest points
+/// from `mixture` (each connection uses its own deterministic stream).
+pub fn run_load(addr: &str, spec: &LoadSpec, mixture: &MixtureSpec) -> Result<LoadReport> {
+    spec.validate()?;
+    mixture.validate().map_err(|e| anyhow!("mixture: {e}"))?;
+    let start_gate = Arc::new(Barrier::new(spec.connections + 1));
+    let mut joins = Vec::with_capacity(spec.connections);
+    for c in 0..spec.connections {
+        let addr = addr.to_string();
+        let spec_c = spec.clone();
+        let mixture = mixture.clone();
+        let gate = Arc::clone(&start_gate);
+        joins.push(
+            std::thread::Builder::new()
+                .name(format!("dalvq-load-{c}"))
+                .spawn(move || drive_connection(&addr, &spec_c, &mixture, c, gate))
+                .expect("spawning load connection thread"),
+        );
+    }
+    start_gate.wait();
+    let run_start = Instant::now();
+    let mut latencies_ns: Vec<u64> = Vec::new();
+    let mut stamps: Vec<f64> = Vec::new();
+    let mut ops = OpCounts::default();
+    let mut points_shed = 0u64;
+    for j in joins {
+        let conn = j.join().map_err(|_| anyhow!("load connection panicked"))??;
+        latencies_ns.extend(conn.latencies_ns);
+        stamps.extend(conn.stamps);
+        ops.encode += conn.ops.encode;
+        ops.nearest += conn.ops.nearest;
+        ops.distortion += conn.ops.distortion;
+        ops.ingest += conn.ops.ingest;
+        points_shed += conn.points_shed;
+    }
+    let wall_secs = run_start.elapsed().as_secs_f64().max(1e-9);
+    let requests = latencies_ns.len() as u64;
+    latencies_ns.sort_unstable();
+    let pct = |q: f64| -> f64 {
+        if latencies_ns.is_empty() {
+            return f64::NAN;
+        }
+        let idx = ((latencies_ns.len() - 1) as f64 * q).round() as usize;
+        latencies_ns[idx] as f64 / 1e3
+    };
+
+    // Throughput curve: completions per 100 ms bucket.
+    stamps.sort_unstable_by(f64::total_cmp);
+    let bucket = 0.1f64;
+    let mut series = Series::new(format!("rps (conns={})", spec.connections));
+    if let Some(&last) = stamps.last() {
+        let buckets = (last / bucket).floor() as usize + 1;
+        let mut counts = vec![0u64; buckets];
+        for &s in &stamps {
+            counts[(s / bucket).floor() as usize] += 1;
+        }
+        for (i, n) in counts.iter().enumerate() {
+            series.push((i as f64 + 1.0) * bucket, *n as f64 / bucket);
+        }
+    }
+    series.points_processed = requests * spec.batch_points as u64;
+
+    Ok(LoadReport {
+        spec: spec.clone(),
+        requests,
+        ops,
+        points_shed,
+        wall_secs,
+        throughput_rps: requests as f64 / wall_secs,
+        points_per_sec: (requests * spec.batch_points as u64) as f64 / wall_secs,
+        p50_us: pct(0.50),
+        p95_us: pct(0.95),
+        p99_us: pct(0.99),
+        max_us: pct(1.0),
+        series,
+    })
+}
+
+struct ConnOutcome {
+    latencies_ns: Vec<u64>,
+    /// Completion times, seconds since the start gate.
+    stamps: Vec<f64>,
+    ops: OpCounts,
+    points_shed: u64,
+}
+
+fn drive_connection(
+    addr: &str,
+    spec: &LoadSpec,
+    mixture: &MixtureSpec,
+    conn_id: usize,
+    gate: Arc<Barrier>,
+) -> Result<ConnOutcome> {
+    // Connect before the gate, but defer the error past it — a failed
+    // connection must not leave run_load stuck on the start barrier.
+    let client = Client::connect(addr);
+    // A private point pool: enough to slice fresh batches from, cheap to
+    // generate, deterministic per connection.
+    let pool_points = (spec.batch_points * 64).max(1024);
+    let pool = mixture.generate(pool_points, spec.seed, 0x10AD + conn_id as u64);
+    let dim = mixture.dim;
+    let mut rng = Rng::from_seed_stream(spec.seed, 0x10AD_0000 + conn_id as u64);
+    let mut out = ConnOutcome {
+        latencies_ns: Vec::with_capacity(spec.requests_per_conn),
+        stamps: Vec::with_capacity(spec.requests_per_conn),
+        ops: OpCounts::default(),
+        points_shed: 0,
+    };
+    gate.wait();
+    let mut client = client?;
+    let t0 = Instant::now();
+    let mut read_rotor = conn_id; // stagger read ops across connections
+    for _ in 0..spec.requests_per_conn {
+        let start = rng.usize(pool_points - spec.batch_points + 1);
+        let batch = &pool[start * dim..(start + spec.batch_points) * dim];
+        let req_start = Instant::now();
+        if rng.bool(spec.ingest_frac) {
+            let (_, shed) = client.ingest(batch)?;
+            out.points_shed += shed;
+            out.ops.ingest += 1;
+        } else {
+            match read_rotor % 3 {
+                0 => {
+                    client.encode(batch)?;
+                    out.ops.encode += 1;
+                }
+                1 => {
+                    client.nearest(batch)?;
+                    out.ops.nearest += 1;
+                }
+                _ => {
+                    client.distortion(batch)?;
+                    out.ops.distortion += 1;
+                }
+            }
+            read_rotor += 1;
+        }
+        out.latencies_ns.push(req_start.elapsed().as_nanos() as u64);
+        out.stamps.push(t0.elapsed().as_secs_f64());
+    }
+    Ok(out)
+}
+
+impl LoadReport {
+    /// Human-readable table (what `dalvq loadtest` prints).
+    pub fn format(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "loadtest: {} connections x {} requests, {} pts/batch, \
+             ingest frac {:.0}%\n",
+            self.spec.connections,
+            self.spec.requests_per_conn,
+            self.spec.batch_points,
+            self.spec.ingest_frac * 100.0,
+        ));
+        s.push_str(&format!(
+            "  ops: encode {} | nearest {} | distortion {} | ingest {} \
+             (shed {} pts)\n",
+            self.ops.encode,
+            self.ops.nearest,
+            self.ops.distortion,
+            self.ops.ingest,
+            self.points_shed,
+        ));
+        s.push_str(&format!(
+            "  throughput: {:.0} req/s ({:.0} pts/s) over {:.2}s\n",
+            self.throughput_rps, self.points_per_sec, self.wall_secs,
+        ));
+        s.push_str(&format!(
+            "  latency: p50 {:.0} us | p95 {:.0} us | p99 {:.0} us | \
+             max {:.0} us\n",
+            self.p50_us, self.p95_us, self.p99_us, self.max_us,
+        ));
+        s
+    }
+
+    /// Persistable form: the throughput curve plus the headline numbers as
+    /// report params (feeds the standard CSV/JSON/SVG writers).
+    pub fn to_figure_report(&self) -> FigureReport {
+        let mut report = FigureReport::new(
+            "loadtest",
+            "dalvq serve throughput/latency under concurrent load",
+        );
+        report.param("connections", self.spec.connections);
+        report.param("requests", self.requests);
+        report.param("batch_points", self.spec.batch_points);
+        report.param("throughput_rps", format!("{:.1}", self.throughput_rps));
+        report.param("p50_us", format!("{:.1}", self.p50_us));
+        report.param("p95_us", format!("{:.1}", self.p95_us));
+        report.param("p99_us", format!("{:.1}", self.p99_us));
+        report.series.push(self.series.clone());
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_validation() {
+        assert!(LoadSpec::default().validate().is_ok());
+        let mut s = LoadSpec::default();
+        s.connections = 0;
+        assert!(s.validate().is_err());
+        let mut s = LoadSpec::default();
+        s.ingest_frac = 1.5;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn report_formats_without_panicking() {
+        let report = LoadReport {
+            spec: LoadSpec::default(),
+            requests: 10,
+            ops: OpCounts { encode: 4, nearest: 3, distortion: 2, ingest: 1 },
+            points_shed: 0,
+            wall_secs: 0.5,
+            throughput_rps: 20.0,
+            points_per_sec: 1280.0,
+            p50_us: 100.0,
+            p95_us: 200.0,
+            p99_us: 300.0,
+            max_us: 400.0,
+            series: Series::new("rps"),
+        };
+        let text = report.format();
+        assert!(text.contains("p99"));
+        let fig = report.to_figure_report();
+        assert_eq!(fig.id, "loadtest");
+        assert_eq!(fig.series.len(), 1);
+    }
+}

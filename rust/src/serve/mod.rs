@@ -1,0 +1,41 @@
+//! Online VQ serving: training and inference coexisting in one process.
+//!
+//! The paper's endpoint is a codebook maintained *online* by barrier-free
+//! delta exchange (eq. 9 — the CloudDALVQ deployment), and its companion
+//! analysis (Patra: convergence of distributed asynchronous LVQ) is about
+//! keeping that shared version usable while it is being updated. This
+//! subsystem is that story as a service:
+//!
+//! * **Write path** — a sharded worker fleet ([`run_serve_worker`]) keeps
+//!   learning via the async-delta protocol on the [`crate::cloud`]
+//!   substrate (queue + blob + dedicated reducer), fed by client
+//!   ingestion; each worker's local corpus is a sliding window, so a
+//!   drifting input distribution is tracked, not averaged away.
+//! * **Publication** — the reducer epoch-swaps immutable
+//!   [`Snapshot`]s into a [`SnapshotStore`]; readers clone an `Arc`,
+//!   never blocking the fold loop.
+//! * **Read path** — **encode** (quantize to prototype codes),
+//!   **nearest** (centroid lookup with distances) and **distortion**
+//!   (batch criterion, paper eq. 2) against the current epoch.
+//! * **Front-end** — a `std::net` TCP [`Server`] speaking a
+//!   length-prefixed binary [`protocol`], an in-crate [`Client`], and a
+//!   load generator ([`run_load`]) that measures throughput and latency
+//!   percentiles into [`crate::metrics`] types.
+//!
+//! `dalvq serve` / `dalvq loadtest` are the CLI entry points; the
+//! `serve_e2e` integration test runs the whole stack in-process.
+
+mod client;
+mod loadgen;
+pub mod protocol;
+mod server;
+mod service;
+mod snapshot;
+mod worker;
+
+pub use client::Client;
+pub use loadgen::{run_load, LoadReport, LoadSpec, OpCounts};
+pub use server::Server;
+pub use service::{ServeCounters, ServeOutcome, ServeStats, VqService};
+pub use snapshot::{Snapshot, SnapshotStore};
+pub use worker::{run_serve_worker, ServeWorkerOutcome, ServeWorkerParams};

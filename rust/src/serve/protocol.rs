@@ -1,0 +1,384 @@
+//! The wire protocol: length-prefixed binary frames over any byte stream.
+//!
+//! Frame = `u32` little-endian payload length, then the payload; payload =
+//! 1-byte opcode + fixed-width little-endian fields + flat `f32` tails.
+//! Hand-rolled (the offline build carries no serde) and symmetric: the
+//! in-crate [`super::Client`] and the server share these encoders, and the
+//! unit tests round-trip every variant.
+//!
+//! Points always travel as flat row-major `f32` — the same layout the
+//! engines and kernels use, so a server handler can pass a request body to
+//! the VQ math without reshaping.
+
+use std::io::{Read, Write};
+
+use anyhow::{anyhow, bail, Result};
+
+/// Hard cap on frame payloads (64 MiB) — a garbage length prefix must not
+/// become an allocation.
+pub const MAX_FRAME: u32 = 64 << 20;
+
+/// What a client asks the service.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Quantize: nearest-prototype code per point.
+    Encode { points: Vec<f32> },
+    /// Nearest centroid per point, with squared distances.
+    Nearest { points: Vec<f32> },
+    /// Normalized empirical distortion of the batch.
+    Distortion { points: Vec<f32> },
+    /// Feed points into the online training stream.
+    Ingest { points: Vec<f32> },
+    /// Service counters and shape.
+    Stats,
+}
+
+/// What the service answers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Codes { version: u64, codes: Vec<u32> },
+    Neighbors { version: u64, indices: Vec<u32>, dists: Vec<f32> },
+    Distortion { version: u64, value: f64 },
+    IngestAck { accepted: u64, shed: u64 },
+    Stats(StatsReply),
+    Error { message: String },
+}
+
+/// The `Stats` payload: shape + live counters of the service.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct StatsReply {
+    pub version: u64,
+    pub kappa: u64,
+    pub dim: u64,
+    pub workers: u64,
+    pub merges: u64,
+    pub ingested: u64,
+    pub ingest_shed: u64,
+    pub queries: u64,
+}
+
+// ------------------------------------------------------------ frame I/O
+
+/// Write one length-prefixed frame.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    let len = u32::try_from(payload.len())
+        .map_err(|_| anyhow!("frame too large: {} bytes", payload.len()))?;
+    if len > MAX_FRAME {
+        bail!("frame too large: {len} bytes (max {MAX_FRAME})");
+    }
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame. `Ok(None)` on clean EOF at a frame
+/// boundary (the peer hung up between requests).
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME {
+        bail!("incoming frame of {len} bytes exceeds cap {MAX_FRAME}");
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+// ------------------------------------------------------------ encoders
+
+const OP_ENCODE: u8 = 0x01;
+const OP_NEAREST: u8 = 0x02;
+const OP_DISTORTION: u8 = 0x03;
+const OP_INGEST: u8 = 0x04;
+const OP_STATS: u8 = 0x05;
+
+const OP_CODES: u8 = 0x81;
+const OP_NEIGHBORS: u8 = 0x82;
+const OP_DISTORTION_R: u8 = 0x83;
+const OP_INGEST_ACK: u8 = 0x84;
+const OP_STATS_R: u8 = 0x85;
+const OP_ERROR: u8 = 0xFF;
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_u32s(out: &mut Vec<u8>, xs: &[u32]) {
+    out.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// A bounds-checked little-endian reader over a payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| anyhow!("truncated frame at byte {}", self.pos))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.bytes(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        let raw = self.bytes(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+            .collect())
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            bail!("{} trailing bytes in frame", self.buf.len() - self.pos)
+        }
+    }
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Request::Encode { points } => {
+                out.push(OP_ENCODE);
+                put_f32s(&mut out, points);
+            }
+            Request::Nearest { points } => {
+                out.push(OP_NEAREST);
+                put_f32s(&mut out, points);
+            }
+            Request::Distortion { points } => {
+                out.push(OP_DISTORTION);
+                put_f32s(&mut out, points);
+            }
+            Request::Ingest { points } => {
+                out.push(OP_INGEST);
+                put_f32s(&mut out, points);
+            }
+            Request::Stats => out.push(OP_STATS),
+        }
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Self> {
+        let mut c = Cursor::new(payload);
+        let req = match c.u8()? {
+            OP_ENCODE => Request::Encode { points: c.f32s()? },
+            OP_NEAREST => Request::Nearest { points: c.f32s()? },
+            OP_DISTORTION => Request::Distortion { points: c.f32s()? },
+            OP_INGEST => Request::Ingest { points: c.f32s()? },
+            OP_STATS => Request::Stats,
+            op => bail!("unknown request opcode 0x{op:02x}"),
+        };
+        c.finish()?;
+        Ok(req)
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Response::Codes { version, codes } => {
+                out.push(OP_CODES);
+                out.extend_from_slice(&version.to_le_bytes());
+                put_u32s(&mut out, codes);
+            }
+            Response::Neighbors { version, indices, dists } => {
+                out.push(OP_NEIGHBORS);
+                out.extend_from_slice(&version.to_le_bytes());
+                put_u32s(&mut out, indices);
+                put_f32s(&mut out, dists);
+            }
+            Response::Distortion { version, value } => {
+                out.push(OP_DISTORTION_R);
+                out.extend_from_slice(&version.to_le_bytes());
+                out.extend_from_slice(&value.to_le_bytes());
+            }
+            Response::IngestAck { accepted, shed } => {
+                out.push(OP_INGEST_ACK);
+                out.extend_from_slice(&accepted.to_le_bytes());
+                out.extend_from_slice(&shed.to_le_bytes());
+            }
+            Response::Stats(s) => {
+                out.push(OP_STATS_R);
+                for field in [
+                    s.version, s.kappa, s.dim, s.workers, s.merges, s.ingested,
+                    s.ingest_shed, s.queries,
+                ] {
+                    out.extend_from_slice(&field.to_le_bytes());
+                }
+            }
+            Response::Error { message } => {
+                out.push(OP_ERROR);
+                let bytes = message.as_bytes();
+                out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+                out.extend_from_slice(bytes);
+            }
+        }
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Self> {
+        let mut c = Cursor::new(payload);
+        let resp = match c.u8()? {
+            OP_CODES => Response::Codes { version: c.u64()?, codes: c.u32s()? },
+            OP_NEIGHBORS => Response::Neighbors {
+                version: c.u64()?,
+                indices: c.u32s()?,
+                dists: c.f32s()?,
+            },
+            OP_DISTORTION_R => {
+                Response::Distortion { version: c.u64()?, value: c.f64()? }
+            }
+            OP_INGEST_ACK => {
+                Response::IngestAck { accepted: c.u64()?, shed: c.u64()? }
+            }
+            OP_STATS_R => Response::Stats(StatsReply {
+                version: c.u64()?,
+                kappa: c.u64()?,
+                dim: c.u64()?,
+                workers: c.u64()?,
+                merges: c.u64()?,
+                ingested: c.u64()?,
+                ingest_shed: c.u64()?,
+                queries: c.u64()?,
+            }),
+            OP_ERROR => {
+                let n = c.u32()? as usize;
+                let raw = c.bytes(n)?;
+                Response::Error {
+                    message: String::from_utf8_lossy(raw).into_owned(),
+                }
+            }
+            op => bail!("unknown response opcode 0x{op:02x}"),
+        };
+        c.finish()?;
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip_req(r: Request) {
+        assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+    }
+
+    fn round_trip_resp(r: Response) {
+        assert_eq!(Response::decode(&r.encode()).unwrap(), r);
+    }
+
+    #[test]
+    fn requests_round_trip() {
+        round_trip_req(Request::Encode { points: vec![1.0, -2.5, 3.25] });
+        round_trip_req(Request::Nearest { points: vec![] });
+        round_trip_req(Request::Distortion { points: vec![0.5; 7] });
+        round_trip_req(Request::Ingest { points: vec![f32::MIN, f32::MAX] });
+        round_trip_req(Request::Stats);
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        round_trip_resp(Response::Codes { version: 9, codes: vec![0, 7, 3] });
+        round_trip_resp(Response::Neighbors {
+            version: 1,
+            indices: vec![2, 2],
+            dists: vec![0.25, 4.0],
+        });
+        round_trip_resp(Response::Distortion { version: 3, value: 1.5e-3 });
+        round_trip_resp(Response::IngestAck { accepted: 64, shed: 2 });
+        round_trip_resp(Response::Stats(StatsReply {
+            version: 5,
+            kappa: 16,
+            dim: 4,
+            workers: 8,
+            merges: 5,
+            ingested: 1024,
+            ingest_shed: 0,
+            queries: 33,
+        }));
+        round_trip_resp(Response::Error { message: "bad dim".into() });
+    }
+
+    #[test]
+    fn frames_round_trip_over_a_buffer() {
+        let mut wire = Vec::new();
+        let a = Request::Encode { points: vec![1.0, 2.0] }.encode();
+        let b = Request::Stats.encode();
+        write_frame(&mut wire, &a).unwrap();
+        write_frame(&mut wire, &b).unwrap();
+        let mut r = &wire[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), a);
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b);
+        assert_eq!(read_frame(&mut r).unwrap(), None); // clean EOF
+    }
+
+    #[test]
+    fn truncated_and_trailing_frames_are_rejected() {
+        let good = Request::Encode { points: vec![1.0] }.encode();
+        assert!(Request::decode(&good[..good.len() - 1]).is_err());
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(Request::decode(&trailing).is_err());
+        assert!(Request::decode(&[0x7Fu8]).is_err()); // unknown opcode
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_without_allocating() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        let mut r = &wire[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! The TCP front-end: thread-per-connection over the length-prefixed
+//! protocol, answering every query from the current snapshot epoch.
+//!
+//! std-only by design (the offline build carries no async runtime), and
+//! consistent with the crate's substrate: a connection is a real
+//! preemptively-scheduled execution unit, like a worker. Queries touch the
+//! service only through [`VqService::snapshot`]/[`VqService::ingest`], so
+//! a slow client can never hold a lock the reducer or another reader
+//! needs.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::protocol::{read_frame, write_frame, Request, Response, StatsReply};
+use super::service::VqService;
+
+/// A running TCP front-end over a [`VqService`].
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    service: Arc<VqService>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and start
+    /// accepting connections against `service`.
+    pub fn start(service: Arc<VqService>, addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding serve front-end to {addr}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let service = Arc::clone(&service);
+            std::thread::Builder::new()
+                .name("dalvq-serve-accept".into())
+                .spawn(move || accept_loop(listener, service, stop))
+                .expect("spawning accept thread")
+        };
+        Ok(Server { addr: local, stop, accept: Some(accept), service })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The service behind this front-end.
+    pub fn service(&self) -> &Arc<VqService> {
+        &self.service
+    }
+
+    /// Stop accepting. Existing connections finish on their own threads
+    /// and exit at client hang-up.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop.store(true, Ordering::Release);
+        // Unblock the accept() call with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.accept.take() {
+            j.join().map_err(|_| anyhow::anyhow!("accept thread panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+fn accept_loop(listener: TcpListener, service: Arc<VqService>, stop: Arc<AtomicBool>) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        let Ok(stream) = conn else { continue };
+        let service = Arc::clone(&service);
+        let _ = std::thread::Builder::new()
+            .name("dalvq-serve-conn".into())
+            .spawn(move || {
+                let _ = serve_connection(stream, &service);
+            });
+    }
+}
+
+/// One connection: frames in, frames out, until the peer hangs up.
+fn serve_connection(stream: TcpStream, service: &VqService) -> Result<()> {
+    stream.set_nodelay(true).ok(); // request/response pattern
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    while let Some(payload) = read_frame(&mut reader)? {
+        let resp = match Request::decode(&payload) {
+            Ok(req) => handle(service, req),
+            Err(e) => Response::Error { message: format!("{e:#}") },
+        };
+        write_frame(&mut writer, &resp.encode())?;
+    }
+    Ok(())
+}
+
+/// Dispatch one request against the current snapshot epoch.
+fn handle(service: &VqService, req: Request) -> Response {
+    let dim = service.dim();
+    let check = |points: &[f32]| -> Option<Response> {
+        if points.is_empty() || points.len() % dim != 0 {
+            Some(Response::Error {
+                message: format!(
+                    "batch of {} floats is not a positive multiple of dim {dim}",
+                    points.len()
+                ),
+            })
+        } else {
+            None
+        }
+    };
+    let count_query = || {
+        service
+            .counters()
+            .queries
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    };
+    match req {
+        Request::Encode { points } => {
+            if let Some(err) = check(&points) {
+                return err;
+            }
+            count_query();
+            let snap = service.snapshot();
+            Response::Codes { version: snap.version, codes: snap.encode(&points) }
+        }
+        Request::Nearest { points } => {
+            if let Some(err) = check(&points) {
+                return err;
+            }
+            count_query();
+            let snap = service.snapshot();
+            let (indices, dists) = snap.nearest(&points);
+            Response::Neighbors { version: snap.version, indices, dists }
+        }
+        Request::Distortion { points } => {
+            if let Some(err) = check(&points) {
+                return err;
+            }
+            count_query();
+            let snap = service.snapshot();
+            Response::Distortion {
+                version: snap.version,
+                value: snap.distortion(&points),
+            }
+        }
+        Request::Ingest { points } => match service.ingest(&points) {
+            Ok((accepted, shed)) => Response::IngestAck { accepted, shed },
+            Err(e) => Response::Error { message: format!("{e:#}") },
+        },
+        Request::Stats => {
+            let s = service.stats();
+            Response::Stats(StatsReply {
+                version: s.version,
+                kappa: s.kappa as u64,
+                dim: s.dim as u64,
+                workers: s.workers as u64,
+                merges: s.merges,
+                ingested: s.ingested,
+                ingest_shed: s.ingest_shed,
+                queries: s.queries,
+            })
+        }
+    }
+}

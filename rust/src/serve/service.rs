@@ -1,0 +1,396 @@
+//! The in-process service: a serving fleet (workers + queue + blob +
+//! reducer) glued to a [`SnapshotStore`] read path.
+//!
+//! Training topology is exactly the cloud runtime's (eq. 9 / CloudDALVQ):
+//! `M` worker threads exchange displacements through the queue and blob
+//! services without barriers, and a dedicated reducer folds whatever
+//! arrives next. The one addition is the *publication* step: every
+//! `publish_every` folds the reducer epoch-swaps an immutable snapshot
+//! into the store, which is where every query is answered — so reads never
+//! contend with training beyond an `Arc` clone.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Barrier, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::cloud::{
+    BlobHandle, BlobService, DeltaMsg, LatencyInjector, QueueService,
+};
+use crate::config::{ExperimentConfig, ServeConfig};
+use crate::vq::{init_codebook, Codebook};
+
+use super::snapshot::{Snapshot, SnapshotStore};
+use super::worker::{run_serve_worker, ServeWorkerOutcome, ServeWorkerParams};
+
+/// Live counters, shared between the fleet and the front-end.
+#[derive(Debug, Default)]
+pub struct ServeCounters {
+    /// Ingested points accepted into worker queues.
+    pub ingested: AtomicU64,
+    /// Ingested points shed because a worker's queue was full.
+    pub ingest_shed: AtomicU64,
+    /// Queries answered (all read ops; maintained by the front-end).
+    pub queries: AtomicU64,
+    /// Deltas folded by the reducer (may run ahead of the published
+    /// snapshot version when `publish_every > 1`).
+    pub merges: AtomicU64,
+}
+
+/// A point-in-time view of [`ServeCounters`] plus service shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeStats {
+    pub version: u64,
+    pub kappa: usize,
+    pub dim: usize,
+    pub workers: usize,
+    /// Reducer folds to date (>= version; they differ when the reducer
+    /// publishes every `publish_every` folds).
+    pub merges: u64,
+    pub ingested: u64,
+    pub ingest_shed: u64,
+    pub queries: u64,
+}
+
+/// What the fleet reports at shutdown.
+#[derive(Debug)]
+pub struct ServeOutcome {
+    pub workers: Vec<ServeWorkerOutcome>,
+    /// Deltas folded by the reducer over the service's lifetime.
+    pub merges: u64,
+    pub final_shared: Codebook,
+}
+
+/// The training fleet's join handles — taken exactly once at shutdown.
+struct Fleet {
+    workers: Vec<JoinHandle<Result<ServeWorkerOutcome>>>,
+    reducer: JoinHandle<Result<(u64, Codebook)>>,
+    /// Held so the queue stays open until shutdown drops it.
+    queue_template: crate::cloud::QueueHandle,
+}
+
+/// The running service. Queries go through [`VqService::snapshot`];
+/// ingestion through [`VqService::ingest`]; the TCP front-end
+/// ([`super::Server`]) is a thin adapter over exactly these methods.
+///
+/// Shutdown takes `&self` (the service is normally shared behind an
+/// `Arc` with connection handlers), so callers never need to reclaim
+/// unique ownership from in-flight connections.
+pub struct VqService {
+    store: Arc<SnapshotStore>,
+    counters: Arc<ServeCounters>,
+    dim: usize,
+    kappa: usize,
+    workers_n: usize,
+    /// Cloned under a short lock per ingest call; cleared at shutdown.
+    ingest_txs: Mutex<Vec<mpsc::SyncSender<Vec<f32>>>>,
+    ingest_cursor: AtomicUsize,
+    stop: Arc<AtomicBool>,
+    fleet: Mutex<Option<Fleet>>,
+}
+
+impl VqService {
+    /// Build the fleet and start serving. Blocks until every worker has
+    /// built its engine and passed the ready barrier, so the first query
+    /// already sees a live system.
+    pub fn start(cfg: &ExperimentConfig, serve: &ServeConfig) -> Result<VqService> {
+        cfg.validate()?;
+        serve.validate(cfg)?;
+
+        let dataset = cfg.data.mixture.dataset(cfg.data.n_total, cfg.seed);
+        let shards = dataset.split(cfg.m);
+        let w0 = init_codebook(
+            cfg.vq.init,
+            cfg.vq.kappa,
+            cfg.dim(),
+            dataset.flat(),
+            cfg.seed,
+        );
+
+        let store = SnapshotStore::new(w0.clone());
+        let counters = Arc::new(ServeCounters::default());
+        let blob = BlobService::spawn(w0.clone());
+        let (queue, queue_rx) = QueueService::create(1024);
+        let stop = Arc::new(AtomicBool::new(false));
+        let ready = Arc::new(Barrier::new(cfg.m + 1));
+
+        // Reducer: fold deltas, refresh the blob for workers, publish
+        // epochs for readers.
+        let reducer = {
+            let blob = blob.clone();
+            let store = Arc::clone(&store);
+            let counters = Arc::clone(&counters);
+            let w0 = w0.clone();
+            let publish_every = serve.publish_every;
+            std::thread::Builder::new()
+                .name("dalvq-serve-reducer".into())
+                .spawn(move || {
+                    run_serving_reducer(
+                        queue_rx, blob, store, counters, w0, publish_every,
+                    )
+                })
+                .expect("spawning serve reducer thread")
+        };
+
+        let mut ingest_txs = Vec::with_capacity(cfg.m);
+        let mut workers = Vec::with_capacity(cfg.m);
+        for (i, shard) in shards.into_iter().enumerate() {
+            let (tx, rx) = mpsc::sync_channel::<Vec<f32>>(serve.ingest_queue);
+            ingest_txs.push(tx);
+            let params = ServeWorkerParams {
+                worker_id: i,
+                shard,
+                w0: w0.clone(),
+                schedule: cfg.vq.schedule,
+                tau: cfg.scheme.tau(),
+                points_per_exchange: serve.points_per_exchange,
+                point_compute: serve.point_compute,
+                absorb_per_chunk: serve.absorb_per_chunk,
+                engine_spec: cfg.engine.clone(),
+                ready: Arc::clone(&ready),
+                stop: Arc::clone(&stop),
+            };
+            let q = queue.clone().with_latency(LatencyInjector::new(
+                serve.service_latency,
+                serve.latency_jitter,
+                serve.drop_prob,
+                cfg.seed ^ ((i as u64) << 8),
+            ));
+            let b = blob.clone().with_latency(LatencyInjector::new(
+                serve.service_latency,
+                serve.latency_jitter,
+                0.0, // downloads are request/response; loss shows as latency
+                cfg.seed ^ ((i as u64) << 8) ^ 1,
+            ));
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("dalvq-serve-worker-{i}"))
+                    .spawn(move || run_serve_worker(params, rx, q, b))
+                    .expect("spawning serve worker thread"),
+            );
+        }
+        ready.wait(); // engines built; the service is live
+
+        Ok(VqService {
+            store,
+            counters,
+            dim: cfg.dim(),
+            kappa: cfg.vq.kappa,
+            workers_n: cfg.m,
+            ingest_txs: Mutex::new(ingest_txs),
+            ingest_cursor: AtomicUsize::new(0),
+            stop,
+            fleet: Mutex::new(Some(Fleet {
+                workers,
+                reducer,
+                queue_template: queue,
+            })),
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn kappa(&self) -> usize {
+        self.kappa
+    }
+
+    /// Current published epoch — the basis of every query answer.
+    pub fn snapshot(&self) -> Arc<Snapshot> {
+        self.store.load()
+    }
+
+    /// Version of the current epoch (lock-free; freshness polling).
+    pub fn version(&self) -> u64 {
+        self.store.version()
+    }
+
+    pub fn counters(&self) -> &Arc<ServeCounters> {
+        &self.counters
+    }
+
+    /// Feed points into the training stream. Batches are sharded
+    /// round-robin across workers; a full worker queue sheds its batch
+    /// (at-most-once ingestion — the stochastic algorithm tolerates loss,
+    /// and blocking here would couple ingest pressure to query latency).
+    /// Returns `(accepted, shed)` point counts.
+    pub fn ingest(&self, points: &[f32]) -> Result<(u64, u64)> {
+        if points.is_empty() {
+            return Ok((0, 0));
+        }
+        if points.len() % self.dim != 0 {
+            return Err(anyhow!(
+                "ingest batch of {} floats is not a multiple of dim {}",
+                points.len(),
+                self.dim
+            ));
+        }
+        let n = (points.len() / self.dim) as u64;
+        let tx = {
+            let txs = self.ingest_txs.lock().unwrap_or_else(|e| e.into_inner());
+            if txs.is_empty() {
+                return Err(anyhow!("service is shutting down"));
+            }
+            let i = self.ingest_cursor.fetch_add(1, Ordering::Relaxed) % txs.len();
+            txs[i].clone()
+        };
+        match tx.try_send(points.to_vec()) {
+            Ok(()) => {
+                self.counters.ingested.fetch_add(n, Ordering::Relaxed);
+                Ok((n, 0))
+            }
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.counters.ingest_shed.fetch_add(n, Ordering::Relaxed);
+                Ok((0, n))
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                Err(anyhow!("service is shutting down"))
+            }
+        }
+    }
+
+    /// Counters + shape, for the `Stats` query.
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            version: self.version(),
+            kappa: self.kappa,
+            dim: self.dim,
+            workers: self.workers_n,
+            merges: self.counters.merges.load(Ordering::Relaxed),
+            ingested: self.counters.ingested.load(Ordering::Relaxed),
+            ingest_shed: self.counters.ingest_shed.load(Ordering::Relaxed),
+            queries: self.counters.queries.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop the fleet: flag the workers, let them drain and flush, close
+    /// the queue, join the reducer. The final shared version is published
+    /// before return, so a post-shutdown `snapshot()` is complete.
+    ///
+    /// Takes `&self` so the service can stay shared with open connections;
+    /// those keep answering queries from the last epoch. Calling it twice
+    /// is an error.
+    pub fn shutdown(&self) -> Result<ServeOutcome> {
+        let fleet = self
+            .fleet
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+            .ok_or_else(|| anyhow!("service already shut down"))?;
+        self.stop.store(true, Ordering::Release);
+        // Disconnect ingest so worker drains see closed channels.
+        self.ingest_txs.lock().unwrap_or_else(|e| e.into_inner()).clear();
+        let mut outcomes = Vec::with_capacity(fleet.workers.len());
+        for j in fleet.workers {
+            outcomes.push(j.join().map_err(|_| anyhow!("serve worker panicked"))??);
+        }
+        // All workers done: drop the template handle so the reducer drains.
+        drop(fleet.queue_template);
+        let (merges, final_shared) = fleet
+            .reducer
+            .join()
+            .map_err(|_| anyhow!("serve reducer panicked"))??;
+        Ok(ServeOutcome { workers: outcomes, merges, final_shared })
+    }
+}
+
+/// The serving reducer: the cloud reducer's fold-and-put loop plus epoch
+/// publication for the read path.
+fn run_serving_reducer(
+    rx: mpsc::Receiver<DeltaMsg>,
+    mut blob: BlobHandle,
+    store: Arc<SnapshotStore>,
+    counters: Arc<ServeCounters>,
+    w0: Codebook,
+    publish_every: u64,
+) -> Result<(u64, Codebook)> {
+    let mut w_srd = w0;
+    let mut merges: u64 = 0;
+    for msg in rx.iter() {
+        w_srd.apply_delta(&msg.delta);
+        merges += 1;
+        counters.merges.store(merges, Ordering::Relaxed);
+        blob.put(w_srd.clone(), merges)?;
+        if merges % publish_every == 0 {
+            store.publish(w_srd.clone(), merges);
+        }
+    }
+    // Queue closed: one final epoch so readers see everything folded.
+    store.publish(w_srd.clone(), merges);
+    Ok((merges, w_srd))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchemeConfig;
+    use crate::sim::DelayModel;
+    use crate::vq::Schedule;
+
+    pub(crate) fn tiny_cfg(m: usize) -> (ExperimentConfig, ServeConfig) {
+        let mut cfg = ExperimentConfig::default();
+        cfg.m = m;
+        cfg.data.mixture.components = 4;
+        cfg.data.mixture.dim = 2;
+        cfg.data.n_total = 2_000;
+        cfg.data.eval_points = 256;
+        cfg.vq.kappa = 4;
+        cfg.vq.schedule = Schedule::Constant { eps0: 0.01 };
+        cfg.scheme = SchemeConfig::AsyncDelta {
+            tau: 10,
+            up_delay: DelayModel::Instant,
+            down_delay: DelayModel::Instant,
+        };
+        let mut serve = ServeConfig::default();
+        serve.points_per_exchange = 50;
+        // pace gently so the test fleet doesn't saturate small CI hosts
+        serve.point_compute = 2e-6;
+        (cfg, serve)
+    }
+
+    #[test]
+    fn service_trains_while_serving_and_shuts_down_cleanly() {
+        let (cfg, serve) = tiny_cfg(2);
+        let svc = VqService::start(&cfg, &serve).unwrap();
+        let v0 = svc.version();
+        let eval = cfg.data.mixture.eval_sample(256, cfg.seed);
+        let c0 = svc.snapshot().distortion(&eval);
+        // wait for some folds to land
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while svc.version() < v0 + 5 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "no folds published within 10s"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        let snap = svc.snapshot();
+        assert!(snap.version >= v0 + 5);
+        assert!(snap.codebook.is_finite());
+        // constant-step training on the same mixture must not blow up C
+        let c1 = snap.distortion(&eval);
+        assert!(c1 < c0 * 2.0 + 1.0, "{c0} -> {c1}");
+        let out = svc.shutdown().unwrap();
+        assert!(out.merges >= 5);
+        assert!(out.final_shared.is_finite());
+        let trained: u64 = out.workers.iter().map(|w| w.points_trained).sum();
+        assert!(trained > 0);
+    }
+
+    #[test]
+    fn ingest_validates_shape_and_counts() {
+        let (cfg, serve) = tiny_cfg(1);
+        let svc = VqService::start(&cfg, &serve).unwrap();
+        assert!(svc.ingest(&[1.0, 2.0, 3.0]).is_err()); // dim = 2
+        let (acc, shed) = svc.ingest(&[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(acc + shed, 2);
+        assert_eq!(svc.ingest(&[]).unwrap(), (0, 0));
+        let stats = svc.stats();
+        assert_eq!(stats.ingested + stats.ingest_shed, 2);
+        assert_eq!(stats.workers, 1);
+        assert_eq!(stats.dim, 2);
+        svc.shutdown().unwrap();
+    }
+}

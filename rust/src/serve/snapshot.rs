@@ -1,0 +1,139 @@
+//! Versioned, atomically published codebook snapshots — the read path's
+//! view of the continuously trained shared version.
+//!
+//! The reducer *publishes* (epoch swap of an `Arc<Snapshot>`); query
+//! handlers *load* (clone the `Arc` under a lock held for nanoseconds).
+//! Readers therefore never block the reducer on codebook-sized work and
+//! never observe a torn codebook: a snapshot is immutable once published,
+//! exactly the "shared version usable while it is being updated" property
+//! of Patra's companion analysis.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::vq::{self, Codebook};
+
+/// One immutable published state of the service.
+#[derive(Debug)]
+pub struct Snapshot {
+    pub codebook: Codebook,
+    /// Reducer fold count at publication (0 = the initial codebook).
+    pub version: u64,
+}
+
+impl Snapshot {
+    /// Nearest-prototype code per point (the codec's encode).
+    pub fn encode(&self, points: &[f32]) -> Vec<u32> {
+        vq::assignments(&self.codebook, points)
+            .into_iter()
+            .map(|i| i as u32)
+            .collect()
+    }
+
+    /// `(index, squared distance)` of the nearest centroid per point.
+    pub fn nearest(&self, points: &[f32]) -> (Vec<u32>, Vec<f32>) {
+        let dim = self.codebook.dim();
+        let mut idx = Vec::with_capacity(points.len() / dim);
+        let mut dist = Vec::with_capacity(points.len() / dim);
+        for z in points.chunks_exact(dim) {
+            let i = vq::nearest(&self.codebook, z);
+            idx.push(i as u32);
+            let row = self.codebook.row(i);
+            let d: f32 = row.iter().zip(z).map(|(a, b)| (a - b) * (a - b)).sum();
+            dist.push(d);
+        }
+        (idx, dist)
+    }
+
+    /// Normalized empirical distortion of `points` (paper eq. 2).
+    pub fn distortion(&self, points: &[f32]) -> f64 {
+        vq::distortion_mean(&self.codebook, points)
+    }
+}
+
+/// The epoch-swapped publication cell.
+///
+/// `publish` replaces the current `Arc<Snapshot>`; `load` hands out a
+/// reference to whichever epoch is current. Old epochs die when their last
+/// in-flight query drops them.
+#[derive(Debug)]
+pub struct SnapshotStore {
+    cell: Mutex<Arc<Snapshot>>,
+    /// Version mirror for lock-free freshness polling.
+    version: AtomicU64,
+}
+
+impl SnapshotStore {
+    pub fn new(w0: Codebook) -> Arc<Self> {
+        Arc::new(Self {
+            cell: Mutex::new(Arc::new(Snapshot { codebook: w0, version: 0 })),
+            version: AtomicU64::new(0),
+        })
+    }
+
+    /// Swap in a new epoch. Called by the reducer only.
+    pub fn publish(&self, codebook: Codebook, version: u64) {
+        let next = Arc::new(Snapshot { codebook, version });
+        *self.cell.lock().unwrap_or_else(|e| e.into_inner()) = next;
+        self.version.store(version, Ordering::Release);
+    }
+
+    /// Current epoch (an `Arc` clone — O(1), never copies the codebook).
+    pub fn load(&self) -> Arc<Snapshot> {
+        Arc::clone(&self.cell.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+
+    /// Version of the current epoch without taking the lock.
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_swaps_epochs_and_old_readers_keep_theirs() {
+        let store = SnapshotStore::new(Codebook::from_flat(1, 2, vec![0.0, 0.0]));
+        let old = store.load();
+        assert_eq!(old.version, 0);
+        store.publish(Codebook::from_flat(1, 2, vec![1.0, 2.0]), 7);
+        assert_eq!(store.version(), 7);
+        // the pre-publish reader still sees its epoch untouched
+        assert_eq!(old.codebook.flat(), &[0.0, 0.0]);
+        let new = store.load();
+        assert_eq!(new.version, 7);
+        assert_eq!(new.codebook.flat(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn snapshot_queries_agree_with_vq_math() {
+        let w = Codebook::from_flat(2, 1, vec![0.0, 10.0]);
+        let snap = Snapshot { codebook: w.clone(), version: 1 };
+        let pts = [1.0f32, 9.0];
+        assert_eq!(snap.encode(&pts), vec![0, 1]);
+        let (idx, dist) = snap.nearest(&pts);
+        assert_eq!(idx, vec![0, 1]);
+        assert_eq!(dist, vec![1.0, 1.0]);
+        assert_eq!(snap.distortion(&pts), vq::distortion_mean(&w, &pts));
+    }
+
+    #[test]
+    fn concurrent_loads_see_coherent_versions() {
+        let store = SnapshotStore::new(Codebook::zeros(1, 1));
+        let mut joins = Vec::new();
+        for i in 1..=8u64 {
+            let store = Arc::clone(&store);
+            joins.push(std::thread::spawn(move || {
+                store.publish(Codebook::from_flat(1, 1, vec![i as f32]), i);
+                let snap = store.load();
+                // state and version always pair up, whatever epoch we read
+                assert_eq!(snap.codebook.flat()[0] as u64, snap.version);
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+}

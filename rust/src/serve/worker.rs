@@ -1,0 +1,241 @@
+//! The serving fleet's worker: the cloud worker's eq.-9 loop, made
+//! open-ended and fed by ingestion.
+//!
+//! Differences from [`crate::cloud::run_worker`], which this mirrors:
+//!
+//! * **No points budget** — the loop runs until the service's stop flag
+//!   flips, because a serving codebook is maintained, not converged-and-
+//!   done.
+//! * **The local corpus is a sliding window** — seeded from the worker's
+//!   shard and progressively overwritten by ingested points (oldest first),
+//!   so a drifting input distribution eventually owns the whole window and
+//!   the codebook tracks it. Bounded memory, no allocation in the loop.
+//! * Exchange is byte-identical to the cloud protocol: barrier-free delta
+//!   upload through the queue, shared-version download from the blob, with
+//!   the eq.-9 rebase `w ← w_srd − Δ_window` at completion.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::cloud::{start_exchange, BlobHandle, QueueHandle};
+use crate::data::Shard;
+use crate::runtime::EngineSpec;
+use crate::vq::{Codebook, Delta, Schedule};
+
+/// Static parameters of one serving worker.
+pub struct ServeWorkerParams {
+    pub worker_id: usize,
+    /// Seed corpus; becomes the sliding window.
+    pub shard: Shard,
+    pub w0: Codebook,
+    pub schedule: Schedule,
+    pub tau: usize,
+    /// Points between exchange attempts (a multiple of tau).
+    pub points_per_exchange: usize,
+    /// Real seconds of compute per point; 0 = free-running.
+    pub point_compute: f64,
+    /// Max ingested points absorbed into the window per chunk boundary
+    /// (keeps training and absorption interleaved under ingest bursts).
+    pub absorb_per_chunk: usize,
+    pub engine_spec: EngineSpec,
+    pub ready: Arc<Barrier>,
+    pub stop: Arc<AtomicBool>,
+}
+
+/// What a serving worker reports at shutdown.
+#[derive(Debug, Clone)]
+pub struct ServeWorkerOutcome {
+    pub worker_id: usize,
+    pub points_trained: u64,
+    /// Ingested points absorbed into the sliding window.
+    pub points_absorbed: u64,
+    pub exchanges_started: u64,
+    pub exchanges_completed: u64,
+    pub pushes_dropped: u64,
+}
+
+/// The serving loop. Call from a dedicated thread; runs until
+/// `params.stop` flips, then drains its in-flight exchange and flushes the
+/// tail displacement so nothing the worker learned is lost.
+pub fn run_serve_worker(
+    params: ServeWorkerParams,
+    ingest_rx: mpsc::Receiver<Vec<f32>>,
+    queue: QueueHandle,
+    blob: BlobHandle,
+) -> Result<ServeWorkerOutcome> {
+    assert!(
+        params.points_per_exchange % params.tau == 0,
+        "points_per_exchange must be a multiple of tau"
+    );
+    // Hit the barrier even if the engine fails to build — otherwise the
+    // service's start() would block forever on the fleet rendezvous; the
+    // error surfaces at shutdown via the join.
+    let engine = params.engine_spec.build();
+    params.ready.wait();
+    let mut engine = engine?;
+
+    let dim = params.shard.dim();
+    let kappa = params.w0.kappa();
+    // The sliding window: starts as the shard, refreshed by ingestion.
+    let mut window: Vec<f32> = params.shard.flat().to_vec();
+    let window_points = window.len() / dim;
+    let mut write_pos: usize = 0; // next window slot to overwrite (points)
+
+    let mut w = params.w0.clone();
+    let mut delta_window = Delta::zeros(kappa, dim);
+    let mut chunk_buf = vec![0.0f32; params.tau * dim];
+    let mut eps_buf = vec![0.0f32; params.tau];
+    let mut t: u64 = 0;
+    let mut seq: u64 = 0;
+    let mut absorbed: u64 = 0;
+    let mut exchanges_completed = 0u64;
+    let mut pushes_dropped = 0u64;
+    let mut in_flight: Option<mpsc::Receiver<(Codebook, bool)>> = None;
+    // A batch absorbed only partway when the per-chunk budget ran out;
+    // `usize` is the resume offset in points.
+    let mut carry: Option<(Vec<f32>, usize)> = None;
+    let run_start = Instant::now();
+
+    while !params.stop.load(Ordering::Acquire) {
+        if params.point_compute > 0.0 {
+            let target = params.point_compute * t as f64;
+            let actual = run_start.elapsed().as_secs_f64();
+            if target > actual {
+                std::thread::sleep(Duration::from_secs_f64(target - actual));
+            }
+        }
+
+        // Absorb ingested points into the window, oldest-slot-first, at
+        // most absorb_per_chunk points per chunk boundary — a huge batch
+        // must not stall training (the rest carries over to later chunks).
+        let mut budget = params.absorb_per_chunk;
+        loop {
+            let (batch, offset) = match carry.take() {
+                Some(pending) => pending,
+                None => match ingest_rx.try_recv() {
+                    Ok(batch) => (batch, 0),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    // Service gone: finish the loop on the stop flag.
+                    Err(mpsc::TryRecvError::Disconnected) => break,
+                },
+            };
+            let total = batch.len() / dim;
+            let take = (total - offset).min(budget);
+            for p in offset..offset + take {
+                window[write_pos * dim..(write_pos + 1) * dim]
+                    .copy_from_slice(&batch[p * dim..(p + 1) * dim]);
+                write_pos = (write_pos + 1) % window_points;
+            }
+            absorbed += take as u64;
+            budget -= take;
+            if offset + take < total {
+                carry = Some((batch, offset + take));
+            }
+            if budget == 0 {
+                break;
+            }
+        }
+
+        // One tau-point walk over the window (cyclic, like a shard).
+        fill_cyclic(&window, dim, t, &mut chunk_buf);
+        params.schedule.fill(t, &mut eps_buf);
+        engine.vq_chunk(&mut w, &chunk_buf, &eps_buf, &mut delta_window)?;
+        t += params.tau as u64;
+
+        // Fold in a completed exchange, if any (non-blocking).
+        if let Some(rx) = &in_flight {
+            match rx.try_recv() {
+                Ok((w_snap, delivered)) => {
+                    // eq. 9 rebase: shared version minus our open window.
+                    w = w_snap;
+                    w.apply_delta(&delta_window);
+                    exchanges_completed += 1;
+                    if !delivered {
+                        pushes_dropped += 1;
+                    }
+                    in_flight = None;
+                }
+                Err(mpsc::TryRecvError::Empty) => {}
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    return Err(anyhow!("exchange thread died"));
+                }
+            }
+        }
+
+        if in_flight.is_none() && t % params.points_per_exchange as u64 == 0 {
+            in_flight = Some(start_exchange(
+                "dalvq-serve-xchg",
+                params.worker_id,
+                &mut seq,
+                &mut delta_window,
+                &queue,
+                &blob,
+            ));
+        }
+    }
+
+    // Drain: complete the in-flight exchange, then flush the tail window.
+    if let Some(rx) = in_flight.take() {
+        let (w_snap, delivered) =
+            rx.recv().map_err(|_| anyhow!("exchange thread died during drain"))?;
+        w = w_snap;
+        w.apply_delta(&delta_window);
+        exchanges_completed += 1;
+        if !delivered {
+            pushes_dropped += 1;
+        }
+    }
+    if !delta_window.is_zero() {
+        let rx = start_exchange(
+            "dalvq-serve-xchg",
+            params.worker_id,
+            &mut seq,
+            &mut delta_window,
+            &queue,
+            &blob,
+        );
+        let (_w_snap, delivered) =
+            rx.recv().map_err(|_| anyhow!("flush exchange thread died"))?;
+        exchanges_completed += 1;
+        if !delivered {
+            pushes_dropped += 1;
+        }
+    }
+
+    Ok(ServeWorkerOutcome {
+        worker_id: params.worker_id,
+        points_trained: t,
+        points_absorbed: absorbed,
+        exchanges_started: seq,
+        exchanges_completed,
+        pushes_dropped,
+    })
+}
+
+/// Copy `count = out.len()/dim` consecutive points starting at step `t0`
+/// (cyclically) out of the flat window.
+fn fill_cyclic(window: &[f32], dim: usize, t0: u64, out: &mut [f32]) {
+    let n = (window.len() / dim) as u64;
+    let count = out.len() / dim;
+    for j in 0..count {
+        let i = ((t0 + j as u64) % n) as usize;
+        out[j * dim..(j + 1) * dim]
+            .copy_from_slice(&window[i * dim..(i + 1) * dim]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_cyclic_wraps_like_a_shard() {
+        let window = [0.0f32, 1.0, 2.0]; // 3 points, dim 1
+        let mut out = [0.0f32; 5];
+        fill_cyclic(&window, 1, 1, &mut out);
+        assert_eq!(out, [1.0, 2.0, 0.0, 1.0, 2.0]);
+    }
+}

@@ -4,7 +4,11 @@
 //! artifact path is the system under test.
 //!
 //! Requires `artifacts/` (run `make artifacts`); each test skips with a
-//! note when artifacts are absent so `cargo test` works pre-AOT.
+//! note when artifacts are absent so `cargo test` works pre-AOT. The whole
+//! file additionally compiles only with the `pjrt` feature — the default
+//! std-only build carries no XLA runtime to compare against.
+
+#![cfg(feature = "pjrt")]
 
 use std::path::{Path, PathBuf};
 

@@ -1,0 +1,209 @@
+//! End-to-end serving: the full stack (fleet + reducer + snapshot store +
+//! TCP server + client) in one process, on the native engine.
+//!
+//! The headline test ingests a *drifted* mixture stream and asserts the
+//! served codebook tracks it: distortion of drifted-sample queries must
+//! fall well below its pre-drift value. Assertions are poll-based with
+//! generous deadlines (the fleet runs real threads), never timing-exact.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use dalvq::config::{presets, ExperimentConfig, SchemeConfig, ServeConfig};
+use dalvq::data::MixtureSpec;
+use dalvq::serve::{Client, Server, VqService};
+use dalvq::sim::DelayModel;
+use dalvq::vq::Schedule;
+
+/// Real-time fleets; run tests one at a time (same discipline as
+/// cloud_integration.rs).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A small, fast serving deployment on the native engine.
+fn tiny_preset() -> (ExperimentConfig, ServeConfig) {
+    let mut cfg = ExperimentConfig::default();
+    cfg.m = 2;
+    cfg.data.mixture.components = 4;
+    cfg.data.mixture.dim = 2;
+    cfg.data.mixture.noise_frac = 0.0;
+    cfg.data.n_total = 4_000;
+    cfg.data.eval_points = 512;
+    cfg.vq.kappa = 4;
+    // Constant step: the serving fleet must keep tracking drift. Stay
+    // inside the delta-merge stability envelope (Schedule docs):
+    // M*window*eps/kappa = 2*50*0.02/4 = 0.5.
+    cfg.vq.schedule = Schedule::Constant { eps0: 0.02 };
+    cfg.scheme = SchemeConfig::AsyncDelta {
+        tau: 10,
+        up_delay: DelayModel::Instant,
+        down_delay: DelayModel::Instant,
+    };
+    let mut serve = ServeConfig::default();
+    serve.points_per_exchange = 50;
+    // free-running training: drift absorption in well under a second
+    serve.point_compute = 0.0;
+    (cfg, serve)
+}
+
+fn start_stack(
+    cfg: &ExperimentConfig,
+    serve: &ServeConfig,
+) -> (Arc<VqService>, Server) {
+    let service = Arc::new(VqService::start(cfg, serve).unwrap());
+    let server = Server::start(Arc::clone(&service), &serve.addr).unwrap();
+    (service, server)
+}
+
+fn stop_stack(service: Arc<VqService>, server: Server) {
+    server.shutdown().unwrap();
+    service.shutdown().unwrap();
+}
+
+/// Shift a flat point buffer by a constant offset per coordinate — a
+/// deterministic, unambiguous distribution drift.
+fn shifted(points: &[f32], offset: f32) -> Vec<f32> {
+    points.iter().map(|x| x + offset).collect()
+}
+
+/// The acceptance-criteria test: ingest a drifting mixture stream and
+/// watch queries reflect the drift.
+#[test]
+fn ingested_drift_reaches_the_query_path() {
+    let _serial = serial();
+    let (cfg, serve) = tiny_preset();
+    // The drifted world: the same mixture translated far outside the
+    // original support (centers live in [-5, 5]^2; +20 per coordinate is
+    // unambiguously elsewhere). Deterministic geometry, no seed luck.
+    const DRIFT: f32 = 20.0;
+    let drifted: MixtureSpec = cfg.data.mixture.clone();
+    let drift_eval = shifted(&drifted.eval_sample(512, cfg.seed), DRIFT);
+
+    let (service, server) = start_stack(&cfg, &serve);
+    let mut client = Client::connect(server.local_addr()).unwrap();
+
+    // Pre-drift: the codebook fits the original mixture, so the drifted
+    // sample sits ~DRIFT away from every prototype.
+    let (c_before, _v) = client.distortion(&drift_eval).unwrap();
+    assert!(
+        c_before > 100.0,
+        "drifted sample must start far from the codebook, got C = {c_before}"
+    );
+
+    // Stream drifted points in; the workers' sliding windows fill with
+    // them (2k points per worker window), so within a few window
+    // turnovers the fleet is training on the drifted world only.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut stream_t = 0u64;
+    let mut c_now = c_before;
+    while c_now > c_before * 0.1 {
+        assert!(
+            Instant::now() < deadline,
+            "drift never reached the query path: C {c_before:.4} -> {c_now:.4}"
+        );
+        for _ in 0..20 {
+            let batch =
+                shifted(&drifted.generate(128, cfg.seed, 2 + stream_t), DRIFT);
+            stream_t += 1;
+            client.ingest(&batch).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        let (c, _v) = client.distortion(&drift_eval).unwrap();
+        c_now = c;
+    }
+    // Queries answer from a published epoch, and codes are in range.
+    let (codes, version) = client.encode(&drift_eval).unwrap();
+    assert_eq!(codes.len(), 512);
+    assert!(codes.iter().all(|&c| (c as usize) < cfg.vq.kappa));
+    assert!(version > 0, "queries should see a trained epoch");
+
+    let stats = client.stats().unwrap();
+    assert!(stats.ingested > 0);
+    assert_eq!(stats.dim as usize, cfg.dim());
+    assert_eq!(stats.workers as usize, cfg.m);
+    assert!(stats.queries >= 2, "distortion queries must be counted");
+
+    stop_stack(service, server);
+}
+
+/// Nearest / encode / distortion agree with each other and with local math.
+#[test]
+fn query_surface_is_self_consistent() {
+    let _serial = serial();
+    let (cfg, serve) = tiny_preset();
+    let (service, server) = start_stack(&cfg, &serve);
+    let mut client = Client::connect(server.local_addr()).unwrap();
+
+    let pts = cfg.data.mixture.eval_sample(64, cfg.seed);
+    let (codes, _) = client.encode(&pts).unwrap();
+    let (indices, dists, _) = client.nearest(&pts).unwrap();
+    let (c_mean, _) = client.distortion(&pts).unwrap();
+    assert_eq!(codes.len(), 64);
+    // encode and nearest may answer from different epochs under live
+    // training, but each must be internally consistent
+    assert_eq!(indices.len(), 64);
+    assert_eq!(dists.len(), 64);
+    assert!(dists.iter().all(|d| d.is_finite() && *d >= 0.0));
+    assert!(c_mean.is_finite() && c_mean >= 0.0);
+    // the service's own snapshot agrees with the remote answer shape
+    let snap = service.snapshot();
+    assert_eq!(snap.codebook.kappa(), cfg.vq.kappa);
+    assert_eq!(snap.codebook.dim(), cfg.dim());
+
+    stop_stack(service, server);
+}
+
+/// Protocol-level errors: wrong dimensionality must come back as a clean
+/// error response, not a dropped connection.
+#[test]
+fn dimension_mismatch_is_a_clean_error() {
+    let _serial = serial();
+    let (cfg, serve) = tiny_preset();
+    let (service, server) = start_stack(&cfg, &serve);
+    let mut client = Client::connect(server.local_addr()).unwrap();
+
+    // dim = 2; send 3 floats
+    let err = client.encode(&[1.0, 2.0, 3.0]).unwrap_err();
+    assert!(format!("{err:#}").contains("dim"), "{err:#}");
+    // the connection survives the error
+    let (codes, _) = client.encode(&[1.0, 2.0]).unwrap();
+    assert_eq!(codes.len(), 1);
+
+    stop_stack(service, server);
+}
+
+/// The shipped `serve` preset stands up, answers, and shuts down — the
+/// exact stack `dalvq loadtest --preset serve` drives.
+#[test]
+fn serve_preset_end_to_end_with_loadgen() {
+    let _serial = serial();
+    let p = presets::serve();
+    let service = Arc::new(VqService::start(&p.base, &p.serve).unwrap());
+    let server = Server::start(Arc::clone(&service), &p.serve.addr).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let spec = dalvq::serve::LoadSpec {
+        connections: 4,
+        requests_per_conn: 50,
+        batch_points: 32,
+        ingest_frac: 0.25,
+        seed: p.base.seed,
+    };
+    let report = dalvq::serve::run_load(&addr, &spec, &p.base.data.mixture).unwrap();
+    assert_eq!(report.requests, 4 * 50);
+    assert!(report.throughput_rps > 0.0);
+    assert!(report.p50_us > 0.0 && report.p50_us <= report.p99_us);
+    assert!(report.ops.ingest > 0, "mixed workload must include ingest");
+    assert!(
+        report.ops.encode + report.ops.nearest + report.ops.distortion > 0,
+        "mixed workload must include reads"
+    );
+    assert!(!report.format().is_empty());
+
+    server.shutdown().unwrap();
+    let out = service.shutdown().unwrap();
+    assert!(out.merges > 0, "the fleet must have trained during the load run");
+}
