@@ -1,12 +1,11 @@
 //! Serving-path benchmark: an in-process `dalvq serve` stack under the
-//! load generator, swept over connection counts and workload mixes.
+//! load generator — connection/workload sweep on the single-shard preset,
+//! then the sharded-routing sweep (`S ∈ {1, 2, 4}`) under a fixed mixed
+//! ingest/query load, recording latency percentiles per shard count.
 //!
 //! ```bash
 //! cargo bench --bench serve
 //! ```
-//!
-//! Reports throughput (req/s, pts/s) and latency percentiles per
-//! configuration — the serving analogue of the cloud scale-up bench.
 
 #[path = "kit/mod.rs"]
 mod kit;
@@ -68,4 +67,43 @@ fn main() {
         out.merges,
         out.workers.iter().map(|w| w.points_trained).sum::<u64>(),
     );
+
+    // ------------------------------------------------- sharded routing
+    // Same mixed ingest/query load against S ∈ {1, 2, 4} codebook shards:
+    // the quantity the ROADMAP tracks is p99 under mixed load as the
+    // per-query scan shrinks from kappa*dim to probe_n * kappa/S * dim
+    // while S independent fleets keep training.
+    kit::section("sharded codebook routing — p99 across S (mixed load)");
+    println!(
+        "{:>6} {:>6} {:>11} {:>9} {:>9} {:>9} {:>8}",
+        "S", "probe", "req/s", "p50", "p95", "p99", "merges"
+    );
+    for shards in [1usize, 2, 4] {
+        let p = presets::serve_sharded(shards);
+        let service =
+            Arc::new(VqService::start(&p.base, &p.serve).expect("service"));
+        let server =
+            Server::start(Arc::clone(&service), &p.serve.addr).expect("server");
+        let addr = server.local_addr().to_string();
+        let spec = LoadSpec {
+            connections: 8,
+            requests_per_conn: 400,
+            batch_points: 64,
+            ingest_frac: 0.25,
+            seed: p.base.seed,
+        };
+        let report = run_load(&addr, &spec, &p.base.data.mixture).expect("load");
+        server.shutdown().expect("server shutdown");
+        let out = service.shutdown().expect("service shutdown");
+        println!(
+            "{:>6} {:>6} {:>11.0} {:>6.0} us {:>6.0} us {:>6.0} us {:>8}",
+            shards,
+            p.serve.probe_n,
+            report.throughput_rps,
+            report.p50_us,
+            report.p95_us,
+            report.p99_us,
+            out.merges,
+        );
+    }
 }

@@ -207,6 +207,17 @@ pub fn serve() -> ServePreset {
     ServePreset { base, serve }
 }
 
+/// The `serve` preset partitioned across `shards` codebook shards: each
+/// shard runs its own independent fleet over `kappa / shards` prototypes,
+/// queries multi-probe the 2 nearest shards (1 when there is only one).
+/// `shards` must divide the preset's `kappa` (8).
+pub fn serve_sharded(shards: usize) -> ServePreset {
+    let mut p = serve();
+    p.serve.shards = shards;
+    p.serve.probe_n = 2.min(shards.max(1));
+    p
+}
+
 /// Quickstart: tiny 2-D problem on the PJRT engine (the `k8d2` artifacts).
 pub fn quickstart() -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default();
@@ -262,5 +273,17 @@ mod tests {
         // serving must track drift: the schedule must not decay to zero
         assert!(matches!(p.base.vq.schedule, crate::vq::Schedule::Constant { .. }));
         assert!(matches!(p.base.scheme, SchemeConfig::AsyncDelta { .. }));
+    }
+
+    #[test]
+    fn sharded_serve_presets_validate() {
+        for s in [1, 2, 4, 8] {
+            let p = serve_sharded(s);
+            p.validate().unwrap_or_else(|e| panic!("shards={s}: {e}"));
+            assert_eq!(p.serve.shards, s);
+            assert!(p.serve.probe_n >= 1 && p.serve.probe_n <= s);
+        }
+        // 3 does not divide kappa = 8
+        assert!(serve_sharded(3).validate().is_err());
     }
 }

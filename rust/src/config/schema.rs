@@ -143,6 +143,19 @@ impl Default for CloudConfig {
 pub struct ServeConfig {
     /// Bind address for the TCP front-end (`:0` = ephemeral port).
     pub addr: String,
+    /// Codebook shards `S`: the prototype space is partitioned across this
+    /// many independent fleets behind a coarse quantizer (1 = the single-
+    /// fleet deployment). `kappa` must divide evenly into `shards`.
+    pub shards: usize,
+    /// Shards probed per query point (multi-probe): the `probe_n` nearest
+    /// coarse cells are scanned, recovering nearest/distortion correctness
+    /// near shard boundaries. Must be in `1..=shards`.
+    pub probe_n: usize,
+    /// Bootstrap sample size for the coarse quantizer's k-means pass
+    /// (capped at the dataset size).
+    pub router_sample: usize,
+    /// Lloyd iterations of the coarse quantizer's k-means pass.
+    pub router_iters: usize,
     /// Points each worker trains between exchange attempts (multiple of tau).
     pub points_per_exchange: usize,
     /// Publish a query snapshot every this many reducer folds (1 = every
@@ -162,12 +175,28 @@ pub struct ServeConfig {
     pub latency_jitter: f64,
     /// Probability a delta upload is dropped (fault injection).
     pub drop_prob: f64,
+    /// Start the training fleet paused; [`crate::serve::VqService::resume`]
+    /// releases it. Lets a caller preload the ingest queues before any
+    /// training happens (the determinism suite depends on this).
+    pub start_paused: bool,
+    /// Synchronous exchanges: each worker blocks until the reducer has
+    /// folded its delta before training on. Deterministic per seed with
+    /// one worker per shard; incompatible with `drop_prob > 0`.
+    pub sync_exchange: bool,
+    /// Stop each worker after training this many points (0 = open-ended).
+    /// Bounded training makes a run's endpoint a function of the config
+    /// rather than of shutdown timing.
+    pub max_points_per_worker: u64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
         Self {
             addr: "127.0.0.1:0".into(),
+            shards: 1,
+            probe_n: 1,
+            router_sample: 4_096,
+            router_iters: 8,
             points_per_exchange: 100,
             publish_every: 1,
             ingest_queue: 64,
@@ -176,6 +205,9 @@ impl Default for ServeConfig {
             service_latency: 0.0,
             latency_jitter: 0.0,
             drop_prob: 0.0,
+            start_paused: false,
+            sync_exchange: false,
+            max_points_per_worker: 0,
         }
     }
 }
@@ -186,6 +218,41 @@ impl ServeConfig {
         let mut errs: Vec<String> = Vec::new();
         if self.addr.is_empty() {
             errs.push("addr must be a host:port bind address".into());
+        }
+        if self.shards == 0 {
+            errs.push("shards must be >= 1".into());
+        } else {
+            if base.vq.kappa % self.shards != 0 {
+                errs.push(format!(
+                    "kappa = {} must divide evenly across shards = {}",
+                    base.vq.kappa, self.shards
+                ));
+            }
+            if !(1..=self.shards).contains(&self.probe_n) {
+                errs.push(format!(
+                    "probe_n = {} must be in 1..={} (the shard count)",
+                    self.probe_n, self.shards
+                ));
+            }
+            if self.router_sample < self.shards {
+                errs.push(format!(
+                    "router_sample = {} cannot seed {} coarse centroids",
+                    self.router_sample, self.shards
+                ));
+            }
+            if base.data.n_total < self.shards * base.m.max(1) {
+                errs.push(format!(
+                    "n_total = {} cannot bootstrap {} shards x {} workers",
+                    base.data.n_total, self.shards, base.m
+                ));
+            }
+        }
+        if self.sync_exchange && self.drop_prob > 0.0 {
+            errs.push(
+                "sync_exchange waits for every delta to fold; \
+                 drop_prob must be 0"
+                    .into(),
+            );
         }
         let tau = base.scheme.tau();
         if self.points_per_exchange == 0
@@ -704,6 +771,42 @@ mod tests {
         assert!(msg.contains("publish_every"), "{msg}");
         assert!(msg.contains("drop_prob"), "{msg}");
         assert!(msg.contains("addr"), "{msg}");
+    }
+
+    #[test]
+    fn serve_sharding_is_validated() {
+        let base = ExperimentConfig::default(); // kappa = 16
+
+        let mut s = ServeConfig::default();
+        s.shards = 4;
+        s.probe_n = 2;
+        s.validate(&base).unwrap();
+
+        // kappa must divide across shards
+        let mut s = ServeConfig::default();
+        s.shards = 3;
+        assert!(s.validate(&base).is_err());
+
+        // probe width bounded by the shard count
+        let mut s = ServeConfig::default();
+        s.shards = 4;
+        s.probe_n = 5;
+        assert!(s.validate(&base).is_err());
+        s.probe_n = 0;
+        assert!(s.validate(&base).is_err());
+
+        // zero shards is rejected outright
+        let mut s = ServeConfig::default();
+        s.shards = 0;
+        assert!(s.validate(&base).is_err());
+
+        // sync exchanges wait on folds: lossy transport cannot be combined
+        let mut s = ServeConfig::default();
+        s.sync_exchange = true;
+        s.drop_prob = 0.1;
+        assert!(s.validate(&base).is_err());
+        s.drop_prob = 0.0;
+        s.validate(&base).unwrap();
     }
 
     #[test]

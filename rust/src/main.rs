@@ -73,6 +73,10 @@ OPTIONS (serve):
   --preset <serve>           deployment preset [default: serve]
   --addr <HOST:PORT>         bind address [default: 127.0.0.1:0]
   --duration <SECS>          serve for N seconds then exit [default: forever]
+  --shards <S>               codebook shards behind the coarse-quantizer
+                             router (kappa must divide by S) [default: 1]
+  --probe <N>                shards probed per query point
+                             [default: min(2, S)]
 
 OPTIONS (loadtest):
   --preset <serve>           preset for the in-process service + workload
@@ -81,6 +85,8 @@ OPTIONS (loadtest):
   --requests <N>             requests per connection [default: 200]
   --batch <N>                points per request [default: 64]
   --ingest-frac <F>          fraction of ingest requests [default: 0.25]
+  --shards <S>               shard the in-process service [default: 1]
+  --probe <N>                shards probed per query [default: min(2, S)]
 
 GLOBAL OPTIONS:
   --out-dir <DIR>            write CSV/JSON reports here
@@ -272,19 +278,25 @@ fn run() -> Result<()> {
             let preset = args.take_value("--preset")?.unwrap_or_else(|| "serve".into());
             let addr = args.take_value("--addr")?;
             let duration = parse_opt_u64(&mut args, "--duration")?;
+            let shards = parse_opt_u64(&mut args, "--shards")?;
+            let probe = parse_opt_u64(&mut args, "--probe")?;
             args.finish()?;
             let mut p = serve_preset(&preset)?;
+            apply_sharding(&mut p, shards, probe);
             if let Some(a) = addr {
                 p.serve.addr = a;
             }
             let service = Arc::new(VqService::start(&p.base, &p.serve)?);
             let server = Server::start(Arc::clone(&service), &p.serve.addr)?;
             println!(
-                "dalvq serve: listening on {} (M={}, kappa={}, dim={})",
+                "dalvq serve: listening on {} (M={}x{} shards, kappa={}, \
+                 dim={}, probe={})",
                 server.local_addr(),
                 p.base.m,
+                p.serve.shards,
                 p.base.vq.kappa,
                 p.base.dim(),
+                p.serve.probe_n,
             );
             match duration {
                 Some(secs) => {
@@ -326,8 +338,11 @@ fn run() -> Result<()> {
                     .parse::<f64>()
                     .map_err(|_| anyhow!("--ingest-frac expects a number, got {f:?}"))?;
             }
+            let shards = parse_opt_u64(&mut args, "--shards")?;
+            let probe = parse_opt_u64(&mut args, "--probe")?;
             args.finish()?;
-            let p = serve_preset(&preset)?;
+            let mut p = serve_preset(&preset)?;
+            apply_sharding(&mut p, shards, probe);
             spec.seed = p.base.seed;
             let report = match addr {
                 // Drive an externally running service.
@@ -387,6 +402,20 @@ fn serve_preset(name: &str) -> Result<ServePreset> {
     match name {
         "serve" => Ok(presets::serve()),
         other => bail!("unknown serve preset {other:?} (want serve)"),
+    }
+}
+
+/// Apply `--shards` / `--probe` over a serve preset: `--shards` alone
+/// defaults the probe width to `min(2, S)`; `--probe` alone adjusts the
+/// preset's existing shard count.
+fn apply_sharding(p: &mut ServePreset, shards: Option<u64>, probe: Option<u64>) {
+    if let Some(s) = shards {
+        let s = s as usize;
+        p.serve.shards = s;
+        p.serve.probe_n = 2.min(s.max(1));
+    }
+    if let Some(n) = probe {
+        p.serve.probe_n = n as usize;
     }
 }
 

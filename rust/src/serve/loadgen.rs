@@ -127,28 +127,12 @@ pub fn run_load(addr: &str, spec: &LoadSpec, mixture: &MixtureSpec) -> Result<Lo
     let wall_secs = run_start.elapsed().as_secs_f64().max(1e-9);
     let requests = latencies_ns.len() as u64;
     latencies_ns.sort_unstable();
-    let pct = |q: f64| -> f64 {
-        if latencies_ns.is_empty() {
-            return f64::NAN;
-        }
-        let idx = ((latencies_ns.len() - 1) as f64 * q).round() as usize;
-        latencies_ns[idx] as f64 / 1e3
-    };
 
-    // Throughput curve: completions per 100 ms bucket.
-    stamps.sort_unstable_by(f64::total_cmp);
-    let bucket = 0.1f64;
-    let mut series = Series::new(format!("rps (conns={})", spec.connections));
-    if let Some(&last) = stamps.last() {
-        let buckets = (last / bucket).floor() as usize + 1;
-        let mut counts = vec![0u64; buckets];
-        for &s in &stamps {
-            counts[(s / bucket).floor() as usize] += 1;
-        }
-        for (i, n) in counts.iter().enumerate() {
-            series.push((i as f64 + 1.0) * bucket, *n as f64 / bucket);
-        }
-    }
+    let mut series = throughput_series(
+        &mut stamps,
+        0.1, // completions per 100 ms bucket
+        format!("rps (conns={})", spec.connections),
+    );
     series.points_processed = requests * spec.batch_points as u64;
 
     Ok(LoadReport {
@@ -159,12 +143,43 @@ pub fn run_load(addr: &str, spec: &LoadSpec, mixture: &MixtureSpec) -> Result<Lo
         wall_secs,
         throughput_rps: requests as f64 / wall_secs,
         points_per_sec: (requests * spec.batch_points as u64) as f64 / wall_secs,
-        p50_us: pct(0.50),
-        p95_us: pct(0.95),
-        p99_us: pct(0.99),
-        max_us: pct(1.0),
+        p50_us: percentile_us(&latencies_ns, 0.50),
+        p95_us: percentile_us(&latencies_ns, 0.95),
+        p99_us: percentile_us(&latencies_ns, 0.99),
+        max_us: percentile_us(&latencies_ns, 1.0),
         series,
     })
+}
+
+/// Latency percentile, microseconds, by nearest-rank on a **sorted**
+/// nanosecond series: index `round((len - 1) * q)`. An empty window is a
+/// defined `NaN` (there is no latency to report), a single sample answers
+/// every quantile.
+fn percentile_us(sorted_ns: &[u64], q: f64) -> f64 {
+    if sorted_ns.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted_ns.len() - 1) as f64 * q).round() as usize;
+    sorted_ns[idx] as f64 / 1e3
+}
+
+/// Throughput curve: completion stamps (seconds) bucketed at `bucket`
+/// seconds, each sample converted to a rate. Sorts `stamps` in place; an
+/// empty window yields an empty series.
+fn throughput_series(stamps: &mut [f64], bucket: f64, name: String) -> Series {
+    stamps.sort_unstable_by(f64::total_cmp);
+    let mut series = Series::new(name);
+    if let Some(&last) = stamps.last() {
+        let buckets = (last / bucket).floor() as usize + 1;
+        let mut counts = vec![0u64; buckets];
+        for &s in stamps.iter() {
+            counts[(s / bucket).floor() as usize] += 1;
+        }
+        for (i, n) in counts.iter().enumerate() {
+            series.push((i as f64 + 1.0) * bucket, *n as f64 / bucket);
+        }
+    }
+    series
 }
 
 struct ConnOutcome {
@@ -287,6 +302,67 @@ impl LoadReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn percentiles_are_exact_on_known_series() {
+        // 1..=100 us in nanoseconds: nearest-rank lands exactly.
+        let series: Vec<u64> = (1..=100).map(|i| i * 1_000).collect();
+        assert_eq!(percentile_us(&series, 0.0), 1.0); // min
+        // idx = round(99 * 0.5) = 50 -> 51st sample
+        assert_eq!(percentile_us(&series, 0.50), 51.0);
+        // idx = round(99 * 0.99) = 98 -> 99th sample
+        assert_eq!(percentile_us(&series, 0.99), 99.0);
+        assert_eq!(percentile_us(&series, 1.0), 100.0); // max
+    }
+
+    #[test]
+    fn percentiles_on_a_two_point_distribution() {
+        // 90 fast requests at 100 us, 10 slow at 10_000 us: p50 must sit
+        // in the fast mode, p99 in the slow tail.
+        let mut series: Vec<u64> = std::iter::repeat(100_000)
+            .take(90)
+            .chain(std::iter::repeat(10_000_000).take(10))
+            .collect();
+        series.sort_unstable();
+        assert_eq!(percentile_us(&series, 0.50), 100.0);
+        assert_eq!(percentile_us(&series, 0.99), 10_000.0);
+        // monotone in q
+        let qs = [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0];
+        for w in qs.windows(2) {
+            assert!(percentile_us(&series, w[0]) <= percentile_us(&series, w[1]));
+        }
+    }
+
+    #[test]
+    fn percentile_single_sample_answers_every_quantile() {
+        let series = [42_000u64];
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile_us(&series, q), 42.0);
+        }
+    }
+
+    #[test]
+    fn percentile_empty_window_is_nan_not_panic() {
+        for q in [0.0, 0.5, 1.0] {
+            assert!(percentile_us(&[], q).is_nan());
+        }
+    }
+
+    #[test]
+    fn throughput_series_buckets_completions() {
+        // 3 completions in [0, 0.1), 1 in [0.2, 0.3) — out of order on
+        // purpose (the helper sorts).
+        let mut stamps = vec![0.25, 0.01, 0.05, 0.09];
+        let s = throughput_series(&mut stamps, 0.1, "rps".into());
+        let ys: Vec<f64> = s.samples.iter().map(|p| p.value).collect();
+        assert_eq!(ys, vec![30.0, 0.0, 10.0]);
+    }
+
+    #[test]
+    fn throughput_series_empty_window_is_empty() {
+        let s = throughput_series(&mut [], 0.1, "rps".into());
+        assert!(s.samples.is_empty());
+    }
 
     #[test]
     fn spec_validation() {

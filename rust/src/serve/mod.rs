@@ -6,17 +6,24 @@
 //! keeping that shared version usable while it is being updated. This
 //! subsystem is that story as a service:
 //!
-//! * **Write path** — a sharded worker fleet ([`run_serve_worker`]) keeps
-//!   learning via the async-delta protocol on the [`crate::cloud`]
+//! * **Sharded codebook** — the prototype space is partitioned across `S`
+//!   independent fleets by a coarse-quantizer [`Router`] (trained by a
+//!   short k-means pass, then frozen). Shards never synchronize — Patra's
+//!   asynchronous-LVQ analysis applies per shard — and per-query distance
+//!   work drops to `probe_n * kappa/S * dim`.
+//! * **Write path** — each shard's worker fleet ([`run_serve_worker`])
+//!   keeps learning via the async-delta protocol on the [`crate::cloud`]
 //!   substrate (queue + blob + dedicated reducer), fed by client
-//!   ingestion; each worker's local corpus is a sliding window, so a
-//!   drifting input distribution is tracked, not averaged away.
-//! * **Publication** — the reducer epoch-swaps immutable
-//!   [`Snapshot`]s into a [`SnapshotStore`]; readers clone an `Arc`,
+//!   ingestion routed to the owning shard; each worker's local corpus is
+//!   a sliding window, so a drifting input distribution is tracked, not
+//!   averaged away.
+//! * **Publication** — each shard's reducer epoch-swaps immutable
+//!   [`Snapshot`]s into its [`SnapshotStore`]; readers clone an `Arc`,
 //!   never blocking the fold loop.
-//! * **Read path** — **encode** (quantize to prototype codes),
+//! * **Read path** — **encode** (quantize to global prototype codes),
 //!   **nearest** (centroid lookup with distances) and **distortion**
-//!   (batch criterion, paper eq. 2) against the current epoch.
+//!   (batch criterion, paper eq. 2), multi-probing the `probe_n` nearest
+//!   shards so answers stay correct near shard boundaries.
 //! * **Front-end** — a `std::net` TCP [`Server`] speaking a
 //!   length-prefixed binary [`protocol`], an in-crate [`Client`], and a
 //!   load generator ([`run_load`]) that measures throughput and latency
@@ -28,6 +35,7 @@
 mod client;
 mod loadgen;
 pub mod protocol;
+mod router;
 mod server;
 mod service;
 mod snapshot;
@@ -35,7 +43,10 @@ mod worker;
 
 pub use client::Client;
 pub use loadgen::{run_load, LoadReport, LoadSpec, OpCounts};
+pub use router::Router;
 pub use server::Server;
-pub use service::{ServeCounters, ServeOutcome, ServeStats, VqService};
+pub use service::{
+    ServeCounters, ServeOutcome, ServeStats, ShardOutcome, VqService,
+};
 pub use snapshot::{Snapshot, SnapshotStore};
 pub use worker::{run_serve_worker, ServeWorkerOutcome, ServeWorkerParams};

@@ -44,17 +44,29 @@ pub enum Response {
     Error { message: String },
 }
 
-/// The `Stats` payload: shape + live counters of the service.
-#[derive(Debug, Clone, Copy, PartialEq, Default)]
+/// The `Stats` payload: shape + live counters of the service, including
+/// the sharded-routing topology (`shards`, `probe_n`) and per-shard
+/// version/fold vectors. Requests are unchanged — an old client's `Stats`
+/// request still decodes; only this reply grew fields.
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct StatsReply {
+    /// Sum of per-shard snapshot versions.
     pub version: u64,
+    /// Total prototypes across shards.
     pub kappa: u64,
     pub dim: u64,
+    /// Total workers across shards.
     pub workers: u64,
+    pub shards: u64,
+    pub probe_n: u64,
     pub merges: u64,
     pub ingested: u64,
     pub ingest_shed: u64,
     pub queries: u64,
+    /// Published snapshot version per shard, shard order.
+    pub shard_versions: Vec<u64>,
+    /// Reducer fold count per shard, shard order.
+    pub shard_merges: Vec<u64>,
 }
 
 // ------------------------------------------------------------ frame I/O
@@ -72,14 +84,21 @@ pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
     Ok(())
 }
 
-/// Read one length-prefixed frame. `Ok(None)` on clean EOF at a frame
-/// boundary (the peer hung up between requests).
+/// Read one length-prefixed frame. `Ok(None)` on clean EOF **at a frame
+/// boundary** (the peer hung up between requests); EOF anywhere inside a
+/// frame — mid-header or mid-payload — is an error, so a dying peer is
+/// never mistaken for a clean hang-up.
 pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
     let mut len_buf = [0u8; 4];
-    match r.read_exact(&mut len_buf) {
-        Ok(()) => {}
-        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
-        Err(e) => return Err(e.into()),
+    let mut filled = 0usize;
+    while filled < 4 {
+        match r.read(&mut len_buf[filled..]) {
+            Ok(0) if filled == 0 => return Ok(None),
+            Ok(0) => bail!("EOF after {filled} bytes of a 4-byte frame header"),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
     }
     let len = u32::from_le_bytes(len_buf);
     if len > MAX_FRAME {
@@ -113,6 +132,13 @@ fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
 }
 
 fn put_u32s(out: &mut Vec<u8>, xs: &[u32]) {
+    out.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_u64s(out: &mut Vec<u8>, xs: &[u64]) {
     out.extend_from_slice(&(xs.len() as u32).to_le_bytes());
     for x in xs {
         out.extend_from_slice(&x.to_le_bytes());
@@ -172,6 +198,18 @@ impl<'a> Cursor<'a> {
         Ok(raw
             .chunks_exact(4)
             .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.u32()? as usize;
+        // Bounds-check before allocating: a lying element count must not
+        // become a huge Vec (same discipline as f32s/u32s — `bytes` fails
+        // first, so allocation is proportional to real payload only).
+        let raw = self.bytes(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
             .collect())
     }
 
@@ -252,11 +290,13 @@ impl Response {
             Response::Stats(s) => {
                 out.push(OP_STATS_R);
                 for field in [
-                    s.version, s.kappa, s.dim, s.workers, s.merges, s.ingested,
-                    s.ingest_shed, s.queries,
+                    s.version, s.kappa, s.dim, s.workers, s.shards, s.probe_n,
+                    s.merges, s.ingested, s.ingest_shed, s.queries,
                 ] {
                     out.extend_from_slice(&field.to_le_bytes());
                 }
+                put_u64s(&mut out, &s.shard_versions);
+                put_u64s(&mut out, &s.shard_merges);
             }
             Response::Error { message } => {
                 out.push(OP_ERROR);
@@ -288,10 +328,14 @@ impl Response {
                 kappa: c.u64()?,
                 dim: c.u64()?,
                 workers: c.u64()?,
+                shards: c.u64()?,
+                probe_n: c.u64()?,
                 merges: c.u64()?,
                 ingested: c.u64()?,
                 ingest_shed: c.u64()?,
                 queries: c.u64()?,
+                shard_versions: c.u64s()?,
+                shard_merges: c.u64s()?,
             }),
             OP_ERROR => {
                 let n = c.u32()? as usize;
@@ -343,11 +387,16 @@ mod tests {
             kappa: 16,
             dim: 4,
             workers: 8,
+            shards: 4,
+            probe_n: 2,
             merges: 5,
             ingested: 1024,
             ingest_shed: 0,
             queries: 33,
+            shard_versions: vec![1, 2, 1, 1],
+            shard_merges: vec![2, 2, 1, 1],
         }));
+        round_trip_resp(Response::Stats(StatsReply::default()));
         round_trip_resp(Response::Error { message: "bad dim".into() });
     }
 

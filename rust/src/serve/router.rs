@@ -1,0 +1,216 @@
+//! The coarse quantizer that partitions the prototype space across shards.
+//!
+//! Patra's convergence analysis of distributed asynchronous LVQ justifies
+//! running each shard's fleet without cross-shard synchronization; the
+//! router is the only piece that ever sees all shards at once. It is a
+//! tiny codebook of `S` coarse centroids, trained once at service start by
+//! a short k-means pass over a bootstrap sample, and then frozen:
+//!
+//! * **ingest** routes every point to the shard owning its coarse cell, so
+//!   each fleet trains `kappa/S` prototypes on its own region of the input
+//!   space and per-query distance work drops from `kappa*dim` to
+//!   `probe_n * kappa/S * dim`;
+//! * **queries** multi-probe the `probe_n` nearest coarse cells (SOM-style
+//!   coarse-to-fine search), which recovers nearest/distortion correctness
+//!   for points near shard boundaries without scanning every shard.
+//!
+//! The router is deterministic in the seed — two services built from the
+//! same config partition identically, which the determinism suite pins.
+
+use crate::vq::{self, Codebook, InitMethod};
+
+/// A frozen coarse quantizer over `S` shards.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Router {
+    coarse: Codebook,
+}
+
+impl Router {
+    /// Train a coarse quantizer: k-means++ seeding plus a short Lloyd
+    /// pass (`iters` full-batch steps) over `sample` (flat row-major).
+    /// Deterministic in `seed`. With `shards == 1` the single centroid is
+    /// the sample mean and every point routes to shard 0.
+    pub fn train(
+        sample: &[f32],
+        dim: usize,
+        shards: usize,
+        iters: usize,
+        seed: u64,
+    ) -> Router {
+        assert!(shards >= 1, "router needs at least one shard");
+        assert!(
+            sample.len() / dim >= shards,
+            "bootstrap sample smaller than shard count"
+        );
+        let mut coarse =
+            vq::init_codebook(InitMethod::KmeansPlusPlus, shards, dim, sample, seed);
+        // Short Lloyd pass, same math as the batch baseline's kmeans_step;
+        // an empty cell keeps its seeding centroid (k-means++ makes that
+        // rare, and a frozen slightly-off centroid only costs probe work).
+        let mut sums = vec![0.0f64; shards * dim];
+        let mut counts = vec![0u64; shards];
+        for _ in 0..iters {
+            sums.iter_mut().for_each(|s| *s = 0.0);
+            counts.iter_mut().for_each(|c| *c = 0);
+            for z in sample.chunks_exact(dim) {
+                let a = vq::nearest(&coarse, z);
+                counts[a] += 1;
+                for k in 0..dim {
+                    sums[a * dim + k] += z[k] as f64;
+                }
+            }
+            for i in 0..shards {
+                if counts[i] > 0 {
+                    let inv = 1.0 / counts[i] as f64;
+                    let row = coarse.row_mut(i);
+                    for k in 0..dim {
+                        row[k] = (sums[i * dim + k] * inv) as f32;
+                    }
+                }
+            }
+        }
+        Router { coarse }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.coarse.kappa()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.coarse.dim()
+    }
+
+    /// The coarse centroids (diagnostics / docs diagrams).
+    pub fn centroids(&self) -> &Codebook {
+        &self.coarse
+    }
+
+    /// The shard owning `point` (nearest coarse centroid, first-minimum
+    /// tie break — identical to the fine quantizer's).
+    pub fn route(&self, point: &[f32]) -> usize {
+        vq::nearest(&self.coarse, point)
+    }
+
+    /// The `probe_n` shards nearest to `point`, nearest first, written
+    /// into `out` (cleared). `probe_n` is clamped to the shard count.
+    pub fn probe_into(&self, point: &[f32], probe_n: usize, out: &mut Vec<usize>) {
+        let s = self.shards();
+        let n = probe_n.clamp(1, s);
+        out.clear();
+        if s == 1 {
+            out.push(0);
+            return;
+        }
+        let mut dists: Vec<(f32, usize)> = (0..s)
+            .map(|i| (vq::row_dist_sq(self.coarse.row(i), point), i))
+            .collect();
+        // Selection of the n smallest — S is small (single digits), so a
+        // partial selection sort beats anything fancier.
+        for j in 0..n {
+            let mut best = j;
+            for k in (j + 1)..s {
+                if dists[k].0 < dists[best].0
+                    || (dists[k].0 == dists[best].0 && dists[k].1 < dists[best].1)
+                {
+                    best = k;
+                }
+            }
+            dists.swap(j, best);
+            out.push(dists[j].1);
+        }
+    }
+
+    /// Partition flat row-major `points` into one flat buffer per shard,
+    /// preserving input order within each shard (stable — determinism of
+    /// downstream worker sharding depends on it).
+    pub fn partition(&self, points: &[f32]) -> Vec<Vec<f32>> {
+        let dim = self.dim();
+        let mut parts: Vec<Vec<f32>> = vec![Vec::new(); self.shards()];
+        for z in points.chunks_exact(dim) {
+            parts[self.route(z)].extend_from_slice(z);
+        }
+        parts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two tight clusters far apart, dim 1.
+    fn two_clusters() -> Vec<f32> {
+        let mut pts = Vec::new();
+        for i in 0..64 {
+            pts.push((i % 8) as f32 * 0.01);
+            pts.push(100.0 + (i % 8) as f32 * 0.01);
+        }
+        pts
+    }
+
+    #[test]
+    fn train_is_seed_deterministic() {
+        let pts = two_clusters();
+        let a = Router::train(&pts, 1, 2, 8, 42);
+        let b = Router::train(&pts, 1, 2, 8, 42);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn routes_separate_clusters_to_separate_shards() {
+        let pts = two_clusters();
+        let r = Router::train(&pts, 1, 2, 8, 7);
+        assert_ne!(r.route(&[0.0]), r.route(&[100.0]));
+        let parts = r.partition(&pts);
+        assert_eq!(parts.len(), 2);
+        // every point lands in exactly one shard
+        assert_eq!(parts[0].len() + parts[1].len(), pts.len());
+        // and each shard's buffer is pure (one cluster only)
+        for part in &parts {
+            let near_zero = part.iter().filter(|x| **x < 50.0).count();
+            assert!(near_zero == 0 || near_zero == part.len());
+        }
+    }
+
+    #[test]
+    fn single_shard_router_is_trivial() {
+        let pts = two_clusters();
+        let r = Router::train(&pts, 1, 1, 4, 3);
+        assert_eq!(r.shards(), 1);
+        assert_eq!(r.route(&[-1e6]), 0);
+        let mut probes = Vec::new();
+        r.probe_into(&[55.0], 4, &mut probes);
+        assert_eq!(probes, vec![0]);
+    }
+
+    #[test]
+    fn probe_orders_shards_by_distance_and_clamps() {
+        let pts = two_clusters();
+        let r = Router::train(&pts, 1, 2, 8, 9);
+        let near0 = r.route(&[0.0]);
+        let near100 = r.route(&[100.0]);
+        let mut probes = Vec::new();
+        r.probe_into(&[1.0], 2, &mut probes);
+        assert_eq!(probes, vec![near0, near100]);
+        r.probe_into(&[99.0], 1, &mut probes);
+        assert_eq!(probes, vec![near100]);
+        // probe_n past the shard count clamps to a full scan
+        r.probe_into(&[1.0], 100, &mut probes);
+        assert_eq!(probes.len(), 2);
+        // probe_n == 0 clamps up to 1
+        r.probe_into(&[1.0], 0, &mut probes);
+        assert_eq!(probes, vec![near0]);
+    }
+
+    #[test]
+    fn partition_is_stable_within_a_shard() {
+        // dim 1, interleaved clusters; within-shard order must follow
+        // input order
+        let pts = [0.0f32, 100.0, 1.0, 101.0, 2.0, 102.0];
+        let r = Router::train(&two_clusters(), 1, 2, 8, 11);
+        let parts = r.partition(&pts);
+        let lo = &parts[r.route(&[0.0])];
+        let hi = &parts[r.route(&[100.0])];
+        assert_eq!(lo[..], [0.0, 1.0, 2.0]);
+        assert_eq!(hi[..], [100.0, 101.0, 102.0]);
+    }
+}

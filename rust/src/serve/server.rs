@@ -99,7 +99,8 @@ fn serve_connection(stream: TcpStream, service: &VqService) -> Result<()> {
     Ok(())
 }
 
-/// Dispatch one request against the current snapshot epoch.
+/// Dispatch one request through the service's routed query/ingest surface
+/// (multi-probe over the shard fleets happens inside [`VqService`]).
 fn handle(service: &VqService, req: Request) -> Response {
     let dim = service.dim();
     let check = |points: &[f32]| -> Option<Response> {
@@ -126,28 +127,24 @@ fn handle(service: &VqService, req: Request) -> Response {
                 return err;
             }
             count_query();
-            let snap = service.snapshot();
-            Response::Codes { version: snap.version, codes: snap.encode(&points) }
+            let (version, codes) = service.query_encode(&points);
+            Response::Codes { version, codes }
         }
         Request::Nearest { points } => {
             if let Some(err) = check(&points) {
                 return err;
             }
             count_query();
-            let snap = service.snapshot();
-            let (indices, dists) = snap.nearest(&points);
-            Response::Neighbors { version: snap.version, indices, dists }
+            let (version, indices, dists) = service.query_nearest(&points);
+            Response::Neighbors { version, indices, dists }
         }
         Request::Distortion { points } => {
             if let Some(err) = check(&points) {
                 return err;
             }
             count_query();
-            let snap = service.snapshot();
-            Response::Distortion {
-                version: snap.version,
-                value: snap.distortion(&points),
-            }
+            let (version, value) = service.query_distortion(&points);
+            Response::Distortion { version, value }
         }
         Request::Ingest { points } => match service.ingest(&points) {
             Ok((accepted, shed)) => Response::IngestAck { accepted, shed },
@@ -160,10 +157,14 @@ fn handle(service: &VqService, req: Request) -> Response {
                 kappa: s.kappa as u64,
                 dim: s.dim as u64,
                 workers: s.workers as u64,
+                shards: s.shards as u64,
+                probe_n: s.probe_n as u64,
                 merges: s.merges,
                 ingested: s.ingested,
                 ingest_shed: s.ingest_shed,
                 queries: s.queries,
+                shard_versions: s.shard_versions,
+                shard_merges: s.shard_merges,
             })
         }
     }

@@ -1,13 +1,18 @@
-//! The in-process service: a serving fleet (workers + queue + blob +
-//! reducer) glued to a [`SnapshotStore`] read path.
+//! The in-process service: `S` independent shard fleets (workers + queue +
+//! blob + reducer + [`SnapshotStore`]) behind a coarse-quantizer
+//! [`Router`].
 //!
-//! Training topology is exactly the cloud runtime's (eq. 9 / CloudDALVQ):
-//! `M` worker threads exchange displacements through the queue and blob
-//! services without barriers, and a dedicated reducer folds whatever
-//! arrives next. The one addition is the *publication* step: every
-//! `publish_every` folds the reducer epoch-swaps an immutable snapshot
-//! into the store, which is where every query is answered — so reads never
-//! contend with training beyond an `Arc` clone.
+//! Training topology per shard is exactly the cloud runtime's (eq. 9 /
+//! CloudDALVQ): `M` worker threads exchange displacements through the
+//! shard's queue and blob services without barriers, and a dedicated
+//! reducer folds whatever arrives next, epoch-swapping immutable snapshots
+//! into the shard's store. Shards never synchronize with each other —
+//! Patra's asynchronous-LVQ analysis holds per shard, and the router is
+//! the only cross-shard structure (frozen after its bootstrap k-means
+//! pass). Queries multi-probe the `probe_n` nearest shards; ingest routes
+//! every point to its owning shard's workers. With `shards = 1` the
+//! service collapses to the original single-fleet deployment, bit-for-bit
+//! (same seeds, same data order).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Barrier, Mutex};
@@ -19,50 +24,77 @@ use crate::cloud::{
     BlobHandle, BlobService, DeltaMsg, LatencyInjector, QueueService,
 };
 use crate::config::{ExperimentConfig, ServeConfig};
+use crate::data::Dataset;
 use crate::vq::{init_codebook, Codebook};
 
+use super::router::Router;
 use super::snapshot::{Snapshot, SnapshotStore};
 use super::worker::{run_serve_worker, ServeWorkerOutcome, ServeWorkerParams};
 
-/// Live counters, shared between the fleet and the front-end.
+/// Live counters, shared between the fleets and the front-end.
 #[derive(Debug, Default)]
 pub struct ServeCounters {
-    /// Ingested points accepted into worker queues.
+    /// Ingested points accepted into worker queues (all shards).
     pub ingested: AtomicU64,
     /// Ingested points shed because a worker's queue was full.
     pub ingest_shed: AtomicU64,
     /// Queries answered (all read ops; maintained by the front-end).
     pub queries: AtomicU64,
-    /// Deltas folded by the reducer (may run ahead of the published
-    /// snapshot version when `publish_every > 1`).
+    /// Deltas folded across every shard's reducer (may run ahead of the
+    /// published snapshot versions when `publish_every > 1`).
     pub merges: AtomicU64,
 }
 
 /// A point-in-time view of [`ServeCounters`] plus service shape.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServeStats {
+    /// Sum of per-shard snapshot versions (monotone; the global freshness
+    /// clock of the service).
     pub version: u64,
+    /// Total prototypes across all shards.
     pub kappa: usize,
     pub dim: usize,
+    /// Total workers across all shards.
     pub workers: usize,
-    /// Reducer folds to date (>= version; they differ when the reducer
-    /// publishes every `publish_every` folds).
+    pub shards: usize,
+    pub probe_n: usize,
+    /// Reducer folds to date, all shards (>= version; they differ when
+    /// reducers publish every `publish_every` folds).
     pub merges: u64,
     pub ingested: u64,
     pub ingest_shed: u64,
     pub queries: u64,
+    /// Published snapshot version per shard.
+    pub shard_versions: Vec<u64>,
+    /// Reducer fold count per shard.
+    pub shard_merges: Vec<u64>,
 }
 
-/// What the fleet reports at shutdown.
+/// What one shard's fleet reports at shutdown.
 #[derive(Debug)]
-pub struct ServeOutcome {
-    pub workers: Vec<ServeWorkerOutcome>,
-    /// Deltas folded by the reducer over the service's lifetime.
+pub struct ShardOutcome {
+    pub shard: usize,
+    /// Deltas folded by this shard's reducer over the service lifetime.
     pub merges: u64,
+    /// The shard's final shared codebook (`kappa/S` prototypes).
     pub final_shared: Codebook,
 }
 
-/// The training fleet's join handles — taken exactly once at shutdown.
+/// What the whole service reports at shutdown.
+#[derive(Debug)]
+pub struct ServeOutcome {
+    /// Every worker, shard-major order.
+    pub workers: Vec<ServeWorkerOutcome>,
+    /// Total deltas folded across shards.
+    pub merges: u64,
+    /// The global codebook: shard codebooks concatenated in shard order
+    /// (row `s * kappa/S + j` is shard `s`'s prototype `j`, matching the
+    /// global codes queries return).
+    pub final_shared: Codebook,
+    pub shards: Vec<ShardOutcome>,
+}
+
+/// One shard's training fleet handles — taken exactly once at shutdown.
 struct Fleet {
     workers: Vec<JoinHandle<Result<ServeWorkerOutcome>>>,
     reducer: JoinHandle<Result<(u64, Codebook)>>,
@@ -70,122 +102,184 @@ struct Fleet {
     queue_template: crate::cloud::QueueHandle,
 }
 
-/// The running service. Queries go through [`VqService::snapshot`];
-/// ingestion through [`VqService::ingest`]; the TCP front-end
-/// ([`super::Server`]) is a thin adapter over exactly these methods.
+/// One shard: an independent eq.-9 fleet plus its publication store.
+struct ShardFleet {
+    store: Arc<SnapshotStore>,
+    merges: Arc<AtomicU64>,
+    /// Cloned under a short lock per ingest call; cleared at shutdown.
+    ingest_txs: Mutex<Vec<mpsc::SyncSender<Vec<f32>>>>,
+    ingest_cursor: AtomicUsize,
+    fleet: Mutex<Option<Fleet>>,
+}
+
+/// The running service. Queries go through the `query_*` methods (which
+/// route through the coarse quantizer); ingestion through
+/// [`VqService::ingest`]; the TCP front-end ([`super::Server`]) is a thin
+/// adapter over exactly these methods.
 ///
 /// Shutdown takes `&self` (the service is normally shared behind an
 /// `Arc` with connection handlers), so callers never need to reclaim
 /// unique ownership from in-flight connections.
 pub struct VqService {
-    store: Arc<SnapshotStore>,
+    router: Router,
+    shards: Vec<ShardFleet>,
     counters: Arc<ServeCounters>,
     dim: usize,
+    /// Total prototypes across shards.
     kappa: usize,
-    workers_n: usize,
-    /// Cloned under a short lock per ingest call; cleared at shutdown.
-    ingest_txs: Mutex<Vec<mpsc::SyncSender<Vec<f32>>>>,
-    ingest_cursor: AtomicUsize,
+    /// Prototypes per shard (`kappa / S`).
+    kappa_shard: usize,
+    workers_per_shard: usize,
+    probe_n: usize,
+    go: Arc<AtomicBool>,
     stop: Arc<AtomicBool>,
-    fleet: Mutex<Option<Fleet>>,
 }
 
 impl VqService {
-    /// Build the fleet and start serving. Blocks until every worker has
-    /// built its engine and passed the ready barrier, so the first query
-    /// already sees a live system.
+    /// Build the router and every shard fleet, then start serving. Blocks
+    /// until all `S * M` workers have built their engines and passed the
+    /// ready barrier, so the first query already sees a live system.
     pub fn start(cfg: &ExperimentConfig, serve: &ServeConfig) -> Result<VqService> {
         cfg.validate()?;
         serve.validate(cfg)?;
 
+        let dim = cfg.dim();
+        let s_count = serve.shards;
+        let kappa_shard = cfg.vq.kappa / s_count;
         let dataset = cfg.data.mixture.dataset(cfg.data.n_total, cfg.seed);
-        let shards = dataset.split(cfg.m);
-        let w0 = init_codebook(
-            cfg.vq.init,
-            cfg.vq.kappa,
-            cfg.dim(),
-            dataset.flat(),
+
+        // The coarse quantizer: a short k-means pass over a bootstrap
+        // sample (prefix of the dataset — already i.i.d. from the
+        // mixture), then frozen for the service lifetime.
+        let sample_pts = serve.router_sample.min(dataset.len());
+        let router = Router::train(
+            &dataset.flat()[..sample_pts * dim],
+            dim,
+            s_count,
+            serve.router_iters,
             cfg.seed,
         );
+        let parts = router.partition(dataset.flat());
 
-        let store = SnapshotStore::new(w0.clone());
         let counters = Arc::new(ServeCounters::default());
-        let blob = BlobService::spawn(w0.clone());
-        let (queue, queue_rx) = QueueService::create(1024);
         let stop = Arc::new(AtomicBool::new(false));
-        let ready = Arc::new(Barrier::new(cfg.m + 1));
+        let go = Arc::new(AtomicBool::new(!serve.start_paused));
+        let ready = Arc::new(Barrier::new(s_count * cfg.m + 1));
 
-        // Reducer: fold deltas, refresh the blob for workers, publish
-        // epochs for readers.
-        let reducer = {
-            let blob = blob.clone();
-            let store = Arc::clone(&store);
-            let counters = Arc::clone(&counters);
-            let w0 = w0.clone();
-            let publish_every = serve.publish_every;
-            std::thread::Builder::new()
-                .name("dalvq-serve-reducer".into())
-                .spawn(move || {
-                    run_serving_reducer(
-                        queue_rx, blob, store, counters, w0, publish_every,
-                    )
-                })
-                .expect("spawning serve reducer thread")
-        };
-
-        let mut ingest_txs = Vec::with_capacity(cfg.m);
-        let mut workers = Vec::with_capacity(cfg.m);
-        for (i, shard) in shards.into_iter().enumerate() {
-            let (tx, rx) = mpsc::sync_channel::<Vec<f32>>(serve.ingest_queue);
-            ingest_txs.push(tx);
-            let params = ServeWorkerParams {
-                worker_id: i,
-                shard,
-                w0: w0.clone(),
-                schedule: cfg.vq.schedule,
-                tau: cfg.scheme.tau(),
-                points_per_exchange: serve.points_per_exchange,
-                point_compute: serve.point_compute,
-                absorb_per_chunk: serve.absorb_per_chunk,
-                engine_spec: cfg.engine.clone(),
-                ready: Arc::clone(&ready),
-                stop: Arc::clone(&stop),
-            };
-            let q = queue.clone().with_latency(LatencyInjector::new(
-                serve.service_latency,
-                serve.latency_jitter,
-                serve.drop_prob,
-                cfg.seed ^ ((i as u64) << 8),
-            ));
-            let b = blob.clone().with_latency(LatencyInjector::new(
-                serve.service_latency,
-                serve.latency_jitter,
-                0.0, // downloads are request/response; loss shows as latency
-                cfg.seed ^ ((i as u64) << 8) ^ 1,
-            ));
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("dalvq-serve-worker-{i}"))
-                    .spawn(move || run_serve_worker(params, rx, q, b))
-                    .expect("spawning serve worker thread"),
+        let mut shards = Vec::with_capacity(s_count);
+        for (s, part) in parts.into_iter().enumerate() {
+            // A shard's region must be able to seed kappa/S prototypes and
+            // feed M workers; a starved cell (rare — the router's k-means
+            // balances cells against the mixture) is padded cyclically.
+            let min_pts = cfg.m.max(kappa_shard);
+            let part = ensure_min_points(part, dim, min_pts, dataset.flat());
+            let shard_data = Dataset::new(part, dim);
+            let w0 = init_codebook(
+                cfg.vq.init,
+                kappa_shard,
+                dim,
+                shard_data.flat(),
+                // Distinct init stream per shard; shard 0 keeps the plain
+                // seed so `shards = 1` reproduces the original deployment.
+                cfg.seed ^ ((s as u64) << 17),
             );
+
+            let store = SnapshotStore::new(w0.clone());
+            let merges = Arc::new(AtomicU64::new(0));
+            let blob = BlobService::spawn(w0.clone());
+            let (queue, queue_rx) = QueueService::create(1024);
+
+            let reducer = {
+                let blob = blob.clone();
+                let store = Arc::clone(&store);
+                let counters = Arc::clone(&counters);
+                let shard_merges = Arc::clone(&merges);
+                let w0 = w0.clone();
+                let publish_every = serve.publish_every;
+                std::thread::Builder::new()
+                    .name(format!("dalvq-serve-reducer-{s}"))
+                    .spawn(move || {
+                        run_serving_reducer(
+                            queue_rx,
+                            blob,
+                            store,
+                            counters,
+                            shard_merges,
+                            w0,
+                            publish_every,
+                        )
+                    })
+                    .expect("spawning serve reducer thread")
+            };
+
+            let worker_shards = shard_data.split(cfg.m);
+            let mut ingest_txs = Vec::with_capacity(cfg.m);
+            let mut workers = Vec::with_capacity(cfg.m);
+            for (i, shard) in worker_shards.into_iter().enumerate() {
+                let wid = s * cfg.m + i; // fleet-global worker id
+                let (tx, rx) = mpsc::sync_channel::<Vec<f32>>(serve.ingest_queue);
+                ingest_txs.push(tx);
+                let params = ServeWorkerParams {
+                    worker_id: wid,
+                    shard,
+                    w0: w0.clone(),
+                    schedule: cfg.vq.schedule,
+                    tau: cfg.scheme.tau(),
+                    points_per_exchange: serve.points_per_exchange,
+                    point_compute: serve.point_compute,
+                    absorb_per_chunk: serve.absorb_per_chunk,
+                    engine_spec: cfg.engine.clone(),
+                    ready: Arc::clone(&ready),
+                    stop: Arc::clone(&stop),
+                    go: Arc::clone(&go),
+                    sync_exchange: serve.sync_exchange,
+                    max_points: serve.max_points_per_worker,
+                };
+                let q = queue.clone().with_latency(LatencyInjector::new(
+                    serve.service_latency,
+                    serve.latency_jitter,
+                    serve.drop_prob,
+                    cfg.seed ^ ((wid as u64) << 8),
+                ));
+                let b = blob.clone().with_latency(LatencyInjector::new(
+                    serve.service_latency,
+                    serve.latency_jitter,
+                    0.0, // downloads are request/response; loss shows as latency
+                    cfg.seed ^ ((wid as u64) << 8) ^ 1,
+                ));
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("dalvq-serve-worker-{wid}"))
+                        .spawn(move || run_serve_worker(params, rx, q, b))
+                        .expect("spawning serve worker thread"),
+                );
+            }
+
+            shards.push(ShardFleet {
+                store,
+                merges,
+                ingest_txs: Mutex::new(ingest_txs),
+                ingest_cursor: AtomicUsize::new(0),
+                fleet: Mutex::new(Some(Fleet {
+                    workers,
+                    reducer,
+                    queue_template: queue,
+                })),
+            });
         }
         ready.wait(); // engines built; the service is live
 
         Ok(VqService {
-            store,
+            router,
+            shards,
             counters,
-            dim: cfg.dim(),
+            dim,
             kappa: cfg.vq.kappa,
-            workers_n: cfg.m,
-            ingest_txs: Mutex::new(ingest_txs),
-            ingest_cursor: AtomicUsize::new(0),
+            kappa_shard,
+            workers_per_shard: cfg.m,
+            probe_n: serve.probe_n,
+            go,
             stop,
-            fleet: Mutex::new(Some(Fleet {
-                workers,
-                reducer,
-                queue_template: queue,
-            })),
         })
     }
 
@@ -193,26 +287,140 @@ impl VqService {
         self.dim
     }
 
+    /// Total prototypes across shards.
     pub fn kappa(&self) -> usize {
         self.kappa
     }
 
-    /// Current published epoch — the basis of every query answer.
-    pub fn snapshot(&self) -> Arc<Snapshot> {
-        self.store.load()
+    pub fn shards(&self) -> usize {
+        self.shards.len()
     }
 
-    /// Version of the current epoch (lock-free; freshness polling).
+    pub fn probe_n(&self) -> usize {
+        self.probe_n
+    }
+
+    /// The frozen coarse quantizer (diagnostics, tests, oracles).
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Release a fleet started with `start_paused` (no-op otherwise).
+    pub fn resume(&self) {
+        self.go.store(true, Ordering::Release);
+    }
+
+    /// Current published epoch of one shard.
+    pub fn shard_snapshot(&self, s: usize) -> Arc<Snapshot> {
+        self.shards[s].store.load()
+    }
+
+    /// Current epochs of every shard, in shard order.
+    pub fn snapshots(&self) -> Vec<Arc<Snapshot>> {
+        self.shards.iter().map(|s| s.store.load()).collect()
+    }
+
+    /// A coherent global view: with one shard, the shard's epoch as-is
+    /// (O(1) `Arc` clone); with several, a freshly assembled snapshot
+    /// whose codebook concatenates the shard codebooks in shard order
+    /// (rows match the global codes queries return) and whose version is
+    /// the per-shard sum.
+    pub fn snapshot(&self) -> Arc<Snapshot> {
+        if self.shards.len() == 1 {
+            return self.shards[0].store.load();
+        }
+        let snaps = self.snapshots();
+        let mut flat = Vec::with_capacity(self.kappa * self.dim);
+        let mut version = 0u64;
+        for snap in &snaps {
+            flat.extend_from_slice(snap.codebook.flat());
+            version += snap.version;
+        }
+        Arc::new(Snapshot {
+            codebook: Codebook::from_flat(self.kappa, self.dim, flat),
+            version,
+        })
+    }
+
+    /// Sum of per-shard versions (lock-free; freshness polling).
     pub fn version(&self) -> u64 {
-        self.store.version()
+        self.shards.iter().map(|s| s.store.version()).sum()
+    }
+
+    /// Per-shard published versions, in shard order.
+    pub fn shard_versions(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.store.version()).collect()
     }
 
     pub fn counters(&self) -> &Arc<ServeCounters> {
         &self.counters
     }
 
-    /// Feed points into the training stream. Batches are sharded
-    /// round-robin across workers; a full worker queue sheds its batch
+    // -------------------------------------------------------- query path
+
+    /// Quantize: global nearest-prototype code per point, via multi-probe
+    /// over the configured `probe_n` shards. Returns the aggregate version
+    /// that answered. Global code = `shard * kappa/S + local index`.
+    pub fn query_encode(&self, points: &[f32]) -> (u64, Vec<u32>) {
+        let (version, codes, _) = self.query_nearest_probed(points, self.probe_n);
+        (version, codes)
+    }
+
+    /// Nearest prototype per point with squared distances, at the
+    /// configured probe width.
+    pub fn query_nearest(&self, points: &[f32]) -> (u64, Vec<u32>, Vec<f32>) {
+        self.query_nearest_probed(points, self.probe_n)
+    }
+
+    /// Nearest prototype per point, probing the `probe_n` closest shards
+    /// (clamped to `1..=S`). `probe_n = S` is the exhaustive oracle the
+    /// drift suite compares routed answers against.
+    pub fn query_nearest_probed(
+        &self,
+        points: &[f32],
+        probe_n: usize,
+    ) -> (u64, Vec<u32>, Vec<f32>) {
+        assert_eq!(points.len() % self.dim, 0, "points not a multiple of dim");
+        let snaps = self.snapshots();
+        let version = snaps.iter().map(|s| s.version).sum();
+        let n = points.len() / self.dim;
+        let mut codes = Vec::with_capacity(n);
+        let mut dists = Vec::with_capacity(n);
+        let mut probes = Vec::with_capacity(probe_n);
+        for z in points.chunks_exact(self.dim) {
+            self.router.probe_into(z, probe_n, &mut probes);
+            let mut best_code = 0u32;
+            let mut best_d = f32::INFINITY;
+            for &s in &probes {
+                let (local, d) = snaps[s].nearest_one(z);
+                if d < best_d {
+                    best_d = d;
+                    best_code = (s * self.kappa_shard) as u32 + local;
+                }
+            }
+            codes.push(best_code);
+            dists.push(best_d);
+        }
+        (version, codes, dists)
+    }
+
+    /// Normalized empirical distortion of `points` (paper eq. 2) under the
+    /// sharded codebook, at the configured probe width. Empty input is a
+    /// defined 0.0.
+    pub fn query_distortion(&self, points: &[f32]) -> (u64, f64) {
+        let (version, _codes, dists) = self.query_nearest_probed(points, self.probe_n);
+        if dists.is_empty() {
+            return (version, 0.0);
+        }
+        let sum: f64 = dists.iter().map(|d| *d as f64).sum();
+        (version, sum / dists.len() as f64)
+    }
+
+    // ------------------------------------------------------- ingest path
+
+    /// Feed points into the training stream. Each point is routed to the
+    /// shard owning its coarse cell, then sharded round-robin across that
+    /// fleet's workers; a full worker queue sheds its sub-batch
     /// (at-most-once ingestion — the stochastic algorithm tolerates loss,
     /// and blocking here would couple ingest pressure to query latency).
     /// Returns `(accepted, shed)` point counts.
@@ -227,28 +435,48 @@ impl VqService {
                 self.dim
             ));
         }
-        let n = (points.len() / self.dim) as u64;
-        let tx = {
-            let txs = self.ingest_txs.lock().unwrap_or_else(|e| e.into_inner());
-            if txs.is_empty() {
-                return Err(anyhow!("service is shutting down"));
+        // Resolve every destination before sending anything: the reply
+        // must stay all-or-nothing with respect to shutdown — it may never
+        // claim points were accepted on one shard and then error on the
+        // next (the pre-sharding path had exactly one send, so this was
+        // free; with a fan-out it has to be a two-phase walk).
+        let mut sends = Vec::new();
+        for (s, part) in self.router.partition(points).into_iter().enumerate() {
+            if part.is_empty() {
+                continue;
             }
-            let i = self.ingest_cursor.fetch_add(1, Ordering::Relaxed) % txs.len();
-            txs[i].clone()
-        };
-        match tx.try_send(points.to_vec()) {
-            Ok(()) => {
-                self.counters.ingested.fetch_add(n, Ordering::Relaxed);
-                Ok((n, 0))
-            }
-            Err(mpsc::TrySendError::Full(_)) => {
-                self.counters.ingest_shed.fetch_add(n, Ordering::Relaxed);
-                Ok((0, n))
-            }
-            Err(mpsc::TrySendError::Disconnected(_)) => {
-                Err(anyhow!("service is shutting down"))
+            let shard = &self.shards[s];
+            let tx = {
+                let txs = shard.ingest_txs.lock().unwrap_or_else(|e| e.into_inner());
+                if txs.is_empty() {
+                    return Err(anyhow!("service is shutting down"));
+                }
+                let i = shard.ingest_cursor.fetch_add(1, Ordering::Relaxed) % txs.len();
+                txs[i].clone()
+            };
+            sends.push((part, tx));
+        }
+        let mut accepted = 0u64;
+        let mut shed = 0u64;
+        for (part, tx) in sends {
+            let n = (part.len() / self.dim) as u64;
+            match tx.try_send(part) {
+                Ok(()) => {
+                    self.counters.ingested.fetch_add(n, Ordering::Relaxed);
+                    accepted += n;
+                }
+                // Full queue — or a worker that raced us into shutdown and
+                // hung up — both shed: at-most-once transport, and the
+                // tally the client sees stays consistent with the
+                // counters.
+                Err(mpsc::TrySendError::Full(_))
+                | Err(mpsc::TrySendError::Disconnected(_)) => {
+                    self.counters.ingest_shed.fetch_add(n, Ordering::Relaxed);
+                    shed += n;
+                }
             }
         }
+        Ok((accepted, shed))
     }
 
     /// Counters + shape, for the `Stats` query.
@@ -257,52 +485,106 @@ impl VqService {
             version: self.version(),
             kappa: self.kappa,
             dim: self.dim,
-            workers: self.workers_n,
+            workers: self.workers_per_shard * self.shards.len(),
+            shards: self.shards.len(),
+            probe_n: self.probe_n,
             merges: self.counters.merges.load(Ordering::Relaxed),
             ingested: self.counters.ingested.load(Ordering::Relaxed),
             ingest_shed: self.counters.ingest_shed.load(Ordering::Relaxed),
             queries: self.counters.queries.load(Ordering::Relaxed),
+            shard_versions: self.shard_versions(),
+            shard_merges: self
+                .shards
+                .iter()
+                .map(|s| s.merges.load(Ordering::Relaxed))
+                .collect(),
         }
     }
 
-    /// Stop the fleet: flag the workers, let them drain and flush, close
-    /// the queue, join the reducer. The final shared version is published
-    /// before return, so a post-shutdown `snapshot()` is complete.
+    /// Stop every shard fleet: flag the workers, let them drain and flush,
+    /// close the queues, join the reducers. Each shard's final shared
+    /// version is published before return, so a post-shutdown `snapshot()`
+    /// is complete.
     ///
     /// Takes `&self` so the service can stay shared with open connections;
-    /// those keep answering queries from the last epoch. Calling it twice
+    /// those keep answering queries from the last epochs. Calling it twice
     /// is an error.
     pub fn shutdown(&self) -> Result<ServeOutcome> {
-        let fleet = self
-            .fleet
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
-            .take()
-            .ok_or_else(|| anyhow!("service already shut down"))?;
-        self.stop.store(true, Ordering::Release);
-        // Disconnect ingest so worker drains see closed channels.
-        self.ingest_txs.lock().unwrap_or_else(|e| e.into_inner()).clear();
-        let mut outcomes = Vec::with_capacity(fleet.workers.len());
-        for j in fleet.workers {
-            outcomes.push(j.join().map_err(|_| anyhow!("serve worker panicked"))??);
+        let mut fleets = Vec::with_capacity(self.shards.len());
+        for (s, shard) in self.shards.iter().enumerate() {
+            let fleet = shard
+                .fleet
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .take()
+                .ok_or_else(|| anyhow!("service already shut down"))?;
+            fleets.push((s, fleet));
         }
-        // All workers done: drop the template handle so the reducer drains.
-        drop(fleet.queue_template);
-        let (merges, final_shared) = fleet
-            .reducer
-            .join()
-            .map_err(|_| anyhow!("serve reducer panicked"))??;
-        Ok(ServeOutcome { workers: outcomes, merges, final_shared })
+        self.stop.store(true, Ordering::Release);
+        self.go.store(true, Ordering::Release); // release any paused workers
+        // Disconnect ingest so worker drains see closed channels.
+        for shard in &self.shards {
+            shard.ingest_txs.lock().unwrap_or_else(|e| e.into_inner()).clear();
+        }
+        let mut workers = Vec::new();
+        let mut shard_outcomes = Vec::with_capacity(fleets.len());
+        let mut total_merges = 0u64;
+        let mut global_flat = Vec::with_capacity(self.kappa * self.dim);
+        for (s, fleet) in fleets {
+            for j in fleet.workers {
+                workers.push(j.join().map_err(|_| anyhow!("serve worker panicked"))??);
+            }
+            // Shard workers done: drop the template handle so its reducer
+            // drains (worker-held clones are gone once the joins return).
+            drop(fleet.queue_template);
+            let (merges, final_shared) = fleet
+                .reducer
+                .join()
+                .map_err(|_| anyhow!("serve reducer panicked"))??;
+            total_merges += merges;
+            global_flat.extend_from_slice(final_shared.flat());
+            shard_outcomes.push(ShardOutcome { shard: s, merges, final_shared });
+        }
+        Ok(ServeOutcome {
+            workers,
+            merges: total_merges,
+            final_shared: Codebook::from_flat(self.kappa, self.dim, global_flat),
+            shards: shard_outcomes,
+        })
     }
 }
 
+/// Pad a shard's bootstrap region up to `min_pts` points: cycle the
+/// region's own points, or fall back to the dataset prefix for an empty
+/// cell (possible only in pathological router fits).
+fn ensure_min_points(
+    mut part: Vec<f32>,
+    dim: usize,
+    min_pts: usize,
+    fallback: &[f32],
+) -> Vec<f32> {
+    if part.is_empty() {
+        let take = min_pts.min(fallback.len() / dim);
+        part.extend_from_slice(&fallback[..take * dim]);
+    }
+    let have = part.len() / dim;
+    let mut i = 0usize;
+    while part.len() / dim < min_pts {
+        let s = i % have;
+        part.extend_from_within(s * dim..(s + 1) * dim);
+        i += 1;
+    }
+    part
+}
+
 /// The serving reducer: the cloud reducer's fold-and-put loop plus epoch
-/// publication for the read path.
+/// publication for the read path. One per shard.
 fn run_serving_reducer(
     rx: mpsc::Receiver<DeltaMsg>,
     mut blob: BlobHandle,
     store: Arc<SnapshotStore>,
     counters: Arc<ServeCounters>,
+    shard_merges: Arc<AtomicU64>,
     w0: Codebook,
     publish_every: u64,
 ) -> Result<(u64, Codebook)> {
@@ -311,7 +593,8 @@ fn run_serving_reducer(
     for msg in rx.iter() {
         w_srd.apply_delta(&msg.delta);
         merges += 1;
-        counters.merges.store(merges, Ordering::Relaxed);
+        shard_merges.store(merges, Ordering::Relaxed);
+        counters.merges.fetch_add(1, Ordering::Relaxed);
         blob.put(w_srd.clone(), merges)?;
         if merges % publish_every == 0 {
             store.publish(w_srd.clone(), merges);
@@ -356,7 +639,7 @@ mod tests {
         let svc = VqService::start(&cfg, &serve).unwrap();
         let v0 = svc.version();
         let eval = cfg.data.mixture.eval_sample(256, cfg.seed);
-        let c0 = svc.snapshot().distortion(&eval);
+        let (_, c0) = svc.query_distortion(&eval);
         // wait for some folds to land
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
         while svc.version() < v0 + 5 {
@@ -370,7 +653,7 @@ mod tests {
         assert!(snap.version >= v0 + 5);
         assert!(snap.codebook.is_finite());
         // constant-step training on the same mixture must not blow up C
-        let c1 = snap.distortion(&eval);
+        let (_, c1) = svc.query_distortion(&eval);
         assert!(c1 < c0 * 2.0 + 1.0, "{c0} -> {c1}");
         let out = svc.shutdown().unwrap();
         assert!(out.merges >= 5);
@@ -390,7 +673,75 @@ mod tests {
         let stats = svc.stats();
         assert_eq!(stats.ingested + stats.ingest_shed, 2);
         assert_eq!(stats.workers, 1);
+        assert_eq!(stats.shards, 1);
         assert_eq!(stats.dim, 2);
         svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn sharded_service_routes_queries_and_ingest() {
+        let (mut cfg, mut serve) = tiny_cfg(1);
+        cfg.vq.kappa = 8; // 2 prototypes per shard
+        serve.shards = 4;
+        serve.probe_n = 2;
+        let svc = VqService::start(&cfg, &serve).unwrap();
+        assert_eq!(svc.shards(), 4);
+        assert_eq!(svc.router().shards(), 4);
+
+        let eval = cfg.data.mixture.eval_sample(128, cfg.seed);
+        let (_, codes, dists) = svc.query_nearest(&eval);
+        assert_eq!(codes.len(), 64);
+        // global codes span the whole kappa range, not one shard's
+        assert!(codes.iter().all(|&c| (c as usize) < 8));
+        assert!(dists.iter().all(|d| d.is_finite() && *d >= 0.0));
+
+        // ingest fans out across shards without error
+        let (acc, shed) = svc.ingest(&eval).unwrap();
+        assert_eq!(acc + shed, 64);
+
+        let stats = svc.stats();
+        assert_eq!(stats.shards, 4);
+        assert_eq!(stats.probe_n, 2);
+        assert_eq!(stats.shard_versions.len(), 4);
+        assert_eq!(stats.shard_merges.len(), 4);
+        assert_eq!(stats.kappa, 8);
+
+        // Quiesce before cross-probe comparisons: reads must come from
+        // the identical (now frozen) epochs, not two loads of a moving
+        // target. The read path stays up after shutdown by design.
+        let out = svc.shutdown().unwrap();
+        assert_eq!(out.shards.len(), 4);
+        assert_eq!(out.final_shared.kappa(), 8);
+
+        // exhaustive probe can only improve (or equal) every distance
+        let (_, _, routed) = svc.query_nearest_probed(&eval, 2);
+        let (_, _, oracle) = svc.query_nearest_probed(&eval, 4);
+        for (d2, dfull) in routed.iter().zip(&oracle) {
+            assert!(dfull <= d2, "oracle worse than probe: {dfull} > {d2}");
+        }
+
+        // the merged snapshot concatenates shard codebooks in code order
+        let snap = svc.snapshot();
+        assert_eq!(snap.codebook.kappa(), 8);
+        for (s, shard_snap) in svc.snapshots().iter().enumerate() {
+            assert_eq!(
+                &snap.codebook.flat()[s * 2 * 2..(s + 1) * 2 * 2],
+                shard_snap.codebook.flat()
+            );
+        }
+    }
+
+    #[test]
+    fn ensure_min_points_pads_and_falls_back() {
+        let fallback: Vec<f32> = (0..12).map(|i| i as f32).collect(); // 6 pts dim 2
+        // enough points: untouched
+        let p = ensure_min_points(vec![1.0, 2.0, 3.0, 4.0], 2, 2, &fallback);
+        assert_eq!(p, vec![1.0, 2.0, 3.0, 4.0]);
+        // short: cycle-padded from its own points
+        let p = ensure_min_points(vec![1.0, 2.0], 2, 3, &fallback);
+        assert_eq!(p, vec![1.0, 2.0, 1.0, 2.0, 1.0, 2.0]);
+        // empty: seeded from the fallback prefix
+        let p = ensure_min_points(Vec::new(), 2, 2, &fallback);
+        assert_eq!(p, vec![0.0, 1.0, 2.0, 3.0]);
     }
 }

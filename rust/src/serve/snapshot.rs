@@ -30,23 +30,34 @@ impl Snapshot {
             .collect()
     }
 
+    /// `(index, squared distance)` of the nearest centroid to one point
+    /// (`z.len() == dim`). The router's multi-probe scan calls this per
+    /// probed shard; one scan computes both (no winner rescan).
+    pub fn nearest_one(&self, z: &[f32]) -> (u32, f32) {
+        let (i, d) = vq::nearest_with_dist(&self.codebook, z);
+        (i as u32, d)
+    }
+
     /// `(index, squared distance)` of the nearest centroid per point.
+    /// An empty slice yields empty vectors.
     pub fn nearest(&self, points: &[f32]) -> (Vec<u32>, Vec<f32>) {
         let dim = self.codebook.dim();
         let mut idx = Vec::with_capacity(points.len() / dim);
         let mut dist = Vec::with_capacity(points.len() / dim);
         for z in points.chunks_exact(dim) {
-            let i = vq::nearest(&self.codebook, z);
-            idx.push(i as u32);
-            let row = self.codebook.row(i);
-            let d: f32 = row.iter().zip(z).map(|(a, b)| (a - b) * (a - b)).sum();
+            let (i, d) = self.nearest_one(z);
+            idx.push(i);
             dist.push(d);
         }
         (idx, dist)
     }
 
     /// Normalized empirical distortion of `points` (paper eq. 2).
+    /// An empty slice is a defined 0.0, not a 0/0 fold artifact.
     pub fn distortion(&self, points: &[f32]) -> f64 {
+        if points.is_empty() {
+            return 0.0;
+        }
         vq::distortion_mean(&self.codebook, points)
     }
 }
@@ -117,6 +128,38 @@ mod tests {
         assert_eq!(idx, vec![0, 1]);
         assert_eq!(dist, vec![1.0, 1.0]);
         assert_eq!(snap.distortion(&pts), vq::distortion_mean(&w, &pts));
+    }
+
+    #[test]
+    fn empty_point_slice_yields_defined_values() {
+        // Regression: every query op on zero points must return a defined
+        // value (no codes / 0.0), never NaN from an empty fold or a
+        // division by zero.
+        let snap = Snapshot {
+            codebook: Codebook::from_flat(2, 3, vec![0.5; 6]),
+            version: 3,
+        };
+        assert_eq!(snap.encode(&[]), Vec::<u32>::new());
+        let (idx, dist) = snap.nearest(&[]);
+        assert!(idx.is_empty() && dist.is_empty());
+        let c = snap.distortion(&[]);
+        assert_eq!(c, 0.0);
+        assert!(!c.is_nan());
+    }
+
+    #[test]
+    fn nearest_one_matches_batch_nearest() {
+        let snap = Snapshot {
+            codebook: Codebook::from_flat(3, 2, vec![0.0, 0.0, 5.0, 5.0, -3.0, 4.0]),
+            version: 1,
+        };
+        let pts = [4.9f32, 5.2, -2.0, 3.0, 0.1, -0.1];
+        let (idx, dist) = snap.nearest(&pts);
+        for (j, z) in pts.chunks_exact(2).enumerate() {
+            let (i1, d1) = snap.nearest_one(z);
+            assert_eq!(i1, idx[j]);
+            assert_eq!(d1, dist[j]);
+        }
     }
 
     #[test]

@@ -3,9 +3,10 @@
 //!
 //! Differences from [`crate::cloud::run_worker`], which this mirrors:
 //!
-//! * **No points budget** — the loop runs until the service's stop flag
-//!   flips, because a serving codebook is maintained, not converged-and-
-//!   done.
+//! * **Open-ended by default** — the loop runs until the service's stop
+//!   flag flips, because a serving codebook is maintained, not
+//!   converged-and-done (`max_points` bounds it when a run's endpoint
+//!   must be part of the config, e.g. the determinism suite).
 //! * **The local corpus is a sliding window** — seeded from the worker's
 //!   shard and progressively overwritten by ingested points (oldest first),
 //!   so a drifting input distribution eventually owns the whole window and
@@ -20,7 +21,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::cloud::{start_exchange, BlobHandle, QueueHandle};
+use crate::cloud::{start_exchange, BlobHandle, DeltaMsg, QueueHandle};
 use crate::data::Shard;
 use crate::runtime::EngineSpec;
 use crate::vq::{Codebook, Delta, Schedule};
@@ -43,6 +44,15 @@ pub struct ServeWorkerParams {
     pub engine_spec: EngineSpec,
     pub ready: Arc<Barrier>,
     pub stop: Arc<AtomicBool>,
+    /// Training gate: the worker idles (absorbing nothing, training
+    /// nothing) until this flips. Lets the service preload ingest queues
+    /// before the first chunk — the determinism suite's anchor.
+    pub go: Arc<AtomicBool>,
+    /// Block on each exchange until the reducer has folded this worker's
+    /// delta (deterministic with one worker per shard).
+    pub sync_exchange: bool,
+    /// Stop after training this many points (0 = open-ended).
+    pub max_points: u64,
 }
 
 /// What a serving worker reports at shutdown.
@@ -76,6 +86,10 @@ pub fn run_serve_worker(
     let engine = params.engine_spec.build();
     params.ready.wait();
     let mut engine = engine?;
+    // Paused start: idle until released (or told to stop outright).
+    while !params.go.load(Ordering::Acquire) && !params.stop.load(Ordering::Acquire) {
+        std::thread::sleep(Duration::from_micros(200));
+    }
 
     let dim = params.shard.dim();
     let kappa = params.w0.kappa();
@@ -88,18 +102,26 @@ pub fn run_serve_worker(
     let mut delta_window = Delta::zeros(kappa, dim);
     let mut chunk_buf = vec![0.0f32; params.tau * dim];
     let mut eps_buf = vec![0.0f32; params.tau];
+    let mut queue = queue;
+    let mut blob = blob;
     let mut t: u64 = 0;
     let mut seq: u64 = 0;
     let mut absorbed: u64 = 0;
     let mut exchanges_completed = 0u64;
     let mut pushes_dropped = 0u64;
+    // Deltas that reached the reducer (sync mode waits on this many folds;
+    // only meaningful for single-worker shards, where the shard's fold
+    // count is exactly this worker's delivered count).
+    let mut delivered_folds: u64 = 0;
     let mut in_flight: Option<mpsc::Receiver<(Codebook, bool)>> = None;
     // A batch absorbed only partway when the per-chunk budget ran out;
     // `usize` is the resume offset in points.
     let mut carry: Option<(Vec<f32>, usize)> = None;
     let run_start = Instant::now();
 
-    while !params.stop.load(Ordering::Acquire) {
+    while !params.stop.load(Ordering::Acquire)
+        && (params.max_points == 0 || t < params.max_points)
+    {
         if params.point_compute > 0.0 {
             let target = params.point_compute * t as f64;
             let actual = run_start.elapsed().as_secs_f64();
@@ -165,15 +187,58 @@ pub fn run_serve_worker(
             }
         }
 
-        if in_flight.is_none() && t % params.points_per_exchange as u64 == 0 {
-            in_flight = Some(start_exchange(
-                "dalvq-serve-xchg",
-                params.worker_id,
-                &mut seq,
-                &mut delta_window,
-                &queue,
-                &blob,
-            ));
+        if t % params.points_per_exchange as u64 == 0 {
+            if params.sync_exchange {
+                // Synchronous exchange: ship the window, then block until
+                // the reducer has folded every delta we delivered. With a
+                // single worker per shard the shard's fold count equals
+                // our delivered count, so the downloaded version is
+                // exactly "shared including our last delta" — the
+                // deterministic timeline the reproducibility suite pins.
+                let delta_snd =
+                    std::mem::replace(&mut delta_window, Delta::zeros(kappa, dim));
+                let msg = DeltaMsg { worker: params.worker_id, seq, delta: delta_snd };
+                seq += 1;
+                if queue.push(msg)? {
+                    delivered_folds += 1;
+                } else {
+                    pushes_dropped += 1;
+                }
+                // Escape hatch: a dead reducer can never fold our delta;
+                // once the stop flag is up, give it a short grace window
+                // and then fail the worker instead of hanging shutdown.
+                let mut stop_seen: Option<Instant> = None;
+                loop {
+                    let (w_snap, version) = blob.get()?;
+                    if version >= delivered_folds {
+                        // delta_window is empty: nothing to rebase.
+                        w = w_snap;
+                        break;
+                    }
+                    if params.stop.load(Ordering::Acquire) {
+                        let since = *stop_seen.get_or_insert_with(Instant::now);
+                        if since.elapsed() > Duration::from_secs(5) {
+                            return Err(anyhow!(
+                                "sync exchange never folded (fold {} of {}); \
+                                 reducer gone?",
+                                version,
+                                delivered_folds
+                            ));
+                        }
+                    }
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                exchanges_completed += 1;
+            } else if in_flight.is_none() {
+                in_flight = Some(start_exchange(
+                    "dalvq-serve-xchg",
+                    params.worker_id,
+                    &mut seq,
+                    &mut delta_window,
+                    &queue,
+                    &blob,
+                ));
+            }
         }
     }
 

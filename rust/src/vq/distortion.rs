@@ -13,6 +13,12 @@ pub fn nearest(w: &Codebook, z: &[f32]) -> usize {
     nearest_row(w, z)
 }
 
+/// `(index, squared distance)` of the nearest prototype to `z` — one scan,
+/// for callers that need both (the serving read path).
+pub fn nearest_with_dist(w: &Codebook, z: &[f32]) -> (usize, f32) {
+    super::step::nearest_row_with_dist(w, z)
+}
+
 /// Un-normalized distortion: `Σ_t min_ℓ ‖z_t − w_ℓ‖²` over flat row-major
 /// `points` (length must be a multiple of `w.dim()`).
 pub fn distortion_sum(w: &Codebook, points: &[f32]) -> f64 {

@@ -18,7 +18,10 @@ mod step;
 pub use codebook::Codebook;
 pub use codec::{compression_report, decode, encode, CompressionReport, Encoded};
 pub use delta::Delta;
-pub use distortion::{assignments, distortion_mean, distortion_sum, nearest};
+pub use distortion::{
+    assignments, distortion_mean, distortion_sum, nearest, nearest_with_dist,
+};
 pub use init::{init_codebook, InitMethod};
 pub use schedule::Schedule;
 pub use step::{vq_chunk, vq_step};
+pub(crate) use step::row_dist_sq;

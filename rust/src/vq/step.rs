@@ -37,6 +37,13 @@ pub fn vq_step(w: &mut Codebook, z: &[f32], eps: f32, delta: &mut Delta) -> usiz
 /// EXPERIMENTS.md §Perf for the iteration log.
 #[inline]
 pub(crate) fn nearest_row(w: &Codebook, z: &[f32]) -> usize {
+    nearest_row_with_dist(w, z).0
+}
+
+/// [`nearest_row`] returning the winning squared distance as well — the
+/// serving read path needs both and must not rescan the winning row.
+#[inline]
+pub(crate) fn nearest_row_with_dist(w: &Codebook, z: &[f32]) -> (usize, f32) {
     let dim = z.len();
     let mut best = 0usize;
     let mut best_d = f32::INFINITY;
@@ -47,7 +54,7 @@ pub(crate) fn nearest_row(w: &Codebook, z: &[f32]) -> usize {
             best = i;
         }
     }
-    best
+    (best, best_d)
 }
 
 /// Squared Euclidean distance between two equal-length slices.

@@ -1,0 +1,307 @@
+//! Protocol robustness: the wire layer must be total — every byte string
+//! either decodes to exactly the value that produced it, or returns `Err`.
+//! No input may panic, and no length field may drive an allocation past
+//! `MAX_FRAME`.
+//!
+//! Two families:
+//!
+//! * **Roundtrip property tests** — randomized `Request`/`Response` values
+//!   (seed-deterministic via the crate RNG) encode→decode to equality.
+//! * **Adversarial decode tests** — truncations at every byte boundary,
+//!   length prefixes that lie about element counts, unknown opcodes,
+//!   trailing garbage, and `read_frame` against mid-frame EOF.
+
+use dalvq::serve::protocol::{
+    read_frame, write_frame, Request, Response, StatsReply, MAX_FRAME,
+};
+use dalvq::util::Rng;
+
+// ------------------------------------------------------------ generators
+
+fn rand_f32s(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+    let n = rng.usize(max_len + 1);
+    (0..n)
+        .map(|_| match rng.usize(8) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f32::MIN,
+            3 => f32::MAX,
+            4 => f32::EPSILON,
+            _ => rng.range_f32(-1e6, 1e6),
+        })
+        .collect()
+}
+
+fn rand_u32s(rng: &mut Rng, max_len: usize) -> Vec<u32> {
+    let n = rng.usize(max_len + 1);
+    (0..n).map(|_| rng.next_u64() as u32).collect()
+}
+
+fn rand_u64s(rng: &mut Rng, max_len: usize) -> Vec<u64> {
+    let n = rng.usize(max_len + 1);
+    (0..n).map(|_| rng.next_u64()).collect()
+}
+
+fn rand_request(rng: &mut Rng) -> Request {
+    match rng.usize(5) {
+        0 => Request::Encode { points: rand_f32s(rng, 64) },
+        1 => Request::Nearest { points: rand_f32s(rng, 64) },
+        2 => Request::Distortion { points: rand_f32s(rng, 64) },
+        3 => Request::Ingest { points: rand_f32s(rng, 64) },
+        _ => Request::Stats,
+    }
+}
+
+fn rand_response(rng: &mut Rng) -> Response {
+    match rng.usize(6) {
+        0 => Response::Codes {
+            version: rng.next_u64(),
+            codes: rand_u32s(rng, 64),
+        },
+        1 => {
+            let indices = rand_u32s(rng, 64);
+            let dists = rand_f32s(rng, indices.len());
+            Response::Neighbors { version: rng.next_u64(), indices, dists }
+        }
+        2 => Response::Distortion {
+            version: rng.next_u64(),
+            value: rng.range_f64(0.0, 1e12),
+        },
+        3 => Response::IngestAck {
+            accepted: rng.next_u64(),
+            shed: rng.next_u64(),
+        },
+        4 => Response::Stats(StatsReply {
+            version: rng.next_u64(),
+            kappa: rng.next_u64(),
+            dim: rng.next_u64(),
+            workers: rng.next_u64(),
+            shards: rng.next_u64(),
+            probe_n: rng.next_u64(),
+            merges: rng.next_u64(),
+            ingested: rng.next_u64(),
+            ingest_shed: rng.next_u64(),
+            queries: rng.next_u64(),
+            shard_versions: rand_u64s(rng, 16),
+            shard_merges: rand_u64s(rng, 16),
+        }),
+        _ => {
+            let len = rng.usize(40);
+            let msg: String =
+                (0..len).map(|_| (b'a' + rng.usize(26) as u8) as char).collect();
+            Response::Error { message: msg }
+        }
+    }
+}
+
+// --------------------------------------------------- roundtrip properties
+
+#[test]
+fn random_requests_roundtrip_exactly() {
+    let mut rng = Rng::from_seed(0xF00D);
+    for _ in 0..500 {
+        let req = rand_request(&mut rng);
+        let wire = req.encode();
+        assert_eq!(Request::decode(&wire).unwrap(), req, "{req:?}");
+    }
+}
+
+#[test]
+fn random_responses_roundtrip_exactly() {
+    let mut rng = Rng::from_seed(0xBEEF);
+    for _ in 0..500 {
+        let resp = rand_response(&mut rng);
+        let wire = resp.encode();
+        assert_eq!(Response::decode(&wire).unwrap(), resp, "{resp:?}");
+    }
+}
+
+#[test]
+fn random_frames_roundtrip_through_a_stream() {
+    let mut rng = Rng::from_seed(0xCAFE);
+    let payloads: Vec<Vec<u8>> =
+        (0..50).map(|_| rand_request(&mut rng).encode()).collect();
+    let mut wire = Vec::new();
+    for p in &payloads {
+        write_frame(&mut wire, p).unwrap();
+    }
+    let mut r = &wire[..];
+    for p in &payloads {
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), *p);
+    }
+    assert_eq!(read_frame(&mut r).unwrap(), None); // clean EOF at boundary
+}
+
+// ------------------------------------------------------ adversarial decode
+
+/// Every strict prefix of a valid encoding must return `Err` — never
+/// panic, never succeed with a different value.
+#[test]
+fn every_truncation_of_every_variant_errs() {
+    let mut rng = Rng::from_seed(0xD15C);
+    for _ in 0..40 {
+        let wire = rand_request(&mut rng).encode();
+        for cut in 0..wire.len() {
+            assert!(
+                Request::decode(&wire[..cut]).is_err(),
+                "request prefix {cut}/{} decoded",
+                wire.len()
+            );
+        }
+        let wire = rand_response(&mut rng).encode();
+        for cut in 0..wire.len() {
+            assert!(
+                Response::decode(&wire[..cut]).is_err(),
+                "response prefix {cut}/{} decoded",
+                wire.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn empty_payload_is_an_error() {
+    assert!(Request::decode(&[]).is_err());
+    assert!(Response::decode(&[]).is_err());
+}
+
+#[test]
+fn unknown_opcodes_err_for_both_directions() {
+    let known_req = [0x01, 0x02, 0x03, 0x04, 0x05];
+    let known_resp = [0x81, 0x82, 0x83, 0x84, 0x85, 0xFF];
+    for op in 0..=255u8 {
+        if !known_req.contains(&op) {
+            assert!(Request::decode(&[op]).is_err(), "req op 0x{op:02x}");
+        }
+        if !known_resp.contains(&op) {
+            assert!(Response::decode(&[op]).is_err(), "resp op 0x{op:02x}");
+        }
+    }
+}
+
+/// A length prefix claiming more elements than the payload carries must
+/// fail the bounds check before any allocation sized by the lie.
+#[test]
+fn lying_element_counts_err_without_overallocating() {
+    // Encode { count = u32::MAX, no elements }
+    let mut wire = vec![0x01u8];
+    wire.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert!(Request::decode(&wire).is_err());
+
+    // count = 3 but only 2 f32s present
+    let mut wire = vec![0x01u8];
+    wire.extend_from_slice(&3u32.to_le_bytes());
+    wire.extend_from_slice(&1.0f32.to_le_bytes());
+    wire.extend_from_slice(&2.0f32.to_le_bytes());
+    assert!(Request::decode(&wire).is_err());
+
+    // Neighbors with a lying second vector (indices fine, dists lie)
+    let mut wire = vec![0x82u8];
+    wire.extend_from_slice(&7u64.to_le_bytes());
+    wire.extend_from_slice(&1u32.to_le_bytes());
+    wire.extend_from_slice(&5u32.to_le_bytes());
+    wire.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert!(Response::decode(&wire).is_err());
+
+    // Stats reply with lying shard-vector counts
+    let good = Response::Stats(StatsReply::default()).encode();
+    let mut wire = good[..good.len() - 8].to_vec(); // strip both empty vecs
+    wire.extend_from_slice(&9u32.to_le_bytes()); // shard_versions: claims 9
+    wire.extend_from_slice(&0u32.to_le_bytes()); // shard_merges: 0
+    assert!(Response::decode(&wire).is_err());
+
+    // Error response whose message length lies
+    let mut wire = vec![0xFFu8];
+    wire.extend_from_slice(&1000u32.to_le_bytes());
+    wire.extend_from_slice(b"short");
+    assert!(Response::decode(&wire).is_err());
+}
+
+#[test]
+fn trailing_garbage_is_rejected() {
+    let mut rng = Rng::from_seed(0x7A11);
+    for _ in 0..40 {
+        let mut wire = rand_request(&mut rng).encode();
+        wire.push(0x00);
+        assert!(Request::decode(&wire).is_err());
+        let mut wire = rand_response(&mut rng).encode();
+        wire.push(0xAB);
+        assert!(Response::decode(&wire).is_err());
+    }
+}
+
+/// Fuzz: random byte soup must never panic, whatever it decodes to.
+#[test]
+fn random_bytes_never_panic_the_decoders() {
+    let mut rng = Rng::from_seed(0x5EED);
+    for _ in 0..2_000 {
+        let len = rng.usize(96);
+        let buf: Vec<u8> =
+            (0..len).map(|_| rng.next_u64() as u8).collect();
+        let _ = Request::decode(&buf);
+        let _ = Response::decode(&buf);
+    }
+}
+
+/// Bit-flip fuzz: corrupt one byte of a valid encoding at a time.
+#[test]
+fn single_byte_corruptions_never_panic() {
+    let mut rng = Rng::from_seed(0xB17F);
+    for _ in 0..60 {
+        let wire = rand_response(&mut rng).encode();
+        for i in 0..wire.len() {
+            let mut bad = wire.clone();
+            bad[i] ^= 1 << rng.usize(8);
+            let _ = Response::decode(&bad); // Ok or Err, never a panic
+        }
+    }
+}
+
+// --------------------------------------------------------------- framing
+
+#[test]
+fn eof_at_a_frame_boundary_is_none_but_mid_header_is_an_error() {
+    // EOF exactly at a frame boundary: None (peer hung up between frames)
+    let empty: &[u8] = &[];
+    assert_eq!(read_frame(&mut &empty[..]).unwrap(), None);
+    // EOF inside the 4-byte length header: a dying peer, not a clean
+    // hang-up — must be an error for every partial header length
+    for cut in 1..4 {
+        let partial = [0x02u8, 0x00, 0x00];
+        assert!(
+            read_frame(&mut &partial[..cut]).is_err(),
+            "mid-header EOF at {cut} bytes treated as clean"
+        );
+    }
+}
+
+#[test]
+fn read_frame_mid_payload_eof_is_an_error() {
+    // Header promises 100 bytes; only 10 follow.
+    let mut wire = Vec::new();
+    wire.extend_from_slice(&100u32.to_le_bytes());
+    wire.extend_from_slice(&[0u8; 10]);
+    assert!(read_frame(&mut &wire[..]).is_err());
+}
+
+#[test]
+fn oversized_length_prefixes_are_rejected_before_allocation() {
+    for len in [MAX_FRAME + 1, u32::MAX, u32::MAX - 3] {
+        let wire = len.to_le_bytes();
+        assert!(read_frame(&mut &wire[..]).is_err(), "len {len}");
+    }
+    // the cap itself is allowed through to the payload read (which then
+    // hits EOF — an error, but not the cap error)
+    let wire = MAX_FRAME.to_le_bytes();
+    assert!(read_frame(&mut &wire[..]).is_err());
+}
+
+#[test]
+fn write_frame_refuses_oversized_payloads() {
+    // One allocation just over the cap: the writer must reject it before
+    // emitting a single byte (a half-written frame would desync the peer).
+    let payload = vec![0u8; (MAX_FRAME as usize) + 1];
+    let mut sink = Vec::new();
+    assert!(write_frame(&mut sink, &payload).is_err());
+    assert!(sink.is_empty(), "nothing may be written for a rejected frame");
+}

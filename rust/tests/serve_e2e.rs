@@ -175,6 +175,117 @@ fn dimension_mismatch_is_a_clean_error() {
     stop_stack(service, server);
 }
 
+/// A sharded deployment of the tiny stack: 4 codebook shards of 2
+/// prototypes each behind the coarse-quantizer router, probe width 2.
+fn sharded_preset() -> (ExperimentConfig, ServeConfig) {
+    let (mut cfg, mut serve) = tiny_preset();
+    cfg.m = 1; // one worker per shard (4 worker threads total)
+    cfg.vq.kappa = 8;
+    serve.shards = 4;
+    serve.probe_n = 2;
+    (cfg, serve)
+}
+
+/// Acceptance criterion, half 1 — **probe oracle**: with `S = 4`, routed
+/// nearest-centroid lookups at `probe_n = 2` must agree with the
+/// `S = 1`-equivalent oracle (`probe_n = S`: an exhaustive scan of the
+/// same global codebook, exactly what a single-shard service computes) on
+/// at least 99% of points.
+///
+/// The fleet is quiesced first (shutdown publishes each shard's final
+/// epoch; the read path stays up by design), so routed and oracle answers
+/// come from the identical frozen codebooks.
+#[test]
+fn sharded_probe_agrees_with_single_shard_oracle() {
+    let _serial = serial();
+    let (cfg, serve) = sharded_preset();
+    let (service, server) = start_stack(&cfg, &serve);
+    let mut client = Client::connect(server.local_addr()).unwrap();
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.shards, 4);
+    assert_eq!(stats.probe_n, 2);
+    assert_eq!(stats.kappa, 8);
+    assert_eq!(stats.shard_versions.len(), 4);
+
+    // let every shard fleet publish at least one trained epoch
+    let deadline = Instant::now() + Duration::from_secs(15);
+    while service.shard_versions().iter().any(|&v| v == 0) {
+        assert!(Instant::now() < deadline, "some shard never published");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // Quiesce: joins the fleets and publishes final epochs; queries keep
+    // answering from those.
+    service.shutdown().unwrap();
+
+    let probe_pts = cfg.data.mixture.eval_sample(2_000, cfg.seed);
+    let (_, routed, routed_d) = service.query_nearest_probed(&probe_pts, 2);
+    let (_, oracle, oracle_d) = service.query_nearest_probed(&probe_pts, 4);
+    assert_eq!(routed.len(), 2_000);
+    let agree = routed.iter().zip(&oracle).filter(|(a, b)| a == b).count();
+    assert!(
+        agree as f64 >= 0.99 * routed.len() as f64,
+        "probe_n=2 agreed with the full-scan oracle on only {agree}/{} lookups",
+        routed.len()
+    );
+    // where they disagree the oracle can only be strictly better
+    for (dr, do_) in routed_d.iter().zip(&oracle_d) {
+        assert!(do_ <= dr, "oracle distance {do_} worse than routed {dr}");
+    }
+    // the wire path answers with global codes over the full kappa range,
+    // from the same frozen epochs
+    let (codes, _) = client.encode(&probe_pts).unwrap();
+    assert_eq!(codes.len(), 2_000);
+    assert!(codes.iter().all(|&c| (c as usize) < cfg.vq.kappa));
+
+    server.shutdown().unwrap();
+}
+
+/// Acceptance criterion, half 2 — **sharded drift**: a drifted ingest
+/// stream routed through the coarse quantizer still reaches the owning
+/// shard's fleet, and routed distortion queries watch it converge.
+#[test]
+fn sharded_ingest_drift_reaches_the_query_path() {
+    let _serial = serial();
+    let (cfg, serve) = sharded_preset();
+    let (service, server) = start_stack(&cfg, &serve);
+    let mut client = Client::connect(server.local_addr()).unwrap();
+
+    // The drifted world lives far outside every coarse cell, so the
+    // router sends the whole stream to one shard — that fleet's 2
+    // prototypes must absorb it while the other 3 shards stay put.
+    const DRIFT: f32 = 20.0;
+    let drift_eval = shifted(&cfg.data.mixture.eval_sample(512, cfg.seed), DRIFT);
+    let (c_before, _) = client.distortion(&drift_eval).unwrap();
+    assert!(c_before > 100.0, "drifted sample must start far away: {c_before}");
+
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut stream_t = 0u64;
+    let mut c_now = c_before;
+    while c_now > c_before * 0.2 {
+        assert!(
+            Instant::now() < deadline,
+            "sharded drift never converged: C {c_before:.2} -> {c_now:.2}"
+        );
+        for _ in 0..20 {
+            let batch =
+                shifted(&cfg.data.mixture.generate(128, cfg.seed, 2 + stream_t), DRIFT);
+            stream_t += 1;
+            client.ingest(&batch).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        let (c, _) = client.distortion(&drift_eval).unwrap();
+        c_now = c;
+    }
+
+    let stats = client.stats().unwrap();
+    assert!(stats.ingested > 0);
+    assert!(stats.shard_merges.iter().sum::<u64>() > 0);
+    assert_eq!(stats.shard_merges.len(), 4);
+
+    stop_stack(service, server);
+}
+
 /// The shipped `serve` preset stands up, answers, and shuts down — the
 /// exact stack `dalvq loadtest --preset serve` drives.
 #[test]
