@@ -1,7 +1,9 @@
 //! Serving-path benchmark: an in-process `dalvq serve` stack under the
 //! load generator — connection/workload sweep on the single-shard preset,
-//! then the sharded-routing sweep (`S ∈ {1, 2, 4}`) under a fixed mixed
-//! ingest/query load, recording latency percentiles per shard count.
+//! the sharded-routing sweep (`S ∈ {1, 2, 4}`) and the worker-count sweep
+//! (`M ∈ {1, 2, 4, 8}`) under a fixed mixed ingest/query load, and the
+//! durability comparison: time-to-first-trained-snapshot from a cold
+//! start vs a warm restart out of a `--state-dir` checkpoint.
 //!
 //! ```bash
 //! cargo bench --bench serve
@@ -11,6 +13,7 @@
 mod kit;
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use dalvq::config::presets;
 use dalvq::serve::{run_load, LoadSpec, Server, VqService};
@@ -80,21 +83,7 @@ fn main() {
     );
     for shards in [1usize, 2, 4] {
         let p = presets::serve_sharded(shards);
-        let service =
-            Arc::new(VqService::start(&p.base, &p.serve).expect("service"));
-        let server =
-            Server::start(Arc::clone(&service), &p.serve.addr).expect("server");
-        let addr = server.local_addr().to_string();
-        let spec = LoadSpec {
-            connections: 8,
-            requests_per_conn: 400,
-            batch_points: 64,
-            ingest_frac: 0.25,
-            seed: p.base.seed,
-        };
-        let report = run_load(&addr, &spec, &p.base.data.mixture).expect("load");
-        server.shutdown().expect("server shutdown");
-        let out = service.shutdown().expect("service shutdown");
+        let (report, merges) = mixed_load_sweep(&p);
         println!(
             "{:>6} {:>6} {:>11.0} {:>6.0} us {:>6.0} us {:>6.0} us {:>8}",
             shards,
@@ -103,7 +92,98 @@ fn main() {
             report.p50_us,
             report.p95_us,
             report.p99_us,
-            out.merges,
+            merges,
         );
+    }
+
+    // ------------------------------------------------- worker-count sweep
+    // The still-open ROADMAP axis: p99 under mixed load as the training
+    // fleet grows. More workers fold more deltas behind the same read
+    // path (each exchange is kappa*dim floats through the shard queue),
+    // so this measures how much write-side concurrency the epoch-swapped
+    // snapshot design absorbs before the tail feels it.
+    kit::section("worker-count sweep — p99 across M (mixed load, S = 1)");
+    println!(
+        "{:>6} {:>11} {:>9} {:>9} {:>9} {:>8}",
+        "M", "req/s", "p50", "p95", "p99", "merges"
+    );
+    for m in [1usize, 2, 4, 8] {
+        let mut p = presets::serve();
+        p.base.m = m;
+        let (report, merges) = mixed_load_sweep(&p);
+        println!(
+            "{:>6} {:>11.0} {:>6.0} us {:>6.0} us {:>6.0} us {:>8}",
+            m,
+            report.throughput_rps,
+            report.p50_us,
+            report.p95_us,
+            report.p99_us,
+            merges,
+        );
+    }
+
+    // -------------------------------------- cold start vs warm restart
+    // The durability subsystem's headline number: how long until the
+    // service answers from a *trained* snapshot (version >= TARGET
+    // folds). Cold starts must train their way there; a warm restart
+    // reads it off disk and serves it before the first new fold lands.
+    kit::section("durable state — time to first trained snapshot");
+    const TARGET_FOLDS: u64 = 32;
+    let dir = std::env::temp_dir()
+        .join(format!("dalvq-bench-state-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut p = presets::serve_durable(&dir);
+    p.serve.checkpoint_every = 8;
+
+    let cold_start = Instant::now();
+    let service = VqService::start(&p.base, &p.serve).expect("cold service");
+    wait_for_version(&service, TARGET_FOLDS);
+    let cold_ms = cold_start.elapsed().as_secs_f64() * 1e3;
+    service.checkpoint_now().expect("checkpoint");
+    service.shutdown().expect("cold shutdown");
+    println!(
+        "cold start:   {cold_ms:>8.1} ms to a version-{TARGET_FOLDS} snapshot \
+         (trained from scratch)"
+    );
+
+    let warm_start = Instant::now();
+    let service = VqService::start(&p.base, &p.serve).expect("warm service");
+    wait_for_version(&service, TARGET_FOLDS);
+    let warm_ms = warm_start.elapsed().as_secs_f64() * 1e3;
+    let resumed = service.shard_versions();
+    service.shutdown().expect("warm shutdown");
+    println!(
+        "warm restart: {warm_ms:>8.1} ms to the same snapshot (resumed at \
+         versions {resumed:?} from {})",
+        dir.display(),
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Stand up the preset's stack, drive the standard mixed load (8 conns x
+/// 400 reqs, 64 pts/batch, 25% ingest), tear it down. Both sweep loops
+/// (S and M) share this so the load shape stays identical across axes.
+fn mixed_load_sweep(p: &presets::ServePreset) -> (dalvq::serve::LoadReport, u64) {
+    let service = Arc::new(VqService::start(&p.base, &p.serve).expect("service"));
+    let server =
+        Server::start(Arc::clone(&service), &p.serve.addr).expect("server");
+    let addr = server.local_addr().to_string();
+    let spec = LoadSpec {
+        connections: 8,
+        requests_per_conn: 400,
+        batch_points: 64,
+        ingest_frac: 0.25,
+        seed: p.base.seed,
+    };
+    let report = run_load(&addr, &spec, &p.base.data.mixture).expect("load");
+    server.shutdown().expect("server shutdown");
+    let out = service.shutdown().expect("service shutdown");
+    (report, out.merges)
+}
+
+/// Block until the service's summed snapshot version reaches `target`.
+fn wait_for_version(service: &VqService, target: u64) {
+    while service.version() < target {
+        std::thread::sleep(std::time::Duration::from_millis(1));
     }
 }

@@ -218,6 +218,16 @@ pub fn serve_sharded(shards: usize) -> ServePreset {
     p
 }
 
+/// The `serve` preset with durable state: checkpoints every shard into
+/// `state_dir` every `checkpoint_every` folds, and a restart pointed at
+/// the same directory resumes at the saved shard versions instead of
+/// retraining. This is what `dalvq serve --state-dir` runs.
+pub fn serve_durable(state_dir: impl Into<std::path::PathBuf>) -> ServePreset {
+    let mut p = serve();
+    p.serve.state_dir = Some(state_dir.into());
+    p
+}
+
 /// Quickstart: tiny 2-D problem on the PJRT engine (the `k8d2` artifacts).
 pub fn quickstart() -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default();
@@ -273,6 +283,19 @@ mod tests {
         // serving must track drift: the schedule must not decay to zero
         assert!(matches!(p.base.vq.schedule, crate::vq::Schedule::Constant { .. }));
         assert!(matches!(p.base.scheme, SchemeConfig::AsyncDelta { .. }));
+    }
+
+    #[test]
+    fn durable_serve_preset_validates() {
+        let p = serve_durable("/tmp/dalvq-state");
+        p.validate().unwrap();
+        assert!(p.serve.state_dir.is_some());
+        assert!(p.serve.checkpoint_every >= 1);
+        // sharding composes with persistence
+        let mut p = serve_durable("/tmp/dalvq-state");
+        p.serve.shards = 4;
+        p.serve.probe_n = 2;
+        p.validate().unwrap();
     }
 
     #[test]

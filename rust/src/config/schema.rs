@@ -187,6 +187,16 @@ pub struct ServeConfig {
     /// Bounded training makes a run's endpoint a function of the config
     /// rather than of shutdown timing.
     pub max_points_per_worker: u64,
+    /// Durable state directory (`None` = no persistence). When set, the
+    /// service checkpoints each shard's codebook into it and a restart
+    /// with the same directory resumes at the saved shard versions
+    /// instead of retraining (router restored, fleets seeded from the
+    /// saved codebooks).
+    pub state_dir: Option<PathBuf>,
+    /// Reducer folds between automatic checkpoints of a shard (the
+    /// background checkpointer also flushes on `Checkpoint` requests and
+    /// at shutdown). Only meaningful with `state_dir`.
+    pub checkpoint_every: u64,
 }
 
 impl Default for ServeConfig {
@@ -208,6 +218,8 @@ impl Default for ServeConfig {
             start_paused: false,
             sync_exchange: false,
             max_points_per_worker: 0,
+            state_dir: None,
+            checkpoint_every: 64,
         }
     }
 }
@@ -284,6 +296,14 @@ impl ServeConfig {
         }
         if !(0.0..=1.0).contains(&self.drop_prob) {
             errs.push("drop_prob must be in [0, 1]".into());
+        }
+        if let Some(dir) = &self.state_dir {
+            if dir.as_os_str().is_empty() {
+                errs.push("state_dir must be a non-empty path".into());
+            }
+        }
+        if self.checkpoint_every == 0 {
+            errs.push("checkpoint_every must be >= 1".into());
         }
         if errs.is_empty() {
             Ok(())
@@ -807,6 +827,26 @@ mod tests {
         assert!(s.validate(&base).is_err());
         s.drop_prob = 0.0;
         s.validate(&base).unwrap();
+    }
+
+    #[test]
+    fn serve_persistence_is_validated() {
+        let base = ExperimentConfig::default();
+
+        let mut s = ServeConfig::default();
+        s.state_dir = Some(PathBuf::from("/tmp/dalvq-state"));
+        s.checkpoint_every = 10;
+        s.validate(&base).unwrap();
+
+        let mut s = ServeConfig::default();
+        s.state_dir = Some(PathBuf::new());
+        let msg = format!("{:#}", s.validate(&base).unwrap_err());
+        assert!(msg.contains("state_dir"), "{msg}");
+
+        let mut s = ServeConfig::default();
+        s.checkpoint_every = 0;
+        let msg = format!("{:#}", s.validate(&base).unwrap_err());
+        assert!(msg.contains("checkpoint_every"), "{msg}");
     }
 
     #[test]

@@ -56,6 +56,7 @@ pub mod coordinator;
 pub mod data;
 pub mod harness;
 pub mod metrics;
+pub mod persist;
 pub mod runtime;
 pub mod schemes;
 pub mod serve;

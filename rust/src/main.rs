@@ -46,6 +46,7 @@ COMMANDS:
   baseline   run a k-means baseline
   serve      run the online VQ service (ingest + query over TCP)
   loadtest   drive a service with concurrent load; print a latency report
+  state      inspect a --state-dir (manifest, per-shard checkpoints)
   info       print the AOT artifact manifest summary
   help       show this message
 
@@ -77,6 +78,13 @@ OPTIONS (serve):
                              router (kappa must divide by S) [default: 1]
   --probe <N>                shards probed per query point
                              [default: min(2, S)]
+  --state-dir <DIR>          durable state: checkpoint shards here and
+                             warm-restart from it [default: none]
+  --checkpoint-every <N>     folds between automatic shard checkpoints
+                             [default: 64]
+
+OPTIONS (state):
+  inspect --state-dir <DIR>  print the manifest and per-shard checkpoints
 
 OPTIONS (loadtest):
   --preset <serve>           preset for the in-process service + workload
@@ -280,11 +288,19 @@ fn run() -> Result<()> {
             let duration = parse_opt_u64(&mut args, "--duration")?;
             let shards = parse_opt_u64(&mut args, "--shards")?;
             let probe = parse_opt_u64(&mut args, "--probe")?;
+            let state_dir = args.take_value("--state-dir")?.map(PathBuf::from);
+            let checkpoint_every = parse_opt_u64(&mut args, "--checkpoint-every")?;
             args.finish()?;
             let mut p = serve_preset(&preset)?;
             apply_sharding(&mut p, shards, probe);
             if let Some(a) = addr {
                 p.serve.addr = a;
+            }
+            if let Some(d) = state_dir {
+                p.serve.state_dir = Some(d);
+            }
+            if let Some(n) = checkpoint_every {
+                p.serve.checkpoint_every = n;
             }
             let service = Arc::new(VqService::start(&p.base, &p.serve)?);
             let server = Server::start(Arc::clone(&service), &p.serve.addr)?;
@@ -298,6 +314,15 @@ fn run() -> Result<()> {
                 p.base.dim(),
                 p.serve.probe_n,
             );
+            if let Some(dir) = service.state_dir() {
+                println!(
+                    "dalvq serve: durable state in {} (checkpoint every {} \
+                     folds/shard; resumed at versions {:?})",
+                    dir.display(),
+                    p.serve.checkpoint_every,
+                    service.shard_versions(),
+                );
+            }
             match duration {
                 Some(secs) => {
                     std::thread::sleep(std::time::Duration::from_secs(secs))
@@ -371,6 +396,58 @@ fn run() -> Result<()> {
                 dalvq::metrics::write_json(&fig, &dir.join("loadtest.json"))?;
                 dalvq::metrics::write_report_csv(&fig, &dir.join("loadtest.csv"))?;
                 println!("wrote {}/loadtest.{{csv,json}}", dir.display());
+            }
+        }
+        "state" => {
+            let sub = if args.argv.is_empty() {
+                bail!("state requires a subcommand (want: inspect)")
+            } else {
+                args.argv.remove(0)
+            };
+            if sub != "inspect" {
+                bail!("unknown state subcommand {sub:?} (want: inspect)");
+            }
+            let dir = PathBuf::from(
+                args.take_value("--state-dir")?
+                    .ok_or_else(|| anyhow!("state inspect requires --state-dir"))?,
+            );
+            args.finish()?;
+            let Some(state) = dalvq::persist::load_state(&dir)? else {
+                println!(
+                    "{}: no manifest — a `dalvq serve --state-dir` run has \
+                     not checkpointed here yet",
+                    dir.display()
+                );
+                return Ok(());
+            };
+            let m = &state.manifest;
+            println!(
+                "{}: format {} | {} shard(s), kappa={} dim={} | \
+                 points/exchange {}",
+                dir.display(),
+                m.format,
+                m.shards,
+                m.kappa,
+                m.dim,
+                m.points_per_exchange
+            );
+            println!(
+                "router: {} coarse centroids (dim {})",
+                state.router.centroids.kappa(),
+                state.router.centroids.dim()
+            );
+            for s in &state.shards {
+                println!(
+                    "  shard {}: version {} | merges {} | rng cursor {} | \
+                     {} x {} codebook (norm^2 {:.4})",
+                    s.shard,
+                    s.version,
+                    s.merges,
+                    s.rng_cursor,
+                    s.codebook.kappa(),
+                    s.codebook.dim(),
+                    s.codebook.norm_sq(),
+                );
             }
         }
         "info" => {

@@ -1,0 +1,309 @@
+//! The background checkpointer: one thread that drains shard epochs to
+//! disk without ever blocking the read or fold paths.
+//!
+//! The thread polls each shard's published version (a lock-free atomic
+//! read) and, whenever a shard has advanced `checkpoint_every` folds past
+//! its last checkpoint, clones the shard's current `Arc<Snapshot>` (O(1)
+//! — the epoch-swap design means a checkpoint shares the codebook with
+//! in-flight queries instead of copying it under a lock) and writes it
+//! through the atomic temp+fsync+rename protocol. Reducers and readers
+//! never wait on the disk: a slow volume only makes checkpoints less
+//! frequent, exactly the paper's slow-blob-storage tolerance.
+//!
+//! A `flush` request (the protocol's `Checkpoint` op, and shutdown)
+//! synchronously checkpoints every shard that has advanced at all and
+//! acks with the per-shard checkpointed versions.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::serve::SnapshotStore;
+
+use super::codec::{encode_shard, FORMAT};
+use super::manifest::{shard_file, write_atomic, Manifest};
+
+/// How often the checkpointer polls shard versions when idle.
+const POLL: Duration = Duration::from_millis(25);
+
+enum Msg {
+    /// Checkpoint every shard that advanced; ack with per-shard versions.
+    Flush(mpsc::Sender<Result<Vec<u64>>>),
+    /// Final flush, then exit.
+    Stop,
+}
+
+/// Handle to the running checkpointer thread.
+pub struct Checkpointer {
+    tx: mpsc::Sender<Msg>,
+    join: Option<JoinHandle<Result<()>>>,
+}
+
+/// Everything the checkpointer thread needs about one shard.
+struct ShardSource {
+    store: Arc<SnapshotStore>,
+    merges: Arc<AtomicU64>,
+}
+
+impl Checkpointer {
+    /// Spawn the thread. `last_checkpoint[s]` must already hold the
+    /// version shard `s`'s on-disk state carries (the restored version on
+    /// a warm start, 0 on a cold one); it is updated after every
+    /// successful write and is what `StatsReply::last_checkpoint`
+    /// reports.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn(
+        dir: PathBuf,
+        stores: Vec<Arc<SnapshotStore>>,
+        merges: Vec<Arc<AtomicU64>>,
+        last_checkpoint: Arc<Vec<AtomicU64>>,
+        checkpoint_every: u64,
+        points_per_exchange: usize,
+        kappa: usize,
+        dim: usize,
+    ) -> Checkpointer {
+        assert_eq!(stores.len(), merges.len());
+        assert_eq!(stores.len(), last_checkpoint.len());
+        let sources: Vec<ShardSource> = stores
+            .into_iter()
+            .zip(merges)
+            .map(|(store, merges)| ShardSource { store, merges })
+            .collect();
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let join = std::thread::Builder::new()
+            .name("dalvq-checkpointer".into())
+            .spawn(move || {
+                run(
+                    rx,
+                    dir,
+                    sources,
+                    last_checkpoint,
+                    checkpoint_every,
+                    points_per_exchange,
+                    kappa,
+                    dim,
+                )
+            })
+            .expect("spawning checkpointer thread");
+        Checkpointer { tx, join: Some(join) }
+    }
+
+    /// Force a checkpoint of every advanced shard; blocks until the files
+    /// are durable. Returns the per-shard last-checkpointed versions.
+    pub fn flush(&self) -> Result<Vec<u64>> {
+        let (ack_tx, ack_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Flush(ack_tx))
+            .map_err(|_| anyhow!("checkpointer thread is gone"))?;
+        ack_rx.recv().map_err(|_| anyhow!("checkpointer died mid-flush"))?
+    }
+
+    /// Final flush and join. Called by the service at shutdown, after the
+    /// fleets have published their final epochs.
+    pub fn stop(mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Stop);
+        match self.join.take() {
+            Some(j) => j.join().map_err(|_| anyhow!("checkpointer panicked"))?,
+            None => Ok(()),
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run(
+    rx: mpsc::Receiver<Msg>,
+    dir: PathBuf,
+    sources: Vec<ShardSource>,
+    last_checkpoint: Arc<Vec<AtomicU64>>,
+    checkpoint_every: u64,
+    points_per_exchange: usize,
+    kappa: usize,
+    dim: usize,
+) -> Result<()> {
+    let write_shard = |s: usize| -> Result<u64> {
+        // Taking the checkpoint is an O(1) Arc clone of the published
+        // epoch; serialization then reads the codebook through the Arc —
+        // it is never deep-copied into an intermediate struct.
+        let snap = sources[s].store.load();
+        let bytes = encode_shard(
+            s as u32,
+            snap.version,
+            sources[s].merges.load(Ordering::Relaxed),
+            snap.version * points_per_exchange as u64,
+            &snap.codebook,
+        );
+        write_atomic(&dir, &shard_file(s), &bytes)?;
+        last_checkpoint[s].store(snap.version, Ordering::Release);
+        Ok(snap.version)
+    };
+    let write_manifest = || -> Result<()> {
+        Manifest {
+            format: FORMAT,
+            shards: sources.len(),
+            kappa,
+            dim,
+            points_per_exchange,
+            shard_versions: last_checkpoint
+                .iter()
+                .map(|v| v.load(Ordering::Acquire))
+                .collect(),
+        }
+        .save(&dir)
+    };
+    // Checkpoint every shard that moved past its last checkpoint;
+    // `min_advance` is the fold distance that triggers a write (1 for a
+    // flush, `checkpoint_every` for the periodic pass).
+    let pass = |min_advance: u64| -> Result<bool> {
+        let mut wrote = false;
+        for s in 0..sources.len() {
+            let last = last_checkpoint[s].load(Ordering::Acquire);
+            if sources[s].store.version() >= last.saturating_add(min_advance) {
+                write_shard(s)?;
+                wrote = true;
+            }
+        }
+        if wrote {
+            write_manifest()?;
+        }
+        Ok(wrote)
+    };
+
+    loop {
+        match rx.recv_timeout(POLL) {
+            Ok(Msg::Flush(ack)) => {
+                let result = pass(1).map(|_| {
+                    last_checkpoint
+                        .iter()
+                        .map(|v| v.load(Ordering::Acquire))
+                        .collect()
+                });
+                let _ = ack.send(result);
+            }
+            Ok(Msg::Stop) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // Final drain: anything published since the last write.
+                // This one is fresh and actionable, so it propagates (the
+                // service surfaces it from shutdown).
+                pass(1)?;
+                return Ok(());
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                // A transient write failure (disk momentarily full, one
+                // EIO) must not kill durability for the rest of the run:
+                // log it and retry on the next pass — `last_checkpoint`
+                // only advances on successful writes, so nothing is
+                // skipped. Explicit flushes still report their errors to
+                // the caller through the ack channel.
+                if let Err(e) = pass(checkpoint_every.max(1)) {
+                    eprintln!(
+                        "dalvq checkpointer: periodic checkpoint failed \
+                         (will retry): {e:#}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::restore::load_state;
+    use crate::vq::Codebook;
+    use std::path::Path;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("dalvq-ckpt-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn write_router(dir: &Path, dim: usize) {
+        let state = super::super::codec::RouterState {
+            centroids: Codebook::zeros(1, dim),
+        };
+        write_atomic(dir, super::super::manifest::ROUTER_FILE, &state.encode())
+            .unwrap();
+    }
+
+    #[test]
+    fn flush_writes_advanced_shards_and_manifest() {
+        let dir = tmp_dir("flush");
+        let store = SnapshotStore::new(Codebook::zeros(2, 2));
+        let merges = Arc::new(AtomicU64::new(0));
+        let last = Arc::new(vec![AtomicU64::new(0)]);
+        let ckpt = Checkpointer::spawn(
+            dir.clone(),
+            vec![Arc::clone(&store)],
+            vec![Arc::clone(&merges)],
+            Arc::clone(&last),
+            1_000_000, // periodic path effectively off
+            50,
+            2,
+            2,
+        );
+        write_router(&dir, 2);
+
+        // nothing advanced: flush writes nothing, reports version 0
+        assert_eq!(ckpt.flush().unwrap(), vec![0]);
+        assert!(!dir.join(shard_file(0)).exists());
+
+        store.publish(Codebook::from_flat(2, 2, vec![1.0, 2.0, 3.0, 4.0]), 3);
+        merges.store(3, Ordering::Relaxed);
+        assert_eq!(ckpt.flush().unwrap(), vec![3]);
+        assert_eq!(last[0].load(Ordering::Acquire), 3);
+
+        let restored = load_state(&dir).unwrap().unwrap();
+        assert_eq!(restored.shards[0].version, 3);
+        assert_eq!(restored.shards[0].rng_cursor, 150);
+        assert_eq!(
+            restored.shards[0].codebook.flat(),
+            &[1.0, 2.0, 3.0, 4.0]
+        );
+        ckpt.stop().unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn periodic_pass_waits_for_checkpoint_every() {
+        let dir = tmp_dir("periodic");
+        let store = SnapshotStore::new(Codebook::zeros(1, 1));
+        let merges = Arc::new(AtomicU64::new(0));
+        let last = Arc::new(vec![AtomicU64::new(0)]);
+        let ckpt = Checkpointer::spawn(
+            dir.clone(),
+            vec![Arc::clone(&store)],
+            vec![Arc::clone(&merges)],
+            Arc::clone(&last),
+            5,
+            10,
+            1,
+            1,
+        );
+        write_router(&dir, 1);
+        store.publish(Codebook::from_flat(1, 1, vec![1.0]), 3);
+        merges.store(3, Ordering::Relaxed);
+        std::thread::sleep(Duration::from_millis(120));
+        // 3 < checkpoint_every = 5: the periodic pass must not have fired
+        assert_eq!(last[0].load(Ordering::Acquire), 0);
+        store.publish(Codebook::from_flat(1, 1, vec![2.0]), 6);
+        merges.store(6, Ordering::Relaxed);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while last[0].load(Ordering::Acquire) < 6 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "periodic checkpoint never fired"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // stop performs a final drain and leaves a consistent manifest
+        ckpt.stop().unwrap();
+        let m = Manifest::load(&dir).unwrap().unwrap();
+        assert_eq!(m.shard_versions, vec![6]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

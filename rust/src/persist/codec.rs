@@ -1,0 +1,388 @@
+//! Binary codec for durable serve state: one self-describing file per
+//! shard, plus one for the frozen router.
+//!
+//! Layout discipline mirrors the wire protocol (`serve::protocol`):
+//! fixed-width little-endian fields, hand-rolled (the offline build
+//! carries no serde), every decode total — any byte string either decodes
+//! to exactly the state that produced it or returns `Err`. On top of the
+//! protocol's bounds checks, files add what a disk needs and a socket
+//! doesn't: a magic number (is this even ours?), a format version (can
+//! this build read it?), and a trailing FNV-1a checksum (did the bytes
+//! survive the disk?). A truncated, bit-flipped or foreign file is
+//! rejected before any of it reaches a fleet.
+
+use anyhow::{bail, Result};
+
+use crate::vq::Codebook;
+
+/// Magic prefix of a shard-state file.
+pub const SHARD_MAGIC: [u8; 4] = *b"DVQS";
+/// Magic prefix of a router-state file.
+pub const ROUTER_MAGIC: [u8; 4] = *b"DVQR";
+/// On-disk format version this build reads and writes.
+pub const FORMAT: u32 = 1;
+
+/// One shard's durable state: everything a restarted service needs to
+/// resume this shard where the checkpoint left it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardState {
+    /// Shard index within the deployment.
+    pub shard: u32,
+    /// Published snapshot version at checkpoint — the fold count the
+    /// saved codebook actually contains. Restore resumes the shard's
+    /// fold clock from this.
+    pub version: u64,
+    /// Reducer fold counter observed at checkpoint (diagnostic only: it
+    /// may run ahead of `version` — unpublished folds, or a counter
+    /// sample racing the live reducer — so restore never seeds from it).
+    pub merges: u64,
+    /// Training-step cursor: total points this shard's fold sequence
+    /// represents (`version * points_per_exchange`). Restore seeds the
+    /// workers' schedule position from it, so a decaying learning rate
+    /// resumes instead of restarting hot.
+    pub rng_cursor: u64,
+    /// The shard's published codebook (`kappa/S` prototypes).
+    pub codebook: Codebook,
+}
+
+/// The frozen coarse quantizer, persisted so a restarted service routes
+/// identically to the one that wrote the checkpoints (retraining the
+/// router from a fresh bootstrap sample would repartition the space and
+/// orphan every saved shard codebook).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouterState {
+    pub centroids: Codebook,
+}
+
+// ------------------------------------------------------------- checksum
+
+/// FNV-1a 64 over `bytes` — cheap, dependency-free corruption detection
+/// (not cryptographic; the threat model is torn writes and bit rot, not
+/// an adversary with write access to the state dir).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ------------------------------------------------------------- encoding
+
+fn put_codebook(out: &mut Vec<u8>, w: &Codebook) {
+    out.extend_from_slice(&(w.kappa() as u32).to_le_bytes());
+    out.extend_from_slice(&(w.dim() as u32).to_le_bytes());
+    for x in w.flat() {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn seal(mut out: Vec<u8>) -> Vec<u8> {
+    let sum = fnv1a64(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Encode shard state straight from a borrowed codebook. This is what
+/// the checkpointer calls with the published epoch's codebook behind its
+/// `Arc` — the serialization writes bytes but never deep-copies the
+/// codebook into an intermediate `ShardState`.
+pub fn encode_shard(
+    shard: u32,
+    version: u64,
+    merges: u64,
+    rng_cursor: u64,
+    codebook: &Codebook,
+) -> Vec<u8> {
+    let mut out =
+        Vec::with_capacity(4 + 4 + 4 + 8 + 8 + 8 + 8 + codebook.flat().len() * 4 + 8);
+    out.extend_from_slice(&SHARD_MAGIC);
+    out.extend_from_slice(&FORMAT.to_le_bytes());
+    out.extend_from_slice(&shard.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
+    out.extend_from_slice(&merges.to_le_bytes());
+    out.extend_from_slice(&rng_cursor.to_le_bytes());
+    put_codebook(&mut out, codebook);
+    seal(out)
+}
+
+impl ShardState {
+    pub fn encode(&self) -> Vec<u8> {
+        encode_shard(
+            self.shard,
+            self.version,
+            self.merges,
+            self.rng_cursor,
+            &self.codebook,
+        )
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<ShardState> {
+        let mut c = Cursor::open(bytes, &SHARD_MAGIC, "shard state")?;
+        let state = ShardState {
+            shard: c.u32()?,
+            version: c.u64()?,
+            merges: c.u64()?,
+            rng_cursor: c.u64()?,
+            codebook: c.codebook()?,
+        };
+        c.finish()?;
+        if !state.codebook.is_finite() {
+            bail!("shard state carries a non-finite codebook");
+        }
+        Ok(state)
+    }
+}
+
+impl RouterState {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out =
+            Vec::with_capacity(4 + 4 + 8 + self.centroids.flat().len() * 4 + 8);
+        out.extend_from_slice(&ROUTER_MAGIC);
+        out.extend_from_slice(&FORMAT.to_le_bytes());
+        put_codebook(&mut out, &self.centroids);
+        seal(out)
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<RouterState> {
+        let mut c = Cursor::open(bytes, &ROUTER_MAGIC, "router state")?;
+        let state = RouterState { centroids: c.codebook()? };
+        c.finish()?;
+        if !state.centroids.is_finite() {
+            bail!("router state carries non-finite centroids");
+        }
+        Ok(state)
+    }
+}
+
+// ------------------------------------------------------------- decoding
+
+/// A bounds-checked little-endian reader over a checksummed file body.
+/// `open` verifies length, checksum, magic and format before any field is
+/// read, so a corrupt file never partially decodes.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn open(bytes: &'a [u8], magic: &[u8; 4], what: &str) -> Result<Cursor<'a>> {
+        if bytes.len() < 4 + 4 + 8 {
+            bail!("{what} file truncated: {} bytes", bytes.len());
+        }
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(tail.try_into().unwrap());
+        let actual = fnv1a64(body);
+        if stored != actual {
+            bail!(
+                "{what} checksum mismatch: stored {stored:#018x}, \
+                 computed {actual:#018x} (torn write or bit rot)"
+            );
+        }
+        if &body[..4] != magic {
+            bail!("{what} magic mismatch: {:02x?}", &body[..4]);
+        }
+        let format = u32::from_le_bytes(body[4..8].try_into().unwrap());
+        if format != FORMAT {
+            bail!("{what} format {format} unsupported (this build reads {FORMAT})");
+        }
+        Ok(Cursor { buf: body, pos: 8 })
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| {
+                anyhow::anyhow!("state file truncated at byte {}", self.pos)
+            })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn codebook(&mut self) -> Result<Codebook> {
+        let kappa = self.u32()? as usize;
+        let dim = self.u32()? as usize;
+        if kappa == 0 || dim == 0 {
+            bail!("state file declares an empty codebook ({kappa} x {dim})");
+        }
+        // Bounds-check before allocating: a lying shape must not become a
+        // huge Vec (same discipline as the wire cursors).
+        let n = kappa
+            .checked_mul(dim)
+            .and_then(|n| n.checked_mul(4))
+            .ok_or_else(|| anyhow::anyhow!("codebook shape overflows"))?;
+        let raw = self.bytes(n)?;
+        let flat: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        Ok(Codebook::from_flat(kappa, dim, flat))
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            bail!("{} trailing bytes in state file", self.buf.len() - self.pos)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_shard_state(rng: &mut Rng) -> ShardState {
+        let kappa = 1 + rng.usize(6);
+        let dim = 1 + rng.usize(5);
+        let flat: Vec<f32> =
+            (0..kappa * dim).map(|_| rng.range_f32(-1e4, 1e4)).collect();
+        ShardState {
+            shard: rng.next_u64() as u32,
+            version: rng.next_u64(),
+            merges: rng.next_u64(),
+            rng_cursor: rng.next_u64(),
+            codebook: Codebook::from_flat(kappa, dim, flat),
+        }
+    }
+
+    #[test]
+    fn shard_state_roundtrips_exactly() {
+        let mut rng = Rng::from_seed(0x5A4E);
+        for _ in 0..200 {
+            let state = rand_shard_state(&mut rng);
+            let back = ShardState::decode(&state.encode()).unwrap();
+            assert_eq!(state.shard, back.shard);
+            assert_eq!(state.version, back.version);
+            assert_eq!(state.merges, back.merges);
+            assert_eq!(state.rng_cursor, back.rng_cursor);
+            // byte-identical codebook, not just approximately equal
+            assert!(state
+                .codebook
+                .flat()
+                .iter()
+                .zip(back.codebook.flat())
+                .all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
+    fn router_state_roundtrips_exactly() {
+        let mut rng = Rng::from_seed(0x2007);
+        for _ in 0..100 {
+            let shards = 1 + rng.usize(8);
+            let dim = 1 + rng.usize(4);
+            let flat: Vec<f32> =
+                (0..shards * dim).map(|_| rng.range_f32(-50.0, 50.0)).collect();
+            let state =
+                RouterState { centroids: Codebook::from_flat(shards, dim, flat) };
+            assert_eq!(RouterState::decode(&state.encode()).unwrap(), state);
+        }
+    }
+
+    #[test]
+    fn every_truncation_errs() {
+        let mut rng = Rng::from_seed(0x7C01);
+        for _ in 0..20 {
+            let wire = rand_shard_state(&mut rng).encode();
+            for cut in 0..wire.len() {
+                assert!(
+                    ShardState::decode(&wire[..cut]).is_err(),
+                    "prefix {cut}/{} decoded",
+                    wire.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_byte_corruption_is_always_caught() {
+        // Unlike the wire protocol (where a flipped payload float still
+        // decodes), a state file carries a checksum: EVERY one-byte
+        // corruption must be rejected, not just structural ones.
+        let mut rng = Rng::from_seed(0xC0DE);
+        for _ in 0..10 {
+            let wire = rand_shard_state(&mut rng).encode();
+            for i in 0..wire.len() {
+                let mut bad = wire.clone();
+                bad[i] ^= 1 << rng.usize(8);
+                assert!(
+                    ShardState::decode(&bad).is_err(),
+                    "corruption at byte {i} went undetected"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_magic_and_format_are_rejected() {
+        let mut rng = Rng::from_seed(0x3A61);
+        let state = rand_shard_state(&mut rng);
+        // a router file is not a shard file, even though both checksum
+        let router = RouterState { centroids: state.codebook.clone() };
+        let err =
+            format!("{:#}", ShardState::decode(&router.encode()).unwrap_err());
+        assert!(err.contains("magic"), "{err}");
+        // a future format is refused with a clear message (re-sealed so
+        // only the format field differs from a valid file)
+        let mut wire = state.encode();
+        wire.truncate(wire.len() - 8);
+        wire[4..8].copy_from_slice(&(FORMAT + 1).to_le_bytes());
+        let wire = seal(wire);
+        let err = format!("{:#}", ShardState::decode(&wire).unwrap_err());
+        assert!(err.contains("format"), "{err}");
+    }
+
+    #[test]
+    fn lying_codebook_shape_errs_without_overallocating() {
+        let state = ShardState {
+            shard: 0,
+            version: 1,
+            merges: 1,
+            rng_cursor: 50,
+            codebook: Codebook::from_flat(1, 2, vec![1.0, 2.0]),
+        };
+        let mut wire = state.encode();
+        wire.truncate(wire.len() - 8);
+        // kappa field sits after magic(4) format(4) shard(4) v(8) m(8) c(8)
+        wire[36..40].copy_from_slice(&u32::MAX.to_le_bytes());
+        let wire = seal(wire);
+        assert!(ShardState::decode(&wire).is_err());
+    }
+
+    #[test]
+    fn non_finite_codebooks_are_rejected() {
+        let state = ShardState {
+            shard: 0,
+            version: 1,
+            merges: 1,
+            rng_cursor: 0,
+            codebook: Codebook::from_flat(1, 2, vec![f32::NAN, 0.0]),
+        };
+        assert!(ShardState::decode(&state.encode()).is_err());
+    }
+
+    #[test]
+    fn random_bytes_never_panic() {
+        let mut rng = Rng::from_seed(0xF12E);
+        for _ in 0..2_000 {
+            let len = rng.usize(128);
+            let buf: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let _ = ShardState::decode(&buf);
+            let _ = RouterState::decode(&buf);
+        }
+    }
+}

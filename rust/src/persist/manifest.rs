@@ -1,0 +1,256 @@
+//! The manifest: the state directory's table of contents, plus the atomic
+//! write protocol every durable file goes through.
+//!
+//! Layout under `--state-dir`:
+//!
+//! ```text
+//! state/
+//!   manifest.json      deployment shape + per-shard checkpoint versions
+//!   router.bin         the frozen coarse quantizer (codec::RouterState)
+//!   shard-0.state      per-shard codebook + metadata (codec::ShardState)
+//!   shard-1.state      …one per shard…
+//!   *.tmp              in-flight writes; IGNORED by restore (a crash
+//!                      mid-checkpoint must never corrupt saved state)
+//! ```
+//!
+//! Every file lands via **temp + fsync + rename**: bytes are written to
+//! `<name>.tmp`, fsynced, then renamed over the final name (atomic on
+//! POSIX), and the directory is fsynced so the rename itself is durable.
+//! A reader therefore sees either the old complete file or the new
+//! complete file, never a prefix — the same discipline the paper's Azure
+//! deployment leans on blob storage for.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+/// Manifest file name inside the state dir.
+pub const MANIFEST_FILE: &str = "manifest.json";
+/// Router file name inside the state dir.
+pub const ROUTER_FILE: &str = "router.bin";
+/// Suffix of in-flight writes; restore ignores these.
+pub const TMP_SUFFIX: &str = ".tmp";
+
+/// File name of shard `s`'s state.
+pub fn shard_file(s: usize) -> String {
+    format!("shard-{s}.state")
+}
+
+/// What the manifest records: enough to validate a restore against the
+/// deployment config before any shard file is opened.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// On-disk format version (mirrors `codec::FORMAT`).
+    pub format: u32,
+    /// Shard count `S` of the deployment that wrote this state.
+    pub shards: usize,
+    /// Total prototypes across shards.
+    pub kappa: usize,
+    pub dim: usize,
+    /// Points per exchange of the writing deployment (documents the unit
+    /// of each shard's `rng_cursor`).
+    pub points_per_exchange: usize,
+    /// Last checkpointed snapshot version per shard, shard order.
+    pub shard_versions: Vec<u64>,
+}
+
+impl Manifest {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("format", self.format as u64)
+            .set("shards", self.shards)
+            .set("kappa", self.kappa)
+            .set("dim", self.dim)
+            .set("points_per_exchange", self.points_per_exchange)
+            .set(
+                "shard_versions",
+                Json::Arr(
+                    self.shard_versions
+                        .iter()
+                        .map(|v| Json::Num(*v as f64))
+                        .collect(),
+                ),
+            )
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let m = Manifest {
+            format: j.req("format")?.as_u64()? as u32,
+            shards: j.req("shards")?.as_usize()?,
+            kappa: j.req("kappa")?.as_usize()?,
+            dim: j.req("dim")?.as_usize()?,
+            points_per_exchange: j.req("points_per_exchange")?.as_usize()?,
+            shard_versions: j
+                .req("shard_versions")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_u64())
+                .collect::<Result<Vec<_>>>()?,
+        };
+        if m.shards == 0 || m.shard_versions.len() != m.shards {
+            bail!(
+                "manifest lists {} shard versions for {} shards",
+                m.shard_versions.len(),
+                m.shards
+            );
+        }
+        Ok(m)
+    }
+
+    /// Write the manifest atomically into `dir`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        write_atomic(dir, MANIFEST_FILE, self.to_json().to_pretty().as_bytes())
+    }
+
+    /// Load the manifest from `dir`. `Ok(None)` when no manifest exists
+    /// (a cold start); any present-but-unreadable manifest is an error —
+    /// silently retraining over saved state would be data loss.
+    pub fn load(dir: &Path) -> Result<Option<Manifest>> {
+        let path = dir.join(MANIFEST_FILE);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(anyhow!(e))
+                    .with_context(|| format!("reading {}", path.display()))
+            }
+        };
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&j)
+            .with_context(|| format!("validating {}", path.display()))
+            .map(Some)
+    }
+}
+
+/// Atomic durable write: `dir/<name>.tmp` → fsync → rename to
+/// `dir/<name>` → fsync the directory. A crash at any point leaves either
+/// the previous complete file or the new complete file (plus at worst a
+/// stale `.tmp`, which restore ignores).
+pub fn write_atomic(dir: &Path, name: &str, bytes: &[u8]) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating state dir {}", dir.display()))?;
+    let tmp = dir.join(format!("{name}{TMP_SUFFIX}"));
+    let dst = dir.join(name);
+    {
+        let mut f = File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.sync_all()
+            .with_context(|| format!("fsyncing {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, &dst).with_context(|| {
+        format!("renaming {} -> {}", tmp.display(), dst.display())
+    })?;
+    // Durability of the rename itself: fsync the directory. Some
+    // platforms refuse to open a directory for writing — best effort
+    // there (the rename is still atomic; only its durability window
+    // widens).
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+/// Remove stale `.tmp` leftovers from interrupted checkpoints (best
+/// effort — a tmp file we cannot remove is still ignored by restore).
+pub fn sweep_tmp(dir: &Path) -> usize {
+    let Ok(entries) = std::fs::read_dir(dir) else { return 0 };
+    let mut swept = 0;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        if name.to_string_lossy().ends_with(TMP_SUFFIX)
+            && std::fs::remove_file(entry.path()).is_ok()
+        {
+            swept += 1;
+        }
+    }
+    swept
+}
+
+/// `dir/<file name of shard s>`.
+pub fn shard_path(dir: &Path, s: usize) -> PathBuf {
+    dir.join(shard_file(s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "dalvq-manifest-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn manifest_roundtrips_through_disk() {
+        let dir = tmp_dir("roundtrip");
+        let m = Manifest {
+            format: 1,
+            shards: 4,
+            kappa: 8,
+            dim: 2,
+            points_per_exchange: 50,
+            shard_versions: vec![6, 6, 7, 6],
+        };
+        m.save(&dir).unwrap();
+        assert_eq!(Manifest::load(&dir).unwrap().unwrap(), m);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_is_a_cold_start_not_an_error() {
+        let dir = tmp_dir("cold");
+        assert!(Manifest::load(&dir).unwrap().is_none());
+    }
+
+    #[test]
+    fn corrupt_manifest_is_an_error_not_a_cold_start() {
+        let dir = tmp_dir("corrupt");
+        write_atomic(&dir, MANIFEST_FILE, b"{ not json").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn inconsistent_shard_counts_are_rejected() {
+        let m = Manifest {
+            format: 1,
+            shards: 2,
+            kappa: 8,
+            dim: 2,
+            points_per_exchange: 50,
+            shard_versions: vec![1, 2, 3],
+        };
+        assert!(Manifest::from_json(&m.to_json()).is_err());
+    }
+
+    #[test]
+    fn write_atomic_replaces_and_leaves_no_tmp() {
+        let dir = tmp_dir("atomic");
+        write_atomic(&dir, "x.bin", b"old").unwrap();
+        write_atomic(&dir, "x.bin", b"new").unwrap();
+        assert_eq!(std::fs::read(dir.join("x.bin")).unwrap(), b"new");
+        assert!(!dir.join("x.bin.tmp").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sweep_tmp_removes_only_tmp_files() {
+        let dir = tmp_dir("sweep");
+        write_atomic(&dir, "keep.state", b"real").unwrap();
+        std::fs::write(dir.join("stale.state.tmp"), b"junk").unwrap();
+        assert_eq!(sweep_tmp(&dir), 1);
+        assert!(dir.join("keep.state").exists());
+        assert!(!dir.join("stale.state.tmp").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,40 @@
+//! Durable state for the serving fleet: per-shard checkpoint/restore.
+//!
+//! The paper's Azure deployment survives VM churn because worker state
+//! lives *outside* the process (blob storage holds the shared version);
+//! CloudDALVQ workers are restartable by construction. This subsystem
+//! gives `dalvq serve` the same property on a plain filesystem: a
+//! versioned on-disk store the fleet checkpoints into and restarts from,
+//! so a restarted service resumes at the saved shard versions instead of
+//! retraining from scratch. Patra's convergence result for distributed
+//! asynchronous LVQ makes resuming from a saved iterate sound — the
+//! algorithm's state *is* the codebook plus its schedule position.
+//!
+//! Pieces, one module each:
+//!
+//! * [`codec`] — self-describing binary files (magic, format version,
+//!   FNV-1a checksum) for shard state (codebook + shard id + version +
+//!   merge count + RNG cursor) and the frozen router.
+//! * [`manifest`] — the state directory's table of contents and the
+//!   atomic write protocol (temp + fsync + rename) every file goes
+//!   through, so a crash mid-checkpoint can never corrupt saved state.
+//! * [`checkpointer`] — the background thread that snapshots each shard
+//!   every `checkpoint_every` folds without blocking the read path (a
+//!   checkpoint is an `Arc` clone of the published epoch, not a copy).
+//! * [`restore`] — warm-start loading with strict validation: stale
+//!   `.tmp` leftovers ignored, corrupt or mismatched files rejected
+//!   loudly before any fleet is seeded from them.
+//!
+//! The shard is the save/restore unit (the `ShardOutcome` /
+//! `shard_versions` granularity): shards checkpoint independently, which
+//! is also what a future shard rebalance will migrate.
+
+pub mod codec;
+pub mod manifest;
+pub mod checkpointer;
+pub mod restore;
+
+pub use checkpointer::Checkpointer;
+pub use codec::{RouterState, ShardState, FORMAT};
+pub use manifest::{shard_file, sweep_tmp, write_atomic, Manifest, ROUTER_FILE};
+pub use restore::{load_state, RestoredState};

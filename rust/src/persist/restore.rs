@@ -1,0 +1,206 @@
+//! Restore-on-startup: read a state directory back into the structures a
+//! serving fleet is seeded from.
+//!
+//! The contract with interrupted checkpoints: only files the atomic
+//! rename completed are ever read — `*.tmp` leftovers are never opened
+//! (sweeping them is the *serving* startup's job, via
+//! [`super::manifest::sweep_tmp`]; this loader is also behind the
+//! read-only `dalvq state inspect`, which must not unlink a live
+//! checkpointer's in-flight temp file). A missing manifest means a cold
+//! start; a *corrupt* manifest, router or shard file is a hard error —
+//! silently retraining over saved state the operator asked us to keep
+//! would be data loss with no symptom.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::codec::{RouterState, ShardState};
+use super::manifest::{shard_path, Manifest, ROUTER_FILE};
+
+/// Everything a warm start restores.
+#[derive(Debug, Clone)]
+pub struct RestoredState {
+    pub manifest: Manifest,
+    pub router: RouterState,
+    /// Per-shard state, shard order (`shards[s].shard == s`).
+    pub shards: Vec<ShardState>,
+}
+
+/// Load saved state from `dir`. `Ok(None)` when the directory holds no
+/// manifest (first run — a cold start that will begin checkpointing into
+/// it). `*.tmp` leftovers are ignored by construction (nothing here opens
+/// them) but NOT removed — this loader must stay read-only so `dalvq
+/// state inspect` is safe against a live serve process.
+pub fn load_state(dir: &Path) -> Result<Option<RestoredState>> {
+    let Some(manifest) = Manifest::load(dir)? else {
+        return Ok(None);
+    };
+    let router_path = dir.join(ROUTER_FILE);
+    let router_bytes = std::fs::read(&router_path)
+        .with_context(|| format!("reading {}", router_path.display()))?;
+    let router = RouterState::decode(&router_bytes)
+        .with_context(|| format!("decoding {}", router_path.display()))?;
+    if router.centroids.kappa() != manifest.shards
+        || router.centroids.dim() != manifest.dim
+    {
+        bail!(
+            "router file is {} centroids x dim {}, manifest says {} x {}",
+            router.centroids.kappa(),
+            router.centroids.dim(),
+            manifest.shards,
+            manifest.dim
+        );
+    }
+    let kappa_shard = manifest.kappa / manifest.shards;
+    let mut shards = Vec::with_capacity(manifest.shards);
+    for s in 0..manifest.shards {
+        let path = shard_path(dir, s);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let state = ShardState::decode(&bytes)
+            .with_context(|| format!("decoding {}", path.display()))?;
+        if state.shard as usize != s {
+            bail!(
+                "{} claims to be shard {}, expected {s}",
+                path.display(),
+                state.shard
+            );
+        }
+        if state.codebook.kappa() != kappa_shard
+            || state.codebook.dim() != manifest.dim
+        {
+            bail!(
+                "{} holds a {} x {} codebook, manifest expects {} x {}",
+                path.display(),
+                state.codebook.kappa(),
+                state.codebook.dim(),
+                kappa_shard,
+                manifest.dim
+            );
+        }
+        shards.push(state);
+    }
+    Ok(Some(RestoredState { manifest, router, shards }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::manifest::{shard_file, write_atomic, MANIFEST_FILE};
+    use crate::vq::Codebook;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("dalvq-restore-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn write_good_state(dir: &Path) {
+        Manifest {
+            format: 1,
+            shards: 2,
+            kappa: 4,
+            dim: 2,
+            points_per_exchange: 50,
+            shard_versions: vec![5, 7],
+        }
+        .save(dir)
+        .unwrap();
+        let router = RouterState {
+            centroids: Codebook::from_flat(2, 2, vec![0.0, 0.0, 10.0, 10.0]),
+        };
+        write_atomic(dir, ROUTER_FILE, &router.encode()).unwrap();
+        for (s, v) in [(0usize, 5u64), (1, 7)] {
+            let state = ShardState {
+                shard: s as u32,
+                version: v,
+                merges: v,
+                rng_cursor: v * 50,
+                codebook: Codebook::from_flat(
+                    2,
+                    2,
+                    vec![s as f32; 4],
+                ),
+            };
+            write_atomic(dir, &shard_file(s), &state.encode()).unwrap();
+        }
+    }
+
+    #[test]
+    fn empty_dir_is_a_cold_start() {
+        let dir = tmp_dir("cold");
+        assert!(load_state(&dir).unwrap().is_none());
+    }
+
+    #[test]
+    fn good_state_loads_and_tmp_leftovers_are_ignored_not_removed() {
+        let dir = tmp_dir("good");
+        write_good_state(&dir);
+        // an interrupted checkpoint left garbage behind
+        std::fs::write(dir.join("shard-0.state.tmp"), b"half a write").unwrap();
+        std::fs::write(dir.join(format!("{MANIFEST_FILE}.tmp")), b"{").unwrap();
+        let state = load_state(&dir).unwrap().unwrap();
+        assert_eq!(state.shards.len(), 2);
+        assert_eq!(state.shards[1].version, 7);
+        assert_eq!(state.router.centroids.kappa(), 2);
+        // this loader is read-only (the inspect CLI uses it against
+        // possibly-live dirs): the tmp junk is ignored but left in place
+        assert!(dir.join("shard-0.state.tmp").exists(), "loader must not unlink");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_shard_file_is_a_hard_error() {
+        let dir = tmp_dir("corrupt");
+        write_good_state(&dir);
+        let path = shard_path(&dir, 1);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, bytes).unwrap();
+        let err = format!("{:#}", load_state(&dir).unwrap_err());
+        assert!(err.contains("shard-1.state"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_shard_file_is_a_hard_error() {
+        let dir = tmp_dir("missing");
+        write_good_state(&dir);
+        std::fs::remove_file(shard_path(&dir, 0)).unwrap();
+        assert!(load_state(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shard_id_mismatch_is_rejected() {
+        let dir = tmp_dir("id");
+        write_good_state(&dir);
+        // shard 1's file copied over shard 0's slot
+        std::fs::copy(shard_path(&dir, 1), shard_path(&dir, 0)).unwrap();
+        let err = format!("{:#}", load_state(&dir).unwrap_err());
+        assert!(err.contains("claims to be shard"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn wrong_shape_shard_file_is_rejected() {
+        let dir = tmp_dir("shape");
+        write_good_state(&dir);
+        let state = ShardState {
+            shard: 0,
+            version: 5,
+            merges: 5,
+            rng_cursor: 250,
+            // dim 3 where the manifest says 2
+            codebook: Codebook::from_flat(2, 3, vec![0.0; 6]),
+        };
+        write_atomic(&dir, &shard_file(0), &state.encode()).unwrap();
+        let err = format!("{:#}", load_state(&dir).unwrap_err());
+        assert!(err.contains("manifest expects"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -3,10 +3,16 @@
 
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::protocol::{read_frame, write_frame, Request, Response, StatsReply};
+
+/// Default per-attempt connect timeout.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
+/// Default extra attempts after the first (3 attempts total).
+const CONNECT_RETRIES: usize = 2;
 
 /// One connection to a `dalvq serve` instance.
 pub struct Client {
@@ -15,13 +21,58 @@ pub struct Client {
 }
 
 impl Client {
+    /// Connect with the default timeout and retry budget: each attempt is
+    /// bounded (a black-holed address cannot hang the caller the way a
+    /// plain `TcpStream::connect` can), and a server that is briefly not
+    /// up yet gets [`CONNECT_RETRIES`] more chances before the caller
+    /// sees a clear error. `dalvq loadtest --addr` fails fast through
+    /// this instead of stalling its whole connection fan-out.
     pub fn connect(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<Client> {
-        let stream = TcpStream::connect(&addr)
-            .with_context(|| format!("connecting to dalvq serve at {addr:?}"))?;
-        stream.set_nodelay(true).ok();
-        Ok(Client {
-            reader: BufReader::new(stream.try_clone()?),
-            writer: BufWriter::new(stream),
+        Self::connect_with(addr, CONNECT_TIMEOUT, CONNECT_RETRIES)
+    }
+
+    /// Connect with an explicit per-attempt `timeout` and `retries`
+    /// additional attempts (0 = exactly one try). Each attempt tries
+    /// every resolved address once under its own `timeout`; retries back
+    /// off linearly (100 ms, 200 ms, …), so the total budget is bounded
+    /// by `(retries + 1) * addrs * timeout` plus the backoffs — a few
+    /// seconds, never the minutes an OS-default connect can hang.
+    pub fn connect_with(
+        addr: impl ToSocketAddrs + std::fmt::Debug,
+        timeout: Duration,
+        retries: usize,
+    ) -> Result<Client> {
+        let addrs: Vec<std::net::SocketAddr> = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving dalvq serve address {addr:?}"))?
+            .collect();
+        if addrs.is_empty() {
+            bail!("dalvq serve address {addr:?} resolved to nothing");
+        }
+        let mut last_err = None;
+        for attempt in 0..=retries {
+            if attempt > 0 {
+                std::thread::sleep(Duration::from_millis(100 * attempt as u64));
+            }
+            for sa in &addrs {
+                match TcpStream::connect_timeout(sa, timeout) {
+                    Ok(stream) => {
+                        stream.set_nodelay(true).ok();
+                        return Ok(Client {
+                            reader: BufReader::new(stream.try_clone()?),
+                            writer: BufWriter::new(stream),
+                        });
+                    }
+                    Err(e) => last_err = Some(e),
+                }
+            }
+        }
+        Err(anyhow!(last_err.unwrap())).with_context(|| {
+            format!(
+                "connecting to dalvq serve at {addr:?} failed after {} \
+                 attempt(s) of {timeout:?} each — is the server up?",
+                retries + 1
+            )
         })
     }
 
@@ -75,6 +126,15 @@ impl Client {
     pub fn stats(&mut self) -> Result<StatsReply> {
         match self.call(&Request::Stats)? {
             Response::Stats(s) => Ok(s),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Force a durable checkpoint; returns the per-shard checkpointed
+    /// versions. Errors when the service has no `--state-dir`.
+    pub fn checkpoint(&mut self) -> Result<Vec<u64>> {
+        match self.call(&Request::Checkpoint)? {
+            Response::CheckpointAck { versions } => Ok(versions),
             other => bail!("unexpected response {other:?}"),
         }
     }

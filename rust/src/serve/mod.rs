@@ -28,9 +28,18 @@
 //!   length-prefixed binary [`protocol`], an in-crate [`Client`], and a
 //!   load generator ([`run_load`]) that measures throughput and latency
 //!   percentiles into [`crate::metrics`] types.
+//! * **Durability** — with a `state_dir`, a background checkpointer
+//!   ([`crate::persist`]) snapshots each shard's published epoch to disk
+//!   every `checkpoint_every` folds (atomic temp+fsync+rename; the read
+//!   and fold paths never block on the disk), and a restarted service
+//!   warm-starts from the saved state: router restored verbatim, fleets
+//!   seeded from the checkpointed codebooks at their saved versions
+//!   instead of retraining. The wire protocol's `Checkpoint` op forces a
+//!   flush.
 //!
-//! `dalvq serve` / `dalvq loadtest` are the CLI entry points; the
-//! `serve_e2e` integration test runs the whole stack in-process.
+//! `dalvq serve` / `dalvq loadtest` / `dalvq state inspect` are the CLI
+//! entry points; the `serve_e2e` and `persist_e2e` integration tests run
+//! the whole stack in-process.
 
 mod client;
 mod loadgen;

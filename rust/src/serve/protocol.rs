@@ -31,6 +31,9 @@ pub enum Request {
     Ingest { points: Vec<f32> },
     /// Service counters and shape.
     Stats,
+    /// Force a durable checkpoint of every shard that advanced since its
+    /// last one (errors when the service runs without a state dir).
+    Checkpoint,
 }
 
 /// What the service answers.
@@ -41,6 +44,8 @@ pub enum Response {
     Distortion { version: u64, value: f64 },
     IngestAck { accepted: u64, shed: u64 },
     Stats(StatsReply),
+    /// Per-shard last-checkpointed versions after a forced flush.
+    CheckpointAck { versions: Vec<u64> },
     Error { message: String },
 }
 
@@ -67,6 +72,10 @@ pub struct StatsReply {
     pub shard_versions: Vec<u64>,
     /// Reducer fold count per shard, shard order.
     pub shard_merges: Vec<u64>,
+    /// Last checkpointed version per shard (empty without persistence).
+    pub last_checkpoint: Vec<u64>,
+    /// Durable state directory (empty string = no persistence).
+    pub state_dir: String,
 }
 
 // ------------------------------------------------------------ frame I/O
@@ -116,12 +125,14 @@ const OP_NEAREST: u8 = 0x02;
 const OP_DISTORTION: u8 = 0x03;
 const OP_INGEST: u8 = 0x04;
 const OP_STATS: u8 = 0x05;
+const OP_CHECKPOINT: u8 = 0x06;
 
 const OP_CODES: u8 = 0x81;
 const OP_NEIGHBORS: u8 = 0x82;
 const OP_DISTORTION_R: u8 = 0x83;
 const OP_INGEST_ACK: u8 = 0x84;
 const OP_STATS_R: u8 = 0x85;
+const OP_CHECKPOINT_ACK: u8 = 0x86;
 const OP_ERROR: u8 = 0xFF;
 
 fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
@@ -143,6 +154,12 @@ fn put_u64s(out: &mut Vec<u8>, xs: &[u64]) {
     for x in xs {
         out.extend_from_slice(&x.to_le_bytes());
     }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(bytes);
 }
 
 /// A bounds-checked little-endian reader over a payload.
@@ -213,6 +230,12 @@ impl<'a> Cursor<'a> {
             .collect())
     }
 
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let raw = self.bytes(n)?;
+        Ok(String::from_utf8_lossy(raw).into_owned())
+    }
+
     fn finish(self) -> Result<()> {
         if self.pos == self.buf.len() {
             Ok(())
@@ -243,6 +266,7 @@ impl Request {
                 put_f32s(&mut out, points);
             }
             Request::Stats => out.push(OP_STATS),
+            Request::Checkpoint => out.push(OP_CHECKPOINT),
         }
         out
     }
@@ -255,6 +279,7 @@ impl Request {
             OP_DISTORTION => Request::Distortion { points: c.f32s()? },
             OP_INGEST => Request::Ingest { points: c.f32s()? },
             OP_STATS => Request::Stats,
+            OP_CHECKPOINT => Request::Checkpoint,
             op => bail!("unknown request opcode 0x{op:02x}"),
         };
         c.finish()?;
@@ -297,12 +322,16 @@ impl Response {
                 }
                 put_u64s(&mut out, &s.shard_versions);
                 put_u64s(&mut out, &s.shard_merges);
+                put_u64s(&mut out, &s.last_checkpoint);
+                put_str(&mut out, &s.state_dir);
+            }
+            Response::CheckpointAck { versions } => {
+                out.push(OP_CHECKPOINT_ACK);
+                put_u64s(&mut out, versions);
             }
             Response::Error { message } => {
                 out.push(OP_ERROR);
-                let bytes = message.as_bytes();
-                out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
-                out.extend_from_slice(bytes);
+                put_str(&mut out, message);
             }
         }
         out
@@ -336,14 +365,13 @@ impl Response {
                 queries: c.u64()?,
                 shard_versions: c.u64s()?,
                 shard_merges: c.u64s()?,
+                last_checkpoint: c.u64s()?,
+                state_dir: c.str()?,
             }),
-            OP_ERROR => {
-                let n = c.u32()? as usize;
-                let raw = c.bytes(n)?;
-                Response::Error {
-                    message: String::from_utf8_lossy(raw).into_owned(),
-                }
+            OP_CHECKPOINT_ACK => {
+                Response::CheckpointAck { versions: c.u64s()? }
             }
+            OP_ERROR => Response::Error { message: c.str()? },
             op => bail!("unknown response opcode 0x{op:02x}"),
         };
         c.finish()?;
@@ -370,6 +398,7 @@ mod tests {
         round_trip_req(Request::Distortion { points: vec![0.5; 7] });
         round_trip_req(Request::Ingest { points: vec![f32::MIN, f32::MAX] });
         round_trip_req(Request::Stats);
+        round_trip_req(Request::Checkpoint);
     }
 
     #[test]
@@ -395,8 +424,12 @@ mod tests {
             queries: 33,
             shard_versions: vec![1, 2, 1, 1],
             shard_merges: vec![2, 2, 1, 1],
+            last_checkpoint: vec![1, 2, 0, 1],
+            state_dir: "/var/lib/dalvq/state".into(),
         }));
         round_trip_resp(Response::Stats(StatsReply::default()));
+        round_trip_resp(Response::CheckpointAck { versions: vec![9, 8, 7] });
+        round_trip_resp(Response::CheckpointAck { versions: vec![] });
         round_trip_resp(Response::Error { message: "bad dim".into() });
     }
 

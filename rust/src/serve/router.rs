@@ -72,6 +72,14 @@ impl Router {
         Router { coarse }
     }
 
+    /// Rebuild a router from persisted centroids (the warm-restart path:
+    /// retraining from a fresh bootstrap sample would repartition the
+    /// space and orphan every saved shard codebook).
+    pub fn from_centroids(coarse: Codebook) -> Router {
+        assert!(coarse.kappa() >= 1, "router needs at least one shard");
+        Router { coarse }
+    }
+
     pub fn shards(&self) -> usize {
         self.coarse.kappa()
     }

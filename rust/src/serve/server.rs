@@ -165,7 +165,13 @@ fn handle(service: &VqService, req: Request) -> Response {
                 queries: s.queries,
                 shard_versions: s.shard_versions,
                 shard_merges: s.shard_merges,
+                last_checkpoint: s.last_checkpoint,
+                state_dir: s.state_dir.unwrap_or_default(),
             })
         }
+        Request::Checkpoint => match service.checkpoint_now() {
+            Ok(versions) => Response::CheckpointAck { versions },
+            Err(e) => Response::Error { message: format!("{e:#}") },
+        },
     }
 }

@@ -14,17 +14,21 @@
 //! service collapses to the original single-fleet deployment, bit-for-bit
 //! (same seeds, same data order).
 
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Barrier, Mutex};
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::cloud::{
     BlobHandle, BlobService, DeltaMsg, LatencyInjector, QueueService,
 };
 use crate::config::{ExperimentConfig, ServeConfig};
 use crate::data::Dataset;
+use crate::persist::{
+    self, Checkpointer, Manifest, RestoredState, RouterState, ShardState,
+};
 use crate::vq::{init_codebook, Codebook};
 
 use super::router::Router;
@@ -68,6 +72,11 @@ pub struct ServeStats {
     pub shard_versions: Vec<u64>,
     /// Reducer fold count per shard.
     pub shard_merges: Vec<u64>,
+    /// Durable state directory (`None` when the service runs without
+    /// persistence).
+    pub state_dir: Option<String>,
+    /// Last checkpointed version per shard (empty without persistence).
+    pub last_checkpoint: Vec<u64>,
 }
 
 /// What one shard's fleet reports at shutdown.
@@ -133,6 +142,13 @@ pub struct VqService {
     probe_n: usize,
     go: Arc<AtomicBool>,
     stop: Arc<AtomicBool>,
+    /// Durable state directory (None = no persistence).
+    state_dir: Option<PathBuf>,
+    /// Last checkpointed version per shard (always `S`-sized; only
+    /// meaningful with `state_dir`).
+    last_checkpoint: Arc<Vec<AtomicU64>>,
+    /// The background checkpointer; taken at shutdown.
+    checkpointer: Mutex<Option<Checkpointer>>,
 }
 
 impl VqService {
@@ -148,17 +164,32 @@ impl VqService {
         let kappa_shard = cfg.vq.kappa / s_count;
         let dataset = cfg.data.mixture.dataset(cfg.data.n_total, cfg.seed);
 
-        // The coarse quantizer: a short k-means pass over a bootstrap
-        // sample (prefix of the dataset — already i.i.d. from the
-        // mixture), then frozen for the service lifetime.
-        let sample_pts = serve.router_sample.min(dataset.len());
-        let router = Router::train(
-            &dataset.flat()[..sample_pts * dim],
-            dim,
-            s_count,
-            serve.router_iters,
-            cfg.seed,
-        );
+        // Warm restart: load and validate durable state before anything
+        // is built (a mismatched state dir must fail here, loudly, not
+        // seed a fleet with the wrong shapes).
+        let restored = match &serve.state_dir {
+            Some(dir) => load_restore(dir, cfg, serve)?,
+            None => None,
+        };
+
+        // The coarse quantizer: restored verbatim on a warm start (a
+        // retrained router would repartition the space and orphan every
+        // saved shard codebook); otherwise a short k-means pass over a
+        // bootstrap sample (prefix of the dataset — already i.i.d. from
+        // the mixture), then frozen for the service lifetime.
+        let router = match &restored {
+            Some(r) => Router::from_centroids(r.router.centroids.clone()),
+            None => {
+                let sample_pts = serve.router_sample.min(dataset.len());
+                Router::train(
+                    &dataset.flat()[..sample_pts * dim],
+                    dim,
+                    s_count,
+                    serve.router_iters,
+                    cfg.seed,
+                )
+            }
+        };
         let parts = router.partition(dataset.flat());
 
         let counters = Arc::new(ServeCounters::default());
@@ -174,18 +205,47 @@ impl VqService {
             let min_pts = cfg.m.max(kappa_shard);
             let part = ensure_min_points(part, dim, min_pts, dataset.flat());
             let shard_data = Dataset::new(part, dim);
-            let w0 = init_codebook(
-                cfg.vq.init,
-                kappa_shard,
-                dim,
-                shard_data.flat(),
-                // Distinct init stream per shard; shard 0 keeps the plain
-                // seed so `shards = 1` reproduces the original deployment.
-                cfg.seed ^ ((s as u64) << 17),
-            );
+            // Seed state: the checkpoint on a warm start (codebook,
+            // version, fold count, schedule cursor), a fresh init on a
+            // cold one.
+            let (w0, v0, merges0, t0) = match &restored {
+                Some(r) => {
+                    let st = &r.shards[s];
+                    let ppe = serve.points_per_exchange as u64;
+                    // The saved cursor counts the shard's folded points;
+                    // spread it across M workers, snapped down to an
+                    // exchange boundary.
+                    let t0 = st.rng_cursor / cfg.m as u64 / ppe * ppe;
+                    // The fold clock resumes from the saved *version* —
+                    // the folds the saved codebook actually contains.
+                    // The file's `merges` field can run ahead of it
+                    // (unpublished folds at checkpoint time, or a racy
+                    // counter sample); seeding from it would label
+                    // future publishes with folds this codebook never
+                    // absorbed.
+                    (st.codebook.clone(), st.version, st.version, t0)
+                }
+                None => {
+                    let w0 = init_codebook(
+                        cfg.vq.init,
+                        kappa_shard,
+                        dim,
+                        shard_data.flat(),
+                        // Distinct init stream per shard; shard 0 keeps
+                        // the plain seed so `shards = 1` reproduces the
+                        // original deployment.
+                        cfg.seed ^ ((s as u64) << 17),
+                    );
+                    (w0, 0, 0, 0)
+                }
+            };
 
-            let store = SnapshotStore::new(w0.clone());
-            let merges = Arc::new(AtomicU64::new(0));
+            let store = SnapshotStore::with_version(w0.clone(), v0);
+            let merges = Arc::new(AtomicU64::new(merges0));
+            // Keep the global fold counter cumulative too, so
+            // `ServeStats::merges` stays >= the summed versions across a
+            // warm restart (the invariant its doc states).
+            counters.merges.fetch_add(merges0, Ordering::Relaxed);
             let blob = BlobService::spawn(w0.clone());
             let (queue, queue_rx) = QueueService::create(1024);
 
@@ -207,6 +267,7 @@ impl VqService {
                             shard_merges,
                             w0,
                             publish_every,
+                            merges0,
                         )
                     })
                     .expect("spawning serve reducer thread")
@@ -234,6 +295,8 @@ impl VqService {
                     go: Arc::clone(&go),
                     sync_exchange: serve.sync_exchange,
                     max_points: serve.max_points_per_worker,
+                    t0,
+                    fold_base: merges0,
                 };
                 let q = queue.clone().with_latency(LatencyInjector::new(
                     serve.service_latency,
@@ -269,6 +332,38 @@ impl VqService {
         }
         ready.wait(); // engines built; the service is live
 
+        // Persistence: on a cold start write the full initial state
+        // (router + shard files + manifest) so the directory is
+        // restorable from the first moment, then hand the shard stores to
+        // the background checkpointer.
+        let last_checkpoint: Arc<Vec<AtomicU64>> = Arc::new(
+            (0..s_count)
+                .map(|s| {
+                    AtomicU64::new(
+                        restored.as_ref().map_or(0, |r| r.shards[s].version),
+                    )
+                })
+                .collect(),
+        );
+        let checkpointer = match &serve.state_dir {
+            Some(dir) => {
+                if restored.is_none() {
+                    write_initial_state(dir, &router, &shards, cfg, serve)?;
+                }
+                Some(Checkpointer::spawn(
+                    dir.clone(),
+                    shards.iter().map(|f| Arc::clone(&f.store)).collect(),
+                    shards.iter().map(|f| Arc::clone(&f.merges)).collect(),
+                    Arc::clone(&last_checkpoint),
+                    serve.checkpoint_every,
+                    serve.points_per_exchange,
+                    cfg.vq.kappa,
+                    dim,
+                ))
+            }
+            None => None,
+        };
+
         Ok(VqService {
             router,
             shards,
@@ -280,6 +375,9 @@ impl VqService {
             probe_n: serve.probe_n,
             go,
             stop,
+            state_dir: serve.state_dir.clone(),
+            last_checkpoint,
+            checkpointer: Mutex::new(checkpointer),
         })
     }
 
@@ -354,6 +452,35 @@ impl VqService {
 
     pub fn counters(&self) -> &Arc<ServeCounters> {
         &self.counters
+    }
+
+    /// The durable state directory, when persistence is on.
+    pub fn state_dir(&self) -> Option<&Path> {
+        self.state_dir.as_deref()
+    }
+
+    /// Last checkpointed version per shard (empty without persistence).
+    pub fn last_checkpoint(&self) -> Vec<u64> {
+        if self.state_dir.is_none() {
+            return Vec::new();
+        }
+        self.last_checkpoint
+            .iter()
+            .map(|v| v.load(Ordering::Acquire))
+            .collect()
+    }
+
+    /// Force a checkpoint of every shard that advanced since its last
+    /// one; blocks until the files are durable. Returns the per-shard
+    /// checkpointed versions (the protocol's `Checkpoint` op lands here).
+    pub fn checkpoint_now(&self) -> Result<Vec<u64>> {
+        let guard = self.checkpointer.lock().unwrap_or_else(|e| e.into_inner());
+        match guard.as_ref() {
+            Some(ck) => ck.flush(),
+            None => Err(anyhow!(
+                "service has no durable state (started without --state-dir)"
+            )),
+        }
     }
 
     // -------------------------------------------------------- query path
@@ -498,6 +625,11 @@ impl VqService {
                 .iter()
                 .map(|s| s.merges.load(Ordering::Relaxed))
                 .collect(),
+            state_dir: self
+                .state_dir
+                .as_ref()
+                .map(|d| d.display().to_string()),
+            last_checkpoint: self.last_checkpoint(),
         }
     }
 
@@ -545,6 +677,17 @@ impl VqService {
             global_flat.extend_from_slice(final_shared.flat());
             shard_outcomes.push(ShardOutcome { shard: s, merges, final_shared });
         }
+        // Fleets quiesced and final epochs published: drain the
+        // checkpointer so the state dir carries everything that was
+        // learned (its final pass sees the post-join versions).
+        if let Some(ck) = self
+            .checkpointer
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+        {
+            ck.stop()?;
+        }
         Ok(ServeOutcome {
             workers,
             merges: total_merges,
@@ -552,6 +695,95 @@ impl VqService {
             shards: shard_outcomes,
         })
     }
+}
+
+/// Load durable state for a warm start and validate it against the
+/// deployment config. `Ok(None)` = cold start (no manifest yet). Any
+/// shape mismatch — shard count, total kappa, dim — is a hard error:
+/// seeding a fleet from a codebook of the wrong shape would corrupt it
+/// silently, and retraining over state the operator asked us to keep
+/// would be data loss.
+fn load_restore(
+    dir: &Path,
+    cfg: &ExperimentConfig,
+    serve: &ServeConfig,
+) -> Result<Option<RestoredState>> {
+    // The serving startup owns the state dir: sweep stale `.tmp` files
+    // from interrupted checkpoints before loading. (The shared loader
+    // itself never removes anything — `dalvq state inspect` reads
+    // through it against possibly-live directories.)
+    persist::sweep_tmp(dir);
+    let Some(state) = persist::load_state(dir)
+        .with_context(|| format!("restoring state from {}", dir.display()))?
+    else {
+        return Ok(None);
+    };
+    let m = &state.manifest;
+    if m.shards != serve.shards || m.kappa != cfg.vq.kappa || m.dim != cfg.dim() {
+        return Err(anyhow!(
+            "state dir {} was written by a deployment with shards={} \
+             kappa={} dim={}, but this config has shards={} kappa={} dim={}; \
+             pass a matching config or a fresh --state-dir",
+            dir.display(),
+            m.shards,
+            m.kappa,
+            m.dim,
+            serve.shards,
+            cfg.vq.kappa,
+            cfg.dim()
+        ));
+    }
+    // The saved RNG cursors are only exact when the exchange window is
+    // unchanged (each fold = points_per_exchange points); a silent
+    // mismatch would resume every schedule at the wrong position.
+    if m.points_per_exchange != serve.points_per_exchange {
+        return Err(anyhow!(
+            "state dir {} was checkpointed at points_per_exchange = {}, but \
+             this config uses {}; the saved schedule cursors would be \
+             misinterpreted — keep the window or start a fresh --state-dir",
+            dir.display(),
+            m.points_per_exchange,
+            serve.points_per_exchange
+        ));
+    }
+    Ok(Some(state))
+}
+
+/// Cold-start bootstrap of a state directory: router + every shard's
+/// initial state + manifest, so the directory is restorable before the
+/// first fold (a service killed seconds after start must still warm-
+/// restart cleanly).
+fn write_initial_state(
+    dir: &Path,
+    router: &Router,
+    shards: &[ShardFleet],
+    cfg: &ExperimentConfig,
+    serve: &ServeConfig,
+) -> Result<()> {
+    let router_state = RouterState { centroids: router.centroids().clone() };
+    persist::write_atomic(dir, persist::ROUTER_FILE, &router_state.encode())?;
+    let mut versions = Vec::with_capacity(shards.len());
+    for (s, fleet) in shards.iter().enumerate() {
+        let snap = fleet.store.load();
+        let state = ShardState {
+            shard: s as u32,
+            version: snap.version,
+            merges: fleet.merges.load(Ordering::Relaxed),
+            rng_cursor: snap.version * serve.points_per_exchange as u64,
+            codebook: snap.codebook.clone(),
+        };
+        persist::write_atomic(dir, &persist::shard_file(s), &state.encode())?;
+        versions.push(snap.version);
+    }
+    Manifest {
+        format: persist::FORMAT,
+        shards: shards.len(),
+        kappa: cfg.vq.kappa,
+        dim: cfg.dim(),
+        points_per_exchange: serve.points_per_exchange,
+        shard_versions: versions,
+    }
+    .save(dir)
 }
 
 /// Pad a shard's bootstrap region up to `min_pts` points: cycle the
@@ -578,7 +810,10 @@ fn ensure_min_points(
 }
 
 /// The serving reducer: the cloud reducer's fold-and-put loop plus epoch
-/// publication for the read path. One per shard.
+/// publication for the read path. One per shard. `initial_merges` seeds
+/// the fold clock on a warm restart, so published versions continue the
+/// saved sequence instead of restarting at 1.
+#[allow(clippy::too_many_arguments)]
 fn run_serving_reducer(
     rx: mpsc::Receiver<DeltaMsg>,
     mut blob: BlobHandle,
@@ -587,9 +822,10 @@ fn run_serving_reducer(
     shard_merges: Arc<AtomicU64>,
     w0: Codebook,
     publish_every: u64,
+    initial_merges: u64,
 ) -> Result<(u64, Codebook)> {
     let mut w_srd = w0;
-    let mut merges: u64 = 0;
+    let mut merges: u64 = initial_merges;
     for msg in rx.iter() {
         w_srd.apply_delta(&msg.delta);
         merges += 1;
@@ -690,14 +926,14 @@ mod tests {
 
         let eval = cfg.data.mixture.eval_sample(128, cfg.seed);
         let (_, codes, dists) = svc.query_nearest(&eval);
-        assert_eq!(codes.len(), 64);
+        assert_eq!(codes.len(), 128);
         // global codes span the whole kappa range, not one shard's
         assert!(codes.iter().all(|&c| (c as usize) < 8));
         assert!(dists.iter().all(|d| d.is_finite() && *d >= 0.0));
 
         // ingest fans out across shards without error
         let (acc, shed) = svc.ingest(&eval).unwrap();
-        assert_eq!(acc + shed, 64);
+        assert_eq!(acc + shed, 128);
 
         let stats = svc.stats();
         assert_eq!(stats.shards, 4);

@@ -76,9 +76,17 @@ pub struct SnapshotStore {
 
 impl SnapshotStore {
     pub fn new(w0: Codebook) -> Arc<Self> {
+        Self::with_version(w0, 0)
+    }
+
+    /// A store whose initial epoch is already at `version` — the warm
+    /// restart path: a restored shard resumes publishing *from* its
+    /// checkpointed version, keeping the freshness clock monotone across
+    /// restarts.
+    pub fn with_version(w0: Codebook, version: u64) -> Arc<Self> {
         Arc::new(Self {
-            cell: Mutex::new(Arc::new(Snapshot { codebook: w0, version: 0 })),
-            version: AtomicU64::new(0),
+            cell: Mutex::new(Arc::new(Snapshot { codebook: w0, version })),
+            version: AtomicU64::new(version),
         })
     }
 
@@ -116,6 +124,15 @@ mod tests {
         let new = store.load();
         assert_eq!(new.version, 7);
         assert_eq!(new.codebook.flat(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn with_version_seeds_the_freshness_clock() {
+        let store =
+            SnapshotStore::with_version(Codebook::from_flat(1, 1, vec![3.0]), 42);
+        assert_eq!(store.version(), 42);
+        assert_eq!(store.load().version, 42);
+        assert_eq!(store.load().codebook.flat(), &[3.0]);
     }
 
     #[test]

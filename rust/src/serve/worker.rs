@@ -53,6 +53,17 @@ pub struct ServeWorkerParams {
     pub sync_exchange: bool,
     /// Stop after training this many points (0 = open-ended).
     pub max_points: u64,
+    /// Initial training-step cursor (a multiple of
+    /// `points_per_exchange`). 0 on a cold start; a warm restart seeds it
+    /// from the checkpoint's RNG cursor so a decaying schedule resumes
+    /// its position instead of restarting hot. `max_points` counts from
+    /// here (points trained *this run*).
+    pub t0: u64,
+    /// The shard reducer's fold count at startup (restored merges on a
+    /// warm start). Sync exchanges wait for `fold_base + delivered` folds
+    /// — without the base, a resumed blob version would satisfy the wait
+    /// before the delta actually folded.
+    pub fold_base: u64,
 }
 
 /// What a serving worker reports at shutdown.
@@ -102,9 +113,13 @@ pub fn run_serve_worker(
     let mut delta_window = Delta::zeros(kappa, dim);
     let mut chunk_buf = vec![0.0f32; params.tau * dim];
     let mut eps_buf = vec![0.0f32; params.tau];
+    assert!(
+        params.t0 % params.points_per_exchange as u64 == 0,
+        "t0 must sit on an exchange boundary"
+    );
     let mut queue = queue;
     let mut blob = blob;
-    let mut t: u64 = 0;
+    let mut t: u64 = params.t0;
     let mut seq: u64 = 0;
     let mut absorbed: u64 = 0;
     let mut exchanges_completed = 0u64;
@@ -120,10 +135,10 @@ pub fn run_serve_worker(
     let run_start = Instant::now();
 
     while !params.stop.load(Ordering::Acquire)
-        && (params.max_points == 0 || t < params.max_points)
+        && (params.max_points == 0 || t - params.t0 < params.max_points)
     {
         if params.point_compute > 0.0 {
-            let target = params.point_compute * t as f64;
+            let target = params.point_compute * (t - params.t0) as f64;
             let actual = run_start.elapsed().as_secs_f64();
             if target > actual {
                 std::thread::sleep(Duration::from_secs_f64(target - actual));
@@ -210,7 +225,7 @@ pub fn run_serve_worker(
                 let mut stop_seen: Option<Instant> = None;
                 loop {
                     let (w_snap, version) = blob.get()?;
-                    if version >= delivered_folds {
+                    if version >= params.fold_base + delivered_folds {
                         // delta_window is empty: nothing to rebase.
                         w = w_snap;
                         break;
@@ -222,7 +237,7 @@ pub fn run_serve_worker(
                                 "sync exchange never folded (fold {} of {}); \
                                  reducer gone?",
                                 version,
-                                delivered_folds
+                                params.fold_base + delivered_folds
                             ));
                         }
                     }
@@ -272,7 +287,7 @@ pub fn run_serve_worker(
 
     Ok(ServeWorkerOutcome {
         worker_id: params.worker_id,
-        points_trained: t,
+        points_trained: t - params.t0,
         points_absorbed: absorbed,
         exchanges_started: seq,
         exchanges_completed,

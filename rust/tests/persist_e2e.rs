@@ -1,0 +1,347 @@
+//! Durable-state end-to-end: checkpoint a serving fleet, tear it down,
+//! restart from the same `--state-dir`, and verify the restarted service
+//! serves **byte-identical** codebooks at versions `>= V` without
+//! retraining — for the single-shard and the 4-shard deployment, under
+//! the determinism knobs (`start_paused` + `sync_exchange` +
+//! `max_points_per_worker`), so "identical" means bitwise, not
+//! approximately.
+//!
+//! Also pinned here: a checkpoint interrupted mid-write (a stale `.tmp`
+//! left in the directory) is ignored on restore rather than corrupting
+//! state; a state dir written at one shape is rejected loudly by a
+//! mismatched config; the `Checkpoint` wire op and the `StatsReply`
+//! persistence fields work over TCP.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use dalvq::config::{ExperimentConfig, SchemeConfig, ServeConfig};
+use dalvq::persist;
+use dalvq::serve::{Client, Server, VqService};
+use dalvq::sim::DelayModel;
+use dalvq::vq::Schedule;
+
+/// Real-time fleets; run tests one at a time (same discipline as
+/// serve_e2e.rs).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const PPE: usize = 50; // points per exchange
+const MAX_POINTS: u64 = 300; // per worker, per run => 6 folds/shard at m=1
+
+/// A fresh state directory unique to `tag` (removed first, so reruns of a
+/// failed test never see stale state).
+fn state_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("dalvq-persist-e2e-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The deterministic deployment of the serve_determinism suite, plus a
+/// state dir: one worker per shard, synchronous exchanges, bounded
+/// training, paused start.
+fn durable_cfg(shards: usize, dir: &Path) -> (ExperimentConfig, ServeConfig) {
+    let mut cfg = ExperimentConfig::default();
+    cfg.m = 1;
+    cfg.data.mixture.components = 4;
+    cfg.data.mixture.dim = 2;
+    cfg.data.n_total = 2_000;
+    cfg.data.eval_points = 128;
+    cfg.vq.kappa = 8;
+    cfg.vq.schedule = Schedule::Constant { eps0: 0.02 };
+    cfg.scheme = SchemeConfig::AsyncDelta {
+        tau: 10,
+        up_delay: DelayModel::Instant,
+        down_delay: DelayModel::Instant,
+    };
+    let mut serve = ServeConfig::default();
+    serve.shards = shards;
+    serve.probe_n = 2.min(shards);
+    serve.points_per_exchange = PPE;
+    serve.ingest_queue = 1_024;
+    serve.start_paused = true;
+    serve.sync_exchange = true;
+    serve.max_points_per_worker = MAX_POINTS;
+    serve.state_dir = Some(dir.to_path_buf());
+    serve.checkpoint_every = 1_000_000; // checkpoints are explicit here
+    (cfg, serve)
+}
+
+fn wait_versions_at_least(svc: &VqService, target: u64) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let versions = svc.shard_versions();
+        if versions.iter().all(|&v| v >= target) {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "shards never reached version {target}: {versions:?}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn codebook_bytes(svc: &VqService) -> Vec<Vec<u32>> {
+    (0..svc.shards())
+        .map(|s| {
+            svc.shard_snapshot(s)
+                .codebook
+                .flat()
+                .iter()
+                .map(|x| x.to_bits())
+                .collect()
+        })
+        .collect()
+}
+
+/// Train a fleet to exactly `V` folds per shard, checkpoint, and shut it
+/// down. Returns the checkpointed versions and per-shard codebook bits.
+fn train_and_checkpoint(
+    cfg: &ExperimentConfig,
+    serve: &ServeConfig,
+) -> (Vec<u64>, Vec<Vec<u32>>, Vec<u32>) {
+    let svc = VqService::start(cfg, serve).unwrap();
+    // Preload a deterministic ingest stream while the fleet is paused
+    // (the same discipline as the determinism suite).
+    for batch_id in 0..10u64 {
+        let batch = cfg.data.mixture.generate(32, cfg.seed, 1_000 + batch_id);
+        let (accepted, shed) = svc.ingest(&batch).unwrap();
+        assert_eq!(accepted, 32);
+        assert_eq!(shed, 0);
+    }
+    svc.resume();
+    let expected_folds = MAX_POINTS / PPE as u64;
+    wait_versions_at_least(&svc, expected_folds);
+
+    let ckpt = svc.checkpoint_now().unwrap();
+    assert_eq!(ckpt.len(), serve.shards);
+    assert!(ckpt.iter().all(|&v| v >= expected_folds), "{ckpt:?}");
+    assert_eq!(svc.last_checkpoint(), ckpt);
+
+    let books = codebook_bytes(&svc);
+    let router_bits: Vec<u32> = svc
+        .router()
+        .centroids()
+        .flat()
+        .iter()
+        .map(|x| x.to_bits())
+        .collect();
+    svc.shutdown().unwrap();
+    (ckpt, books, router_bits)
+}
+
+/// The acceptance criterion: checkpoint at versions `V`, kill, restart
+/// with the same state dir — the restarted service serves byte-identical
+/// codebooks at versions `>= V` without retraining.
+fn warm_restart_is_byte_identical(shards: usize) {
+    let dir = state_dir(&format!("warm-s{shards}"));
+    let (cfg, serve) = durable_cfg(shards, &dir);
+    let (ckpt, books, router_bits) = train_and_checkpoint(&cfg, &serve);
+
+    // Restart against the same directory, paused: nothing may train, so
+    // what the service serves IS what restore produced.
+    let svc2 = VqService::start(&cfg, &serve).unwrap();
+    assert_eq!(
+        svc2.shard_versions(),
+        ckpt,
+        "restored service must resume at the checkpointed versions"
+    );
+    assert_eq!(
+        codebook_bytes(&svc2),
+        books,
+        "restored codebooks must be byte-identical to the checkpoint"
+    );
+    let router2: Vec<u32> = svc2
+        .router()
+        .centroids()
+        .flat()
+        .iter()
+        .map(|x| x.to_bits())
+        .collect();
+    assert_eq!(router2, router_bits, "router must be restored, not retrained");
+
+    // The read path answers from the restored epochs immediately.
+    let eval = cfg.data.mixture.eval_sample(64, cfg.seed);
+    let (version, codes, dists) = svc2.query_nearest(&eval);
+    assert_eq!(version, ckpt.iter().sum::<u64>());
+    assert_eq!(codes.len(), 64);
+    assert!(codes.iter().all(|&c| (c as usize) < cfg.vq.kappa));
+    assert!(dists.iter().all(|d| d.is_finite()));
+    svc2.shutdown().unwrap();
+
+    // Third incarnation: resume training — versions continue past V
+    // (monotone across restarts; the fleet picks up where it left off
+    // rather than retraining from scratch).
+    let svc3 = VqService::start(&cfg, &serve).unwrap();
+    svc3.resume();
+    let expected = ckpt[0] + MAX_POINTS / PPE as u64;
+    wait_versions_at_least(&svc3, expected);
+    assert!(svc3.shard_versions().iter().all(|&v| v >= ckpt[0]));
+    let out = svc3.shutdown().unwrap();
+    assert!(out.merges >= expected * shards as u64);
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn warm_restart_single_shard() {
+    let _serial = serial();
+    warm_restart_is_byte_identical(1);
+}
+
+#[test]
+fn warm_restart_four_shards() {
+    let _serial = serial();
+    warm_restart_is_byte_identical(4);
+}
+
+/// A checkpoint interrupted mid-write leaves a `.tmp` behind; restore
+/// must ignore it and come up from the last complete state.
+#[test]
+fn interrupted_checkpoint_tmp_is_ignored_on_restore() {
+    let _serial = serial();
+    let dir = state_dir("interrupted");
+    let (cfg, serve) = durable_cfg(4, &dir);
+    let (ckpt, books, _) = train_and_checkpoint(&cfg, &serve);
+
+    // Simulate a crash mid-checkpoint: half-written temp files next to
+    // the good state.
+    std::fs::write(dir.join("shard-0.state.tmp"), b"half a shard write").unwrap();
+    std::fs::write(dir.join("manifest.json.tmp"), b"{\"trunc").unwrap();
+
+    let svc = VqService::start(&cfg, &serve).unwrap();
+    assert_eq!(svc.shard_versions(), ckpt);
+    assert_eq!(codebook_bytes(&svc), books);
+    svc.shutdown().unwrap();
+    assert!(
+        !dir.join("shard-0.state.tmp").exists(),
+        "stale tmp files must be swept, not read"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A state dir written at one shape must be rejected by a mismatched
+/// config — wrong dim, wrong shard count — never silently retrained over
+/// or loaded into the wrong fleet.
+#[test]
+fn mismatched_config_is_rejected_on_restore() {
+    let _serial = serial();
+    let dir = state_dir("mismatch");
+    let (cfg, serve) = durable_cfg(4, &dir);
+    train_and_checkpoint(&cfg, &serve);
+
+    // Wrong dimensionality (saved dim 2, config dim 3). (`err()` rather
+    // than `unwrap_err()`: VqService deliberately has no Debug impl.)
+    let (mut cfg3, serve3) = durable_cfg(4, &dir);
+    cfg3.data.mixture.dim = 3;
+    let err = VqService::start(&cfg3, &serve3)
+        .err()
+        .expect("dim mismatch must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("dim"), "{msg}");
+
+    // Wrong shard count (saved 4, config 2).
+    let (cfg2, serve2) = durable_cfg(2, &dir);
+    let err = VqService::start(&cfg2, &serve2)
+        .err()
+        .expect("shard-count mismatch must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shards"), "{msg}");
+
+    // Changed exchange window (saved 50, config 100): the saved schedule
+    // cursors would be misinterpreted, so restore refuses.
+    let (cfg5, mut serve5) = durable_cfg(4, &dir);
+    serve5.points_per_exchange = 100;
+    let err = VqService::start(&cfg5, &serve5)
+        .err()
+        .expect("points_per_exchange mismatch must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("points_per_exchange"), "{msg}");
+
+    // A corrupted shard file is a hard error, not a silent cold start.
+    let shard_path = dir.join(persist::shard_file(1));
+    let mut bytes = std::fs::read(&shard_path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&shard_path, bytes).unwrap();
+    let (cfg4, serve4) = durable_cfg(4, &dir);
+    assert!(VqService::start(&cfg4, &serve4).is_err());
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The wire surface: `Checkpoint` forces a durable flush and acks with
+/// per-shard versions; `Stats` reports the state dir and last-checkpoint
+/// vector; a service without persistence answers `Checkpoint` with a
+/// clean error, not a dropped connection.
+#[test]
+fn checkpoint_and_stats_over_tcp() {
+    let _serial = serial();
+    let dir = state_dir("tcp");
+    let (cfg, serve) = durable_cfg(1, &dir);
+    let service = Arc::new(VqService::start(&cfg, &serve).unwrap());
+    let server = Server::start(Arc::clone(&service), &serve.addr).unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+
+    service.resume();
+    let folds = MAX_POINTS / PPE as u64;
+    wait_versions_at_least(&service, folds);
+
+    let versions = client.checkpoint().unwrap();
+    assert_eq!(versions.len(), 1);
+    assert!(versions[0] >= folds, "{versions:?}");
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.state_dir, dir.display().to_string());
+    assert_eq!(stats.last_checkpoint, versions);
+    assert_eq!(stats.shard_versions.len(), 1);
+
+    server.shutdown().unwrap();
+    service.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+
+    // No persistence: Checkpoint answers with a clean error and the
+    // connection survives; Stats reports an empty state dir.
+    let (cfg, mut serve) = durable_cfg(1, &state_dir("tcp-none"));
+    serve.state_dir = None;
+    let service = Arc::new(VqService::start(&cfg, &serve).unwrap());
+    let server = Server::start(Arc::clone(&service), &serve.addr).unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let err = format!("{:#}", client.checkpoint().unwrap_err());
+    assert!(err.contains("state"), "{err}");
+    let stats = client.stats().unwrap();
+    assert!(stats.state_dir.is_empty());
+    assert!(stats.last_checkpoint.is_empty());
+    server.shutdown().unwrap();
+    service.shutdown().unwrap();
+}
+
+/// The loadtest path must fail fast with a clear error when no server is
+/// listening — bounded connect attempts, not a hang.
+#[test]
+fn client_connect_fails_fast_when_server_is_down() {
+    // A port with nothing behind it: bind-then-drop guarantees refusal.
+    let addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap()
+    };
+    let start = Instant::now();
+    let err = Client::connect_with(addr, Duration::from_millis(500), 1)
+        .map(|_| ())
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("attempt"), "{msg}");
+    // 2 bounded attempts + one 100 ms backoff: well under the 30 s a
+    // default no-timeout connect could burn on an unroutable address.
+    assert!(
+        start.elapsed() < Duration::from_secs(10),
+        "connect did not fail fast: {:?}",
+        start.elapsed()
+    );
+}

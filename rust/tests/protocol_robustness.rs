@@ -42,18 +42,25 @@ fn rand_u64s(rng: &mut Rng, max_len: usize) -> Vec<u64> {
     (0..n).map(|_| rng.next_u64()).collect()
 }
 
+fn rand_string(rng: &mut Rng, max_len: usize) -> String {
+    let len = rng.usize(max_len + 1);
+    (0..len).map(|_| (b'a' + rng.usize(26) as u8) as char).collect()
+}
+
 fn rand_request(rng: &mut Rng) -> Request {
-    match rng.usize(5) {
+    match rng.usize(6) {
         0 => Request::Encode { points: rand_f32s(rng, 64) },
         1 => Request::Nearest { points: rand_f32s(rng, 64) },
         2 => Request::Distortion { points: rand_f32s(rng, 64) },
         3 => Request::Ingest { points: rand_f32s(rng, 64) },
+        4 => Request::Checkpoint,
         _ => Request::Stats,
     }
 }
 
 fn rand_response(rng: &mut Rng) -> Response {
-    match rng.usize(6) {
+    match rng.usize(7) {
+        6 => Response::CheckpointAck { versions: rand_u64s(rng, 16) },
         0 => Response::Codes {
             version: rng.next_u64(),
             codes: rand_u32s(rng, 64),
@@ -84,13 +91,10 @@ fn rand_response(rng: &mut Rng) -> Response {
             queries: rng.next_u64(),
             shard_versions: rand_u64s(rng, 16),
             shard_merges: rand_u64s(rng, 16),
+            last_checkpoint: rand_u64s(rng, 16),
+            state_dir: rand_string(rng, 32),
         }),
-        _ => {
-            let len = rng.usize(40);
-            let msg: String =
-                (0..len).map(|_| (b'a' + rng.usize(26) as u8) as char).collect();
-            Response::Error { message: msg }
-        }
+        _ => Response::Error { message: rand_string(rng, 40) },
     }
 }
 
@@ -167,8 +171,8 @@ fn empty_payload_is_an_error() {
 
 #[test]
 fn unknown_opcodes_err_for_both_directions() {
-    let known_req = [0x01, 0x02, 0x03, 0x04, 0x05];
-    let known_resp = [0x81, 0x82, 0x83, 0x84, 0x85, 0xFF];
+    let known_req = [0x01, 0x02, 0x03, 0x04, 0x05, 0x06];
+    let known_resp = [0x81, 0x82, 0x83, 0x84, 0x85, 0x86, 0xFF];
     for op in 0..=255u8 {
         if !known_req.contains(&op) {
             assert!(Request::decode(&[op]).is_err(), "req op 0x{op:02x}");
@@ -203,11 +207,25 @@ fn lying_element_counts_err_without_overallocating() {
     wire.extend_from_slice(&u32::MAX.to_le_bytes());
     assert!(Response::decode(&wire).is_err());
 
-    // Stats reply with lying shard-vector counts
+    // Stats reply with lying shard-vector counts: strip the four empty
+    // tail vectors (shard_versions, shard_merges, last_checkpoint,
+    // state_dir — one u32 count each) and replace with a lying pair
     let good = Response::Stats(StatsReply::default()).encode();
-    let mut wire = good[..good.len() - 8].to_vec(); // strip both empty vecs
+    let mut wire = good[..good.len() - 16].to_vec();
     wire.extend_from_slice(&9u32.to_le_bytes()); // shard_versions: claims 9
     wire.extend_from_slice(&0u32.to_le_bytes()); // shard_merges: 0
+    assert!(Response::decode(&wire).is_err());
+
+    // CheckpointAck whose version count lies
+    let mut wire = vec![0x86u8];
+    wire.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert!(Response::decode(&wire).is_err());
+
+    // Stats whose state_dir length outruns the payload
+    let good = Response::Stats(StatsReply::default()).encode();
+    let mut wire = good[..good.len() - 4].to_vec(); // strip state_dir count
+    wire.extend_from_slice(&1_000u32.to_le_bytes());
+    wire.extend_from_slice(b"short");
     assert!(Response::decode(&wire).is_err());
 
     // Error response whose message length lies
