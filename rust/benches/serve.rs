@@ -3,7 +3,9 @@
 //! the sharded-routing sweep (`S ∈ {1, 2, 4}`) and the worker-count sweep
 //! (`M ∈ {1, 2, 4, 8}`) under a fixed mixed ingest/query load, and the
 //! durability comparison: time-to-first-trained-snapshot from a cold
-//! start vs a warm restart out of a `--state-dir` checkpoint.
+//! start vs a warm restart out of a `--state-dir` checkpoint, plus the
+//! rebalance sweep — ingest imbalance before/after one online epoch swap
+//! under a zipf-skewed write-heavy load, and the swap's wall cost.
 //!
 //! ```bash
 //! cargo bench --bench serve
@@ -16,7 +18,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use dalvq::config::presets;
-use dalvq::serve::{run_load, LoadSpec, Server, VqService};
+use dalvq::serve::{max_over_mean, run_load, LoadSpec, Server, VqService};
 
 fn main() {
     let p = presets::serve();
@@ -30,7 +32,7 @@ fn main() {
         p.serve.point_compute * 1e6,
     );
 
-    let service = Arc::new(VqService::start(&p.base, &p.serve).expect("service"));
+    let service = VqService::start(&p.base, &p.serve).expect("service");
     let server =
         Server::start(Arc::clone(&service), &p.serve.addr).expect("server");
     let addr = server.local_addr().to_string();
@@ -48,6 +50,7 @@ fn main() {
             requests_per_conn: 400,
             batch_points: 64,
             ingest_frac,
+            skew: 0.0,
             seed: p.base.seed,
         };
         let report = run_load(&addr, &spec, &p.base.data.mixture).expect("load");
@@ -158,13 +161,65 @@ fn main() {
         dir.display(),
     );
     let _ = std::fs::remove_dir_all(&dir);
+
+    // ------------------------------------------------- rebalance sweep
+    // The live-rebalancing subsystem's headline numbers: how skewed the
+    // frozen partition gets under a zipf-hot write-heavy load, what one
+    // online epoch swap costs (quiesce -> checkpoint -> ingest-weighted
+    // retrain -> row migration -> fleet respawn), and where per-shard
+    // ingest imbalance lands once the new partition serves the same load.
+    kit::section("live shard rebalancing — S = 4, zipf-2 write-heavy load");
+    let dir = std::env::temp_dir()
+        .join(format!("dalvq-bench-rebalance-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let p = presets::serve_rebalancing(4, &dir, 0.0); // manual trigger
+    let service = VqService::start(&p.base, &p.serve).expect("service");
+    let server =
+        Server::start(Arc::clone(&service), &p.serve.addr).expect("server");
+    let addr = server.local_addr().to_string();
+    let spec = LoadSpec {
+        connections: 8,
+        requests_per_conn: 200,
+        batch_points: 64,
+        ingest_frac: 0.8,
+        skew: 2.0,
+        seed: p.base.seed,
+    };
+    run_load(&addr, &spec, &p.base.data.mixture).expect("skewed load");
+    let before = service.stats();
+    let swap_start = Instant::now();
+    let out = service.rebalance().expect("rebalance");
+    let swap_ms = swap_start.elapsed().as_secs_f64() * 1e3;
+    run_load(&addr, &spec, &p.base.data.mixture).expect("post-swap load");
+    let after = service.stats();
+    println!(
+        "frozen epoch 0:  max/mean ingest {:>5.2} over {:>7} pts  {:?}",
+        max_over_mean(&before.shard_ingest),
+        before.shard_ingest.iter().sum::<u64>(),
+        before.shard_ingest,
+    );
+    println!(
+        "epoch swap:      {swap_ms:>7.1} ms ({} prototype rows migrated, \
+         router v{})",
+        out.moved_rows, out.router_version,
+    );
+    println!(
+        "rebalanced v{}:  max/mean ingest {:>5.2} over {:>7} pts  {:?}",
+        after.router_version,
+        max_over_mean(&after.shard_ingest),
+        after.shard_ingest.iter().sum::<u64>(),
+        after.shard_ingest,
+    );
+    server.shutdown().expect("server shutdown");
+    service.shutdown().expect("service shutdown");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Stand up the preset's stack, drive the standard mixed load (8 conns x
 /// 400 reqs, 64 pts/batch, 25% ingest), tear it down. Both sweep loops
 /// (S and M) share this so the load shape stays identical across axes.
 fn mixed_load_sweep(p: &presets::ServePreset) -> (dalvq::serve::LoadReport, u64) {
-    let service = Arc::new(VqService::start(&p.base, &p.serve).expect("service"));
+    let service = VqService::start(&p.base, &p.serve).expect("service");
     let server =
         Server::start(Arc::clone(&service), &p.serve.addr).expect("server");
     let addr = server.local_addr().to_string();
@@ -173,6 +228,7 @@ fn mixed_load_sweep(p: &presets::ServePreset) -> (dalvq::serve::LoadReport, u64)
         requests_per_conn: 400,
         batch_points: 64,
         ingest_frac: 0.25,
+        skew: 0.0,
         seed: p.base.seed,
     };
     let report = run_load(&addr, &spec, &p.base.data.mixture).expect("load");

@@ -228,6 +228,22 @@ pub fn serve_durable(state_dir: impl Into<std::path::PathBuf>) -> ServePreset {
     p
 }
 
+/// The sharded durable preset with the auto-rebalance monitor armed:
+/// checkpoints into `state_dir` and re-partitions the shards online
+/// whenever max/mean per-shard ingest exceeds `skew`. This is what
+/// `dalvq serve --shards S --state-dir DIR --rebalance-skew R` runs.
+pub fn serve_rebalancing(
+    shards: usize,
+    state_dir: impl Into<std::path::PathBuf>,
+    skew: f64,
+) -> ServePreset {
+    let mut p = serve_sharded(shards);
+    p.serve.state_dir = Some(state_dir.into());
+    p.serve.rebalance_skew = skew;
+    p.serve.rebalance_min_folds = 32;
+    p
+}
+
 /// Quickstart: tiny 2-D problem on the PJRT engine (the `k8d2` artifacts).
 pub fn quickstart() -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default();
@@ -296,6 +312,18 @@ mod tests {
         p.serve.shards = 4;
         p.serve.probe_n = 2;
         p.validate().unwrap();
+    }
+
+    #[test]
+    fn rebalancing_serve_preset_validates() {
+        let p = serve_rebalancing(4, "/tmp/dalvq-state", 1.8);
+        p.validate().unwrap();
+        assert_eq!(p.serve.rebalance_skew, 1.8);
+        assert!(p.serve.state_dir.is_some());
+        // the monitor cannot be armed without the durable migration source
+        let mut p = serve_rebalancing(4, "/tmp/dalvq-state", 1.8);
+        p.serve.state_dir = None;
+        assert!(p.validate().is_err());
     }
 
     #[test]

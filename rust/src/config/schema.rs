@@ -197,6 +197,19 @@ pub struct ServeConfig {
     /// background checkpointer also flushes on `Checkpoint` requests and
     /// at shutdown). Only meaningful with `state_dir`.
     pub checkpoint_every: u64,
+    /// Auto-rebalance trigger: when the max/mean ratio of per-shard
+    /// ingest (points accepted this router epoch) exceeds this, the skew
+    /// monitor re-partitions the service online (router retrained from
+    /// the checkpointed codebooks, prototype rows migrated across
+    /// shards). `0.0` disables the monitor; meaningful values are `> 1`
+    /// (1 = perfectly balanced). Requires `state_dir` — the checkpointed
+    /// files are the migration source.
+    pub rebalance_skew: f64,
+    /// Folds that must land in the current router epoch (summed across
+    /// shards) before the skew trigger may fire — the shard codebooks
+    /// must have adapted to the load the retrainer will weight by, and a
+    /// fresh epoch must not be churned by startup transients.
+    pub rebalance_min_folds: u64,
 }
 
 impl Default for ServeConfig {
@@ -220,6 +233,8 @@ impl Default for ServeConfig {
             max_points_per_worker: 0,
             state_dir: None,
             checkpoint_every: 64,
+            rebalance_skew: 0.0,
+            rebalance_min_folds: 64,
         }
     }
 }
@@ -304,6 +319,24 @@ impl ServeConfig {
         }
         if self.checkpoint_every == 0 {
             errs.push("checkpoint_every must be >= 1".into());
+        }
+        if !self.rebalance_skew.is_finite() || self.rebalance_skew < 0.0 {
+            errs.push("rebalance_skew must be finite and >= 0".into());
+        } else if self.rebalance_skew > 0.0 {
+            if self.rebalance_skew <= 1.0 {
+                errs.push(format!(
+                    "rebalance_skew = {} would trigger on a perfectly \
+                     balanced fleet; use a ratio > 1 (or 0 to disable)",
+                    self.rebalance_skew
+                ));
+            }
+            if self.state_dir.is_none() {
+                errs.push(
+                    "rebalance_skew needs state_dir: a rebalance migrates \
+                     the checkpointed shard files"
+                        .into(),
+                );
+            }
         }
         if errs.is_empty() {
             Ok(())
@@ -791,6 +824,39 @@ mod tests {
         assert!(msg.contains("publish_every"), "{msg}");
         assert!(msg.contains("drop_prob"), "{msg}");
         assert!(msg.contains("addr"), "{msg}");
+    }
+
+    #[test]
+    fn rebalance_knobs_are_validated() {
+        let base = ExperimentConfig::default();
+
+        // auto-rebalance without durable state is meaningless
+        let mut s = ServeConfig::default();
+        s.rebalance_skew = 2.0;
+        let msg = format!("{:#}", s.validate(&base).unwrap_err());
+        assert!(msg.contains("state_dir"), "{msg}");
+
+        // a ratio <= 1 would fire constantly
+        let mut s = ServeConfig::default();
+        s.state_dir = Some(std::path::PathBuf::from("/tmp/x"));
+        s.rebalance_skew = 0.8;
+        assert!(s.validate(&base).is_err());
+        s.rebalance_skew = f64::NAN;
+        assert!(s.validate(&base).is_err());
+
+        // a sane trigger over a durable sharded deployment is accepted
+        let mut s = ServeConfig::default();
+        s.state_dir = Some(std::path::PathBuf::from("/tmp/x"));
+        s.shards = 4;
+        s.probe_n = 2;
+        s.rebalance_skew = 1.8;
+        s.rebalance_min_folds = 16;
+        s.validate(&base).unwrap();
+
+        // 0 disables the monitor and needs nothing else
+        let mut s = ServeConfig::default();
+        s.rebalance_skew = 0.0;
+        s.validate(&base).unwrap();
     }
 
     #[test]

@@ -28,7 +28,10 @@
 //!   time simulator, latency-injected cloud services, metrics, config),
 //!   and the [`serve`] subsystem that keeps an eq.-9 fleet learning while
 //!   a TCP read path answers encode/nearest/distortion queries against
-//!   atomically published codebook snapshots.
+//!   atomically published codebook snapshots — sharded across `S`
+//!   independent fleets behind a versioned router epoch that [`persist`]
+//!   checkpoints, warm-restarts, and live-rebalances when ingest load
+//!   skews.
 //!
 //! The [`runtime`] module loads the artifacts through PJRT (the `xla`
 //! crate) and exposes them behind the [`runtime::Engine`] trait; a

@@ -82,9 +82,21 @@ OPTIONS (serve):
                              warm-restart from it [default: none]
   --checkpoint-every <N>     folds between automatic shard checkpoints
                              [default: 64]
+  --rebalance-skew <R>       auto-rebalance when max/mean per-shard ingest
+                             exceeds R (needs --state-dir; 0 = off)
+  --rebalance-min-folds <N>  folds that must land in a router epoch before
+                             the skew trigger may fire [default: 64]
 
 OPTIONS (state):
-  inspect --state-dir <DIR>  print the manifest and per-shard checkpoints
+  inspect --state-dir <DIR>    print the manifest, router epoch and
+                               per-shard checkpoints (incl. ingest load)
+  rebalance --state-dir <DIR>  retrain the router from the checkpointed
+                               codebooks (ingest-weighted) and migrate
+                               prototype rows; bumps the router version.
+                               The directory must be quiesced (no live
+                               serve process writing it).
+    --iters <N>                Lloyd iterations of the retrain [default: 8]
+    --seed <N>                 retrain seed [default: 42]
 
 OPTIONS (loadtest):
   --preset <serve>           preset for the in-process service + workload
@@ -93,6 +105,9 @@ OPTIONS (loadtest):
   --requests <N>             requests per connection [default: 200]
   --batch <N>                points per request [default: 64]
   --ingest-frac <F>          fraction of ingest requests [default: 0.25]
+  --skew <S>                 zipf exponent skewing the workload across
+                             mixture components (0 = balanced) — the
+                             reproducible hot-shard scenario
   --shards <S>               shard the in-process service [default: 1]
   --probe <N>                shards probed per query [default: min(2, S)]
 
@@ -290,6 +305,9 @@ fn run() -> Result<()> {
             let probe = parse_opt_u64(&mut args, "--probe")?;
             let state_dir = args.take_value("--state-dir")?.map(PathBuf::from);
             let checkpoint_every = parse_opt_u64(&mut args, "--checkpoint-every")?;
+            let rebalance_skew = parse_opt_f64(&mut args, "--rebalance-skew")?;
+            let rebalance_min_folds =
+                parse_opt_u64(&mut args, "--rebalance-min-folds")?;
             args.finish()?;
             let mut p = serve_preset(&preset)?;
             apply_sharding(&mut p, shards, probe);
@@ -302,7 +320,13 @@ fn run() -> Result<()> {
             if let Some(n) = checkpoint_every {
                 p.serve.checkpoint_every = n;
             }
-            let service = Arc::new(VqService::start(&p.base, &p.serve)?);
+            if let Some(r) = rebalance_skew {
+                p.serve.rebalance_skew = r;
+            }
+            if let Some(n) = rebalance_min_folds {
+                p.serve.rebalance_min_folds = n;
+            }
+            let service = VqService::start(&p.base, &p.serve)?;
             let server = Server::start(Arc::clone(&service), &p.serve.addr)?;
             println!(
                 "dalvq serve: listening on {} (M={}x{} shards, kappa={}, \
@@ -317,10 +341,18 @@ fn run() -> Result<()> {
             if let Some(dir) = service.state_dir() {
                 println!(
                     "dalvq serve: durable state in {} (checkpoint every {} \
-                     folds/shard; resumed at versions {:?})",
+                     folds/shard; router epoch {}; resumed at versions {:?})",
                     dir.display(),
                     p.serve.checkpoint_every,
+                    service.router_version(),
                     service.shard_versions(),
+                );
+            }
+            if p.serve.rebalance_skew > 0.0 {
+                println!(
+                    "dalvq serve: auto-rebalance at max/mean ingest skew > \
+                     {:.2} (after {} folds/epoch)",
+                    p.serve.rebalance_skew, p.serve.rebalance_min_folds,
                 );
             }
             match duration {
@@ -331,8 +363,14 @@ fn run() -> Result<()> {
                     std::thread::sleep(std::time::Duration::from_secs(60));
                     let s = service.stats();
                     println!(
-                        "serve: version {} | ingested {} (shed {}) | queries {}",
-                        s.version, s.ingested, s.ingest_shed, s.queries
+                        "serve: epoch {} version {} | ingested {} (shed {}) \
+                         | queries {} | shard ingest {:?}",
+                        s.router_version,
+                        s.version,
+                        s.ingested,
+                        s.ingest_shed,
+                        s.queries,
+                        s.shard_ingest,
                     );
                 },
             }
@@ -358,10 +396,11 @@ fn run() -> Result<()> {
             if let Some(n) = parse_opt_u64(&mut args, "--batch")? {
                 spec.batch_points = n as usize;
             }
-            if let Some(f) = args.take_value("--ingest-frac")? {
-                spec.ingest_frac = f
-                    .parse::<f64>()
-                    .map_err(|_| anyhow!("--ingest-frac expects a number, got {f:?}"))?;
+            if let Some(f) = parse_opt_f64(&mut args, "--ingest-frac")? {
+                spec.ingest_frac = f;
+            }
+            if let Some(s) = parse_opt_f64(&mut args, "--skew")? {
+                spec.skew = s;
             }
             let shards = parse_opt_u64(&mut args, "--shards")?;
             let probe = parse_opt_u64(&mut args, "--probe")?;
@@ -374,7 +413,7 @@ fn run() -> Result<()> {
                 Some(addr) => dalvq::serve::run_load(&addr, &spec, &p.base.data.mixture)?,
                 // Stand up an in-process service, drive it, tear it down.
                 None => {
-                    let service = Arc::new(VqService::start(&p.base, &p.serve)?);
+                    let service = VqService::start(&p.base, &p.serve)?;
                     let server = Server::start(Arc::clone(&service), &p.serve.addr)?;
                     let addr = server.local_addr().to_string();
                     println!("loadtest: in-process service on {addr}");
@@ -400,54 +439,85 @@ fn run() -> Result<()> {
         }
         "state" => {
             let sub = if args.argv.is_empty() {
-                bail!("state requires a subcommand (want: inspect)")
+                bail!("state requires a subcommand (want: inspect|rebalance)")
             } else {
                 args.argv.remove(0)
             };
-            if sub != "inspect" {
-                bail!("unknown state subcommand {sub:?} (want: inspect)");
-            }
-            let dir = PathBuf::from(
-                args.take_value("--state-dir")?
-                    .ok_or_else(|| anyhow!("state inspect requires --state-dir"))?,
-            );
-            args.finish()?;
-            let Some(state) = dalvq::persist::load_state(&dir)? else {
-                println!(
-                    "{}: no manifest — a `dalvq serve --state-dir` run has \
-                     not checkpointed here yet",
-                    dir.display()
-                );
-                return Ok(());
-            };
-            let m = &state.manifest;
-            println!(
-                "{}: format {} | {} shard(s), kappa={} dim={} | \
-                 points/exchange {}",
-                dir.display(),
-                m.format,
-                m.shards,
-                m.kappa,
-                m.dim,
-                m.points_per_exchange
-            );
-            println!(
-                "router: {} coarse centroids (dim {})",
-                state.router.centroids.kappa(),
-                state.router.centroids.dim()
-            );
-            for s in &state.shards {
-                println!(
-                    "  shard {}: version {} | merges {} | rng cursor {} | \
-                     {} x {} codebook (norm^2 {:.4})",
-                    s.shard,
-                    s.version,
-                    s.merges,
-                    s.rng_cursor,
-                    s.codebook.kappa(),
-                    s.codebook.dim(),
-                    s.codebook.norm_sq(),
-                );
+            match sub.as_str() {
+                "inspect" => {
+                    let dir = PathBuf::from(args.take_value("--state-dir")?.ok_or_else(
+                        || anyhow!("state inspect requires --state-dir"),
+                    )?);
+                    args.finish()?;
+                    let Some(state) = dalvq::persist::load_state(&dir)? else {
+                        println!(
+                            "{}: no manifest — a `dalvq serve --state-dir` run \
+                             has not checkpointed here yet",
+                            dir.display()
+                        );
+                        return Ok(());
+                    };
+                    let m = &state.manifest;
+                    println!(
+                        "{}: format {} | {} shard(s), kappa={} dim={} | \
+                         points/exchange {}",
+                        dir.display(),
+                        m.format,
+                        m.shards,
+                        m.kappa,
+                        m.dim,
+                        m.points_per_exchange
+                    );
+                    println!(
+                        "router: epoch {} | {} coarse centroids (dim {})",
+                        state.router.version,
+                        state.router.centroids.kappa(),
+                        state.router.centroids.dim()
+                    );
+                    for s in &state.shards {
+                        println!(
+                            "  shard {}: version {} | merges {} | rng cursor {} \
+                             | ingested {} (shed {}) | {} x {} codebook \
+                             (norm^2 {:.4})",
+                            s.shard,
+                            s.version,
+                            s.merges,
+                            s.rng_cursor,
+                            s.ingested,
+                            s.shed,
+                            s.codebook.kappa(),
+                            s.codebook.dim(),
+                            s.codebook.norm_sq(),
+                        );
+                    }
+                }
+                "rebalance" => {
+                    let dir = PathBuf::from(args.take_value("--state-dir")?.ok_or_else(
+                        || anyhow!("state rebalance requires --state-dir"),
+                    )?);
+                    let iters =
+                        parse_opt_u64(&mut args, "--iters")?.unwrap_or(8) as usize;
+                    let seed = parse_opt_u64(&mut args, "--seed")?.unwrap_or(42);
+                    args.finish()?;
+                    let report =
+                        dalvq::persist::rebalance_state_dir(&dir, iters, seed)?;
+                    println!(
+                        "{}: rebalanced to router epoch {} — {} prototype \
+                         row(s) migrated; fleets will resume at version {}",
+                        dir.display(),
+                        report.router_version,
+                        report.moved_rows,
+                        report.resume_version,
+                    );
+                    println!(
+                        "restart `dalvq serve --state-dir {}` (same shape) to \
+                         serve the new partition",
+                        dir.display()
+                    );
+                }
+                other => bail!(
+                    "unknown state subcommand {other:?} (want: inspect|rebalance)"
+                ),
             }
         }
         "info" => {
@@ -501,6 +571,15 @@ fn parse_opt_u64(args: &mut Args, name: &str) -> Result<Option<u64>> {
         .map(|v| {
             v.parse::<u64>()
                 .map_err(|_| anyhow!("{name} expects an integer, got {v:?}"))
+        })
+        .transpose()
+}
+
+fn parse_opt_f64(args: &mut Args, name: &str) -> Result<Option<f64>> {
+    args.take_value(name)?
+        .map(|v| {
+            v.parse::<f64>()
+                .map_err(|_| anyhow!("{name} expects a number, got {v:?}"))
         })
         .transpose()
 }

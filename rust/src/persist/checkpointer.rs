@@ -13,6 +13,13 @@
 //! A `flush` request (the protocol's `Checkpoint` op, and shutdown)
 //! synchronously checkpoints every shard that has advanced at all and
 //! acks with the per-shard checkpointed versions.
+//!
+//! A checkpointer belongs to one **router epoch**: it is spawned against
+//! that epoch's shard fleets and carries the epoch's partition version
+//! into every manifest it writes. A rebalance stops the old epoch's
+//! checkpointer (final flush), migrates the files, and spawns a fresh one
+//! over the new fleets — the state dir is never written by two epochs at
+//! once.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -43,10 +50,29 @@ pub struct Checkpointer {
     join: Option<JoinHandle<Result<()>>>,
 }
 
-/// Everything the checkpointer thread needs about one shard.
-struct ShardSource {
-    store: Arc<SnapshotStore>,
-    merges: Arc<AtomicU64>,
+/// Everything the checkpointer thread reads about one shard: the
+/// epoch-swapped snapshot store plus the live counters persisted next to
+/// the codebook (fold count for diagnostics, ingest/shed so a restart —
+/// and the rebalance retrainer — sees the load each shard absorbed).
+pub struct ShardSource {
+    pub store: Arc<SnapshotStore>,
+    pub merges: Arc<AtomicU64>,
+    pub ingested: Arc<AtomicU64>,
+    pub shed: Arc<AtomicU64>,
+}
+
+/// The static shape the checkpointer stamps into every file it writes.
+#[derive(Debug, Clone)]
+pub struct CheckpointSpec {
+    pub dir: PathBuf,
+    /// Reducer folds between automatic checkpoints of a shard.
+    pub checkpoint_every: u64,
+    pub points_per_exchange: usize,
+    /// Total prototypes across shards (manifest field).
+    pub kappa: usize,
+    pub dim: usize,
+    /// Partition version of the router epoch this checkpointer serves.
+    pub router_version: u64,
 }
 
 impl Checkpointer {
@@ -55,39 +81,16 @@ impl Checkpointer {
     /// a warm start, 0 on a cold one); it is updated after every
     /// successful write and is what `StatsReply::last_checkpoint`
     /// reports.
-    #[allow(clippy::too_many_arguments)]
     pub fn spawn(
-        dir: PathBuf,
-        stores: Vec<Arc<SnapshotStore>>,
-        merges: Vec<Arc<AtomicU64>>,
+        spec: CheckpointSpec,
+        sources: Vec<ShardSource>,
         last_checkpoint: Arc<Vec<AtomicU64>>,
-        checkpoint_every: u64,
-        points_per_exchange: usize,
-        kappa: usize,
-        dim: usize,
     ) -> Checkpointer {
-        assert_eq!(stores.len(), merges.len());
-        assert_eq!(stores.len(), last_checkpoint.len());
-        let sources: Vec<ShardSource> = stores
-            .into_iter()
-            .zip(merges)
-            .map(|(store, merges)| ShardSource { store, merges })
-            .collect();
+        assert_eq!(sources.len(), last_checkpoint.len());
         let (tx, rx) = mpsc::channel::<Msg>();
         let join = std::thread::Builder::new()
             .name("dalvq-checkpointer".into())
-            .spawn(move || {
-                run(
-                    rx,
-                    dir,
-                    sources,
-                    last_checkpoint,
-                    checkpoint_every,
-                    points_per_exchange,
-                    kappa,
-                    dim,
-                )
-            })
+            .spawn(move || run(rx, spec, sources, last_checkpoint))
             .expect("spawning checkpointer thread");
         Checkpointer { tx, join: Some(join) }
     }
@@ -102,7 +105,8 @@ impl Checkpointer {
         ack_rx.recv().map_err(|_| anyhow!("checkpointer died mid-flush"))?
     }
 
-    /// Final flush and join. Called by the service at shutdown, after the
+    /// Final flush and join. Called by the service at shutdown (and by a
+    /// rebalance, which retires this epoch's checkpointer), after the
     /// fleets have published their final epochs.
     pub fn stop(mut self) -> Result<()> {
         let _ = self.tx.send(Msg::Stop);
@@ -113,16 +117,11 @@ impl Checkpointer {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
 fn run(
     rx: mpsc::Receiver<Msg>,
-    dir: PathBuf,
+    spec: CheckpointSpec,
     sources: Vec<ShardSource>,
     last_checkpoint: Arc<Vec<AtomicU64>>,
-    checkpoint_every: u64,
-    points_per_exchange: usize,
-    kappa: usize,
-    dim: usize,
 ) -> Result<()> {
     let write_shard = |s: usize| -> Result<u64> {
         // Taking the checkpoint is an O(1) Arc clone of the published
@@ -133,10 +132,13 @@ fn run(
             s as u32,
             snap.version,
             sources[s].merges.load(Ordering::Relaxed),
-            snap.version * points_per_exchange as u64,
+            snap.version * spec.points_per_exchange as u64,
+            sources[s].ingested.load(Ordering::Relaxed),
+            sources[s].shed.load(Ordering::Relaxed),
+            spec.router_version,
             &snap.codebook,
         );
-        write_atomic(&dir, &shard_file(s), &bytes)?;
+        write_atomic(&spec.dir, &shard_file(s), &bytes)?;
         last_checkpoint[s].store(snap.version, Ordering::Release);
         Ok(snap.version)
     };
@@ -144,15 +146,16 @@ fn run(
         Manifest {
             format: FORMAT,
             shards: sources.len(),
-            kappa,
-            dim,
-            points_per_exchange,
+            kappa: spec.kappa,
+            dim: spec.dim,
+            points_per_exchange: spec.points_per_exchange,
+            router_version: spec.router_version,
             shard_versions: last_checkpoint
                 .iter()
                 .map(|v| v.load(Ordering::Acquire))
                 .collect(),
         }
-        .save(&dir)
+        .save(&spec.dir)
     };
     // Checkpoint every shard that moved past its last checkpoint;
     // `min_advance` is the fold distance that triggers a write (1 for a
@@ -197,7 +200,7 @@ fn run(
                 // only advances on successful writes, so nothing is
                 // skipped. Explicit flushes still report their errors to
                 // the caller through the ack channel.
-                if let Err(e) = pass(checkpoint_every.max(1)) {
+                if let Err(e) = pass(spec.checkpoint_every.max(1)) {
                     eprintln!(
                         "dalvq checkpointer: periodic checkpoint failed \
                          (will retry): {e:#}"
@@ -224,27 +227,51 @@ mod tests {
 
     fn write_router(dir: &Path, dim: usize) {
         let state = super::super::codec::RouterState {
+            version: 0,
             centroids: Codebook::zeros(1, dim),
         };
         write_atomic(dir, super::super::manifest::ROUTER_FILE, &state.encode())
             .unwrap();
     }
 
+    fn source(store: &Arc<SnapshotStore>) -> ShardSource {
+        ShardSource {
+            store: Arc::clone(store),
+            merges: Arc::new(AtomicU64::new(0)),
+            ingested: Arc::new(AtomicU64::new(0)),
+            shed: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    fn spec(
+        dir: &Path,
+        checkpoint_every: u64,
+        points_per_exchange: usize,
+        kappa: usize,
+        dim: usize,
+    ) -> CheckpointSpec {
+        CheckpointSpec {
+            dir: dir.to_path_buf(),
+            checkpoint_every,
+            points_per_exchange,
+            kappa,
+            dim,
+            router_version: 0,
+        }
+    }
+
     #[test]
     fn flush_writes_advanced_shards_and_manifest() {
         let dir = tmp_dir("flush");
         let store = SnapshotStore::new(Codebook::zeros(2, 2));
-        let merges = Arc::new(AtomicU64::new(0));
+        let src = source(&store);
+        let merges = Arc::clone(&src.merges);
+        let ingested = Arc::clone(&src.ingested);
         let last = Arc::new(vec![AtomicU64::new(0)]);
         let ckpt = Checkpointer::spawn(
-            dir.clone(),
-            vec![Arc::clone(&store)],
-            vec![Arc::clone(&merges)],
+            spec(&dir, 1_000_000, 50, 2, 2), // periodic path effectively off
+            vec![src],
             Arc::clone(&last),
-            1_000_000, // periodic path effectively off
-            50,
-            2,
-            2,
         );
         write_router(&dir, 2);
 
@@ -254,12 +281,15 @@ mod tests {
 
         store.publish(Codebook::from_flat(2, 2, vec![1.0, 2.0, 3.0, 4.0]), 3);
         merges.store(3, Ordering::Relaxed);
+        ingested.store(96, Ordering::Relaxed);
         assert_eq!(ckpt.flush().unwrap(), vec![3]);
         assert_eq!(last[0].load(Ordering::Acquire), 3);
 
         let restored = load_state(&dir).unwrap().unwrap();
         assert_eq!(restored.shards[0].version, 3);
         assert_eq!(restored.shards[0].rng_cursor, 150);
+        assert_eq!(restored.shards[0].ingested, 96);
+        assert_eq!(restored.manifest.router_version, 0);
         assert_eq!(
             restored.shards[0].codebook.flat(),
             &[1.0, 2.0, 3.0, 4.0]
@@ -272,18 +302,11 @@ mod tests {
     fn periodic_pass_waits_for_checkpoint_every() {
         let dir = tmp_dir("periodic");
         let store = SnapshotStore::new(Codebook::zeros(1, 1));
-        let merges = Arc::new(AtomicU64::new(0));
+        let src = source(&store);
+        let merges = Arc::clone(&src.merges);
         let last = Arc::new(vec![AtomicU64::new(0)]);
-        let ckpt = Checkpointer::spawn(
-            dir.clone(),
-            vec![Arc::clone(&store)],
-            vec![Arc::clone(&merges)],
-            Arc::clone(&last),
-            5,
-            10,
-            1,
-            1,
-        );
+        let ckpt =
+            Checkpointer::spawn(spec(&dir, 5, 10, 1, 1), vec![src], Arc::clone(&last));
         write_router(&dir, 1);
         store.publish(Codebook::from_flat(1, 1, vec![1.0]), 3);
         merges.store(3, Ordering::Relaxed);

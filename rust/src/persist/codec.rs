@@ -19,8 +19,10 @@ use crate::vq::Codebook;
 pub const SHARD_MAGIC: [u8; 4] = *b"DVQS";
 /// Magic prefix of a router-state file.
 pub const ROUTER_MAGIC: [u8; 4] = *b"DVQR";
-/// On-disk format version this build reads and writes.
-pub const FORMAT: u32 = 1;
+/// On-disk format version this build reads and writes. Format 2 added the
+/// per-shard ingest counters (`ingested`/`shed`) that the rebalance
+/// retrainer weights by, and the router's partition version.
+pub const FORMAT: u32 = 2;
 
 /// One shard's durable state: everything a restarted service needs to
 /// resume this shard where the checkpoint left it.
@@ -41,6 +43,21 @@ pub struct ShardState {
     /// workers' schedule position from it, so a decaying learning rate
     /// resumes instead of restarting hot.
     pub rng_cursor: u64,
+    /// Points this shard's fleet accepted from ingest during the current
+    /// router epoch. The rebalance retrainer weights the shard's
+    /// prototype rows by this, so the new partition splits observed load,
+    /// not just prototype geometry. Reset to 0 by a rebalance.
+    pub ingested: u64,
+    /// Points routed to this shard but shed (full worker queues) during
+    /// the current router epoch.
+    pub shed: u64,
+    /// Partition version this shard file belongs to. Restore requires it
+    /// to match the manifest's, so a rebalance interrupted mid-migration
+    /// (some shard files rewritten, router/manifest not yet) is rejected
+    /// loudly instead of serving a mispartitioned mix. Within an epoch
+    /// the value never changes, so a crash mid-*checkpoint* still
+    /// restores cleanly.
+    pub router_version: u64,
     /// The shard's published codebook (`kappa/S` prototypes).
     pub codebook: Codebook,
 }
@@ -51,6 +68,11 @@ pub struct ShardState {
 /// orphan every saved shard codebook).
 #[derive(Debug, Clone, PartialEq)]
 pub struct RouterState {
+    /// Partition version: 0 for the bootstrap router, bumped by every
+    /// rebalance. A restarted service must resume the *same* partition
+    /// epoch the shard files were written under (the manifest carries the
+    /// matching value; restore cross-checks them).
+    pub version: u64,
     pub centroids: Codebook,
 }
 
@@ -88,21 +110,29 @@ fn seal(mut out: Vec<u8>) -> Vec<u8> {
 /// the checkpointer calls with the published epoch's codebook behind its
 /// `Arc` — the serialization writes bytes but never deep-copies the
 /// codebook into an intermediate `ShardState`.
+#[allow(clippy::too_many_arguments)]
 pub fn encode_shard(
     shard: u32,
     version: u64,
     merges: u64,
     rng_cursor: u64,
+    ingested: u64,
+    shed: u64,
+    router_version: u64,
     codebook: &Codebook,
 ) -> Vec<u8> {
-    let mut out =
-        Vec::with_capacity(4 + 4 + 4 + 8 + 8 + 8 + 8 + codebook.flat().len() * 4 + 8);
+    let mut out = Vec::with_capacity(
+        4 + 4 + 4 + 8 * 6 + 8 + codebook.flat().len() * 4 + 8,
+    );
     out.extend_from_slice(&SHARD_MAGIC);
     out.extend_from_slice(&FORMAT.to_le_bytes());
     out.extend_from_slice(&shard.to_le_bytes());
     out.extend_from_slice(&version.to_le_bytes());
     out.extend_from_slice(&merges.to_le_bytes());
     out.extend_from_slice(&rng_cursor.to_le_bytes());
+    out.extend_from_slice(&ingested.to_le_bytes());
+    out.extend_from_slice(&shed.to_le_bytes());
+    out.extend_from_slice(&router_version.to_le_bytes());
     put_codebook(&mut out, codebook);
     seal(out)
 }
@@ -114,6 +144,9 @@ impl ShardState {
             self.version,
             self.merges,
             self.rng_cursor,
+            self.ingested,
+            self.shed,
+            self.router_version,
             &self.codebook,
         )
     }
@@ -125,6 +158,9 @@ impl ShardState {
             version: c.u64()?,
             merges: c.u64()?,
             rng_cursor: c.u64()?,
+            ingested: c.u64()?,
+            shed: c.u64()?,
+            router_version: c.u64()?,
             codebook: c.codebook()?,
         };
         c.finish()?;
@@ -137,17 +173,19 @@ impl ShardState {
 
 impl RouterState {
     pub fn encode(&self) -> Vec<u8> {
-        let mut out =
-            Vec::with_capacity(4 + 4 + 8 + self.centroids.flat().len() * 4 + 8);
+        let mut out = Vec::with_capacity(
+            4 + 4 + 8 + 8 + self.centroids.flat().len() * 4 + 8,
+        );
         out.extend_from_slice(&ROUTER_MAGIC);
         out.extend_from_slice(&FORMAT.to_le_bytes());
+        out.extend_from_slice(&self.version.to_le_bytes());
         put_codebook(&mut out, &self.centroids);
         seal(out)
     }
 
     pub fn decode(bytes: &[u8]) -> Result<RouterState> {
         let mut c = Cursor::open(bytes, &ROUTER_MAGIC, "router state")?;
-        let state = RouterState { centroids: c.codebook()? };
+        let state = RouterState { version: c.u64()?, centroids: c.codebook()? };
         c.finish()?;
         if !state.centroids.is_finite() {
             bail!("router state carries non-finite centroids");
@@ -255,6 +293,9 @@ mod tests {
             version: rng.next_u64(),
             merges: rng.next_u64(),
             rng_cursor: rng.next_u64(),
+            ingested: rng.next_u64(),
+            shed: rng.next_u64(),
+            router_version: rng.next_u64(),
             codebook: Codebook::from_flat(kappa, dim, flat),
         }
     }
@@ -269,6 +310,9 @@ mod tests {
             assert_eq!(state.version, back.version);
             assert_eq!(state.merges, back.merges);
             assert_eq!(state.rng_cursor, back.rng_cursor);
+            assert_eq!(state.ingested, back.ingested);
+            assert_eq!(state.shed, back.shed);
+            assert_eq!(state.router_version, back.router_version);
             // byte-identical codebook, not just approximately equal
             assert!(state
                 .codebook
@@ -287,8 +331,10 @@ mod tests {
             let dim = 1 + rng.usize(4);
             let flat: Vec<f32> =
                 (0..shards * dim).map(|_| rng.range_f32(-50.0, 50.0)).collect();
-            let state =
-                RouterState { centroids: Codebook::from_flat(shards, dim, flat) };
+            let state = RouterState {
+                version: rng.next_u64(),
+                centroids: Codebook::from_flat(shards, dim, flat),
+            };
             assert_eq!(RouterState::decode(&state.encode()).unwrap(), state);
         }
     }
@@ -332,7 +378,8 @@ mod tests {
         let mut rng = Rng::from_seed(0x3A61);
         let state = rand_shard_state(&mut rng);
         // a router file is not a shard file, even though both checksum
-        let router = RouterState { centroids: state.codebook.clone() };
+        let router =
+            RouterState { version: 0, centroids: state.codebook.clone() };
         let err =
             format!("{:#}", ShardState::decode(&router.encode()).unwrap_err());
         assert!(err.contains("magic"), "{err}");
@@ -353,12 +400,16 @@ mod tests {
             version: 1,
             merges: 1,
             rng_cursor: 50,
+            ingested: 0,
+            shed: 0,
+            router_version: 0,
             codebook: Codebook::from_flat(1, 2, vec![1.0, 2.0]),
         };
         let mut wire = state.encode();
         wire.truncate(wire.len() - 8);
-        // kappa field sits after magic(4) format(4) shard(4) v(8) m(8) c(8)
-        wire[36..40].copy_from_slice(&u32::MAX.to_le_bytes());
+        // kappa field sits after magic(4) format(4) shard(4) and the six
+        // u64s (version, merges, cursor, ingested, shed, router_version)
+        wire[60..64].copy_from_slice(&u32::MAX.to_le_bytes());
         let wire = seal(wire);
         assert!(ShardState::decode(&wire).is_err());
     }
@@ -370,6 +421,9 @@ mod tests {
             version: 1,
             merges: 1,
             rng_cursor: 0,
+            ingested: 0,
+            shed: 0,
+            router_version: 0,
             codebook: Codebook::from_flat(1, 2, vec![f32::NAN, 0.0]),
         };
         assert!(ShardState::decode(&state.encode()).is_err());

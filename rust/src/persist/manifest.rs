@@ -54,6 +54,11 @@ pub struct Manifest {
     /// Points per exchange of the writing deployment (documents the unit
     /// of each shard's `rng_cursor`).
     pub points_per_exchange: usize,
+    /// Partition version of the router the shard files were written
+    /// under: 0 for the bootstrap partition, bumped by every rebalance.
+    /// Restore cross-checks this against the router file so a torn
+    /// rebalance (new shards, old router or vice versa) is rejected.
+    pub router_version: u64,
     /// Last checkpointed snapshot version per shard, shard order.
     pub shard_versions: Vec<u64>,
 }
@@ -66,6 +71,7 @@ impl Manifest {
             .set("kappa", self.kappa)
             .set("dim", self.dim)
             .set("points_per_exchange", self.points_per_exchange)
+            .set("router_version", self.router_version)
             .set(
                 "shard_versions",
                 Json::Arr(
@@ -84,6 +90,7 @@ impl Manifest {
             kappa: j.req("kappa")?.as_usize()?,
             dim: j.req("dim")?.as_usize()?,
             points_per_exchange: j.req("points_per_exchange")?.as_usize()?,
+            router_version: j.req("router_version")?.as_u64()?,
             shard_versions: j
                 .req("shard_versions")?
                 .as_arr()?
@@ -199,6 +206,7 @@ mod tests {
             kappa: 8,
             dim: 2,
             points_per_exchange: 50,
+            router_version: 3,
             shard_versions: vec![6, 6, 7, 6],
         };
         m.save(&dir).unwrap();
@@ -228,6 +236,7 @@ mod tests {
             kappa: 8,
             dim: 2,
             points_per_exchange: 50,
+            router_version: 0,
             shard_versions: vec![1, 2, 3],
         };
         assert!(Manifest::from_json(&m.to_json()).is_err());

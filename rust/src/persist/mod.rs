@@ -25,16 +25,24 @@
 //!   `.tmp` leftovers ignored, corrupt or mismatched files rejected
 //!   loudly before any fleet is seeded from them.
 //!
-//! The shard is the save/restore unit (the `ShardOutcome` /
-//! `shard_versions` granularity): shards checkpoint independently, which
-//! is also what a future shard rebalance will migrate.
+//! * [`rebalance`] — the offline re-partitioner: retrains the coarse
+//!   quantizer from the checkpointed codebooks (rows weighted by each
+//!   shard's persisted ingest counters) and migrates prototype rows
+//!   across the shard files at a bumped router version. The state dir —
+//!   not any live fleet — is the data source for a rebalance.
+//!
+//! The shard is the save/restore/migrate unit (the `ShardOutcome` /
+//! `shard_versions` granularity): shards checkpoint independently, and a
+//! rebalance is a split/merge of exactly these files.
 
 pub mod codec;
 pub mod manifest;
 pub mod checkpointer;
+pub mod rebalance;
 pub mod restore;
 
-pub use checkpointer::Checkpointer;
+pub use checkpointer::{CheckpointSpec, Checkpointer, ShardSource};
 pub use codec::{RouterState, ShardState, FORMAT};
 pub use manifest::{shard_file, sweep_tmp, write_atomic, Manifest, ROUTER_FILE};
+pub use rebalance::{rebalance_state_dir, RebalanceReport};
 pub use restore::{load_state, RestoredState};

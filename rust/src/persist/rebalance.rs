@@ -1,0 +1,530 @@
+//! Offline rebalance: retrain the coarse quantizer from *checkpointed*
+//! shard codebooks and migrate prototype rows across the `S` shards.
+//!
+//! The serving router is frozen within a partition epoch (Patra's
+//! asynchronous-LVQ analysis needs each shard's fleet to train
+//! undisturbed), so adapting the partition to observed load — Kamp et
+//! al.'s effective-parallelisation argument — happens *between* epochs,
+//! and the durable state is the data source: everything here operates on
+//! a state directory, never on live fleets. The live service quiesces,
+//! flushes a checkpoint, runs this, and restarts its fleets from the
+//! rewritten directory; `dalvq state rebalance` runs the identical code
+//! against a quiesced directory.
+//!
+//! The retrain is a small **weighted** k-means over the `kappa` prototype
+//! rows: each row carries its shard's observed ingest mass, so a shard
+//! that absorbed most of the stream contributes heavy rows and the new
+//! coarse cells split its region, while idle regions collapse into fewer
+//! cells. Rows are then re-assigned under an exact capacity of `kappa/S`
+//! per shard (greedy nearest-first with capacities), so every fleet keeps
+//! the same codebook shape and the global code formula
+//! `shard * kappa/S + local` survives — only the *mapping* of rows to
+//! shards changes, which is exactly what [`RebalanceReport::remap`]
+//! records.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Rng;
+use crate::vq::{self, Codebook};
+
+use super::codec::{RouterState, ShardState, FORMAT};
+use super::manifest::{shard_file, write_atomic, Manifest, ROUTER_FILE};
+use super::restore::{load_state, RestoredState};
+
+/// A computed re-partition: new coarse centroids plus the row migration.
+#[derive(Debug, Clone)]
+pub struct RebalancePlan {
+    /// The retrained coarse centroids (`S x dim`).
+    pub centroids: Codebook,
+    /// For each global prototype row (old order), its new shard.
+    pub assignment: Vec<usize>,
+    /// Per new shard, the old global row indices it receives (ascending —
+    /// within-shard order is stable in the old global order).
+    pub placement: Vec<Vec<usize>>,
+    /// Rows whose owning shard changed.
+    pub moved_rows: usize,
+}
+
+/// What a rebalance did to a state directory.
+#[derive(Debug, Clone)]
+pub struct RebalanceReport {
+    /// The bumped partition version the directory now carries.
+    pub router_version: u64,
+    /// Rows that changed shard.
+    pub moved_rows: usize,
+    /// The (uniform) per-shard version the migrated fleets resume at:
+    /// `max` over the old shard versions, so every per-shard clock and
+    /// their sum stay monotone across the migration.
+    pub resume_version: u64,
+    /// Global-code remapping: `remap[old_code] = new_code`. Codes are
+    /// `shard * kappa/S + local`; a migration permutes which shard owns
+    /// each row, so cached codes from the previous epoch translate
+    /// through this table.
+    pub remap: Vec<u32>,
+}
+
+/// Compute a re-partition of `rows` (the concatenated shard codebooks,
+/// `kappa x dim`) into `shards` cells of exactly `kappa / shards` rows.
+/// `weights[r]` is the ingest mass behind row `r` (any non-negative
+/// scale); uniform weights reduce to a pure-geometry split. Deterministic
+/// in `seed`.
+pub fn plan_rebalance(
+    rows: &Codebook,
+    shards: usize,
+    weights: &[f64],
+    iters: usize,
+    seed: u64,
+) -> RebalancePlan {
+    let kappa = rows.kappa();
+    assert!(shards >= 1, "rebalance needs at least one shard");
+    assert_eq!(kappa % shards, 0, "kappa must divide evenly across shards");
+    assert_eq!(weights.len(), kappa, "one weight per prototype row");
+    assert!(
+        weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+        "row weights must be finite and non-negative"
+    );
+    let cap = kappa / shards;
+    let centroids = weighted_kmeans(rows, shards, weights, iters, seed);
+    let assignment = balanced_assignment(rows, &centroids, cap);
+    let mut placement: Vec<Vec<usize>> = vec![Vec::with_capacity(cap); shards];
+    for (r, &s) in assignment.iter().enumerate() {
+        placement[s].push(r); // ascending in r by construction
+    }
+    let moved_rows =
+        assignment.iter().enumerate().filter(|(r, &s)| r / cap != s).count();
+    RebalancePlan { centroids, assignment, placement, moved_rows }
+}
+
+/// Weighted k-means over the prototype rows: best of a few independent
+/// restarts (weighted D² seeding + `iters` weighted Lloyd steps each),
+/// scored by weighted distortion. Restarts matter here: Lloyd only finds
+/// local optima, and a load-skewed weighting has sharp ones — a single
+/// spread-biased seeding can leave the whole hot region to one cell.
+fn weighted_kmeans(
+    rows: &Codebook,
+    k: usize,
+    weights: &[f64],
+    iters: usize,
+    seed: u64,
+) -> Codebook {
+    // Zero total mass (a never-ingested epoch): fall back to uniform
+    // weights — a pure-geometry split, which is also the cold-start
+    // router's behaviour.
+    let n = rows.kappa();
+    let total_mass: f64 = weights.iter().sum();
+    let uniform = vec![1.0f64; n];
+    let w = if total_mass > 0.0 { weights } else { &uniform[..] };
+
+    const RESTARTS: u64 = 4;
+    let mut best: Option<(f64, Codebook)> = None;
+    for r in 0..RESTARTS {
+        let mut rng = Rng::from_seed_stream(seed, 0x5EBA_1A5C ^ r);
+        let candidate = weighted_kmeans_once(rows, k, w, iters, &mut rng);
+        let cost: f64 = (0..n)
+            .map(|i| {
+                let a = vq::nearest(&candidate, rows.row(i));
+                vq::row_dist_sq(rows.row(i), candidate.row(a)) as f64 * w[i]
+            })
+            .sum();
+        let better = match &best {
+            Some((best_cost, _)) => cost < *best_cost,
+            None => true,
+        };
+        if better {
+            best = Some((cost, candidate));
+        }
+    }
+    best.expect("at least one restart").1
+}
+
+/// One weighted k-means run: weighted D² seeding plus `iters` weighted
+/// Lloyd steps. An empty cell keeps its seed centroid (the
+/// capacity-constrained assignment gives it rows regardless).
+fn weighted_kmeans_once(
+    rows: &Codebook,
+    k: usize,
+    w: &[f64],
+    iters: usize,
+    rng: &mut Rng,
+) -> Codebook {
+    let n = rows.kappa();
+    let dim = rows.dim();
+
+    // Weighted k-means++ seeding.
+    let mut flat = Vec::with_capacity(k * dim);
+    let first = sample_weighted(rng, w);
+    flat.extend_from_slice(rows.row(first));
+    let mut d2 = vec![f64::INFINITY; n];
+    let mut scratch = vec![0.0f64; n];
+    for _ in 1..k {
+        let last = &flat[flat.len() - dim..];
+        for i in 0..n {
+            let d = vq::row_dist_sq(rows.row(i), last) as f64;
+            if d < d2[i] {
+                d2[i] = d;
+            }
+            scratch[i] = d2[i] * w[i];
+        }
+        let next = if scratch.iter().sum::<f64>() > 0.0 {
+            sample_weighted(rng, &scratch)
+        } else {
+            // all mass sits on already-chosen rows (duplicate prototypes)
+            rng.usize(n)
+        };
+        flat.extend_from_slice(rows.row(next));
+    }
+    let mut centroids = Codebook::from_flat(k, dim, flat);
+
+    // Weighted Lloyd.
+    let mut sums = vec![0.0f64; k * dim];
+    let mut mass = vec![0.0f64; k];
+    for _ in 0..iters {
+        sums.iter_mut().for_each(|x| *x = 0.0);
+        mass.iter_mut().for_each(|x| *x = 0.0);
+        for i in 0..n {
+            let z = rows.row(i);
+            let a = vq::nearest(&centroids, z);
+            mass[a] += w[i];
+            for j in 0..dim {
+                sums[a * dim + j] += z[j] as f64 * w[i];
+            }
+        }
+        for c in 0..k {
+            if mass[c] > 0.0 {
+                let inv = 1.0 / mass[c];
+                let row = centroids.row_mut(c);
+                for j in 0..dim {
+                    row[j] = (sums[c * dim + j] * inv) as f32;
+                }
+            }
+        }
+    }
+    centroids
+}
+
+/// Sample an index proportionally to `weights` (sum must be positive).
+fn sample_weighted(rng: &mut Rng, weights: &[f64]) -> usize {
+    let total: f64 = weights.iter().sum();
+    let mut target = rng.range_f64(0.0, total);
+    for (i, w) in weights.iter().enumerate() {
+        target -= w;
+        if target <= 0.0 {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+/// Exact-capacity assignment: every row to a cell, at most `cap` rows per
+/// cell, greedily by ascending row-to-centroid distance (deterministic
+/// tie-break on row then cell index). Total capacity equals the row
+/// count, so every row lands.
+fn balanced_assignment(
+    rows: &Codebook,
+    centroids: &Codebook,
+    cap: usize,
+) -> Vec<usize> {
+    let n = rows.kappa();
+    let k = centroids.kappa();
+    debug_assert_eq!(n, cap * k);
+    let mut pairs: Vec<(f32, usize, usize)> = Vec::with_capacity(n * k);
+    for r in 0..n {
+        for c in 0..k {
+            pairs.push((vq::row_dist_sq(rows.row(r), centroids.row(c)), r, c));
+        }
+    }
+    pairs.sort_unstable_by(|a, b| {
+        a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+    });
+    let mut assignment = vec![usize::MAX; n];
+    let mut counts = vec![0usize; k];
+    let mut placed = 0usize;
+    for (_, r, c) in pairs {
+        if assignment[r] == usize::MAX && counts[c] < cap {
+            assignment[r] = c;
+            counts[c] += 1;
+            placed += 1;
+            if placed == n {
+                break;
+            }
+        }
+    }
+    assignment
+}
+
+/// Rebalance a quiesced state directory in place: retrain the router from
+/// the checkpointed codebooks (rows weighted by each shard's persisted
+/// ingest counters), migrate the rows, and rewrite shard files + router +
+/// manifest at the bumped partition version. Write order is shards →
+/// router → manifest, so an interruption at any point is caught by
+/// restore's cross-checks instead of silently serving a torn partition.
+pub fn rebalance_state_dir(
+    dir: &Path,
+    iters: usize,
+    seed: u64,
+) -> Result<RebalanceReport> {
+    let state = load_state(dir)
+        .with_context(|| format!("loading state from {}", dir.display()))?
+        .ok_or_else(|| {
+            anyhow!(
+                "{} holds no checkpointed state to rebalance (no manifest)",
+                dir.display()
+            )
+        })?;
+    let (report, router, shard_states, manifest) = plan_from_state(&state, iters, seed);
+    for st in &shard_states {
+        write_atomic(dir, &shard_file(st.shard as usize), &st.encode())?;
+    }
+    write_atomic(dir, ROUTER_FILE, &router.encode())?;
+    manifest.save(dir)?;
+    Ok(report)
+}
+
+/// The pure core of [`rebalance_state_dir`]: compute the migrated file
+/// set from a loaded state. (The live service does NOT call this
+/// directly — it deliberately round-trips through
+/// [`rebalance_state_dir`] and the warm-restart loader, so what serves
+/// after a swap is exactly what a killed-and-restarted process would
+/// serve.)
+fn plan_from_state(
+    state: &RestoredState,
+    iters: usize,
+    seed: u64,
+) -> (RebalanceReport, RouterState, Vec<ShardState>, Manifest) {
+    let m = &state.manifest;
+    let shards = m.shards;
+    let cap = m.kappa / shards;
+    let dim = m.dim;
+
+    // Concatenate the shard codebooks into the global row matrix and
+    // spread each shard's ingest mass uniformly over its rows (+1
+    // smoothing so a zero-traffic shard still anchors its region).
+    let mut flat = Vec::with_capacity(m.kappa * dim);
+    let mut weights = Vec::with_capacity(m.kappa);
+    for st in &state.shards {
+        flat.extend_from_slice(st.codebook.flat());
+        let per_row = (st.ingested as f64 + 1.0) / cap as f64;
+        weights.extend(std::iter::repeat(per_row).take(cap));
+    }
+    let rows = Codebook::from_flat(m.kappa, dim, flat);
+
+    // Mix the partition version into the seed so successive rebalances
+    // explore fresh seedings while each one stays reproducible.
+    let router_version = m.router_version + 1;
+    let plan = plan_rebalance(&rows, shards, &weights, iters, seed ^ router_version);
+
+    // Every migrated fleet resumes at the max of the old versions: a
+    // shard's rows may come from several old shards, and `max` keeps both
+    // the per-shard clocks and their service-wide sum monotone.
+    let resume_version = state.shards.iter().map(|s| s.version).max().unwrap_or(0);
+    let mut remap = vec![0u32; m.kappa];
+    let mut shard_states = Vec::with_capacity(shards);
+    for (s, rows_here) in plan.placement.iter().enumerate() {
+        let mut shard_flat = Vec::with_capacity(cap * dim);
+        for (local, &r) in rows_here.iter().enumerate() {
+            shard_flat.extend_from_slice(rows.row(r));
+            remap[r] = (s * cap + local) as u32;
+        }
+        shard_states.push(ShardState {
+            shard: s as u32,
+            version: resume_version,
+            merges: resume_version,
+            rng_cursor: resume_version * m.points_per_exchange as u64,
+            ingested: 0, // load counters are per partition epoch
+            shed: 0,
+            router_version,
+            codebook: Codebook::from_flat(cap, dim, shard_flat),
+        });
+    }
+    let router = RouterState {
+        version: router_version,
+        centroids: plan.centroids.clone(),
+    };
+    let manifest = Manifest {
+        format: FORMAT,
+        shards,
+        kappa: m.kappa,
+        dim,
+        points_per_exchange: m.points_per_exchange,
+        router_version,
+        shard_versions: vec![resume_version; shards],
+    };
+    let report = RebalanceReport {
+        router_version,
+        moved_rows: plan.moved_rows,
+        resume_version,
+        remap,
+    };
+    (report, router, shard_states, manifest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("dalvq-rebalance-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    /// 8 rows in dim 1: 4 hot rows bunched near 0, 4 cold rows spread far.
+    fn hot_cold_rows() -> Codebook {
+        Codebook::from_flat(
+            8,
+            1,
+            vec![0.0, 1.0, 2.0, 3.0, 100.0, 200.0, 300.0, 400.0],
+        )
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_exactly_balanced() {
+        let rows = hot_cold_rows();
+        let w = vec![1.0; 8];
+        let a = plan_rebalance(&rows, 4, &w, 8, 42);
+        let b = plan_rebalance(&rows, 4, &w, 8, 42);
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(a.centroids, b.centroids);
+        for cell in &a.placement {
+            assert_eq!(cell.len(), 2, "every shard gets exactly kappa/S rows");
+        }
+        // every row assigned exactly once
+        let mut seen = vec![false; 8];
+        for cell in &a.placement {
+            for &r in cell {
+                assert!(!seen[r], "row {r} placed twice");
+                seen[r] = true;
+            }
+        }
+        assert!(seen.iter().all(|s| *s));
+    }
+
+    #[test]
+    fn heavy_rows_split_the_hot_region() {
+        // All ingest mass sits on the 4 bunched rows; the retrained
+        // router must spend multiple cells on them instead of leaving the
+        // whole hot region to one shard.
+        let rows = hot_cold_rows();
+        let w = vec![1000.0, 1000.0, 1000.0, 1000.0, 1.0, 1.0, 1.0, 1.0];
+        let plan = plan_rebalance(&rows, 4, &w, 16, 7);
+        let hot_shards: std::collections::BTreeSet<usize> =
+            plan.assignment[..4].iter().copied().collect();
+        assert!(
+            hot_shards.len() >= 2,
+            "hot rows all landed on one shard: {:?}",
+            plan.assignment
+        );
+    }
+
+    #[test]
+    fn uniform_weights_split_by_geometry() {
+        // Two well-separated row clusters, two shards: the split must be
+        // the clusters, whatever the seed.
+        let rows = Codebook::from_flat(
+            4,
+            1,
+            vec![0.0, 1.0, 100.0, 101.0],
+        );
+        for seed in [1u64, 9, 77] {
+            let plan = plan_rebalance(&rows, 2, &[1.0; 4], 8, seed);
+            assert_eq!(plan.assignment[0], plan.assignment[1]);
+            assert_eq!(plan.assignment[2], plan.assignment[3]);
+            assert_ne!(plan.assignment[0], plan.assignment[2]);
+        }
+    }
+
+    #[test]
+    fn degenerate_identical_rows_still_balance() {
+        // Every prototype identical (a pathologically collapsed fleet):
+        // the plan must still hand each shard exactly cap rows.
+        let rows = Codebook::from_flat(4, 2, vec![5.0; 8]);
+        let plan = plan_rebalance(&rows, 2, &[1.0; 4], 4, 3);
+        assert_eq!(plan.placement[0].len(), 2);
+        assert_eq!(plan.placement[1].len(), 2);
+    }
+
+    #[test]
+    fn rebalance_state_dir_bumps_and_migrates() {
+        let dir = tmp_dir("dir");
+        // Write a 2-shard, kappa=4, dim=1 state: shard 0 holds the hot
+        // bunched rows (heavy ingest), shard 1 the far-flung cold rows.
+        Manifest {
+            format: FORMAT,
+            shards: 2,
+            kappa: 4,
+            dim: 1,
+            points_per_exchange: 50,
+            router_version: 0,
+            shard_versions: vec![6, 2],
+        }
+        .save(&dir)
+        .unwrap();
+        write_atomic(
+            &dir,
+            ROUTER_FILE,
+            &RouterState {
+                version: 0,
+                centroids: Codebook::from_flat(2, 1, vec![1.0, 300.0]),
+            }
+            .encode(),
+        )
+        .unwrap();
+        let shard_rows = [vec![0.0f32, 2.0], vec![200.0f32, 400.0]];
+        for (s, rows) in shard_rows.iter().enumerate() {
+            let st = ShardState {
+                shard: s as u32,
+                version: if s == 0 { 6 } else { 2 },
+                merges: if s == 0 { 6 } else { 2 },
+                rng_cursor: 300,
+                ingested: if s == 0 { 10_000 } else { 10 },
+                shed: 0,
+                router_version: 0,
+                codebook: Codebook::from_flat(2, 1, rows.clone()),
+            };
+            write_atomic(&dir, &shard_file(s), &st.encode()).unwrap();
+        }
+
+        let report = rebalance_state_dir(&dir, 8, 99).unwrap();
+        assert_eq!(report.router_version, 1);
+        assert_eq!(report.resume_version, 6);
+
+        let state = load_state(&dir).unwrap().unwrap();
+        assert_eq!(state.manifest.router_version, 1);
+        assert_eq!(state.router.version, 1);
+        assert_eq!(state.manifest.shard_versions, vec![6, 6]);
+        // counters reset for the new partition epoch
+        assert!(state.shards.iter().all(|s| s.ingested == 0 && s.shed == 0));
+        assert!(state.shards.iter().all(|s| s.version == 6));
+        // the migrated global codebook is a permutation of the old rows,
+        // and the remap table points each old row at its new position
+        let old_rows = [0.0f32, 2.0, 200.0, 400.0];
+        let mut new_global = Vec::new();
+        for s in &state.shards {
+            new_global.extend_from_slice(s.codebook.flat());
+        }
+        let mut sorted_new = new_global.clone();
+        sorted_new.sort_by(f32::total_cmp);
+        assert_eq!(sorted_new, old_rows.to_vec());
+        for (old_code, &new_code) in report.remap.iter().enumerate() {
+            assert_eq!(
+                new_global[new_code as usize], old_rows[old_code],
+                "remap[{old_code}] = {new_code} points at the wrong row"
+            );
+        }
+        // rebalancing again keeps bumping
+        let report2 = rebalance_state_dir(&dir, 8, 99).unwrap();
+        assert_eq!(report2.router_version, 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rebalancing_an_empty_dir_is_a_clear_error() {
+        let dir = tmp_dir("empty");
+        let err = format!("{:#}", rebalance_state_dir(&dir, 4, 1).unwrap_err());
+        assert!(err.contains("no checkpointed state"), "{err}");
+    }
+}

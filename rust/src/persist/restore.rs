@@ -52,6 +52,15 @@ pub fn load_state(dir: &Path) -> Result<Option<RestoredState>> {
             manifest.dim
         );
     }
+    if router.version != manifest.router_version {
+        bail!(
+            "router file is partition version {}, manifest says {} — a \
+             rebalance was interrupted between writing the router and the \
+             manifest; re-run `dalvq state rebalance` on this directory",
+            router.version,
+            manifest.router_version
+        );
+    }
     let kappa_shard = manifest.kappa / manifest.shards;
     let mut shards = Vec::with_capacity(manifest.shards);
     for s in 0..manifest.shards {
@@ -65,6 +74,16 @@ pub fn load_state(dir: &Path) -> Result<Option<RestoredState>> {
                 "{} claims to be shard {}, expected {s}",
                 path.display(),
                 state.shard
+            );
+        }
+        if state.router_version != manifest.router_version {
+            bail!(
+                "{} belongs to partition version {}, manifest says {} — a \
+                 rebalance was interrupted mid-migration; re-run `dalvq \
+                 state rebalance` on this directory",
+                path.display(),
+                state.router_version,
+                manifest.router_version
             );
         }
         if state.codebook.kappa() != kappa_shard
@@ -105,11 +124,13 @@ mod tests {
             kappa: 4,
             dim: 2,
             points_per_exchange: 50,
+            router_version: 1,
             shard_versions: vec![5, 7],
         }
         .save(dir)
         .unwrap();
         let router = RouterState {
+            version: 1,
             centroids: Codebook::from_flat(2, 2, vec![0.0, 0.0, 10.0, 10.0]),
         };
         write_atomic(dir, ROUTER_FILE, &router.encode()).unwrap();
@@ -119,6 +140,9 @@ mod tests {
                 version: v,
                 merges: v,
                 rng_cursor: v * 50,
+                ingested: 10 * v,
+                shed: v,
+                router_version: 1,
                 codebook: Codebook::from_flat(
                     2,
                     2,
@@ -145,7 +169,11 @@ mod tests {
         let state = load_state(&dir).unwrap().unwrap();
         assert_eq!(state.shards.len(), 2);
         assert_eq!(state.shards[1].version, 7);
+        assert_eq!(state.shards[1].ingested, 70);
+        assert_eq!(state.shards[1].shed, 7);
         assert_eq!(state.router.centroids.kappa(), 2);
+        assert_eq!(state.router.version, 1);
+        assert_eq!(state.manifest.router_version, 1);
         // this loader is read-only (the inspect CLI uses it against
         // possibly-live dirs): the tmp junk is ignored but left in place
         assert!(dir.join("shard-0.state.tmp").exists(), "loader must not unlink");
@@ -187,6 +215,47 @@ mod tests {
     }
 
     #[test]
+    fn torn_migration_shard_file_is_rejected() {
+        // A rebalance killed mid-migration: one shard file already
+        // rewritten at the bumped partition version, router + manifest
+        // still at the old one. The shard-level stamp must catch it —
+        // shapes alone all match.
+        let dir = tmp_dir("torn");
+        write_good_state(&dir);
+        let migrated = ShardState {
+            shard: 0,
+            version: 7,
+            merges: 7,
+            rng_cursor: 350,
+            ingested: 0,
+            shed: 0,
+            router_version: 2, // manifest + router say 1
+            codebook: Codebook::from_flat(2, 2, vec![9.0; 4]),
+        };
+        write_atomic(&dir, &shard_file(0), &migrated.encode()).unwrap();
+        let err = format!("{:#}", load_state(&dir).unwrap_err());
+        assert!(err.contains("interrupted mid-migration"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn router_partition_version_mismatch_is_rejected() {
+        // A rebalance interrupted between the router write and the
+        // manifest write leaves the two at different partition versions —
+        // restore must refuse rather than route with the wrong epoch.
+        let dir = tmp_dir("rv");
+        write_good_state(&dir);
+        let router = RouterState {
+            version: 2, // manifest says 1
+            centroids: Codebook::from_flat(2, 2, vec![0.0, 0.0, 10.0, 10.0]),
+        };
+        write_atomic(&dir, ROUTER_FILE, &router.encode()).unwrap();
+        let err = format!("{:#}", load_state(&dir).unwrap_err());
+        assert!(err.contains("partition version"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
     fn wrong_shape_shard_file_is_rejected() {
         let dir = tmp_dir("shape");
         write_good_state(&dir);
@@ -195,6 +264,9 @@ mod tests {
             version: 5,
             merges: 5,
             rng_cursor: 250,
+            ingested: 0,
+            shed: 0,
+            router_version: 1,
             // dim 3 where the manifest says 2
             codebook: Codebook::from_flat(2, 3, vec![0.0; 6]),
         };

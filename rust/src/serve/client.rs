@@ -138,4 +138,20 @@ impl Client {
             other => bail!("unexpected response {other:?}"),
         }
     }
+
+    /// Trigger an online rebalance (router retrain + shard migration at a
+    /// bumped partition version); returns `(router_version, moved_rows,
+    /// per-shard resume versions)`. Blocks until the new epoch serves —
+    /// reads issued on other connections keep answering throughout.
+    /// Errors when the service has no `--state-dir`.
+    pub fn rebalance(&mut self) -> Result<(u64, u64, Vec<u64>)> {
+        match self.call(&Request::Rebalance)? {
+            Response::RebalanceAck {
+                router_version,
+                moved_rows,
+                shard_versions,
+            } => Ok((router_version, moved_rows, shard_versions)),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
 }

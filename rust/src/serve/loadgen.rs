@@ -26,6 +26,13 @@ pub struct LoadSpec {
     /// Fraction of requests that are ingest (writes); the rest rotate
     /// through encode / nearest / distortion evenly.
     pub ingest_frac: f64,
+    /// Zipf exponent skewing the generated stream across the mixture's
+    /// components: component `k` is drawn with weight `1/(k+1)^skew`
+    /// (0 = the mixture's own balance). This is the reproducible
+    /// skewed-ingest scenario the rebalance subsystem exists for —
+    /// `dalvq loadtest --skew 2` concentrates most of the stream on one
+    /// region of the input space.
+    pub skew: f64,
     pub seed: u64,
 }
 
@@ -36,6 +43,7 @@ impl Default for LoadSpec {
             requests_per_conn: 200,
             batch_points: 64,
             ingest_frac: 0.25,
+            skew: 0.0,
             seed: 1,
         }
     }
@@ -54,8 +62,53 @@ impl LoadSpec {
         if !(0.0..=1.0).contains(&self.ingest_frac) {
             return Err(anyhow!("ingest_frac must be in [0, 1]"));
         }
+        if !self.skew.is_finite() || self.skew < 0.0 {
+            return Err(anyhow!("skew must be finite and >= 0"));
+        }
         Ok(())
     }
+
+    /// The mixture this spec actually draws from: `skew > 0` overrides
+    /// the base mixture's component imbalance with the zipf exponent
+    /// (centers, spread and noise stay the base's — the skewed stream
+    /// hits the *same* regions, just unevenly).
+    fn skewed_mixture(&self, base: &MixtureSpec) -> MixtureSpec {
+        let mut m = base.clone();
+        if self.skew > 0.0 {
+            m.imbalance = self.skew as f32;
+        }
+        m
+    }
+}
+
+/// Max-over-mean imbalance of per-shard counters: 1.0 = perfectly even,
+/// `S` = everything on one shard. An all-zero (or empty) vector reads as
+/// balanced. This is THE skew metric of the rebalance subsystem — the
+/// service's auto-trigger, the bench sweep and the e2e acceptance all
+/// judge the same formula.
+pub fn max_over_mean(xs: &[u64]) -> f64 {
+    let total: u64 = xs.iter().sum();
+    if total == 0 {
+        return 1.0;
+    }
+    *xs.iter().max().expect("nonzero total implies nonempty") as f64
+        / (total as f64 / xs.len() as f64)
+}
+
+/// Empirical share of `points` owned by each mixture component (nearest
+/// center), component order. The skewed generator is validated through
+/// this: a zipf-`s` stream's top component must carry ~its zipf weight.
+pub fn component_shares(points: &[f32], centers: &[f32], dim: usize) -> Vec<f64> {
+    let k = centers.len() / dim;
+    let n = (points.len() / dim).max(1);
+    // One Codebook wrap so attribution rides the crate's single
+    // nearest-centroid scan instead of reimplementing it.
+    let book = crate::vq::Codebook::from_flat(k, dim, centers.to_vec());
+    let mut counts = vec![0u64; k];
+    for z in points.chunks_exact(dim) {
+        counts[crate::vq::nearest(&book, z)] += 1;
+    }
+    counts.into_iter().map(|c| c as f64 / n as f64).collect()
 }
 
 /// Per-operation request counts.
@@ -93,6 +146,7 @@ pub struct LoadReport {
 /// from `mixture` (each connection uses its own deterministic stream).
 pub fn run_load(addr: &str, spec: &LoadSpec, mixture: &MixtureSpec) -> Result<LoadReport> {
     spec.validate()?;
+    let mixture = &spec.skewed_mixture(mixture);
     mixture.validate().map_err(|e| anyhow!("mixture: {e}"))?;
     let start_gate = Arc::new(Barrier::new(spec.connections + 1));
     let mut joins = Vec::with_capacity(spec.connections);
@@ -373,6 +427,63 @@ mod tests {
         let mut s = LoadSpec::default();
         s.ingest_frac = 1.5;
         assert!(s.validate().is_err());
+        let mut s = LoadSpec::default();
+        s.skew = -1.0;
+        assert!(s.validate().is_err());
+        s.skew = f64::INFINITY;
+        assert!(s.validate().is_err());
+        s.skew = 2.0;
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn skewed_generator_concentrates_mass_like_its_zipf_weights() {
+        // The percentile check for the skew knob: empirical component
+        // shares of a skewed stream must match the zipf weights the spec
+        // promises (the service-side rebalance trigger is calibrated
+        // against exactly these ratios).
+        // dim 4 keeps the random centers far apart relative to the
+        // cluster spread, so nearest-center attribution is unambiguous.
+        let mut base = crate::data::MixtureSpec::default();
+        base.components = 8;
+        base.dim = 4;
+        base.noise_frac = 0.0;
+        let mut spec = LoadSpec::default();
+        spec.skew = 2.0;
+        let skewed = spec.skewed_mixture(&base);
+        assert_eq!(skewed.imbalance, 2.0);
+
+        let seed = 11u64;
+        let pts = skewed.generate(20_000, seed, 77);
+        let shares = component_shares(&pts, &skewed.centers(seed), 4);
+        assert_eq!(shares.len(), 8);
+        let expected = skewed.weights();
+        // top component carries its zipf share (~0.65 at s = 2, n = 8)
+        assert!(
+            (shares[0] - expected[0]).abs() < 0.05,
+            "top share {} vs zipf {}",
+            shares[0],
+            expected[0]
+        );
+        // total variation from the zipf law stays small
+        let tv: f64 = shares
+            .iter()
+            .zip(&expected)
+            .map(|(s, e)| (s - e).abs())
+            .sum::<f64>()
+            / 2.0;
+        assert!(tv < 0.05, "total variation {tv}: {shares:?} vs {expected:?}");
+
+        // skew = 0 leaves the base mixture untouched: near-uniform shares
+        let mut flat_spec = LoadSpec::default();
+        flat_spec.skew = 0.0;
+        let flat = flat_spec.skewed_mixture(&base);
+        assert_eq!(flat.imbalance, base.imbalance);
+        let pts = flat.generate(20_000, seed, 78);
+        let shares = component_shares(&pts, &flat.centers(seed), 4);
+        for s in &shares {
+            assert!((s - 0.125).abs() < 0.05, "uniform share {s}");
+        }
     }
 
     #[test]

@@ -8,9 +8,19 @@
 //!
 //! * **Sharded codebook** — the prototype space is partitioned across `S`
 //!   independent fleets by a coarse-quantizer [`Router`] (trained by a
-//!   short k-means pass, then frozen). Shards never synchronize — Patra's
-//!   asynchronous-LVQ analysis applies per shard — and per-query distance
-//!   work drops to `probe_n * kappa/S * dim`.
+//!   short k-means pass, then frozen *within its epoch*). Shards never
+//!   synchronize — Patra's asynchronous-LVQ analysis applies per shard —
+//!   and per-query distance work drops to `probe_n * kappa/S * dim`.
+//! * **Live rebalancing** — the partition is a **versioned router
+//!   epoch**, `Arc`-swapped like a snapshot: when per-shard ingest
+//!   counters diverge (drift piling the stream onto one shard), the
+//!   service quiesces its fleets, re-partitions the *checkpointed* state
+//!   offline ([`crate::persist::rebalance`]: ingest-weighted router
+//!   retrain + prototype-row migration) and restarts fresh fleets at the
+//!   bumped router version — queries answer from the old epoch until the
+//!   new one publishes. A skew monitor auto-triggers this
+//!   (`rebalance_skew`); the `Rebalance` wire op and `dalvq state
+//!   rebalance` trigger it by hand.
 //! * **Write path** — each shard's worker fleet ([`run_serve_worker`])
 //!   keeps learning via the async-delta protocol on the [`crate::cloud`]
 //!   substrate (queue + blob + dedicated reducer), fed by client
@@ -37,9 +47,10 @@
 //!   instead of retraining. The wire protocol's `Checkpoint` op forces a
 //!   flush.
 //!
-//! `dalvq serve` / `dalvq loadtest` / `dalvq state inspect` are the CLI
-//! entry points; the `serve_e2e` and `persist_e2e` integration tests run
-//! the whole stack in-process.
+//! `dalvq serve` / `dalvq loadtest` / `dalvq state inspect` / `dalvq
+//! state rebalance` are the CLI entry points; the `serve_e2e`,
+//! `persist_e2e` and `rebalance_e2e` integration tests run the whole
+//! stack in-process.
 
 mod client;
 mod loadgen;
@@ -51,11 +62,14 @@ mod snapshot;
 mod worker;
 
 pub use client::Client;
-pub use loadgen::{run_load, LoadReport, LoadSpec, OpCounts};
+pub use loadgen::{
+    component_shares, max_over_mean, run_load, LoadReport, LoadSpec, OpCounts,
+};
 pub use router::Router;
 pub use server::Server;
 pub use service::{
-    ServeCounters, ServeOutcome, ServeStats, ShardOutcome, VqService,
+    RebalanceOutcome, ServeCounters, ServeOutcome, ServeStats, ShardOutcome,
+    VqService,
 };
 pub use snapshot::{Snapshot, SnapshotStore};
 pub use worker::{run_serve_worker, ServeWorkerOutcome, ServeWorkerParams};

@@ -34,6 +34,13 @@ pub enum Request {
     /// Force a durable checkpoint of every shard that advanced since its
     /// last one (errors when the service runs without a state dir).
     Checkpoint,
+    /// Re-partition the service online: retrain the coarse router from
+    /// the checkpointed shard codebooks and migrate prototype rows across
+    /// the fleets at a bumped router version. Queries keep answering from
+    /// the old epoch until the new one publishes. Errors when the service
+    /// runs without a state dir (the checkpointed files are the migration
+    /// source).
+    Rebalance,
 }
 
 /// What the service answers.
@@ -46,6 +53,14 @@ pub enum Response {
     Stats(StatsReply),
     /// Per-shard last-checkpointed versions after a forced flush.
     CheckpointAck { versions: Vec<u64> },
+    /// A completed rebalance: the bumped router version, how many
+    /// prototype rows changed shard, and the per-shard versions the
+    /// migrated fleets resumed at.
+    RebalanceAck {
+        router_version: u64,
+        moved_rows: u64,
+        shard_versions: Vec<u64>,
+    },
     Error { message: String },
 }
 
@@ -64,6 +79,11 @@ pub struct StatsReply {
     pub workers: u64,
     pub shards: u64,
     pub probe_n: u64,
+    /// Partition version of the serving router epoch (0 = bootstrap,
+    /// bumped by every rebalance).
+    pub router_version: u64,
+    /// Completed rebalances this process lifetime.
+    pub rebalances: u64,
     pub merges: u64,
     pub ingested: u64,
     pub ingest_shed: u64,
@@ -72,6 +92,11 @@ pub struct StatsReply {
     pub shard_versions: Vec<u64>,
     /// Reducer fold count per shard, shard order.
     pub shard_merges: Vec<u64>,
+    /// Points accepted per shard during the current router epoch (what
+    /// the rebalance skew trigger reads), shard order.
+    pub shard_ingest: Vec<u64>,
+    /// Points shed per shard during the current router epoch, shard order.
+    pub shard_shed: Vec<u64>,
     /// Last checkpointed version per shard (empty without persistence).
     pub last_checkpoint: Vec<u64>,
     /// Durable state directory (empty string = no persistence).
@@ -126,6 +151,7 @@ const OP_DISTORTION: u8 = 0x03;
 const OP_INGEST: u8 = 0x04;
 const OP_STATS: u8 = 0x05;
 const OP_CHECKPOINT: u8 = 0x06;
+const OP_REBALANCE: u8 = 0x07;
 
 const OP_CODES: u8 = 0x81;
 const OP_NEIGHBORS: u8 = 0x82;
@@ -133,6 +159,7 @@ const OP_DISTORTION_R: u8 = 0x83;
 const OP_INGEST_ACK: u8 = 0x84;
 const OP_STATS_R: u8 = 0x85;
 const OP_CHECKPOINT_ACK: u8 = 0x86;
+const OP_REBALANCE_ACK: u8 = 0x87;
 const OP_ERROR: u8 = 0xFF;
 
 fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
@@ -267,6 +294,7 @@ impl Request {
             }
             Request::Stats => out.push(OP_STATS),
             Request::Checkpoint => out.push(OP_CHECKPOINT),
+            Request::Rebalance => out.push(OP_REBALANCE),
         }
         out
     }
@@ -280,6 +308,7 @@ impl Request {
             OP_INGEST => Request::Ingest { points: c.f32s()? },
             OP_STATS => Request::Stats,
             OP_CHECKPOINT => Request::Checkpoint,
+            OP_REBALANCE => Request::Rebalance,
             op => bail!("unknown request opcode 0x{op:02x}"),
         };
         c.finish()?;
@@ -316,18 +345,31 @@ impl Response {
                 out.push(OP_STATS_R);
                 for field in [
                     s.version, s.kappa, s.dim, s.workers, s.shards, s.probe_n,
-                    s.merges, s.ingested, s.ingest_shed, s.queries,
+                    s.router_version, s.rebalances, s.merges, s.ingested,
+                    s.ingest_shed, s.queries,
                 ] {
                     out.extend_from_slice(&field.to_le_bytes());
                 }
                 put_u64s(&mut out, &s.shard_versions);
                 put_u64s(&mut out, &s.shard_merges);
+                put_u64s(&mut out, &s.shard_ingest);
+                put_u64s(&mut out, &s.shard_shed);
                 put_u64s(&mut out, &s.last_checkpoint);
                 put_str(&mut out, &s.state_dir);
             }
             Response::CheckpointAck { versions } => {
                 out.push(OP_CHECKPOINT_ACK);
                 put_u64s(&mut out, versions);
+            }
+            Response::RebalanceAck {
+                router_version,
+                moved_rows,
+                shard_versions,
+            } => {
+                out.push(OP_REBALANCE_ACK);
+                out.extend_from_slice(&router_version.to_le_bytes());
+                out.extend_from_slice(&moved_rows.to_le_bytes());
+                put_u64s(&mut out, shard_versions);
             }
             Response::Error { message } => {
                 out.push(OP_ERROR);
@@ -359,18 +401,27 @@ impl Response {
                 workers: c.u64()?,
                 shards: c.u64()?,
                 probe_n: c.u64()?,
+                router_version: c.u64()?,
+                rebalances: c.u64()?,
                 merges: c.u64()?,
                 ingested: c.u64()?,
                 ingest_shed: c.u64()?,
                 queries: c.u64()?,
                 shard_versions: c.u64s()?,
                 shard_merges: c.u64s()?,
+                shard_ingest: c.u64s()?,
+                shard_shed: c.u64s()?,
                 last_checkpoint: c.u64s()?,
                 state_dir: c.str()?,
             }),
             OP_CHECKPOINT_ACK => {
                 Response::CheckpointAck { versions: c.u64s()? }
             }
+            OP_REBALANCE_ACK => Response::RebalanceAck {
+                router_version: c.u64()?,
+                moved_rows: c.u64()?,
+                shard_versions: c.u64s()?,
+            },
             OP_ERROR => Response::Error { message: c.str()? },
             op => bail!("unknown response opcode 0x{op:02x}"),
         };
@@ -399,6 +450,7 @@ mod tests {
         round_trip_req(Request::Ingest { points: vec![f32::MIN, f32::MAX] });
         round_trip_req(Request::Stats);
         round_trip_req(Request::Checkpoint);
+        round_trip_req(Request::Rebalance);
     }
 
     #[test]
@@ -418,18 +470,32 @@ mod tests {
             workers: 8,
             shards: 4,
             probe_n: 2,
+            router_version: 3,
+            rebalances: 3,
             merges: 5,
             ingested: 1024,
             ingest_shed: 0,
             queries: 33,
             shard_versions: vec![1, 2, 1, 1],
             shard_merges: vec![2, 2, 1, 1],
+            shard_ingest: vec![512, 256, 128, 128],
+            shard_shed: vec![0, 0, 7, 0],
             last_checkpoint: vec![1, 2, 0, 1],
             state_dir: "/var/lib/dalvq/state".into(),
         }));
         round_trip_resp(Response::Stats(StatsReply::default()));
         round_trip_resp(Response::CheckpointAck { versions: vec![9, 8, 7] });
         round_trip_resp(Response::CheckpointAck { versions: vec![] });
+        round_trip_resp(Response::RebalanceAck {
+            router_version: 2,
+            moved_rows: 5,
+            shard_versions: vec![7, 7, 7, 7],
+        });
+        round_trip_resp(Response::RebalanceAck {
+            router_version: 1,
+            moved_rows: 0,
+            shard_versions: vec![],
+        });
         round_trip_resp(Response::Error { message: "bad dim".into() });
     }
 

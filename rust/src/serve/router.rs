@@ -16,6 +16,13 @@
 //!
 //! The router is deterministic in the seed — two services built from the
 //! same config partition identically, which the determinism suite pins.
+//!
+//! "Frozen" is per **router epoch**, not per process: a rebalance
+//! retrains a fresh coarse quantizer offline from the checkpointed shard
+//! codebooks ([`crate::persist::rebalance`]) and the service swaps the
+//! whole epoch — router plus fleets — atomically
+//! ([`super::VqService::rebalance`]). Within an epoch nothing here ever
+//! mutates.
 
 use crate::vq::{self, Codebook, InitMethod};
 
@@ -207,6 +214,63 @@ mod tests {
         // probe_n == 0 clamps up to 1
         r.probe_into(&[1.0], 0, &mut probes);
         assert_eq!(probes, vec![near0]);
+    }
+
+    #[test]
+    fn probe_wider_than_the_shard_count_is_a_full_scan() {
+        // probe_n > S must clamp to S and enumerate every shard exactly
+        // once, nearest first — the oracle mode the e2e suites rely on.
+        let pts = two_clusters();
+        let r = Router::train(&pts, 1, 2, 8, 5);
+        let mut probes = Vec::new();
+        r.probe_into(&[0.5], usize::MAX, &mut probes);
+        assert_eq!(probes.len(), 2);
+        let mut sorted = probes.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1], "every shard probed exactly once");
+        assert_eq!(probes[0], r.route(&[0.5]), "nearest shard probed first");
+    }
+
+    #[test]
+    fn duplicate_bootstrap_samples_still_train_a_usable_router() {
+        // A degenerate bootstrap: every sample identical. k-means++ falls
+        // back to uniform picks, Lloyd leaves centroids coincident —
+        // routing must stay total (first-minimum tie break), probing must
+        // still enumerate distinct shards, and partition must keep every
+        // point.
+        let pts = vec![3.0f32; 64]; // 32 identical points, dim 2
+        let r = Router::train(&pts, 2, 4, 8, 13);
+        assert_eq!(r.shards(), 4);
+        let z = [3.0f32, 3.0];
+        assert_eq!(r.route(&z), 0, "ties break to the first shard");
+        let mut probes = Vec::new();
+        r.probe_into(&z, 4, &mut probes);
+        let mut sorted = probes.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+        let parts = r.partition(&pts);
+        assert_eq!(parts.iter().map(Vec::len).sum::<usize>(), pts.len());
+        // far-away queries still route somewhere valid
+        assert!(r.route(&[1e6, -1e6]) < 4);
+    }
+
+    #[test]
+    fn partition_with_empty_cells_keeps_every_point() {
+        // Train on two clusters, then partition a buffer drawn entirely
+        // from one of them: the other shard's cell must come back empty
+        // (not padded, not crashed) and the hot cell must hold everything
+        // in input order.
+        let r = Router::train(&two_clusters(), 1, 2, 8, 11);
+        let hot = [100.0f32, 101.0, 102.5];
+        let parts = r.partition(&hot);
+        assert_eq!(parts.len(), 2);
+        let hot_shard = r.route(&[100.0]);
+        assert_eq!(parts[hot_shard][..], [100.0, 101.0, 102.5]);
+        assert!(parts[1 - hot_shard].is_empty());
+        // and an empty input yields S empty cells
+        let parts = r.partition(&[]);
+        assert!(parts.iter().all(Vec::is_empty));
+        assert_eq!(parts.len(), 2);
     }
 
     #[test]

@@ -159,18 +159,33 @@ fn handle(service: &VqService, req: Request) -> Response {
                 workers: s.workers as u64,
                 shards: s.shards as u64,
                 probe_n: s.probe_n as u64,
+                router_version: s.router_version,
+                rebalances: s.rebalances,
                 merges: s.merges,
                 ingested: s.ingested,
                 ingest_shed: s.ingest_shed,
                 queries: s.queries,
                 shard_versions: s.shard_versions,
                 shard_merges: s.shard_merges,
+                shard_ingest: s.shard_ingest,
+                shard_shed: s.shard_shed,
                 last_checkpoint: s.last_checkpoint,
                 state_dir: s.state_dir.unwrap_or_default(),
             })
         }
         Request::Checkpoint => match service.checkpoint_now() {
             Ok(versions) => Response::CheckpointAck { versions },
+            Err(e) => Response::Error { message: format!("{e:#}") },
+        },
+        // The epoch swap happens entirely inside the service; this
+        // connection blocks until the new partition serves, while reads
+        // on other connections keep answering from the old epoch.
+        Request::Rebalance => match service.rebalance() {
+            Ok(out) => Response::RebalanceAck {
+                router_version: out.router_version,
+                moved_rows: out.moved_rows,
+                shard_versions: out.shard_versions,
+            },
             Err(e) => Response::Error { message: format!("{e:#}") },
         },
     }

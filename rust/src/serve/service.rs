@@ -1,6 +1,6 @@
 //! The in-process service: `S` independent shard fleets (workers + queue +
 //! blob + reducer + [`SnapshotStore`]) behind a coarse-quantizer
-//! [`Router`].
+//! [`Router`], organised into **router epochs**.
 //!
 //! Training topology per shard is exactly the cloud runtime's (eq. 9 /
 //! CloudDALVQ): `M` worker threads exchange displacements through the
@@ -8,18 +8,33 @@
 //! reducer folds whatever arrives next, epoch-swapping immutable snapshots
 //! into the shard's store. Shards never synchronize with each other —
 //! Patra's asynchronous-LVQ analysis holds per shard, and the router is
-//! the only cross-shard structure (frozen after its bootstrap k-means
-//! pass). Queries multi-probe the `probe_n` nearest shards; ingest routes
-//! every point to its owning shard's workers. With `shards = 1` the
-//! service collapses to the original single-fleet deployment, bit-for-bit
-//! (same seeds, same data order).
+//! the only cross-shard structure.
+//!
+//! The router is frozen *within* an epoch, not for the process lifetime:
+//! the whole partition — coarse centroids plus the `S` fleets they route
+//! to — lives in one [`Epoch`] value behind an `Arc`-swapped cell, the
+//! same publication discipline [`SnapshotStore`] uses for codebooks. A
+//! **rebalance** quiesces the current epoch's fleets (the read path keeps
+//! answering from their final published snapshots), flushes a checkpoint,
+//! re-partitions the *durable* state offline
+//! ([`crate::persist::rebalance`]: router retrained from the checkpointed
+//! codebooks weighted by observed ingest, prototype rows migrated across
+//! the shard files), restarts fresh fleets from the rewritten directory,
+//! and publishes the new epoch — queries are served from the old epoch
+//! until the swap, so the read path never drops. A skew monitor can
+//! auto-trigger this when per-shard ingest counters diverge
+//! (`rebalance_skew`), which is Kamp et al.'s adapt-the-partition-to-load
+//! argument operationalised.
+//!
+//! With `shards = 1` the service collapses to the original single-fleet
+//! deployment, bit-for-bit (same seeds, same data order).
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Barrier, Mutex};
+use std::sync::{mpsc, Arc, Barrier, Mutex, Weak};
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cloud::{
     BlobHandle, BlobService, DeltaMsg, LatencyInjector, QueueService,
@@ -27,7 +42,8 @@ use crate::cloud::{
 use crate::config::{ExperimentConfig, ServeConfig};
 use crate::data::Dataset;
 use crate::persist::{
-    self, Checkpointer, Manifest, RestoredState, RouterState, ShardState,
+    self, CheckpointSpec, Checkpointer, Manifest, RestoredState, RouterState,
+    ShardState,
 };
 use crate::vq::{init_codebook, Codebook};
 
@@ -35,35 +51,48 @@ use super::router::Router;
 use super::snapshot::{Snapshot, SnapshotStore};
 use super::worker::{run_serve_worker, ServeWorkerOutcome, ServeWorkerParams};
 
-/// Live counters, shared between the fleets and the front-end.
+/// Live counters, shared between the fleets and the front-end. These are
+/// service-lifetime totals — they survive router-epoch swaps (the
+/// per-shard counters on each epoch's fleets reset at a rebalance,
+/// because shard identity changes with the partition).
 #[derive(Debug, Default)]
 pub struct ServeCounters {
     /// Ingested points accepted into worker queues (all shards).
     pub ingested: AtomicU64,
-    /// Ingested points shed because a worker's queue was full.
+    /// Ingested points shed because a worker's queue was full (or because
+    /// the owning epoch was mid-migration).
     pub ingest_shed: AtomicU64,
     /// Queries answered (all read ops; maintained by the front-end).
     pub queries: AtomicU64,
-    /// Deltas folded across every shard's reducer (may run ahead of the
-    /// published snapshot versions when `publish_every > 1`).
+    /// Fold clock across every shard's reducer. Within an epoch this
+    /// counts actual deltas folded; a rebalance advances it so it stays
+    /// `>=` the summed published versions (migrated fleets resume at the
+    /// max of the old shard versions).
     pub merges: AtomicU64,
+    /// Completed rebalances (router-epoch swaps) this process lifetime.
+    pub rebalances: AtomicU64,
 }
 
 /// A point-in-time view of [`ServeCounters`] plus service shape.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeStats {
-    /// Sum of per-shard snapshot versions (monotone; the global freshness
-    /// clock of the service).
+    /// Sum of per-shard snapshot versions (monotone — including across
+    /// rebalances; the global freshness clock of the service).
     pub version: u64,
-    /// Total prototypes across all shards.
+    /// Total prototypes across shards.
     pub kappa: usize,
     pub dim: usize,
     /// Total workers across all shards.
     pub workers: usize,
     pub shards: usize,
     pub probe_n: usize,
-    /// Reducer folds to date, all shards (>= version; they differ when
-    /// reducers publish every `publish_every` folds).
+    /// Partition version of the serving router epoch (0 = bootstrap,
+    /// bumped by every rebalance).
+    pub router_version: u64,
+    /// Completed rebalances this process lifetime.
+    pub rebalances: u64,
+    /// Fold clock, all shards (>= version; they differ when reducers
+    /// publish every `publish_every` folds).
     pub merges: u64,
     pub ingested: u64,
     pub ingest_shed: u64,
@@ -72,6 +101,11 @@ pub struct ServeStats {
     pub shard_versions: Vec<u64>,
     /// Reducer fold count per shard.
     pub shard_merges: Vec<u64>,
+    /// Points accepted per shard during the current router epoch — what
+    /// the skew monitor (and the rebalance retrainer) read.
+    pub shard_ingest: Vec<u64>,
+    /// Points shed per shard during the current router epoch.
+    pub shard_shed: Vec<u64>,
     /// Durable state directory (`None` when the service runs without
     /// persistence).
     pub state_dir: Option<String>,
@@ -83,7 +117,8 @@ pub struct ServeStats {
 #[derive(Debug)]
 pub struct ShardOutcome {
     pub shard: usize,
-    /// Deltas folded by this shard's reducer over the service lifetime.
+    /// The shard reducer's fold clock at join (includes any restored or
+    /// migrated base).
     pub merges: u64,
     /// The shard's final shared codebook (`kappa/S` prototypes).
     pub final_shared: Codebook,
@@ -92,9 +127,9 @@ pub struct ShardOutcome {
 /// What the whole service reports at shutdown.
 #[derive(Debug)]
 pub struct ServeOutcome {
-    /// Every worker, shard-major order.
+    /// Every worker of the final epoch, shard-major order.
     pub workers: Vec<ServeWorkerOutcome>,
-    /// Total deltas folded across shards.
+    /// Summed shard fold clocks at shutdown.
     pub merges: u64,
     /// The global codebook: shard codebooks concatenated in shard order
     /// (row `s * kappa/S + j` is shard `s`'s prototype `j`, matching the
@@ -103,7 +138,18 @@ pub struct ServeOutcome {
     pub shards: Vec<ShardOutcome>,
 }
 
-/// One shard's training fleet handles — taken exactly once at shutdown.
+/// What a completed rebalance reports (the wire's `RebalanceAck`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RebalanceOutcome {
+    /// The bumped partition version now serving.
+    pub router_version: u64,
+    /// Prototype rows that changed shard.
+    pub moved_rows: u64,
+    /// Per-shard versions the migrated fleets resumed at.
+    pub shard_versions: Vec<u64>,
+}
+
+/// One shard's training fleet handles — taken exactly once at quiesce.
 struct Fleet {
     workers: Vec<JoinHandle<Result<ServeWorkerOutcome>>>,
     reducer: JoinHandle<Result<(u64, Codebook)>>,
@@ -111,27 +157,67 @@ struct Fleet {
     queue_template: crate::cloud::QueueHandle,
 }
 
-/// One shard: an independent eq.-9 fleet plus its publication store.
+/// One shard: an independent eq.-9 fleet plus its publication store and
+/// per-epoch load counters.
 struct ShardFleet {
     store: Arc<SnapshotStore>,
     merges: Arc<AtomicU64>,
-    /// Cloned under a short lock per ingest call; cleared at shutdown.
+    /// Points accepted by this shard during the current router epoch
+    /// (`Arc`: the checkpointer persists it next to the codebook so the
+    /// rebalance retrainer can weight this shard's rows by it).
+    ingested: Arc<AtomicU64>,
+    /// Points routed here but shed during the current router epoch.
+    shed: Arc<AtomicU64>,
+    /// Cloned under a short lock per ingest call; cleared at quiesce.
     ingest_txs: Mutex<Vec<mpsc::SyncSender<Vec<f32>>>>,
     ingest_cursor: AtomicUsize,
     fleet: Mutex<Option<Fleet>>,
 }
 
+/// One router epoch: a frozen coarse partition plus the `S` fleets
+/// serving it. The whole value sits behind an `Arc`-swapped cell in
+/// [`VqService`], so every query resolves routing and shard snapshots
+/// against one consistent partition even while a rebalance publishes the
+/// next epoch.
+struct Epoch {
+    router: Router,
+    router_version: u64,
+    shards: Vec<ShardFleet>,
+    /// Stops THIS epoch's fleets (the service-level `closing` flag is
+    /// separate: a rebalance stops an epoch without closing the service).
+    stop: Arc<AtomicBool>,
+    go: Arc<AtomicBool>,
+    /// Per-shard published version at epoch start — the monitor's floor
+    /// for "folds trained in this epoch".
+    base_versions: Vec<u64>,
+}
+
+/// Seed state for one shard fleet of a new epoch.
+struct ShardSeed {
+    w0: Codebook,
+    /// Version the fleet resumes publishing from (0 on a cold start).
+    version: u64,
+    /// Initial schedule cursor per worker (exchange-aligned).
+    t0: u64,
+    ingested: u64,
+    shed: u64,
+}
+
 /// The running service. Queries go through the `query_*` methods (which
-/// route through the coarse quantizer); ingestion through
+/// route through the current epoch's coarse quantizer); ingestion through
 /// [`VqService::ingest`]; the TCP front-end ([`super::Server`]) is a thin
 /// adapter over exactly these methods.
 ///
-/// Shutdown takes `&self` (the service is normally shared behind an
-/// `Arc` with connection handlers), so callers never need to reclaim
-/// unique ownership from in-flight connections.
+/// Everything lifecycle-shaped takes `&self` (the service is shared
+/// behind an `Arc` with connection handlers and the skew monitor), so
+/// callers never need to reclaim unique ownership from in-flight
+/// connections.
 pub struct VqService {
-    router: Router,
-    shards: Vec<ShardFleet>,
+    /// Deployment config, kept so a rebalance can respawn fleets.
+    cfg: ExperimentConfig,
+    serve: ServeConfig,
+    /// The serving epoch; swapped by `rebalance`.
+    epoch: Mutex<Arc<Epoch>>,
     counters: Arc<ServeCounters>,
     dim: usize,
     /// Total prototypes across shards.
@@ -140,29 +226,39 @@ pub struct VqService {
     kappa_shard: usize,
     workers_per_shard: usize,
     probe_n: usize,
-    go: Arc<AtomicBool>,
-    stop: Arc<AtomicBool>,
+    /// The service is shutting down (monitor exits, rebalance refuses,
+    /// ingest errors instead of shedding).
+    closing: Arc<AtomicBool>,
     /// Durable state directory (None = no persistence).
     state_dir: Option<PathBuf>,
     /// Last checkpointed version per shard (always `S`-sized; only
     /// meaningful with `state_dir`).
     last_checkpoint: Arc<Vec<AtomicU64>>,
-    /// The background checkpointer; taken at shutdown.
+    /// The background checkpointer of the current epoch; swapped by
+    /// `rebalance`, taken at shutdown.
     checkpointer: Mutex<Option<Checkpointer>>,
+    /// Serializes rebalances against each other and against shutdown.
+    lifecycle: Mutex<()>,
+    /// The skew monitor thread, when auto-rebalance is configured.
+    monitor: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl VqService {
     /// Build the router and every shard fleet, then start serving. Blocks
     /// until all `S * M` workers have built their engines and passed the
     /// ready barrier, so the first query already sees a live system.
-    pub fn start(cfg: &ExperimentConfig, serve: &ServeConfig) -> Result<VqService> {
+    /// Returns an `Arc` because the service is inherently shared: the
+    /// skew monitor (when `rebalance_skew` is set) holds a weak handle.
+    pub fn start(
+        cfg: &ExperimentConfig,
+        serve: &ServeConfig,
+    ) -> Result<Arc<VqService>> {
         cfg.validate()?;
         serve.validate(cfg)?;
 
         let dim = cfg.dim();
         let s_count = serve.shards;
         let kappa_shard = cfg.vq.kappa / s_count;
-        let dataset = cfg.data.mixture.dataset(cfg.data.n_total, cfg.seed);
 
         // Warm restart: load and validate durable state before anything
         // is built (a mismatched state dir must fail here, loudly, not
@@ -174,163 +270,55 @@ impl VqService {
 
         // The coarse quantizer: restored verbatim on a warm start (a
         // retrained router would repartition the space and orphan every
-        // saved shard codebook); otherwise a short k-means pass over a
-        // bootstrap sample (prefix of the dataset — already i.i.d. from
-        // the mixture), then frozen for the service lifetime.
-        let router = match &restored {
-            Some(r) => Router::from_centroids(r.router.centroids.clone()),
+        // saved shard codebook — rebalancing is an explicit, offline
+        // operation on the state dir, never a startup side effect);
+        // otherwise a short k-means pass over a bootstrap sample (prefix
+        // of the dataset — already i.i.d. from the mixture), frozen for
+        // this epoch.
+        let (router, router_version) = match &restored {
+            Some(r) => (
+                Router::from_centroids(r.router.centroids.clone()),
+                r.manifest.router_version,
+            ),
             None => {
-                let sample_pts = serve.router_sample.min(dataset.len());
-                Router::train(
-                    &dataset.flat()[..sample_pts * dim],
-                    dim,
-                    s_count,
-                    serve.router_iters,
-                    cfg.seed,
+                // The bootstrap sample is the dataset prefix (stream 0 is
+                // sequential, so generating just the prefix yields the
+                // same bytes without materialising the full dataset —
+                // spawn_epoch builds that once, for the worker corpora).
+                let sample_pts = serve.router_sample.min(cfg.data.n_total);
+                let sample =
+                    cfg.data.mixture.generate(sample_pts, cfg.seed, 0);
+                (
+                    Router::train(
+                        &sample,
+                        dim,
+                        s_count,
+                        serve.router_iters,
+                        cfg.seed,
+                    ),
+                    0,
                 )
             }
         };
-        let parts = router.partition(dataset.flat());
 
         let counters = Arc::new(ServeCounters::default());
-        let stop = Arc::new(AtomicBool::new(false));
-        let go = Arc::new(AtomicBool::new(!serve.start_paused));
-        let ready = Arc::new(Barrier::new(s_count * cfg.m + 1));
-
-        let mut shards = Vec::with_capacity(s_count);
-        for (s, part) in parts.into_iter().enumerate() {
-            // A shard's region must be able to seed kappa/S prototypes and
-            // feed M workers; a starved cell (rare — the router's k-means
-            // balances cells against the mixture) is padded cyclically.
-            let min_pts = cfg.m.max(kappa_shard);
-            let part = ensure_min_points(part, dim, min_pts, dataset.flat());
-            let shard_data = Dataset::new(part, dim);
-            // Seed state: the checkpoint on a warm start (codebook,
-            // version, fold count, schedule cursor), a fresh init on a
-            // cold one.
-            let (w0, v0, merges0, t0) = match &restored {
-                Some(r) => {
-                    let st = &r.shards[s];
-                    let ppe = serve.points_per_exchange as u64;
-                    // The saved cursor counts the shard's folded points;
-                    // spread it across M workers, snapped down to an
-                    // exchange boundary.
-                    let t0 = st.rng_cursor / cfg.m as u64 / ppe * ppe;
-                    // The fold clock resumes from the saved *version* —
-                    // the folds the saved codebook actually contains.
-                    // The file's `merges` field can run ahead of it
-                    // (unpublished folds at checkpoint time, or a racy
-                    // counter sample); seeding from it would label
-                    // future publishes with folds this codebook never
-                    // absorbed.
-                    (st.codebook.clone(), st.version, st.version, t0)
-                }
-                None => {
-                    let w0 = init_codebook(
-                        cfg.vq.init,
-                        kappa_shard,
-                        dim,
-                        shard_data.flat(),
-                        // Distinct init stream per shard; shard 0 keeps
-                        // the plain seed so `shards = 1` reproduces the
-                        // original deployment.
-                        cfg.seed ^ ((s as u64) << 17),
-                    );
-                    (w0, 0, 0, 0)
-                }
-            };
-
-            let store = SnapshotStore::with_version(w0.clone(), v0);
-            let merges = Arc::new(AtomicU64::new(merges0));
-            // Keep the global fold counter cumulative too, so
-            // `ServeStats::merges` stays >= the summed versions across a
-            // warm restart (the invariant its doc states).
-            counters.merges.fetch_add(merges0, Ordering::Relaxed);
-            let blob = BlobService::spawn(w0.clone());
-            let (queue, queue_rx) = QueueService::create(1024);
-
-            let reducer = {
-                let blob = blob.clone();
-                let store = Arc::clone(&store);
-                let counters = Arc::clone(&counters);
-                let shard_merges = Arc::clone(&merges);
-                let w0 = w0.clone();
-                let publish_every = serve.publish_every;
-                std::thread::Builder::new()
-                    .name(format!("dalvq-serve-reducer-{s}"))
-                    .spawn(move || {
-                        run_serving_reducer(
-                            queue_rx,
-                            blob,
-                            store,
-                            counters,
-                            shard_merges,
-                            w0,
-                            publish_every,
-                            merges0,
-                        )
-                    })
-                    .expect("spawning serve reducer thread")
-            };
-
-            let worker_shards = shard_data.split(cfg.m);
-            let mut ingest_txs = Vec::with_capacity(cfg.m);
-            let mut workers = Vec::with_capacity(cfg.m);
-            for (i, shard) in worker_shards.into_iter().enumerate() {
-                let wid = s * cfg.m + i; // fleet-global worker id
-                let (tx, rx) = mpsc::sync_channel::<Vec<f32>>(serve.ingest_queue);
-                ingest_txs.push(tx);
-                let params = ServeWorkerParams {
-                    worker_id: wid,
-                    shard,
-                    w0: w0.clone(),
-                    schedule: cfg.vq.schedule,
-                    tau: cfg.scheme.tau(),
-                    points_per_exchange: serve.points_per_exchange,
-                    point_compute: serve.point_compute,
-                    absorb_per_chunk: serve.absorb_per_chunk,
-                    engine_spec: cfg.engine.clone(),
-                    ready: Arc::clone(&ready),
-                    stop: Arc::clone(&stop),
-                    go: Arc::clone(&go),
-                    sync_exchange: serve.sync_exchange,
-                    max_points: serve.max_points_per_worker,
-                    t0,
-                    fold_base: merges0,
-                };
-                let q = queue.clone().with_latency(LatencyInjector::new(
-                    serve.service_latency,
-                    serve.latency_jitter,
-                    serve.drop_prob,
-                    cfg.seed ^ ((wid as u64) << 8),
-                ));
-                let b = blob.clone().with_latency(LatencyInjector::new(
-                    serve.service_latency,
-                    serve.latency_jitter,
-                    0.0, // downloads are request/response; loss shows as latency
-                    cfg.seed ^ ((wid as u64) << 8) ^ 1,
-                ));
-                workers.push(
-                    std::thread::Builder::new()
-                        .name(format!("dalvq-serve-worker-{wid}"))
-                        .spawn(move || run_serve_worker(params, rx, q, b))
-                        .expect("spawning serve worker thread"),
-                );
-            }
-
-            shards.push(ShardFleet {
-                store,
-                merges,
-                ingest_txs: Mutex::new(ingest_txs),
-                ingest_cursor: AtomicUsize::new(0),
-                fleet: Mutex::new(Some(Fleet {
-                    workers,
-                    reducer,
-                    queue_template: queue,
-                })),
-            });
+        let seeds = restored
+            .as_ref()
+            .map(|r| seeds_from_restored(r, serve, cfg.m));
+        // The service-wide fold clock resumes from the saved versions.
+        if let Some(seeds) = &seeds {
+            let base: u64 = seeds.iter().map(|s| s.version).sum();
+            counters.merges.fetch_add(base, Ordering::Relaxed);
         }
-        ready.wait(); // engines built; the service is live
+        let epoch = spawn_epoch(
+            cfg,
+            serve,
+            &counters,
+            router,
+            router_version,
+            seeds,
+            serve.start_paused,
+        )?;
 
         // Persistence: on a cold start write the full initial state
         // (router + shard files + manifest) so the directory is
@@ -348,37 +336,41 @@ impl VqService {
         let checkpointer = match &serve.state_dir {
             Some(dir) => {
                 if restored.is_none() {
-                    write_initial_state(dir, &router, &shards, cfg, serve)?;
+                    write_initial_state(dir, &epoch, cfg, serve)?;
                 }
-                Some(Checkpointer::spawn(
-                    dir.clone(),
-                    shards.iter().map(|f| Arc::clone(&f.store)).collect(),
-                    shards.iter().map(|f| Arc::clone(&f.merges)).collect(),
-                    Arc::clone(&last_checkpoint),
-                    serve.checkpoint_every,
-                    serve.points_per_exchange,
-                    cfg.vq.kappa,
-                    dim,
-                ))
+                Some(spawn_checkpointer(dir, &epoch, &last_checkpoint, cfg, serve))
             }
             None => None,
         };
 
-        Ok(VqService {
-            router,
-            shards,
+        let service = Arc::new(VqService {
+            cfg: cfg.clone(),
+            serve: serve.clone(),
+            epoch: Mutex::new(Arc::new(epoch)),
             counters,
             dim,
             kappa: cfg.vq.kappa,
             kappa_shard,
             workers_per_shard: cfg.m,
             probe_n: serve.probe_n,
-            go,
-            stop,
+            closing: Arc::new(AtomicBool::new(false)),
             state_dir: serve.state_dir.clone(),
             last_checkpoint,
             checkpointer: Mutex::new(checkpointer),
-        })
+            lifecycle: Mutex::new(()),
+            monitor: Mutex::new(None),
+        });
+        if serve.rebalance_skew > 0.0 {
+            let handle = spawn_monitor(&service);
+            *service.monitor.lock().unwrap_or_else(|e| e.into_inner()) = Some(handle);
+        }
+        Ok(service)
+    }
+
+    /// The serving epoch — one consistent (router, fleets) pair. O(1)
+    /// `Arc` clone, same discipline as [`SnapshotStore::load`].
+    fn current(&self) -> Arc<Epoch> {
+        Arc::clone(&self.epoch.lock().unwrap_or_else(|e| e.into_inner()))
     }
 
     pub fn dim(&self) -> usize {
@@ -391,31 +383,39 @@ impl VqService {
     }
 
     pub fn shards(&self) -> usize {
-        self.shards.len()
+        self.serve.shards
     }
 
     pub fn probe_n(&self) -> usize {
         self.probe_n
     }
 
-    /// The frozen coarse quantizer (diagnostics, tests, oracles).
-    pub fn router(&self) -> &Router {
-        &self.router
+    /// The current epoch's coarse quantizer (diagnostics, tests,
+    /// oracles). A clone: the backing epoch may be swapped by a
+    /// rebalance the moment this returns.
+    pub fn router(&self) -> Router {
+        self.current().router.clone()
+    }
+
+    /// Partition version of the serving epoch (0 = bootstrap router;
+    /// bumped by every rebalance).
+    pub fn router_version(&self) -> u64 {
+        self.current().router_version
     }
 
     /// Release a fleet started with `start_paused` (no-op otherwise).
     pub fn resume(&self) {
-        self.go.store(true, Ordering::Release);
+        self.current().go.store(true, Ordering::Release);
     }
 
     /// Current published epoch of one shard.
     pub fn shard_snapshot(&self, s: usize) -> Arc<Snapshot> {
-        self.shards[s].store.load()
+        self.current().shards[s].store.load()
     }
 
     /// Current epochs of every shard, in shard order.
     pub fn snapshots(&self) -> Vec<Arc<Snapshot>> {
-        self.shards.iter().map(|s| s.store.load()).collect()
+        self.current().shards.iter().map(|s| s.store.load()).collect()
     }
 
     /// A coherent global view: with one shard, the shard's epoch as-is
@@ -424,10 +424,12 @@ impl VqService {
     /// (rows match the global codes queries return) and whose version is
     /// the per-shard sum.
     pub fn snapshot(&self) -> Arc<Snapshot> {
-        if self.shards.len() == 1 {
-            return self.shards[0].store.load();
+        let ep = self.current();
+        if ep.shards.len() == 1 {
+            return ep.shards[0].store.load();
         }
-        let snaps = self.snapshots();
+        let snaps: Vec<Arc<Snapshot>> =
+            ep.shards.iter().map(|s| s.store.load()).collect();
         let mut flat = Vec::with_capacity(self.kappa * self.dim);
         let mut version = 0u64;
         for snap in &snaps {
@@ -440,14 +442,16 @@ impl VqService {
         })
     }
 
-    /// Sum of per-shard versions (lock-free; freshness polling).
+    /// Sum of per-shard versions (freshness polling; monotone across
+    /// rebalances because migrated fleets resume at the max of the old
+    /// versions).
     pub fn version(&self) -> u64 {
-        self.shards.iter().map(|s| s.store.version()).sum()
+        self.current().shards.iter().map(|s| s.store.version()).sum()
     }
 
     /// Per-shard published versions, in shard order.
     pub fn shard_versions(&self) -> Vec<u64> {
-        self.shards.iter().map(|s| s.store.version()).collect()
+        self.current().shards.iter().map(|s| s.store.version()).collect()
     }
 
     pub fn counters(&self) -> &Arc<ServeCounters> {
@@ -474,20 +478,230 @@ impl VqService {
     /// one; blocks until the files are durable. Returns the per-shard
     /// checkpointed versions (the protocol's `Checkpoint` op lands here).
     pub fn checkpoint_now(&self) -> Result<Vec<u64>> {
+        if self.state_dir.is_none() {
+            return Err(anyhow!(
+                "service has no durable state (started without --state-dir)"
+            ));
+        }
         let guard = self.checkpointer.lock().unwrap_or_else(|e| e.into_inner());
         match guard.as_ref() {
             Some(ck) => ck.flush(),
+            // With a state dir, an empty slot only ever means a rebalance
+            // holds the checkpointer between retiring the old epoch's and
+            // spawning the new one's.
             None => Err(anyhow!(
-                "service has no durable state (started without --state-dir)"
+                "a rebalance is migrating the shards; retry the checkpoint \
+                 once the epoch swap completes"
             )),
         }
+    }
+
+    // ---------------------------------------------------------- rebalance
+
+    /// Re-partition the service online: quiesce the current epoch's
+    /// fleets, flush their state to the durable directory, retrain the
+    /// coarse quantizer from the checkpointed codebooks (rows weighted by
+    /// the per-shard ingest observed this epoch), migrate prototype rows
+    /// across the shard files, restart fresh fleets from the rewritten
+    /// directory, and swap the new epoch in.
+    ///
+    /// The read path never drops: queries keep answering from the old
+    /// epoch's final published snapshots until the swap. Ingest routed to
+    /// the draining epoch is shed (at-most-once transport, same contract
+    /// as a full queue). Requires durable state — the checkpointed files,
+    /// not any live fleet, are the migration source.
+    pub fn rebalance(&self) -> Result<RebalanceOutcome> {
+        let _lifecycle = self.lifecycle.lock().unwrap_or_else(|e| e.into_inner());
+        if self.closing.load(Ordering::Acquire) {
+            bail!("service is shutting down");
+        }
+        let dir = self.state_dir.clone().ok_or_else(|| {
+            anyhow!(
+                "rebalance needs durable state (start with --state-dir): \
+                 the checkpointed shard files are the migration source"
+            )
+        })?;
+
+        // 1. Quiesce the serving fleets. Their stores keep answering
+        //    queries from the final published snapshots. Taking the
+        //    handles is the only "already shut down" source and mutates
+        //    nothing; once we own them, ANY later failure must revive —
+        //    never leave the service quiesced and write-dead.
+        let old = self.current();
+        let fleets = take_fleets(&old)?;
+        if let Err(e) = join_fleets(&old, fleets) {
+            self.revive_previous(&dir, &old)?;
+            return Err(e.context(
+                "quiescing for a rebalance failed; the previous partition \
+                 was revived and keeps serving",
+            ));
+        }
+        let old_version_sum: u64 =
+            old.shards.iter().map(|f| f.store.version()).sum();
+
+        // 2-4. Retire this epoch's checkpointer (its final drain persists
+        //    exactly the post-quiesce state — codebooks, fold clocks,
+        //    ingest counters — the migration will read), migrate the
+        //    durable state offline, then restart fleets from the
+        //    rewritten directory — the same warm path a killed-and-
+        //    restarted process takes, so what serves after the swap IS
+        //    what a restart would serve. Everything fallible from here on
+        //    runs inside one closure so ANY failure — including the flush
+        //    — takes the revive path below instead of leaving the service
+        //    quiesced.
+        let migrated = (|| -> Result<(persist::RebalanceReport, RestoredState, Epoch)> {
+            match self
+                .checkpointer
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .take()
+            {
+                Some(ck) => {
+                    ck.stop().context("flushing pre-rebalance state")?
+                }
+                None => {
+                    bail!("rebalance lost the checkpointer (double shutdown?)")
+                }
+            }
+            let report = persist::rebalance_state_dir(
+                &dir,
+                self.serve.router_iters,
+                self.cfg.seed,
+            )?;
+            let restored =
+                load_restore(&dir, &self.cfg, &self.serve)?.ok_or_else(|| {
+                    anyhow!("state dir lost its manifest mid-rebalance")
+                })?;
+            let router =
+                Router::from_centroids(restored.router.centroids.clone());
+            let seeds = seeds_from_restored(&restored, &self.serve, self.cfg.m);
+            let epoch = spawn_epoch(
+                &self.cfg,
+                &self.serve,
+                &self.counters,
+                router,
+                restored.manifest.router_version,
+                Some(seeds),
+                false, // migrated fleets start live, never paused
+            )?;
+            Ok((report, restored, epoch))
+        })();
+        let (report, restored, epoch) = match migrated {
+            Ok(ok) => ok,
+            // A failed migration (disk full mid-write, torn directory)
+            // must not brick the service: the old fleets are already
+            // quiesced, so revive the PREVIOUS partition from its
+            // in-memory final snapshots, heal the possibly-torn state dir
+            // back to it, and only then surface the error — writes keep
+            // flowing and a later retry (or the monitor) can attempt the
+            // migration again.
+            Err(e) => {
+                self.revive_previous(&dir, &old)?;
+                return Err(e.context(
+                    "rebalance failed; the previous partition was revived \
+                     and keeps serving",
+                ));
+            }
+        };
+
+        // 5. Publish: swap the epoch, re-seed the checkpoint bookkeeping,
+        //    spawn the new epoch's checkpointer, advance the fold clock
+        //    past the version jump (migrated fleets resume at max of the
+        //    old versions, so the summed version stays monotone and
+        //    `merges >= version` keeps holding).
+        let shard_versions: Vec<u64> =
+            restored.shards.iter().map(|s| s.version).collect();
+        let new_version_sum: u64 = shard_versions.iter().sum();
+        self.counters.merges.fetch_add(
+            new_version_sum.saturating_sub(old_version_sum),
+            Ordering::Relaxed,
+        );
+        self.publish_epoch(&dir, epoch);
+        self.counters.rebalances.fetch_add(1, Ordering::Relaxed);
+        Ok(RebalanceOutcome {
+            router_version: report.router_version,
+            moved_rows: report.moved_rows as u64,
+            shard_versions,
+        })
+    }
+
+    /// Rebuild and publish the previous partition from a quiesced epoch's
+    /// in-memory final snapshots — the rebalance failure path. Retires a
+    /// still-running checkpointer first (two writers on one state dir is
+    /// never allowed), best-effort-heals the directory back to the old
+    /// partition, and swaps the revived epoch in. The heal is best effort
+    /// on purpose: the revived fleets are valid in memory regardless of
+    /// the disk, and erroring between spawn and publish would leak them
+    /// running with no epoch owning them. A dir left torn is caught
+    /// loudly by restore's partition-version cross-checks on the next
+    /// start, and the fresh checkpointer keeps retrying shard/manifest
+    /// writes on its periodic pass.
+    fn revive_previous(&self, dir: &Path, old: &Epoch) -> Result<()> {
+        if let Some(ck) = self
+            .checkpointer
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+        {
+            if let Err(e) = ck.stop() {
+                eprintln!(
+                    "dalvq rebalance: retiring the checkpointer during \
+                     revival failed (its last write may be stale): {e:#}"
+                );
+            }
+        }
+        let seeds = seeds_from_epoch(old, &self.serve, self.cfg.m);
+        let epoch = spawn_epoch(
+            &self.cfg,
+            &self.serve,
+            &self.counters,
+            old.router.clone(),
+            old.router_version,
+            Some(seeds),
+            false,
+        )
+        .context("reviving the previous partition after a failed rebalance")?;
+        if let Err(heal) =
+            write_initial_state(dir, &epoch, &self.cfg, &self.serve)
+        {
+            eprintln!(
+                "dalvq rebalance: healing the state dir back to the \
+                 previous partition failed (dir stays torn until the next \
+                 successful checkpoint or rebalance): {heal:#}"
+            );
+        }
+        self.publish_epoch(dir, epoch);
+        Ok(())
+    }
+
+    /// Install `epoch` as the serving partition: sync the last-checkpoint
+    /// bookkeeping to its shard versions (they equal what its files on
+    /// disk carry — both the migrated and the revived path write the
+    /// directory before publishing), hand its stores to a fresh
+    /// checkpointer, and swap the epoch cell.
+    fn publish_epoch(&self, dir: &Path, epoch: Epoch) {
+        for (s, fleet) in epoch.shards.iter().enumerate() {
+            self.last_checkpoint[s]
+                .store(fleet.store.version(), Ordering::Release);
+        }
+        let checkpointer = spawn_checkpointer(
+            dir,
+            &epoch,
+            &self.last_checkpoint,
+            &self.cfg,
+            &self.serve,
+        );
+        *self.epoch.lock().unwrap_or_else(|e| e.into_inner()) = Arc::new(epoch);
+        *self.checkpointer.lock().unwrap_or_else(|e| e.into_inner()) =
+            Some(checkpointer);
     }
 
     // -------------------------------------------------------- query path
 
     /// Quantize: global nearest-prototype code per point, via multi-probe
     /// over the configured `probe_n` shards. Returns the aggregate version
-    /// that answered. Global code = `shard * kappa/S + local index`.
+    /// that answered. Global code = `shard * kappa/S + local index`
+    /// within the current router epoch.
     pub fn query_encode(&self, points: &[f32]) -> (u64, Vec<u32>) {
         let (version, codes, _) = self.query_nearest_probed(points, self.probe_n);
         (version, codes)
@@ -501,21 +715,26 @@ impl VqService {
 
     /// Nearest prototype per point, probing the `probe_n` closest shards
     /// (clamped to `1..=S`). `probe_n = S` is the exhaustive oracle the
-    /// drift suite compares routed answers against.
+    /// drift suite compares routed answers against. Routing and shard
+    /// snapshots resolve against ONE epoch (`Arc`-cloned up front), so a
+    /// concurrent rebalance can never mix the old partition's codes with
+    /// the new partition's codebooks.
     pub fn query_nearest_probed(
         &self,
         points: &[f32],
         probe_n: usize,
     ) -> (u64, Vec<u32>, Vec<f32>) {
         assert_eq!(points.len() % self.dim, 0, "points not a multiple of dim");
-        let snaps = self.snapshots();
+        let ep = self.current();
+        let snaps: Vec<Arc<Snapshot>> =
+            ep.shards.iter().map(|s| s.store.load()).collect();
         let version = snaps.iter().map(|s| s.version).sum();
         let n = points.len() / self.dim;
         let mut codes = Vec::with_capacity(n);
         let mut dists = Vec::with_capacity(n);
         let mut probes = Vec::with_capacity(probe_n);
         for z in points.chunks_exact(self.dim) {
-            self.router.probe_into(z, probe_n, &mut probes);
+            ep.router.probe_into(z, probe_n, &mut probes);
             let mut best_code = 0u32;
             let mut best_d = f32::INFINITY;
             for &s in &probes {
@@ -546,11 +765,13 @@ impl VqService {
     // ------------------------------------------------------- ingest path
 
     /// Feed points into the training stream. Each point is routed to the
-    /// shard owning its coarse cell, then sharded round-robin across that
-    /// fleet's workers; a full worker queue sheds its sub-batch
-    /// (at-most-once ingestion — the stochastic algorithm tolerates loss,
-    /// and blocking here would couple ingest pressure to query latency).
-    /// Returns `(accepted, shed)` point counts.
+    /// shard owning its coarse cell in the current epoch, then sharded
+    /// round-robin across that fleet's workers; a full worker queue sheds
+    /// its sub-batch (at-most-once ingestion — the stochastic algorithm
+    /// tolerates loss, and blocking here would couple ingest pressure to
+    /// query latency). A batch routed to an epoch that is draining for a
+    /// rebalance is shed the same way. Returns `(accepted, shed)` point
+    /// counts.
     pub fn ingest(&self, points: &[f32]) -> Result<(u64, u64)> {
         if points.is_empty() {
             return Ok((0, 0));
@@ -562,34 +783,48 @@ impl VqService {
                 self.dim
             ));
         }
+        let ep = self.current();
         // Resolve every destination before sending anything: the reply
         // must stay all-or-nothing with respect to shutdown — it may never
         // claim points were accepted on one shard and then error on the
         // next (the pre-sharding path had exactly one send, so this was
         // free; with a fan-out it has to be a two-phase walk).
         let mut sends = Vec::new();
-        for (s, part) in self.router.partition(points).into_iter().enumerate() {
+        let mut drained = Vec::new();
+        for (s, part) in ep.router.partition(points).into_iter().enumerate() {
             if part.is_empty() {
                 continue;
             }
-            let shard = &self.shards[s];
+            let shard = &ep.shards[s];
             let tx = {
                 let txs = shard.ingest_txs.lock().unwrap_or_else(|e| e.into_inner());
                 if txs.is_empty() {
-                    return Err(anyhow!("service is shutting down"));
+                    // This epoch's fleets are gone: a hard error while the
+                    // service closes, a shed while it migrates.
+                    if self.closing.load(Ordering::Acquire) {
+                        return Err(anyhow!("service is shutting down"));
+                    }
+                    drained.push((s, (part.len() / self.dim) as u64));
+                    continue;
                 }
                 let i = shard.ingest_cursor.fetch_add(1, Ordering::Relaxed) % txs.len();
                 txs[i].clone()
             };
-            sends.push((part, tx));
+            sends.push((s, part, tx));
         }
         let mut accepted = 0u64;
         let mut shed = 0u64;
-        for (part, tx) in sends {
+        for (s, n) in drained {
+            self.counters.ingest_shed.fetch_add(n, Ordering::Relaxed);
+            ep.shards[s].shed.fetch_add(n, Ordering::Relaxed);
+            shed += n;
+        }
+        for (s, part, tx) in sends {
             let n = (part.len() / self.dim) as u64;
             match tx.try_send(part) {
                 Ok(()) => {
                     self.counters.ingested.fetch_add(n, Ordering::Relaxed);
+                    ep.shards[s].ingested.fetch_add(n, Ordering::Relaxed);
                     accepted += n;
                 }
                 // Full queue — or a worker that raced us into shutdown and
@@ -599,6 +834,7 @@ impl VqService {
                 Err(mpsc::TrySendError::Full(_))
                 | Err(mpsc::TrySendError::Disconnected(_)) => {
                     self.counters.ingest_shed.fetch_add(n, Ordering::Relaxed);
+                    ep.shards[s].shed.fetch_add(n, Ordering::Relaxed);
                     shed += n;
                 }
             }
@@ -608,22 +844,35 @@ impl VqService {
 
     /// Counters + shape, for the `Stats` query.
     pub fn stats(&self) -> ServeStats {
+        let ep = self.current();
         ServeStats {
-            version: self.version(),
+            version: ep.shards.iter().map(|s| s.store.version()).sum(),
             kappa: self.kappa,
             dim: self.dim,
-            workers: self.workers_per_shard * self.shards.len(),
-            shards: self.shards.len(),
+            workers: self.workers_per_shard * ep.shards.len(),
+            shards: ep.shards.len(),
             probe_n: self.probe_n,
+            router_version: ep.router_version,
+            rebalances: self.counters.rebalances.load(Ordering::Relaxed),
             merges: self.counters.merges.load(Ordering::Relaxed),
             ingested: self.counters.ingested.load(Ordering::Relaxed),
             ingest_shed: self.counters.ingest_shed.load(Ordering::Relaxed),
             queries: self.counters.queries.load(Ordering::Relaxed),
-            shard_versions: self.shard_versions(),
-            shard_merges: self
+            shard_versions: ep.shards.iter().map(|s| s.store.version()).collect(),
+            shard_merges: ep
                 .shards
                 .iter()
                 .map(|s| s.merges.load(Ordering::Relaxed))
+                .collect(),
+            shard_ingest: ep
+                .shards
+                .iter()
+                .map(|s| s.ingested.load(Ordering::Relaxed))
+                .collect(),
+            shard_shed: ep
+                .shards
+                .iter()
+                .map(|s| s.shed.load(Ordering::Relaxed))
                 .collect(),
             state_dir: self
                 .state_dir
@@ -633,50 +882,31 @@ impl VqService {
         }
     }
 
-    /// Stop every shard fleet: flag the workers, let them drain and flush,
-    /// close the queues, join the reducers. Each shard's final shared
-    /// version is published before return, so a post-shutdown `snapshot()`
-    /// is complete.
+    /// Stop the service: join the skew monitor, quiesce the current
+    /// epoch's fleets (flag the workers, let them drain and flush, close
+    /// the queues, join the reducers), drain the checkpointer. Each
+    /// shard's final shared version is published before return, so a
+    /// post-shutdown `snapshot()` is complete.
     ///
     /// Takes `&self` so the service can stay shared with open connections;
     /// those keep answering queries from the last epochs. Calling it twice
     /// is an error.
     pub fn shutdown(&self) -> Result<ServeOutcome> {
-        let mut fleets = Vec::with_capacity(self.shards.len());
-        for (s, shard) in self.shards.iter().enumerate() {
-            let fleet = shard
-                .fleet
-                .lock()
-                .unwrap_or_else(|e| e.into_inner())
-                .take()
-                .ok_or_else(|| anyhow!("service already shut down"))?;
-            fleets.push((s, fleet));
+        self.closing.store(true, Ordering::Release);
+        // The monitor exits on `closing`; if it is mid-rebalance, the
+        // lifecycle lock below also serializes us behind it.
+        if let Some(j) = self
+            .monitor
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+        {
+            let _ = j.join();
         }
-        self.stop.store(true, Ordering::Release);
-        self.go.store(true, Ordering::Release); // release any paused workers
-        // Disconnect ingest so worker drains see closed channels.
-        for shard in &self.shards {
-            shard.ingest_txs.lock().unwrap_or_else(|e| e.into_inner()).clear();
-        }
-        let mut workers = Vec::new();
-        let mut shard_outcomes = Vec::with_capacity(fleets.len());
-        let mut total_merges = 0u64;
-        let mut global_flat = Vec::with_capacity(self.kappa * self.dim);
-        for (s, fleet) in fleets {
-            for j in fleet.workers {
-                workers.push(j.join().map_err(|_| anyhow!("serve worker panicked"))??);
-            }
-            // Shard workers done: drop the template handle so its reducer
-            // drains (worker-held clones are gone once the joins return).
-            drop(fleet.queue_template);
-            let (merges, final_shared) = fleet
-                .reducer
-                .join()
-                .map_err(|_| anyhow!("serve reducer panicked"))??;
-            total_merges += merges;
-            global_flat.extend_from_slice(final_shared.flat());
-            shard_outcomes.push(ShardOutcome { shard: s, merges, final_shared });
-        }
+        let _lifecycle = self.lifecycle.lock().unwrap_or_else(|e| e.into_inner());
+        let ep = self.current();
+        let fleets = take_fleets(&ep)?;
+        let (workers, shard_outcomes) = join_fleets(&ep, fleets)?;
         // Fleets quiesced and final epochs published: drain the
         // checkpointer so the state dir carries everything that was
         // learned (its final pass sees the post-join versions).
@@ -688,6 +918,12 @@ impl VqService {
         {
             ck.stop()?;
         }
+        let mut total_merges = 0u64;
+        let mut global_flat = Vec::with_capacity(self.kappa * self.dim);
+        for outcome in &shard_outcomes {
+            total_merges += outcome.merges;
+            global_flat.extend_from_slice(outcome.final_shared.flat());
+        }
         Ok(ServeOutcome {
             workers,
             merges: total_merges,
@@ -695,6 +931,362 @@ impl VqService {
             shards: shard_outcomes,
         })
     }
+}
+
+/// Phase 1 of quiescing an epoch: take ownership of every fleet handle.
+/// This is the ONLY step that can fail with "already shut down" (a prior
+/// quiesce took them) — it mutates nothing until every handle is secured,
+/// so a failure here leaves the epoch exactly as it was.
+fn take_fleets(ep: &Epoch) -> Result<Vec<(usize, Fleet)>> {
+    let mut fleets = Vec::with_capacity(ep.shards.len());
+    for (s, shard) in ep.shards.iter().enumerate() {
+        let fleet = shard
+            .fleet
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+            .ok_or_else(|| anyhow!("service already shut down"))?;
+        fleets.push((s, fleet));
+    }
+    Ok(fleets)
+}
+
+/// Phase 2: stop and join the taken fleets — flag the workers, clear the
+/// ingest channels so drains see closed senders, join workers, drop the
+/// queue templates so the reducers drain, join the reducers. Each shard's
+/// final shared version is published before this returns. The epoch's
+/// stores stay valid — the read path keeps serving the final snapshots.
+/// On a worker/reducer error the remaining handles are dropped: their
+/// threads still exit on the stop flag (workers) or queue closure
+/// (reducers), just unobserved.
+fn join_fleets(
+    ep: &Epoch,
+    fleets: Vec<(usize, Fleet)>,
+) -> Result<(Vec<ServeWorkerOutcome>, Vec<ShardOutcome>)> {
+    ep.stop.store(true, Ordering::Release);
+    ep.go.store(true, Ordering::Release); // release any paused workers
+    // Disconnect ingest so worker drains see closed channels.
+    for shard in &ep.shards {
+        shard.ingest_txs.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    }
+    let mut workers = Vec::new();
+    let mut shard_outcomes = Vec::with_capacity(fleets.len());
+    for (s, fleet) in fleets {
+        for j in fleet.workers {
+            workers.push(j.join().map_err(|_| anyhow!("serve worker panicked"))??);
+        }
+        // Shard workers done: drop the template handle so its reducer
+        // drains (worker-held clones are gone once the joins return).
+        drop(fleet.queue_template);
+        let (merges, final_shared) = fleet
+            .reducer
+            .join()
+            .map_err(|_| anyhow!("serve reducer panicked"))??;
+        shard_outcomes.push(ShardOutcome { shard: s, merges, final_shared });
+    }
+    Ok((workers, shard_outcomes))
+}
+
+/// Build one router epoch: partition the bootstrap dataset with the
+/// epoch's router, seed and spawn every shard fleet (from `seeds` when
+/// warm-starting or migrating, from a fresh init on a cold start), and
+/// block until all `S * M` workers passed the ready barrier.
+fn spawn_epoch(
+    cfg: &ExperimentConfig,
+    serve: &ServeConfig,
+    counters: &Arc<ServeCounters>,
+    router: Router,
+    router_version: u64,
+    seeds: Option<Vec<ShardSeed>>,
+    paused: bool,
+) -> Result<Epoch> {
+    let dim = cfg.dim();
+    let s_count = serve.shards;
+    let kappa_shard = cfg.vq.kappa / s_count;
+    let dataset = cfg.data.mixture.dataset(cfg.data.n_total, cfg.seed);
+    let parts = router.partition(dataset.flat());
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let go = Arc::new(AtomicBool::new(!paused));
+    let ready = Arc::new(Barrier::new(s_count * cfg.m + 1));
+
+    let mut shards = Vec::with_capacity(s_count);
+    let mut base_versions = Vec::with_capacity(s_count);
+    for (s, part) in parts.into_iter().enumerate() {
+        // A shard's region must be able to seed kappa/S prototypes and
+        // feed M workers; a starved cell (rare — the router's k-means
+        // balances cells against the observed sample) is padded
+        // cyclically.
+        let min_pts = cfg.m.max(kappa_shard);
+        let part = ensure_min_points(part, dim, min_pts, dataset.flat());
+        let shard_data = Dataset::new(part, dim);
+        // Seed state: the checkpoint on a warm start or migration
+        // (codebook, version, schedule cursor, epoch load counters), a
+        // fresh init on a cold one.
+        let seed = match &seeds {
+            Some(seeds) => {
+                let st = &seeds[s];
+                ShardSeed {
+                    w0: st.w0.clone(),
+                    version: st.version,
+                    t0: st.t0,
+                    ingested: st.ingested,
+                    shed: st.shed,
+                }
+            }
+            None => ShardSeed {
+                w0: init_codebook(
+                    cfg.vq.init,
+                    kappa_shard,
+                    dim,
+                    shard_data.flat(),
+                    // Distinct init stream per shard; shard 0 keeps
+                    // the plain seed so `shards = 1` reproduces the
+                    // original deployment.
+                    cfg.seed ^ ((s as u64) << 17),
+                ),
+                version: 0,
+                t0: 0,
+                ingested: 0,
+                shed: 0,
+            },
+        };
+        base_versions.push(seed.version);
+
+        let store = SnapshotStore::with_version(seed.w0.clone(), seed.version);
+        let merges = Arc::new(AtomicU64::new(seed.version));
+        let blob = BlobService::spawn(seed.w0.clone());
+        let (queue, queue_rx) = QueueService::create(1024);
+
+        let reducer = {
+            let blob = blob.clone();
+            let store = Arc::clone(&store);
+            let counters = Arc::clone(counters);
+            let shard_merges = Arc::clone(&merges);
+            let w0 = seed.w0.clone();
+            let publish_every = serve.publish_every;
+            let merges0 = seed.version;
+            std::thread::Builder::new()
+                .name(format!("dalvq-serve-reducer-{s}"))
+                .spawn(move || {
+                    run_serving_reducer(
+                        queue_rx,
+                        blob,
+                        store,
+                        counters,
+                        shard_merges,
+                        w0,
+                        publish_every,
+                        merges0,
+                    )
+                })
+                .expect("spawning serve reducer thread")
+        };
+
+        let worker_shards = shard_data.split(cfg.m);
+        let mut ingest_txs = Vec::with_capacity(cfg.m);
+        let mut workers = Vec::with_capacity(cfg.m);
+        for (i, shard) in worker_shards.into_iter().enumerate() {
+            let wid = s * cfg.m + i; // fleet-global worker id
+            let (tx, rx) = mpsc::sync_channel::<Vec<f32>>(serve.ingest_queue);
+            ingest_txs.push(tx);
+            let params = ServeWorkerParams {
+                worker_id: wid,
+                shard,
+                w0: seed.w0.clone(),
+                schedule: cfg.vq.schedule,
+                tau: cfg.scheme.tau(),
+                points_per_exchange: serve.points_per_exchange,
+                point_compute: serve.point_compute,
+                absorb_per_chunk: serve.absorb_per_chunk,
+                engine_spec: cfg.engine.clone(),
+                ready: Arc::clone(&ready),
+                stop: Arc::clone(&stop),
+                go: Arc::clone(&go),
+                sync_exchange: serve.sync_exchange,
+                max_points: serve.max_points_per_worker,
+                t0: seed.t0,
+                fold_base: seed.version,
+            };
+            let q = queue.clone().with_latency(LatencyInjector::new(
+                serve.service_latency,
+                serve.latency_jitter,
+                serve.drop_prob,
+                cfg.seed ^ ((wid as u64) << 8),
+            ));
+            let b = blob.clone().with_latency(LatencyInjector::new(
+                serve.service_latency,
+                serve.latency_jitter,
+                0.0, // downloads are request/response; loss shows as latency
+                cfg.seed ^ ((wid as u64) << 8) ^ 1,
+            ));
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("dalvq-serve-worker-{wid}"))
+                    .spawn(move || run_serve_worker(params, rx, q, b))
+                    .expect("spawning serve worker thread"),
+            );
+        }
+
+        shards.push(ShardFleet {
+            store,
+            merges,
+            ingested: Arc::new(AtomicU64::new(seed.ingested)),
+            shed: Arc::new(AtomicU64::new(seed.shed)),
+            ingest_txs: Mutex::new(ingest_txs),
+            ingest_cursor: AtomicUsize::new(0),
+            fleet: Mutex::new(Some(Fleet {
+                workers,
+                reducer,
+                queue_template: queue,
+            })),
+        });
+    }
+    ready.wait(); // engines built; the epoch is live
+
+    Ok(Epoch { router, router_version, shards, stop, go, base_versions })
+}
+
+/// Seeds for a new epoch's fleets out of restored durable state.
+fn seeds_from_restored(
+    restored: &RestoredState,
+    serve: &ServeConfig,
+    m: usize,
+) -> Vec<ShardSeed> {
+    let ppe = serve.points_per_exchange as u64;
+    restored
+        .shards
+        .iter()
+        .map(|st| {
+            // The saved cursor counts the shard's folded points; spread
+            // it across M workers, snapped down to an exchange boundary.
+            // The fold clock resumes from the saved *version* — the folds
+            // the saved codebook actually contains. The file's `merges`
+            // field can run ahead of it (unpublished folds at checkpoint
+            // time, or a racy counter sample) and is diagnostic only.
+            ShardSeed {
+                w0: st.codebook.clone(),
+                version: st.version,
+                t0: st.rng_cursor / m as u64 / ppe * ppe,
+                ingested: st.ingested,
+                shed: st.shed,
+            }
+        })
+        .collect()
+}
+
+/// Seeds that reproduce a quiesced epoch's fleets from their in-memory
+/// final snapshots — the rebalance failure path: revive exactly what the
+/// stores still serve, without touching the (possibly torn) disk state.
+fn seeds_from_epoch(ep: &Epoch, serve: &ServeConfig, m: usize) -> Vec<ShardSeed> {
+    let ppe = serve.points_per_exchange as u64;
+    ep.shards
+        .iter()
+        .map(|fleet| {
+            let snap = fleet.store.load();
+            ShardSeed {
+                w0: snap.codebook.clone(),
+                version: snap.version,
+                // Same cursor arithmetic as a disk restore: the fold
+                // sequence represents version * ppe points, spread over M
+                // workers and snapped to an exchange boundary.
+                t0: snap.version * ppe / m as u64 / ppe * ppe,
+                ingested: fleet.ingested.load(Ordering::Relaxed),
+                shed: fleet.shed.load(Ordering::Relaxed),
+            }
+        })
+        .collect()
+}
+
+/// Hand an epoch's shard stores and counters to a fresh background
+/// checkpointer stamped with the epoch's partition version.
+fn spawn_checkpointer(
+    dir: &Path,
+    epoch: &Epoch,
+    last_checkpoint: &Arc<Vec<AtomicU64>>,
+    cfg: &ExperimentConfig,
+    serve: &ServeConfig,
+) -> Checkpointer {
+    Checkpointer::spawn(
+        CheckpointSpec {
+            dir: dir.to_path_buf(),
+            checkpoint_every: serve.checkpoint_every,
+            points_per_exchange: serve.points_per_exchange,
+            kappa: cfg.vq.kappa,
+            dim: cfg.dim(),
+            router_version: epoch.router_version,
+        },
+        epoch
+            .shards
+            .iter()
+            .map(|f| persist::ShardSource {
+                store: Arc::clone(&f.store),
+                merges: Arc::clone(&f.merges),
+                ingested: Arc::clone(&f.ingested),
+                shed: Arc::clone(&f.shed),
+            })
+            .collect(),
+        Arc::clone(last_checkpoint),
+    )
+}
+
+/// The skew monitor: a background thread that watches the current epoch's
+/// per-shard ingest counters and triggers [`VqService::rebalance`] when
+/// the max/mean imbalance exceeds `rebalance_skew` — after at least
+/// `rebalance_min_folds` folds have landed in the epoch, so the shard
+/// codebooks have actually adapted to the load the retrainer will weight
+/// by. Holds only a `Weak` handle: the monitor never keeps a dropped
+/// service alive.
+fn spawn_monitor(service: &Arc<VqService>) -> JoinHandle<()> {
+    let weak: Weak<VqService> = Arc::downgrade(service);
+    let skew = service.serve.rebalance_skew;
+    let min_folds = service.serve.rebalance_min_folds;
+    std::thread::Builder::new()
+        .name("dalvq-rebalance-monitor".into())
+        .spawn(move || loop {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            let Some(svc) = weak.upgrade() else { return };
+            if svc.closing.load(Ordering::Acquire) {
+                return;
+            }
+            let ep = svc.current();
+            let folds: u64 = ep
+                .shards
+                .iter()
+                .zip(&ep.base_versions)
+                .map(|(f, b)| f.store.version().saturating_sub(*b))
+                .sum();
+            if folds < min_folds {
+                continue;
+            }
+            let ingests: Vec<u64> =
+                ep.shards.iter().map(|f| f.ingested.load(Ordering::Relaxed)).collect();
+            let total: u64 = ingests.iter().sum();
+            // A ratio over a tiny sample is noise, not skew: wait for a
+            // statistically meaningful epoch sample (64 points per shard
+            // on average bounds multinomial noise well below any
+            // reasonable trigger) before judging balance — otherwise a
+            // freshly swapped epoch could be churned by its first batch.
+            if total < 64 * ingests.len() as u64 {
+                continue;
+            }
+            if super::loadgen::max_over_mean(&ingests) < skew {
+                continue;
+            }
+            drop(ep);
+            if let Err(e) = svc.rebalance() {
+                // `closing` raced us, or the disk failed — back off so a
+                // persistent failure cannot hot-loop the quiesce path.
+                if !svc.closing.load(Ordering::Acquire) {
+                    eprintln!(
+                        "dalvq rebalance monitor: auto-rebalance failed \
+                         (will retry): {e:#}"
+                    );
+                    std::thread::sleep(std::time::Duration::from_secs(1));
+                }
+            }
+        })
+        .expect("spawning rebalance monitor thread")
 }
 
 /// Load durable state for a warm start and validate it against the
@@ -749,27 +1341,36 @@ fn load_restore(
     Ok(Some(state))
 }
 
-/// Cold-start bootstrap of a state directory: router + every shard's
-/// initial state + manifest, so the directory is restorable before the
-/// first fold (a service killed seconds after start must still warm-
-/// restart cleanly).
+/// Write an epoch's full durable image: router + every shard's current
+/// state + manifest. Used for the cold-start bootstrap (the directory
+/// must be restorable before the first fold — a service killed seconds
+/// after start must still warm-restart cleanly) and to heal the state
+/// dir back to a revived partition after a failed rebalance.
 fn write_initial_state(
     dir: &Path,
-    router: &Router,
-    shards: &[ShardFleet],
+    epoch: &Epoch,
     cfg: &ExperimentConfig,
     serve: &ServeConfig,
 ) -> Result<()> {
-    let router_state = RouterState { centroids: router.centroids().clone() };
+    let router_state = RouterState {
+        version: epoch.router_version,
+        centroids: epoch.router.centroids().clone(),
+    };
     persist::write_atomic(dir, persist::ROUTER_FILE, &router_state.encode())?;
-    let mut versions = Vec::with_capacity(shards.len());
-    for (s, fleet) in shards.iter().enumerate() {
+    let mut versions = Vec::with_capacity(epoch.shards.len());
+    for (s, fleet) in epoch.shards.iter().enumerate() {
         let snap = fleet.store.load();
         let state = ShardState {
             shard: s as u32,
             version: snap.version,
             merges: fleet.merges.load(Ordering::Relaxed),
             rng_cursor: snap.version * serve.points_per_exchange as u64,
+            // Live epoch counters (0 on a cold start): the healed image
+            // of a revived partition must keep the load the retrainer
+            // will weight by.
+            ingested: fleet.ingested.load(Ordering::Relaxed),
+            shed: fleet.shed.load(Ordering::Relaxed),
+            router_version: epoch.router_version,
             codebook: snap.codebook.clone(),
         };
         persist::write_atomic(dir, &persist::shard_file(s), &state.encode())?;
@@ -777,10 +1378,11 @@ fn write_initial_state(
     }
     Manifest {
         format: persist::FORMAT,
-        shards: shards.len(),
+        shards: epoch.shards.len(),
         kappa: cfg.vq.kappa,
         dim: cfg.dim(),
         points_per_exchange: serve.points_per_exchange,
+        router_version: epoch.router_version,
         shard_versions: versions,
     }
     .save(dir)
@@ -811,8 +1413,8 @@ fn ensure_min_points(
 
 /// The serving reducer: the cloud reducer's fold-and-put loop plus epoch
 /// publication for the read path. One per shard. `initial_merges` seeds
-/// the fold clock on a warm restart, so published versions continue the
-/// saved sequence instead of restarting at 1.
+/// the fold clock on a warm restart or migration, so published versions
+/// continue the saved sequence instead of restarting at 1.
 #[allow(clippy::too_many_arguments)]
 fn run_serving_reducer(
     rx: mpsc::Receiver<DeltaMsg>,
@@ -911,6 +1513,11 @@ mod tests {
         assert_eq!(stats.workers, 1);
         assert_eq!(stats.shards, 1);
         assert_eq!(stats.dim, 2);
+        assert_eq!(stats.router_version, 0);
+        assert_eq!(stats.rebalances, 0);
+        // the per-shard epoch counters tally with the totals
+        assert_eq!(stats.shard_ingest.iter().sum::<u64>(), stats.ingested);
+        assert_eq!(stats.shard_shed.iter().sum::<u64>(), stats.ingest_shed);
         svc.shutdown().unwrap();
     }
 
@@ -940,6 +1547,8 @@ mod tests {
         assert_eq!(stats.probe_n, 2);
         assert_eq!(stats.shard_versions.len(), 4);
         assert_eq!(stats.shard_merges.len(), 4);
+        assert_eq!(stats.shard_ingest.len(), 4);
+        assert_eq!(stats.shard_ingest.iter().sum::<u64>(), acc);
         assert_eq!(stats.kappa, 8);
 
         // Quiesce before cross-probe comparisons: reads must come from
@@ -965,6 +1574,63 @@ mod tests {
                 shard_snap.codebook.flat()
             );
         }
+    }
+
+    #[test]
+    fn rebalance_without_state_dir_is_a_clean_error() {
+        let (cfg, serve) = tiny_cfg(1);
+        let svc = VqService::start(&cfg, &serve).unwrap();
+        let err = format!("{:#}", svc.rebalance().unwrap_err());
+        assert!(err.contains("state-dir"), "{err}");
+        // the service keeps serving after the refused rebalance
+        let eval = cfg.data.mixture.eval_sample(16, cfg.seed);
+        let (_, codes) = svc.query_encode(&eval);
+        assert_eq!(codes.len(), 16);
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn manual_rebalance_swaps_the_epoch_and_keeps_serving() {
+        let dir = std::env::temp_dir().join(format!(
+            "dalvq-svc-rebalance-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (mut cfg, mut serve) = tiny_cfg(1);
+        cfg.vq.kappa = 8;
+        serve.shards = 4;
+        serve.probe_n = 2;
+        serve.state_dir = Some(dir.clone());
+        let svc = VqService::start(&cfg, &serve).unwrap();
+        let eval = cfg.data.mixture.eval_sample(128, cfg.seed);
+        svc.ingest(&eval).unwrap();
+
+        assert_eq!(svc.router_version(), 0);
+        let out = svc.rebalance().unwrap();
+        assert_eq!(out.router_version, 1);
+        assert_eq!(out.shard_versions.len(), 4);
+        assert_eq!(svc.router_version(), 1);
+        let stats = svc.stats();
+        assert_eq!(stats.rebalances, 1);
+        assert_eq!(stats.router_version, 1);
+        // the fold-clock invariant survives the version jump
+        assert!(stats.merges >= stats.version, "{stats:?}");
+        // per-epoch load counters reset with the new partition
+        assert_eq!(stats.shard_ingest, vec![0; 4]);
+
+        // the new epoch answers queries and accepts ingest
+        let (_, codes, dists) = svc.query_nearest(&eval);
+        assert_eq!(codes.len(), 128);
+        assert!(codes.iter().all(|&c| (c as usize) < 8));
+        assert!(dists.iter().all(|d| d.is_finite()));
+        let (acc, shed) = svc.ingest(&eval).unwrap();
+        assert_eq!(acc + shed, 128);
+
+        svc.shutdown().unwrap();
+        // shutdown after a rebalance leaves the bumped partition on disk
+        let state = persist::load_state(&dir).unwrap().unwrap();
+        assert_eq!(state.manifest.router_version, 1);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

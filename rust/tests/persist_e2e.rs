@@ -285,7 +285,7 @@ fn checkpoint_and_stats_over_tcp() {
     let _serial = serial();
     let dir = state_dir("tcp");
     let (cfg, serve) = durable_cfg(1, &dir);
-    let service = Arc::new(VqService::start(&cfg, &serve).unwrap());
+    let service = VqService::start(&cfg, &serve).unwrap();
     let server = Server::start(Arc::clone(&service), &serve.addr).unwrap();
     let mut client = Client::connect(server.local_addr()).unwrap();
 
@@ -310,7 +310,7 @@ fn checkpoint_and_stats_over_tcp() {
     // connection survives; Stats reports an empty state dir.
     let (cfg, mut serve) = durable_cfg(1, &state_dir("tcp-none"));
     serve.state_dir = None;
-    let service = Arc::new(VqService::start(&cfg, &serve).unwrap());
+    let service = VqService::start(&cfg, &serve).unwrap();
     let server = Server::start(Arc::clone(&service), &serve.addr).unwrap();
     let mut client = Client::connect(server.local_addr()).unwrap();
     let err = format!("{:#}", client.checkpoint().unwrap_err());

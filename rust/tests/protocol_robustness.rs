@@ -48,18 +48,24 @@ fn rand_string(rng: &mut Rng, max_len: usize) -> String {
 }
 
 fn rand_request(rng: &mut Rng) -> Request {
-    match rng.usize(6) {
+    match rng.usize(7) {
         0 => Request::Encode { points: rand_f32s(rng, 64) },
         1 => Request::Nearest { points: rand_f32s(rng, 64) },
         2 => Request::Distortion { points: rand_f32s(rng, 64) },
         3 => Request::Ingest { points: rand_f32s(rng, 64) },
         4 => Request::Checkpoint,
+        5 => Request::Rebalance,
         _ => Request::Stats,
     }
 }
 
 fn rand_response(rng: &mut Rng) -> Response {
-    match rng.usize(7) {
+    match rng.usize(8) {
+        7 => Response::RebalanceAck {
+            router_version: rng.next_u64(),
+            moved_rows: rng.next_u64(),
+            shard_versions: rand_u64s(rng, 16),
+        },
         6 => Response::CheckpointAck { versions: rand_u64s(rng, 16) },
         0 => Response::Codes {
             version: rng.next_u64(),
@@ -85,12 +91,16 @@ fn rand_response(rng: &mut Rng) -> Response {
             workers: rng.next_u64(),
             shards: rng.next_u64(),
             probe_n: rng.next_u64(),
+            router_version: rng.next_u64(),
+            rebalances: rng.next_u64(),
             merges: rng.next_u64(),
             ingested: rng.next_u64(),
             ingest_shed: rng.next_u64(),
             queries: rng.next_u64(),
             shard_versions: rand_u64s(rng, 16),
             shard_merges: rand_u64s(rng, 16),
+            shard_ingest: rand_u64s(rng, 16),
+            shard_shed: rand_u64s(rng, 16),
             last_checkpoint: rand_u64s(rng, 16),
             state_dir: rand_string(rng, 32),
         }),
@@ -171,8 +181,8 @@ fn empty_payload_is_an_error() {
 
 #[test]
 fn unknown_opcodes_err_for_both_directions() {
-    let known_req = [0x01, 0x02, 0x03, 0x04, 0x05, 0x06];
-    let known_resp = [0x81, 0x82, 0x83, 0x84, 0x85, 0x86, 0xFF];
+    let known_req = [0x01, 0x02, 0x03, 0x04, 0x05, 0x06, 0x07];
+    let known_resp = [0x81, 0x82, 0x83, 0x84, 0x85, 0x86, 0x87, 0xFF];
     for op in 0..=255u8 {
         if !known_req.contains(&op) {
             assert!(Request::decode(&[op]).is_err(), "req op 0x{op:02x}");
@@ -207,17 +217,25 @@ fn lying_element_counts_err_without_overallocating() {
     wire.extend_from_slice(&u32::MAX.to_le_bytes());
     assert!(Response::decode(&wire).is_err());
 
-    // Stats reply with lying shard-vector counts: strip the four empty
-    // tail vectors (shard_versions, shard_merges, last_checkpoint,
-    // state_dir — one u32 count each) and replace with a lying pair
+    // Stats reply with lying shard-vector counts: strip the six empty
+    // tail vectors (shard_versions, shard_merges, shard_ingest,
+    // shard_shed, last_checkpoint, state_dir — one u32 count each) and
+    // replace with a lying pair
     let good = Response::Stats(StatsReply::default()).encode();
-    let mut wire = good[..good.len() - 16].to_vec();
+    let mut wire = good[..good.len() - 24].to_vec();
     wire.extend_from_slice(&9u32.to_le_bytes()); // shard_versions: claims 9
     wire.extend_from_slice(&0u32.to_le_bytes()); // shard_merges: 0
     assert!(Response::decode(&wire).is_err());
 
     // CheckpointAck whose version count lies
     let mut wire = vec![0x86u8];
+    wire.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert!(Response::decode(&wire).is_err());
+
+    // RebalanceAck whose shard-version count lies
+    let mut wire = vec![0x87u8];
+    wire.extend_from_slice(&1u64.to_le_bytes());
+    wire.extend_from_slice(&2u64.to_le_bytes());
     wire.extend_from_slice(&u32::MAX.to_le_bytes());
     assert!(Response::decode(&wire).is_err());
 

@@ -1,0 +1,327 @@
+//! Live shard rebalancing end-to-end: the acceptance suite for versioned
+//! router epochs.
+//!
+//! The headline scenario is the regime PR 2's drift e2e demonstrated
+//! breaks the frozen router: a drifted ingest stream lands entirely in
+//! one coarse cell, so one shard's fleet absorbs the whole write load
+//! while the other `S - 1` idle. Here the skew monitor notices
+//! (max/mean per-shard ingest), auto-triggers an online rebalance —
+//! checkpoint, offline ingest-weighted router retrain, prototype-row
+//! migration, fleet restart at a bumped router version — and ingest
+//! balance is restored below 1.5x max/mean while queries keep answering
+//! throughout (old epoch serves until the new one publishes).
+//!
+//! Also pinned: probe-vs-oracle agreement >= 99% on the quiesced
+//! post-rebalance epoch, the `Rebalance` wire op, the frozen-router
+//! control (no monitor: skew stays ~S), and kill + warm restart resuming
+//! the post-rebalance partition at the bumped router version.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use dalvq::config::{ExperimentConfig, SchemeConfig, ServeConfig};
+use dalvq::persist;
+use dalvq::serve::{max_over_mean, Client, Server, VqService};
+use dalvq::sim::DelayModel;
+use dalvq::vq::Schedule;
+
+/// Real-time fleets; run tests one at a time (same discipline as
+/// serve_e2e.rs).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A fresh state directory unique to `tag` (removed first, so reruns of a
+/// failed test never see stale state).
+fn state_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("dalvq-rebalance-e2e-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A sharded durable deployment built to expose the frozen-router
+/// pathology: 4 shards x 4 prototypes over a 4-component mixture, free
+/// running so drift absorption and folds happen in milliseconds.
+fn rebalance_cfg(dir: &Path, skew: f64) -> (ExperimentConfig, ServeConfig) {
+    let mut cfg = ExperimentConfig::default();
+    cfg.m = 1; // one worker per shard
+    cfg.data.mixture.components = 4;
+    cfg.data.mixture.dim = 2;
+    cfg.data.mixture.noise_frac = 0.0;
+    cfg.data.n_total = 4_000;
+    cfg.data.eval_points = 512;
+    cfg.vq.kappa = 16; // 4 prototypes per shard
+    cfg.vq.schedule = Schedule::Constant { eps0: 0.02 };
+    cfg.scheme = SchemeConfig::AsyncDelta {
+        tau: 10,
+        up_delay: DelayModel::Instant,
+        down_delay: DelayModel::Instant,
+    };
+    let mut serve = ServeConfig::default();
+    serve.shards = 4;
+    serve.probe_n = 2;
+    serve.points_per_exchange = 50;
+    serve.point_compute = 0.0; // free running
+    serve.ingest_queue = 1_024;
+    serve.state_dir = Some(dir.to_path_buf());
+    serve.checkpoint_every = 16;
+    serve.rebalance_skew = skew;
+    // The retrain weights rows by observed load, so the shard codebooks
+    // must have actually trained on it first: ~100 folds/shard between
+    // epoch start and the earliest trigger.
+    serve.rebalance_min_folds = 400;
+    (cfg, serve)
+}
+
+/// Shift a flat point buffer by a constant per coordinate — the
+/// deterministic drift of the serve_e2e suite. +20 puts the stream far
+/// outside every bootstrap coarse cell (centers live in [-5, 5]^2), so a
+/// frozen router sends ALL of it to one shard.
+fn shifted(points: &[f32], offset: f32) -> Vec<f32> {
+    points.iter().map(|x| x + offset).collect()
+}
+
+const DRIFT: f32 = 20.0;
+
+/// Control: with the monitor off, the frozen router piles the whole
+/// drifted stream onto one shard — max/mean ingest goes to ~S and stays
+/// there. This is the "unbounded skew" half of the acceptance criterion.
+#[test]
+fn frozen_router_skew_is_unbounded_under_drift() {
+    let _serial = serial();
+    let dir = state_dir("frozen");
+    let (cfg, serve) = rebalance_cfg(&dir, 0.0); // monitor off
+    let svc = VqService::start(&cfg, &serve).unwrap();
+
+    let mut stream_t = 0u64;
+    let mut accepted = 0u64;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while accepted < 5_000 {
+        assert!(Instant::now() < deadline, "ingest never reached 5k points");
+        let batch = shifted(&cfg.data.mixture.generate(128, cfg.seed, 2 + stream_t), DRIFT);
+        stream_t += 1;
+        let (acc, _shed) = svc.ingest(&batch).unwrap();
+        accepted += acc;
+    }
+    let stats = svc.stats();
+    assert_eq!(stats.router_version, 0, "nothing may rebalance here");
+    assert_eq!(stats.rebalances, 0);
+    let skew = max_over_mean(&stats.shard_ingest);
+    assert!(
+        skew >= 3.0,
+        "frozen router should concentrate the drifted stream: \
+         skew {skew:.2}, ingest {:?}",
+        stats.shard_ingest
+    );
+    svc.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The headline acceptance test: under the same drifted stream, the
+/// armed skew monitor auto-rebalances (possibly more than once — each
+/// epoch's training refines the next retrain) until per-shard ingest
+/// imbalance drops below 1.5x; queries answer correctly throughout the
+/// swaps; the quiesced post-rebalance epoch keeps probe-vs-oracle >= 99%;
+/// and a kill + warm restart resumes the bumped partition.
+#[test]
+fn auto_rebalance_restores_ingest_balance_under_skewed_drift() {
+    let _serial = serial();
+    let dir = state_dir("auto");
+    // Trigger below the acceptance bound: the monitor keeps refining
+    // until the served partition is better than what we assert.
+    let (cfg, serve) = rebalance_cfg(&dir, 1.4);
+    let svc = VqService::start(&cfg, &serve).unwrap();
+    let server = Server::start(Arc::clone(&svc), &serve.addr).unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+
+    let drift_eval = shifted(&cfg.data.mixture.eval_sample(512, cfg.seed), DRIFT);
+
+    // Stream drifted points while polling: every iteration also exercises
+    // the read path, so queries run *across* the epoch swaps the monitor
+    // performs concurrently.
+    let deadline = Instant::now() + Duration::from_secs(90);
+    let mut stream_t = 0u64;
+    let balanced = loop {
+        assert!(
+            Instant::now() < deadline,
+            "rebalance never restored balance: {:?}",
+            client.stats().unwrap()
+        );
+        for _ in 0..20 {
+            let batch =
+                shifted(&cfg.data.mixture.generate(128, cfg.seed, 2 + stream_t), DRIFT);
+            stream_t += 1;
+            client.ingest(&batch).unwrap();
+        }
+        // reads must stay correct mid-migration: in-range codes, finite
+        // distortion, whatever epoch answers
+        let (codes, _v) = client.encode(&drift_eval).unwrap();
+        assert_eq!(codes.len(), 512);
+        assert!(codes.iter().all(|&c| (c as usize) < cfg.vq.kappa));
+        let (c_now, _v) = client.distortion(&drift_eval).unwrap();
+        assert!(c_now.is_finite() && c_now >= 0.0);
+
+        let stats = client.stats().unwrap();
+        // Judge balance only on a settled epoch: at least one rebalance
+        // behind us and enough post-swap ingest to be statistical.
+        if stats.rebalances >= 1 {
+            let epoch_ingest: u64 = stats.shard_ingest.iter().sum();
+            if epoch_ingest >= 5_000 {
+                let skew = max_over_mean(&stats.shard_ingest);
+                if skew < 1.5 {
+                    break stats;
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert!(balanced.rebalances >= 1);
+    assert!(balanced.router_version >= 1);
+    // the read path tracked the drift through the migrations
+    let (c_after, _v) = client.distortion(&drift_eval).unwrap();
+    assert!(
+        c_after < 50.0,
+        "post-rebalance codebook should live in the drifted region: C = {c_after}"
+    );
+
+    // Quiesce, then the probe-correctness half: routed probe-2 answers
+    // vs the exhaustive oracle on the frozen final epoch.
+    server.shutdown().unwrap();
+    svc.shutdown().unwrap();
+    let (_, routed, routed_d) = svc.query_nearest_probed(&drift_eval, 2);
+    let (_, oracle, oracle_d) = svc.query_nearest_probed(&drift_eval, 4);
+    let agree = routed.iter().zip(&oracle).filter(|(a, b)| a == b).count();
+    assert!(
+        agree as f64 >= 0.99 * routed.len() as f64,
+        "probe 2 agreed with the oracle on only {agree}/{} post-rebalance lookups",
+        routed.len()
+    );
+    for (dr, df) in routed_d.iter().zip(&oracle_d) {
+        assert!(df <= dr, "oracle distance {df} worse than routed {dr}");
+    }
+
+    // Kill + warm restart: the bumped partition is what comes back. The
+    // state dir (written by the final checkpoint drain) is authoritative.
+    let saved = persist::load_state(&dir).unwrap().unwrap();
+    assert!(saved.manifest.router_version >= 1);
+    let svc2 = VqService::start(&cfg, &serve).unwrap();
+    assert_eq!(svc2.router_version(), saved.manifest.router_version);
+    let router_bits: Vec<u32> = svc2
+        .router()
+        .centroids()
+        .flat()
+        .iter()
+        .map(|x| x.to_bits())
+        .collect();
+    let saved_bits: Vec<u32> = saved
+        .router
+        .centroids
+        .flat()
+        .iter()
+        .map(|x| x.to_bits())
+        .collect();
+    assert_eq!(router_bits, saved_bits, "router must restore, not retrain");
+    for (v, st) in svc2.shard_versions().iter().zip(&saved.shards) {
+        assert!(*v >= st.version, "restart lost folds: {v} < {}", st.version);
+    }
+    // and the restarted partition still answers drifted queries sensibly
+    let (_, codes, dists) = svc2.query_nearest(&drift_eval);
+    assert_eq!(codes.len(), 512);
+    assert!(dists.iter().all(|d| d.is_finite()));
+    svc2.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The wire surface: `Rebalance` over TCP swaps the epoch and acks with
+/// the bumped version; `Stats` carries the new observability fields; a
+/// service without durable state answers with a clean error and the
+/// connection survives.
+#[test]
+fn rebalance_over_tcp_and_stats_fields() {
+    let _serial = serial();
+    let dir = state_dir("tcp");
+    let (cfg, serve) = rebalance_cfg(&dir, 0.0); // manual trigger only
+    let svc = VqService::start(&cfg, &serve).unwrap();
+    let server = Server::start(Arc::clone(&svc), &serve.addr).unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+
+    // Route some load so the retrain has weights to read.
+    let eval = cfg.data.mixture.eval_sample(256, cfg.seed);
+    client.ingest(&eval).unwrap();
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.router_version, 0);
+    assert_eq!(stats.rebalances, 0);
+    assert_eq!(stats.shard_ingest.len(), 4);
+    assert_eq!(stats.shard_shed.len(), 4);
+    assert_eq!(
+        stats.shard_ingest.iter().sum::<u64>() + stats.shard_shed.iter().sum::<u64>(),
+        256
+    );
+
+    let (rv, _moved, versions) = client.rebalance().unwrap();
+    assert_eq!(rv, 1);
+    assert_eq!(versions.len(), 4);
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.router_version, 1);
+    assert_eq!(stats.rebalances, 1);
+    // per-epoch counters reset with the new partition
+    assert_eq!(stats.shard_ingest, vec![0; 4]);
+    // the connection that asked for the rebalance keeps working
+    let (codes, _) = client.encode(&eval).unwrap();
+    assert_eq!(codes.len(), 256);
+
+    server.shutdown().unwrap();
+    svc.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+
+    // No durable state: a clean error, not a dropped connection.
+    let (cfg, mut serve) = rebalance_cfg(&state_dir("tcp-none"), 0.0);
+    serve.state_dir = None;
+    let svc = VqService::start(&cfg, &serve).unwrap();
+    let server = Server::start(Arc::clone(&svc), &serve.addr).unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let err = format!("{:#}", client.rebalance().unwrap_err());
+    assert!(err.contains("state-dir"), "{err}");
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.rebalances, 0);
+    server.shutdown().unwrap();
+    svc.shutdown().unwrap();
+}
+
+/// The offline path: `dalvq state rebalance` semantics — a quiesced
+/// directory is migrated in place, and a service started on it serves
+/// the bumped partition (epoch continuity without a live process).
+#[test]
+fn offline_rebalance_then_serve_resumes_bumped_partition() {
+    let _serial = serial();
+    let dir = state_dir("offline");
+    let (cfg, serve) = rebalance_cfg(&dir, 0.0);
+    let svc = VqService::start(&cfg, &serve).unwrap();
+    // some load + folds, then a durable flush and a clean stop
+    let eval = cfg.data.mixture.eval_sample(256, cfg.seed);
+    svc.ingest(&eval).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while svc.version() < 8 {
+        assert!(Instant::now() < deadline, "fleet never folded");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    svc.shutdown().unwrap();
+
+    // offline rebalance of the quiesced directory (what the CLI runs)
+    let report = persist::rebalance_state_dir(&dir, 8, 42).unwrap();
+    assert_eq!(report.router_version, 1);
+    assert_eq!(report.remap.len(), 16);
+
+    // a restarted service resumes the migrated partition
+    let svc2 = VqService::start(&cfg, &serve).unwrap();
+    assert_eq!(svc2.router_version(), 1);
+    let (_, codes, _) = svc2.query_nearest(&eval);
+    assert!(codes.iter().all(|&c| (c as usize) < 16));
+    svc2.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}

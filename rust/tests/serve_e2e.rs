@@ -53,7 +53,7 @@ fn start_stack(
     cfg: &ExperimentConfig,
     serve: &ServeConfig,
 ) -> (Arc<VqService>, Server) {
-    let service = Arc::new(VqService::start(cfg, serve).unwrap());
+    let service = VqService::start(cfg, serve).unwrap();
     let server = Server::start(Arc::clone(&service), &serve.addr).unwrap();
     (service, server)
 }
@@ -292,7 +292,7 @@ fn sharded_ingest_drift_reaches_the_query_path() {
 fn serve_preset_end_to_end_with_loadgen() {
     let _serial = serial();
     let p = presets::serve();
-    let service = Arc::new(VqService::start(&p.base, &p.serve).unwrap());
+    let service = VqService::start(&p.base, &p.serve).unwrap();
     let server = Server::start(Arc::clone(&service), &p.serve.addr).unwrap();
     let addr = server.local_addr().to_string();
 
@@ -301,6 +301,7 @@ fn serve_preset_end_to_end_with_loadgen() {
         requests_per_conn: 50,
         batch_points: 32,
         ingest_frac: 0.25,
+        skew: 0.0,
         seed: p.base.seed,
     };
     let report = dalvq::serve::run_load(&addr, &spec, &p.base.data.mixture).unwrap();
