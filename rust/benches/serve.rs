@@ -51,6 +51,7 @@ fn main() {
             batch_points: 64,
             ingest_frac,
             skew: 0.0,
+            read_only: false,
             seed: p.base.seed,
         };
         let report = run_load(&addr, &spec, &p.base.data.mixture).expect("load");
@@ -183,6 +184,7 @@ fn main() {
         batch_points: 64,
         ingest_frac: 0.8,
         skew: 2.0,
+        read_only: false,
         seed: p.base.seed,
     };
     run_load(&addr, &spec, &p.base.data.mixture).expect("skewed load");
@@ -213,6 +215,82 @@ fn main() {
     server.shutdown().expect("server shutdown");
     service.shutdown().expect("service shutdown");
     let _ = std::fs::remove_dir_all(&dir);
+
+    // --------------------------------------- checkpoint-shipped replicas
+    // The replication subsystem's headline number: aggregate read
+    // throughput of 1 leader + {0, 1, 3} read-only followers, each
+    // endpoint driven by its own read-only load generator concurrently.
+    // The leader keeps training throughout (followers re-sync every
+    // 100 ms), so this measures the scale-out under live replication,
+    // not against a frozen codebook.
+    kit::section("read replicas — aggregate read throughput (read-only load)");
+    let dir = std::env::temp_dir()
+        .join(format!("dalvq-bench-replicas-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut p = presets::serve_durable(&dir);
+    p.serve.checkpoint_every = 8;
+    let leader = VqService::start(&p.base, &p.serve).expect("leader");
+    let lsrv = Server::start(Arc::clone(&leader), &p.serve.addr).expect("server");
+    let laddr = lsrv.local_addr().to_string();
+    println!(
+        "{:>10} {:>10} {:>13} {:>12} {:>10}",
+        "followers", "endpoints", "agg req/s", "agg pts/s", "worst p99"
+    );
+    for followers in [0usize, 1, 3] {
+        let mut stacks = Vec::with_capacity(followers);
+        let mut endpoints = vec![laddr.clone()];
+        for _ in 0..followers {
+            let mut fp = presets::serve_follower(laddr.as_str());
+            fp.serve.sync_every_ms = 100;
+            let fsvc = VqService::start(&fp.base, &fp.serve).expect("follower");
+            let fsrv =
+                Server::start(Arc::clone(&fsvc), &fp.serve.addr).expect("fsrv");
+            endpoints.push(fsrv.local_addr().to_string());
+            stacks.push((fsvc, fsrv));
+        }
+        // one read-only generator per endpoint, all running concurrently
+        let spec = LoadSpec {
+            connections: 4,
+            requests_per_conn: 300,
+            batch_points: 64,
+            ingest_frac: 0.0,
+            skew: 0.0,
+            read_only: true,
+            seed: p.base.seed,
+        };
+        let mixture = p.base.data.mixture.clone();
+        let joins: Vec<_> = endpoints
+            .iter()
+            .map(|addr| {
+                let addr = addr.clone();
+                let spec = spec.clone();
+                let mixture = mixture.clone();
+                std::thread::spawn(move || run_load(&addr, &spec, &mixture))
+            })
+            .collect();
+        let reports: Vec<_> = joins
+            .into_iter()
+            .map(|j| j.join().expect("load thread").expect("replica load"))
+            .collect();
+        let agg_rps: f64 = reports.iter().map(|r| r.throughput_rps).sum();
+        let agg_pts: f64 = reports.iter().map(|r| r.points_per_sec).sum();
+        let worst_p99 = reports.iter().map(|r| r.p99_us).fold(0.0, f64::max);
+        println!(
+            "{:>10} {:>10} {:>13.0} {:>12.0} {:>7.0} us",
+            followers,
+            endpoints.len(),
+            agg_rps,
+            agg_pts,
+            worst_p99,
+        );
+        for (fsvc, fsrv) in stacks {
+            fsrv.shutdown().expect("fsrv shutdown");
+            fsvc.shutdown().expect("follower shutdown");
+        }
+    }
+    lsrv.shutdown().expect("server shutdown");
+    leader.shutdown().expect("leader shutdown");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Stand up the preset's stack, drive the standard mixed load (8 conns x
@@ -229,6 +307,7 @@ fn mixed_load_sweep(p: &presets::ServePreset) -> (dalvq::serve::LoadReport, u64)
         batch_points: 64,
         ingest_frac: 0.25,
         skew: 0.0,
+        read_only: false,
         seed: p.base.seed,
     };
     let report = run_load(&addr, &spec, &p.base.data.mixture).expect("load");

@@ -7,16 +7,16 @@
 //! * **Workers** (`M` of them — Azure *VMs* there, dedicated OS threads
 //!   here, each with its own [`crate::runtime::Engine`]) run the local VQ
 //!   walk on their shard and exchange displacements without any barrier.
-//! * **Queue service** ([`queue`], Azure QueueStorage there) carries
+//! * **Queue service** ([`QueueService`], Azure QueueStorage there) carries
 //!   worker deltas to the reducer, with injected transfer latency and
 //!   optional message drops (fault injection).
-//! * **Reducer** ([`reducer`], the paper's “dedicated unit [that]
+//! * **Reducer** ([`run_reducer`], the paper's “dedicated unit [that]
 //!   permanently modifies the shared version with the latest updates …
 //!   without any synchronization barrier”) folds deltas as they arrive
 //!   and publishes the shared version.
-//! * **Blob service** ([`blob`], Azure BlobStorage there) stores the
+//! * **Blob service** ([`BlobService`], Azure BlobStorage there) stores the
 //!   current shared version; workers download it with injected latency.
-//! * **Monitor** ([`monitor`]) samples the shared version on a real
+//! * **Monitor** ([`run_monitor`]) samples the shared version on a real
 //!   wall-clock cadence and records the `C_{n,M}` curve — the series
 //!   behind Figure 4.
 //!

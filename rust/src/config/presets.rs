@@ -244,6 +244,19 @@ pub fn serve_rebalancing(
     p
 }
 
+/// A read-only follower of the leader at `leader`: restores — and keeps
+/// re-syncing — from the leader's shipped checkpoints, serving the full
+/// read surface and answering writes with `NotLeader`. The serving
+/// topology (shards, kappa, dim) is adopted from the leader's manifest.
+/// This is what `dalvq serve --follow ADDR` runs. The probe width
+/// defaults to 2 (clamped to the leader's shard count at adoption).
+pub fn serve_follower(leader: impl Into<String>) -> ServePreset {
+    let mut p = serve();
+    p.serve.follow = Some(leader.into());
+    p.serve.probe_n = 2;
+    p
+}
+
 /// Quickstart: tiny 2-D problem on the PJRT engine (the `k8d2` artifacts).
 pub fn quickstart() -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default();
@@ -324,6 +337,18 @@ mod tests {
         let mut p = serve_rebalancing(4, "/tmp/dalvq-state", 1.8);
         p.serve.state_dir = None;
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn follower_serve_preset_validates() {
+        let p = serve_follower("127.0.0.1:7171");
+        p.validate().unwrap();
+        assert_eq!(p.serve.follow.as_deref(), Some("127.0.0.1:7171"));
+        assert!(p.serve.sync_every_ms >= 1);
+        // a follower mirroring into its own state dir is valid too
+        let mut p = serve_follower("127.0.0.1:7171");
+        p.serve.state_dir = Some("/tmp/dalvq-follower".into());
+        p.validate().unwrap();
     }
 
     #[test]

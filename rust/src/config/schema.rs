@@ -210,6 +210,17 @@ pub struct ServeConfig {
     /// must have adapted to the load the retrainer will weight by, and a
     /// fresh epoch must not be churned by startup transients.
     pub rebalance_min_folds: u64,
+    /// Follow a leader (`Some("host:port")`): start as a **read-only
+    /// follower** that warm-starts from — and keeps re-syncing to — the
+    /// leader's shipped checkpoints instead of training its own fleets.
+    /// The deployment shape (shards, kappa, dim) is adopted from the
+    /// leader's manifest; writes answer `NotLeader`. `None` (default) =
+    /// a normal leader. With `state_dir` also set, the follower mirrors
+    /// every adopted bundle locally.
+    pub follow: Option<String>,
+    /// Milliseconds between a follower's sync polls of the leader's
+    /// checkpoint generation. Only meaningful with `follow`.
+    pub sync_every_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -235,6 +246,8 @@ impl Default for ServeConfig {
             checkpoint_every: 64,
             rebalance_skew: 0.0,
             rebalance_min_folds: 64,
+            follow: None,
+            sync_every_ms: 500,
         }
     }
 }
@@ -246,7 +259,31 @@ impl ServeConfig {
         if self.addr.is_empty() {
             errs.push("addr must be a host:port bind address".into());
         }
-        if self.shards == 0 {
+        if let Some(leader) = &self.follow {
+            // Follower: the serving topology (shards, kappa, dim) is
+            // adopted from the leader's manifest, so the local sharding
+            // constraints don't apply — only follower-specific ones do.
+            if leader.is_empty() {
+                errs.push("follow must be the leader's host:port".into());
+            }
+            if self.probe_n == 0 {
+                errs.push(
+                    "probe_n must be >= 1 (it is clamped to the leader's \
+                     shard count at adoption)"
+                        .into(),
+                );
+            }
+            if self.sync_every_ms == 0 {
+                errs.push("sync_every_ms must be >= 1".into());
+            }
+            if self.rebalance_skew > 0.0 {
+                errs.push(
+                    "a follower is read-only and cannot rebalance; arm \
+                     rebalance_skew on the leader instead"
+                        .into(),
+                );
+            }
+        } else if self.shards == 0 {
             errs.push("shards must be >= 1".into());
         } else {
             if base.vq.kappa % self.shards != 0 {
@@ -857,6 +894,39 @@ mod tests {
         let mut s = ServeConfig::default();
         s.rebalance_skew = 0.0;
         s.validate(&base).unwrap();
+    }
+
+    #[test]
+    fn follower_knobs_are_validated() {
+        let base = ExperimentConfig::default();
+
+        // a plain follower config is fine — local sharding constraints
+        // don't apply (the topology is adopted from the leader)
+        let mut s = ServeConfig::default();
+        s.follow = Some("127.0.0.1:7171".into());
+        s.shards = 0; // would be rejected on a leader
+        s.validate(&base).unwrap();
+
+        // the leader address must be present
+        let mut s = ServeConfig::default();
+        s.follow = Some(String::new());
+        let msg = format!("{:#}", s.validate(&base).unwrap_err());
+        assert!(msg.contains("host:port"), "{msg}");
+
+        // a follower cannot arm the rebalance monitor
+        let mut s = ServeConfig::default();
+        s.follow = Some("127.0.0.1:7171".into());
+        s.state_dir = Some(std::path::PathBuf::from("/tmp/x"));
+        s.rebalance_skew = 1.5;
+        let msg = format!("{:#}", s.validate(&base).unwrap_err());
+        assert!(msg.contains("read-only"), "{msg}");
+
+        // the sync cadence must be positive
+        let mut s = ServeConfig::default();
+        s.follow = Some("127.0.0.1:7171".into());
+        s.sync_every_ms = 0;
+        let msg = format!("{:#}", s.validate(&base).unwrap_err());
+        assert!(msg.contains("sync_every_ms"), "{msg}");
     }
 
     #[test]

@@ -86,6 +86,15 @@ OPTIONS (serve):
                              exceeds R (needs --state-dir; 0 = off)
   --rebalance-min-folds <N>  folds that must land in a router epoch before
                              the skew trigger may fire [default: 64]
+  --follow <HOST:PORT>       start as a READ-ONLY FOLLOWER of the leader at
+                             this address: restore from its shipped
+                             checkpoints, keep re-syncing, answer writes
+                             with NotLeader. Topology (shards/kappa/dim)
+                             is adopted from the leader; --probe applies
+                             (clamped to the leader's shard count), and
+                             --state-dir mirrors the bundles locally
+  --sync-every <MS>          follower sync-poll interval in milliseconds
+                             [default: 500]
 
 OPTIONS (state):
   inspect --state-dir <DIR>    print the manifest, router epoch and
@@ -108,6 +117,9 @@ OPTIONS (loadtest):
   --skew <S>                 zipf exponent skewing the workload across
                              mixture components (0 = balanced) — the
                              reproducible hot-shard scenario
+  --read-only                issue no ingest at all (reads rotate
+                             encode/nearest/distortion) — the workload
+                             for read-only followers
   --shards <S>               shard the in-process service [default: 1]
   --probe <N>                shards probed per query [default: min(2, S)]
 
@@ -308,6 +320,8 @@ fn run() -> Result<()> {
             let rebalance_skew = parse_opt_f64(&mut args, "--rebalance-skew")?;
             let rebalance_min_folds =
                 parse_opt_u64(&mut args, "--rebalance-min-folds")?;
+            let follow = args.take_value("--follow")?;
+            let sync_every = parse_opt_u64(&mut args, "--sync-every")?;
             args.finish()?;
             let mut p = serve_preset(&preset)?;
             apply_sharding(&mut p, shards, probe);
@@ -326,18 +340,35 @@ fn run() -> Result<()> {
             if let Some(n) = rebalance_min_folds {
                 p.serve.rebalance_min_folds = n;
             }
+            if let Some(l) = follow {
+                p.serve.follow = Some(l);
+            }
+            if let Some(ms) = sync_every {
+                p.serve.sync_every_ms = ms;
+            }
             let service = VqService::start(&p.base, &p.serve)?;
             let server = Server::start(Arc::clone(&service), &p.serve.addr)?;
-            println!(
-                "dalvq serve: listening on {} (M={}x{} shards, kappa={}, \
-                 dim={}, probe={})",
-                server.local_addr(),
-                p.base.m,
-                p.serve.shards,
-                p.base.vq.kappa,
-                p.base.dim(),
-                p.serve.probe_n,
-            );
+            match service.follower_of() {
+                Some(leader) => println!(
+                    "dalvq serve: READ-ONLY FOLLOWER of {leader} on {} \
+                     ({} shards, kappa={}, probe={}, sync every {} ms)",
+                    server.local_addr(),
+                    service.shards(),
+                    service.kappa(),
+                    service.probe_n(),
+                    p.serve.sync_every_ms,
+                ),
+                None => println!(
+                    "dalvq serve: listening on {} (M={}x{} shards, kappa={}, \
+                     dim={}, probe={})",
+                    server.local_addr(),
+                    p.base.m,
+                    p.serve.shards,
+                    p.base.vq.kappa,
+                    p.base.dim(),
+                    p.serve.probe_n,
+                ),
+            }
             if let Some(dir) = service.state_dir() {
                 println!(
                     "dalvq serve: durable state in {} (checkpoint every {} \
@@ -362,16 +393,27 @@ fn run() -> Result<()> {
                 None => loop {
                     std::thread::sleep(std::time::Duration::from_secs(60));
                     let s = service.stats();
-                    println!(
-                        "serve: epoch {} version {} | ingested {} (shed {}) \
-                         | queries {} | shard ingest {:?}",
-                        s.router_version,
-                        s.version,
-                        s.ingested,
-                        s.ingest_shed,
-                        s.queries,
-                        s.shard_ingest,
-                    );
+                    match &s.leader_addr {
+                        Some(leader) => println!(
+                            "serve[follower of {leader}]: epoch {} version {} \
+                             | lag {} folds | last sync {} ms ago | queries {}",
+                            s.router_version,
+                            s.version,
+                            s.sync_lag_folds,
+                            s.last_sync_ms,
+                            s.queries,
+                        ),
+                        None => println!(
+                            "serve: epoch {} version {} | ingested {} (shed \
+                             {}) | queries {} | shard ingest {:?}",
+                            s.router_version,
+                            s.version,
+                            s.ingested,
+                            s.ingest_shed,
+                            s.queries,
+                            s.shard_ingest,
+                        ),
+                    }
                 },
             }
             let s = service.stats();
@@ -402,6 +444,7 @@ fn run() -> Result<()> {
             if let Some(s) = parse_opt_f64(&mut args, "--skew")? {
                 spec.skew = s;
             }
+            spec.read_only = args.take_flag("--read-only");
             let shards = parse_opt_u64(&mut args, "--shards")?;
             let probe = parse_opt_u64(&mut args, "--probe")?;
             args.finish()?;
@@ -460,13 +503,14 @@ fn run() -> Result<()> {
                     let m = &state.manifest;
                     println!(
                         "{}: format {} | {} shard(s), kappa={} dim={} | \
-                         points/exchange {}",
+                         points/exchange {} | checkpoint generation {}",
                         dir.display(),
                         m.format,
                         m.shards,
                         m.kappa,
                         m.dim,
-                        m.points_per_exchange
+                        m.points_per_exchange,
+                        m.generation
                     );
                     println!(
                         "router: epoch {} | {} coarse centroids (dim {})",

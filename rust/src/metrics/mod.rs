@@ -2,8 +2,9 @@
 //!
 //! Every figure in the paper is a set of `(wall-clock time, C_{n,M})`
 //! curves; [`Series`] is that curve, [`FigureReport`] a set of them, and
-//! [`summary`] extracts the quantities the paper argues about — time to
-//! reach a distortion threshold and the speed-up of `M` workers over one.
+//! [`time_to_threshold`] / [`speedup_table`] extract the quantities the
+//! paper argues about — time to reach a distortion threshold and the
+//! speed-up of `M` workers over one.
 
 mod plot;
 mod series;

@@ -55,24 +55,37 @@ pub struct Checkpointer {
 /// the codebook (fold count for diagnostics, ingest/shed so a restart —
 /// and the rebalance retrainer — sees the load each shard absorbed).
 pub struct ShardSource {
+    /// The shard's epoch-swapped publication cell.
     pub store: Arc<SnapshotStore>,
+    /// The shard reducer's live fold counter.
     pub merges: Arc<AtomicU64>,
+    /// Points accepted by the shard this router epoch.
     pub ingested: Arc<AtomicU64>,
+    /// Points shed by the shard this router epoch.
     pub shed: Arc<AtomicU64>,
 }
 
 /// The static shape the checkpointer stamps into every file it writes.
 #[derive(Debug, Clone)]
 pub struct CheckpointSpec {
+    /// The state directory every file lands in.
     pub dir: PathBuf,
     /// Reducer folds between automatic checkpoints of a shard.
     pub checkpoint_every: u64,
+    /// Exchange window of the writing deployment (manifest field).
     pub points_per_exchange: usize,
     /// Total prototypes across shards (manifest field).
     pub kappa: usize,
+    /// Prototype dimension (manifest field).
     pub dim: usize,
     /// Partition version of the router epoch this checkpointer serves.
     pub router_version: u64,
+    /// The service-wide checkpoint-generation clock: holds the generation
+    /// the manifest on disk currently carries, shared with the owning
+    /// service (which re-seeds it across rebalances). Every manifest this
+    /// checkpointer writes bumps it first, so replication's pollers see a
+    /// new generation exactly when the directory's contents changed.
+    pub generation: Arc<AtomicU64>,
 }
 
 impl Checkpointer {
@@ -143,6 +156,12 @@ fn run(
         Ok(snap.version)
     };
     let write_manifest = || -> Result<()> {
+        // Bump-then-write: the generation counter advances exactly when
+        // the directory's contents change, so a replication poller that
+        // sees an unchanged generation can skip re-fetching. A failed
+        // save leaves a gap in the sequence, which is harmless — pollers
+        // compare for inequality, not succession.
+        let generation = spec.generation.fetch_add(1, Ordering::AcqRel) + 1;
         Manifest {
             format: FORMAT,
             shards: sources.len(),
@@ -150,6 +169,7 @@ fn run(
             dim: spec.dim,
             points_per_exchange: spec.points_per_exchange,
             router_version: spec.router_version,
+            generation,
             shard_versions: last_checkpoint
                 .iter()
                 .map(|v| v.load(Ordering::Acquire))
@@ -257,6 +277,7 @@ mod tests {
             kappa,
             dim,
             router_version: 0,
+            generation: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -290,6 +311,8 @@ mod tests {
         assert_eq!(restored.shards[0].rng_cursor, 150);
         assert_eq!(restored.shards[0].ingested, 96);
         assert_eq!(restored.manifest.router_version, 0);
+        // the flush's manifest write bumped the generation clock
+        assert_eq!(restored.manifest.generation, 1);
         assert_eq!(
             restored.shards[0].codebook.flat(),
             &[1.0, 2.0, 3.0, 4.0]

@@ -73,6 +73,7 @@ pub struct RouterState {
     /// epoch the shard files were written under (the manifest carries the
     /// matching value; restore cross-checks them).
     pub version: u64,
+    /// The coarse centroids, one per shard (`S x dim`).
     pub centroids: Codebook,
 }
 
@@ -138,6 +139,9 @@ pub fn encode_shard(
 }
 
 impl ShardState {
+    /// Serialize to the self-describing shard-file format (via
+    /// [`encode_shard`], which the checkpointer also calls with a
+    /// borrowed codebook).
     pub fn encode(&self) -> Vec<u8> {
         encode_shard(
             self.shard,
@@ -151,6 +155,8 @@ impl ShardState {
         )
     }
 
+    /// Total decode: magic, format and checksum are verified before any
+    /// field is read, and a non-finite codebook is rejected.
     pub fn decode(bytes: &[u8]) -> Result<ShardState> {
         let mut c = Cursor::open(bytes, &SHARD_MAGIC, "shard state")?;
         let state = ShardState {
@@ -172,6 +178,7 @@ impl ShardState {
 }
 
 impl RouterState {
+    /// Serialize to the self-describing router-file format.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(
             4 + 4 + 8 + 8 + self.centroids.flat().len() * 4 + 8,
@@ -183,6 +190,7 @@ impl RouterState {
         seal(out)
     }
 
+    /// Total decode, mirroring [`ShardState::decode`]'s guarantees.
     pub fn decode(bytes: &[u8]) -> Result<RouterState> {
         let mut c = Cursor::open(bytes, &ROUTER_MAGIC, "router state")?;
         let state = RouterState { version: c.u64()?, centroids: c.codebook()? };

@@ -50,6 +50,7 @@ pub struct Manifest {
     pub shards: usize,
     /// Total prototypes across shards.
     pub kappa: usize,
+    /// Prototype dimension.
     pub dim: usize,
     /// Points per exchange of the writing deployment (documents the unit
     /// of each shard's `rng_cursor`).
@@ -59,11 +60,21 @@ pub struct Manifest {
     /// Restore cross-checks this against the router file so a torn
     /// rebalance (new shards, old router or vice versa) is rejected.
     pub router_version: u64,
+    /// Checkpoint generation: a counter bumped by **every** manifest
+    /// write (periodic checkpoints, forced flushes, rebalances, heals).
+    /// This is the clock replication polls: a follower that has adopted
+    /// generation `g` re-fetches only when the leader's manifest carries
+    /// a different one, and [`super::ship::read_bundle`] uses its
+    /// stability across a read pass as the consistent-cut check.
+    /// Directories written before this field existed read back as
+    /// generation 0.
+    pub generation: u64,
     /// Last checkpointed snapshot version per shard, shard order.
     pub shard_versions: Vec<u64>,
 }
 
 impl Manifest {
+    /// The manifest's JSON object form (what [`Manifest::save`] writes).
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("format", self.format as u64)
@@ -72,6 +83,7 @@ impl Manifest {
             .set("dim", self.dim)
             .set("points_per_exchange", self.points_per_exchange)
             .set("router_version", self.router_version)
+            .set("generation", self.generation)
             .set(
                 "shard_versions",
                 Json::Arr(
@@ -83,6 +95,8 @@ impl Manifest {
             )
     }
 
+    /// Parse and shape-check a manifest object ([`Manifest::load`]'s
+    /// core; total like the binary decoders).
     pub fn from_json(j: &Json) -> Result<Manifest> {
         let m = Manifest {
             format: j.req("format")?.as_u64()? as u32,
@@ -91,6 +105,13 @@ impl Manifest {
             dim: j.req("dim")?.as_usize()?,
             points_per_exchange: j.req("points_per_exchange")?.as_usize()?,
             router_version: j.req("router_version")?.as_u64()?,
+            // Optional for manifests written before checkpoint shipping
+            // existed: they read back as generation 0 and the first
+            // checkpoint bumps from there.
+            generation: match j.get("generation") {
+                Some(g) => g.as_u64()?,
+                None => 0,
+            },
             shard_versions: j
                 .req("shard_versions")?
                 .as_arr()?
@@ -102,6 +123,16 @@ impl Manifest {
             bail!(
                 "manifest lists {} shard versions for {} shards",
                 m.shard_versions.len(),
+                m.shards
+            );
+        }
+        // Every consumer of the manifest divides kappa across shards
+        // (restore, rebalance, shipped-bundle adoption); a manifest that
+        // cannot be divided evenly is corrupt, not a deployment choice.
+        if m.kappa == 0 || m.kappa % m.shards != 0 {
+            bail!(
+                "manifest kappa = {} does not divide across {} shards",
+                m.kappa,
                 m.shards
             );
         }
@@ -207,9 +238,36 @@ mod tests {
             dim: 2,
             points_per_exchange: 50,
             router_version: 3,
+            generation: 11,
             shard_versions: vec![6, 6, 7, 6],
         };
         m.save(&dir).unwrap();
+        assert_eq!(Manifest::load(&dir).unwrap().unwrap(), m);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn manifest_without_generation_reads_as_generation_zero() {
+        // Directories checkpointed before checkpoint shipping existed
+        // carry no `generation` key; they must load (as generation 0),
+        // not error — replication is additive to the on-disk format.
+        let dir = tmp_dir("pre-generation");
+        let mut m = Manifest {
+            format: 2,
+            shards: 1,
+            kappa: 4,
+            dim: 2,
+            points_per_exchange: 50,
+            router_version: 0,
+            generation: 7,
+            shard_versions: vec![3],
+        };
+        let mut j = m.to_json();
+        if let crate::util::Json::Obj(pairs) = &mut j {
+            pairs.retain(|(k, _)| k != "generation");
+        }
+        write_atomic(&dir, MANIFEST_FILE, j.to_pretty().as_bytes()).unwrap();
+        m.generation = 0;
         assert_eq!(Manifest::load(&dir).unwrap().unwrap(), m);
         std::fs::remove_dir_all(&dir).unwrap();
     }

@@ -30,19 +30,35 @@
 //!   shard's persisted ingest counters) and migrates prototype rows
 //!   across the shard files at a bumped router version. The state dir —
 //!   not any live fleet — is the data source for a rebalance.
+//! * [`ship`] — checkpoint shipping for replication: a consistent,
+//!   generation-stamped read of a live state dir as one raw-byte bundle
+//!   ([`ship::read_bundle`]), plus decoding and mirroring it on the far
+//!   side — how a read-only follower warm-starts, and keeps re-syncing,
+//!   from a leader's checkpoints.
 //!
 //! The shard is the save/restore/migrate unit (the `ShardOutcome` /
-//! `shard_versions` granularity): shards checkpoint independently, and a
-//! rebalance is a split/merge of exactly these files.
+//! `shard_versions` granularity): shards checkpoint independently, a
+//! rebalance is a split/merge of exactly these files, and a shipped
+//! bundle is exactly these files cut at one checkpoint generation.
 
+/// Self-describing binary files for shard and router state.
 pub mod codec;
+/// The state directory's table of contents + the atomic write protocol.
 pub mod manifest;
+/// The background thread that drains shard epochs to disk.
 pub mod checkpointer;
+/// The offline re-partitioner (router retrain + row migration).
 pub mod rebalance;
+/// Warm-start loading with strict validation.
 pub mod restore;
+/// Checkpoint shipping for leader/follower replication.
+pub mod ship;
 
 pub use checkpointer::{CheckpointSpec, Checkpointer, ShardSource};
 pub use codec::{RouterState, ShardState, FORMAT};
-pub use manifest::{shard_file, sweep_tmp, write_atomic, Manifest, ROUTER_FILE};
+pub use manifest::{
+    shard_file, sweep_tmp, write_atomic, Manifest, MANIFEST_FILE, ROUTER_FILE,
+};
 pub use rebalance::{rebalance_state_dir, RebalanceReport};
-pub use restore::{load_state, RestoredState};
+pub use restore::{decode_state, load_state, RestoredState};
+pub use ship::{decode_bundle, read_bundle, write_bundle, StateBundle};

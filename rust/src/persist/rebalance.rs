@@ -349,6 +349,10 @@ fn plan_from_state(
         dim,
         points_per_exchange: m.points_per_exchange,
         router_version,
+        // A migration is a directory change like any other: bump the
+        // checkpoint generation so replication pollers re-fetch — and
+        // adopt the bumped router epoch — on their next pass.
+        generation: m.generation + 1,
         shard_versions: vec![resume_version; shards],
     };
     let report = RebalanceReport {
@@ -459,6 +463,7 @@ mod tests {
             dim: 1,
             points_per_exchange: 50,
             router_version: 0,
+            generation: 3,
             shard_versions: vec![6, 2],
         }
         .save(&dir)
@@ -495,6 +500,8 @@ mod tests {
         let state = load_state(&dir).unwrap().unwrap();
         assert_eq!(state.manifest.router_version, 1);
         assert_eq!(state.router.version, 1);
+        // the migration bumped the checkpoint-generation clock too
+        assert_eq!(state.manifest.generation, 4);
         assert_eq!(state.manifest.shard_versions, vec![6, 6]);
         // counters reset for the new partition epoch
         assert!(state.shards.iter().all(|s| s.ingested == 0 && s.shed == 0));

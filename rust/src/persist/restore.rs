@@ -21,7 +21,9 @@ use super::manifest::{shard_path, Manifest, ROUTER_FILE};
 /// Everything a warm start restores.
 #[derive(Debug, Clone)]
 pub struct RestoredState {
+    /// The manifest the state was validated against.
     pub manifest: Manifest,
+    /// The frozen coarse quantizer, verbatim.
     pub router: RouterState,
     /// Per-shard state, shard order (`shards[s].shard == s`).
     pub shards: Vec<ShardState>,
@@ -39,8 +41,38 @@ pub fn load_state(dir: &Path) -> Result<Option<RestoredState>> {
     let router_path = dir.join(ROUTER_FILE);
     let router_bytes = std::fs::read(&router_path)
         .with_context(|| format!("reading {}", router_path.display()))?;
-    let router = RouterState::decode(&router_bytes)
-        .with_context(|| format!("decoding {}", router_path.display()))?;
+    let mut shard_bytes = Vec::with_capacity(manifest.shards);
+    for s in 0..manifest.shards {
+        let path = shard_path(dir, s);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        shard_bytes.push((path.display().to_string(), bytes));
+    }
+    decode_state(
+        manifest,
+        &router_path.display().to_string(),
+        &router_bytes,
+        &shard_bytes,
+    )
+    .map(Some)
+}
+
+/// Decode and cross-validate raw state bytes against their manifest —
+/// the validation core shared by [`load_state`] (bytes read off a local
+/// directory) and [`super::ship::decode_bundle`] (bytes shipped over the
+/// wire from a leader). Each byte string comes with a label (a file
+/// path, or a bundle entry name) used in error messages; the byte
+/// container is generic so callers can pass owned buffers or borrows of
+/// a wire frame without copying. Every cross-check lives here so a
+/// shipped bundle is held to exactly the standard a local restore is.
+pub fn decode_state<B: AsRef<[u8]>>(
+    manifest: Manifest,
+    router_label: &str,
+    router_bytes: &[u8],
+    shard_bytes: &[(String, B)],
+) -> Result<RestoredState> {
+    let router = RouterState::decode(router_bytes)
+        .with_context(|| format!("decoding {router_label}"))?;
     if router.centroids.kappa() != manifest.shards
         || router.centroids.dim() != manifest.dim
     {
@@ -61,27 +93,26 @@ pub fn load_state(dir: &Path) -> Result<Option<RestoredState>> {
             manifest.router_version
         );
     }
+    if shard_bytes.len() != manifest.shards {
+        bail!(
+            "{} shard payload(s) for a manifest listing {} shards",
+            shard_bytes.len(),
+            manifest.shards
+        );
+    }
     let kappa_shard = manifest.kappa / manifest.shards;
     let mut shards = Vec::with_capacity(manifest.shards);
-    for s in 0..manifest.shards {
-        let path = shard_path(dir, s);
-        let bytes = std::fs::read(&path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        let state = ShardState::decode(&bytes)
-            .with_context(|| format!("decoding {}", path.display()))?;
+    for (s, (label, bytes)) in shard_bytes.iter().enumerate() {
+        let state = ShardState::decode(bytes.as_ref())
+            .with_context(|| format!("decoding {label}"))?;
         if state.shard as usize != s {
-            bail!(
-                "{} claims to be shard {}, expected {s}",
-                path.display(),
-                state.shard
-            );
+            bail!("{label} claims to be shard {}, expected {s}", state.shard);
         }
         if state.router_version != manifest.router_version {
             bail!(
-                "{} belongs to partition version {}, manifest says {} — a \
-                 rebalance was interrupted mid-migration; re-run `dalvq \
+                "{label} belongs to partition version {}, manifest says {} \
+                 — a rebalance was interrupted mid-migration; re-run `dalvq \
                  state rebalance` on this directory",
-                path.display(),
                 state.router_version,
                 manifest.router_version
             );
@@ -90,8 +121,7 @@ pub fn load_state(dir: &Path) -> Result<Option<RestoredState>> {
             || state.codebook.dim() != manifest.dim
         {
             bail!(
-                "{} holds a {} x {} codebook, manifest expects {} x {}",
-                path.display(),
+                "{label} holds a {} x {} codebook, manifest expects {} x {}",
                 state.codebook.kappa(),
                 state.codebook.dim(),
                 kappa_shard,
@@ -100,7 +130,7 @@ pub fn load_state(dir: &Path) -> Result<Option<RestoredState>> {
         }
         shards.push(state);
     }
-    Ok(Some(RestoredState { manifest, router, shards }))
+    Ok(RestoredState { manifest, router, shards })
 }
 
 #[cfg(test)]
@@ -125,6 +155,7 @@ mod tests {
             dim: 2,
             points_per_exchange: 50,
             router_version: 1,
+            generation: 1,
             shard_versions: vec![5, 7],
         }
         .save(dir)

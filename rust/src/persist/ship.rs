@@ -1,0 +1,423 @@
+//! Checkpoint shipping: reading a state directory as one consistent,
+//! generation-stamped bundle of raw file bytes, and adopting such a
+//! bundle on the far side.
+//!
+//! This is the persistence half of leader/follower replication
+//! (`serve`'s `FetchState` wire op): the leader snapshots its live state
+//! dir into a [`StateBundle`] with [`read_bundle`], the bytes travel the
+//! wire verbatim, and a follower turns them back into the structures a
+//! read path serves from with [`decode_bundle`] — optionally mirroring
+//! them to its own directory with [`write_bundle`], byte-identical, so a
+//! follower restart (or a promotion) warm-starts like any other
+//! `--state-dir` process.
+//!
+//! ## The consistent cut
+//!
+//! The state dir has one writer (the epoch's checkpointer, or an offline
+//! rebalance) writing multiple files; a reader racing it could pair shard
+//! files from one checkpoint with a manifest from another. Two mechanisms
+//! make [`read_bundle`]'s snapshot consistent without any coordination
+//! with the writer:
+//!
+//! 1. **Generation seqlock.** Every manifest write bumps
+//!    [`Manifest::generation`]. `read_bundle` loads the manifest, reads
+//!    every file, then re-loads the manifest: if the generation moved,
+//!    the pass raced a writer and retries.
+//! 2. **Decode validation.** The assembled bytes are decoded and
+//!    cross-checked ([`super::restore::decode_state`]) before they are
+//!    returned — the same partition-version checks that catch a torn
+//!    rebalance on restart catch a mid-migration read here, and a failed
+//!    check retries rather than erroring (the writer finishes in bounded
+//!    time; every file write is individually atomic).
+//!
+//! Shard files can still be *newer* than the manifest of the same pass
+//! (the checkpointer writes shards before the manifest); that skew is
+//! harmless — a bundle's authority is its shard files, and the follower
+//! resumes from their versions exactly as a local warm restart would.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{shard_file, write_atomic, Manifest, MANIFEST_FILE, ROUTER_FILE};
+use super::restore::{decode_state, RestoredState};
+
+/// How many racing read passes [`read_bundle`] attempts before giving
+/// up. Each retry backs off briefly, so even a checkpoint-per-fold
+/// writer yields a stable window within the budget.
+const READ_ATTEMPTS: usize = 8;
+
+/// One consistent snapshot of a state directory: the raw bytes of every
+/// durable file, cut at a single checkpoint generation.
+#[derive(Debug, Clone)]
+pub struct StateBundle {
+    /// The checkpoint generation the cut was taken at (the manifest's
+    /// [`Manifest::generation`]).
+    pub generation: u64,
+    /// The parsed manifest of the cut (decoded from the bytes also
+    /// present in `files` — kept so callers can read the deployment
+    /// shape without re-parsing).
+    pub manifest: Manifest,
+    /// `(file name, raw bytes)` for every file of the directory:
+    /// `manifest.json`, `router.bin`, and `shard-<s>.state` in shard
+    /// order. Byte-identical to the files on disk, so a mirror written
+    /// from this bundle restores exactly like the original.
+    pub files: Vec<(String, Vec<u8>)>,
+}
+
+/// Read `dir` as one consistent [`StateBundle`]. `Ok(None)` when the
+/// directory holds no manifest yet (the leader is cold and has not
+/// checkpointed — nothing to ship). Strictly read-only, like
+/// [`super::load_state`]: safe against a live checkpointer.
+pub fn read_bundle(dir: &Path) -> Result<Option<StateBundle>> {
+    let mut last_err = None;
+    for attempt in 0..READ_ATTEMPTS {
+        if attempt > 0 {
+            std::thread::sleep(Duration::from_millis(10 * attempt as u64));
+        }
+        let Some(m1) = Manifest::load(dir)? else {
+            return Ok(None);
+        };
+        let read = |name: &str| -> Result<Vec<u8>> {
+            let path = dir.join(name);
+            std::fs::read(&path)
+                .with_context(|| format!("reading {}", path.display()))
+        };
+        // Gather every file of the cut — the manifest as raw bytes too,
+        // so the shipped bundle is byte-identical to the directory. A
+        // read error here may just be the race (e.g. a shard file not
+        // yet written after a shard count change) — treat it as
+        // retryable like a failed validation.
+        let gathered =
+            (|| -> Result<(Vec<u8>, Vec<u8>, Vec<(String, Vec<u8>)>)> {
+                let manifest_raw = read(MANIFEST_FILE)?;
+                let router = read(ROUTER_FILE)?;
+                let mut shards = Vec::with_capacity(m1.shards);
+                for s in 0..m1.shards {
+                    let name = shard_file(s);
+                    let bytes = read(&name)?;
+                    shards.push((name, bytes));
+                }
+                Ok((manifest_raw, router, shards))
+            })();
+        let (manifest_raw, router_bytes, shard_bytes) = match gathered {
+            Ok(g) => g,
+            Err(e) => {
+                last_err = Some(e);
+                continue;
+            }
+        };
+        // The raw manifest bytes must belong to the same cut as `m1`
+        // (the raw read may have landed after a racing writer's rename).
+        let manifest = match parse_manifest_bytes(&manifest_raw) {
+            Ok(m) => m,
+            Err(e) => {
+                last_err = Some(e);
+                continue;
+            }
+        };
+        if manifest.generation != m1.generation {
+            last_err = Some(anyhow::anyhow!(
+                "manifest advanced from generation {} to {} mid-read",
+                m1.generation,
+                manifest.generation
+            ));
+            continue;
+        }
+        // Seqlock check: a manifest write during the pass means the
+        // files may span two checkpoints — retry.
+        let Some(m2) = Manifest::load(dir)? else {
+            last_err = Some(anyhow::anyhow!("manifest vanished mid-read"));
+            continue;
+        };
+        if m2.generation != m1.generation {
+            last_err = Some(anyhow::anyhow!(
+                "state dir advanced from generation {} to {} mid-read",
+                m1.generation,
+                m2.generation
+            ));
+            continue;
+        }
+        // Full decode validation: the cut must restore. A failure here
+        // is either a race with a multi-file writer (retry) or real
+        // corruption (the final attempt surfaces it).
+        match decode_state(
+            manifest.clone(),
+            ROUTER_FILE,
+            &router_bytes,
+            &shard_bytes,
+        ) {
+            Ok(_) => {
+                let mut files = Vec::with_capacity(2 + shard_bytes.len());
+                files.push((MANIFEST_FILE.to_string(), manifest_raw));
+                files.push((ROUTER_FILE.to_string(), router_bytes));
+                files.extend(shard_bytes);
+                return Ok(Some(StateBundle {
+                    generation: manifest.generation,
+                    manifest,
+                    files,
+                }));
+            }
+            Err(e) => {
+                last_err = Some(e);
+                continue;
+            }
+        }
+    }
+    Err(last_err.expect("READ_ATTEMPTS > 0 implies an error was recorded"))
+        .with_context(|| {
+            format!(
+                "no consistent read of {} in {READ_ATTEMPTS} attempts \
+                 (is a writer wedged mid-migration?)",
+                dir.display()
+            )
+        })
+}
+
+/// Decode a shipped file set back into the structures a serving process
+/// restores from, applying every cross-check a local restore applies.
+/// The bundle must contain `manifest.json`, `router.bin`, and exactly
+/// the `shard-<s>.state` files the manifest lists, in any order;
+/// unknown names are rejected (a lying peer must not smuggle bytes into
+/// a follower's mirror directory).
+pub fn decode_bundle(files: &[(String, Vec<u8>)]) -> Result<RestoredState> {
+    let mut manifest_bytes: Option<&Vec<u8>> = None;
+    let mut router_bytes: Option<&Vec<u8>> = None;
+    let mut shard_slots: Vec<Option<&Vec<u8>>> = Vec::new();
+    // First pass just to find the manifest (it sizes the shard table).
+    for (name, bytes) in files {
+        if name == MANIFEST_FILE && manifest_bytes.replace(bytes).is_some() {
+            bail!("bundle carries {MANIFEST_FILE} twice");
+        }
+    }
+    let manifest_bytes = manifest_bytes
+        .ok_or_else(|| anyhow::anyhow!("bundle carries no {MANIFEST_FILE}"))?;
+    let manifest = parse_manifest_bytes(manifest_bytes)
+        .context("bundled manifest")?;
+    shard_slots.resize(manifest.shards, None);
+    for (name, bytes) in files {
+        if name == MANIFEST_FILE {
+            continue;
+        } else if name == ROUTER_FILE {
+            if router_bytes.replace(bytes).is_some() {
+                bail!("bundle carries {ROUTER_FILE} twice");
+            }
+        } else if let Some(s) = parse_shard_name(name, manifest.shards) {
+            if shard_slots[s].replace(bytes).is_some() {
+                bail!("bundle carries {name} twice");
+            }
+        } else {
+            bail!("bundle carries unexpected file {name:?}");
+        }
+    }
+    let router_bytes = router_bytes
+        .ok_or_else(|| anyhow::anyhow!("bundle carries no {ROUTER_FILE}"))?;
+    // Borrow the shard payloads straight out of the bundle — decoding
+    // owns nothing it doesn't have to (a bundle can approach the frame
+    // cap, and adoption runs on every new generation).
+    let mut shard_bytes: Vec<(String, &Vec<u8>)> =
+        Vec::with_capacity(manifest.shards);
+    for (s, slot) in shard_slots.into_iter().enumerate() {
+        let bytes = slot.ok_or_else(|| {
+            anyhow::anyhow!("bundle carries no {}", shard_file(s))
+        })?;
+        shard_bytes.push((shard_file(s), bytes));
+    }
+    decode_state(manifest, ROUTER_FILE, router_bytes, &shard_bytes)
+}
+
+/// Parse manifest bytes (UTF-8 JSON) through exactly the validation
+/// [`Manifest::load`] applies to the on-disk file.
+fn parse_manifest_bytes(bytes: &[u8]) -> Result<Manifest> {
+    let text =
+        std::str::from_utf8(bytes).context("manifest bytes are not UTF-8")?;
+    Manifest::from_json(
+        &crate::util::Json::parse(text).context("parsing manifest bytes")?,
+    )
+    .context("validating manifest bytes")
+}
+
+/// `Some(s)` when `name` is the manifest-listed shard file `shard-s.state`
+/// with `s < shards`.
+fn parse_shard_name(name: &str, shards: usize) -> Option<usize> {
+    let idx: usize = name
+        .strip_prefix("shard-")?
+        .strip_suffix(".state")?
+        .parse()
+        .ok()?;
+    (idx < shards && shard_file(idx) == name).then_some(idx)
+}
+
+/// Mirror a shipped file set into `dir`, byte-identical, through the
+/// atomic write protocol. The manifest lands **last**, so a follower
+/// killed mid-mirror leaves either the previous complete image or a
+/// directory whose manifest still describes it — never a manifest
+/// pointing at half-adopted shard files. Callers validate with
+/// [`decode_bundle`] first; this function only moves bytes.
+pub fn write_bundle(dir: &Path, files: &[(String, Vec<u8>)]) -> Result<()> {
+    for (name, bytes) in files.iter().filter(|(n, _)| n != MANIFEST_FILE) {
+        write_atomic(dir, name, bytes)?;
+    }
+    for (name, bytes) in files.iter().filter(|(n, _)| n == MANIFEST_FILE) {
+        write_atomic(dir, name, bytes)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::codec::{RouterState, ShardState};
+    use crate::persist::load_state;
+    use crate::vq::Codebook;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("dalvq-ship-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn write_good_state(dir: &Path) {
+        Manifest {
+            format: crate::persist::FORMAT,
+            shards: 2,
+            kappa: 4,
+            dim: 2,
+            points_per_exchange: 50,
+            router_version: 1,
+            generation: 9,
+            shard_versions: vec![5, 7],
+        }
+        .save(dir)
+        .unwrap();
+        let router = RouterState {
+            version: 1,
+            centroids: Codebook::from_flat(2, 2, vec![0.0, 0.0, 10.0, 10.0]),
+        };
+        write_atomic(dir, ROUTER_FILE, &router.encode()).unwrap();
+        for (s, v) in [(0usize, 5u64), (1, 7)] {
+            let state = ShardState {
+                shard: s as u32,
+                version: v,
+                merges: v,
+                rng_cursor: v * 50,
+                ingested: 10 * v,
+                shed: 0,
+                router_version: 1,
+                codebook: Codebook::from_flat(2, 2, vec![s as f32; 4]),
+            };
+            write_atomic(dir, &shard_file(s), &state.encode()).unwrap();
+        }
+    }
+
+    #[test]
+    fn bundle_roundtrips_byte_identically_through_a_mirror() {
+        let src = tmp_dir("roundtrip-src");
+        let dst = tmp_dir("roundtrip-dst");
+        write_good_state(&src);
+        let bundle = read_bundle(&src).unwrap().unwrap();
+        assert_eq!(bundle.generation, 9);
+        assert_eq!(bundle.manifest.shards, 2);
+        assert_eq!(bundle.files.len(), 4); // manifest + router + 2 shards
+
+        // the bundle decodes to the same state a local restore sees
+        let shipped = decode_bundle(&bundle.files).unwrap();
+        let local = load_state(&src).unwrap().unwrap();
+        assert_eq!(shipped.manifest, local.manifest);
+        assert_eq!(shipped.router, local.router);
+        assert_eq!(shipped.shards, local.shards);
+
+        // a mirror written from the bundle is byte-identical file by file
+        write_bundle(&dst, &bundle.files).unwrap();
+        for (name, bytes) in &bundle.files {
+            assert_eq!(&std::fs::read(dst.join(name)).unwrap(), bytes, "{name}");
+        }
+        // and warm-restarts like the original
+        let mirrored = load_state(&dst).unwrap().unwrap();
+        assert_eq!(mirrored.shards, local.shards);
+        std::fs::remove_dir_all(&src).unwrap();
+        std::fs::remove_dir_all(&dst).unwrap();
+    }
+
+    #[test]
+    fn cold_dir_ships_nothing() {
+        let dir = tmp_dir("cold");
+        assert!(read_bundle(&dir).unwrap().is_none());
+    }
+
+    #[test]
+    fn torn_migration_never_yields_a_bundle() {
+        // One shard file rewritten at a bumped partition version, router
+        // and manifest still at the old one: every read pass fails the
+        // decode validation, so read_bundle errors instead of shipping a
+        // mix a follower would refuse (or worse, serve).
+        let dir = tmp_dir("torn");
+        write_good_state(&dir);
+        let migrated = ShardState {
+            shard: 0,
+            version: 7,
+            merges: 7,
+            rng_cursor: 350,
+            ingested: 0,
+            shed: 0,
+            router_version: 2, // manifest + router say 1
+            codebook: Codebook::from_flat(2, 2, vec![9.0; 4]),
+        };
+        write_atomic(&dir, &shard_file(0), &migrated.encode()).unwrap();
+        let err = format!("{:#}", read_bundle(&dir).unwrap_err());
+        assert!(err.contains("no consistent read"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn decode_bundle_rejects_missing_extra_and_duplicate_files() {
+        let dir = tmp_dir("reject");
+        write_good_state(&dir);
+        let bundle = read_bundle(&dir).unwrap().unwrap();
+
+        // missing shard
+        let missing: Vec<_> = bundle
+            .files
+            .iter()
+            .filter(|(n, _)| n != "shard-1.state")
+            .cloned()
+            .collect();
+        let err = format!("{:#}", decode_bundle(&missing).unwrap_err());
+        assert!(err.contains("shard-1.state"), "{err}");
+
+        // smuggled extra file
+        let mut extra = bundle.files.clone();
+        extra.push(("../escape".into(), b"junk".to_vec()));
+        let err = format!("{:#}", decode_bundle(&extra).unwrap_err());
+        assert!(err.contains("unexpected file"), "{err}");
+
+        // duplicate router
+        let mut dup = bundle.files.clone();
+        dup.push((ROUTER_FILE.into(), bundle.files[1].1.clone()));
+        let err = format!("{:#}", decode_bundle(&dup).unwrap_err());
+        assert!(err.contains("twice"), "{err}");
+
+        // no manifest at all
+        let headless: Vec<_> = bundle
+            .files
+            .iter()
+            .filter(|(n, _)| n != MANIFEST_FILE)
+            .cloned()
+            .collect();
+        assert!(decode_bundle(&headless).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shard_names_parse_strictly() {
+        assert_eq!(parse_shard_name("shard-0.state", 2), Some(0));
+        assert_eq!(parse_shard_name("shard-1.state", 2), Some(1));
+        assert_eq!(parse_shard_name("shard-2.state", 2), None); // out of range
+        assert_eq!(parse_shard_name("shard-01.state", 2), None); // not canonical
+        assert_eq!(parse_shard_name("shard-x.state", 2), None);
+        assert_eq!(parse_shard_name("router.bin", 2), None);
+    }
+}

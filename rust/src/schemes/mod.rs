@@ -26,8 +26,8 @@ use crate::runtime::Engine;
 use crate::sim::{CostModel, Evaluator, Trace};
 use crate::vq::{Codebook, Schedule};
 
-/// Everything a scheme needs to run, prepared by [`prepare`] (or by a test
-/// directly).
+/// Everything a scheme needs to run, prepared by [`run_with_config`] (or
+/// by a test directly).
 pub struct SchemeInputs<'a> {
     pub engine: &'a mut dyn Engine,
     /// One shard per worker (`shards.len() == M`).

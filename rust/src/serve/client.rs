@@ -7,7 +7,9 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::protocol::{read_frame, write_frame, Request, Response, StatsReply};
+use super::protocol::{
+    read_frame, write_frame, Request, Response, StateShipment, StatsReply,
+};
 
 /// Default per-attempt connect timeout.
 const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
@@ -24,8 +26,8 @@ impl Client {
     /// Connect with the default timeout and retry budget: each attempt is
     /// bounded (a black-holed address cannot hang the caller the way a
     /// plain `TcpStream::connect` can), and a server that is briefly not
-    /// up yet gets [`CONNECT_RETRIES`] more chances before the caller
-    /// sees a clear error. `dalvq loadtest --addr` fails fast through
+    /// up yet gets two more chances before the caller sees a clear
+    /// error. `dalvq loadtest --addr` fails fast through
     /// this instead of stalling its whole connection fan-out.
     pub fn connect(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<Client> {
         Self::connect_with(addr, CONNECT_TIMEOUT, CONNECT_RETRIES)
@@ -83,6 +85,12 @@ impl Client {
         let resp = Response::decode(&payload)?;
         if let Response::Error { message } = &resp {
             bail!("server error: {message}");
+        }
+        if let Response::NotLeader { leader } = &resp {
+            bail!(
+                "server is a read-only follower; send writes (and state \
+                 fetches) to its leader at {leader}"
+            );
         }
         Ok(resp)
     }
@@ -145,12 +153,43 @@ impl Client {
     /// reads issued on other connections keep answering throughout.
     /// Errors when the service has no `--state-dir`.
     pub fn rebalance(&mut self) -> Result<(u64, u64, Vec<u64>)> {
-        match self.call(&Request::Rebalance)? {
+        let (router_version, moved_rows, shard_versions, _remap) =
+            self.rebalance_full(false)?;
+        Ok((router_version, moved_rows, shard_versions))
+    }
+
+    /// [`Client::rebalance`] with control over the remap: when
+    /// `want_remap` is set, the fourth element is the old→new
+    /// global-code table (`remap[old] = new`) — a client holding cached
+    /// codes from the previous epoch translates them through it instead
+    /// of re-encoding. Empty when `want_remap` is false.
+    pub fn rebalance_full(
+        &mut self,
+        want_remap: bool,
+    ) -> Result<(u64, u64, Vec<u64>, Vec<u32>)> {
+        match self.call(&Request::Rebalance { want_remap })? {
             Response::RebalanceAck {
                 router_version,
                 moved_rows,
                 shard_versions,
-            } => Ok((router_version, moved_rows, shard_versions)),
+                remap,
+            } => Ok((router_version, moved_rows, shard_versions, remap)),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Fetch the server's durable state as one consistent checkpoint
+    /// bundle (replication's sync primitive). Pass the generation
+    /// already held — an unchanged leader answers with an empty file
+    /// list — or [`super::protocol::FETCH_ANY_GENERATION`] to force the
+    /// full bundle. Errors on a follower (`NotLeader`) and on a leader
+    /// without `--state-dir`.
+    pub fn fetch_state(
+        &mut self,
+        have_generation: u64,
+    ) -> Result<StateShipment> {
+        match self.call(&Request::FetchState { have_generation })? {
+            Response::State(shipment) => Ok(shipment),
             other => bail!("unexpected response {other:?}"),
         }
     }

@@ -33,6 +33,13 @@ pub struct LoadSpec {
     /// `dalvq loadtest --skew 2` concentrates most of the stream on one
     /// region of the input space.
     pub skew: f64,
+    /// Issue no ingest at all, whatever `ingest_frac` says: every
+    /// request rotates through encode / nearest / distortion. This is
+    /// the workload for read-only followers (`dalvq loadtest --read-only
+    /// --addr <follower>`), where an ingest would only collect
+    /// `NotLeader` errors.
+    pub read_only: bool,
+    /// Seed of the deterministic per-connection point/op streams.
     pub seed: u64,
 }
 
@@ -44,12 +51,15 @@ impl Default for LoadSpec {
             batch_points: 64,
             ingest_frac: 0.25,
             skew: 0.0,
+            read_only: false,
             seed: 1,
         }
     }
 }
 
 impl LoadSpec {
+    /// Reject shapes that cannot run (zero counts, out-of-range
+    /// fractions, non-finite skew).
     pub fn validate(&self) -> Result<()> {
         if self.connections == 0
             || self.requests_per_conn == 0
@@ -114,29 +124,68 @@ pub fn component_shares(points: &[f32], centers: &[f32], dim: usize) -> Vec<f64>
 /// Per-operation request counts.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct OpCounts {
+    /// `Encode` requests issued.
     pub encode: u64,
+    /// `Nearest` requests issued.
     pub nearest: u64,
+    /// `Distortion` requests issued.
     pub distortion: u64,
+    /// `Ingest` requests issued.
     pub ingest: u64,
+}
+
+/// One generated request kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Op {
+    Encode,
+    Nearest,
+    Distortion,
+    Ingest,
+}
+
+/// The workload mix math, in one testable place: a request is an ingest
+/// with probability `ingest_frac` — unless the spec is `read_only`,
+/// which suppresses ingest entirely — and reads rotate deterministically
+/// encode → nearest → distortion on the connection's `read_rotor` (each
+/// connection starts its rotor at its id, staggering read kinds across
+/// the fan-out).
+fn choose_op(spec: &LoadSpec, rng: &mut Rng, read_rotor: &mut usize) -> Op {
+    if !spec.read_only && rng.bool(spec.ingest_frac) {
+        return Op::Ingest;
+    }
+    let op = match *read_rotor % 3 {
+        0 => Op::Encode,
+        1 => Op::Nearest,
+        _ => Op::Distortion,
+    };
+    *read_rotor += 1;
+    op
 }
 
 /// What a load run measured.
 #[derive(Debug, Clone)]
 pub struct LoadReport {
+    /// The workload that was driven.
     pub spec: LoadSpec,
+    /// Requests completed across all connections.
     pub requests: u64,
+    /// Per-operation request counts.
     pub ops: OpCounts,
     /// Ingested points the server shed (admission control).
     pub points_shed: u64,
+    /// Wall-clock seconds from the start gate to the last join.
     pub wall_secs: f64,
     /// Completed requests per second over the whole run.
     pub throughput_rps: f64,
     /// Points pushed through queries+ingest per second.
     pub points_per_sec: f64,
-    /// Request latency percentiles, microseconds.
+    /// Median request latency, microseconds.
     pub p50_us: f64,
+    /// 95th-percentile request latency, microseconds.
     pub p95_us: f64,
+    /// 99th-percentile request latency, microseconds.
     pub p99_us: f64,
+    /// Worst observed request latency, microseconds.
     pub max_us: f64,
     /// Requests-per-second curve over the run (100 ms buckets).
     pub series: Series,
@@ -274,26 +323,24 @@ fn drive_connection(
         let start = rng.usize(pool_points - spec.batch_points + 1);
         let batch = &pool[start * dim..(start + spec.batch_points) * dim];
         let req_start = Instant::now();
-        if rng.bool(spec.ingest_frac) {
-            let (_, shed) = client.ingest(batch)?;
-            out.points_shed += shed;
-            out.ops.ingest += 1;
-        } else {
-            match read_rotor % 3 {
-                0 => {
-                    client.encode(batch)?;
-                    out.ops.encode += 1;
-                }
-                1 => {
-                    client.nearest(batch)?;
-                    out.ops.nearest += 1;
-                }
-                _ => {
-                    client.distortion(batch)?;
-                    out.ops.distortion += 1;
-                }
+        match choose_op(spec, &mut rng, &mut read_rotor) {
+            Op::Ingest => {
+                let (_, shed) = client.ingest(batch)?;
+                out.points_shed += shed;
+                out.ops.ingest += 1;
             }
-            read_rotor += 1;
+            Op::Encode => {
+                client.encode(batch)?;
+                out.ops.encode += 1;
+            }
+            Op::Nearest => {
+                client.nearest(batch)?;
+                out.ops.nearest += 1;
+            }
+            Op::Distortion => {
+                client.distortion(batch)?;
+                out.ops.distortion += 1;
+            }
         }
         out.latencies_ns.push(req_start.elapsed().as_nanos() as u64);
         out.stamps.push(t0.elapsed().as_secs_f64());
@@ -307,11 +354,12 @@ impl LoadReport {
         let mut s = String::new();
         s.push_str(&format!(
             "loadtest: {} connections x {} requests, {} pts/batch, \
-             ingest frac {:.0}%\n",
+             ingest frac {:.0}%{}\n",
             self.spec.connections,
             self.spec.requests_per_conn,
             self.spec.batch_points,
             self.spec.ingest_frac * 100.0,
+            if self.spec.read_only { " (read-only)" } else { "" },
         ));
         s.push_str(&format!(
             "  ops: encode {} | nearest {} | distortion {} | ingest {} \
@@ -434,6 +482,77 @@ mod tests {
         assert!(s.validate().is_err());
         s.skew = 2.0;
         assert!(s.validate().is_ok());
+    }
+
+    /// Replay `n` draws of the op chooser and tally them.
+    fn tally_ops(spec: &LoadSpec, conn_id: usize, n: usize) -> OpCounts {
+        let mut rng = Rng::from_seed_stream(spec.seed, 0x10AD_0000 + conn_id as u64);
+        let mut rotor = conn_id;
+        let mut counts = OpCounts::default();
+        for _ in 0..n {
+            match choose_op(spec, &mut rng, &mut rotor) {
+                Op::Encode => counts.encode += 1,
+                Op::Nearest => counts.nearest += 1,
+                Op::Distortion => counts.distortion += 1,
+                Op::Ingest => counts.ingest += 1,
+            }
+        }
+        counts
+    }
+
+    #[test]
+    fn read_only_suppresses_ingest_and_splits_reads_exactly() {
+        // read_only overrides any ingest_frac — even a pure-write spec
+        // issues zero ingest — and the rotor splits 300 reads exactly
+        // 100/100/100 whatever the connection id offset.
+        for conn_id in 0..4 {
+            let mut spec = LoadSpec::default();
+            spec.ingest_frac = 1.0;
+            spec.read_only = true;
+            let counts = tally_ops(&spec, conn_id, 300);
+            assert_eq!(counts.ingest, 0, "conn {conn_id}");
+            assert_eq!(counts.encode, 100, "conn {conn_id}");
+            assert_eq!(counts.nearest, 100, "conn {conn_id}");
+            assert_eq!(counts.distortion, 100, "conn {conn_id}");
+        }
+    }
+
+    #[test]
+    fn ingest_frac_mix_matches_its_probability() {
+        // Without read_only, ingest_frac = 1.0 is all writes…
+        let mut spec = LoadSpec::default();
+        spec.ingest_frac = 1.0;
+        let counts = tally_ops(&spec, 0, 200);
+        assert_eq!(counts.ingest, 200);
+        assert_eq!(counts.encode + counts.nearest + counts.distortion, 0);
+
+        // …0.0 is all reads…
+        spec.ingest_frac = 0.0;
+        let counts = tally_ops(&spec, 0, 300);
+        assert_eq!(counts.ingest, 0);
+        assert_eq!(counts.encode + counts.nearest + counts.distortion, 300);
+
+        // …and 0.25 lands near a quarter (deterministic seed, loose
+        // binomial bound), with the remainder split ~evenly across the
+        // three read kinds.
+        spec.ingest_frac = 0.25;
+        let n = 4_000u64;
+        let counts = tally_ops(&spec, 0, n as usize);
+        let ingest_share = counts.ingest as f64 / n as f64;
+        assert!(
+            (ingest_share - 0.25).abs() < 0.05,
+            "ingest share {ingest_share}"
+        );
+        let reads = [counts.encode, counts.nearest, counts.distortion];
+        let total_reads: u64 = reads.iter().sum();
+        assert_eq!(total_reads, n - counts.ingest);
+        for r in reads {
+            // the rotor is exact: read kinds differ by at most one
+            assert!(
+                (r as i64 - (total_reads / 3) as i64).abs() <= 1,
+                "reads {reads:?}"
+            );
+        }
     }
 
     #[test]

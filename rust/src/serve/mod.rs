@@ -46,14 +46,26 @@
 //!   seeded from the checkpointed codebooks at their saved versions
 //!   instead of retraining. The wire protocol's `Checkpoint` op forces a
 //!   flush.
+//! * **Replication** — a service started with `follow: Some(leader)` is
+//!   a **read-only follower**: it warm-starts from the leader's shipped
+//!   checkpoint bundle (the `FetchState` wire op +
+//!   [`crate::persist::ship`]), serves the full read surface from
+//!   epoch-swapped adopted snapshots, answers writes with `NotLeader`,
+//!   and keeps polling for new checkpoint generations — query capacity
+//!   scales out across processes with zero coordination on the write
+//!   path, the paper's asynchronous delayed-exchange argument applied to
+//!   serving.
 //!
-//! `dalvq serve` / `dalvq loadtest` / `dalvq state inspect` / `dalvq
-//! state rebalance` are the CLI entry points; the `serve_e2e`,
-//! `persist_e2e` and `rebalance_e2e` integration tests run the whole
-//! stack in-process.
+//! `dalvq serve` / `dalvq serve --follow` / `dalvq loadtest` / `dalvq
+//! state inspect` / `dalvq state rebalance` are the CLI entry points;
+//! the `serve_e2e`, `persist_e2e`, `rebalance_e2e` and `replication_e2e`
+//! integration tests run the whole stack in-process. `docs/PROTOCOL.md`
+//! is the byte-level wire reference; `docs/ARCHITECTURE.md` the system
+//! overview.
 
 mod client;
 mod loadgen;
+/// The length-prefixed binary wire protocol (see `docs/PROTOCOL.md`).
 pub mod protocol;
 mod router;
 mod server;

@@ -9,6 +9,10 @@
 //! Points always travel as flat row-major `f32` — the same layout the
 //! engines and kernels use, so a server handler can pass a request body to
 //! the VQ math without reshaping.
+//!
+//! The byte-level layout of every frame — opcodes, field order, framing
+//! rules, and version/compatibility notes — is documented in
+//! `docs/PROTOCOL.md`; keep the two in lockstep.
 
 use std::io::{Read, Write};
 
@@ -39,29 +43,131 @@ pub enum Request {
     /// the fleets at a bumped router version. Queries keep answering from
     /// the old epoch until the new one publishes. Errors when the service
     /// runs without a state dir (the checkpointed files are the migration
-    /// source).
-    Rebalance,
+    /// source). With `want_remap`, the ack carries the old→new global-code
+    /// remap so clients holding cached codes can translate them.
+    Rebalance {
+        /// Ask for the old→new code remap in the ack (it is `kappa`
+        /// `u32`s — cheap, but only useful to clients that cache codes).
+        want_remap: bool,
+    },
+    /// Fetch the leader's durable state as one consistent bundle of raw
+    /// checkpoint files, cut at a checkpoint generation. Pass the
+    /// generation already adopted to make the poll cheap: a leader whose
+    /// current generation equals it answers with an empty file list.
+    /// Bootstrap with [`FETCH_ANY_GENERATION`]. Leader-only (a follower
+    /// answers [`Response::NotLeader`]); errors without a state dir.
+    FetchState {
+        /// Generation the requester already holds; any other generation
+        /// on the leader ships the full bundle.
+        have_generation: u64,
+    },
 }
+
+/// `have_generation` sentinel that never matches a real checkpoint
+/// generation, so a bootstrap `FetchState` always ships the full bundle.
+/// (Real generations are manifest-write counters; reaching `u64::MAX`
+/// would take longer than the hardware exists.)
+pub const FETCH_ANY_GENERATION: u64 = u64::MAX;
 
 /// What the service answers.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
-    Codes { version: u64, codes: Vec<u32> },
-    Neighbors { version: u64, indices: Vec<u32>, dists: Vec<f32> },
-    Distortion { version: u64, value: f64 },
-    IngestAck { accepted: u64, shed: u64 },
+    /// `Encode` reply: nearest-prototype global code per point, plus the
+    /// snapshot version that answered.
+    Codes {
+        /// Aggregate snapshot version of the answering epoch.
+        version: u64,
+        /// One global prototype code per query point.
+        codes: Vec<u32>,
+    },
+    /// `Nearest` reply: nearest-centroid index and squared distance per
+    /// point.
+    Neighbors {
+        /// Aggregate snapshot version of the answering epoch.
+        version: u64,
+        /// Nearest global prototype index per point.
+        indices: Vec<u32>,
+        /// Squared distance to that prototype per point.
+        dists: Vec<f32>,
+    },
+    /// `Distortion` reply: normalized empirical distortion of the batch.
+    Distortion {
+        /// Aggregate snapshot version of the answering epoch.
+        version: u64,
+        /// Mean squared quantization error of the batch (paper eq. 2).
+        value: f64,
+    },
+    /// `Ingest` reply: how many points entered worker queues vs were shed.
+    IngestAck {
+        /// Points accepted into worker queues.
+        accepted: u64,
+        /// Points shed (full queues, or a draining epoch).
+        shed: u64,
+    },
+    /// `Stats` reply: service shape + live counters.
     Stats(StatsReply),
     /// Per-shard last-checkpointed versions after a forced flush.
-    CheckpointAck { versions: Vec<u64> },
+    CheckpointAck {
+        /// Last durable version per shard, shard order.
+        versions: Vec<u64>,
+    },
     /// A completed rebalance: the bumped router version, how many
     /// prototype rows changed shard, and the per-shard versions the
     /// migrated fleets resumed at.
     RebalanceAck {
+        /// The bumped partition version now serving.
         router_version: u64,
+        /// Prototype rows that changed shard.
         moved_rows: u64,
+        /// Per-shard versions the migrated fleets resumed at.
         shard_versions: Vec<u64>,
+        /// Old→new global-code remap (`remap[old] = new`); empty unless
+        /// the request set `want_remap`.
+        remap: Vec<u32>,
     },
-    Error { message: String },
+    /// `FetchState` reply: a consistent bundle of checkpoint files.
+    State(StateShipment),
+    /// The addressed server is a read-only follower: ingest, checkpoint,
+    /// rebalance and state-fetch belong on its leader. Distinct from
+    /// `Error` so clients can redirect instead of just failing.
+    NotLeader {
+        /// Address of the leader this follower replicates
+        /// (`host:port`, as configured by `--follow`).
+        leader: String,
+    },
+    /// Request-level failure; the connection stays usable.
+    Error {
+        /// Human-readable failure description.
+        message: String,
+    },
+}
+
+/// The `FetchState` payload: the leader's durable checkpoint files, cut
+/// consistently at one checkpoint generation (see
+/// [`crate::persist::ship`]).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StateShipment {
+    /// Checkpoint generation the bundle was cut at. Equal to the
+    /// request's `have_generation` when nothing changed (then `files` is
+    /// empty).
+    pub generation: u64,
+    /// The leader's *live* summed snapshot version at answer time — what
+    /// a follower measures its `sync_lag_folds` against (the bundle
+    /// itself only carries the last-checkpointed versions).
+    pub leader_version: u64,
+    /// Raw checkpoint files (`manifest.json`, `router.bin`,
+    /// `shard-<s>.state`), byte-identical to the leader's directory.
+    /// Empty when the requester's generation is already current.
+    pub files: Vec<StateFile>,
+}
+
+/// One shipped checkpoint file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StateFile {
+    /// File name inside the state directory (no path separators).
+    pub name: String,
+    /// The file's raw bytes.
+    pub bytes: Vec<u8>,
 }
 
 /// The `Stats` payload: shape + live counters of the service, including
@@ -74,19 +180,26 @@ pub struct StatsReply {
     pub version: u64,
     /// Total prototypes across shards.
     pub kappa: u64,
+    /// Prototype dimension.
     pub dim: u64,
-    /// Total workers across shards.
+    /// Total workers across shards (0 on a follower).
     pub workers: u64,
+    /// Shard count of the serving epoch.
     pub shards: u64,
+    /// Shards probed per query point.
     pub probe_n: u64,
     /// Partition version of the serving router epoch (0 = bootstrap,
     /// bumped by every rebalance).
     pub router_version: u64,
     /// Completed rebalances this process lifetime.
     pub rebalances: u64,
+    /// Fold clock across every shard's reducer.
     pub merges: u64,
+    /// Points accepted into worker queues, service lifetime.
     pub ingested: u64,
+    /// Points shed, service lifetime.
     pub ingest_shed: u64,
+    /// Read requests answered, service lifetime.
     pub queries: u64,
     /// Published snapshot version per shard, shard order.
     pub shard_versions: Vec<u64>,
@@ -101,6 +214,17 @@ pub struct StatsReply {
     pub last_checkpoint: Vec<u64>,
     /// Durable state directory (empty string = no persistence).
     pub state_dir: String,
+    /// Replication role: `"leader"` (default — also what every
+    /// pre-replication deployment is) or `"follower"`.
+    pub role: String,
+    /// Leader address this server replicates (empty on a leader).
+    pub leader_addr: String,
+    /// Follower freshness: the leader's live summed version at the last
+    /// sync poll minus the summed version served here. 0 on a leader.
+    pub sync_lag_folds: u64,
+    /// Milliseconds since the last successful sync poll of the leader
+    /// (0 on a leader).
+    pub last_sync: u64,
 }
 
 // ------------------------------------------------------------ frame I/O
@@ -152,6 +276,7 @@ const OP_INGEST: u8 = 0x04;
 const OP_STATS: u8 = 0x05;
 const OP_CHECKPOINT: u8 = 0x06;
 const OP_REBALANCE: u8 = 0x07;
+const OP_FETCH_STATE: u8 = 0x08;
 
 const OP_CODES: u8 = 0x81;
 const OP_NEIGHBORS: u8 = 0x82;
@@ -160,6 +285,8 @@ const OP_INGEST_ACK: u8 = 0x84;
 const OP_STATS_R: u8 = 0x85;
 const OP_CHECKPOINT_ACK: u8 = 0x86;
 const OP_REBALANCE_ACK: u8 = 0x87;
+const OP_STATE: u8 = 0x88;
+const OP_NOT_LEADER: u8 = 0xFE;
 const OP_ERROR: u8 = 0xFF;
 
 fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
@@ -185,6 +312,11 @@ fn put_u64s(out: &mut Vec<u8>, xs: &[u64]) {
 
 fn put_str(out: &mut Vec<u8>, s: &str) {
     let bytes = s.as_bytes();
+    out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(bytes);
+}
+
+fn put_bytes(out: &mut Vec<u8>, bytes: &[u8]) {
     out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
     out.extend_from_slice(bytes);
 }
@@ -263,6 +395,11 @@ impl<'a> Cursor<'a> {
         Ok(String::from_utf8_lossy(raw).into_owned())
     }
 
+    fn blob(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.bytes(n)?.to_vec())
+    }
+
     fn finish(self) -> Result<()> {
         if self.pos == self.buf.len() {
             Ok(())
@@ -273,6 +410,7 @@ impl<'a> Cursor<'a> {
 }
 
 impl Request {
+    /// Encode this request as one frame payload (opcode + fields).
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
         match self {
@@ -294,11 +432,20 @@ impl Request {
             }
             Request::Stats => out.push(OP_STATS),
             Request::Checkpoint => out.push(OP_CHECKPOINT),
-            Request::Rebalance => out.push(OP_REBALANCE),
+            Request::Rebalance { want_remap } => {
+                out.push(OP_REBALANCE);
+                out.push(*want_remap as u8);
+            }
+            Request::FetchState { have_generation } => {
+                out.push(OP_FETCH_STATE);
+                out.extend_from_slice(&have_generation.to_le_bytes());
+            }
         }
         out
     }
 
+    /// Decode one request payload. Total: any byte string either decodes
+    /// to exactly the request that produced it or errors.
     pub fn decode(payload: &[u8]) -> Result<Self> {
         let mut c = Cursor::new(payload);
         let req = match c.u8()? {
@@ -308,7 +455,10 @@ impl Request {
             OP_INGEST => Request::Ingest { points: c.f32s()? },
             OP_STATS => Request::Stats,
             OP_CHECKPOINT => Request::Checkpoint,
-            OP_REBALANCE => Request::Rebalance,
+            OP_REBALANCE => Request::Rebalance { want_remap: c.u8()? != 0 },
+            OP_FETCH_STATE => {
+                Request::FetchState { have_generation: c.u64()? }
+            }
             op => bail!("unknown request opcode 0x{op:02x}"),
         };
         c.finish()?;
@@ -317,6 +467,7 @@ impl Request {
 }
 
 impl Response {
+    /// Encode this response as one frame payload (opcode + fields).
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
         match self {
@@ -356,6 +507,10 @@ impl Response {
                 put_u64s(&mut out, &s.shard_shed);
                 put_u64s(&mut out, &s.last_checkpoint);
                 put_str(&mut out, &s.state_dir);
+                put_str(&mut out, &s.role);
+                put_str(&mut out, &s.leader_addr);
+                out.extend_from_slice(&s.sync_lag_folds.to_le_bytes());
+                out.extend_from_slice(&s.last_sync.to_le_bytes());
             }
             Response::CheckpointAck { versions } => {
                 out.push(OP_CHECKPOINT_ACK);
@@ -365,11 +520,27 @@ impl Response {
                 router_version,
                 moved_rows,
                 shard_versions,
+                remap,
             } => {
                 out.push(OP_REBALANCE_ACK);
                 out.extend_from_slice(&router_version.to_le_bytes());
                 out.extend_from_slice(&moved_rows.to_le_bytes());
                 put_u64s(&mut out, shard_versions);
+                put_u32s(&mut out, remap);
+            }
+            Response::State(s) => {
+                out.push(OP_STATE);
+                out.extend_from_slice(&s.generation.to_le_bytes());
+                out.extend_from_slice(&s.leader_version.to_le_bytes());
+                out.extend_from_slice(&(s.files.len() as u32).to_le_bytes());
+                for f in &s.files {
+                    put_str(&mut out, &f.name);
+                    put_bytes(&mut out, &f.bytes);
+                }
+            }
+            Response::NotLeader { leader } => {
+                out.push(OP_NOT_LEADER);
+                put_str(&mut out, leader);
             }
             Response::Error { message } => {
                 out.push(OP_ERROR);
@@ -379,6 +550,7 @@ impl Response {
         out
     }
 
+    /// Decode one response payload. Total, like [`Request::decode`].
     pub fn decode(payload: &[u8]) -> Result<Self> {
         let mut c = Cursor::new(payload);
         let resp = match c.u8()? {
@@ -413,6 +585,10 @@ impl Response {
                 shard_shed: c.u64s()?,
                 last_checkpoint: c.u64s()?,
                 state_dir: c.str()?,
+                role: c.str()?,
+                leader_addr: c.str()?,
+                sync_lag_folds: c.u64()?,
+                last_sync: c.u64()?,
             }),
             OP_CHECKPOINT_ACK => {
                 Response::CheckpointAck { versions: c.u64s()? }
@@ -421,7 +597,26 @@ impl Response {
                 router_version: c.u64()?,
                 moved_rows: c.u64()?,
                 shard_versions: c.u64s()?,
+                remap: c.u32s()?,
             },
+            OP_STATE => {
+                let generation = c.u64()?;
+                let leader_version = c.u64()?;
+                let n = c.u32()? as usize;
+                // Bounded by the frame cap: each entry consumes at least
+                // 8 bytes of payload, so a lying count fails in `bytes`
+                // before any oversized allocation.
+                let mut files = Vec::new();
+                for _ in 0..n {
+                    files.push(StateFile { name: c.str()?, bytes: c.blob()? });
+                }
+                Response::State(StateShipment {
+                    generation,
+                    leader_version,
+                    files,
+                })
+            }
+            OP_NOT_LEADER => Response::NotLeader { leader: c.str()? },
             OP_ERROR => Response::Error { message: c.str()? },
             op => bail!("unknown response opcode 0x{op:02x}"),
         };
@@ -450,7 +645,12 @@ mod tests {
         round_trip_req(Request::Ingest { points: vec![f32::MIN, f32::MAX] });
         round_trip_req(Request::Stats);
         round_trip_req(Request::Checkpoint);
-        round_trip_req(Request::Rebalance);
+        round_trip_req(Request::Rebalance { want_remap: false });
+        round_trip_req(Request::Rebalance { want_remap: true });
+        round_trip_req(Request::FetchState { have_generation: 0 });
+        round_trip_req(Request::FetchState {
+            have_generation: FETCH_ANY_GENERATION,
+        });
     }
 
     #[test]
@@ -482,6 +682,10 @@ mod tests {
             shard_shed: vec![0, 0, 7, 0],
             last_checkpoint: vec![1, 2, 0, 1],
             state_dir: "/var/lib/dalvq/state".into(),
+            role: "follower".into(),
+            leader_addr: "10.0.0.7:7171".into(),
+            sync_lag_folds: 12,
+            last_sync: 480,
         }));
         round_trip_resp(Response::Stats(StatsReply::default()));
         round_trip_resp(Response::CheckpointAck { versions: vec![9, 8, 7] });
@@ -490,11 +694,26 @@ mod tests {
             router_version: 2,
             moved_rows: 5,
             shard_versions: vec![7, 7, 7, 7],
+            remap: vec![3, 2, 1, 0],
         });
         round_trip_resp(Response::RebalanceAck {
             router_version: 1,
             moved_rows: 0,
             shard_versions: vec![],
+            remap: vec![],
+        });
+        round_trip_resp(Response::State(StateShipment {
+            generation: 4,
+            leader_version: 97,
+            files: vec![
+                StateFile { name: "manifest.json".into(), bytes: b"{}".to_vec() },
+                StateFile { name: "router.bin".into(), bytes: vec![0, 1, 255] },
+                StateFile { name: "shard-0.state".into(), bytes: vec![] },
+            ],
+        }));
+        round_trip_resp(Response::State(StateShipment::default()));
+        round_trip_resp(Response::NotLeader {
+            leader: "127.0.0.1:7171".into(),
         });
         round_trip_resp(Response::Error { message: "bad dim".into() });
     }

@@ -87,10 +87,12 @@ impl Router {
         Router { coarse }
     }
 
+    /// Number of coarse cells (= shard count `S`).
     pub fn shards(&self) -> usize {
         self.coarse.kappa()
     }
 
+    /// Dimension of the space the router partitions.
     pub fn dim(&self) -> usize {
         self.coarse.dim()
     }

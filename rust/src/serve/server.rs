@@ -101,7 +101,24 @@ fn serve_connection(stream: TcpStream, service: &VqService) -> Result<()> {
 
 /// Dispatch one request through the service's routed query/ingest surface
 /// (multi-probe over the shard fleets happens inside [`VqService`]).
+///
+/// On a follower, every leader-only op — writes (`Ingest`,
+/// `Checkpoint`, `Rebalance`) and state shipping (`FetchState`) —
+/// answers `NotLeader` with the leader's address, so a client can
+/// redirect instead of parsing an error string. The read surface is
+/// identical on both roles.
 fn handle(service: &VqService, req: Request) -> Response {
+    if matches!(
+        req,
+        Request::Ingest { .. }
+            | Request::Checkpoint
+            | Request::Rebalance { .. }
+            | Request::FetchState { .. }
+    ) {
+        if let Some(leader) = service.follower_of() {
+            return Response::NotLeader { leader };
+        }
+    }
     let dim = service.dim();
     let check = |points: &[f32]| -> Option<Response> {
         if points.is_empty() || points.len() % dim != 0 {
@@ -171,6 +188,10 @@ fn handle(service: &VqService, req: Request) -> Response {
                 shard_shed: s.shard_shed,
                 last_checkpoint: s.last_checkpoint,
                 state_dir: s.state_dir.unwrap_or_default(),
+                role: s.role,
+                leader_addr: s.leader_addr.unwrap_or_default(),
+                sync_lag_folds: s.sync_lag_folds,
+                last_sync: s.last_sync_ms,
             })
         }
         Request::Checkpoint => match service.checkpoint_now() {
@@ -180,13 +201,21 @@ fn handle(service: &VqService, req: Request) -> Response {
         // The epoch swap happens entirely inside the service; this
         // connection blocks until the new partition serves, while reads
         // on other connections keep answering from the old epoch.
-        Request::Rebalance => match service.rebalance() {
+        Request::Rebalance { want_remap } => match service.rebalance() {
             Ok(out) => Response::RebalanceAck {
                 router_version: out.router_version,
                 moved_rows: out.moved_rows,
                 shard_versions: out.shard_versions,
+                remap: if want_remap { out.remap } else { Vec::new() },
             },
             Err(e) => Response::Error { message: format!("{e:#}") },
         },
+        // Replication: ship the durable state as one consistent bundle.
+        Request::FetchState { have_generation } => {
+            match service.fetch_state(have_generation) {
+                Ok(shipment) => Response::State(shipment),
+                Err(e) => Response::Error { message: format!("{e:#}") },
+            }
+        }
     }
 }

@@ -28,11 +28,29 @@
 //!
 //! With `shards = 1` the service collapses to the original single-fleet
 //! deployment, bit-for-bit (same seeds, same data order).
+//!
+//! ## Replication
+//!
+//! A service started with `follow: Some(leader_addr)` is a **read-only
+//! follower**: instead of spawning training fleets it restores the
+//! leader's shipped checkpoint bundle into a fleetless epoch, serves the
+//! full read surface from it, and keeps re-syncing — a background thread
+//! polls the leader's `FetchState` op every `sync_every_ms` and
+//! atomically adopts each new checkpoint generation by the same
+//! epoch-swap publication a rebalance uses, so in-flight reads never
+//! drop and a leader rebalance's bumped `router_version` flows through
+//! transparently. Writes (`ingest`/`checkpoint`/`rebalance`) answer
+//! `NotLeader` with the leader's address. This is the paper's final
+//! scheme applied to serving: no inter-machine synchronization, only
+//! asynchronous, delayed state exchange — and Patra's delayed-view
+//! analysis is exactly why a follower lagging `sync_lag_folds` behind
+//! still answers from a valid iterate.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Barrier, Mutex, Weak};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -47,9 +65,15 @@ use crate::persist::{
 };
 use crate::vq::{init_codebook, Codebook};
 
+use super::client::Client;
+use super::protocol::{StateFile, StateShipment, FETCH_ANY_GENERATION};
 use super::router::Router;
 use super::snapshot::{Snapshot, SnapshotStore};
 use super::worker::{run_serve_worker, ServeWorkerOutcome, ServeWorkerParams};
+
+/// Per-attempt connect timeout of a follower's sync poll (bounded so a
+/// dead leader costs one short stall per poll, not a hang).
+const SYNC_CONNECT_TIMEOUT: Duration = Duration::from_secs(1);
 
 /// Live counters, shared between the fleets and the front-end. These are
 /// service-lifetime totals — they survive router-epoch swaps (the
@@ -81,10 +105,13 @@ pub struct ServeStats {
     pub version: u64,
     /// Total prototypes across shards.
     pub kappa: usize,
+    /// Prototype dimension.
     pub dim: usize,
     /// Total workers across all shards.
     pub workers: usize,
+    /// Shard count of the serving epoch.
     pub shards: usize,
+    /// Shards probed per query point.
     pub probe_n: usize,
     /// Partition version of the serving router epoch (0 = bootstrap,
     /// bumped by every rebalance).
@@ -94,8 +121,11 @@ pub struct ServeStats {
     /// Fold clock, all shards (>= version; they differ when reducers
     /// publish every `publish_every` folds).
     pub merges: u64,
+    /// Points accepted into worker queues, service lifetime.
     pub ingested: u64,
+    /// Points shed, service lifetime.
     pub ingest_shed: u64,
+    /// Read requests answered, service lifetime.
     pub queries: u64,
     /// Published snapshot version per shard.
     pub shard_versions: Vec<u64>,
@@ -111,11 +141,21 @@ pub struct ServeStats {
     pub state_dir: Option<String>,
     /// Last checkpointed version per shard (empty without persistence).
     pub last_checkpoint: Vec<u64>,
+    /// Replication role: `"leader"` or `"follower"`.
+    pub role: String,
+    /// Leader address this service replicates (`None` on a leader).
+    pub leader_addr: Option<String>,
+    /// Follower freshness: leader's live version at the last sync poll
+    /// minus the version served here (0 on a leader).
+    pub sync_lag_folds: u64,
+    /// Milliseconds since the last successful sync poll (0 on a leader).
+    pub last_sync_ms: u64,
 }
 
 /// What one shard's fleet reports at shutdown.
 #[derive(Debug)]
 pub struct ShardOutcome {
+    /// Shard index within the epoch.
     pub shard: usize,
     /// The shard reducer's fold clock at join (includes any restored or
     /// migrated base).
@@ -135,6 +175,7 @@ pub struct ServeOutcome {
     /// (row `s * kappa/S + j` is shard `s`'s prototype `j`, matching the
     /// global codes queries return).
     pub final_shared: Codebook,
+    /// Per-shard outcomes, shard order.
     pub shards: Vec<ShardOutcome>,
 }
 
@@ -147,6 +188,9 @@ pub struct RebalanceOutcome {
     pub moved_rows: u64,
     /// Per-shard versions the migrated fleets resumed at.
     pub shard_versions: Vec<u64>,
+    /// Old→new global-code remap (`remap[old] = new`): clients holding
+    /// codes from the previous epoch translate through this table.
+    pub remap: Vec<u32>,
 }
 
 /// One shard's training fleet handles — taken exactly once at quiesce.
@@ -241,6 +285,31 @@ pub struct VqService {
     lifecycle: Mutex<()>,
     /// The skew monitor thread, when auto-rebalance is configured.
     monitor: Mutex<Option<JoinHandle<()>>>,
+    /// The checkpoint-generation clock of the state dir: mirrors the
+    /// generation the on-disk manifest currently carries. Shared with
+    /// the checkpointer (which bumps it on every manifest write) and
+    /// re-seeded by rebalances; what `FetchState` pollers compare.
+    state_generation: Arc<AtomicU64>,
+    /// Follower-mode state (`None` on a leader).
+    follower: Option<FollowerCtl>,
+}
+
+/// Everything follower-specific: who the leader is, the sync cadence,
+/// and the freshness the sync loop publishes for `Stats`.
+struct FollowerCtl {
+    /// `host:port` of the leader (the `--follow` value, verbatim — also
+    /// what `NotLeader` redirects clients to).
+    leader_addr: String,
+    /// Pause between sync polls.
+    sync_every: Duration,
+    /// Leader's live version at the last poll minus the version served
+    /// here (what `ServeStats::sync_lag_folds` reports).
+    lag_folds: AtomicU64,
+    /// When the last successful poll completed.
+    last_sync: Mutex<Instant>,
+    /// The sync-loop thread; taken at shutdown (an empty slot after
+    /// `start` means the service was already shut down).
+    thread: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl VqService {
@@ -249,12 +318,21 @@ impl VqService {
     /// ready barrier, so the first query already sees a live system.
     /// Returns an `Arc` because the service is inherently shared: the
     /// skew monitor (when `rebalance_skew` is set) holds a weak handle.
+    ///
+    /// With `serve.follow` set this instead starts a **read-only
+    /// follower**: no fleets are spawned — the initial epoch is restored
+    /// from the leader's shipped checkpoint bundle (so the leader must
+    /// be up and running with a `--state-dir`), and a sync thread keeps
+    /// adopting new checkpoint generations.
     pub fn start(
         cfg: &ExperimentConfig,
         serve: &ServeConfig,
     ) -> Result<Arc<VqService>> {
         cfg.validate()?;
         serve.validate(cfg)?;
+        if serve.follow.is_some() {
+            return Self::start_follower(cfg, serve);
+        }
 
         let dim = cfg.dim();
         let s_count = serve.shards;
@@ -333,12 +411,25 @@ impl VqService {
                 })
                 .collect(),
         );
+        // The generation clock resumes from what the manifest on disk
+        // carries (0 on a cold start — written just below), so pollers
+        // see a strictly advancing sequence across restarts.
+        let state_generation = Arc::new(AtomicU64::new(
+            restored.as_ref().map_or(0, |r| r.manifest.generation),
+        ));
         let checkpointer = match &serve.state_dir {
             Some(dir) => {
                 if restored.is_none() {
-                    write_initial_state(dir, &epoch, cfg, serve)?;
+                    write_initial_state(dir, &epoch, cfg, serve, 0)?;
                 }
-                Some(spawn_checkpointer(dir, &epoch, &last_checkpoint, cfg, serve))
+                Some(spawn_checkpointer(
+                    dir,
+                    &epoch,
+                    &last_checkpoint,
+                    &state_generation,
+                    cfg,
+                    serve,
+                ))
             }
             None => None,
         };
@@ -359,6 +450,8 @@ impl VqService {
             checkpointer: Mutex::new(checkpointer),
             lifecycle: Mutex::new(()),
             monitor: Mutex::new(None),
+            state_generation,
+            follower: None,
         });
         if serve.rebalance_skew > 0.0 {
             let handle = spawn_monitor(&service);
@@ -367,12 +460,232 @@ impl VqService {
         Ok(service)
     }
 
+    /// Start a read-only follower of the leader at `serve.follow`:
+    /// bootstrap-fetch the leader's full checkpoint bundle, adopt it as
+    /// the serving epoch (no fleets — the stores hold the shipped
+    /// codebooks verbatim), optionally mirror it into this process's own
+    /// `state_dir`, and spawn the sync loop. The deployment **shape**
+    /// (shards, kappa, dim) comes from the leader's manifest, not from
+    /// the local config — a follower serves whatever its leader serves.
+    fn start_follower(
+        cfg: &ExperimentConfig,
+        serve: &ServeConfig,
+    ) -> Result<Arc<VqService>> {
+        let leader_addr = serve
+            .follow
+            .clone()
+            .expect("start_follower requires serve.follow");
+        let mut client =
+            Client::connect_with(leader_addr.as_str(), SYNC_CONNECT_TIMEOUT, 2)
+                .with_context(|| {
+                    format!("follower bootstrap: reaching leader {leader_addr}")
+                })?;
+        let ship = client
+            .fetch_state(FETCH_ANY_GENERATION)
+            .with_context(|| {
+                format!(
+                    "follower bootstrap: fetching state from {leader_addr} \
+                     (is the leader running with --state-dir?)"
+                )
+            })?;
+        let files = shipped_files(ship.files);
+        let restored = persist::decode_bundle(&files)
+            .context("follower bootstrap: decoding the shipped bundle")?;
+        if let Some(dir) = &serve.state_dir {
+            persist::write_bundle(dir, &files).with_context(|| {
+                format!("mirroring the bundle into {}", dir.display())
+            })?;
+        }
+        let m = restored.manifest.clone();
+        let counters = Arc::new(ServeCounters::default());
+        let epoch = follower_epoch(&restored);
+        let adopted: u64 = restored.shards.iter().map(|s| s.version).sum();
+        counters.merges.store(adopted, Ordering::Relaxed);
+        let last_checkpoint: Arc<Vec<AtomicU64>> = Arc::new(
+            restored
+                .shards
+                .iter()
+                .map(|s| AtomicU64::new(s.version))
+                .collect(),
+        );
+        let service = Arc::new(VqService {
+            cfg: cfg.clone(),
+            serve: serve.clone(),
+            epoch: Mutex::new(Arc::new(epoch)),
+            counters,
+            dim: m.dim,
+            kappa: m.kappa,
+            kappa_shard: m.kappa / m.shards,
+            workers_per_shard: 0,
+            // Manifest validation guarantees shards >= 1, so the clamp
+            // bounds are always ordered.
+            probe_n: serve.probe_n.clamp(1, m.shards),
+            closing: Arc::new(AtomicBool::new(false)),
+            state_dir: serve.state_dir.clone(),
+            last_checkpoint,
+            checkpointer: Mutex::new(None),
+            lifecycle: Mutex::new(()),
+            monitor: Mutex::new(None),
+            state_generation: Arc::new(AtomicU64::new(ship.generation)),
+            follower: Some(FollowerCtl {
+                leader_addr,
+                sync_every: Duration::from_millis(serve.sync_every_ms.max(1)),
+                lag_folds: AtomicU64::new(
+                    ship.leader_version.saturating_sub(adopted),
+                ),
+                last_sync: Mutex::new(Instant::now()),
+                thread: Mutex::new(None),
+            }),
+        });
+        let follower = service.follower.as_ref().expect("just constructed");
+        *follower.thread.lock().unwrap_or_else(|e| e.into_inner()) =
+            Some(spawn_follower_sync(&service));
+        Ok(service)
+    }
+
+    /// One follower sync poll: ask the leader for anything newer than
+    /// the adopted generation; on a new bundle, validate it, optionally
+    /// mirror it to the local state dir, build a fresh fleetless epoch
+    /// and swap it in — in-flight reads keep their epoch, new reads see
+    /// the new one, exactly the rebalance publication discipline.
+    /// Returns `true` when a new generation was adopted.
+    fn sync_once(&self) -> Result<bool> {
+        let f = self
+            .follower
+            .as_ref()
+            .ok_or_else(|| anyhow!("sync_once on a leader"))?;
+        let mut client = Client::connect_with(
+            f.leader_addr.as_str(),
+            SYNC_CONNECT_TIMEOUT,
+            0,
+        )?;
+        // On a follower, `state_generation` IS the adopted generation
+        // (there is no local checkpointer writing to it).
+        let have = self.state_generation.load(Ordering::Acquire);
+        let ship = client.fetch_state(have)?;
+        if ship.files.is_empty() {
+            // Nothing new checkpointed; the poll still refreshes lag
+            // (the leader's live version advanced under us).
+            f.lag_folds.store(
+                ship.leader_version.saturating_sub(self.version()),
+                Ordering::Release,
+            );
+            *f.last_sync.lock().unwrap_or_else(|e| e.into_inner()) = Instant::now();
+            return Ok(false);
+        }
+        let files = shipped_files(ship.files);
+        let restored = persist::decode_bundle(&files)
+            .context("decoding the leader's shipped bundle")?;
+        let m = &restored.manifest;
+        if m.kappa != self.kappa || m.dim != self.dim {
+            bail!(
+                "leader now ships kappa={} dim={} but this follower adopted \
+                 kappa={} dim={} at bootstrap — the leader was redeployed \
+                 with a different shape; restart the follower",
+                m.kappa,
+                m.dim,
+                self.kappa,
+                self.dim
+            );
+        }
+        if m.shards != self.kappa / self.kappa_shard {
+            bail!(
+                "leader now ships {} shards but this follower adopted {} — \
+                 restart the follower",
+                m.shards,
+                self.kappa / self.kappa_shard
+            );
+        }
+        if let Some(dir) = &self.state_dir {
+            persist::write_bundle(dir, &files).with_context(|| {
+                format!("mirroring the bundle into {}", dir.display())
+            })?;
+        }
+        let epoch = follower_epoch(&restored);
+        let adopted: u64 = restored.shards.iter().map(|s| s.version).sum();
+        for (s, st) in restored.shards.iter().enumerate() {
+            self.last_checkpoint[s].store(st.version, Ordering::Release);
+        }
+        *self.epoch.lock().unwrap_or_else(|e| e.into_inner()) = Arc::new(epoch);
+        // The fold clock mirrors the adopted versions (max: a bundle
+        // re-shipping an old generation after a leader restore must not
+        // run the clock backwards).
+        self.counters.merges.fetch_max(adopted, Ordering::AcqRel);
+        self.state_generation.store(ship.generation, Ordering::Release);
+        f.lag_folds.store(
+            ship.leader_version.saturating_sub(adopted),
+            Ordering::Release,
+        );
+        *f.last_sync.lock().unwrap_or_else(|e| e.into_inner()) = Instant::now();
+        Ok(true)
+    }
+
+    /// `Some(leader address)` when this service is a read-only follower
+    /// — what the front-end turns into `NotLeader` redirects.
+    pub fn follower_of(&self) -> Option<String> {
+        self.follower.as_ref().map(|f| f.leader_addr.clone())
+    }
+
+    /// Ship the durable state as one consistent bundle, cut at a
+    /// checkpoint generation (the `FetchState` wire op lands here).
+    /// `have_generation` makes polling cheap: when it matches the
+    /// current generation the shipment carries no files. Leader-only;
+    /// errors without durable state (there is nothing to ship).
+    pub fn fetch_state(&self, have_generation: u64) -> Result<StateShipment> {
+        if let Some(f) = &self.follower {
+            bail!(
+                "this server is a read-only follower; fetch state from the \
+                 leader at {}",
+                f.leader_addr
+            );
+        }
+        let dir = self.state_dir.as_ref().ok_or_else(|| {
+            anyhow!(
+                "state shipping needs durable state (start the leader with \
+                 --state-dir)"
+            )
+        })?;
+        let leader_version = self.version();
+        // Fast path for the common poll: a requester can only hold a
+        // generation that actually reached the disk, and the in-memory
+        // clock only equals such a value when the disk still carries it
+        // (a failed manifest save leaves the clock strictly ahead). So
+        // equality here means "nothing new" without touching any file.
+        if have_generation == self.state_generation.load(Ordering::Acquire) {
+            return Ok(StateShipment {
+                generation: have_generation,
+                leader_version,
+                files: Vec::new(),
+            });
+        }
+        let bundle = persist::read_bundle(dir)?.ok_or_else(|| {
+            anyhow!("{} holds no checkpointed state yet", dir.display())
+        })?;
+        if bundle.generation == have_generation {
+            return Ok(StateShipment {
+                generation: bundle.generation,
+                leader_version,
+                files: Vec::new(),
+            });
+        }
+        Ok(StateShipment {
+            generation: bundle.generation,
+            leader_version,
+            files: bundle
+                .files
+                .into_iter()
+                .map(|(name, bytes)| StateFile { name, bytes })
+                .collect(),
+        })
+    }
+
     /// The serving epoch — one consistent (router, fleets) pair. O(1)
     /// `Arc` clone, same discipline as [`SnapshotStore::load`].
     fn current(&self) -> Arc<Epoch> {
         Arc::clone(&self.epoch.lock().unwrap_or_else(|e| e.into_inner()))
     }
 
+    /// Prototype dimension every query batch must be a multiple of.
     pub fn dim(&self) -> usize {
         self.dim
     }
@@ -382,10 +695,15 @@ impl VqService {
         self.kappa
     }
 
+    /// Shard count of the serving epoch. On a leader this is the
+    /// configured `shards`; on a follower it is whatever the leader's
+    /// manifest shipped (the local config's shard count is ignored).
     pub fn shards(&self) -> usize {
-        self.serve.shards
+        self.current().shards.len()
     }
 
+    /// Shards probed per query point (clamped to the adopted shard
+    /// count on a follower).
     pub fn probe_n(&self) -> usize {
         self.probe_n
     }
@@ -454,6 +772,8 @@ impl VqService {
         self.current().shards.iter().map(|s| s.store.version()).collect()
     }
 
+    /// The live service-lifetime counters (shared with the front-end,
+    /// which maintains `queries`).
     pub fn counters(&self) -> &Arc<ServeCounters> {
         &self.counters
     }
@@ -478,6 +798,13 @@ impl VqService {
     /// one; blocks until the files are durable. Returns the per-shard
     /// checkpointed versions (the protocol's `Checkpoint` op lands here).
     pub fn checkpoint_now(&self) -> Result<Vec<u64>> {
+        if let Some(f) = &self.follower {
+            return Err(anyhow!(
+                "this server is a read-only follower; checkpoints belong on \
+                 the leader at {}",
+                f.leader_addr
+            ));
+        }
         if self.state_dir.is_none() {
             return Err(anyhow!(
                 "service has no durable state (started without --state-dir)"
@@ -511,6 +838,14 @@ impl VqService {
     /// as a full queue). Requires durable state — the checkpointed files,
     /// not any live fleet, are the migration source.
     pub fn rebalance(&self) -> Result<RebalanceOutcome> {
+        if let Some(f) = &self.follower {
+            bail!(
+                "this server is a read-only follower; rebalances belong on \
+                 the leader at {} (the bumped epoch replicates here on the \
+                 next sync)",
+                f.leader_addr
+            );
+        }
         let _lifecycle = self.lifecycle.lock().unwrap_or_else(|e| e.into_inner());
         if self.closing.load(Ordering::Acquire) {
             bail!("service is shutting down");
@@ -616,12 +951,18 @@ impl VqService {
             new_version_sum.saturating_sub(old_version_sum),
             Ordering::Relaxed,
         );
+        // The offline migration bumped the manifest's generation on
+        // disk; re-seed the shared clock so the new epoch's checkpointer
+        // continues the sequence and pollers see the migration.
+        self.state_generation
+            .store(restored.manifest.generation, Ordering::Release);
         self.publish_epoch(&dir, epoch);
         self.counters.rebalances.fetch_add(1, Ordering::Relaxed);
         Ok(RebalanceOutcome {
             router_version: report.router_version,
             moved_rows: report.moved_rows as u64,
             shard_versions,
+            remap: report.remap,
         })
     }
 
@@ -661,8 +1002,24 @@ impl VqService {
             false,
         )
         .context("reviving the previous partition after a failed rebalance")?;
+        // The heal rewrites the directory, so it is a generation bump
+        // like any other write — and it must advance past anything a
+        // poller could already have fetched. The aborted migration may
+        // have published its bumped generation on disk (the migrated
+        // manifest lands before the failure), which the in-memory clock
+        // has not seen; healing at that same number would make a
+        // follower that adopted the migrated bundle believe it is
+        // current and keep serving the rolled-back partition forever.
+        let disk_generation = Manifest::load(dir)
+            .ok()
+            .flatten()
+            .map_or(0, |m| m.generation);
+        let generation = disk_generation
+            .max(self.state_generation.load(Ordering::Acquire))
+            + 1;
+        self.state_generation.store(generation, Ordering::Release);
         if let Err(heal) =
-            write_initial_state(dir, &epoch, &self.cfg, &self.serve)
+            write_initial_state(dir, &epoch, &self.cfg, &self.serve, generation)
         {
             eprintln!(
                 "dalvq rebalance: healing the state dir back to the \
@@ -688,6 +1045,7 @@ impl VqService {
             dir,
             &epoch,
             &self.last_checkpoint,
+            &self.state_generation,
             &self.cfg,
             &self.serve,
         );
@@ -773,6 +1131,13 @@ impl VqService {
     /// rebalance is shed the same way. Returns `(accepted, shed)` point
     /// counts.
     pub fn ingest(&self, points: &[f32]) -> Result<(u64, u64)> {
+        if let Some(f) = &self.follower {
+            return Err(anyhow!(
+                "this server is a read-only follower; ingest belongs on the \
+                 leader at {}",
+                f.leader_addr
+            ));
+        }
         if points.is_empty() {
             return Ok((0, 0));
         }
@@ -879,6 +1244,22 @@ impl VqService {
                 .as_ref()
                 .map(|d| d.display().to_string()),
             last_checkpoint: self.last_checkpoint(),
+            role: match &self.follower {
+                Some(_) => "follower".into(),
+                None => "leader".into(),
+            },
+            leader_addr: self.follower.as_ref().map(|f| f.leader_addr.clone()),
+            sync_lag_folds: self
+                .follower
+                .as_ref()
+                .map_or(0, |f| f.lag_folds.load(Ordering::Acquire)),
+            last_sync_ms: self.follower.as_ref().map_or(0, |f| {
+                f.last_sync
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .elapsed()
+                    .as_millis() as u64
+            }),
         }
     }
 
@@ -893,6 +1274,42 @@ impl VqService {
     /// is an error.
     pub fn shutdown(&self) -> Result<ServeOutcome> {
         self.closing.store(true, Ordering::Release);
+        // Follower: there are no fleets or checkpointer to drain — join
+        // the sync loop and report the final adopted epoch. The read
+        // path stays up afterwards, same as a quiesced leader.
+        if let Some(f) = &self.follower {
+            let handle = f
+                .thread
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .take()
+                .ok_or_else(|| anyhow!("service already shut down"))?;
+            let _ = handle.join();
+            let ep = self.current();
+            let mut global_flat = Vec::with_capacity(self.kappa * self.dim);
+            let mut merges = 0u64;
+            let mut shards = Vec::with_capacity(ep.shards.len());
+            for (s, fleet) in ep.shards.iter().enumerate() {
+                let snap = fleet.store.load();
+                merges += snap.version;
+                global_flat.extend_from_slice(snap.codebook.flat());
+                shards.push(ShardOutcome {
+                    shard: s,
+                    merges: snap.version,
+                    final_shared: snap.codebook.clone(),
+                });
+            }
+            return Ok(ServeOutcome {
+                workers: Vec::new(),
+                merges,
+                final_shared: Codebook::from_flat(
+                    self.kappa,
+                    self.dim,
+                    global_flat,
+                ),
+                shards,
+            });
+        }
         // The monitor exits on `closing`; if it is mid-rebalance, the
         // lifecycle lock below also serializes us behind it.
         if let Some(j) = self
@@ -1199,11 +1616,13 @@ fn seeds_from_epoch(ep: &Epoch, serve: &ServeConfig, m: usize) -> Vec<ShardSeed>
 }
 
 /// Hand an epoch's shard stores and counters to a fresh background
-/// checkpointer stamped with the epoch's partition version.
+/// checkpointer stamped with the epoch's partition version; its manifest
+/// writes bump the shared `generation` clock.
 fn spawn_checkpointer(
     dir: &Path,
     epoch: &Epoch,
     last_checkpoint: &Arc<Vec<AtomicU64>>,
+    generation: &Arc<AtomicU64>,
     cfg: &ExperimentConfig,
     serve: &ServeConfig,
 ) -> Checkpointer {
@@ -1215,6 +1634,7 @@ fn spawn_checkpointer(
             kappa: cfg.vq.kappa,
             dim: cfg.dim(),
             router_version: epoch.router_version,
+            generation: Arc::clone(generation),
         },
         epoch
             .shards
@@ -1342,15 +1762,17 @@ fn load_restore(
 }
 
 /// Write an epoch's full durable image: router + every shard's current
-/// state + manifest. Used for the cold-start bootstrap (the directory
-/// must be restorable before the first fold — a service killed seconds
-/// after start must still warm-restart cleanly) and to heal the state
-/// dir back to a revived partition after a failed rebalance.
+/// state + manifest (stamped `generation`). Used for the cold-start
+/// bootstrap (the directory must be restorable before the first fold —
+/// a service killed seconds after start must still warm-restart cleanly)
+/// and to heal the state dir back to a revived partition after a failed
+/// rebalance.
 fn write_initial_state(
     dir: &Path,
     epoch: &Epoch,
     cfg: &ExperimentConfig,
     serve: &ServeConfig,
+    generation: u64,
 ) -> Result<()> {
     let router_state = RouterState {
         version: epoch.router_version,
@@ -1383,9 +1805,93 @@ fn write_initial_state(
         dim: cfg.dim(),
         points_per_exchange: serve.points_per_exchange,
         router_version: epoch.router_version,
+        generation,
         shard_versions: versions,
     }
     .save(dir)
+}
+
+/// Shipped files in the `(name, bytes)` shape the persist layer's
+/// bundle codec takes — by move, so a bundle near the frame cap is
+/// never copied on adoption.
+fn shipped_files(files: Vec<StateFile>) -> Vec<(String, Vec<u8>)> {
+    files.into_iter().map(|f| (f.name, f.bytes)).collect()
+}
+
+/// Build a fleetless epoch out of restored (shipped) state: the shard
+/// stores hold the shipped codebooks verbatim at their shipped versions,
+/// ingest channels are empty (the service-level follower guard answers
+/// writes before routing ever looks here), and there is no fleet to
+/// quiesce. The read path cannot tell it from a trained epoch.
+fn follower_epoch(restored: &RestoredState) -> Epoch {
+    let router = Router::from_centroids(restored.router.centroids.clone());
+    let shards = restored
+        .shards
+        .iter()
+        .map(|st| ShardFleet {
+            store: SnapshotStore::with_version(st.codebook.clone(), st.version),
+            merges: Arc::new(AtomicU64::new(st.version)),
+            // A follower's per-epoch load counters are its own (always
+            // zero — it never ingests); the leader's are visible via the
+            // leader's Stats, not echoed here.
+            ingested: Arc::new(AtomicU64::new(0)),
+            shed: Arc::new(AtomicU64::new(0)),
+            ingest_txs: Mutex::new(Vec::new()),
+            ingest_cursor: AtomicUsize::new(0),
+            fleet: Mutex::new(None),
+        })
+        .collect();
+    Epoch {
+        router,
+        router_version: restored.manifest.router_version,
+        shards,
+        stop: Arc::new(AtomicBool::new(false)),
+        go: Arc::new(AtomicBool::new(true)),
+        base_versions: restored.shards.iter().map(|s| s.version).collect(),
+    }
+}
+
+/// The follower sync loop: a background thread that polls the leader
+/// every `sync_every` and adopts new checkpoint generations. Holds only
+/// a `Weak` handle (like the skew monitor) and exits on `closing`. A
+/// failed poll — leader briefly down, a racing migration — logs and
+/// retries on the next tick; the follower keeps serving its current
+/// epoch throughout, which is the whole point of asynchronous, delayed
+/// state exchange.
+fn spawn_follower_sync(service: &Arc<VqService>) -> JoinHandle<()> {
+    let weak: Weak<VqService> = Arc::downgrade(service);
+    let sync_every = service
+        .follower
+        .as_ref()
+        .expect("spawn_follower_sync on a leader")
+        .sync_every;
+    std::thread::Builder::new()
+        .name("dalvq-follower-sync".into())
+        .spawn(move || loop {
+            // Sleep in short slices so shutdown never waits a full
+            // sync interval for the join.
+            let wake = Instant::now() + sync_every;
+            while Instant::now() < wake {
+                std::thread::sleep(Duration::from_millis(10).min(sync_every));
+                match weak.upgrade() {
+                    Some(svc) if !svc.closing.load(Ordering::Acquire) => {}
+                    _ => return,
+                }
+            }
+            let Some(svc) = weak.upgrade() else { return };
+            if svc.closing.load(Ordering::Acquire) {
+                return;
+            }
+            if let Err(e) = svc.sync_once() {
+                if !svc.closing.load(Ordering::Acquire) {
+                    eprintln!(
+                        "dalvq follower: sync with the leader failed (still \
+                         serving the last adopted epoch; will retry): {e:#}"
+                    );
+                }
+            }
+        })
+        .expect("spawning follower sync thread")
 }
 
 /// Pad a shard's bootstrap region up to `min_pts` points: cycle the
@@ -1631,6 +2137,71 @@ mod tests {
         let state = persist::load_state(&dir).unwrap().unwrap();
         assert_eq!(state.manifest.router_version, 1);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn follower_epoch_serves_restored_state_verbatim() {
+        // A fleetless epoch built from restored state must expose the
+        // shipped codebooks at the shipped versions under the shipped
+        // router — the read path cannot tell it from a trained epoch.
+        let restored = RestoredState {
+            manifest: Manifest {
+                format: persist::FORMAT,
+                shards: 2,
+                kappa: 4,
+                dim: 2,
+                points_per_exchange: 50,
+                router_version: 3,
+                generation: 12,
+                shard_versions: vec![8, 9],
+            },
+            router: RouterState {
+                version: 3,
+                centroids: Codebook::from_flat(
+                    2,
+                    2,
+                    vec![-5.0, -5.0, 5.0, 5.0],
+                ),
+            },
+            shards: vec![
+                ShardState {
+                    shard: 0,
+                    version: 8,
+                    merges: 8,
+                    rng_cursor: 400,
+                    ingested: 100,
+                    shed: 0,
+                    router_version: 3,
+                    codebook: Codebook::from_flat(2, 2, vec![-5.0; 4]),
+                },
+                ShardState {
+                    shard: 1,
+                    version: 9,
+                    merges: 9,
+                    rng_cursor: 450,
+                    ingested: 50,
+                    shed: 2,
+                    router_version: 3,
+                    codebook: Codebook::from_flat(2, 2, vec![5.0; 4]),
+                },
+            ],
+        };
+        let ep = follower_epoch(&restored);
+        assert_eq!(ep.router_version, 3);
+        assert_eq!(ep.shards.len(), 2);
+        assert_eq!(ep.base_versions, vec![8, 9]);
+        for (s, fleet) in ep.shards.iter().enumerate() {
+            let snap = fleet.store.load();
+            assert_eq!(snap.version, restored.shards[s].version);
+            assert_eq!(
+                snap.codebook.flat(),
+                restored.shards[s].codebook.flat()
+            );
+            // a follower's own load counters start at zero
+            assert_eq!(fleet.ingested.load(Ordering::Relaxed), 0);
+            assert!(fleet.ingest_txs.lock().unwrap().is_empty());
+            assert!(fleet.fleet.lock().unwrap().is_none());
+        }
     }
 
     #[test]

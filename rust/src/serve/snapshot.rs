@@ -16,6 +16,7 @@ use crate::vq::{self, Codebook};
 /// One immutable published state of the service.
 #[derive(Debug)]
 pub struct Snapshot {
+    /// The published codebook, immutable for this snapshot's lifetime.
     pub codebook: Codebook,
     /// Reducer fold count at publication (0 = the initial codebook).
     pub version: u64,
@@ -75,6 +76,7 @@ pub struct SnapshotStore {
 }
 
 impl SnapshotStore {
+    /// A store whose initial epoch is `w0` at version 0 (a cold start).
     pub fn new(w0: Codebook) -> Arc<Self> {
         Self::with_version(w0, 0)
     }

@@ -28,11 +28,15 @@ use crate::vq::{Codebook, Delta, Schedule};
 
 /// Static parameters of one serving worker.
 pub struct ServeWorkerParams {
+    /// Fleet-global worker id (shard * M + local index).
     pub worker_id: usize,
     /// Seed corpus; becomes the sliding window.
     pub shard: Shard,
+    /// Initial codebook the worker trains from.
     pub w0: Codebook,
+    /// Learning-rate schedule.
     pub schedule: Schedule,
+    /// Points per VQ step batch (the scheme's tau).
     pub tau: usize,
     /// Points between exchange attempts (a multiple of tau).
     pub points_per_exchange: usize,
@@ -41,8 +45,11 @@ pub struct ServeWorkerParams {
     /// Max ingested points absorbed into the window per chunk boundary
     /// (keeps training and absorption interleaved under ingest bursts).
     pub absorb_per_chunk: usize,
+    /// Engine the worker builds for its VQ math.
     pub engine_spec: EngineSpec,
+    /// Start barrier every worker passes once its engine is built.
     pub ready: Arc<Barrier>,
+    /// The owning epoch's stop flag.
     pub stop: Arc<AtomicBool>,
     /// Training gate: the worker idles (absorbing nothing, training
     /// nothing) until this flips. Lets the service preload ingest queues
@@ -69,12 +76,17 @@ pub struct ServeWorkerParams {
 /// What a serving worker reports at shutdown.
 #[derive(Debug, Clone)]
 pub struct ServeWorkerOutcome {
+    /// Fleet-global worker id.
     pub worker_id: usize,
+    /// Points this worker trained on.
     pub points_trained: u64,
     /// Ingested points absorbed into the sliding window.
     pub points_absorbed: u64,
+    /// Delta uploads attempted.
     pub exchanges_started: u64,
+    /// Delta uploads acknowledged by the reducer path.
     pub exchanges_completed: u64,
+    /// Delta uploads lost to injected faults.
     pub pushes_dropped: u64,
 }
 

@@ -12,7 +12,8 @@
 //!   trailing garbage, and `read_frame` against mid-frame EOF.
 
 use dalvq::serve::protocol::{
-    read_frame, write_frame, Request, Response, StatsReply, MAX_FRAME,
+    read_frame, write_frame, Request, Response, StateFile, StateShipment,
+    StatsReply, MAX_FRAME,
 };
 use dalvq::util::Rng;
 
@@ -47,24 +48,45 @@ fn rand_string(rng: &mut Rng, max_len: usize) -> String {
     (0..len).map(|_| (b'a' + rng.usize(26) as u8) as char).collect()
 }
 
+fn rand_bytes(rng: &mut Rng, max_len: usize) -> Vec<u8> {
+    let n = rng.usize(max_len + 1);
+    (0..n).map(|_| rng.next_u64() as u8).collect()
+}
+
 fn rand_request(rng: &mut Rng) -> Request {
-    match rng.usize(7) {
+    match rng.usize(8) {
         0 => Request::Encode { points: rand_f32s(rng, 64) },
         1 => Request::Nearest { points: rand_f32s(rng, 64) },
         2 => Request::Distortion { points: rand_f32s(rng, 64) },
         3 => Request::Ingest { points: rand_f32s(rng, 64) },
         4 => Request::Checkpoint,
-        5 => Request::Rebalance,
+        5 => Request::Rebalance { want_remap: rng.bool(0.5) },
+        6 => Request::FetchState { have_generation: rng.next_u64() },
         _ => Request::Stats,
     }
 }
 
 fn rand_response(rng: &mut Rng) -> Response {
-    match rng.usize(8) {
+    match rng.usize(10) {
+        9 => Response::State(StateShipment {
+            generation: rng.next_u64(),
+            leader_version: rng.next_u64(),
+            files: {
+                let n = rng.usize(5);
+                (0..n)
+                    .map(|_| StateFile {
+                        name: rand_string(rng, 24),
+                        bytes: rand_bytes(rng, 96),
+                    })
+                    .collect()
+            },
+        }),
+        8 => Response::NotLeader { leader: rand_string(rng, 32) },
         7 => Response::RebalanceAck {
             router_version: rng.next_u64(),
             moved_rows: rng.next_u64(),
             shard_versions: rand_u64s(rng, 16),
+            remap: rand_u32s(rng, 32),
         },
         6 => Response::CheckpointAck { versions: rand_u64s(rng, 16) },
         0 => Response::Codes {
@@ -103,6 +125,10 @@ fn rand_response(rng: &mut Rng) -> Response {
             shard_shed: rand_u64s(rng, 16),
             last_checkpoint: rand_u64s(rng, 16),
             state_dir: rand_string(rng, 32),
+            role: rand_string(rng, 12),
+            leader_addr: rand_string(rng, 24),
+            sync_lag_folds: rng.next_u64(),
+            last_sync: rng.next_u64(),
         }),
         _ => Response::Error { message: rand_string(rng, 40) },
     }
@@ -181,8 +207,8 @@ fn empty_payload_is_an_error() {
 
 #[test]
 fn unknown_opcodes_err_for_both_directions() {
-    let known_req = [0x01, 0x02, 0x03, 0x04, 0x05, 0x06, 0x07];
-    let known_resp = [0x81, 0x82, 0x83, 0x84, 0x85, 0x86, 0x87, 0xFF];
+    let known_req = [0x01, 0x02, 0x03, 0x04, 0x05, 0x06, 0x07, 0x08];
+    let known_resp = [0x81, 0x82, 0x83, 0x84, 0x85, 0x86, 0x87, 0x88, 0xFE, 0xFF];
     for op in 0..=255u8 {
         if !known_req.contains(&op) {
             assert!(Request::decode(&[op]).is_err(), "req op 0x{op:02x}");
@@ -217,12 +243,15 @@ fn lying_element_counts_err_without_overallocating() {
     wire.extend_from_slice(&u32::MAX.to_le_bytes());
     assert!(Response::decode(&wire).is_err());
 
-    // Stats reply with lying shard-vector counts: strip the six empty
-    // tail vectors (shard_versions, shard_merges, shard_ingest,
-    // shard_shed, last_checkpoint, state_dir — one u32 count each) and
-    // replace with a lying pair
+    // Stats reply with lying shard-vector counts: strip the whole
+    // default tail — six empty vectors/strings at one u32 count each
+    // (shard_versions, shard_merges, shard_ingest, shard_shed,
+    // last_checkpoint, state_dir), the two empty replication strings
+    // (role, leader_addr) and the two trailing u64s (sync_lag_folds,
+    // last_sync) = 8 * 4 + 2 * 8 = 48 bytes — and replace with a lying
+    // pair
     let good = Response::Stats(StatsReply::default()).encode();
-    let mut wire = good[..good.len() - 24].to_vec();
+    let mut wire = good[..good.len() - 48].to_vec();
     wire.extend_from_slice(&9u32.to_le_bytes()); // shard_versions: claims 9
     wire.extend_from_slice(&0u32.to_le_bytes()); // shard_merges: 0
     assert!(Response::decode(&wire).is_err());
@@ -239,11 +268,44 @@ fn lying_element_counts_err_without_overallocating() {
     wire.extend_from_slice(&u32::MAX.to_le_bytes());
     assert!(Response::decode(&wire).is_err());
 
-    // Stats whose state_dir length outruns the payload
+    // RebalanceAck whose remap count lies (shard_versions fine)
+    let mut wire = vec![0x87u8];
+    wire.extend_from_slice(&1u64.to_le_bytes());
+    wire.extend_from_slice(&2u64.to_le_bytes());
+    wire.extend_from_slice(&0u32.to_le_bytes()); // no shard versions
+    wire.extend_from_slice(&u32::MAX.to_le_bytes()); // remap lies
+    assert!(Response::decode(&wire).is_err());
+
+    // Stats whose state_dir length outruns the payload: strip the
+    // post-state_dir tail (role + leader_addr counts, two u64s = 24
+    // bytes) plus the state_dir count itself, then lie about its length
     let good = Response::Stats(StatsReply::default()).encode();
-    let mut wire = good[..good.len() - 4].to_vec(); // strip state_dir count
+    let mut wire = good[..good.len() - 28].to_vec();
     wire.extend_from_slice(&1_000u32.to_le_bytes());
     wire.extend_from_slice(b"short");
+    assert!(Response::decode(&wire).is_err());
+
+    // State whose file count lies (claims a file, carries none)
+    let mut wire = vec![0x88u8];
+    wire.extend_from_slice(&1u64.to_le_bytes()); // generation
+    wire.extend_from_slice(&2u64.to_le_bytes()); // leader_version
+    wire.extend_from_slice(&1u32.to_le_bytes()); // claims 1 file
+    assert!(Response::decode(&wire).is_err());
+
+    // State whose file-bytes length outruns the payload
+    let mut wire = vec![0x88u8];
+    wire.extend_from_slice(&1u64.to_le_bytes());
+    wire.extend_from_slice(&2u64.to_le_bytes());
+    wire.extend_from_slice(&1u32.to_le_bytes());
+    wire.extend_from_slice(&1u32.to_le_bytes()); // name len 1
+    wire.push(b'x');
+    wire.extend_from_slice(&u32::MAX.to_le_bytes()); // bytes len lies
+    assert!(Response::decode(&wire).is_err());
+
+    // NotLeader whose address length lies
+    let mut wire = vec![0xFEu8];
+    wire.extend_from_slice(&500u32.to_le_bytes());
+    wire.extend_from_slice(b"1.2.3.4:5");
     assert!(Response::decode(&wire).is_err());
 
     // Error response whose message length lies
@@ -251,6 +313,53 @@ fn lying_element_counts_err_without_overallocating() {
     wire.extend_from_slice(&1000u32.to_le_bytes());
     wire.extend_from_slice(b"short");
     assert!(Response::decode(&wire).is_err());
+}
+
+/// The replication fields of `StatsReply` survive the wire exactly —
+/// a leader's defaults (empty role strings are what pre-replication
+/// encoders would have sent for a default reply) and a fully populated
+/// follower reply both roundtrip.
+#[test]
+fn stats_follower_fields_roundtrip_exactly() {
+    let follower = StatsReply {
+        version: 41,
+        kappa: 16,
+        dim: 2,
+        workers: 0, // a follower runs no training fleet
+        shards: 4,
+        probe_n: 2,
+        router_version: 2,
+        rebalances: 0,
+        merges: 41,
+        ingested: 0,
+        ingest_shed: 0,
+        queries: 1_000,
+        shard_versions: vec![10, 11, 10, 10],
+        shard_merges: vec![10, 11, 10, 10],
+        shard_ingest: vec![0; 4],
+        shard_shed: vec![0; 4],
+        last_checkpoint: vec![10, 11, 10, 10],
+        state_dir: "/var/lib/dalvq/follower".into(),
+        role: "follower".into(),
+        leader_addr: "10.1.2.3:7171".into(),
+        sync_lag_folds: 7,
+        last_sync: 312,
+    };
+    let wire = Response::Stats(follower.clone()).encode();
+    match Response::decode(&wire).unwrap() {
+        Response::Stats(s) => {
+            assert_eq!(s, follower);
+            assert_eq!(s.role, "follower");
+            assert_eq!(s.leader_addr, "10.1.2.3:7171");
+            assert_eq!(s.sync_lag_folds, 7);
+            assert_eq!(s.last_sync, 312);
+        }
+        other => panic!("expected Stats, got {other:?}"),
+    }
+    // a leader reply carries the defaults
+    let leader = StatsReply { role: "leader".into(), ..StatsReply::default() };
+    let wire = Response::Stats(leader.clone()).encode();
+    assert_eq!(Response::decode(&wire).unwrap(), Response::Stats(leader));
 }
 
 #[test]

@@ -1,0 +1,368 @@
+//! Checkpoint-shipped read replicas end-to-end: the acceptance suite for
+//! leader/follower query scale-out.
+//!
+//! The paper's final scheme wins on cloud hardware precisely because it
+//! drops inter-machine synchronization in favor of asynchronous, delayed
+//! state exchange; Patra's companion analysis shows delayed-view
+//! consumers of the shared version still converge. Followers are that
+//! argument applied to the read tier: a follower restores from a shipped
+//! copy of the leader's state dir, serves the full read surface from
+//! epoch-swapped snapshots, and re-syncs by polling checkpoint
+//! generations — no write-path coordination at all.
+//!
+//! Pinned here: a follower synced from a quiesced leader answers
+//! `nearest` identically (>= 99% agreement, in practice byte-equal); its
+//! `sync_lag_folds` stays bounded while the leader trains and ingests
+//! continuously, and drains to zero once the leader quiesces; a leader
+//! rebalance's bumped `router_version` is adopted without read downtime;
+//! and every write aimed at a follower is rejected with a clean
+//! `NotLeader` redirect while the connection keeps serving reads.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use dalvq::config::{ExperimentConfig, SchemeConfig, ServeConfig};
+use dalvq::serve::{run_load, Client, LoadSpec, Server, VqService};
+use dalvq::sim::DelayModel;
+use dalvq::vq::Schedule;
+
+/// Real-time fleets; run tests one at a time (same discipline as
+/// serve_e2e.rs / rebalance_e2e.rs).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A fresh state directory unique to `tag` (removed first, so reruns of
+/// a failed test never see stale state).
+fn state_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("dalvq-replication-e2e-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The standard durable sharded leader of this suite: 4 shards x 4
+/// prototypes over a 4-component mixture, one worker per shard, paced
+/// gently enough that fold rates are bounded by wall clock (the lag
+/// assertions depend on that), checkpointing frequently.
+fn leader_cfg(dir: &Path) -> (ExperimentConfig, ServeConfig) {
+    let mut cfg = ExperimentConfig::default();
+    cfg.m = 1;
+    cfg.data.mixture.components = 4;
+    cfg.data.mixture.dim = 2;
+    cfg.data.mixture.noise_frac = 0.0;
+    cfg.data.n_total = 4_000;
+    cfg.data.eval_points = 512;
+    cfg.vq.kappa = 16;
+    cfg.vq.schedule = Schedule::Constant { eps0: 0.02 };
+    cfg.scheme = SchemeConfig::AsyncDelta {
+        tau: 10,
+        up_delay: DelayModel::Instant,
+        down_delay: DelayModel::Instant,
+    };
+    let mut serve = ServeConfig::default();
+    serve.shards = 4;
+    serve.probe_n = 2;
+    serve.points_per_exchange = 50;
+    // 50 pts * 20 us = 1 ms per fold per shard: fast enough to train in
+    // test time, slow enough that a sync cadence of 25 ms keeps lag in
+    // the hundreds of folds, never unbounded.
+    serve.point_compute = 2e-5;
+    serve.ingest_queue = 1_024;
+    serve.state_dir = Some(dir.to_path_buf());
+    serve.checkpoint_every = 8;
+    (cfg, serve)
+}
+
+/// A follower of `leader_addr`, polling fast so tests converge quickly.
+fn follower_serve(leader_addr: &str, dir: Option<&Path>) -> ServeConfig {
+    let mut serve = ServeConfig::default();
+    serve.follow = Some(leader_addr.to_string());
+    serve.sync_every_ms = 25;
+    serve.probe_n = 2;
+    serve.state_dir = dir.map(|d| d.to_path_buf());
+    serve
+}
+
+/// Block until `f` returns true or `secs` elapse (then panic with `what`).
+fn wait_for(secs: u64, what: &str, mut f: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while !f() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// A quiesced leader's follower answers `nearest` identically, reports
+/// follower-shaped stats, and (when given its own state dir) mirrors the
+/// leader's checkpoint files byte-identically.
+#[test]
+fn follower_serves_the_leaders_quiesced_state_identically() {
+    let _serial = serial();
+    let ldir = state_dir("basic-leader");
+    let fdir = state_dir("basic-follower");
+    let (cfg, serve) = leader_cfg(&ldir);
+    let leader = VqService::start(&cfg, &serve).unwrap();
+    let lsrv = Server::start(Arc::clone(&leader), &serve.addr).unwrap();
+    let laddr = lsrv.local_addr().to_string();
+    let mut lclient = Client::connect(laddr.as_str()).unwrap();
+
+    // Train: route some load and let folds land, then quiesce. The
+    // shutdown's final checkpoint drain makes the state dir carry
+    // exactly what the read path serves.
+    let eval = cfg.data.mixture.eval_sample(512, cfg.seed);
+    lclient.ingest(&eval).unwrap();
+    let v0 = leader.version();
+    wait_for(30, "leader folds", || leader.version() >= v0 + 20);
+    leader.shutdown().unwrap();
+    let leader_version = leader.version();
+
+    // The follower bootstraps from the quiesced leader's shipped bundle.
+    let fserve = follower_serve(&laddr, Some(&fdir));
+    let follower = VqService::start(&cfg, &fserve).unwrap();
+    let fsrv = Server::start(Arc::clone(&follower), &fserve.addr).unwrap();
+    let mut fclient = Client::connect(fsrv.local_addr()).unwrap();
+
+    // Topology adopted from the leader's manifest, not the local config.
+    assert_eq!(follower.shards(), 4);
+    assert_eq!(follower.kappa(), 16);
+    assert_eq!(follower.dim(), 2);
+    assert_eq!(follower.version(), leader_version);
+
+    let stats = fclient.stats().unwrap();
+    assert_eq!(stats.role, "follower");
+    assert_eq!(stats.leader_addr, laddr);
+    assert_eq!(stats.workers, 0, "a follower runs no training fleet");
+    assert_eq!(stats.shards, 4);
+    assert_eq!(stats.sync_lag_folds, 0, "quiesced leader: nothing to lag");
+
+    // The acceptance bar: >= 99% probe-vs-oracle agreement against the
+    // leader's quiesced epoch. Identical state + identical router means
+    // it is in practice 100%.
+    let (lcodes, ldists, lv) = lclient.nearest(&eval).unwrap();
+    let (fcodes, fdists, fv) = fclient.nearest(&eval).unwrap();
+    assert_eq!(lv, fv, "follower must serve the leader's version");
+    let agree = lcodes.iter().zip(&fcodes).filter(|(a, b)| a == b).count();
+    assert!(
+        agree as f64 >= 0.99 * lcodes.len() as f64,
+        "follower agreed on only {agree}/{} lookups",
+        lcodes.len()
+    );
+    for (ld, fd) in ldists.iter().zip(&fdists) {
+        assert_eq!(ld, fd, "distances must match on identical state");
+    }
+    // encode and distortion agree too
+    let (lc, _) = lclient.encode(&eval).unwrap();
+    let (fc, _) = fclient.encode(&eval).unwrap();
+    assert_eq!(lc, fc);
+    let (ldist, _) = lclient.distortion(&eval).unwrap();
+    let (fdist, _) = fclient.distortion(&eval).unwrap();
+    assert_eq!(ldist, fdist);
+
+    // The mirror is byte-identical, file by file: a follower restart (or
+    // promotion) warm-starts from exactly the leader's image.
+    for entry in std::fs::read_dir(&ldir).unwrap() {
+        let name = entry.unwrap().file_name();
+        let l = std::fs::read(ldir.join(&name)).unwrap();
+        let f = std::fs::read(fdir.join(&name)).unwrap();
+        assert_eq!(l, f, "{name:?} differs between leader and mirror");
+    }
+
+    fsrv.shutdown().unwrap();
+    follower.shutdown().unwrap();
+    lsrv.shutdown().unwrap();
+    std::fs::remove_dir_all(&ldir).unwrap();
+    std::fs::remove_dir_all(&fdir).unwrap();
+}
+
+/// Under continuous leader training + ingest, the follower keeps
+/// adopting new generations: its served version advances, its lag stays
+/// bounded, and once the leader quiesces the lag drains to exactly zero.
+#[test]
+fn sync_lag_stays_bounded_under_continuous_ingest() {
+    let _serial = serial();
+    let ldir = state_dir("lag-leader");
+    let (cfg, serve) = leader_cfg(&ldir);
+    let leader = VqService::start(&cfg, &serve).unwrap();
+    let lsrv = Server::start(Arc::clone(&leader), &serve.addr).unwrap();
+    let laddr = lsrv.local_addr().to_string();
+    let mut lclient = Client::connect(laddr.as_str()).unwrap();
+
+    let fserve = follower_serve(&laddr, None);
+    let follower = VqService::start(&cfg, &fserve).unwrap();
+
+    // Drive ingest while sampling the follower: the served version must
+    // keep advancing (multiple generations adopted), and the lag must
+    // stay within the envelope the pacing implies. At 1 ms/fold/shard
+    // the leader folds <= ~4 folds/ms; a checkpoint lands every 8
+    // folds/shard and the follower polls every 25 ms, so thousands of
+    // folds of lag would mean the sync loop is broken, not slow.
+    let eval = cfg.data.mixture.eval_sample(256, cfg.seed);
+    let mut versions_seen = Vec::new();
+    let mut max_lag = 0u64;
+    let run_until = Instant::now() + Duration::from_secs(3);
+    let mut stream_t = 0u64;
+    while Instant::now() < run_until {
+        let batch = cfg.data.mixture.generate(128, cfg.seed, 2 + stream_t);
+        stream_t += 1;
+        lclient.ingest(&batch).unwrap();
+        let stats = follower.stats();
+        assert_eq!(stats.role, "follower");
+        max_lag = max_lag.max(stats.sync_lag_folds);
+        if versions_seen.last() != Some(&stats.version) {
+            versions_seen.push(stats.version);
+        }
+        // the follower answers reads at every sample point
+        let (_, codes, dists) = follower.query_nearest(&eval);
+        assert_eq!(codes.len(), 256);
+        assert!(dists.iter().all(|d| d.is_finite()));
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(
+        versions_seen.len() >= 3,
+        "follower never advanced: versions {versions_seen:?}"
+    );
+    assert!(
+        versions_seen.windows(2).all(|w| w[0] < w[1]),
+        "follower version went backwards: {versions_seen:?}"
+    );
+    // Pacing caps folding at ~4 folds/ms, so a wholly broken sync loop
+    // would accumulate ~12k folds of lag over the 3 s run; a working one
+    // stays in the hundreds (checkpoint cadence + poll cadence), with
+    // headroom here for CI scheduling jitter.
+    assert!(
+        max_lag < 6_000,
+        "sync lag {max_lag} folds is out of the pacing envelope"
+    );
+
+    // Quiesce the leader: the final checkpoint drain ships everything,
+    // so the follower converges to the leader's exact final version and
+    // the lag drains to zero.
+    leader.shutdown().unwrap();
+    let final_version = leader.version();
+    wait_for(20, "follower to drain its lag", || {
+        let s = follower.stats();
+        s.version == final_version && s.sync_lag_folds == 0
+    });
+
+    follower.shutdown().unwrap();
+    lsrv.shutdown().unwrap();
+    std::fs::remove_dir_all(&ldir).unwrap();
+}
+
+/// A leader rebalance bumps the router epoch; the follower adopts the
+/// new partition on its next sync without ever refusing a read, and the
+/// requested remap table is a valid permutation.
+#[test]
+fn follower_adopts_a_leader_rebalance_epoch_bump() {
+    let _serial = serial();
+    let ldir = state_dir("rebalance-leader");
+    let (cfg, serve) = leader_cfg(&ldir);
+    let leader = VqService::start(&cfg, &serve).unwrap();
+    let lsrv = Server::start(Arc::clone(&leader), &serve.addr).unwrap();
+    let laddr = lsrv.local_addr().to_string();
+    let mut lclient = Client::connect(laddr.as_str()).unwrap();
+
+    let fserve = follower_serve(&laddr, None);
+    let follower = VqService::start(&cfg, &fserve).unwrap();
+    assert_eq!(follower.router_version(), 0);
+
+    // Load gives the retrainer weights; then rebalance with the remap.
+    let eval = cfg.data.mixture.eval_sample(512, cfg.seed);
+    lclient.ingest(&eval).unwrap();
+    let (rv, _moved, shard_versions, remap) =
+        lclient.rebalance_full(true).unwrap();
+    assert_eq!(rv, 1);
+    assert_eq!(shard_versions.len(), 4);
+    // the remap is a permutation of the 16 global codes
+    assert_eq!(remap.len(), 16);
+    let mut sorted = remap.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, (0..16).collect::<Vec<u32>>());
+
+    // The follower adopts the bumped epoch on a sync tick; reads answer
+    // at every poll in between (no downtime while the swap replicates).
+    wait_for(30, "follower to adopt router epoch 1", || {
+        let (_, codes, _) = follower.query_nearest(&eval);
+        assert_eq!(codes.len(), 512);
+        assert!(codes.iter().all(|&c| (c as usize) < 16));
+        follower.router_version() == 1
+    });
+    let stats = follower.stats();
+    assert_eq!(stats.router_version, 1);
+    assert_eq!(stats.shards, 4);
+
+    follower.shutdown().unwrap();
+    leader.shutdown().unwrap();
+    lsrv.shutdown().unwrap();
+    std::fs::remove_dir_all(&ldir).unwrap();
+}
+
+/// Writes aimed at a follower answer `NotLeader` (naming the leader),
+/// the connection survives to keep serving reads, and a read-only load
+/// run against the follower completes with zero ingest ops.
+#[test]
+fn writes_to_a_follower_are_rejected_with_not_leader() {
+    let _serial = serial();
+    let ldir = state_dir("notleader-leader");
+    let (cfg, serve) = leader_cfg(&ldir);
+    let leader = VqService::start(&cfg, &serve).unwrap();
+    let lsrv = Server::start(Arc::clone(&leader), &serve.addr).unwrap();
+    let laddr = lsrv.local_addr().to_string();
+
+    let fserve = follower_serve(&laddr, None);
+    let follower = VqService::start(&cfg, &fserve).unwrap();
+    let fsrv = Server::start(Arc::clone(&follower), &fserve.addr).unwrap();
+    let mut fclient = Client::connect(fsrv.local_addr()).unwrap();
+
+    let eval = cfg.data.mixture.eval_sample(64, cfg.seed);
+    // every write op is redirected, naming the leader...
+    for err in [
+        format!("{:#}", fclient.ingest(&eval).unwrap_err()),
+        format!("{:#}", fclient.checkpoint().unwrap_err()),
+        format!("{:#}", fclient.rebalance().unwrap_err()),
+        format!("{:#}", fclient.fetch_state(0).unwrap_err()),
+    ] {
+        assert!(err.contains("follower"), "{err}");
+        assert!(err.contains(&laddr), "{err}");
+    }
+    // ...and the same connection keeps answering reads afterwards
+    let (codes, _) = fclient.encode(&eval).unwrap();
+    assert_eq!(codes.len(), 64);
+
+    // the in-process surface refuses too (not just the front-end)
+    let err = format!("{:#}", follower.ingest(&eval).unwrap_err());
+    assert!(err.contains(&laddr), "{err}");
+    assert!(follower.checkpoint_now().is_err());
+    assert!(follower.rebalance().is_err());
+
+    // a read-only load run completes cleanly against the follower
+    let mut spec = LoadSpec::default();
+    spec.connections = 4;
+    spec.requests_per_conn = 50;
+    spec.batch_points = 32;
+    spec.ingest_frac = 0.5; // read_only must override this
+    spec.read_only = true;
+    spec.seed = cfg.seed;
+    let report = run_load(
+        &fsrv.local_addr().to_string(),
+        &spec,
+        &cfg.data.mixture,
+    )
+    .unwrap();
+    assert_eq!(report.requests, 4 * 50);
+    assert_eq!(report.ops.ingest, 0);
+    assert_eq!(
+        report.ops.encode + report.ops.nearest + report.ops.distortion,
+        4 * 50
+    );
+
+    fsrv.shutdown().unwrap();
+    follower.shutdown().unwrap();
+    leader.shutdown().unwrap();
+    lsrv.shutdown().unwrap();
+    std::fs::remove_dir_all(&ldir).unwrap();
+}

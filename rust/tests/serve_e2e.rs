@@ -302,6 +302,7 @@ fn serve_preset_end_to_end_with_loadgen() {
         batch_points: 32,
         ingest_frac: 0.25,
         skew: 0.0,
+        read_only: false,
         seed: p.base.seed,
     };
     let report = dalvq::serve::run_load(&addr, &spec, &p.base.data.mixture).unwrap();
