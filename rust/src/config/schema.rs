@@ -221,6 +221,21 @@ pub struct ServeConfig {
     /// Milliseconds between a follower's sync polls of the leader's
     /// checkpoint generation. Only meaningful with `follow`.
     pub sync_every_ms: u64,
+    /// Slow-query log threshold in microseconds: any request whose
+    /// end-to-end handling exceeds this emits a `slow_query` journal
+    /// event (op, total µs, route/scan stage breakdown) and bumps the
+    /// `slow_queries` counter. `0` (default) disables the log.
+    pub slow_query_us: u64,
+    /// Periodic telemetry snapshot file (`None` = disabled). When set, a
+    /// background thread writes the full [`crate::obs`] snapshot —
+    /// counters, gauges, histogram summaries, recent events — to this
+    /// path as pretty JSON every `metrics_every_ms`, plus once at
+    /// shutdown, so a scrape or a post-run assertion never needs the
+    /// wire `Metrics` op.
+    pub metrics_file: Option<PathBuf>,
+    /// Milliseconds between metrics-file snapshots. Only meaningful with
+    /// `metrics_file`.
+    pub metrics_every_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -248,6 +263,9 @@ impl Default for ServeConfig {
             rebalance_min_folds: 64,
             follow: None,
             sync_every_ms: 500,
+            slow_query_us: 0,
+            metrics_file: None,
+            metrics_every_ms: 1_000,
         }
     }
 }
@@ -373,6 +391,14 @@ impl ServeConfig {
                      the checkpointed shard files"
                         .into(),
                 );
+            }
+        }
+        if let Some(path) = &self.metrics_file {
+            if path.as_os_str().is_empty() {
+                errs.push("metrics_file must be a non-empty path".into());
+            }
+            if self.metrics_every_ms == 0 {
+                errs.push("metrics_every_ms must be >= 1".into());
             }
         }
         if errs.is_empty() {
@@ -983,6 +1009,32 @@ mod tests {
         s.checkpoint_every = 0;
         let msg = format!("{:#}", s.validate(&base).unwrap_err());
         assert!(msg.contains("checkpoint_every"), "{msg}");
+    }
+
+    #[test]
+    fn telemetry_knobs_are_validated() {
+        let base = ExperimentConfig::default();
+
+        // snapshots on a sane cadence, plus an armed slow-query log
+        let mut s = ServeConfig::default();
+        s.metrics_file = Some(PathBuf::from("/tmp/dalvq-metrics.json"));
+        s.metrics_every_ms = 250;
+        s.slow_query_us = 5_000;
+        s.validate(&base).unwrap();
+
+        // an empty snapshot path is a config typo, not "disabled"
+        let mut s = ServeConfig::default();
+        s.metrics_file = Some(PathBuf::new());
+        let msg = format!("{:#}", s.validate(&base).unwrap_err());
+        assert!(msg.contains("metrics_file"), "{msg}");
+
+        // a zero cadence only matters when snapshots are armed
+        let mut s = ServeConfig::default();
+        s.metrics_every_ms = 0;
+        s.validate(&base).unwrap();
+        s.metrics_file = Some(PathBuf::from("/tmp/dalvq-metrics.json"));
+        let msg = format!("{:#}", s.validate(&base).unwrap_err());
+        assert!(msg.contains("metrics_every_ms"), "{msg}");
     }
 
     #[test]

@@ -59,6 +59,7 @@ pub mod coordinator;
 pub mod data;
 pub mod harness;
 pub mod metrics;
+pub mod obs;
 pub mod persist;
 pub mod runtime;
 pub mod schemes;

@@ -12,6 +12,7 @@
 //! dalvq baseline --kind batch --m 8  # batch k-means baseline
 //! dalvq serve                        # online VQ service (TCP front-end)
 //! dalvq loadtest --preset serve      # drive an in-process service
+//! dalvq top --addr 127.0.0.1:7171    # live telemetry view of a server
 //! dalvq info                         # artifact manifest summary
 //! ```
 //!
@@ -46,6 +47,7 @@ COMMANDS:
   baseline   run a k-means baseline
   serve      run the online VQ service (ingest + query over TCP)
   loadtest   drive a service with concurrent load; print a latency report
+  top        live per-op/per-shard telemetry view of a running server
   state      inspect a --state-dir (manifest, per-shard checkpoints)
   info       print the AOT artifact manifest summary
   help       show this message
@@ -95,6 +97,17 @@ OPTIONS (serve):
                              --state-dir mirrors the bundles locally
   --sync-every <MS>          follower sync-poll interval in milliseconds
                              [default: 500]
+  --metrics-file <FILE>      write periodic telemetry snapshots (counters,
+                             gauges, latency digests, recent events) to
+                             this file as JSON, plus once at shutdown
+  --metrics-every <MS>       milliseconds between snapshots [default: 1000]
+  --slow-query-us <N>        journal any request slower than N microseconds
+                             with its route/scan stage breakdown (0 = off)
+
+OPTIONS (top):
+  --addr <HOST:PORT>         server to poll (required)
+  --interval <MS>            milliseconds between redraws [default: 1000]
+  --iterations <N>           screens to draw then exit [default: forever]
 
 OPTIONS (state):
   inspect --state-dir <DIR>    print the manifest, router epoch and
@@ -322,6 +335,9 @@ fn run() -> Result<()> {
                 parse_opt_u64(&mut args, "--rebalance-min-folds")?;
             let follow = args.take_value("--follow")?;
             let sync_every = parse_opt_u64(&mut args, "--sync-every")?;
+            let metrics_file = args.take_value("--metrics-file")?.map(PathBuf::from);
+            let metrics_every = parse_opt_u64(&mut args, "--metrics-every")?;
+            let slow_query_us = parse_opt_u64(&mut args, "--slow-query-us")?;
             args.finish()?;
             let mut p = serve_preset(&preset)?;
             apply_sharding(&mut p, shards, probe);
@@ -345,6 +361,15 @@ fn run() -> Result<()> {
             }
             if let Some(ms) = sync_every {
                 p.serve.sync_every_ms = ms;
+            }
+            if let Some(f) = metrics_file {
+                p.serve.metrics_file = Some(f);
+            }
+            if let Some(ms) = metrics_every {
+                p.serve.metrics_every_ms = ms;
+            }
+            if let Some(us) = slow_query_us {
+                p.serve.slow_query_us = us;
             }
             let service = VqService::start(&p.base, &p.serve)?;
             let server = Server::start(Arc::clone(&service), &p.serve.addr)?;
@@ -386,6 +411,21 @@ fn run() -> Result<()> {
                     p.serve.rebalance_skew, p.serve.rebalance_min_folds,
                 );
             }
+            if let Some(f) = &p.serve.metrics_file {
+                println!(
+                    "dalvq serve: telemetry snapshots to {} every {} ms \
+                     (`dalvq top --addr {}` for the live view)",
+                    f.display(),
+                    p.serve.metrics_every_ms,
+                    server.local_addr(),
+                );
+            }
+            if p.serve.slow_query_us > 0 {
+                println!(
+                    "dalvq serve: slow-query log armed at {} us",
+                    p.serve.slow_query_us,
+                );
+            }
             match duration {
                 Some(secs) => {
                     std::thread::sleep(std::time::Duration::from_secs(secs))
@@ -404,13 +444,20 @@ fn run() -> Result<()> {
                             s.queries,
                         ),
                         None => println!(
-                            "serve: epoch {} version {} | ingested {} (shed \
-                             {}) | queries {} | shard ingest {:?}",
+                            "serve: up {} s | epoch {} version {} | ingested \
+                             {} (shed {}) | queries {} (encode {} / nearest \
+                             {} / distortion {} / ingest {}) | shard ingest \
+                             {:?}",
+                            s.uptime_ms / 1000,
                             s.router_version,
                             s.version,
                             s.ingested,
                             s.ingest_shed,
                             s.queries,
+                            s.op_encode,
+                            s.op_nearest,
+                            s.op_distortion,
+                            s.op_ingest,
                             s.shard_ingest,
                         ),
                     }
@@ -479,6 +526,21 @@ fn run() -> Result<()> {
                 dalvq::metrics::write_report_csv(&fig, &dir.join("loadtest.csv"))?;
                 println!("wrote {}/loadtest.{{csv,json}}", dir.display());
             }
+        }
+        "top" => {
+            let addr = args
+                .take_value("--addr")?
+                .ok_or_else(|| anyhow!("top requires --addr HOST:PORT"))?;
+            let interval_ms =
+                parse_opt_u64(&mut args, "--interval")?.unwrap_or(1_000);
+            let iterations =
+                parse_opt_u64(&mut args, "--iterations")?.unwrap_or(0);
+            args.finish()?;
+            dalvq::serve::run_top(&dalvq::serve::TopSpec {
+                addr,
+                interval_ms,
+                iterations,
+            })?;
         }
         "state" => {
             let sub = if args.argv.is_empty() {

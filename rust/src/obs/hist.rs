@@ -1,0 +1,243 @@
+//! Log-linear latency histogram with lock-free recording.
+//!
+//! Values are microseconds. Below [`LINEAR_MAX`] every value has its own
+//! bucket (small latencies are exact); above, each power-of-two octave is
+//! split into [`SUBS`] sub-buckets, which bounds the relative quantization
+//! error of any reported percentile by `1 / SUBS` = 6.25%. Recording is a
+//! single relaxed `fetch_add` per bucket plus a running sum and an exact
+//! tracked max, so the request hot path never takes a lock.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+use super::percentile::nearest_rank_index;
+
+/// Values below this get one bucket each (exact).
+const LINEAR_MAX: u64 = 16;
+/// Sub-buckets per power-of-two octave.
+const SUBS: u64 = 16;
+/// Octaves covered above the linear range (top bit 4 through 63).
+const OCTAVES: u64 = 60;
+/// Total bucket count.
+pub const NUM_BUCKETS: usize = (LINEAR_MAX + OCTAVES * SUBS) as usize;
+
+/// Bucket index for a recorded value — total over all of `u64`.
+fn bucket_index(v: u64) -> usize {
+    if v < LINEAR_MAX {
+        return v as usize;
+    }
+    let top = 63 - u64::from(v.leading_zeros()); // >= 4
+    let offset = (v >> (top - 4)) - SUBS; // 0..SUBS
+    (LINEAR_MAX + (top - 4) * SUBS + offset) as usize
+}
+
+/// Inclusive upper bound of a bucket — the value percentiles report.
+fn bucket_high(idx: usize) -> u64 {
+    let idx = idx as u64;
+    if idx < LINEAR_MAX {
+        return idx;
+    }
+    let octave = (idx - LINEAR_MAX) / SUBS;
+    let offset = (idx - LINEAR_MAX) % SUBS;
+    let width = 1u64 << octave;
+    (SUBS + offset) * width + (width - 1)
+}
+
+/// Point-in-time digest of a [`Histogram`]. Empty histograms report zeros
+/// (not NaN — the digest is serialized into JSON snapshots and onto the
+/// wire, where NaN has no representation worth keeping).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct HistogramSummary {
+    /// Samples recorded.
+    pub count: u64,
+    /// Exact mean of the recorded values (microseconds).
+    pub mean_us: f64,
+    /// Nearest-rank percentiles over the bucketed distribution
+    /// (microseconds, quantized to at most 6.25% relative error and
+    /// clamped to the exact max).
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    /// Exact maximum recorded value (microseconds).
+    pub max_us: f64,
+}
+
+/// Lock-free log-linear histogram of microsecond durations.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram").field("summary", &self.summary()).finish()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one duration in microseconds.
+    pub fn record(&self, v_us: u64) {
+        self.buckets[bucket_index(v_us)].fetch_add(1, Relaxed);
+        self.sum.fetch_add(v_us, Relaxed);
+        self.max.fetch_max(v_us, Relaxed);
+    }
+
+    /// Digest the current distribution.
+    pub fn summary(&self) -> HistogramSummary {
+        let counts: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Relaxed)).collect();
+        let count: u64 = counts.iter().sum();
+        if count == 0 {
+            return HistogramSummary::default();
+        }
+        let max = self.max.load(Relaxed);
+        let pct = |q: f64| percentile_of(&counts, count, q).min(max as f64);
+        HistogramSummary {
+            count,
+            mean_us: self.sum.load(Relaxed) as f64 / count as f64,
+            p50_us: pct(0.50),
+            p95_us: pct(0.95),
+            p99_us: pct(0.99),
+            max_us: max as f64,
+        }
+    }
+}
+
+/// Nearest-rank percentile over bucket counts: find the bucket holding
+/// the rank-`q` sample and report its upper bound.
+fn percentile_of(counts: &[u64], total: u64, q: f64) -> f64 {
+    let Some(rank) = nearest_rank_index(total as usize, q) else {
+        return 0.0;
+    };
+    let mut seen = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        seen += c;
+        if seen > rank as u64 {
+            return bucket_high(i) as f64;
+        }
+    }
+    0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_range_buckets_are_exact() {
+        for v in 0..LINEAR_MAX {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_high(v as usize), v);
+        }
+    }
+
+    #[test]
+    fn octave_boundaries_land_where_designed() {
+        // First log bucket starts exactly at LINEAR_MAX.
+        assert_eq!(bucket_index(15), 15);
+        assert_eq!(bucket_index(16), 16);
+        assert_eq!(bucket_index(31), 31);
+        // Next octave: width-2 buckets.
+        assert_eq!(bucket_index(32), 32);
+        assert_eq!(bucket_index(33), 32);
+        assert_eq!(bucket_index(34), 33);
+        assert_eq!(bucket_high(32), 33);
+        // The top of u64 still maps inside the table.
+        assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS - 1);
+        assert_eq!(bucket_high(NUM_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_high_bounds_hold() {
+        let mut prev = 0usize;
+        let mut v = 1u64;
+        while v < u64::MAX / 3 {
+            let idx = bucket_index(v);
+            assert!(idx >= prev, "index regressed at {v}");
+            assert!(bucket_high(idx) >= v, "upper bound below value at {v}");
+            // Relative quantization error is bounded by 1/SUBS.
+            if v >= LINEAR_MAX {
+                let err = (bucket_high(idx) - v) as f64 / v as f64;
+                assert!(err <= 1.0 / SUBS as f64 + 1e-12, "err {err} at {v}");
+            }
+            prev = idx;
+            v = v * 3 + 1;
+        }
+    }
+
+    #[test]
+    fn empty_summary_is_all_zeros() {
+        let s = Histogram::new().summary();
+        assert_eq!(s, HistogramSummary::default());
+    }
+
+    #[test]
+    fn small_values_give_exact_percentiles() {
+        // Everything below LINEAR_MAX is bucketed exactly, so the
+        // histogram's nearest-rank percentiles match the definition
+        // applied to the raw sorted series.
+        let h = Histogram::new();
+        let series: Vec<u64> = (0..=15).chain(0..=15).collect();
+        for &v in &series {
+            h.record(v);
+        }
+        let mut sorted = series.clone();
+        sorted.sort_unstable();
+        let s = h.summary();
+        let expect = |q: f64| sorted[nearest_rank_index(sorted.len(), q).unwrap()] as f64;
+        assert_eq!(s.p50_us, expect(0.50));
+        assert_eq!(s.p95_us, expect(0.95));
+        assert_eq!(s.p99_us, expect(0.99));
+        assert_eq!(s.max_us, 15.0);
+        assert_eq!(s.count, 32);
+    }
+
+    #[test]
+    fn large_values_stay_within_error_bound() {
+        let h = Histogram::new();
+        for i in 0..1000u64 {
+            h.record(1_000 + i * 37);
+        }
+        let s = h.summary();
+        // p50 of 1000..~38000 with uniform spacing: true median ~ 19500.
+        let true_p50 = 1_000.0 + 499.0 * 37.0;
+        assert!((s.p50_us - true_p50).abs() / true_p50 <= 1.0 / 16.0 + 1e-9);
+        assert_eq!(s.max_us, (1_000 + 999 * 37) as f64);
+        assert!(s.p99_us <= s.max_us);
+    }
+
+    #[test]
+    fn concurrent_increments_lose_nothing() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let h = std::sync::Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record(t * 1_000 + i % 100);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 80_000);
+        assert_eq!(s.max_us, (7 * 1_000 + 99) as f64);
+    }
+}

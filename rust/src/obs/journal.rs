@@ -1,0 +1,179 @@
+//! Bounded ring-buffer event journal.
+//!
+//! Fleet lifecycle moments — checkpoint flushes, follower sync adoptions,
+//! rebalance phases, slow queries — land here as leveled structured
+//! events. The buffer is a fixed-capacity ring: old events fall off the
+//! front, the monotone sequence number keeps falling-off observable, and
+//! emission is one short mutex hold (all emitters are cold paths).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Event severity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    Info,
+    Warn,
+    Error,
+}
+
+impl Level {
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Level::Info => 0,
+            Level::Warn => 1,
+            Level::Error => 2,
+        }
+    }
+
+    pub fn from_u8(b: u8) -> Option<Level> {
+        match b {
+            0 => Some(Level::Info),
+            1 => Some(Level::Warn),
+            2 => Some(Level::Error),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+}
+
+/// One structured journal entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    /// Monotone per-journal sequence number (gaps at the front of
+    /// [`Journal::recent`] mean events were evicted).
+    pub seq: u64,
+    /// Wall-clock milliseconds since the Unix epoch.
+    pub ts_ms: u64,
+    pub level: Level,
+    /// Dot-separated event family, e.g. `checkpoint.flush`.
+    pub kind: String,
+    /// Human-readable detail line.
+    pub message: String,
+}
+
+/// Fixed-capacity event ring.
+#[derive(Debug)]
+pub struct Journal {
+    cap: usize,
+    seq: AtomicU64,
+    buf: Mutex<VecDeque<Event>>,
+}
+
+impl Journal {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self {
+            cap,
+            seq: AtomicU64::new(0),
+            buf: Mutex::new(VecDeque::with_capacity(cap)),
+        }
+    }
+
+    /// Append an event, evicting the oldest if the ring is full.
+    pub fn emit(&self, level: Level, kind: &str, message: String) {
+        let event = Event {
+            seq: self.seq.fetch_add(1, Relaxed),
+            ts_ms: unix_ms(),
+            level,
+            kind: kind.to_string(),
+            message,
+        };
+        let mut buf = self.buf.lock().unwrap();
+        if buf.len() == self.cap {
+            buf.pop_front();
+        }
+        buf.push_back(event);
+    }
+
+    pub fn info(&self, kind: &str, message: String) {
+        self.emit(Level::Info, kind, message);
+    }
+
+    pub fn warn(&self, kind: &str, message: String) {
+        self.emit(Level::Warn, kind, message);
+    }
+
+    pub fn error(&self, kind: &str, message: String) {
+        self.emit(Level::Error, kind, message);
+    }
+
+    /// The newest `max` events, oldest first.
+    pub fn recent(&self, max: usize) -> Vec<Event> {
+        let buf = self.buf.lock().unwrap();
+        let skip = buf.len().saturating_sub(max);
+        buf.iter().skip(skip).cloned().collect()
+    }
+
+    /// Total events ever emitted (not just retained).
+    pub fn emitted(&self) -> u64 {
+        self.seq.load(Relaxed)
+    }
+}
+
+fn unix_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_round_trip_through_u8() {
+        for level in [Level::Info, Level::Warn, Level::Error] {
+            assert_eq!(Level::from_u8(level.as_u8()), Some(level));
+        }
+        assert_eq!(Level::from_u8(3), None);
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_the_newest() {
+        let j = Journal::new(4);
+        for i in 0..10 {
+            j.info("tick", format!("event {i}"));
+        }
+        let recent = j.recent(100);
+        assert_eq!(recent.len(), 4);
+        // The four newest survive, in order, with their original seqs.
+        let seqs: Vec<u64> = recent.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        assert_eq!(recent[3].message, "event 9");
+        assert_eq!(j.emitted(), 10);
+    }
+
+    #[test]
+    fn recent_caps_the_tail() {
+        let j = Journal::new(16);
+        for i in 0..8 {
+            j.warn("w", format!("{i}"));
+        }
+        let tail = j.recent(3);
+        assert_eq!(tail.len(), 3);
+        assert_eq!(tail[0].message, "5");
+        assert_eq!(tail[2].message, "7");
+        assert_eq!(tail[0].level, Level::Warn);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped_to_one() {
+        let j = Journal::new(0);
+        j.error("boom", "first".into());
+        j.error("boom", "second".into());
+        let recent = j.recent(10);
+        assert_eq!(recent.len(), 1);
+        assert_eq!(recent[0].message, "second");
+    }
+}

@@ -1,0 +1,200 @@
+//! Server-side telemetry plane.
+//!
+//! The serving fleet's in-process observability: what the paper measures
+//! from the outside (where wall-clock time goes — compute vs. routing vs.
+//! synchronization) this module measures from the inside, live.
+//!
+//! - [`Registry`]: named atomic [`Counter`]s, [`Gauge`]s and log-linear
+//!   latency [`Histogram`]s — lock-free on the record path, name-sorted
+//!   in snapshots.
+//! - [`Journal`]: a bounded ring of leveled structured [`Event`]s for
+//!   fleet lifecycle moments (checkpoint flushes, sync adoptions,
+//!   rebalance phases, slow queries).
+//! - [`Telemetry`]: one registry + journal + start instant, owned by a
+//!   [`crate::serve::VqService`] and exposed three ways — the `Metrics`
+//!   wire op, `dalvq top`, and `--metrics-file` JSON snapshots.
+//! - [`nearest_rank_index`]: the percentile definition shared with the
+//!   load generator, so server-side and client-side p99 are the same
+//!   statistic.
+
+mod hist;
+mod journal;
+mod percentile;
+mod registry;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::util::Json;
+
+pub use hist::{Histogram, HistogramSummary, NUM_BUCKETS};
+pub use journal::{Event, Journal, Level};
+pub use percentile::nearest_rank_index;
+pub use registry::{Counter, Gauge, Registry};
+
+/// One service's telemetry: metric registry, event journal, start time.
+#[derive(Debug)]
+pub struct Telemetry {
+    registry: Registry,
+    journal: Arc<Journal>,
+    start: Instant,
+}
+
+impl Telemetry {
+    /// A fresh plane retaining at most `journal_cap` events.
+    pub fn new(journal_cap: usize) -> Arc<Self> {
+        Arc::new(Self {
+            registry: Registry::default(),
+            journal: Arc::new(Journal::new(journal_cap)),
+            start: Instant::now(),
+        })
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.registry.counter(name)
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.registry.gauge(name)
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.registry.histogram(name)
+    }
+
+    pub fn journal(&self) -> &Arc<Journal> {
+        &self.journal
+    }
+
+    /// Milliseconds since this plane (and its service) came up.
+    pub fn uptime_ms(&self) -> u64 {
+        self.start.elapsed().as_millis() as u64
+    }
+
+    /// Point-in-time digest of everything: all metrics plus the newest
+    /// `max_events` journal entries.
+    pub fn snapshot(&self, max_events: usize) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            uptime_ms: self.uptime_ms(),
+            counters: self.registry.counters(),
+            gauges: self.registry.gauges(),
+            hists: self.registry.histograms(),
+            events: self.journal.recent(max_events),
+        }
+    }
+}
+
+/// A consistent-enough digest of a [`Telemetry`] plane (each metric is
+/// read atomically; the set is not a global atomic snapshot).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetrySnapshot {
+    pub uptime_ms: u64,
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, u64)>,
+    pub hists: Vec<(String, HistogramSummary)>,
+    pub events: Vec<Event>,
+}
+
+impl TelemetrySnapshot {
+    /// The `--metrics-file` document: one JSON object a bench or CI step
+    /// can parse and diff offline.
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (name, v) in &self.counters {
+            counters = counters.set(name.as_str(), *v);
+        }
+        let mut gauges = Json::obj();
+        for (name, v) in &self.gauges {
+            gauges = gauges.set(name.as_str(), *v);
+        }
+        let mut hists = Json::obj();
+        for (name, s) in &self.hists {
+            hists = hists.set(
+                name.as_str(),
+                Json::obj()
+                    .set("count", s.count)
+                    .set("mean_us", s.mean_us)
+                    .set("p50_us", s.p50_us)
+                    .set("p95_us", s.p95_us)
+                    .set("p99_us", s.p99_us)
+                    .set("max_us", s.max_us),
+            );
+        }
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                Json::obj()
+                    .set("seq", e.seq)
+                    .set("ts_ms", e.ts_ms)
+                    .set("level", e.level.label())
+                    .set("kind", e.kind.as_str())
+                    .set("message", e.message.as_str())
+            })
+            .collect();
+        Json::obj()
+            .set("uptime_ms", self.uptime_ms)
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", hists)
+            .set("events", Json::Arr(events))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_carries_metrics_and_events() {
+        let t = Telemetry::new(8);
+        t.counter("op.encode.requests").add(3);
+        t.gauge("shard.0.queue_depth").set(2);
+        t.histogram("op.encode.total_us").record(120);
+        t.journal().info("sync.adopt", "generation 4".into());
+
+        let snap = t.snapshot(16);
+        assert_eq!(
+            snap.counters,
+            vec![("op.encode.requests".to_string(), 3)]
+        );
+        assert_eq!(snap.gauges, vec![("shard.0.queue_depth".to_string(), 2)]);
+        assert_eq!(snap.hists.len(), 1);
+        assert_eq!(snap.hists[0].1.count, 1);
+        assert_eq!(snap.events.len(), 1);
+        assert_eq!(snap.events[0].kind, "sync.adopt");
+    }
+
+    #[test]
+    fn snapshot_json_round_trips_through_the_parser() {
+        let t = Telemetry::new(8);
+        t.counter("hits").inc();
+        t.histogram("lat_us").record(42);
+        t.journal().warn("slow_query", "nearest took 9ms".into());
+
+        let text = t.snapshot(4).to_json().to_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(
+            back.req("counters").unwrap().req("hits").unwrap().as_u64().unwrap(),
+            1
+        );
+        let h = back.req("histograms").unwrap().req("lat_us").unwrap();
+        assert_eq!(h.req("count").unwrap().as_u64().unwrap(), 1);
+        let events = back.req("events").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(
+            events[0].req("level").unwrap().as_str().unwrap(),
+            "warn"
+        );
+    }
+
+    #[test]
+    fn events_are_capped_by_max_events() {
+        let t = Telemetry::new(32);
+        for i in 0..10 {
+            t.journal().info("tick", format!("{i}"));
+        }
+        assert_eq!(t.snapshot(3).events.len(), 3);
+        assert_eq!(t.snapshot(0).events.len(), 0);
+    }
+}

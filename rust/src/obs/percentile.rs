@@ -1,0 +1,56 @@
+//! Nearest-rank percentile selection.
+//!
+//! One definition, shared by the load generator's client-side latency
+//! report and the server-side latency histograms, so the two sides of a
+//! benchmark quote the same statistic: the sample at index
+//! `round((len - 1) * q)` of the sorted series.
+
+/// Index of the nearest-rank `q`-quantile in a sorted series of `len`
+/// samples (`q` in `[0, 1]`). Returns `None` on an empty series.
+pub fn nearest_rank_index(len: usize, q: f64) -> Option<usize> {
+    if len == 0 {
+        return None;
+    }
+    let idx = ((len - 1) as f64 * q).round() as usize;
+    Some(idx.min(len - 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_series_has_no_rank() {
+        assert_eq!(nearest_rank_index(0, 0.5), None);
+        assert_eq!(nearest_rank_index(0, 0.0), None);
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(nearest_rank_index(1, q), Some(0));
+        }
+    }
+
+    #[test]
+    fn extremes_pick_first_and_last() {
+        assert_eq!(nearest_rank_index(100, 0.0), Some(0));
+        assert_eq!(nearest_rank_index(100, 1.0), Some(99));
+    }
+
+    #[test]
+    fn known_series_ranks() {
+        // 101 samples: rank(q) = round(100 q), exactly.
+        assert_eq!(nearest_rank_index(101, 0.50), Some(50));
+        assert_eq!(nearest_rank_index(101, 0.95), Some(95));
+        assert_eq!(nearest_rank_index(101, 0.99), Some(99));
+        // Two samples: the median rounds up to the second.
+        assert_eq!(nearest_rank_index(2, 0.5), Some(1));
+        assert_eq!(nearest_rank_index(2, 0.49), Some(0));
+    }
+
+    #[test]
+    fn out_of_range_q_is_clamped() {
+        assert_eq!(nearest_rank_index(10, 2.0), Some(9));
+    }
+}

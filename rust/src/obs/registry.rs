@@ -1,0 +1,169 @@
+//! Named metric registry: counters, gauges, histograms.
+//!
+//! Lookup is get-or-create behind a mutex over a sorted map; callers on
+//! hot paths resolve their handles once at startup and afterwards touch
+//! only atomics. Snapshots iterate the maps in name order so every
+//! rendering (wire, JSON file, `dalvq top`) agrees on ordering.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+
+use super::hist::{Histogram, HistogramSummary};
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Instantaneous level (queue depth, replication lag). Decrements
+/// saturate at zero so a racing reader never sees a wrapped value.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+
+    pub fn sub(&self, n: u64) {
+        let _ = self
+            .0
+            .fetch_update(Relaxed, Relaxed, |v| Some(v.saturating_sub(n)));
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Name-keyed metric store.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    /// Get or create the counter `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        get_or_create(&self.counters, name)
+    }
+
+    /// Get or create the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        get_or_create(&self.gauges, name)
+    }
+
+    /// Get or create the histogram `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        get_or_create(&self.hists, name)
+    }
+
+    /// All counters, name-sorted.
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        let map = self.counters.lock().unwrap();
+        map.iter().map(|(k, v)| (k.clone(), v.get())).collect()
+    }
+
+    /// All gauges, name-sorted.
+    pub fn gauges(&self) -> Vec<(String, u64)> {
+        let map = self.gauges.lock().unwrap();
+        map.iter().map(|(k, v)| (k.clone(), v.get())).collect()
+    }
+
+    /// All histogram digests, name-sorted.
+    pub fn histograms(&self) -> Vec<(String, HistogramSummary)> {
+        let map = self.hists.lock().unwrap();
+        map.iter().map(|(k, v)| (k.clone(), v.summary())).collect()
+    }
+}
+
+fn get_or_create<T: Default>(
+    map: &Mutex<BTreeMap<String, Arc<T>>>,
+    name: &str,
+) -> Arc<T> {
+    let mut map = map.lock().unwrap();
+    match map.get(name) {
+        Some(existing) => Arc::clone(existing),
+        None => {
+            let created = Arc::new(T::default());
+            map.insert(name.to_string(), Arc::clone(&created));
+            created
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_or_create_returns_the_same_handle() {
+        let r = Registry::default();
+        let a = r.counter("hits");
+        let b = r.counter("hits");
+        a.inc();
+        b.add(2);
+        assert_eq!(r.counter("hits").get(), 3);
+        assert_eq!(r.counters(), vec![("hits".to_string(), 3)]);
+    }
+
+    #[test]
+    fn snapshots_are_name_sorted() {
+        let r = Registry::default();
+        r.gauge("zeta").set(1);
+        r.gauge("alpha").set(2);
+        let names: Vec<String> = r.gauges().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["alpha".to_string(), "zeta".to_string()]);
+    }
+
+    #[test]
+    fn gauge_sub_saturates_at_zero() {
+        let g = Gauge::default();
+        g.add(3);
+        g.sub(5);
+        assert_eq!(g.get(), 0);
+        g.set(7);
+        g.sub(2);
+        assert_eq!(g.get(), 5);
+    }
+
+    #[test]
+    fn concurrent_counter_increments_all_land() {
+        let r = Arc::new(Registry::default());
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    let c = r.counter("shared");
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(r.counter("shared").get(), 80_000);
+    }
+}

@@ -25,10 +25,11 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::obs::Journal;
 use crate::serve::SnapshotStore;
 
 use super::codec::{encode_shard, FORMAT};
@@ -86,6 +87,10 @@ pub struct CheckpointSpec {
     /// checkpointer writes bumps it first, so replication's pollers see a
     /// new generation exactly when the directory's contents changed.
     pub generation: Arc<AtomicU64>,
+    /// The owning service's event journal, when it has a telemetry
+    /// plane: every flush (explicit or periodic) lands a
+    /// `checkpoint.flush` event, every failure a `checkpoint.error`.
+    pub journal: Option<Arc<Journal>>,
 }
 
 impl Checkpointer {
@@ -195,15 +200,30 @@ fn run(
         Ok(wrote)
     };
 
+    let versions = || -> Vec<u64> {
+        last_checkpoint.iter().map(|v| v.load(Ordering::Acquire)).collect()
+    };
+
     loop {
         match rx.recv_timeout(POLL) {
             Ok(Msg::Flush(ack)) => {
-                let result = pass(1).map(|_| {
-                    last_checkpoint
-                        .iter()
-                        .map(|v| v.load(Ordering::Acquire))
-                        .collect()
-                });
+                let t0 = Instant::now();
+                let result = pass(1).map(|_| versions());
+                if let Some(j) = &spec.journal {
+                    match &result {
+                        Ok(v) => j.info(
+                            "checkpoint.flush",
+                            format!(
+                                "flushed shard versions {v:?} in {} ms",
+                                t0.elapsed().as_millis()
+                            ),
+                        ),
+                        Err(e) => j.warn(
+                            "checkpoint.error",
+                            format!("explicit flush failed: {e:#}"),
+                        ),
+                    }
+                }
                 let _ = ack.send(result);
             }
             Ok(Msg::Stop) | Err(mpsc::RecvTimeoutError::Disconnected) => {
@@ -220,11 +240,37 @@ fn run(
                 // only advances on successful writes, so nothing is
                 // skipped. Explicit flushes still report their errors to
                 // the caller through the ack channel.
-                if let Err(e) = pass(spec.checkpoint_every.max(1)) {
-                    eprintln!(
-                        "dalvq checkpointer: periodic checkpoint failed \
-                         (will retry): {e:#}"
-                    );
+                let t0 = Instant::now();
+                match pass(spec.checkpoint_every.max(1)) {
+                    Ok(false) => {}
+                    Ok(true) => {
+                        if let Some(j) = &spec.journal {
+                            j.info(
+                                "checkpoint.flush",
+                                format!(
+                                    "periodic checkpoint reached shard \
+                                     versions {:?} in {} ms",
+                                    versions(),
+                                    t0.elapsed().as_millis()
+                                ),
+                            );
+                        }
+                    }
+                    Err(e) => {
+                        if let Some(j) = &spec.journal {
+                            j.warn(
+                                "checkpoint.error",
+                                format!(
+                                    "periodic checkpoint failed (will \
+                                     retry): {e:#}"
+                                ),
+                            );
+                        }
+                        eprintln!(
+                            "dalvq checkpointer: periodic checkpoint failed \
+                             (will retry): {e:#}"
+                        );
+                    }
                 }
             }
         }
@@ -278,6 +324,7 @@ mod tests {
             dim,
             router_version: 0,
             generation: Arc::new(AtomicU64::new(0)),
+            journal: None,
         }
     }
 
@@ -316,6 +363,30 @@ mod tests {
         assert_eq!(
             restored.shards[0].codebook.flat(),
             &[1.0, 2.0, 3.0, 4.0]
+        );
+        ckpt.stop().unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn flush_emits_a_journal_event() {
+        let dir = tmp_dir("journal");
+        let store = SnapshotStore::new(Codebook::zeros(1, 1));
+        let src = source(&store);
+        let merges = Arc::clone(&src.merges);
+        let last = Arc::new(vec![AtomicU64::new(0)]);
+        let journal = Arc::new(Journal::new(8));
+        let mut spec = spec(&dir, 1_000_000, 10, 1, 1);
+        spec.journal = Some(Arc::clone(&journal));
+        let ckpt = Checkpointer::spawn(spec, vec![src], Arc::clone(&last));
+        write_router(&dir, 1);
+        store.publish(Codebook::from_flat(1, 1, vec![1.0]), 2);
+        merges.store(2, Ordering::Relaxed);
+        ckpt.flush().unwrap();
+        let events = journal.recent(8);
+        assert!(
+            events.iter().any(|e| e.kind == "checkpoint.flush"),
+            "{events:?}"
         );
         ckpt.stop().unwrap();
         std::fs::remove_dir_all(&dir).unwrap();

@@ -66,6 +66,14 @@ pub struct StateBundle {
     pub files: Vec<(String, Vec<u8>)>,
 }
 
+impl StateBundle {
+    /// Total payload size of the cut — what a `state.ship` telemetry
+    /// event reports.
+    pub fn total_bytes(&self) -> u64 {
+        self.files.iter().map(|(_, bytes)| bytes.len() as u64).sum()
+    }
+}
+
 /// Read `dir` as one consistent [`StateBundle`]. `Ok(None)` when the
 /// directory holds no manifest yet (the leader is cold and has not
 /// checkpointed — nothing to ship). Strictly read-only, like
@@ -322,6 +330,10 @@ mod tests {
         assert_eq!(bundle.generation, 9);
         assert_eq!(bundle.manifest.shards, 2);
         assert_eq!(bundle.files.len(), 4); // manifest + router + 2 shards
+        let expected: u64 =
+            bundle.files.iter().map(|(_, b)| b.len() as u64).sum();
+        assert!(expected > 0);
+        assert_eq!(bundle.total_bytes(), expected);
 
         // the bundle decodes to the same state a local restore sees
         let shipped = decode_bundle(&bundle.files).unwrap();

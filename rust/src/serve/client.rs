@@ -8,7 +8,8 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::protocol::{
-    read_frame, write_frame, Request, Response, StateShipment, StatsReply,
+    read_frame, write_frame, MetricsReply, Request, Response, StateShipment,
+    StatsReply,
 };
 
 /// Default per-attempt connect timeout.
@@ -134,6 +135,17 @@ impl Client {
     pub fn stats(&mut self) -> Result<StatsReply> {
         match self.call(&Request::Stats)? {
             Response::Stats(s) => Ok(s),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// The server's telemetry digest: counters, gauges, latency
+    /// histograms, and the newest `max_events` journal entries (oldest
+    /// first). Works on leaders and followers alike — a follower reports
+    /// its own plane, not the leader's.
+    pub fn metrics(&mut self, max_events: u32) -> Result<MetricsReply> {
+        match self.call(&Request::Metrics { max_events })? {
+            Response::Metrics(m) => Ok(m),
             other => bail!("unexpected response {other:?}"),
         }
     }

@@ -255,15 +255,16 @@ pub fn run_load(addr: &str, spec: &LoadSpec, mixture: &MixtureSpec) -> Result<Lo
 }
 
 /// Latency percentile, microseconds, by nearest-rank on a **sorted**
-/// nanosecond series: index `round((len - 1) * q)`. An empty window is a
-/// defined `NaN` (there is no latency to report), a single sample answers
-/// every quantile.
+/// nanosecond series — the rank comes from the shared
+/// [`crate::obs::nearest_rank_index`], the same math the server-side
+/// latency histograms use, so loadgen-side and server-side percentiles
+/// are directly comparable. An empty window is a defined `NaN` (there is
+/// no latency to report), a single sample answers every quantile.
 fn percentile_us(sorted_ns: &[u64], q: f64) -> f64 {
-    if sorted_ns.is_empty() {
-        return f64::NAN;
+    match crate::obs::nearest_rank_index(sorted_ns.len(), q) {
+        Some(idx) => sorted_ns[idx] as f64 / 1e3,
+        None => f64::NAN,
     }
-    let idx = ((sorted_ns.len() - 1) as f64 * q).round() as usize;
-    sorted_ns[idx] as f64 / 1e3
 }
 
 /// Throughput curve: completion stamps (seconds) bucketed at `bucket`
@@ -448,6 +449,27 @@ mod tests {
         for q in [0.0, 0.5, 1.0] {
             assert!(percentile_us(&[], q).is_nan());
         }
+    }
+
+    #[test]
+    fn percentiles_agree_with_the_server_side_histogram() {
+        // Feed identical samples to the loadgen percentile and a server-
+        // side obs histogram: within the histogram's exact range (values
+        // below its linear cutoff) the two report the *same* number at
+        // every quantile, because both sides share
+        // `obs::nearest_rank_index`.
+        let h = crate::obs::Histogram::new();
+        let mut sorted_ns: Vec<u64> = Vec::new();
+        for us in [0u64, 1, 1, 2, 3, 5, 8, 13, 13, 15] {
+            h.record(us);
+            sorted_ns.push(us * 1_000);
+        }
+        sorted_ns.sort_unstable();
+        let s = h.summary();
+        assert_eq!(percentile_us(&sorted_ns, 0.50), s.p50_us);
+        assert_eq!(percentile_us(&sorted_ns, 0.95), s.p95_us);
+        assert_eq!(percentile_us(&sorted_ns, 0.99), s.p99_us);
+        assert_eq!(percentile_us(&sorted_ns, 1.0), s.max_us);
     }
 
     #[test]

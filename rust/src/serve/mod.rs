@@ -46,6 +46,14 @@
 //!   seeded from the checkpointed codebooks at their saved versions
 //!   instead of retraining. The wire protocol's `Checkpoint` op forces a
 //!   flush.
+//! * **Telemetry** — every request is measured where it is served: the
+//!   [`crate::obs`] plane keeps per-op latency histograms with stage
+//!   timings (frame decode → route → shard scan → encode), per-shard
+//!   queue-depth/shed gauges and a bounded journal of fleet events
+//!   (checkpoint flushes, sync adoptions, rebalance phases, slow
+//!   queries), exposed three ways: the `Metrics` wire op, the live
+//!   `dalvq top` screen ([`run_top`]), and `--metrics-file` periodic
+//!   JSON snapshots. `docs/OBSERVABILITY.md` is the metric catalog.
 //! * **Replication** — a service started with `follow: Some(leader)` is
 //!   a **read-only follower**: it warm-starts from the leader's shipped
 //!   checkpoint bundle (the `FetchState` wire op +
@@ -57,7 +65,8 @@
 //!   serving.
 //!
 //! `dalvq serve` / `dalvq serve --follow` / `dalvq loadtest` / `dalvq
-//! state inspect` / `dalvq state rebalance` are the CLI entry points;
+//! top` / `dalvq state inspect` / `dalvq state rebalance` are the CLI
+//! entry points;
 //! the `serve_e2e`, `persist_e2e`, `rebalance_e2e` and `replication_e2e`
 //! integration tests run the whole stack in-process. `docs/PROTOCOL.md`
 //! is the byte-level wire reference; `docs/ARCHITECTURE.md` the system
@@ -71,6 +80,7 @@ mod router;
 mod server;
 mod service;
 mod snapshot;
+mod top;
 mod worker;
 
 pub use client::Client;
@@ -84,4 +94,5 @@ pub use service::{
     VqService,
 };
 pub use snapshot::{Snapshot, SnapshotStore};
+pub use top::{run_top, TopSpec};
 pub use worker::{run_serve_worker, ServeWorkerOutcome, ServeWorkerParams};

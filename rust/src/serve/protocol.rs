@@ -61,6 +61,14 @@ pub enum Request {
         /// on the leader ships the full bundle.
         have_generation: u64,
     },
+    /// Fetch the server's telemetry plane: every counter, gauge and
+    /// latency-histogram digest plus the newest journal events. Read-only
+    /// — answered by leaders **and** followers (watching a follower's
+    /// sync lag is half the point).
+    Metrics {
+        /// Cap on journal events in the reply (0 = metrics only).
+        max_events: u32,
+    },
 }
 
 /// `have_generation` sentinel that never matches a real checkpoint
@@ -127,6 +135,8 @@ pub enum Response {
     },
     /// `FetchState` reply: a consistent bundle of checkpoint files.
     State(StateShipment),
+    /// `Metrics` reply: the telemetry digest.
+    Metrics(MetricsReply),
     /// The addressed server is a read-only follower: ingest, checkpoint,
     /// rebalance and state-fetch belong on its leader. Distinct from
     /// `Error` so clients can redirect instead of just failing.
@@ -225,6 +235,68 @@ pub struct StatsReply {
     /// Milliseconds since the last successful sync poll of the leader
     /// (0 on a leader).
     pub last_sync: u64,
+    /// Milliseconds since the service came up.
+    pub uptime_ms: u64,
+    /// `Encode` requests answered, service lifetime.
+    pub op_encode: u64,
+    /// `Nearest` requests answered, service lifetime.
+    pub op_nearest: u64,
+    /// `Distortion` requests answered, service lifetime.
+    pub op_distortion: u64,
+    /// `Ingest` requests answered (requests, not points), service
+    /// lifetime.
+    pub op_ingest: u64,
+}
+
+/// The `Metrics` payload: a point-in-time digest of the server's
+/// telemetry plane — name-sorted counters, gauges and histogram digests
+/// plus the newest journal events. The metric *names* are the catalog in
+/// `docs/OBSERVABILITY.md`; the wire layer treats them as opaque strings
+/// so the catalog can grow without a protocol bump.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetricsReply {
+    /// Milliseconds since the service came up.
+    pub uptime_ms: u64,
+    /// Monotone counters, name-sorted.
+    pub counters: Vec<(String, u64)>,
+    /// Instantaneous gauges, name-sorted.
+    pub gauges: Vec<(String, u64)>,
+    /// Latency-histogram digests, name-sorted.
+    pub hists: Vec<MetricHist>,
+    /// Newest journal events, oldest first.
+    pub events: Vec<MetricEvent>,
+}
+
+/// One latency-histogram digest inside a [`MetricsReply`].
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetricHist {
+    pub name: String,
+    /// Samples recorded.
+    pub count: u64,
+    /// Exact mean (microseconds).
+    pub mean_us: f64,
+    /// Nearest-rank percentiles (microseconds, ≤ 6.25% quantization).
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    /// Exact maximum (microseconds).
+    pub max_us: f64,
+}
+
+/// One journal event inside a [`MetricsReply`].
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetricEvent {
+    /// Monotone per-journal sequence number.
+    pub seq: u64,
+    /// Wall-clock milliseconds since the Unix epoch.
+    pub ts_ms: u64,
+    /// Severity: 0 = info, 1 = warn, 2 = error (other values reserved;
+    /// carried verbatim so old clients survive new levels).
+    pub level: u8,
+    /// Dot-separated event family, e.g. `checkpoint.flush`.
+    pub kind: String,
+    /// Human-readable detail line.
+    pub message: String,
 }
 
 // ------------------------------------------------------------ frame I/O
@@ -277,6 +349,7 @@ const OP_STATS: u8 = 0x05;
 const OP_CHECKPOINT: u8 = 0x06;
 const OP_REBALANCE: u8 = 0x07;
 const OP_FETCH_STATE: u8 = 0x08;
+const OP_METRICS: u8 = 0x09;
 
 const OP_CODES: u8 = 0x81;
 const OP_NEIGHBORS: u8 = 0x82;
@@ -286,6 +359,7 @@ const OP_STATS_R: u8 = 0x85;
 const OP_CHECKPOINT_ACK: u8 = 0x86;
 const OP_REBALANCE_ACK: u8 = 0x87;
 const OP_STATE: u8 = 0x88;
+const OP_METRICS_R: u8 = 0x89;
 const OP_NOT_LEADER: u8 = 0xFE;
 const OP_ERROR: u8 = 0xFF;
 
@@ -440,6 +514,10 @@ impl Request {
                 out.push(OP_FETCH_STATE);
                 out.extend_from_slice(&have_generation.to_le_bytes());
             }
+            Request::Metrics { max_events } => {
+                out.push(OP_METRICS);
+                out.extend_from_slice(&max_events.to_le_bytes());
+            }
         }
         out
     }
@@ -459,6 +537,7 @@ impl Request {
             OP_FETCH_STATE => {
                 Request::FetchState { have_generation: c.u64()? }
             }
+            OP_METRICS => Request::Metrics { max_events: c.u32()? },
             op => bail!("unknown request opcode 0x{op:02x}"),
         };
         c.finish()?;
@@ -511,6 +590,12 @@ impl Response {
                 put_str(&mut out, &s.leader_addr);
                 out.extend_from_slice(&s.sync_lag_folds.to_le_bytes());
                 out.extend_from_slice(&s.last_sync.to_le_bytes());
+                for field in [
+                    s.uptime_ms, s.op_encode, s.op_nearest, s.op_distortion,
+                    s.op_ingest,
+                ] {
+                    out.extend_from_slice(&field.to_le_bytes());
+                }
             }
             Response::CheckpointAck { versions } => {
                 out.push(OP_CHECKPOINT_ACK);
@@ -536,6 +621,38 @@ impl Response {
                 for f in &s.files {
                     put_str(&mut out, &f.name);
                     put_bytes(&mut out, &f.bytes);
+                }
+            }
+            Response::Metrics(m) => {
+                out.push(OP_METRICS_R);
+                out.extend_from_slice(&m.uptime_ms.to_le_bytes());
+                out.extend_from_slice(&(m.counters.len() as u32).to_le_bytes());
+                for (name, v) in &m.counters {
+                    put_str(&mut out, name);
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                out.extend_from_slice(&(m.gauges.len() as u32).to_le_bytes());
+                for (name, v) in &m.gauges {
+                    put_str(&mut out, name);
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                out.extend_from_slice(&(m.hists.len() as u32).to_le_bytes());
+                for h in &m.hists {
+                    put_str(&mut out, &h.name);
+                    out.extend_from_slice(&h.count.to_le_bytes());
+                    for field in
+                        [h.mean_us, h.p50_us, h.p95_us, h.p99_us, h.max_us]
+                    {
+                        out.extend_from_slice(&field.to_le_bytes());
+                    }
+                }
+                out.extend_from_slice(&(m.events.len() as u32).to_le_bytes());
+                for e in &m.events {
+                    out.extend_from_slice(&e.seq.to_le_bytes());
+                    out.extend_from_slice(&e.ts_ms.to_le_bytes());
+                    out.push(e.level);
+                    put_str(&mut out, &e.kind);
+                    put_str(&mut out, &e.message);
                 }
             }
             Response::NotLeader { leader } => {
@@ -589,6 +706,11 @@ impl Response {
                 leader_addr: c.str()?,
                 sync_lag_folds: c.u64()?,
                 last_sync: c.u64()?,
+                uptime_ms: c.u64()?,
+                op_encode: c.u64()?,
+                op_nearest: c.u64()?,
+                op_distortion: c.u64()?,
+                op_ingest: c.u64()?,
             }),
             OP_CHECKPOINT_ACK => {
                 Response::CheckpointAck { versions: c.u64s()? }
@@ -614,6 +736,54 @@ impl Response {
                     generation,
                     leader_version,
                     files,
+                })
+            }
+            OP_METRICS_R => {
+                let uptime_ms = c.u64()?;
+                // Every count-prefixed loop below is bounded by the frame
+                // cap: each entry consumes at least 8 bytes of payload, so
+                // a lying count fails in `bytes` before any oversized
+                // allocation.
+                let n = c.u32()? as usize;
+                let mut counters = Vec::new();
+                for _ in 0..n {
+                    counters.push((c.str()?, c.u64()?));
+                }
+                let n = c.u32()? as usize;
+                let mut gauges = Vec::new();
+                for _ in 0..n {
+                    gauges.push((c.str()?, c.u64()?));
+                }
+                let n = c.u32()? as usize;
+                let mut hists = Vec::new();
+                for _ in 0..n {
+                    hists.push(MetricHist {
+                        name: c.str()?,
+                        count: c.u64()?,
+                        mean_us: c.f64()?,
+                        p50_us: c.f64()?,
+                        p95_us: c.f64()?,
+                        p99_us: c.f64()?,
+                        max_us: c.f64()?,
+                    });
+                }
+                let n = c.u32()? as usize;
+                let mut events = Vec::new();
+                for _ in 0..n {
+                    events.push(MetricEvent {
+                        seq: c.u64()?,
+                        ts_ms: c.u64()?,
+                        level: c.u8()?,
+                        kind: c.str()?,
+                        message: c.str()?,
+                    });
+                }
+                Response::Metrics(MetricsReply {
+                    uptime_ms,
+                    counters,
+                    gauges,
+                    hists,
+                    events,
                 })
             }
             OP_NOT_LEADER => Response::NotLeader { leader: c.str()? },
@@ -651,6 +821,8 @@ mod tests {
         round_trip_req(Request::FetchState {
             have_generation: FETCH_ANY_GENERATION,
         });
+        round_trip_req(Request::Metrics { max_events: 0 });
+        round_trip_req(Request::Metrics { max_events: u32::MAX });
     }
 
     #[test]
@@ -686,6 +858,11 @@ mod tests {
             leader_addr: "10.0.0.7:7171".into(),
             sync_lag_folds: 12,
             last_sync: 480,
+            uptime_ms: 61_000,
+            op_encode: 10,
+            op_nearest: 11,
+            op_distortion: 12,
+            op_ingest: 13,
         }));
         round_trip_resp(Response::Stats(StatsReply::default()));
         round_trip_resp(Response::CheckpointAck { versions: vec![9, 8, 7] });
@@ -712,6 +889,31 @@ mod tests {
             ],
         }));
         round_trip_resp(Response::State(StateShipment::default()));
+        round_trip_resp(Response::Metrics(MetricsReply {
+            uptime_ms: 12_345,
+            counters: vec![
+                ("op.encode.requests".into(), 42),
+                ("slow_queries".into(), 1),
+            ],
+            gauges: vec![("shard.0.queue_depth".into(), 3)],
+            hists: vec![MetricHist {
+                name: "op.encode.total_us".into(),
+                count: 42,
+                mean_us: 85.5,
+                p50_us: 80.0,
+                p95_us: 120.0,
+                p99_us: 130.0,
+                max_us: 131.0,
+            }],
+            events: vec![MetricEvent {
+                seq: 7,
+                ts_ms: 1_700_000_000_123,
+                level: 1,
+                kind: "slow_query".into(),
+                message: "nearest took 9ms".into(),
+            }],
+        }));
+        round_trip_resp(Response::Metrics(MetricsReply::default()));
         round_trip_resp(Response::NotLeader {
             leader: "127.0.0.1:7171".into(),
         });

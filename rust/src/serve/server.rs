@@ -13,10 +13,16 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::protocol::{read_frame, write_frame, Request, Response, StatsReply};
+use crate::obs::TelemetrySnapshot;
+
+use super::protocol::{
+    read_frame, write_frame, MetricEvent, MetricHist, MetricsReply, Request,
+    Response, StatsReply,
+};
 use super::service::VqService;
 
 /// A running TCP front-end over a [`VqService`].
@@ -90,24 +96,84 @@ fn serve_connection(stream: TcpStream, service: &VqService) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     while let Some(payload) = read_frame(&mut reader)? {
-        let resp = match Request::decode(&payload) {
+        let t_decode = Instant::now();
+        let decoded = Request::decode(&payload);
+        service
+            .tel()
+            .decode_us
+            .record(t_decode.elapsed().as_micros() as u64);
+        let resp = match decoded {
             Ok(req) => handle(service, req),
             Err(e) => Response::Error { message: format!("{e:#}") },
         };
-        write_frame(&mut writer, &resp.encode())?;
+        let t_encode = Instant::now();
+        let bytes = resp.encode();
+        service
+            .tel()
+            .encode_us
+            .record(t_encode.elapsed().as_micros() as u64);
+        write_frame(&mut writer, &bytes)?;
     }
     Ok(())
 }
 
+/// Dispatch one request with per-op accounting wrapped around
+/// [`dispatch`]: count the request into its op family, time the whole
+/// handler into the op's latency histogram, and — when the slow-query
+/// log is armed — journal any request over the threshold with whatever
+/// stage breakdown the dispatch recorded.
+fn handle(service: &VqService, req: Request) -> Response {
+    let tel = service.tel();
+    let (op_name, op) = match &req {
+        Request::Encode { .. } => ("encode", &tel.op_encode),
+        Request::Nearest { .. } => ("nearest", &tel.op_nearest),
+        Request::Distortion { .. } => ("distortion", &tel.op_distortion),
+        Request::Ingest { .. } => ("ingest", &tel.op_ingest),
+        _ => ("other", &tel.op_other),
+    };
+    op.requests.inc();
+    let t0 = Instant::now();
+    let mut stages: Option<(u64, u64)> = None;
+    let resp = dispatch(service, req, &mut stages);
+    let total_us = t0.elapsed().as_micros() as u64;
+    op.total_us.record(total_us);
+    let threshold = service.slow_query_us();
+    if threshold > 0 && total_us > threshold {
+        tel.slow_queries.inc();
+        let breakdown = match stages {
+            Some((route_us, scan_us)) => {
+                format!(", route {route_us} us + scan {scan_us} us")
+            }
+            None => String::new(),
+        };
+        service.telemetry().journal().warn(
+            "slow_query",
+            format!(
+                "{op_name} took {total_us} us (threshold {threshold} us, \
+                 {} shards{breakdown})",
+                service.shards()
+            ),
+        );
+    }
+    resp
+}
+
 /// Dispatch one request through the service's routed query/ingest surface
 /// (multi-probe over the shard fleets happens inside [`VqService`]).
+/// Read queries run the timed path and report their (route, scan) µs
+/// through `stages` for the slow-query log.
 ///
 /// On a follower, every leader-only op — writes (`Ingest`,
 /// `Checkpoint`, `Rebalance`) and state shipping (`FetchState`) —
 /// answers `NotLeader` with the leader's address, so a client can
-/// redirect instead of parsing an error string. The read surface is
-/// identical on both roles.
-fn handle(service: &VqService, req: Request) -> Response {
+/// redirect instead of parsing an error string. The read surface —
+/// `Metrics` included (a follower's telemetry is its own, not the
+/// leader's) — is identical on both roles.
+fn dispatch(
+    service: &VqService,
+    req: Request,
+    stages: &mut Option<(u64, u64)>,
+) -> Response {
     if matches!(
         req,
         Request::Ingest { .. }
@@ -144,24 +210,36 @@ fn handle(service: &VqService, req: Request) -> Response {
                 return err;
             }
             count_query();
-            let (version, codes) = service.query_encode(&points);
-            Response::Codes { version, codes }
+            let q = service.query_nearest_timed(&points, service.probe_n());
+            *stages = Some((q.route_us, q.scan_us));
+            Response::Codes { version: q.version, codes: q.codes }
         }
         Request::Nearest { points } => {
             if let Some(err) = check(&points) {
                 return err;
             }
             count_query();
-            let (version, indices, dists) = service.query_nearest(&points);
-            Response::Neighbors { version, indices, dists }
+            let q = service.query_nearest_timed(&points, service.probe_n());
+            *stages = Some((q.route_us, q.scan_us));
+            Response::Neighbors {
+                version: q.version,
+                indices: q.codes,
+                dists: q.dists,
+            }
         }
         Request::Distortion { points } => {
             if let Some(err) = check(&points) {
                 return err;
             }
             count_query();
-            let (version, value) = service.query_distortion(&points);
-            Response::Distortion { version, value }
+            let q = service.query_nearest_timed(&points, service.probe_n());
+            *stages = Some((q.route_us, q.scan_us));
+            // check() rejected empty batches, so dists is never empty.
+            let sum: f64 = q.dists.iter().map(|d| *d as f64).sum();
+            Response::Distortion {
+                version: q.version,
+                value: sum / q.dists.len() as f64,
+            }
         }
         Request::Ingest { points } => match service.ingest(&points) {
             Ok((accepted, shed)) => Response::IngestAck { accepted, shed },
@@ -192,8 +270,16 @@ fn handle(service: &VqService, req: Request) -> Response {
                 leader_addr: s.leader_addr.unwrap_or_default(),
                 sync_lag_folds: s.sync_lag_folds,
                 last_sync: s.last_sync_ms,
+                uptime_ms: s.uptime_ms,
+                op_encode: s.op_encode,
+                op_nearest: s.op_nearest,
+                op_distortion: s.op_distortion,
+                op_ingest: s.op_ingest,
             })
         }
+        Request::Metrics { max_events } => Response::Metrics(metrics_reply(
+            service.metrics_snapshot(max_events as usize),
+        )),
         Request::Checkpoint => match service.checkpoint_now() {
             Ok(versions) => Response::CheckpointAck { versions },
             Err(e) => Response::Error { message: format!("{e:#}") },
@@ -217,5 +303,40 @@ fn handle(service: &VqService, req: Request) -> Response {
                 Err(e) => Response::Error { message: format!("{e:#}") },
             }
         }
+    }
+}
+
+/// A telemetry snapshot in wire shape. By value: the snapshot is already
+/// this handler's own copy, so the strings and vectors move instead of
+/// cloning.
+fn metrics_reply(snap: TelemetrySnapshot) -> MetricsReply {
+    MetricsReply {
+        uptime_ms: snap.uptime_ms,
+        counters: snap.counters,
+        gauges: snap.gauges,
+        hists: snap
+            .hists
+            .into_iter()
+            .map(|(name, s)| MetricHist {
+                name,
+                count: s.count,
+                mean_us: s.mean_us,
+                p50_us: s.p50_us,
+                p95_us: s.p95_us,
+                p99_us: s.p99_us,
+                max_us: s.max_us,
+            })
+            .collect(),
+        events: snap
+            .events
+            .into_iter()
+            .map(|e| MetricEvent {
+                seq: e.seq,
+                ts_ms: e.ts_ms,
+                level: e.level.as_u8(),
+                kind: e.kind,
+                message: e.message,
+            })
+            .collect(),
     }
 }

@@ -59,6 +59,7 @@ use crate::cloud::{
 };
 use crate::config::{ExperimentConfig, ServeConfig};
 use crate::data::Dataset;
+use crate::obs::{Counter, Gauge, Histogram, Telemetry, TelemetrySnapshot};
 use crate::persist::{
     self, CheckpointSpec, Checkpointer, Manifest, RestoredState, RouterState,
     ShardState,
@@ -74,6 +75,76 @@ use super::worker::{run_serve_worker, ServeWorkerOutcome, ServeWorkerParams};
 /// Per-attempt connect timeout of a follower's sync poll (bounded so a
 /// dead leader costs one short stall per poll, not a hang).
 const SYNC_CONNECT_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// Events the telemetry journal retains (ring capacity). Also the event
+/// budget of a `--metrics-file` snapshot; the wire's `Metrics` op asks
+/// for its own count.
+const JOURNAL_CAP: usize = 256;
+
+/// Pre-resolved handles for one wire op's hot-path metrics.
+pub(crate) struct OpTel {
+    /// Requests dispatched (also `StatsReply`'s per-op counters).
+    pub requests: Arc<Counter>,
+    /// End-to-end handler latency, µs.
+    pub total_us: Arc<Histogram>,
+}
+
+/// The front-end's pre-resolved telemetry handles: the registry lookups
+/// happen once here, at startup, so recording a request costs a handful
+/// of relaxed atomic ops and no name resolution.
+pub(crate) struct ServeTel {
+    /// Request frame decode latency, µs.
+    pub decode_us: Arc<Histogram>,
+    /// Response frame encode latency, µs.
+    pub encode_us: Arc<Histogram>,
+    /// Coarse-quantizer routing stage of a read query, µs per batch.
+    pub route_us: Arc<Histogram>,
+    /// Shard-snapshot scan stage of a read query, µs per batch.
+    pub scan_us: Arc<Histogram>,
+    /// Requests that exceeded `ServeConfig::slow_query_us`.
+    pub slow_queries: Arc<Counter>,
+    pub op_encode: OpTel,
+    pub op_nearest: OpTel,
+    pub op_distortion: OpTel,
+    pub op_ingest: OpTel,
+    /// Everything else (stats, checkpoint, rebalance, fetch-state,
+    /// metrics itself).
+    pub op_other: OpTel,
+}
+
+impl ServeTel {
+    fn new(t: &Telemetry) -> ServeTel {
+        let op = |name: &str| OpTel {
+            requests: t.counter(&format!("op.{name}.requests")),
+            total_us: t.histogram(&format!("op.{name}.total_us")),
+        };
+        ServeTel {
+            decode_us: t.histogram("frame.decode_us"),
+            encode_us: t.histogram("frame.encode_us"),
+            route_us: t.histogram("query.route_us"),
+            scan_us: t.histogram("query.scan_us"),
+            slow_queries: t.counter("slow_queries"),
+            op_encode: op("encode"),
+            op_nearest: op("nearest"),
+            op_distortion: op("distortion"),
+            op_ingest: op("ingest"),
+            op_other: op("other"),
+        }
+    }
+}
+
+/// What [`VqService::query_nearest_timed`] returns: the answers of
+/// [`VqService::query_nearest_probed`] plus the per-stage timings the
+/// telemetry plane and the slow-query log report.
+pub(crate) struct TimedQuery {
+    pub version: u64,
+    pub codes: Vec<u32>,
+    pub dists: Vec<f32>,
+    /// Microseconds routing the batch through the coarse quantizer.
+    pub route_us: u64,
+    /// Microseconds scanning the probed shards' snapshots.
+    pub scan_us: u64,
+}
 
 /// Live counters, shared between the fleets and the front-end. These are
 /// service-lifetime totals — they survive router-epoch swaps (the
@@ -150,6 +221,16 @@ pub struct ServeStats {
     pub sync_lag_folds: u64,
     /// Milliseconds since the last successful sync poll (0 on a leader).
     pub last_sync_ms: u64,
+    /// Milliseconds since the service came up.
+    pub uptime_ms: u64,
+    /// `Encode` requests handled by the front-end.
+    pub op_encode: u64,
+    /// `Nearest` requests handled by the front-end.
+    pub op_nearest: u64,
+    /// `Distortion` requests handled by the front-end.
+    pub op_distortion: u64,
+    /// `Ingest` requests handled by the front-end.
+    pub op_ingest: u64,
 }
 
 /// What one shard's fleet reports at shutdown.
@@ -212,6 +293,10 @@ struct ShardFleet {
     ingested: Arc<AtomicU64>,
     /// Points routed here but shed during the current router epoch.
     shed: Arc<AtomicU64>,
+    /// Ingest batches sent to this shard's workers and not yet absorbed
+    /// (the telemetry plane's `shard.<s>.queue_depth`; incremented per
+    /// accepted batch here, decremented by the receiving worker).
+    queue_depth: Arc<Gauge>,
     /// Cloned under a short lock per ingest call; cleared at quiesce.
     ingest_txs: Mutex<Vec<mpsc::SyncSender<Vec<f32>>>>,
     ingest_cursor: AtomicUsize,
@@ -292,6 +377,15 @@ pub struct VqService {
     state_generation: Arc<AtomicU64>,
     /// Follower-mode state (`None` on a leader).
     follower: Option<FollowerCtl>,
+    /// The telemetry plane: metric registry + event journal + uptime.
+    /// Shared with the checkpointer (journal) and the metrics-file
+    /// writer; exposed over the wire by the `Metrics` op.
+    telemetry: Arc<Telemetry>,
+    /// Pre-resolved hot-path handles over `telemetry`.
+    tel: ServeTel,
+    /// The `--metrics-file` writer thread, when configured; joined at
+    /// shutdown.
+    metrics_writer: Mutex<Option<JoinHandle<()>>>,
 }
 
 /// Everything follower-specific: who the leader is, the sync cadence,
@@ -337,6 +431,7 @@ impl VqService {
         let dim = cfg.dim();
         let s_count = serve.shards;
         let kappa_shard = cfg.vq.kappa / s_count;
+        let telemetry = Telemetry::new(JOURNAL_CAP);
 
         // Warm restart: load and validate durable state before anything
         // is built (a mismatched state dir must fail here, loudly, not
@@ -392,6 +487,7 @@ impl VqService {
             cfg,
             serve,
             &counters,
+            &telemetry,
             router,
             router_version,
             seeds,
@@ -427,6 +523,7 @@ impl VqService {
                     &epoch,
                     &last_checkpoint,
                     &state_generation,
+                    &telemetry,
                     cfg,
                     serve,
                 ))
@@ -452,11 +549,15 @@ impl VqService {
             monitor: Mutex::new(None),
             state_generation,
             follower: None,
+            tel: ServeTel::new(&telemetry),
+            telemetry,
+            metrics_writer: Mutex::new(None),
         });
         if serve.rebalance_skew > 0.0 {
             let handle = spawn_monitor(&service);
             *service.monitor.lock().unwrap_or_else(|e| e.into_inner()) = Some(handle);
         }
+        service.start_metrics_writer();
         Ok(service)
     }
 
@@ -498,9 +599,18 @@ impl VqService {
         }
         let m = restored.manifest.clone();
         let counters = Arc::new(ServeCounters::default());
-        let epoch = follower_epoch(&restored);
+        let telemetry = Telemetry::new(JOURNAL_CAP);
+        let epoch = follower_epoch(&restored, &telemetry);
         let adopted: u64 = restored.shards.iter().map(|s| s.version).sum();
         counters.merges.store(adopted, Ordering::Relaxed);
+        telemetry.journal().info(
+            "sync.adopt",
+            format!(
+                "bootstrap: adopted generation {} at version {adopted} \
+                 (router v{}) from {leader_addr}",
+                ship.generation, m.router_version
+            ),
+        );
         let last_checkpoint: Arc<Vec<AtomicU64>> = Arc::new(
             restored
                 .shards
@@ -536,11 +646,25 @@ impl VqService {
                 last_sync: Mutex::new(Instant::now()),
                 thread: Mutex::new(None),
             }),
+            tel: ServeTel::new(&telemetry),
+            telemetry,
+            metrics_writer: Mutex::new(None),
         });
         let follower = service.follower.as_ref().expect("just constructed");
         *follower.thread.lock().unwrap_or_else(|e| e.into_inner()) =
             Some(spawn_follower_sync(&service));
+        service.start_metrics_writer();
         Ok(service)
+    }
+
+    /// Spawn the `--metrics-file` writer when configured (both start
+    /// paths call this exactly once, after the service `Arc` exists).
+    fn start_metrics_writer(self: &Arc<Self>) {
+        let Some(path) = self.serve.metrics_file.clone() else { return };
+        let every = Duration::from_millis(self.serve.metrics_every_ms.max(1));
+        let handle = spawn_metrics_writer(self, path, every);
+        *self.metrics_writer.lock().unwrap_or_else(|e| e.into_inner()) =
+            Some(handle);
     }
 
     /// One follower sync poll: ask the leader for anything newer than
@@ -550,6 +674,7 @@ impl VqService {
     /// the new one, exactly the rebalance publication discipline.
     /// Returns `true` when a new generation was adopted.
     fn sync_once(&self) -> Result<bool> {
+        let t0 = Instant::now();
         let f = self
             .follower
             .as_ref()
@@ -566,10 +691,9 @@ impl VqService {
         if ship.files.is_empty() {
             // Nothing new checkpointed; the poll still refreshes lag
             // (the leader's live version advanced under us).
-            f.lag_folds.store(
-                ship.leader_version.saturating_sub(self.version()),
-                Ordering::Release,
-            );
+            let lag = ship.leader_version.saturating_sub(self.version());
+            f.lag_folds.store(lag, Ordering::Release);
+            self.telemetry.gauge("sync.lag_folds").set(lag);
             *f.last_sync.lock().unwrap_or_else(|e| e.into_inner()) = Instant::now();
             return Ok(false);
         }
@@ -601,7 +725,7 @@ impl VqService {
                 format!("mirroring the bundle into {}", dir.display())
             })?;
         }
-        let epoch = follower_epoch(&restored);
+        let epoch = follower_epoch(&restored, &self.telemetry);
         let adopted: u64 = restored.shards.iter().map(|s| s.version).sum();
         for (s, st) in restored.shards.iter().enumerate() {
             self.last_checkpoint[s].store(st.version, Ordering::Release);
@@ -612,11 +736,21 @@ impl VqService {
         // run the clock backwards).
         self.counters.merges.fetch_max(adopted, Ordering::AcqRel);
         self.state_generation.store(ship.generation, Ordering::Release);
-        f.lag_folds.store(
-            ship.leader_version.saturating_sub(adopted),
-            Ordering::Release,
-        );
+        let lag = ship.leader_version.saturating_sub(adopted);
+        f.lag_folds.store(lag, Ordering::Release);
+        self.telemetry.gauge("sync.lag_folds").set(lag);
         *f.last_sync.lock().unwrap_or_else(|e| e.into_inner()) = Instant::now();
+        self.telemetry.journal().info(
+            "sync.adopt",
+            format!(
+                "adopted generation {} at version {adopted} (router v{}, \
+                 {} files, lag {lag} folds) in {} ms",
+                ship.generation,
+                m.router_version,
+                files.len(),
+                t0.elapsed().as_millis()
+            ),
+        );
         Ok(true)
     }
 
@@ -658,6 +792,7 @@ impl VqService {
                 files: Vec::new(),
             });
         }
+        let t0 = Instant::now();
         let bundle = persist::read_bundle(dir)?.ok_or_else(|| {
             anyhow!("{} holds no checkpointed state yet", dir.display())
         })?;
@@ -668,6 +803,16 @@ impl VqService {
                 files: Vec::new(),
             });
         }
+        self.telemetry.journal().info(
+            "state.ship",
+            format!(
+                "shipped generation {} ({} files, {} bytes) in {} ms",
+                bundle.generation,
+                bundle.files.len(),
+                bundle.total_bytes(),
+                t0.elapsed().as_millis()
+            ),
+        );
         Ok(StateShipment {
             generation: bundle.generation,
             leader_version,
@@ -778,6 +923,45 @@ impl VqService {
         &self.counters
     }
 
+    /// The telemetry plane (tests and diagnostics; the wire reads it
+    /// through [`VqService::metrics_snapshot`]).
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.telemetry
+    }
+
+    /// The front-end's pre-resolved hot-path metric handles.
+    pub(crate) fn tel(&self) -> &ServeTel {
+        &self.tel
+    }
+
+    /// Slow-query threshold in µs (0 = the log is off).
+    pub(crate) fn slow_query_us(&self) -> u64 {
+        self.serve.slow_query_us
+    }
+
+    /// The `Metrics` wire op and the `--metrics-file` writer land here:
+    /// refresh the lazily-maintained gauges — per-shard load counters and
+    /// follower lag, which are kept as plain atomics on their hot paths —
+    /// from the serving epoch, then cut a snapshot carrying the newest
+    /// `max_events` journal entries.
+    pub fn metrics_snapshot(&self, max_events: usize) -> TelemetrySnapshot {
+        let ep = self.current();
+        for (s, fleet) in ep.shards.iter().enumerate() {
+            self.telemetry
+                .gauge(&format!("shard.{s}.ingested_points"))
+                .set(fleet.ingested.load(Ordering::Relaxed));
+            self.telemetry
+                .gauge(&format!("shard.{s}.shed_points"))
+                .set(fleet.shed.load(Ordering::Relaxed));
+        }
+        if let Some(f) = &self.follower {
+            self.telemetry
+                .gauge("sync.lag_folds")
+                .set(f.lag_folds.load(Ordering::Acquire));
+        }
+        self.telemetry.snapshot(max_events)
+    }
+
     /// The durable state directory, when persistence is on.
     pub fn state_dir(&self) -> Option<&Path> {
         self.state_dir.as_deref()
@@ -862,15 +1046,31 @@ impl VqService {
         //    handles is the only "already shut down" source and mutates
         //    nothing; once we own them, ANY later failure must revive —
         //    never leave the service quiesced and write-dead.
+        let t_quiesce = Instant::now();
         let old = self.current();
         let fleets = take_fleets(&old)?;
         if let Err(e) = join_fleets(&old, fleets) {
+            self.telemetry.journal().error(
+                "rebalance.quiesce",
+                format!(
+                    "quiesce failed after {} ms: {e:#}",
+                    t_quiesce.elapsed().as_millis()
+                ),
+            );
             self.revive_previous(&dir, &old)?;
             return Err(e.context(
                 "quiescing for a rebalance failed; the previous partition \
                  was revived and keeps serving",
             ));
         }
+        self.telemetry.journal().info(
+            "rebalance.quiesce",
+            format!(
+                "quiesced {} shard fleets in {} ms",
+                old.shards.len(),
+                t_quiesce.elapsed().as_millis()
+            ),
+        );
         let old_version_sum: u64 =
             old.shards.iter().map(|f| f.store.version()).sum();
 
@@ -884,6 +1084,7 @@ impl VqService {
         //    runs inside one closure so ANY failure — including the flush
         //    — takes the revive path below instead of leaving the service
         //    quiesced.
+        let t_migrate = Instant::now();
         let migrated = (|| -> Result<(persist::RebalanceReport, RestoredState, Epoch)> {
             match self
                 .checkpointer
@@ -914,6 +1115,7 @@ impl VqService {
                 &self.cfg,
                 &self.serve,
                 &self.counters,
+                &self.telemetry,
                 router,
                 restored.manifest.router_version,
                 Some(seeds),
@@ -931,6 +1133,14 @@ impl VqService {
             // flowing and a later retry (or the monitor) can attempt the
             // migration again.
             Err(e) => {
+                self.telemetry.journal().error(
+                    "rebalance.migrate",
+                    format!(
+                        "migration failed after {} ms; reviving the \
+                         previous partition: {e:#}",
+                        t_migrate.elapsed().as_millis()
+                    ),
+                );
                 self.revive_previous(&dir, &old)?;
                 return Err(e.context(
                     "rebalance failed; the previous partition was revived \
@@ -938,12 +1148,22 @@ impl VqService {
                 ));
             }
         };
+        self.telemetry.journal().info(
+            "rebalance.migrate",
+            format!(
+                "retrained router to v{} and moved {} rows in {} ms",
+                report.router_version,
+                report.moved_rows,
+                t_migrate.elapsed().as_millis()
+            ),
+        );
 
         // 5. Publish: swap the epoch, re-seed the checkpoint bookkeeping,
         //    spawn the new epoch's checkpointer, advance the fold clock
         //    past the version jump (migrated fleets resume at max of the
         //    old versions, so the summed version stays monotone and
         //    `merges >= version` keeps holding).
+        let t_swap = Instant::now();
         let shard_versions: Vec<u64> =
             restored.shards.iter().map(|s| s.version).collect();
         let new_version_sum: u64 = shard_versions.iter().sum();
@@ -958,6 +1178,15 @@ impl VqService {
             .store(restored.manifest.generation, Ordering::Release);
         self.publish_epoch(&dir, epoch);
         self.counters.rebalances.fetch_add(1, Ordering::Relaxed);
+        self.telemetry.journal().info(
+            "rebalance.swap",
+            format!(
+                "published router v{} ({} shards) in {} ms",
+                report.router_version,
+                shard_versions.len(),
+                t_swap.elapsed().as_millis()
+            ),
+        );
         Ok(RebalanceOutcome {
             router_version: report.router_version,
             moved_rows: report.moved_rows as u64,
@@ -978,6 +1207,15 @@ impl VqService {
     /// start, and the fresh checkpointer keeps retrying shard/manifest
     /// writes on its periodic pass.
     fn revive_previous(&self, dir: &Path, old: &Epoch) -> Result<()> {
+        self.telemetry.journal().warn(
+            "rebalance.revive",
+            format!(
+                "reviving the previous partition (router v{}, {} shards) \
+                 after a failed rebalance",
+                old.router_version,
+                old.shards.len()
+            ),
+        );
         if let Some(ck) = self
             .checkpointer
             .lock()
@@ -996,6 +1234,7 @@ impl VqService {
             &self.cfg,
             &self.serve,
             &self.counters,
+            &self.telemetry,
             old.router.clone(),
             old.router_version,
             Some(seeds),
@@ -1046,6 +1285,7 @@ impl VqService {
             &epoch,
             &self.last_checkpoint,
             &self.state_generation,
+            &self.telemetry,
             &self.cfg,
             &self.serve,
         );
@@ -1106,6 +1346,62 @@ impl VqService {
             dists.push(best_d);
         }
         (version, codes, dists)
+    }
+
+    /// [`VqService::query_nearest_probed`] with per-stage timings — the
+    /// front-end's instrumented entry point. Stage 1 routes every point
+    /// through the coarse quantizer (collecting flat probe lists so the
+    /// scan never re-routes), stage 2 scans the probed shards' snapshots;
+    /// both stages record into the telemetry plane and return their µs
+    /// for the slow-query log. Same epoch discipline as the untimed
+    /// path: routing and snapshots resolve against ONE `Arc`-cloned
+    /// epoch, and the answers are identical bit for bit.
+    pub(crate) fn query_nearest_timed(
+        &self,
+        points: &[f32],
+        probe_n: usize,
+    ) -> TimedQuery {
+        assert_eq!(points.len() % self.dim, 0, "points not a multiple of dim");
+        let ep = self.current();
+        let snaps: Vec<Arc<Snapshot>> =
+            ep.shards.iter().map(|s| s.store.load()).collect();
+        let version = snaps.iter().map(|s| s.version).sum();
+        let n = points.len() / self.dim;
+
+        let t_route = Instant::now();
+        let mut flat_probes = Vec::with_capacity(n * probe_n);
+        let mut probe_lens = Vec::with_capacity(n);
+        let mut probes = Vec::with_capacity(probe_n);
+        for z in points.chunks_exact(self.dim) {
+            ep.router.probe_into(z, probe_n, &mut probes);
+            probe_lens.push(probes.len());
+            flat_probes.extend_from_slice(&probes);
+        }
+        let route_us = t_route.elapsed().as_micros() as u64;
+
+        let t_scan = Instant::now();
+        let mut codes = Vec::with_capacity(n);
+        let mut dists = Vec::with_capacity(n);
+        let mut off = 0usize;
+        for (z, len) in points.chunks_exact(self.dim).zip(&probe_lens) {
+            let mut best_code = 0u32;
+            let mut best_d = f32::INFINITY;
+            for &s in &flat_probes[off..off + len] {
+                let (local, d) = snaps[s].nearest_one(z);
+                if d < best_d {
+                    best_d = d;
+                    best_code = (s * self.kappa_shard) as u32 + local;
+                }
+            }
+            off += len;
+            codes.push(best_code);
+            dists.push(best_d);
+        }
+        let scan_us = t_scan.elapsed().as_micros() as u64;
+
+        self.tel.route_us.record(route_us);
+        self.tel.scan_us.record(scan_us);
+        TimedQuery { version, codes, dists, route_us, scan_us }
     }
 
     /// Normalized empirical distortion of `points` (paper eq. 2) under the
@@ -1190,6 +1486,9 @@ impl VqService {
                 Ok(()) => {
                     self.counters.ingested.fetch_add(n, Ordering::Relaxed);
                     ep.shards[s].ingested.fetch_add(n, Ordering::Relaxed);
+                    // One batch now sits unabsorbed in a worker's queue;
+                    // the worker decrements when it takes it off.
+                    ep.shards[s].queue_depth.add(1);
                     accepted += n;
                 }
                 // Full queue — or a worker that raced us into shutdown and
@@ -1260,6 +1559,11 @@ impl VqService {
                     .elapsed()
                     .as_millis() as u64
             }),
+            uptime_ms: self.telemetry.uptime_ms(),
+            op_encode: self.tel.op_encode.requests.get(),
+            op_nearest: self.tel.op_nearest.requests.get(),
+            op_distortion: self.tel.op_distortion.requests.get(),
+            op_ingest: self.tel.op_ingest.requests.get(),
         }
     }
 
@@ -1274,6 +1578,16 @@ impl VqService {
     /// is an error.
     pub fn shutdown(&self) -> Result<ServeOutcome> {
         self.closing.store(true, Ordering::Release);
+        // The metrics-file writer exits on `closing`; join it first so
+        // its final snapshot is on disk before the fleets quiesce.
+        if let Some(j) = self
+            .metrics_writer
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+        {
+            let _ = j.join();
+        }
         // Follower: there are no fleets or checkpointer to drain — join
         // the sync loop and report the final adopted epoch. The read
         // path stays up afterwards, same as a quiesced leader.
@@ -1408,10 +1722,12 @@ fn join_fleets(
 /// epoch's router, seed and spawn every shard fleet (from `seeds` when
 /// warm-starting or migrating, from a fresh init on a cold start), and
 /// block until all `S * M` workers passed the ready barrier.
+#[allow(clippy::too_many_arguments)]
 fn spawn_epoch(
     cfg: &ExperimentConfig,
     serve: &ServeConfig,
     counters: &Arc<ServeCounters>,
+    telemetry: &Telemetry,
     router: Router,
     router_version: u64,
     seeds: Option<Vec<ShardSeed>>,
@@ -1472,6 +1788,10 @@ fn spawn_epoch(
 
         let store = SnapshotStore::with_version(seed.w0.clone(), seed.version);
         let merges = Arc::new(AtomicU64::new(seed.version));
+        // The gauge outlives epochs (names are stable across swaps); a
+        // fresh epoch's queues start empty, so reset it.
+        let queue_depth = telemetry.gauge(&format!("shard.{s}.queue_depth"));
+        queue_depth.set(0);
         let blob = BlobService::spawn(seed.w0.clone());
         let (queue, queue_rx) = QueueService::create(1024);
 
@@ -1524,6 +1844,7 @@ fn spawn_epoch(
                 max_points: serve.max_points_per_worker,
                 t0: seed.t0,
                 fold_base: seed.version,
+                queue_depth: Arc::clone(&queue_depth),
             };
             let q = queue.clone().with_latency(LatencyInjector::new(
                 serve.service_latency,
@@ -1550,6 +1871,7 @@ fn spawn_epoch(
             merges,
             ingested: Arc::new(AtomicU64::new(seed.ingested)),
             shed: Arc::new(AtomicU64::new(seed.shed)),
+            queue_depth,
             ingest_txs: Mutex::new(ingest_txs),
             ingest_cursor: AtomicUsize::new(0),
             fleet: Mutex::new(Some(Fleet {
@@ -1623,6 +1945,7 @@ fn spawn_checkpointer(
     epoch: &Epoch,
     last_checkpoint: &Arc<Vec<AtomicU64>>,
     generation: &Arc<AtomicU64>,
+    telemetry: &Telemetry,
     cfg: &ExperimentConfig,
     serve: &ServeConfig,
 ) -> Checkpointer {
@@ -1635,6 +1958,7 @@ fn spawn_checkpointer(
             dim: cfg.dim(),
             router_version: epoch.router_version,
             generation: Arc::clone(generation),
+            journal: Some(Arc::clone(telemetry.journal())),
         },
         epoch
             .shards
@@ -1823,22 +2147,34 @@ fn shipped_files(files: Vec<StateFile>) -> Vec<(String, Vec<u8>)> {
 /// ingest channels are empty (the service-level follower guard answers
 /// writes before routing ever looks here), and there is no fleet to
 /// quiesce. The read path cannot tell it from a trained epoch.
-fn follower_epoch(restored: &RestoredState) -> Epoch {
+fn follower_epoch(restored: &RestoredState, telemetry: &Telemetry) -> Epoch {
     let router = Router::from_centroids(restored.router.centroids.clone());
     let shards = restored
         .shards
         .iter()
-        .map(|st| ShardFleet {
-            store: SnapshotStore::with_version(st.codebook.clone(), st.version),
-            merges: Arc::new(AtomicU64::new(st.version)),
-            // A follower's per-epoch load counters are its own (always
-            // zero — it never ingests); the leader's are visible via the
-            // leader's Stats, not echoed here.
-            ingested: Arc::new(AtomicU64::new(0)),
-            shed: Arc::new(AtomicU64::new(0)),
-            ingest_txs: Mutex::new(Vec::new()),
-            ingest_cursor: AtomicUsize::new(0),
-            fleet: Mutex::new(None),
+        .enumerate()
+        .map(|(s, st)| {
+            // No fleets means no ingest queues; pin the gauge at 0 so a
+            // follower's metrics read coherently.
+            let queue_depth =
+                telemetry.gauge(&format!("shard.{s}.queue_depth"));
+            queue_depth.set(0);
+            ShardFleet {
+                store: SnapshotStore::with_version(
+                    st.codebook.clone(),
+                    st.version,
+                ),
+                merges: Arc::new(AtomicU64::new(st.version)),
+                // A follower's per-epoch load counters are its own
+                // (always zero — it never ingests); the leader's are
+                // visible via the leader's Stats, not echoed here.
+                ingested: Arc::new(AtomicU64::new(0)),
+                shed: Arc::new(AtomicU64::new(0)),
+                queue_depth,
+                ingest_txs: Mutex::new(Vec::new()),
+                ingest_cursor: AtomicUsize::new(0),
+                fleet: Mutex::new(None),
+            }
         })
         .collect();
     Epoch {
@@ -1892,6 +2228,51 @@ fn spawn_follower_sync(service: &Arc<VqService>) -> JoinHandle<()> {
             }
         })
         .expect("spawning follower sync thread")
+}
+
+/// The `--metrics-file` writer: a background thread that snapshots the
+/// telemetry plane every `every` and rewrites `path` with the JSON
+/// document. Holds only a `Weak` handle (like the monitor and the sync
+/// loop), sleeps in short slices so shutdown never waits a full period,
+/// and writes one final snapshot on exit so the file always carries the
+/// end-of-life totals. A failed write logs and retries next tick.
+fn spawn_metrics_writer(
+    service: &Arc<VqService>,
+    path: PathBuf,
+    every: Duration,
+) -> JoinHandle<()> {
+    let weak: Weak<VqService> = Arc::downgrade(service);
+    let write = move |svc: &VqService| {
+        let doc = svc.metrics_snapshot(JOURNAL_CAP).to_json().to_pretty();
+        if let Err(e) = std::fs::write(&path, doc) {
+            eprintln!(
+                "dalvq metrics writer: writing {} failed (will retry): {e:#}",
+                path.display()
+            );
+        }
+    };
+    std::thread::Builder::new()
+        .name("dalvq-metrics-writer".into())
+        .spawn(move || loop {
+            let wake = Instant::now() + every;
+            while Instant::now() < wake {
+                std::thread::sleep(Duration::from_millis(10).min(every));
+                match weak.upgrade() {
+                    Some(svc) if !svc.closing.load(Ordering::Acquire) => {}
+                    Some(svc) => {
+                        write(&svc); // final end-of-life snapshot
+                        return;
+                    }
+                    None => return,
+                }
+            }
+            let Some(svc) = weak.upgrade() else { return };
+            write(&svc);
+            if svc.closing.load(Ordering::Acquire) {
+                return;
+            }
+        })
+        .expect("spawning metrics writer thread")
 }
 
 /// Pad a shard's bootstrap region up to `min_pts` points: cycle the
@@ -2186,7 +2567,7 @@ mod tests {
                 },
             ],
         };
-        let ep = follower_epoch(&restored);
+        let ep = follower_epoch(&restored, &Telemetry::new(8));
         assert_eq!(ep.router_version, 3);
         assert_eq!(ep.shards.len(), 2);
         assert_eq!(ep.base_versions, vec![8, 9]);
@@ -2202,6 +2583,36 @@ mod tests {
             assert!(fleet.ingest_txs.lock().unwrap().is_empty());
             assert!(fleet.fleet.lock().unwrap().is_none());
         }
+    }
+
+    #[test]
+    fn timed_query_agrees_with_the_untimed_path() {
+        let (mut cfg, mut serve) = tiny_cfg(1);
+        cfg.vq.kappa = 8;
+        serve.shards = 4;
+        serve.probe_n = 2;
+        let svc = VqService::start(&cfg, &serve).unwrap();
+        // Quiesce first so both reads see identical frozen snapshots
+        // (the read path stays up after shutdown by design).
+        svc.shutdown().unwrap();
+        let eval = cfg.data.mixture.eval_sample(64, cfg.seed);
+        let (version, codes, dists) = svc.query_nearest_probed(&eval, 2);
+        let timed = svc.query_nearest_timed(&eval, 2);
+        assert_eq!(timed.version, version);
+        assert_eq!(timed.codes, codes);
+        assert_eq!(timed.dists, dists);
+        // the stage timings landed in the histograms
+        let snap = svc.metrics_snapshot(0);
+        let hist = |name: &str| {
+            snap.hists
+                .iter()
+                .find(|(n, _)| n == name)
+                .unwrap_or_else(|| panic!("no histogram {name}"))
+                .1
+                .clone()
+        };
+        assert_eq!(hist("query.route_us").count, 1);
+        assert_eq!(hist("query.scan_us").count, 1);
     }
 
     #[test]

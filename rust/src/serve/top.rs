@@ -1,0 +1,282 @@
+//! `dalvq top`: a live terminal view of a running server's telemetry.
+//!
+//! Polls `Stats` + `Metrics` over the wire protocol on a fixed cadence
+//! and redraws one screenful per poll: a header (role, uptime, codebook
+//! and router versions), a per-op table joining the `op.<name>.requests`
+//! counters with the `op.<name>.total_us` latency digests, a per-shard
+//! table joining `StatsReply`'s shard vectors with the live
+//! `shard.<s>.queue_depth` gauges, and the newest journal events. The
+//! rendering is a pure function of the two replies ([`render`]), so the
+//! unit tests exercise it on synthetic payloads without a server.
+
+use std::io::Write as _;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::obs::Level;
+
+use super::client::Client;
+use super::protocol::{MetricsReply, StatsReply};
+
+/// Journal events requested (and shown) per poll.
+const TOP_EVENTS: u32 = 8;
+
+/// One `dalvq top` invocation.
+#[derive(Debug, Clone)]
+pub struct TopSpec {
+    /// Server address (`host:port`).
+    pub addr: String,
+    /// Milliseconds between polls.
+    pub interval_ms: u64,
+    /// Screens to draw before exiting (0 = until interrupted).
+    pub iterations: u64,
+}
+
+impl Default for TopSpec {
+    fn default() -> Self {
+        Self { addr: "127.0.0.1:7171".into(), interval_ms: 1_000, iterations: 0 }
+    }
+}
+
+/// Poll `spec.addr` and redraw the telemetry screen every
+/// `spec.interval_ms` until `spec.iterations` screens have been drawn
+/// (forever when 0). One connection for the whole run; a dropped server
+/// surfaces as the poll error it is.
+pub fn run_top(spec: &TopSpec) -> Result<()> {
+    let mut client = Client::connect(spec.addr.as_str())?;
+    let mut drawn: u64 = 0;
+    loop {
+        let stats = client.stats()?;
+        let metrics = client.metrics(TOP_EVENTS)?;
+        let screen = render(&spec.addr, &stats, &metrics);
+        let mut out = std::io::stdout().lock();
+        // Clear + home, then the fresh screen — the classic top redraw.
+        write!(out, "\x1b[2J\x1b[H{screen}")?;
+        out.flush()?;
+        drawn += 1;
+        if spec.iterations > 0 && drawn >= spec.iterations {
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_millis(spec.interval_ms.max(1)));
+    }
+}
+
+/// Render one screenful from a `Stats` + `Metrics` reply pair. Pure:
+/// everything shown is a function of the arguments.
+pub fn render(addr: &str, stats: &StatsReply, metrics: &MetricsReply) -> String {
+    let mut s = String::new();
+    let up = metrics.uptime_ms as f64 / 1000.0;
+    let role =
+        if stats.role.is_empty() { "leader" } else { stats.role.as_str() };
+    s.push_str(&format!("dalvq top — {addr} ({role})  up {up:.1} s\n"));
+    s.push_str(&format!(
+        "codebook v{}  router v{}  kappa {}  dim {}  shards {}  probe {}  \
+         workers {}\n",
+        stats.version,
+        stats.router_version,
+        stats.kappa,
+        stats.dim,
+        stats.shards,
+        stats.probe_n,
+        stats.workers,
+    ));
+    if stats.role == "follower" {
+        s.push_str(&format!(
+            "following {}  lag {} folds  last sync {} ms ago\n",
+            stats.leader_addr, stats.sync_lag_folds, stats.last_sync,
+        ));
+    }
+    s.push('\n');
+
+    // ------------------------------------------------------ per-op table
+    s.push_str(&format!(
+        "{:<12} {:>10} {:>9} {:>8} {:>8} {:>8} {:>9}\n",
+        "op", "requests", "mean_us", "p50_us", "p95_us", "p99_us", "max_us",
+    ));
+    for op in ["encode", "nearest", "distortion", "ingest", "other"] {
+        let requests = counter(metrics, &format!("op.{op}.requests"));
+        let hist = metrics
+            .hists
+            .iter()
+            .find(|h| h.name == format!("op.{op}.total_us"));
+        match hist {
+            Some(h) if h.count > 0 => s.push_str(&format!(
+                "{op:<12} {requests:>10} {:>9.0} {:>8.0} {:>8.0} {:>8.0} \
+                 {:>9.0}\n",
+                h.mean_us, h.p50_us, h.p95_us, h.p99_us, h.max_us,
+            )),
+            _ => s.push_str(&format!(
+                "{op:<12} {requests:>10} {:>9} {:>8} {:>8} {:>8} {:>9}\n",
+                "-", "-", "-", "-", "-",
+            )),
+        }
+    }
+    s.push('\n');
+
+    // --------------------------------------------------- per-shard table
+    s.push_str(&format!(
+        "{:<6} {:>10} {:>10} {:>12} {:>10} {:>7}\n",
+        "shard", "version", "merges", "ingest", "shed", "queue",
+    ));
+    for sh in 0..stats.shard_versions.len() {
+        let at = |v: &[u64]| v.get(sh).copied().unwrap_or(0);
+        s.push_str(&format!(
+            "{sh:<6} {:>10} {:>10} {:>12} {:>10} {:>7}\n",
+            at(&stats.shard_versions),
+            at(&stats.shard_merges),
+            at(&stats.shard_ingest),
+            at(&stats.shard_shed),
+            gauge(metrics, &format!("shard.{sh}.queue_depth")),
+        ));
+    }
+    s.push('\n');
+
+    // ------------------------------------------------------- events tail
+    s.push_str("recent events (oldest first):\n");
+    if metrics.events.is_empty() {
+        s.push_str("  (none)\n");
+    }
+    for e in &metrics.events {
+        let level = Level::from_u8(e.level).map_or("?????", Level::label);
+        s.push_str(&format!(
+            "  [{level:<5}] #{:<4} +{:>8} ms  {:<18} {}\n",
+            e.seq, e.ts_ms, e.kind, e.message,
+        ));
+    }
+    s
+}
+
+fn counter(metrics: &MetricsReply, name: &str) -> u64 {
+    metrics
+        .counters
+        .iter()
+        .find(|(n, _)| n == name)
+        .map_or(0, |(_, v)| *v)
+}
+
+fn gauge(metrics: &MetricsReply, name: &str) -> u64 {
+    metrics
+        .gauges
+        .iter()
+        .find(|(n, _)| n == name)
+        .map_or(0, |(_, v)| *v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::protocol::{MetricEvent, MetricHist};
+    use super::*;
+
+    fn sample_stats() -> StatsReply {
+        StatsReply {
+            version: 42,
+            kappa: 16,
+            dim: 2,
+            workers: 8,
+            shards: 2,
+            probe_n: 1,
+            router_version: 3,
+            shard_versions: vec![40, 2],
+            shard_merges: vec![40, 2],
+            shard_ingest: vec![900, 100],
+            shard_shed: vec![7, 0],
+            role: "leader".into(),
+            uptime_ms: 12_345,
+            op_encode: 5,
+            op_nearest: 11,
+            ..StatsReply::default()
+        }
+    }
+
+    fn sample_metrics() -> MetricsReply {
+        MetricsReply {
+            uptime_ms: 12_345,
+            counters: vec![
+                ("op.encode.requests".into(), 5),
+                ("op.nearest.requests".into(), 11),
+            ],
+            gauges: vec![
+                ("shard.0.queue_depth".into(), 3),
+                ("shard.1.queue_depth".into(), 0),
+            ],
+            hists: vec![MetricHist {
+                name: "op.nearest.total_us".into(),
+                count: 11,
+                mean_us: 120.0,
+                p50_us: 100.0,
+                p95_us: 300.0,
+                p99_us: 400.0,
+                max_us: 512.0,
+            }],
+            events: vec![MetricEvent {
+                seq: 1,
+                ts_ms: 99,
+                level: 1,
+                kind: "slow_query".into(),
+                message: "nearest took 9000 us".into(),
+            }],
+        }
+    }
+
+    #[test]
+    fn render_shows_header_ops_shards_and_events() {
+        let screen = render("127.0.0.1:7171", &sample_stats(), &sample_metrics());
+        // header
+        assert!(screen.contains("127.0.0.1:7171 (leader)"), "{screen}");
+        assert!(screen.contains("up 12.3 s"), "{screen}");
+        assert!(screen.contains("codebook v42"), "{screen}");
+        assert!(screen.contains("router v3"), "{screen}");
+        // per-op rows: counters joined with the latency digest
+        let nearest = screen
+            .lines()
+            .find(|l| l.starts_with("nearest"))
+            .expect("nearest row");
+        assert!(nearest.contains("11"), "{nearest}");
+        assert!(nearest.contains("400"), "{nearest}"); // p99
+        // an op with no samples renders dashes, not zeros
+        let ingest = screen
+            .lines()
+            .find(|l| l.starts_with("ingest"))
+            .expect("ingest row");
+        assert!(ingest.contains('-'), "{ingest}");
+        // per-shard rows join stats vectors with queue-depth gauges
+        let shard0 = screen
+            .lines()
+            .find(|l| l.starts_with("0 "))
+            .expect("shard 0 row");
+        assert!(shard0.contains("900"), "{shard0}");
+        assert!(shard0.ends_with('3'), "{shard0}"); // queue depth
+        // events tail with decoded level
+        assert!(screen.contains("[warn ]"), "{screen}");
+        assert!(screen.contains("slow_query"), "{screen}");
+    }
+
+    #[test]
+    fn render_follower_header_names_the_leader() {
+        let mut stats = sample_stats();
+        stats.role = "follower".into();
+        stats.leader_addr = "127.0.0.1:7000".into();
+        stats.sync_lag_folds = 12;
+        let screen = render("127.0.0.1:7171", &stats, &sample_metrics());
+        assert!(screen.contains("(follower)"), "{screen}");
+        assert!(
+            screen.contains("following 127.0.0.1:7000  lag 12 folds"),
+            "{screen}"
+        );
+    }
+
+    #[test]
+    fn render_tolerates_missing_metrics() {
+        // A server that answered Stats but reported an empty telemetry
+        // plane still renders every section.
+        let screen =
+            render("x:1", &sample_stats(), &MetricsReply::default());
+        assert!(screen.contains("(none)"), "{screen}");
+        let encode = screen
+            .lines()
+            .find(|l| l.starts_with("encode"))
+            .expect("encode row");
+        assert!(encode.contains('0'), "{encode}"); // zero requests
+    }
+}

@@ -23,6 +23,7 @@ use anyhow::{anyhow, Result};
 
 use crate::cloud::{start_exchange, BlobHandle, DeltaMsg, QueueHandle};
 use crate::data::Shard;
+use crate::obs::Gauge;
 use crate::runtime::EngineSpec;
 use crate::vq::{Codebook, Delta, Schedule};
 
@@ -71,6 +72,10 @@ pub struct ServeWorkerParams {
     /// — without the base, a resumed blob version would satisfy the wait
     /// before the delta actually folded.
     pub fold_base: u64,
+    /// The shard's unabsorbed-ingest gauge (`shard.<s>.queue_depth`):
+    /// the service increments it per batch accepted into `ingest_rx`;
+    /// this worker decrements it once per batch taken off the channel.
+    pub queue_depth: Arc<Gauge>,
 }
 
 /// What a serving worker reports at shutdown.
@@ -165,7 +170,10 @@ pub fn run_serve_worker(
             let (batch, offset) = match carry.take() {
                 Some(pending) => pending,
                 None => match ingest_rx.try_recv() {
-                    Ok(batch) => (batch, 0),
+                    Ok(batch) => {
+                        params.queue_depth.sub(1);
+                        (batch, 0)
+                    }
                     Err(mpsc::TryRecvError::Empty) => break,
                     // Service gone: finish the loop on the stop flag.
                     Err(mpsc::TryRecvError::Disconnected) => break,

@@ -12,8 +12,8 @@
 //!   trailing garbage, and `read_frame` against mid-frame EOF.
 
 use dalvq::serve::protocol::{
-    read_frame, write_frame, Request, Response, StateFile, StateShipment,
-    StatsReply, MAX_FRAME,
+    read_frame, write_frame, MetricEvent, MetricHist, MetricsReply, Request,
+    Response, StateFile, StateShipment, StatsReply, MAX_FRAME,
 };
 use dalvq::util::Rng;
 
@@ -54,7 +54,7 @@ fn rand_bytes(rng: &mut Rng, max_len: usize) -> Vec<u8> {
 }
 
 fn rand_request(rng: &mut Rng) -> Request {
-    match rng.usize(8) {
+    match rng.usize(9) {
         0 => Request::Encode { points: rand_f32s(rng, 64) },
         1 => Request::Nearest { points: rand_f32s(rng, 64) },
         2 => Request::Distortion { points: rand_f32s(rng, 64) },
@@ -62,12 +62,50 @@ fn rand_request(rng: &mut Rng) -> Request {
         4 => Request::Checkpoint,
         5 => Request::Rebalance { want_remap: rng.bool(0.5) },
         6 => Request::FetchState { have_generation: rng.next_u64() },
+        7 => Request::Metrics { max_events: rng.next_u64() as u32 },
         _ => Request::Stats,
     }
 }
 
+fn rand_metric_pairs(rng: &mut Rng, max_len: usize) -> Vec<(String, u64)> {
+    let n = rng.usize(max_len + 1);
+    (0..n).map(|_| (rand_string(rng, 24), rng.next_u64())).collect()
+}
+
 fn rand_response(rng: &mut Rng) -> Response {
-    match rng.usize(10) {
+    match rng.usize(11) {
+        10 => Response::Metrics(MetricsReply {
+            uptime_ms: rng.next_u64(),
+            counters: rand_metric_pairs(rng, 8),
+            gauges: rand_metric_pairs(rng, 8),
+            hists: {
+                let n = rng.usize(5);
+                (0..n)
+                    .map(|_| MetricHist {
+                        name: rand_string(rng, 24),
+                        count: rng.next_u64(),
+                        mean_us: rng.range_f64(0.0, 1e9),
+                        p50_us: rng.range_f64(0.0, 1e9),
+                        p95_us: rng.range_f64(0.0, 1e9),
+                        p99_us: rng.range_f64(0.0, 1e9),
+                        max_us: rng.range_f64(0.0, 1e9),
+                    })
+                    .collect()
+            },
+            events: {
+                let n = rng.usize(5);
+                (0..n)
+                    .map(|_| MetricEvent {
+                        seq: rng.next_u64(),
+                        ts_ms: rng.next_u64(),
+                        // reserved levels must survive the wire verbatim
+                        level: rng.next_u64() as u8,
+                        kind: rand_string(rng, 24),
+                        message: rand_string(rng, 64),
+                    })
+                    .collect()
+            },
+        }),
         9 => Response::State(StateShipment {
             generation: rng.next_u64(),
             leader_version: rng.next_u64(),
@@ -129,6 +167,11 @@ fn rand_response(rng: &mut Rng) -> Response {
             leader_addr: rand_string(rng, 24),
             sync_lag_folds: rng.next_u64(),
             last_sync: rng.next_u64(),
+            uptime_ms: rng.next_u64(),
+            op_encode: rng.next_u64(),
+            op_nearest: rng.next_u64(),
+            op_distortion: rng.next_u64(),
+            op_ingest: rng.next_u64(),
         }),
         _ => Response::Error { message: rand_string(rng, 40) },
     }
@@ -207,8 +250,9 @@ fn empty_payload_is_an_error() {
 
 #[test]
 fn unknown_opcodes_err_for_both_directions() {
-    let known_req = [0x01, 0x02, 0x03, 0x04, 0x05, 0x06, 0x07, 0x08];
-    let known_resp = [0x81, 0x82, 0x83, 0x84, 0x85, 0x86, 0x87, 0x88, 0xFE, 0xFF];
+    let known_req = [0x01, 0x02, 0x03, 0x04, 0x05, 0x06, 0x07, 0x08, 0x09];
+    let known_resp =
+        [0x81, 0x82, 0x83, 0x84, 0x85, 0x86, 0x87, 0x88, 0x89, 0xFE, 0xFF];
     for op in 0..=255u8 {
         if !known_req.contains(&op) {
             assert!(Request::decode(&[op]).is_err(), "req op 0x{op:02x}");
@@ -247,11 +291,11 @@ fn lying_element_counts_err_without_overallocating() {
     // default tail — six empty vectors/strings at one u32 count each
     // (shard_versions, shard_merges, shard_ingest, shard_shed,
     // last_checkpoint, state_dir), the two empty replication strings
-    // (role, leader_addr) and the two trailing u64s (sync_lag_folds,
-    // last_sync) = 8 * 4 + 2 * 8 = 48 bytes — and replace with a lying
-    // pair
+    // (role, leader_addr) and the seven trailing u64s (sync_lag_folds,
+    // last_sync, uptime_ms and the four per-op counters) = 8 * 4 +
+    // 7 * 8 = 88 bytes — and replace with a lying pair
     let good = Response::Stats(StatsReply::default()).encode();
-    let mut wire = good[..good.len() - 48].to_vec();
+    let mut wire = good[..good.len() - 88].to_vec();
     wire.extend_from_slice(&9u32.to_le_bytes()); // shard_versions: claims 9
     wire.extend_from_slice(&0u32.to_le_bytes()); // shard_merges: 0
     assert!(Response::decode(&wire).is_err());
@@ -277,10 +321,10 @@ fn lying_element_counts_err_without_overallocating() {
     assert!(Response::decode(&wire).is_err());
 
     // Stats whose state_dir length outruns the payload: strip the
-    // post-state_dir tail (role + leader_addr counts, two u64s = 24
+    // post-state_dir tail (role + leader_addr counts, seven u64s = 64
     // bytes) plus the state_dir count itself, then lie about its length
     let good = Response::Stats(StatsReply::default()).encode();
-    let mut wire = good[..good.len() - 28].to_vec();
+    let mut wire = good[..good.len() - 68].to_vec();
     wire.extend_from_slice(&1_000u32.to_le_bytes());
     wire.extend_from_slice(b"short");
     assert!(Response::decode(&wire).is_err());
@@ -300,6 +344,46 @@ fn lying_element_counts_err_without_overallocating() {
     wire.extend_from_slice(&1u32.to_le_bytes()); // name len 1
     wire.push(b'x');
     wire.extend_from_slice(&u32::MAX.to_le_bytes()); // bytes len lies
+    assert!(Response::decode(&wire).is_err());
+
+    // Metrics whose counter count lies (claims u32::MAX, carries none) —
+    // each counter consumes at least 12 bytes (name count + value), so
+    // the bounds check must fire before any allocation sized by the lie
+    let mut wire = vec![0x89u8];
+    wire.extend_from_slice(&7u64.to_le_bytes()); // uptime_ms
+    wire.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert!(Response::decode(&wire).is_err());
+
+    // Metrics whose histogram count lies (counters and gauges fine)
+    let mut wire = vec![0x89u8];
+    wire.extend_from_slice(&7u64.to_le_bytes()); // uptime_ms
+    wire.extend_from_slice(&0u32.to_le_bytes()); // no counters
+    wire.extend_from_slice(&0u32.to_le_bytes()); // no gauges
+    wire.extend_from_slice(&u32::MAX.to_le_bytes()); // hists lie
+    assert!(Response::decode(&wire).is_err());
+
+    // Metrics whose event count lies (everything before it fine)
+    let mut wire = vec![0x89u8];
+    wire.extend_from_slice(&7u64.to_le_bytes()); // uptime_ms
+    wire.extend_from_slice(&0u32.to_le_bytes()); // no counters
+    wire.extend_from_slice(&0u32.to_le_bytes()); // no gauges
+    wire.extend_from_slice(&0u32.to_le_bytes()); // no hists
+    wire.extend_from_slice(&u32::MAX.to_le_bytes()); // events lie
+    assert!(Response::decode(&wire).is_err());
+
+    // Metrics whose event message length outruns the payload
+    let mut wire = vec![0x89u8];
+    wire.extend_from_slice(&7u64.to_le_bytes()); // uptime_ms
+    wire.extend_from_slice(&0u32.to_le_bytes()); // no counters
+    wire.extend_from_slice(&0u32.to_le_bytes()); // no gauges
+    wire.extend_from_slice(&0u32.to_le_bytes()); // no hists
+    wire.extend_from_slice(&1u32.to_le_bytes()); // one event
+    wire.extend_from_slice(&1u64.to_le_bytes()); // seq
+    wire.extend_from_slice(&2u64.to_le_bytes()); // ts_ms
+    wire.push(0); // level
+    wire.extend_from_slice(&1u32.to_le_bytes()); // kind len 1
+    wire.push(b'k');
+    wire.extend_from_slice(&u32::MAX.to_le_bytes()); // message lies
     assert!(Response::decode(&wire).is_err());
 
     // NotLeader whose address length lies
@@ -344,6 +428,11 @@ fn stats_follower_fields_roundtrip_exactly() {
         leader_addr: "10.1.2.3:7171".into(),
         sync_lag_folds: 7,
         last_sync: 312,
+        uptime_ms: 90_000,
+        op_encode: 250,
+        op_nearest: 500,
+        op_distortion: 125,
+        op_ingest: 0, // a follower answers NotLeader to every ingest
     };
     let wire = Response::Stats(follower.clone()).encode();
     match Response::decode(&wire).unwrap() {

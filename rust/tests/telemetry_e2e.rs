@@ -1,0 +1,338 @@
+//! Telemetry plane end-to-end: the acceptance suite for server-side
+//! observability.
+//!
+//! The paper's whole argument is about where wall-clock time goes —
+//! compute vs. routing vs. synchronization — and until now the repo only
+//! measured that from the *outside* (the load generator's client-side
+//! percentiles). Pinned here: the server measures itself consistently
+//! with what clients observe (same nearest-rank percentile definition,
+//! so server-side latency digests must sit within the client-side
+//! envelope), the fleet journals its lifecycle (sync adoptions on a
+//! follower, slow queries over a configured threshold), and the plane is
+//! reachable all three ways — the `Metrics` wire op, `StatsReply`'s
+//! per-op counters, and `--metrics-file` JSON snapshots.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use dalvq::config::{ExperimentConfig, SchemeConfig, ServeConfig};
+use dalvq::serve::protocol::MetricsReply;
+use dalvq::serve::{run_load, Client, LoadSpec, Server, VqService};
+use dalvq::sim::DelayModel;
+use dalvq::util::Json;
+use dalvq::vq::Schedule;
+
+/// Real-time fleets; run tests one at a time (same discipline as
+/// serve_e2e.rs / replication_e2e.rs).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A fresh scratch directory unique to `tag` (removed first, so reruns
+/// of a failed test never see stale state).
+fn state_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("dalvq-telemetry-e2e-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The durable sharded leader of this suite (the replication_e2e shape):
+/// 4 shards x 4 prototypes over a 4-component mixture, paced gently,
+/// checkpointing frequently.
+fn leader_cfg(dir: &Path) -> (ExperimentConfig, ServeConfig) {
+    let mut cfg = ExperimentConfig::default();
+    cfg.m = 1;
+    cfg.data.mixture.components = 4;
+    cfg.data.mixture.dim = 2;
+    cfg.data.mixture.noise_frac = 0.0;
+    cfg.data.n_total = 4_000;
+    cfg.data.eval_points = 512;
+    cfg.vq.kappa = 16;
+    cfg.vq.schedule = Schedule::Constant { eps0: 0.02 };
+    cfg.scheme = SchemeConfig::AsyncDelta {
+        tau: 10,
+        up_delay: DelayModel::Instant,
+        down_delay: DelayModel::Instant,
+    };
+    let mut serve = ServeConfig::default();
+    serve.shards = 4;
+    serve.probe_n = 2;
+    serve.points_per_exchange = 50;
+    serve.point_compute = 2e-5;
+    serve.ingest_queue = 1_024;
+    serve.state_dir = Some(dir.to_path_buf());
+    serve.checkpoint_every = 8;
+    (cfg, serve)
+}
+
+/// Block until `f` returns true or `secs` elapse (then panic with `what`).
+fn wait_for(secs: u64, what: &str, mut f: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while !f() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn counter(m: &MetricsReply, name: &str) -> u64 {
+    m.counters.iter().find(|(n, _)| n == name).map_or(0, |(_, v)| *v)
+}
+
+fn gauge_names(m: &MetricsReply) -> Vec<&str> {
+    m.gauges.iter().map(|(n, _)| n.as_str()).collect()
+}
+
+/// The acceptance scenario: a follower's telemetry plane — reached
+/// through the `Metrics` wire op on the follower itself — reports its
+/// `sync.lag_folds` gauge and journals every checkpoint-generation
+/// adoption, while the leader's plane journals the `state.ship` cuts and
+/// `checkpoint.flush`es that fed it.
+#[test]
+fn follower_reports_sync_adoptions_and_lag_through_the_metrics_op() {
+    let _serial = serial();
+    let ldir = state_dir("sync-leader");
+    let (cfg, serve) = leader_cfg(&ldir);
+    let leader = VqService::start(&cfg, &serve).unwrap();
+    let lsrv = Server::start(Arc::clone(&leader), &serve.addr).unwrap();
+    let laddr = lsrv.local_addr().to_string();
+    let mut lclient = Client::connect(laddr.as_str()).unwrap();
+
+    let mut fserve = ServeConfig::default();
+    fserve.follow = Some(laddr.clone());
+    fserve.sync_every_ms = 25;
+    fserve.probe_n = 2;
+    let follower = VqService::start(&cfg, &fserve).unwrap();
+    let fsrv = Server::start(Arc::clone(&follower), &fserve.addr).unwrap();
+    let mut fclient = Client::connect(fsrv.local_addr()).unwrap();
+
+    // The bootstrap restore is itself a journaled adoption, so the
+    // follower's plane is never empty.
+    let m = fclient.metrics(64).unwrap();
+    assert!(
+        m.events.iter().any(|e| e.kind == "sync.adopt"),
+        "bootstrap adoption missing from {:?}",
+        m.events
+    );
+
+    // Drive leader training until the follower adopts a *new* generation
+    // (a second sync.adopt event beyond the bootstrap one).
+    let v0 = follower.version();
+    let mut stream_t = 0u64;
+    wait_for(30, "a post-bootstrap adoption", || {
+        let batch = cfg.data.mixture.generate(128, cfg.seed, 2 + stream_t);
+        stream_t += 1;
+        lclient.ingest(&batch).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        follower.version() > v0
+    });
+
+    let m = fclient.metrics(64).unwrap();
+    let adoptions =
+        m.events.iter().filter(|e| e.kind == "sync.adopt").count();
+    assert!(adoptions >= 2, "only {adoptions} adoption(s) in {:?}", m.events);
+    // every adoption is info-leveled and says what it closed
+    for e in m.events.iter().filter(|e| e.kind == "sync.adopt") {
+        assert_eq!(e.level, 0, "{e:?}");
+        assert!(e.message.contains("generation"), "{e:?}");
+    }
+    // the lag gauge is part of the same snapshot the Stats surface reports
+    assert!(
+        gauge_names(&m).contains(&"sync.lag_folds"),
+        "no sync.lag_folds gauge in {:?}",
+        m.gauges
+    );
+    assert!(m.uptime_ms > 0);
+
+    // The leader's plane journals the producer side of the same story:
+    // checkpoint flushes and the state bundles it shipped to the follower.
+    let lm = lclient.metrics(64).unwrap();
+    assert!(
+        lm.events.iter().any(|e| e.kind == "checkpoint.flush"),
+        "no checkpoint.flush in {:?}",
+        lm.events
+    );
+    assert!(
+        lm.events.iter().any(|e| e.kind == "state.ship"),
+        "no state.ship in {:?}",
+        lm.events
+    );
+
+    fsrv.shutdown().unwrap();
+    follower.shutdown().unwrap();
+    lsrv.shutdown().unwrap();
+    leader.shutdown().unwrap();
+    std::fs::remove_dir_all(&ldir).unwrap();
+}
+
+/// Server-side per-op accounting agrees with the load generator's
+/// client-side view: request counters match the driven op mix exactly
+/// (on the Metrics surface *and* the StatsReply tail), and the
+/// server-side latency digest sits inside the client-side envelope —
+/// a handler cannot take longer than the slowest round trip.
+#[test]
+fn server_side_latency_digest_sits_inside_the_loadgen_envelope() {
+    let _serial = serial();
+    let ldir = state_dir("loadgen");
+    let (cfg, serve) = leader_cfg(&ldir);
+    let service = VqService::start(&cfg, &serve).unwrap();
+    let server = Server::start(Arc::clone(&service), &serve.addr).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut spec = LoadSpec::default();
+    spec.connections = 4;
+    spec.requests_per_conn = 50;
+    spec.batch_points = 32;
+    spec.ingest_frac = 0.25;
+    spec.seed = cfg.seed;
+    let report = run_load(&addr, &spec, &cfg.data.mixture).unwrap();
+    assert_eq!(report.requests, 4 * 50);
+
+    let mut client = Client::connect(addr.as_str()).unwrap();
+    let m = client.metrics(0).unwrap();
+
+    // Per-op counters match the workload exactly — nothing else drove
+    // the query ops.
+    assert_eq!(counter(&m, "op.encode.requests"), report.ops.encode);
+    assert_eq!(counter(&m, "op.nearest.requests"), report.ops.nearest);
+    assert_eq!(counter(&m, "op.distortion.requests"), report.ops.distortion);
+    assert_eq!(counter(&m, "op.ingest.requests"), report.ops.ingest);
+
+    // ...and the StatsReply tail carries the same counts.
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.op_encode, report.ops.encode);
+    assert_eq!(stats.op_nearest, report.ops.nearest);
+    assert_eq!(stats.op_distortion, report.ops.distortion);
+    assert_eq!(stats.op_ingest, report.ops.ingest);
+    assert_eq!(
+        stats.op_encode + stats.op_nearest + stats.op_distortion,
+        stats.queries,
+        "read ops and the query counter must agree"
+    );
+    assert!(stats.uptime_ms > 0);
+
+    // The server-side digest is per-op and excludes framing + network,
+    // so no op's p99 may exceed the slowest client-observed round trip
+    // (plus the histogram's <= 6.25% bucket quantization and a little
+    // scheduling slack).
+    let bound = report.max_us * 1.25 + 500.0;
+    for op in ["encode", "nearest", "distortion", "ingest"] {
+        let name = format!("op.{op}.total_us");
+        let h = m
+            .hists
+            .iter()
+            .find(|h| h.name == name)
+            .unwrap_or_else(|| panic!("no {name} digest"));
+        assert_eq!(h.count, counter(&m, &format!("op.{op}.requests")));
+        assert!(
+            h.p99_us <= bound,
+            "{name} p99 {} us outruns the client envelope {} us",
+            h.p99_us,
+            bound
+        );
+        assert!(h.p50_us <= h.p95_us && h.p95_us <= h.p99_us, "{name}");
+        assert!(h.p99_us <= h.max_us, "{name}: digest clamps to the max");
+    }
+    // the stage digests cover the same requests: every routed read
+    // recorded a route and a scan sample
+    let reads = report.ops.encode + report.ops.nearest + report.ops.distortion;
+    for stage in ["query.route_us", "query.scan_us"] {
+        let h = m.hists.iter().find(|h| h.name == stage).unwrap();
+        assert_eq!(h.count, reads, "{stage}");
+    }
+
+    server.shutdown().unwrap();
+    service.shutdown().unwrap();
+    std::fs::remove_dir_all(&ldir).unwrap();
+}
+
+/// With `slow_query_us` armed at 1 µs, every query is "slow": the
+/// counter climbs and the journal carries warn-leveled events naming the
+/// op with its route/scan stage breakdown.
+#[test]
+fn slow_query_log_journals_over_threshold_requests() {
+    let _serial = serial();
+    let ldir = state_dir("slow-query");
+    let (cfg, mut serve) = leader_cfg(&ldir);
+    serve.slow_query_us = 1;
+    let service = VqService::start(&cfg, &serve).unwrap();
+    let server = Server::start(Arc::clone(&service), &serve.addr).unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+
+    let eval = cfg.data.mixture.eval_sample(512, cfg.seed);
+    let (codes, _, _) = client.nearest(&eval).unwrap();
+    assert_eq!(codes.len(), 512);
+
+    let m = client.metrics(64).unwrap();
+    assert!(counter(&m, "slow_queries") >= 1, "{:?}", m.counters);
+    let slow: Vec<_> =
+        m.events.iter().filter(|e| e.kind == "slow_query").collect();
+    assert!(!slow.is_empty(), "no slow_query events in {:?}", m.events);
+    let e = slow
+        .iter()
+        .find(|e| e.message.starts_with("nearest"))
+        .unwrap_or_else(|| panic!("no nearest slow_query in {slow:?}"));
+    assert_eq!(e.level, 1, "slow queries are warn-leveled: {e:?}");
+    assert!(e.message.contains("threshold 1 us"), "{e:?}");
+    // reads carry the stage breakdown
+    assert!(e.message.contains("route"), "{e:?}");
+    assert!(e.message.contains("scan"), "{e:?}");
+
+    server.shutdown().unwrap();
+    service.shutdown().unwrap();
+    std::fs::remove_dir_all(&ldir).unwrap();
+}
+
+/// `--metrics-file` snapshots parse as JSON with live per-op counters,
+/// both mid-run (periodic writes) and after shutdown (the final write).
+#[test]
+fn metrics_file_snapshots_parse_with_live_counters() {
+    let _serial = serial();
+    let dir = state_dir("metrics-file");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("metrics.json");
+
+    let (cfg, mut serve) = leader_cfg(&dir.join("state"));
+    serve.metrics_file = Some(path.clone());
+    serve.metrics_every_ms = 50;
+    let service = VqService::start(&cfg, &serve).unwrap();
+    let server = Server::start(Arc::clone(&service), &serve.addr).unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+
+    let eval = cfg.data.mixture.eval_sample(128, cfg.seed);
+    client.nearest(&eval).unwrap();
+    client.ingest(&eval).unwrap();
+
+    // A periodic snapshot lands and parses with the driven counters.
+    // (`std::fs::write` is not atomic, so a sample racing the writer may
+    // see a partial document — keep polling, never panic mid-wait.)
+    let nearest_count = |path: &Path| -> Option<u64> {
+        let text = std::fs::read_to_string(path).ok()?;
+        let doc = Json::parse(&text).ok()?;
+        doc.req("counters").ok()?.req("op.nearest.requests").ok()?.as_u64().ok()
+    };
+    wait_for(15, "a parseable periodic snapshot", || {
+        nearest_count(&path).is_some_and(|n| n >= 1)
+    });
+
+    server.shutdown().unwrap();
+    service.shutdown().unwrap();
+
+    // The shutdown path wrote one final snapshot; it parses and carries
+    // the full document shape.
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert!(doc.req("uptime_ms").unwrap().as_u64().unwrap() > 0);
+    let counters = doc.req("counters").unwrap();
+    assert!(counters.req("op.nearest.requests").unwrap().as_u64().unwrap() >= 1);
+    assert!(counters.req("op.ingest.requests").unwrap().as_u64().unwrap() >= 1);
+    let h = doc.req("histograms").unwrap().req("op.nearest.total_us").unwrap();
+    assert!(h.req("count").unwrap().as_u64().unwrap() >= 1);
+    assert!(h.req("p99_us").unwrap().as_f64().unwrap() > 0.0);
+    doc.req("gauges").unwrap();
+    doc.req("events").unwrap().as_arr().unwrap();
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
