@@ -63,6 +63,11 @@ def entry_points(v):
             functools.partial(model.batch_kmeans_step, eval_tile=bt),
             (_spec(k, d), _spec(b, d)),
         ),
+        (
+            "nearest_batch",
+            functools.partial(model.nearest_batch, eval_tile=bt),
+            (_spec(k, d), _spec(b, d)),
+        ),
     ]
 
 

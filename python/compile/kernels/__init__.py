@@ -12,14 +12,18 @@ Kernels:
   - ``distortion``   : tiled empirical distortion partial sums (paper eq. 2).
   - ``kmeans_assign``: tiled per-cluster sums/counts for the batch k-means
                        baseline (Lloyd iteration substrate).
+  - ``nearest``      : fused batch nearest-prototype scan (codes +
+                       distances) for the serving read path.
 """
 
 from .vq_chunk import vq_chunk_pallas
 from .distortion import distortion_partials_pallas
 from .kmeans import kmeans_partials_pallas
+from .nearest import nearest_batch_pallas
 
 __all__ = [
     "vq_chunk_pallas",
     "distortion_partials_pallas",
     "kmeans_partials_pallas",
+    "nearest_batch_pallas",
 ]

@@ -1,0 +1,77 @@
+"""Pallas kernel: fused batch nearest-prototype scan (the serving read path).
+
+Per batch tile of ``bt`` points the kernel materializes the full
+(bt, kappa) distance matrix in matmul form
+
+    ||z - w||^2 = ||z||^2 - 2 z . w^T + ||w||^2
+
+and reduces it twice: ``argmin`` for the code, ``min`` for the winning
+squared distance — the batched twin of the Rust serving scan
+(``vq::nearest_batch``). The codebook block (kappa, d) is resident across
+the grid; each grid step streams one (bt, d) tile of queries through VMEM
+and writes a (bt,) code slice plus a (bt,) distance slice.
+
+Codes are emitted as **f32** (one homogeneous output tuple on the wire —
+the Rust literal helpers only unpack f32); indices are exact integers up
+to 2^24, far beyond any kappa here. ``jnp.argmin`` keeps the first minimum
+on ties, matching the native strict-`<` scan; the matmul-form distances
+themselves agree with the native four-lane sum only to float tolerance,
+so near-ties may resolve differently across engines.
+
+VMEM per tile: bt*d + kappa*d + bt*kappa f32 — the same budget as the
+distortion kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _nearest_kernel(w_ref, z_ref, idx_ref, dist_ref):
+    z = z_ref[...]  # (bt, d)
+    w = w_ref[...]  # (kappa, d)
+    zn = jnp.sum(z * z, axis=1, keepdims=True)  # (bt, 1)
+    wn = jnp.sum(w * w, axis=1)[None, :]  # (1, kappa)
+    cross = jnp.dot(z, w.T, preferred_element_type=jnp.float32)  # MXU
+    d2 = zn - 2.0 * cross + wn  # (bt, kappa)
+    # Matmul form can dip epsilon-negative; the true metric is >= 0.
+    d2 = jnp.maximum(d2, 0.0)
+    idx_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.float32)
+    dist_ref[...] = jnp.min(d2, axis=1)
+
+
+def nearest_batch_pallas(w, z, *, block_points: int = 256):
+    """Nearest prototype per query point of a batch.
+
+    Args:
+      w: (kappa, d) codebook.
+      z: (n, d) batch; ``n`` must be a multiple of ``block_points``
+         (the AOT entry is shape-static; the Rust caller handles the
+         remainder natively).
+
+    Returns:
+      (codes, dists): two (n,) f32 arrays — winning prototype index
+      (first minimum on ties) and its squared distance.
+    """
+    n, d = z.shape
+    kappa = w.shape[0]
+    bt = min(block_points, n)
+    assert n % bt == 0, f"batch {n} not a multiple of tile {bt}"
+    grid = n // bt
+    return pl.pallas_call(
+        _nearest_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((kappa, d), lambda i: (0, 0)),  # codebook resident
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),  # stream batch tiles
+        ],
+        out_specs=[
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(w, z)

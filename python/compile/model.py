@@ -9,6 +9,7 @@ Entry points (all f32):
   multi_chunk(w, zs, eps)      -> (w_out, delta_total)  [S chunks via scan]
   distortion_sum(w, z)         -> scalar sum            [paper eq. 2, un-normalized]
   batch_kmeans_step(w, z)      -> (new_w, counts)       [Lloyd baseline]
+  nearest_batch(w, z)          -> (codes, dists)        [serving read path]
 
 Normalization of eq. 2 by 1/(nM) happens in Rust, where n and M live.
 """
@@ -20,6 +21,7 @@ from .kernels import (
     vq_chunk_pallas,
     distortion_partials_pallas,
     kmeans_partials_pallas,
+    nearest_batch_pallas,
 )
 
 
@@ -57,6 +59,15 @@ def distortion_sum(w, z, *, eval_tile: int = 256):
     """Un-normalized empirical distortion over a batch (eq. 2 numerator)."""
     partials = distortion_partials_pallas(w, z, block_points=eval_tile)
     return jnp.sum(partials)
+
+
+def nearest_batch(w, z, *, eval_tile: int = 256):
+    """Nearest prototype per point: (codes, dists), both (n,) f32.
+
+    Codes are f32-encoded indices (exact up to 2^24) so the output tuple
+    stays homogeneous for the Rust literal helpers.
+    """
+    return nearest_batch_pallas(w, z, block_points=eval_tile)
 
 
 def batch_kmeans_step(w, z, *, eval_tile: int = 256):

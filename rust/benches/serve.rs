@@ -14,11 +14,15 @@
 #[path = "kit/mod.rs"]
 mod kit;
 
+use std::hint::black_box;
 use std::sync::Arc;
 use std::time::Instant;
 
 use dalvq::config::presets;
+use dalvq::data::MixtureSpec;
+use dalvq::runtime::{Engine, NativeEngine};
 use dalvq::serve::{max_over_mean, run_load, LoadSpec, Server, VqService};
+use dalvq::vq::{nearest_batch, nearest_with_dist, Codebook};
 
 fn main() {
     let p = presets::serve();
@@ -291,6 +295,225 @@ fn main() {
     lsrv.shutdown().expect("server shutdown");
     leader.shutdown().expect("leader shutdown");
     let _ = std::fs::remove_dir_all(&dir);
+
+    // ------------------------------------------------ batched query plane
+    // Three layers of the read path, measured where each one pays off:
+    // the fused kernel against the scalar per-point scan at large
+    // kappa*dim (one codebook sweep per batch vs one per point), the
+    // engine backends behind `Engine::nearest_chunk` (PJRT loudly
+    // skipped when absent, never silently), and the coalesced server
+    // against the direct one under the same read-only load. The numbers
+    // land in BENCH_query_plane.json.
+    kit::section("batched query plane — fused kernel vs scalar scan");
+    let mut kernel_rows = Vec::new();
+    for (kappa, dim) in [(256usize, 16usize), (256, 64), (1024, 32)] {
+        let n = 4_096usize;
+        let spec = MixtureSpec {
+            components: 16,
+            dim,
+            separation: 4.0,
+            std: 0.5,
+            imbalance: 0.3,
+            noise_frac: 0.05,
+        };
+        let points = spec.generate(n, 42, 0);
+        let w = Codebook::from_flat(kappa, dim, spec.generate(kappa, 42, 1));
+
+        // The fused path must buy its speed without changing one bit.
+        let (fused_codes, fused_dists) = nearest_batch(&w, &points);
+        for (i, z) in points.chunks_exact(dim).enumerate() {
+            let (code, d) = nearest_with_dist(&w, z);
+            assert_eq!(fused_codes[i] as usize, code, "code {i} diverged");
+            assert_eq!(fused_dists[i].to_bits(), d.to_bits(), "dist {i}");
+        }
+
+        let scalar = kit::bench(&format!("scalar scan k{kappa} d{dim}"), || {
+            let mut acc = 0u64;
+            for z in points.chunks_exact(dim) {
+                let (code, d) = nearest_with_dist(&w, z);
+                acc = acc.wrapping_add(code as u64 ^ d.to_bits() as u64);
+            }
+            black_box(acc);
+        });
+        let fused = kit::bench(&format!("fused scan  k{kappa} d{dim}"), || {
+            black_box(nearest_batch(&w, &points));
+        });
+        let speedup =
+            scalar.median.as_secs_f64() / fused.median.as_secs_f64();
+        println!("  -> {n} points, fused speedup {speedup:.2}x");
+        kernel_rows.push((kappa, dim, n, scalar, fused, speedup));
+    }
+
+    kit::section("engine nearest_chunk — native vs PJRT artifacts");
+    let (kappa, dim, n) = (256usize, 32usize, 8_192usize);
+    let spec = MixtureSpec {
+        components: 16,
+        dim,
+        separation: 4.0,
+        std: 0.5,
+        imbalance: 0.3,
+        noise_frac: 0.05,
+    };
+    let points = spec.generate(n, 42, 0);
+    let w = Codebook::from_flat(kappa, dim, spec.generate(kappa, 42, 1));
+    let mut native_engine = NativeEngine::new();
+    let native = kit::bench(&format!("native nearest_chunk k{kappa} d{dim}"), || {
+        black_box(
+            native_engine.nearest_chunk(&w, &points).expect("native scan"),
+        );
+    });
+    kit::throughput(&native, n as u64, "pts");
+    let (pjrt_ns, pjrt_note) = pjrt_nearest_bench();
+
+    kit::section("coalesced serving — direct vs --batch-window-us");
+    println!(
+        "{:>8} {:>7} {:>11} {:>9} {:>9} {:>9}",
+        "mode", "window", "req/s", "p50", "p95", "p99"
+    );
+    let mut serve_rows = Vec::new();
+    for (mode, window_us) in [("direct", 0u64), ("batched", 200)] {
+        let mut p = presets::serve_sharded(4);
+        p.serve.batch_window_us = window_us;
+        let service = VqService::start(&p.base, &p.serve).expect("service");
+        let server =
+            Server::start(Arc::clone(&service), &p.serve.addr).expect("server");
+        let addr = server.local_addr().to_string();
+        // Many connections issuing small read batches: the regime where
+        // cross-request coalescing has requests to merge.
+        let spec = LoadSpec {
+            connections: 16,
+            requests_per_conn: 300,
+            batch_points: 16,
+            ingest_frac: 0.0,
+            skew: 0.0,
+            read_only: true,
+            seed: p.base.seed,
+        };
+        let report = run_load(&addr, &spec, &p.base.data.mixture).expect("load");
+        println!(
+            "{:>8} {:>4} us {:>11.0} {:>6.0} us {:>6.0} us {:>6.0} us",
+            mode,
+            window_us,
+            report.throughput_rps,
+            report.p50_us,
+            report.p95_us,
+            report.p99_us,
+        );
+        server.shutdown().expect("server shutdown");
+        service.shutdown().expect("service shutdown");
+        serve_rows.push((mode, window_us, report));
+    }
+
+    // ---------------------------------------------------- JSON artifact
+    let mut json = String::from("{\n  \"bench\": \"query_plane\",\n");
+    json.push_str("  \"kernel\": [\n");
+    for (i, (kappa, dim, n, scalar, fused, speedup)) in
+        kernel_rows.iter().enumerate()
+    {
+        json.push_str(&format!(
+            "    {{\"kappa\": {kappa}, \"dim\": {dim}, \"points\": {n}, \
+             \"scalar_ns\": {:.0}, \"fused_ns\": {:.0}, \
+             \"speedup\": {speedup:.3}}}{}\n",
+            scalar.median.as_secs_f64() * 1e9,
+            fused.median.as_secs_f64() * 1e9,
+            if i + 1 < kernel_rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"engine\": {{\"kappa\": {kappa}, \"dim\": {dim}, \"points\": {n}, \
+         \"native_ns\": {:.0}, \"pjrt_ns\": {}, \"pjrt_note\": {:?}}},\n",
+        native.median.as_secs_f64() * 1e9,
+        match pjrt_ns {
+            Some(ns) => format!("{ns:.0}"),
+            None => "null".into(),
+        },
+        pjrt_note,
+    ));
+    json.push_str("  \"serve\": [\n");
+    for (i, (mode, window_us, report)) in serve_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"mode\": {mode:?}, \"window_us\": {window_us}, \
+             \"rps\": {:.1}, \"p50_us\": {:.1}, \"p95_us\": {:.1}, \
+             \"p99_us\": {:.1}}}{}\n",
+            report.throughput_rps,
+            report.p50_us,
+            report.p95_us,
+            report.p99_us,
+            if i + 1 < serve_rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_query_plane.json", &json)
+        .expect("writing BENCH_query_plane.json");
+    println!("\nwrote BENCH_query_plane.json");
+}
+
+/// The PJRT side of the `nearest_chunk` comparison: `(median ns, note)`.
+/// Built without the `pjrt` feature — or with it but without lowered
+/// artifacts — this skips LOUDLY, naming exactly what is missing, and
+/// records the reason in the JSON artifact instead of a number.
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_nearest_bench() -> (Option<f64>, String) {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .join("manifest.json");
+    let note = format!(
+        "SKIPPED: built without the `pjrt` feature (artifacts expected at \
+         {})",
+        manifest.display()
+    );
+    println!("{note}");
+    (None, note)
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_nearest_bench() -> (Option<f64>, String) {
+    use dalvq::runtime::PjrtEngine;
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let manifest = dir.join("manifest.json");
+    if !manifest.exists() {
+        let note = format!(
+            "SKIPPED: {} not found — run `make artifacts`",
+            manifest.display()
+        );
+        println!("{note}");
+        return (None, note);
+    }
+    let mut engine = match PjrtEngine::load(&dir, "k16d16") {
+        Ok(e) => e,
+        Err(e) => {
+            let note = format!("SKIPPED: loading variant k16d16: {e:#}");
+            println!("{note}");
+            return (None, note);
+        }
+    };
+    let p = engine.params().clone();
+    let spec = MixtureSpec {
+        components: 16,
+        dim: p.dim,
+        separation: 4.0,
+        std: 0.5,
+        imbalance: 0.3,
+        noise_frac: 0.05,
+    };
+    let n = p.eval_batch * 3;
+    let points = spec.generate(n, 42, 0);
+    let w = Codebook::from_flat(p.kappa, p.dim, spec.generate(p.kappa, 42, 1));
+    if let Err(e) = engine.nearest_chunk(&w, &points) {
+        let note = format!(
+            "SKIPPED: {e:#} (artifact predates the batched read path — \
+             re-run `make artifacts`)"
+        );
+        println!("{note}");
+        return (None, note);
+    }
+    let stats =
+        kit::bench(&format!("pjrt nearest_chunk k{} d{}", p.kappa, p.dim), || {
+            black_box(engine.nearest_chunk(&w, &points).expect("pjrt scan"));
+        });
+    kit::throughput(&stats, n as u64, "pts");
+    (Some(stats.median.as_secs_f64() * 1e9), "ok".into())
 }
 
 /// Stand up the preset's stack, drive the standard mixed load (8 conns x

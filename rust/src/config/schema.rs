@@ -236,6 +236,20 @@ pub struct ServeConfig {
     /// Milliseconds between metrics-file snapshots. Only meaningful with
     /// `metrics_file`.
     pub metrics_every_ms: u64,
+    /// Cross-request micro-batch coalescing window in microseconds: read
+    /// requests (encode/nearest/distortion) arriving within this window
+    /// queue into one fused scan per probed shard instead of scanning
+    /// individually. `0` (default) disables coalescing — every request
+    /// scans on its own connection thread, exactly the pre-batching
+    /// behavior. Answers are bit-identical either way; coalescing trades
+    /// up to one window of added latency for shard-codebook cache reuse
+    /// across requests.
+    pub batch_window_us: u64,
+    /// Point budget of one coalesced micro-batch: the batcher drains as
+    /// soon as the queued requests hold this many points, even before
+    /// the window closes. Bounds both reply latency under load and the
+    /// size of the fused scan. Only meaningful with `batch_window_us`.
+    pub batch_max_points: usize,
 }
 
 impl Default for ServeConfig {
@@ -266,6 +280,8 @@ impl Default for ServeConfig {
             slow_query_us: 0,
             metrics_file: None,
             metrics_every_ms: 1_000,
+            batch_window_us: 0,
+            batch_max_points: 4_096,
         }
     }
 }
@@ -400,6 +416,13 @@ impl ServeConfig {
             if self.metrics_every_ms == 0 {
                 errs.push("metrics_every_ms must be >= 1".into());
             }
+        }
+        if self.batch_window_us > 0 && self.batch_max_points == 0 {
+            errs.push(
+                "batch_max_points must be >= 1 when batch_window_us arms \
+                 the coalescer"
+                    .into(),
+            );
         }
         if errs.is_empty() {
             Ok(())
@@ -1035,6 +1058,29 @@ mod tests {
         s.metrics_file = Some(PathBuf::from("/tmp/dalvq-metrics.json"));
         let msg = format!("{:#}", s.validate(&base).unwrap_err());
         assert!(msg.contains("metrics_every_ms"), "{msg}");
+    }
+
+    #[test]
+    fn batching_knobs_are_validated() {
+        let base = ExperimentConfig::default();
+
+        // a sane armed batcher
+        let mut s = ServeConfig::default();
+        s.batch_window_us = 200;
+        s.batch_max_points = 1_024;
+        s.validate(&base).unwrap();
+
+        // a zero point budget starves the armed batcher
+        let mut s = ServeConfig::default();
+        s.batch_window_us = 200;
+        s.batch_max_points = 0;
+        let msg = format!("{:#}", s.validate(&base).unwrap_err());
+        assert!(msg.contains("batch_max_points"), "{msg}");
+
+        // with the batcher off, the point budget is inert
+        let mut s = ServeConfig::default();
+        s.batch_max_points = 0;
+        s.validate(&base).unwrap();
     }
 
     #[test]

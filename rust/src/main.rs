@@ -103,6 +103,11 @@ OPTIONS (serve):
   --metrics-every <MS>       milliseconds between snapshots [default: 1000]
   --slow-query-us <N>        journal any request slower than N microseconds
                              with its route/scan stage breakdown (0 = off)
+  --batch-window-us <N>      coalesce concurrent read requests for up to N
+                             microseconds into one fused multi-probe scan
+                             (answers stay bit-identical; 0 = off)
+  --batch-max-points <N>     drain a coalesced batch early once it holds
+                             this many points [default: 4096]
 
 OPTIONS (top):
   --addr <HOST:PORT>         server to poll (required)
@@ -338,6 +343,9 @@ fn run() -> Result<()> {
             let metrics_file = args.take_value("--metrics-file")?.map(PathBuf::from);
             let metrics_every = parse_opt_u64(&mut args, "--metrics-every")?;
             let slow_query_us = parse_opt_u64(&mut args, "--slow-query-us")?;
+            let batch_window_us = parse_opt_u64(&mut args, "--batch-window-us")?;
+            let batch_max_points =
+                parse_opt_u64(&mut args, "--batch-max-points")?;
             args.finish()?;
             let mut p = serve_preset(&preset)?;
             apply_sharding(&mut p, shards, probe);
@@ -370,6 +378,12 @@ fn run() -> Result<()> {
             }
             if let Some(us) = slow_query_us {
                 p.serve.slow_query_us = us;
+            }
+            if let Some(us) = batch_window_us {
+                p.serve.batch_window_us = us;
+            }
+            if let Some(n) = batch_max_points {
+                p.serve.batch_max_points = n as usize;
             }
             let service = VqService::start(&p.base, &p.serve)?;
             let server = Server::start(Arc::clone(&service), &p.serve.addr)?;
@@ -424,6 +438,13 @@ fn run() -> Result<()> {
                 println!(
                     "dalvq serve: slow-query log armed at {} us",
                     p.serve.slow_query_us,
+                );
+            }
+            if p.serve.batch_window_us > 0 {
+                println!(
+                    "dalvq serve: micro-batch coalescing armed ({} us window, \
+                     {} point budget)",
+                    p.serve.batch_window_us, p.serve.batch_max_points,
                 );
             }
             match duration {

@@ -6,7 +6,7 @@ use anyhow::Result;
 
 use crate::vq::{Codebook, Delta};
 
-/// A compute backend for the three exported entry points.
+/// A compute backend for the exported entry points.
 ///
 /// All methods take `&mut self`: engines may cache buffers or lazily
 /// compile. Implementations must use **identical math** (squared Euclidean,
@@ -30,6 +30,18 @@ pub trait Engine {
     /// Un-normalized empirical distortion `Σ min_ℓ ‖z − w_ℓ‖²` over flat
     /// `points`.
     fn distortion_sum(&mut self, w: &Codebook, points: &[f32]) -> Result<f64>;
+
+    /// Fused batch nearest-prototype scan over flat row-major `points`:
+    /// `(code, squared distance)` per point, first-minimum tie break —
+    /// the serving read path's distance kernel. The native engine is
+    /// bit-identical to the scalar per-point scan; the PJRT engine runs
+    /// the matmul-form artifact and agrees to float tolerance (ties may
+    /// resolve differently where the re-associated distances differ).
+    fn nearest_chunk(
+        &mut self,
+        w: &Codebook,
+        points: &[f32],
+    ) -> Result<(Vec<u32>, Vec<f32>)>;
 
     /// One Lloyd iteration over `points` (empty clusters keep their
     /// prototype). Returns per-cluster counts.

@@ -38,6 +38,14 @@ impl Engine for NativeEngine {
         Ok(vq::distortion_sum(w, points))
     }
 
+    fn nearest_chunk(
+        &mut self,
+        w: &Codebook,
+        points: &[f32],
+    ) -> Result<(Vec<u32>, Vec<f32>)> {
+        Ok(vq::nearest_batch(w, points))
+    }
+
     fn kmeans_step(&mut self, w: &mut Codebook, points: &[f32]) -> Result<Vec<f32>> {
         let dim = w.dim();
         let kappa = w.kappa();
@@ -86,6 +94,15 @@ mod tests {
         let counts = eng.kmeans_step(&mut w, &[1.0, 2.0]).unwrap();
         assert_eq!(counts, vec![2.0, 0.0]);
         assert_eq!(w.row(1), &[1000.0]);
+    }
+
+    #[test]
+    fn nearest_chunk_scans_the_block() {
+        let mut eng = NativeEngine::new();
+        let w = Codebook::from_flat(2, 1, vec![0.0, 10.0]);
+        let (codes, dists) = eng.nearest_chunk(&w, &[1.0, 9.0]).unwrap();
+        assert_eq!(codes, vec![0, 1]);
+        assert_eq!(dists, vec![1.0, 1.0]);
     }
 
     #[test]

@@ -22,13 +22,17 @@ use crate::vq::{self, Codebook, Delta};
 use super::manifest::{Manifest, VariantParams};
 use super::Engine;
 
-/// An engine executing the four lowered entry points of one variant.
+/// An engine executing the lowered entry points of one variant.
 pub struct PjrtEngine {
     params: VariantParams,
     vq_chunk_exe: xla::PjRtLoadedExecutable,
     multi_chunk_exe: xla::PjRtLoadedExecutable,
     distortion_exe: xla::PjRtLoadedExecutable,
     kmeans_exe: xla::PjRtLoadedExecutable,
+    /// `None` when the artifact set predates the batched read path —
+    /// training entries still work; `nearest_chunk` errors with a
+    /// re-lower hint instead of failing the whole load.
+    nearest_exe: Option<xla::PjRtLoadedExecutable>,
 }
 
 fn load_exe(
@@ -83,12 +87,21 @@ impl PjrtEngine {
             load_exe(&client, artifacts_dir, &vm.entry(entry)?.file)
                 .with_context(|| format!("entry {entry:?} of variant {variant:?}"))
         };
+        let nearest_exe = match vm.entry("nearest_batch") {
+            Ok(e) => Some(
+                load_exe(&client, artifacts_dir, &e.file).with_context(|| {
+                    format!("entry \"nearest_batch\" of variant {variant:?}")
+                })?,
+            ),
+            Err(_) => None,
+        };
         Ok(Self {
             params: vm.params.clone(),
             vq_chunk_exe: exe("vq_chunk")?,
             multi_chunk_exe: exe("multi_chunk")?,
             distortion_exe: exe("distortion_sum")?,
             kmeans_exe: exe("batch_kmeans_step")?,
+            nearest_exe,
         })
     }
 
@@ -205,6 +218,50 @@ impl Engine for PjrtEngine {
             total += vq::distortion_sum(w, rem);
         }
         Ok(total)
+    }
+
+    fn nearest_chunk(
+        &mut self,
+        w: &Codebook,
+        points: &[f32],
+    ) -> Result<(Vec<u32>, Vec<f32>)> {
+        self.check_codebook(w)?;
+        let exe = self.nearest_exe.as_ref().ok_or_else(|| {
+            anyhow!(
+                "this artifact set predates the \"nearest_batch\" entry point \
+                 — re-run `make artifacts` to lower it, or use the native \
+                 engine"
+            )
+        })?;
+        let (b, d) = (self.params.eval_batch, self.params.dim);
+        if points.len() % d != 0 {
+            return Err(anyhow!("points not a multiple of dim {d}"));
+        }
+        let n = points.len() / d;
+        let full_batches = n / b;
+        let mut codes = Vec::with_capacity(n);
+        let mut dists = Vec::with_capacity(n);
+        for i in 0..full_batches {
+            let batch = &points[i * b * d..(i + 1) * b * d];
+            let w_lit = lit_2d(w.flat(), self.params.kappa, d)?;
+            let z_lit = lit_2d(batch, b, d)?;
+            let result = run(exe, &[w_lit, z_lit])?;
+            let (idx, dd) = result
+                .to_tuple2()
+                .map_err(|e| anyhow!("unpacking nearest_batch tuple: {e:?}"))?;
+            // The kernel emits indices as f32 (one homogeneous tuple on
+            // the wire); exact integers up to 2^24 ≫ any kappa here.
+            codes.extend(to_f32_vec(idx)?.into_iter().map(|x| x as u32));
+            dists.extend(to_f32_vec(dd)?);
+        }
+        // Remainder (< eval_batch points): same math, native path.
+        let rem = &points[full_batches * b * d..];
+        if !rem.is_empty() {
+            let (c, dd) = vq::nearest_batch(w, rem);
+            codes.extend(c);
+            dists.extend(dd);
+        }
+        Ok((codes, dists))
     }
 
     fn kmeans_step(&mut self, w: &mut Codebook, points: &[f32]) -> Result<Vec<f32>> {

@@ -1,0 +1,282 @@
+//! Cross-request micro-batch coalescing — the opt-in queue between the
+//! TCP front-end and the fused shard scan.
+//!
+//! With `--batch-window-us` armed, read requests (encode / nearest /
+//! distortion) no longer scan on their own connection threads: each one
+//! enqueues its points into the [`Batcher`] and blocks until a drain
+//! answers it. A single drain thread opens a batch on the first queued
+//! request, keeps collecting until either `batch_window_us` elapses or
+//! the batch holds `batch_max_points` points, then runs ONE fused
+//! multi-probe scan over the concatenation and hands each request back
+//! its slice of the answers. The shard-grouped kernel thus sweeps every
+//! probed codebook once per *drain* instead of once per *request* —
+//! Annaji & Rao's shared-memory LBG batching argument applied across
+//! connections.
+//!
+//! Semantics: answers are bit-identical to the direct path — the drain
+//! calls the same [`VqService::query_nearest_timed`], and per point the
+//! fused scan is bit-identical to the scalar one. What coalescing *does*
+//! change is staleness: a request may be answered up to one window later
+//! than an immediate scan would, against whatever snapshot epoch is
+//! current at drain time. That window is exactly the bounded-delay
+//! staleness Patra's convergence analysis already covers for the
+//! training path, so a coalesced reader is no worse off than any
+//! delayed-view consumer.
+//!
+//! Lifecycle: [`Batcher::start`] spawns the drain thread;
+//! [`Batcher::shutdown`] closes the queue (in-flight requests are still
+//! answered) and joins it. After shutdown [`Batcher::submit`] returns
+//! `None` and the front-end falls back to the direct scan, so a request
+//! racing a shutdown is answered either way.
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::service::VqService;
+
+/// One queued read request: its points and the one-shot channel its
+/// slice of the coalesced answer returns on.
+struct Pending {
+    points: Vec<f32>,
+    enqueued: Instant,
+    reply: mpsc::Sender<BatchAnswer>,
+}
+
+/// A request's slice of one coalesced scan — the same shape
+/// [`VqService::query_nearest_timed`] answers with, restricted to this
+/// request's points. `route_us`/`scan_us` are the drained batch's shared
+/// stage timings (one scan answered every member).
+pub(crate) struct BatchAnswer {
+    pub version: u64,
+    pub codes: Vec<u32>,
+    pub dists: Vec<f32>,
+    pub route_us: u64,
+    pub scan_us: u64,
+}
+
+/// The coalescer. One per server, created only when
+/// `ServeConfig::batch_window_us > 0`; the default-off path never
+/// constructs it and is byte-for-byte today's behavior.
+pub(crate) struct Batcher {
+    /// `None` after shutdown; dropping the last sender ends the drain.
+    tx: Mutex<Option<mpsc::Sender<Pending>>>,
+    drain: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Batcher {
+    /// Spawn the drain thread against `service`, reading the window and
+    /// point budget from its serve config.
+    pub fn start(service: Arc<VqService>) -> Arc<Batcher> {
+        let window = Duration::from_micros(service.batch_window_us());
+        let max_points = service.batch_max_points().max(1);
+        let (tx, rx) = mpsc::channel();
+        let drain = std::thread::Builder::new()
+            .name("dalvq-serve-batch".into())
+            .spawn(move || drain_loop(rx, service, window, max_points))
+            .expect("spawning batch drain thread");
+        Arc::new(Batcher {
+            tx: Mutex::new(Some(tx)),
+            drain: Mutex::new(Some(drain)),
+        })
+    }
+
+    /// Queue one read batch (`points` already shape-checked by the
+    /// caller) and block until the drain that answers it. `None` once
+    /// the batcher is shut down — the caller falls back to the direct
+    /// scan path.
+    pub fn submit(&self, points: Vec<f32>) -> Option<BatchAnswer> {
+        let tx = self.tx.lock().unwrap_or_else(|e| e.into_inner()).clone()?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx.send(Pending {
+            points,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        })
+        .ok()?;
+        reply_rx.recv().ok()
+    }
+
+    /// Close the queue and join the drain thread. Requests already in
+    /// the queue are drained and answered first; later submits get
+    /// `None`. Idempotent.
+    pub fn shutdown(&self) {
+        let tx = self.tx.lock().unwrap_or_else(|e| e.into_inner()).take();
+        drop(tx);
+        let drain =
+            self.drain.lock().unwrap_or_else(|e| e.into_inner()).take();
+        if let Some(j) = drain {
+            let _ = j.join();
+        }
+    }
+}
+
+/// The drain loop: block for a batch opener, collect until the window
+/// closes or the point budget fills, scan once, scatter the slices back.
+fn drain_loop(
+    rx: mpsc::Receiver<Pending>,
+    service: Arc<VqService>,
+    window: Duration,
+    max_points: usize,
+) {
+    let dim = service.dim();
+    loop {
+        // A closed, empty queue is the shutdown signal.
+        let first = match rx.recv() {
+            Ok(p) => p,
+            Err(_) => return,
+        };
+        let deadline = Instant::now() + window;
+        let mut total_points = first.points.len() / dim;
+        let mut batch = vec![first];
+        let mut closed = false;
+        while total_points < max_points {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(p) => {
+                    total_points += p.points.len() / dim;
+                    batch.push(p);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // Shutdown mid-collection: answer what we hold.
+                    closed = true;
+                    break;
+                }
+            }
+        }
+
+        // One fused multi-probe scan over the concatenation; every
+        // member's answer is its slice, computed against the same
+        // snapshot set (members can never straddle an epoch swap).
+        let mut all = Vec::with_capacity(total_points * dim);
+        for p in &batch {
+            all.extend_from_slice(&p.points);
+        }
+        let q = service.query_nearest_timed(&all, service.probe_n());
+
+        let tel = service.tel();
+        tel.batch_size.record(total_points as u64);
+        let drained = Instant::now();
+        for p in &batch {
+            tel.batch_wait_us
+                .record(drained.duration_since(p.enqueued).as_micros() as u64);
+        }
+
+        let mut off = 0usize;
+        for p in batch {
+            let n = p.points.len() / dim;
+            let ans = BatchAnswer {
+                version: q.version,
+                codes: q.codes[off..off + n].to_vec(),
+                dists: q.dists[off..off + n].to_vec(),
+                route_us: q.route_us,
+                scan_us: q.scan_us,
+            };
+            off += n;
+            // A peer that hung up mid-wait just drops its slice.
+            let _ = p.reply.send(ans);
+        }
+        if closed {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, SchemeConfig, ServeConfig};
+    use crate::sim::DelayModel;
+    use crate::vq::Schedule;
+
+    fn tiny_cfg() -> (ExperimentConfig, ServeConfig) {
+        let mut cfg = ExperimentConfig::default();
+        cfg.m = 1;
+        cfg.data.mixture.components = 4;
+        cfg.data.mixture.dim = 2;
+        cfg.data.n_total = 2_000;
+        cfg.data.eval_points = 256;
+        cfg.vq.kappa = 8;
+        cfg.vq.schedule = Schedule::Constant { eps0: 0.01 };
+        cfg.scheme = SchemeConfig::AsyncDelta {
+            tau: 10,
+            up_delay: DelayModel::Instant,
+            down_delay: DelayModel::Instant,
+        };
+        let mut serve = ServeConfig::default();
+        serve.points_per_exchange = 50;
+        serve.point_compute = 2e-6;
+        serve.shards = 4;
+        serve.probe_n = 2;
+        serve.batch_window_us = 300;
+        serve.batch_max_points = 64;
+        (cfg, serve)
+    }
+
+    #[test]
+    fn concurrent_submits_get_their_own_bit_identical_slices() {
+        let (cfg, serve) = tiny_cfg();
+        let svc = VqService::start(&cfg, &serve).unwrap();
+        // Quiesce so the direct-path oracle reads the same frozen
+        // snapshots every drain will (read path survives shutdown).
+        svc.shutdown().unwrap();
+        let batcher = Batcher::start(Arc::clone(&svc));
+        let eval = cfg.data.mixture.eval_sample(96, cfg.seed);
+        let mut joins = Vec::new();
+        for t in 0..6usize {
+            let batcher = Arc::clone(&batcher);
+            let svc = Arc::clone(&svc);
+            // Each thread asks about a different sub-batch, repeatedly,
+            // so drains interleave requests of different sizes.
+            let mine: Vec<f32> =
+                eval[t * 16 * 2..(t + 1) * 16 * 2].to_vec();
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..10 {
+                    let ans = batcher.submit(mine.clone()).expect("live batcher");
+                    let (version, codes, dists) =
+                        svc.query_nearest_probed(&mine, svc.probe_n());
+                    assert_eq!(ans.version, version);
+                    assert_eq!(ans.codes, codes);
+                    assert_eq!(
+                        ans.dists.iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+                        dists.iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+                    );
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        // the drains recorded themselves
+        let snap = svc.metrics_snapshot(0);
+        let hist = |name: &str| {
+            snap.hists
+                .iter()
+                .find(|(n, _)| n == name)
+                .unwrap_or_else(|| panic!("no histogram {name}"))
+                .1
+                .clone()
+        };
+        assert!(hist("batch.size").count > 0);
+        assert!(hist("batch.wait_us").count > 0);
+        batcher.shutdown();
+        // post-shutdown submits tell the caller to go direct
+        assert!(batcher.submit(vec![0.0, 0.0]).is_none());
+    }
+
+    #[test]
+    fn shutdown_with_empty_queue_is_clean_and_idempotent() {
+        let (cfg, mut serve) = tiny_cfg();
+        serve.batch_window_us = 50;
+        let svc = VqService::start(&cfg, &serve).unwrap();
+        svc.shutdown().unwrap();
+        let batcher = Batcher::start(Arc::clone(&svc));
+        batcher.shutdown();
+        batcher.shutdown();
+        assert!(batcher.submit(vec![1.0, 2.0]).is_none());
+    }
+}

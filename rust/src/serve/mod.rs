@@ -34,6 +34,13 @@
 //!   **nearest** (centroid lookup with distances) and **distortion**
 //!   (batch criterion, paper eq. 2), multi-probing the `probe_n` nearest
 //!   shards so answers stay correct near shard boundaries.
+//! * **Batched query plane** — the scan stage is shard-grouped and
+//!   fused ([`crate::vq::nearest_batch`]): each request's (point, probe)
+//!   pairs gather per shard and every probed codebook is swept once per
+//!   batch instead of once per point, bit-identically to the scalar
+//!   path; `--batch-window-us` additionally coalesces concurrent read
+//!   requests into one fused scan per drain tick (opt-in, default off —
+//!   see `docs/ARCHITECTURE.md` §Batched query plane).
 //! * **Front-end** — a `std::net` TCP [`Server`] speaking a
 //!   length-prefixed binary [`protocol`], an in-crate [`Client`], and a
 //!   load generator ([`run_load`]) that measures throughput and latency
@@ -72,6 +79,7 @@
 //! is the byte-level wire reference; `docs/ARCHITECTURE.md` the system
 //! overview.
 
+mod batch;
 mod client;
 mod loadgen;
 /// The length-prefixed binary wire protocol (see `docs/PROTOCOL.md`).

@@ -483,6 +483,21 @@ impl<'a> Cursor<'a> {
     }
 }
 
+/// Reject point payloads carrying NaN or ±Inf at the wire boundary. A
+/// non-finite coordinate would otherwise flow into the distance kernels
+/// — where NaN fails every `<` and silently answers code 0 at distance
+/// NaN — or, through `Ingest`, poison a codebook row for every later
+/// query. Decoding stays total: such a frame decodes to an error the
+/// server answers in-band, not a wedge or a panic.
+fn finite_points(points: Vec<f32>) -> Result<Vec<f32>> {
+    match points.iter().position(|x| !x.is_finite()) {
+        Some(i) => {
+            bail!("non-finite point coordinate {} at index {i}", points[i])
+        }
+        None => Ok(points),
+    }
+}
+
 impl Request {
     /// Encode this request as one frame payload (opcode + fields).
     pub fn encode(&self) -> Vec<u8> {
@@ -524,13 +539,18 @@ impl Request {
 
     /// Decode one request payload. Total: any byte string either decodes
     /// to exactly the request that produced it or errors.
+    ///
+    /// Point-carrying ops additionally reject non-finite coordinates
+    /// here, at the wire boundary — see [`finite_points`].
     pub fn decode(payload: &[u8]) -> Result<Self> {
         let mut c = Cursor::new(payload);
         let req = match c.u8()? {
-            OP_ENCODE => Request::Encode { points: c.f32s()? },
-            OP_NEAREST => Request::Nearest { points: c.f32s()? },
-            OP_DISTORTION => Request::Distortion { points: c.f32s()? },
-            OP_INGEST => Request::Ingest { points: c.f32s()? },
+            OP_ENCODE => Request::Encode { points: finite_points(c.f32s()?)? },
+            OP_NEAREST => Request::Nearest { points: finite_points(c.f32s()?)? },
+            OP_DISTORTION => {
+                Request::Distortion { points: finite_points(c.f32s()?)? }
+            }
+            OP_INGEST => Request::Ingest { points: finite_points(c.f32s()?)? },
             OP_STATS => Request::Stats,
             OP_CHECKPOINT => Request::Checkpoint,
             OP_REBALANCE => Request::Rebalance { want_remap: c.u8()? != 0 },
@@ -823,6 +843,29 @@ mod tests {
         });
         round_trip_req(Request::Metrics { max_events: 0 });
         round_trip_req(Request::Metrics { max_events: u32::MAX });
+    }
+
+    #[test]
+    fn non_finite_points_are_rejected_at_decode() {
+        // Every point-carrying op refuses NaN and ±Inf at the wire
+        // boundary, naming the offending index; finite extremes pass.
+        let makes: [fn(Vec<f32>) -> Request; 4] = [
+            |p| Request::Encode { points: p },
+            |p| Request::Nearest { points: p },
+            |p| Request::Distortion { points: p },
+            |p| Request::Ingest { points: p },
+        ];
+        for make in makes {
+            for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+                let frame = make(vec![1.0, bad, 3.0]).encode();
+                let err = Request::decode(&frame).unwrap_err().to_string();
+                assert!(
+                    err.contains("non-finite") && err.contains("index 1"),
+                    "unexpected error: {err}"
+                );
+            }
+            round_trip_req(make(vec![f32::MIN, 0.0, f32::MAX]));
+        }
     }
 
     #[test]

@@ -19,11 +19,12 @@ use anyhow::{Context, Result};
 
 use crate::obs::TelemetrySnapshot;
 
+use super::batch::Batcher;
 use super::protocol::{
     read_frame, write_frame, MetricEvent, MetricHist, MetricsReply, Request,
-    Response, StatsReply,
+    Response, StatsReply, MAX_FRAME,
 };
-use super::service::VqService;
+use super::service::{TimedQuery, VqService};
 
 /// A running TCP front-end over a [`VqService`].
 pub struct Server {
@@ -31,6 +32,9 @@ pub struct Server {
     stop: Arc<AtomicBool>,
     accept: Option<JoinHandle<()>>,
     service: Arc<VqService>,
+    /// The cross-request coalescer — `Some` only when the serve config
+    /// arms `batch_window_us` (default off = the direct scan path).
+    batcher: Option<Arc<Batcher>>,
 }
 
 impl Server {
@@ -41,15 +45,21 @@ impl Server {
             .with_context(|| format!("binding serve front-end to {addr}"))?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
+        let batcher = if service.batch_window_us() > 0 {
+            Some(Batcher::start(Arc::clone(&service)))
+        } else {
+            None
+        };
         let accept = {
             let stop = Arc::clone(&stop);
             let service = Arc::clone(&service);
+            let batcher = batcher.clone();
             std::thread::Builder::new()
                 .name("dalvq-serve-accept".into())
-                .spawn(move || accept_loop(listener, service, stop))
+                .spawn(move || accept_loop(listener, service, batcher, stop))
                 .expect("spawning accept thread")
         };
-        Ok(Server { addr: local, stop, accept: Some(accept), service })
+        Ok(Server { addr: local, stop, accept: Some(accept), service, batcher })
     }
 
     /// The bound address (resolves `:0` to the actual port).
@@ -71,27 +81,43 @@ impl Server {
         if let Some(j) = self.accept.take() {
             j.join().map_err(|_| anyhow::anyhow!("accept thread panicked"))?;
         }
+        // Stop the coalescer after the front door: queued requests are
+        // still answered, and stragglers on connections that outlive the
+        // server fall back to the direct scan path.
+        if let Some(b) = &self.batcher {
+            b.shutdown();
+        }
         Ok(())
     }
 }
 
-fn accept_loop(listener: TcpListener, service: Arc<VqService>, stop: Arc<AtomicBool>) {
+fn accept_loop(
+    listener: TcpListener,
+    service: Arc<VqService>,
+    batcher: Option<Arc<Batcher>>,
+    stop: Arc<AtomicBool>,
+) {
     for conn in listener.incoming() {
         if stop.load(Ordering::Acquire) {
             return;
         }
         let Ok(stream) = conn else { continue };
         let service = Arc::clone(&service);
+        let batcher = batcher.clone();
         let _ = std::thread::Builder::new()
             .name("dalvq-serve-conn".into())
             .spawn(move || {
-                let _ = serve_connection(stream, &service);
+                let _ = serve_connection(stream, &service, batcher.as_deref());
             });
     }
 }
 
 /// One connection: frames in, frames out, until the peer hangs up.
-fn serve_connection(stream: TcpStream, service: &VqService) -> Result<()> {
+fn serve_connection(
+    stream: TcpStream,
+    service: &VqService,
+    batcher: Option<&Batcher>,
+) -> Result<()> {
     stream.set_nodelay(true).ok(); // request/response pattern
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
@@ -103,7 +129,7 @@ fn serve_connection(stream: TcpStream, service: &VqService) -> Result<()> {
             .decode_us
             .record(t_decode.elapsed().as_micros() as u64);
         let resp = match decoded {
-            Ok(req) => handle(service, req),
+            Ok(req) => handle(service, batcher, req),
             Err(e) => Response::Error { message: format!("{e:#}") },
         };
         let t_encode = Instant::now();
@@ -122,7 +148,11 @@ fn serve_connection(stream: TcpStream, service: &VqService) -> Result<()> {
 /// handler into the op's latency histogram, and — when the slow-query
 /// log is armed — journal any request over the threshold with whatever
 /// stage breakdown the dispatch recorded.
-fn handle(service: &VqService, req: Request) -> Response {
+fn handle(
+    service: &VqService,
+    batcher: Option<&Batcher>,
+    req: Request,
+) -> Response {
     let tel = service.tel();
     let (op_name, op) = match &req {
         Request::Encode { .. } => ("encode", &tel.op_encode),
@@ -134,7 +164,7 @@ fn handle(service: &VqService, req: Request) -> Response {
     op.requests.inc();
     let t0 = Instant::now();
     let mut stages: Option<(u64, u64)> = None;
-    let resp = dispatch(service, req, &mut stages);
+    let resp = dispatch(service, batcher, req, &mut stages);
     let total_us = t0.elapsed().as_micros() as u64;
     op.total_us.record(total_us);
     let threshold = service.slow_query_us();
@@ -171,6 +201,7 @@ fn handle(service: &VqService, req: Request) -> Response {
 /// leader's) — is identical on both roles.
 fn dispatch(
     service: &VqService,
+    batcher: Option<&Batcher>,
     req: Request,
     stages: &mut Option<(u64, u64)>,
 ) -> Response {
@@ -198,6 +229,24 @@ fn dispatch(
             None
         }
     };
+    // Admission: a request small enough to *arrive* can still demand a
+    // reply too large to *frame* (at dim 1 a Nearest request of n points
+    // is 5 + 4n bytes but its reply is 17 + 8n — past the cap for the
+    // top half of the admissible range). Reject those here, before any
+    // routing or scan work is spent on an unanswerable query.
+    let reply_cap = |op: &str, fixed: usize, per_point: usize, n: usize| {
+        let bytes = fixed + per_point * n;
+        if bytes > MAX_FRAME as usize {
+            Some(Response::Error {
+                message: format!(
+                    "{op} reply for {n} points would be {bytes} bytes, over \
+                     the {MAX_FRAME}-byte frame cap; split the batch",
+                ),
+            })
+        } else {
+            None
+        }
+    };
     let count_query = || {
         service
             .counters()
@@ -209,8 +258,12 @@ fn dispatch(
             if let Some(err) = check(&points) {
                 return err;
             }
+            // Codes reply: op + version + len prefix + 4 bytes/code.
+            if let Some(err) = reply_cap("encode", 13, 4, points.len() / dim) {
+                return err;
+            }
             count_query();
-            let q = service.query_nearest_timed(&points, service.probe_n());
+            let q = run_query(service, batcher, &points);
             *stages = Some((q.route_us, q.scan_us));
             Response::Codes { version: q.version, codes: q.codes }
         }
@@ -218,8 +271,12 @@ fn dispatch(
             if let Some(err) = check(&points) {
                 return err;
             }
+            // Neighbors reply: op + version + two prefixed f32/u32 runs.
+            if let Some(err) = reply_cap("nearest", 17, 8, points.len() / dim) {
+                return err;
+            }
             count_query();
-            let q = service.query_nearest_timed(&points, service.probe_n());
+            let q = run_query(service, batcher, &points);
             *stages = Some((q.route_us, q.scan_us));
             Response::Neighbors {
                 version: q.version,
@@ -232,7 +289,7 @@ fn dispatch(
                 return err;
             }
             count_query();
-            let q = service.query_nearest_timed(&points, service.probe_n());
+            let q = run_query(service, batcher, &points);
             *stages = Some((q.route_us, q.scan_us));
             // check() rejected empty batches, so dists is never empty.
             let sum: f64 = q.dists.iter().map(|d| *d as f64).sum();
@@ -304,6 +361,29 @@ fn dispatch(
             }
         }
     }
+}
+
+/// One read batch through the query plane: the coalescer when armed
+/// (falling back to the direct path if it is already shut down), else an
+/// immediate fused scan on this connection thread. Either route answers
+/// bit-identically; only latency and staleness differ.
+fn run_query(
+    service: &VqService,
+    batcher: Option<&Batcher>,
+    points: &[f32],
+) -> TimedQuery {
+    if let Some(b) = batcher {
+        if let Some(a) = b.submit(points.to_vec()) {
+            return TimedQuery {
+                version: a.version,
+                codes: a.codes,
+                dists: a.dists,
+                route_us: a.route_us,
+                scan_us: a.scan_us,
+            };
+        }
+    }
+    service.query_nearest_timed(points, service.probe_n())
 }
 
 /// A telemetry snapshot in wire shape. By value: the snapshot is already

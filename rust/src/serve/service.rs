@@ -64,7 +64,7 @@ use crate::persist::{
     self, CheckpointSpec, Checkpointer, Manifest, RestoredState, RouterState,
     ShardState,
 };
-use crate::vq::{init_codebook, Codebook};
+use crate::vq::{init_codebook, nearest_batch_into, Codebook};
 
 use super::client::Client;
 use super::protocol::{StateFile, StateShipment, FETCH_ANY_GENERATION};
@@ -103,6 +103,13 @@ pub(crate) struct ServeTel {
     pub scan_us: Arc<Histogram>,
     /// Requests that exceeded `ServeConfig::slow_query_us`.
     pub slow_queries: Arc<Counter>,
+    /// Points per drained micro-batch of the cross-request coalescer
+    /// (a count, not µs; one sample per drain, including batches of one
+    /// request). Empty unless `--batch-window-us` arms the batcher.
+    pub batch_size: Arc<Histogram>,
+    /// Microseconds a coalesced request waited in the batcher queue,
+    /// from enqueue to the drain that answered it.
+    pub batch_wait_us: Arc<Histogram>,
     pub op_encode: OpTel,
     pub op_nearest: OpTel,
     pub op_distortion: OpTel,
@@ -124,6 +131,8 @@ impl ServeTel {
             route_us: t.histogram("query.route_us"),
             scan_us: t.histogram("query.scan_us"),
             slow_queries: t.counter("slow_queries"),
+            batch_size: t.histogram("batch.size"),
+            batch_wait_us: t.histogram("batch.wait_us"),
             op_encode: op("encode"),
             op_nearest: op("nearest"),
             op_distortion: op("distortion"),
@@ -939,6 +948,18 @@ impl VqService {
         self.serve.slow_query_us
     }
 
+    /// Micro-batch coalescing window in µs (0 = the batcher is off and
+    /// every read request scans immediately).
+    pub(crate) fn batch_window_us(&self) -> u64 {
+        self.serve.batch_window_us
+    }
+
+    /// Point budget of one coalesced micro-batch: a batch drains as soon
+    /// as it holds this many points, even before the window closes.
+    pub(crate) fn batch_max_points(&self) -> usize {
+        self.serve.batch_max_points
+    }
+
     /// The `Metrics` wire op and the `--metrics-file` writer land here:
     /// refresh the lazily-maintained gauges — per-shard load counters and
     /// follower lag, which are kept as plain atomics on their hot paths —
@@ -1316,51 +1337,40 @@ impl VqService {
     /// drift suite compares routed answers against. Routing and shard
     /// snapshots resolve against ONE epoch (`Arc`-cloned up front), so a
     /// concurrent rebalance can never mix the old partition's codes with
-    /// the new partition's codebooks.
+    /// the new partition's codebooks. The scan itself is shard-grouped
+    /// and fused (see [`VqService::scan_probed`]) but bit-identical to
+    /// probing one point at a time.
     pub fn query_nearest_probed(
         &self,
         points: &[f32],
         probe_n: usize,
     ) -> (u64, Vec<u32>, Vec<f32>) {
-        assert_eq!(points.len() % self.dim, 0, "points not a multiple of dim");
-        let ep = self.current();
-        let snaps: Vec<Arc<Snapshot>> =
-            ep.shards.iter().map(|s| s.store.load()).collect();
-        let version = snaps.iter().map(|s| s.version).sum();
-        let n = points.len() / self.dim;
-        let mut codes = Vec::with_capacity(n);
-        let mut dists = Vec::with_capacity(n);
-        let mut probes = Vec::with_capacity(probe_n);
-        for z in points.chunks_exact(self.dim) {
-            ep.router.probe_into(z, probe_n, &mut probes);
-            let mut best_code = 0u32;
-            let mut best_d = f32::INFINITY;
-            for &s in &probes {
-                let (local, d) = snaps[s].nearest_one(z);
-                if d < best_d {
-                    best_d = d;
-                    best_code = (s * self.kappa_shard) as u32 + local;
-                }
-            }
-            codes.push(best_code);
-            dists.push(best_d);
-        }
-        (version, codes, dists)
+        let q = self.query_probed_inner(points, probe_n);
+        (q.version, q.codes, q.dists)
     }
 
     /// [`VqService::query_nearest_probed`] with per-stage timings — the
-    /// front-end's instrumented entry point. Stage 1 routes every point
-    /// through the coarse quantizer (collecting flat probe lists so the
-    /// scan never re-routes), stage 2 scans the probed shards' snapshots;
-    /// both stages record into the telemetry plane and return their µs
-    /// for the slow-query log. Same epoch discipline as the untimed
-    /// path: routing and snapshots resolve against ONE `Arc`-cloned
-    /// epoch, and the answers are identical bit for bit.
+    /// front-end's instrumented entry point. Identical answers (both
+    /// paths share [`VqService::query_probed_inner`]); this one also
+    /// records the stage timings into the telemetry plane and returns
+    /// their µs for the slow-query log.
     pub(crate) fn query_nearest_timed(
         &self,
         points: &[f32],
         probe_n: usize,
     ) -> TimedQuery {
+        let q = self.query_probed_inner(points, probe_n);
+        self.tel.route_us.record(q.route_us);
+        self.tel.scan_us.record(q.scan_us);
+        q
+    }
+
+    /// The shared read path. Stage 1 routes every point through the
+    /// coarse quantizer, collecting flat probe lists so the scan never
+    /// re-routes; stage 2 is the shard-grouped fused scan. Records
+    /// nothing — the timed wrapper owns telemetry, so an untimed call
+    /// leaves the histograms untouched.
+    fn query_probed_inner(&self, points: &[f32], probe_n: usize) -> TimedQuery {
         assert_eq!(points.len() % self.dim, 0, "points not a multiple of dim");
         let ep = self.current();
         let snaps: Vec<Arc<Snapshot>> =
@@ -1380,28 +1390,88 @@ impl VqService {
         let route_us = t_route.elapsed().as_micros() as u64;
 
         let t_scan = Instant::now();
-        let mut codes = Vec::with_capacity(n);
-        let mut dists = Vec::with_capacity(n);
+        let (codes, dists) =
+            self.scan_probed(&snaps, points, &flat_probes, &probe_lens);
+        let scan_us = t_scan.elapsed().as_micros() as u64;
+        TimedQuery { version, codes, dists, route_us, scan_us }
+    }
+
+    /// The fused scan stage: instead of `n · probe_n` scalar codebook
+    /// sweeps, gather each shard's (point, probe) pairs into one
+    /// contiguous query block, run ONE [`crate::vq::nearest_batch`] pass
+    /// per probed shard, scatter the per-pair results into a flat buffer,
+    /// then merge each point's pairs **in probe order** with the same
+    /// strict-`<` rule as the scalar loop. Per pair the kernel is
+    /// bit-identical to `Snapshot::nearest_one` (same row order, same
+    /// four-lane distance sum) and the merge visits pairs in the same
+    /// order with the same comparison, so the answers are bit-identical
+    /// to the pre-batching path — the `query_plane` suite pins this
+    /// against a scalar oracle over random shapes.
+    fn scan_probed(
+        &self,
+        snaps: &[Arc<Snapshot>],
+        points: &[f32],
+        flat_probes: &[usize],
+        probe_lens: &[usize],
+    ) -> (Vec<u32>, Vec<f32>) {
+        // Gather: one contiguous point block per shard, plus the pair
+        // slot each gathered point's result scatters back into.
+        let mut shard_points: Vec<Vec<f32>> = vec![Vec::new(); snaps.len()];
+        let mut shard_slots: Vec<Vec<usize>> = vec![Vec::new(); snaps.len()];
         let mut off = 0usize;
-        for (z, len) in points.chunks_exact(self.dim).zip(&probe_lens) {
+        for (z, &len) in points.chunks_exact(self.dim).zip(probe_lens) {
+            for (slot, &s) in (off..off + len).zip(&flat_probes[off..off + len]) {
+                shard_points[s].extend_from_slice(z);
+                shard_slots[s].push(slot);
+            }
+            off += len;
+        }
+
+        // One fused codebook sweep per shard.
+        let mut pair_codes = vec![0u32; flat_probes.len()];
+        let mut pair_dists = vec![0.0f32; flat_probes.len()];
+        let mut codes_buf: Vec<u32> = Vec::new();
+        let mut dists_buf: Vec<f32> = Vec::new();
+        for (s, snap) in snaps.iter().enumerate() {
+            let slots = &shard_slots[s];
+            if slots.is_empty() {
+                continue;
+            }
+            codes_buf.resize(slots.len(), 0);
+            dists_buf.resize(slots.len(), 0.0);
+            nearest_batch_into(
+                &snap.codebook,
+                &shard_points[s],
+                &mut codes_buf,
+                &mut dists_buf,
+            );
+            for (i, &slot) in slots.iter().enumerate() {
+                pair_codes[slot] = codes_buf[i];
+                pair_dists[slot] = dists_buf[i];
+            }
+        }
+
+        // Merge per point, walking its pairs in probe order (strict `<`:
+        // ties keep the earlier probe, exactly like the scalar loop).
+        let mut codes = Vec::with_capacity(probe_lens.len());
+        let mut dists = Vec::with_capacity(probe_lens.len());
+        let mut off = 0usize;
+        for &len in probe_lens {
             let mut best_code = 0u32;
             let mut best_d = f32::INFINITY;
-            for &s in &flat_probes[off..off + len] {
-                let (local, d) = snaps[s].nearest_one(z);
+            for j in off..off + len {
+                let d = pair_dists[j];
                 if d < best_d {
                     best_d = d;
-                    best_code = (s * self.kappa_shard) as u32 + local;
+                    best_code =
+                        (flat_probes[j] * self.kappa_shard) as u32 + pair_codes[j];
                 }
             }
             off += len;
             codes.push(best_code);
             dists.push(best_d);
         }
-        let scan_us = t_scan.elapsed().as_micros() as u64;
-
-        self.tel.route_us.record(route_us);
-        self.tel.scan_us.record(scan_us);
-        TimedQuery { version, codes, dists, route_us, scan_us }
+        (codes, dists)
     }
 
     /// Normalized empirical distortion of `points` (paper eq. 2) under the
@@ -2613,6 +2683,47 @@ mod tests {
         };
         assert_eq!(hist("query.route_us").count, 1);
         assert_eq!(hist("query.scan_us").count, 1);
+    }
+
+    #[test]
+    fn fused_scan_matches_the_scalar_per_point_oracle() {
+        // The shard-grouped fused scan must be bit-identical to the
+        // pre-batching loop — probe one point at a time via nearest_one,
+        // merge in probe order with strict `<` — replicated here inline.
+        let (mut cfg, mut serve) = tiny_cfg(1);
+        cfg.vq.kappa = 8;
+        serve.shards = 4;
+        serve.probe_n = 2;
+        let svc = VqService::start(&cfg, &serve).unwrap();
+        // Quiesce so both reads see identical frozen snapshots (the read
+        // path stays up after shutdown by design).
+        svc.shutdown().unwrap();
+        let eval = cfg.data.mixture.eval_sample(128, cfg.seed);
+        for probe_n in [1, 2, 4] {
+            let (_, codes, dists) = svc.query_nearest_probed(&eval, probe_n);
+            let router = svc.router();
+            let snaps = svc.snapshots();
+            let kappa_shard = svc.kappa() / snaps.len();
+            let mut probes = Vec::new();
+            for (i, z) in eval.chunks_exact(svc.dim()).enumerate() {
+                router.probe_into(z, probe_n, &mut probes);
+                let mut best_code = 0u32;
+                let mut best_d = f32::INFINITY;
+                for &s in &probes {
+                    let (local, d) = snaps[s].nearest_one(z);
+                    if d < best_d {
+                        best_d = d;
+                        best_code = (s * kappa_shard) as u32 + local;
+                    }
+                }
+                assert_eq!(codes[i], best_code, "code at point {i}");
+                assert_eq!(
+                    dists[i].to_bits(),
+                    best_d.to_bits(),
+                    "distance not bit-identical at point {i}"
+                );
+            }
+        }
     }
 
     #[test]

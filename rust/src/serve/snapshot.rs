@@ -39,18 +39,12 @@ impl Snapshot {
         (i as u32, d)
     }
 
-    /// `(index, squared distance)` of the nearest centroid per point.
+    /// `(index, squared distance)` of the nearest centroid per point, via
+    /// the fused batch kernel ([`vq::nearest_batch`]) — bit-identical per
+    /// point to [`Snapshot::nearest_one`] (the test below pins it).
     /// An empty slice yields empty vectors.
     pub fn nearest(&self, points: &[f32]) -> (Vec<u32>, Vec<f32>) {
-        let dim = self.codebook.dim();
-        let mut idx = Vec::with_capacity(points.len() / dim);
-        let mut dist = Vec::with_capacity(points.len() / dim);
-        for z in points.chunks_exact(dim) {
-            let (i, d) = self.nearest_one(z);
-            idx.push(i);
-            dist.push(d);
-        }
-        (idx, dist)
+        vq::nearest_batch(&self.codebook, points)
     }
 
     /// Normalized empirical distortion of `points` (paper eq. 2).

@@ -1,0 +1,142 @@
+//! Fused batch nearest-prototype scan — the read-path distance kernel.
+//!
+//! [`nearest_batch`] is the batched twin of the per-point scan in
+//! [`super::step::nearest_row_with_dist`]: one call takes a row-major block
+//! of query points plus one codebook and produces codes and squared
+//! distances for every point in a single tiled pass. The tiling keeps a
+//! codebook row hot across a whole tile of points (the shared-memory LBG
+//! batching argument), while the per-point arithmetic is **bit-identical**
+//! to the scalar scan: same [`super::step::row_dist_sq`] four-lane sum,
+//! same row order, same strict-`<` first-minimum tie break. Batching is a
+//! scheduling change, never a numerics change.
+
+use super::step::row_dist_sq;
+use super::Codebook;
+
+/// Points per tile. The tile of queries stays L1-resident while the outer
+/// loop streams codebook rows over it, so each row is loaded once per
+/// `TILE` points instead of once per point.
+const TILE: usize = 64;
+
+/// Nearest prototype for every point of a flat row-major block: returns
+/// `(codes, squared distances)`, one entry per point.
+///
+/// Per point this is bit-identical to [`nearest_with_dist`]
+/// (`jnp.argmin` semantics: first minimum wins on ties) — the property
+/// tests in `rust/tests/query_plane.rs` pin the equivalence over random
+/// shapes.
+///
+/// [`nearest_with_dist`]: super::nearest_with_dist
+///
+/// # Panics
+/// If `points.len()` is not a multiple of the codebook dimension.
+pub fn nearest_batch(w: &Codebook, points: &[f32]) -> (Vec<u32>, Vec<f32>) {
+    let dim = w.dim();
+    assert_eq!(points.len() % dim, 0, "points not a multiple of dim {dim}");
+    let n = points.len() / dim;
+    let mut codes = vec![0u32; n];
+    let mut dists = vec![0.0f32; n];
+    nearest_batch_into(w, points, &mut codes, &mut dists);
+    (codes, dists)
+}
+
+/// [`nearest_batch`] writing into caller-owned slices — the serving scan
+/// scatters per-(point, probe) results into one flat pair buffer and must
+/// not allocate per shard.
+///
+/// # Panics
+/// If `points.len()` is not a multiple of the codebook dimension, or the
+/// output slices don't hold exactly one entry per point.
+pub(crate) fn nearest_batch_into(
+    w: &Codebook,
+    points: &[f32],
+    codes: &mut [u32],
+    dists: &mut [f32],
+) {
+    let dim = w.dim();
+    assert_eq!(points.len() % dim, 0, "points not a multiple of dim {dim}");
+    let n = points.len() / dim;
+    assert_eq!(codes.len(), n, "codes slice holds {} of {n} points", codes.len());
+    assert_eq!(dists.len(), n, "dists slice holds {} of {n} points", dists.len());
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + TILE).min(n);
+        let tile = &points[start * dim..end * dim];
+        let tile_codes = &mut codes[start..end];
+        let tile_dists = &mut dists[start..end];
+        tile_dists.fill(f32::INFINITY);
+        for (i, row) in w.flat().chunks_exact(dim).enumerate() {
+            let zs = tile.chunks_exact(dim);
+            for (z, (code, best)) in
+                zs.zip(tile_codes.iter_mut().zip(tile_dists.iter_mut()))
+            {
+                let d = row_dist_sq(row, z);
+                if d < *best {
+                    *best = d;
+                    *code = i as u32;
+                }
+            }
+        }
+        start = end;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::nearest_with_dist;
+    use super::*;
+
+    /// Tiny deterministic generator (xorshift), enough to stress shapes.
+    struct Rng(u64);
+    impl Rng {
+        fn next_f32(&mut self) -> f32 {
+            self.0 ^= self.0 << 13;
+            self.0 ^= self.0 >> 7;
+            self.0 ^= self.0 << 17;
+            // Map to [-4, 4) with coarse granularity so exact ties occur.
+            ((self.0 >> 32) as u32 % 64) as f32 / 8.0 - 4.0
+        }
+    }
+
+    #[test]
+    fn batch_matches_scalar_bitwise_over_shapes() {
+        let mut rng = Rng(0x9e3779b97f4a7c15);
+        for &(kappa, dim, n) in
+            &[(1, 1, 7), (2, 3, 1), (8, 2, 65), (16, 4, 130), (5, 7, 200)]
+        {
+            let flat: Vec<f32> =
+                (0..kappa * dim).map(|_| rng.next_f32()).collect();
+            let w = Codebook::from_flat(kappa, dim, flat);
+            let points: Vec<f32> =
+                (0..n * dim).map(|_| rng.next_f32()).collect();
+            let (codes, dists) = nearest_batch(&w, &points);
+            for (i, z) in points.chunks_exact(dim).enumerate() {
+                let (code, dist) = nearest_with_dist(&w, z);
+                assert_eq!(codes[i] as usize, code, "code mismatch at point {i}");
+                assert_eq!(
+                    dists[i].to_bits(),
+                    dist.to_bits(),
+                    "distance not bit-identical at point {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ties_break_to_first_row_like_scalar() {
+        // Two identical prototypes: every point is equidistant, and both
+        // paths must pick row 0 (strict `<` keeps the first minimum).
+        let w = Codebook::from_flat(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let (codes, dists) = nearest_batch(&w, &[0.0, 0.0, 3.0, 3.0]);
+        assert_eq!(codes, vec![0, 0]);
+        assert_eq!(dists, vec![2.0, 8.0]);
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let w = Codebook::from_flat(2, 2, vec![0.0; 4]);
+        let (codes, dists) = nearest_batch(&w, &[]);
+        assert!(codes.is_empty());
+        assert!(dists.is_empty());
+    }
+}

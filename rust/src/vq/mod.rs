@@ -7,6 +7,7 @@
 //! over these functions; integration tests pin them against the PJRT
 //! execution of the AOT artifacts.
 
+mod batch;
 mod codebook;
 mod codec;
 mod delta;
@@ -15,6 +16,8 @@ mod init;
 mod schedule;
 mod step;
 
+pub use batch::nearest_batch;
+pub(crate) use batch::nearest_batch_into;
 pub use codebook::Codebook;
 pub use codec::{compression_report, decode, encode, CompressionReport, Encoded};
 pub use delta::Delta;

@@ -18,10 +18,18 @@ use dalvq::vq::{Codebook, Delta, Schedule};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
+    let manifest = dir.join("manifest.json");
+    if manifest.exists() {
         Some(dir)
     } else {
-        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        // Loud, greppable, and names the exact missing path — CI surfaces
+        // this line so a silently-skipped engine comparison can't read as
+        // a passing one.
+        eprintln!(
+            "SKIPPED native_vs_pjrt: {} not found — run `make artifacts` \
+             to lower the Pallas kernels before comparing engines",
+            manifest.display()
+        );
         None
     }
 }
@@ -79,6 +87,31 @@ fn distortion_sums_agree() {
     let b = native.distortion_sum(&w0, &points).unwrap();
     let rel = (a - b).abs() / b.abs().max(1e-9);
     assert!(rel < 1e-4, "distortion mismatch: pjrt {a} vs native {b}");
+}
+
+#[test]
+fn nearest_chunks_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtEngine::load(&dir, "k16d16").unwrap();
+    let mut native = NativeEngine::new();
+    // 2.5 batches: artifact path plus the native remainder path
+    let (w0, points) = fixture(16, 16, 2_560);
+    let (cp, dp) = match pjrt.nearest_chunk(&w0, &points) {
+        Ok(out) => out,
+        Err(e) => {
+            eprintln!(
+                "SKIPPED nearest_chunks_agree: {e:#} (artifact predates the \
+                 batched read path — re-run `make artifacts`)"
+            );
+            return;
+        }
+    };
+    let (cn, dn) = native.nearest_chunk(&w0, &points).unwrap();
+    assert_eq!(cp, cn, "nearest codes disagree across engines");
+    for (i, (a, b)) in dp.iter().zip(&dn).enumerate() {
+        let rel = (a - b).abs() / b.abs().max(1e-9);
+        assert!(rel < 1e-4, "dist {i}: pjrt {a} vs native {b}");
+    }
 }
 
 #[test]

@@ -399,6 +399,44 @@ fn lying_element_counts_err_without_overallocating() {
     assert!(Response::decode(&wire).is_err());
 }
 
+/// Point payloads carrying NaN or ±Inf must be rejected at decode, for
+/// every point-carrying op, with the offending index named — a NaN that
+/// reaches the scan answers code 0 at distance NaN, and one that reaches
+/// `Ingest` poisons a codebook row for every later query. Hand-crafted
+/// frames, since `rand_f32s` is deliberately finite-only (the roundtrip
+/// property above depends on that).
+#[test]
+fn non_finite_point_payloads_err_at_decode() {
+    let point_ops = [0x01u8, 0x02, 0x03, 0x04]; // encode/nearest/distortion/ingest
+    let bads = [
+        f32::NAN.to_le_bytes(),
+        f32::INFINITY.to_le_bytes(),
+        f32::NEG_INFINITY.to_le_bytes(),
+        // a signalling-ish NaN payload pattern, not just the canonical one
+        [0x01, 0x00, 0x80, 0x7F],
+    ];
+    for op in point_ops {
+        for bad in bads {
+            let mut wire = vec![op];
+            wire.extend_from_slice(&3u32.to_le_bytes());
+            wire.extend_from_slice(&1.5f32.to_le_bytes());
+            wire.extend_from_slice(&bad);
+            wire.extend_from_slice(&(-2.5f32).to_le_bytes());
+            let err = Request::decode(&wire).unwrap_err().to_string();
+            assert!(
+                err.contains("non-finite") && err.contains("index 1"),
+                "op 0x{op:02x}: unexpected error {err:?}"
+            );
+        }
+        // finite extremes still pass through the same arm
+        let mut wire = vec![op];
+        wire.extend_from_slice(&2u32.to_le_bytes());
+        wire.extend_from_slice(&f32::MIN.to_le_bytes());
+        wire.extend_from_slice(&f32::MAX.to_le_bytes());
+        assert!(Request::decode(&wire).is_ok(), "op 0x{op:02x}");
+    }
+}
+
 /// The replication fields of `StatsReply` survive the wire exactly —
 /// a leader's defaults (empty role strings are what pre-replication
 /// encoders would have sent for a default reply) and a fully populated

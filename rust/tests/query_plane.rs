@@ -1,0 +1,240 @@
+//! The batched query plane, end to end: the fused shard-grouped scan and
+//! the cross-request coalescer must answer **bit-identically** to the
+//! scalar per-point path, over random shapes and under concurrency, and
+//! the admission layer must reject a query whose reply could never be
+//! framed before any scan work is spent on it.
+//!
+//! Three families:
+//!
+//! * **Shape property test** — random (dim, kappa, shards, probe_n,
+//!   batch size) deployments; every fused answer is checked against a
+//!   scalar oracle built from the same public parts (router probes +
+//!   `Snapshot::nearest_one` + probe-order strict-`<` merge).
+//! * **Coalescer over TCP** — a server armed with `batch_window_us`
+//!   answers concurrent clients; every reply must equal the direct
+//!   in-process path bit for bit, and the drain histograms must have
+//!   recorded themselves.
+//! * **Reply-size admission** — at dim 1 a `Nearest` request can be
+//!   admissible while its reply (17 + 8n bytes) overruns `MAX_FRAME`;
+//!   such a query must come back as a clear in-band error, leaving the
+//!   connection usable, while a constant-size `Distortion` reply for the
+//!   same batch passes.
+
+use std::sync::{Arc, Mutex};
+
+use dalvq::config::{ExperimentConfig, SchemeConfig, ServeConfig};
+use dalvq::serve::protocol::MAX_FRAME;
+use dalvq::serve::{Client, Server, Snapshot, VqService};
+use dalvq::sim::DelayModel;
+use dalvq::util::Rng;
+use dalvq::vq::Schedule;
+
+/// Real-time fleets; run tests one at a time (same discipline as
+/// serve_e2e.rs).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A small serving deployment with the given read-path shape.
+fn shaped_cfg(
+    dim: usize,
+    kappa: usize,
+    shards: usize,
+    probe_n: usize,
+) -> (ExperimentConfig, ServeConfig) {
+    let mut cfg = ExperimentConfig::default();
+    cfg.m = 1;
+    cfg.data.mixture.components = 4;
+    cfg.data.mixture.dim = dim;
+    cfg.data.n_total = 2_000;
+    cfg.data.eval_points = 256;
+    cfg.vq.kappa = kappa;
+    cfg.vq.schedule = Schedule::Constant { eps0: 0.01 };
+    cfg.scheme = SchemeConfig::AsyncDelta {
+        tau: 10,
+        up_delay: DelayModel::Instant,
+        down_delay: DelayModel::Instant,
+    };
+    let mut serve = ServeConfig::default();
+    serve.points_per_exchange = 50;
+    serve.point_compute = 2e-6;
+    serve.shards = shards;
+    serve.probe_n = probe_n;
+    (cfg, serve)
+}
+
+/// The scalar per-point oracle the fused plane must reproduce bit for
+/// bit: probe the router, scan each probed shard one point at a time,
+/// merge in probe order with strict `<` (ties keep the earlier probe).
+fn scalar_oracle(
+    svc: &VqService,
+    snaps: &[Arc<Snapshot>],
+    points: &[f32],
+    probe_n: usize,
+) -> (Vec<u32>, Vec<f32>) {
+    let dim = svc.dim();
+    let kappa_shard = svc.kappa() / svc.shards();
+    let router = svc.router();
+    let mut probes = Vec::new();
+    let mut codes = Vec::new();
+    let mut dists = Vec::new();
+    for z in points.chunks_exact(dim) {
+        router.probe_into(z, probe_n, &mut probes);
+        let mut best_code = 0u32;
+        let mut best_d = f32::INFINITY;
+        for &s in &probes {
+            let (local, d) = snaps[s].nearest_one(z);
+            if d < best_d {
+                best_d = d;
+                best_code = (s * kappa_shard) as u32 + local;
+            }
+        }
+        codes.push(best_code);
+        dists.push(best_d);
+    }
+    (codes, dists)
+}
+
+/// Random shapes: dims that exercise the four-lane kernel's remainder
+/// tail, shard counts from unsharded to kappa-wide, probe widths from 1
+/// to all shards, batch sizes from a single point up. Every fused answer
+/// must equal the scalar oracle bit for bit.
+#[test]
+fn fused_plane_matches_the_scalar_oracle_across_shapes() {
+    let _serial = serial();
+    let mut rng = Rng::from_seed(0x9A7E);
+    for &(dim, kappa, shards) in
+        &[(1, 4, 1), (2, 8, 4), (3, 6, 2), (5, 8, 2), (9, 12, 4)]
+    {
+        let (cfg, serve) = shaped_cfg(dim, kappa, shards, 2.min(shards));
+        let svc = VqService::start(&cfg, &serve).unwrap();
+        // Quiesce so oracle and fused path read the same frozen epoch.
+        svc.shutdown().unwrap();
+        let snaps = svc.snapshots();
+        for probe_n in 1..=shards {
+            for &n in &[1usize, 3, 17, 64] {
+                let points: Vec<f32> = (0..n * dim)
+                    .map(|_| rng.range_f32(-6.0, 6.0))
+                    .collect();
+                let (version, codes, dists) =
+                    svc.query_nearest_probed(&points, probe_n);
+                let (want_codes, want_dists) =
+                    scalar_oracle(&svc, &snaps, &points, probe_n);
+                assert!(version > 0);
+                assert_eq!(
+                    codes, want_codes,
+                    "codes diverged at dim={dim} kappa={kappa} \
+                     shards={shards} probe_n={probe_n} n={n}"
+                );
+                let got: Vec<u32> =
+                    dists.iter().map(|d| d.to_bits()).collect();
+                let want: Vec<u32> =
+                    want_dists.iter().map(|d| d.to_bits()).collect();
+                assert_eq!(
+                    got, want,
+                    "dists diverged at dim={dim} kappa={kappa} \
+                     shards={shards} probe_n={probe_n} n={n}"
+                );
+            }
+        }
+    }
+}
+
+/// The coalescer over real TCP: concurrent clients against a server
+/// armed with `--batch-window-us` get answers bit-identical to the
+/// direct in-process path, and the drain telemetry records itself.
+#[test]
+fn coalesced_server_answers_bit_identically_over_tcp() {
+    let _serial = serial();
+    let (cfg, mut serve) = shaped_cfg(2, 8, 4, 2);
+    serve.batch_window_us = 400;
+    serve.batch_max_points = 256;
+    let svc = VqService::start(&cfg, &serve).unwrap();
+    let server = Server::start(Arc::clone(&svc), &serve.addr).unwrap();
+    // Quiesce the fleets so every drain and the oracle read the same
+    // frozen snapshots (the read path survives shutdown by design).
+    svc.shutdown().unwrap();
+    let addr = server.local_addr();
+
+    let eval = cfg.data.mixture.eval_sample(128, cfg.seed);
+    let mut joins = Vec::new();
+    for t in 0..4usize {
+        let svc = Arc::clone(&svc);
+        let mine: Vec<f32> = eval[t * 32 * 2..(t + 1) * 32 * 2].to_vec();
+        joins.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            for _ in 0..8 {
+                let (codes, dists, version) = client.nearest(&mine).unwrap();
+                let (want_v, want_codes, want_dists) =
+                    svc.query_nearest_probed(&mine, svc.probe_n());
+                assert_eq!(version, want_v);
+                assert_eq!(codes, want_codes);
+                assert_eq!(
+                    dists.iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+                    want_dists.iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+                );
+                let (enc_codes, enc_v) = client.encode(&mine).unwrap();
+                assert_eq!(enc_v, want_v);
+                assert_eq!(enc_codes, want_codes);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    // Every armed read drained through the coalescer and said so.
+    let mut client = Client::connect(addr).unwrap();
+    let metrics = client.metrics(0).unwrap();
+    let hist = |name: &str| {
+        metrics
+            .hists
+            .iter()
+            .find(|h| h.name == name)
+            .unwrap_or_else(|| panic!("no histogram {name}"))
+            .count
+    };
+    assert!(hist("batch.size") > 0, "no drains recorded");
+    assert!(hist("batch.wait_us") > 0, "no batch waits recorded");
+    drop(client);
+    server.shutdown().unwrap();
+}
+
+/// Admission must reject a read whose reply could never be framed —
+/// before any routing or scan work — and leave the connection usable.
+/// At dim 1, a `Nearest` request of n points is 5 + 4n bytes (admissible
+/// up to ~16.7M points) but its reply is 17 + 8n (over the cap past
+/// ~8.4M), so the top half of the admissible range is answerable only by
+/// rejection. A `Distortion` query over the same batch has a
+/// constant-size reply and must pass.
+#[test]
+fn oversized_reply_is_rejected_at_admission_not_mid_scan() {
+    let _serial = serial();
+    let (cfg, serve) = shaped_cfg(1, 4, 1, 1);
+    let svc = VqService::start(&cfg, &serve).unwrap();
+    let server = Server::start(Arc::clone(&svc), &serve.addr).unwrap();
+    svc.shutdown().unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+
+    // Smallest point count whose Neighbors reply overruns the cap.
+    let n = (MAX_FRAME as usize - 17) / 8 + 1;
+    assert!(5 + 4 * n <= MAX_FRAME as usize, "request must be admissible");
+    let points = vec![0.5f32; n];
+    let err = client.nearest(&points).unwrap_err().to_string();
+    assert!(
+        err.contains("frame cap") && err.contains("split the batch"),
+        "unexpected error: {err}"
+    );
+
+    // Same batch, constant-size reply: the distortion arm has no
+    // admission cap to hit, so the scan actually runs.
+    let (value, _version) = client.distortion(&points).unwrap();
+    assert!(value.is_finite());
+
+    // The rejection was in-band; the connection still answers.
+    let (codes, _v) = client.encode(&[0.25f32]).unwrap();
+    assert_eq!(codes.len(), 1);
+    server.shutdown().unwrap();
+}
