@@ -56,6 +56,7 @@ fn main() {
             ingest_frac,
             skew: 0.0,
             read_only: false,
+            trace: false,
             seed: p.base.seed,
         };
         let report = run_load(&addr, &spec, &p.base.data.mixture).expect("load");
@@ -189,6 +190,7 @@ fn main() {
         ingest_frac: 0.8,
         skew: 2.0,
         read_only: false,
+        trace: false,
         seed: p.base.seed,
     };
     run_load(&addr, &spec, &p.base.data.mixture).expect("skewed load");
@@ -260,6 +262,7 @@ fn main() {
             ingest_frac: 0.0,
             skew: 0.0,
             read_only: true,
+            trace: false,
             seed: p.base.seed,
         };
         let mixture = p.base.data.mixture.clone();
@@ -387,6 +390,7 @@ fn main() {
             ingest_frac: 0.0,
             skew: 0.0,
             read_only: true,
+            trace: false,
             seed: p.base.seed,
         };
         let report = run_load(&addr, &spec, &p.base.data.mixture).expect("load");
@@ -531,6 +535,7 @@ fn mixed_load_sweep(p: &presets::ServePreset) -> (dalvq::serve::LoadReport, u64)
         ingest_frac: 0.25,
         skew: 0.0,
         read_only: false,
+        trace: false,
         seed: p.base.seed,
     };
     let report = run_load(&addr, &spec, &p.base.data.mixture).expect("load");

@@ -250,6 +250,18 @@ pub struct ServeConfig {
     /// the window closes. Bounds both reply latency under load and the
     /// size of the fused scan. Only meaningful with `batch_window_us`.
     pub batch_max_points: usize,
+    /// Distributed-tracing sample rate: `0` (default) disarms tracing,
+    /// `1` traces every request, `N > 1` deterministically keeps one
+    /// request in `N`. Independently of the draw, any request slower
+    /// than `slow_query_us` is kept, and wire-propagated trace contexts
+    /// (a client or follower asking for its own trace) are always
+    /// honored. Completed traces land in a bounded ring served by the
+    /// `Trace` wire op, `dalvq trace`, and `--metrics-file` snapshots.
+    pub trace_sample: u64,
+    /// Event-journal ring capacity (entries retained). A busy rebalance
+    /// plus sync cycle can wrap a small ring before anyone reads it;
+    /// raise this to keep more history. Validated `>= 16`.
+    pub journal_capacity: usize,
 }
 
 impl Default for ServeConfig {
@@ -282,6 +294,8 @@ impl Default for ServeConfig {
             metrics_every_ms: 1_000,
             batch_window_us: 0,
             batch_max_points: 4_096,
+            trace_sample: 0,
+            journal_capacity: 256,
         }
     }
 }
@@ -423,6 +437,13 @@ impl ServeConfig {
                  the coalescer"
                     .into(),
             );
+        }
+        if self.journal_capacity < 16 {
+            errs.push(format!(
+                "journal_capacity = {} must be >= 16 (the ring must hold \
+                 at least a burst of lifecycle events)",
+                self.journal_capacity
+            ));
         }
         if errs.is_empty() {
             Ok(())

@@ -13,6 +13,7 @@
 //! dalvq serve                        # online VQ service (TCP front-end)
 //! dalvq loadtest --preset serve      # drive an in-process service
 //! dalvq top --addr 127.0.0.1:7171    # live telemetry view of a server
+//! dalvq trace --addr 127.0.0.1:7171  # sampled distributed traces
 //! dalvq info                         # artifact manifest summary
 //! ```
 //!
@@ -48,6 +49,7 @@ COMMANDS:
   serve      run the online VQ service (ingest + query over TCP)
   loadtest   drive a service with concurrent load; print a latency report
   top        live per-op/per-shard telemetry view of a running server
+  trace      fetch and print a server's sampled distributed traces
   state      inspect a --state-dir (manifest, per-shard checkpoints)
   info       print the AOT artifact manifest summary
   help       show this message
@@ -102,7 +104,17 @@ OPTIONS (serve):
                              this file as JSON, plus once at shutdown
   --metrics-every <MS>       milliseconds between snapshots [default: 1000]
   --slow-query-us <N>        journal any request slower than N microseconds
-                             with its route/scan stage breakdown (0 = off)
+                             with its route/scan stage breakdown (0 = off);
+                             with tracing armed, also always keep the
+                             slow request's trace
+  --trace-sample <N>         distributed tracing: keep the full span tree
+                             of one request in N (1 = every request,
+                             0 = off). Sampled traces are served by the
+                             Trace wire op / `dalvq trace`, carried in
+                             --metrics-file snapshots, and joined across
+                             processes on the replication path
+  --journal-capacity <N>     event-journal ring size, entries retained
+                             [default: 256; min 16]
   --batch-window-us <N>      coalesce concurrent read requests for up to N
                              microseconds into one fused multi-probe scan
                              (answers stay bit-identical; 0 = off)
@@ -113,6 +125,10 @@ OPTIONS (top):
   --addr <HOST:PORT>         server to poll (required)
   --interval <MS>            milliseconds between redraws [default: 1000]
   --iterations <N>           screens to draw then exit [default: forever]
+
+OPTIONS (trace):
+  --addr <HOST:PORT>         server to poll (required)
+  --max <N>                  newest traces to fetch [default: 4]
 
 OPTIONS (state):
   inspect --state-dir <DIR>    print the manifest, router epoch and
@@ -138,6 +154,9 @@ OPTIONS (loadtest):
   --read-only                issue no ingest at all (reads rotate
                              encode/nearest/distortion) — the workload
                              for read-only followers
+  --trace                    stamp a wire trace context on every 16th
+                             request; the report prints the slowest traced
+                             request's id and server-side span breakdown
   --shards <S>               shard the in-process service [default: 1]
   --probe <N>                shards probed per query [default: min(2, S)]
 
@@ -346,6 +365,9 @@ fn run() -> Result<()> {
             let batch_window_us = parse_opt_u64(&mut args, "--batch-window-us")?;
             let batch_max_points =
                 parse_opt_u64(&mut args, "--batch-max-points")?;
+            let trace_sample = parse_opt_u64(&mut args, "--trace-sample")?;
+            let journal_capacity =
+                parse_opt_u64(&mut args, "--journal-capacity")?;
             args.finish()?;
             let mut p = serve_preset(&preset)?;
             apply_sharding(&mut p, shards, probe);
@@ -384,6 +406,12 @@ fn run() -> Result<()> {
             }
             if let Some(n) = batch_max_points {
                 p.serve.batch_max_points = n as usize;
+            }
+            if let Some(n) = trace_sample {
+                p.serve.trace_sample = n;
+            }
+            if let Some(n) = journal_capacity {
+                p.serve.journal_capacity = n as usize;
             }
             let service = VqService::start(&p.base, &p.serve)?;
             let server = Server::start(Arc::clone(&service), &p.serve.addr)?;
@@ -445,6 +473,14 @@ fn run() -> Result<()> {
                     "dalvq serve: micro-batch coalescing armed ({} us window, \
                      {} point budget)",
                     p.serve.batch_window_us, p.serve.batch_max_points,
+                );
+            }
+            if p.serve.trace_sample > 0 {
+                println!(
+                    "dalvq serve: distributed tracing armed (1 in {} requests; \
+                     `dalvq trace --addr {}` to inspect)",
+                    p.serve.trace_sample,
+                    server.local_addr(),
                 );
             }
             match duration {
@@ -513,6 +549,7 @@ fn run() -> Result<()> {
                 spec.skew = s;
             }
             spec.read_only = args.take_flag("--read-only");
+            spec.trace = args.take_flag("--trace");
             let shards = parse_opt_u64(&mut args, "--shards")?;
             let probe = parse_opt_u64(&mut args, "--probe")?;
             args.finish()?;
@@ -561,6 +598,18 @@ fn run() -> Result<()> {
                 addr,
                 interval_ms,
                 iterations,
+            })?;
+        }
+        "trace" => {
+            let addr = args
+                .take_value("--addr")?
+                .ok_or_else(|| anyhow!("trace requires --addr HOST:PORT"))?;
+            let max_traces =
+                parse_opt_u64(&mut args, "--max")?.unwrap_or(4) as u32;
+            args.finish()?;
+            dalvq::serve::run_trace(&dalvq::serve::TraceSpec {
+                addr,
+                max_traces,
             })?;
         }
         "state" => {

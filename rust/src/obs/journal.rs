@@ -7,7 +7,7 @@
 //! emission is one short mutex hold (all emitters are cold paths).
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
 use std::sync::Mutex;
 use std::time::{SystemTime, UNIX_EPOCH};
 
@@ -66,6 +66,10 @@ pub struct Event {
 pub struct Journal {
     cap: usize,
     seq: AtomicU64,
+    /// Latched on the first eviction so the ring carries exactly one
+    /// self-describing `journal.evict` note: later gaps in `seq` are
+    /// then expected wraparound, not silent data loss.
+    evicted_once: AtomicBool,
     buf: Mutex<VecDeque<Event>>,
 }
 
@@ -75,12 +79,36 @@ impl Journal {
         Self {
             cap,
             seq: AtomicU64::new(0),
+            evicted_once: AtomicBool::new(false),
             buf: Mutex::new(VecDeque::with_capacity(cap)),
         }
     }
 
-    /// Append an event, evicting the oldest if the ring is full.
+    /// Append an event, evicting the oldest if the ring is full. The
+    /// first eviction journals an info of its own (inline — `emit` is
+    /// not reentrant under the buffer lock), so a reader seeing a `seq`
+    /// gap can tell a wrapped ring from a broken one.
     pub fn emit(&self, level: Level, kind: &str, message: String) {
+        let mut buf = self.buf.lock().unwrap();
+        // The notice goes in ahead of the triggering event so it never
+        // displaces it (a capacity-1 ring must still keep the newest
+        // real event).
+        if buf.len() == self.cap && !self.evicted_once.swap(true, Relaxed) {
+            let notice = Event {
+                seq: self.seq.fetch_add(1, Relaxed),
+                ts_ms: unix_ms(),
+                level: Level::Info,
+                kind: "journal.evict".to_string(),
+                message: format!(
+                    "journal ring full at {} entries; oldest events are now \
+                     evicted as new ones land (raise --journal-capacity to \
+                     retain more)",
+                    self.cap
+                ),
+            };
+            buf.pop_front();
+            buf.push_back(notice);
+        }
         let event = Event {
             seq: self.seq.fetch_add(1, Relaxed),
             ts_ms: unix_ms(),
@@ -88,7 +116,6 @@ impl Journal {
             kind: kind.to_string(),
             message,
         };
-        let mut buf = self.buf.lock().unwrap();
         if buf.len() == self.cap {
             buf.pop_front();
         }
@@ -147,11 +174,41 @@ mod tests {
         }
         let recent = j.recent(100);
         assert_eq!(recent.len(), 4);
-        // The four newest survive, in order, with their original seqs.
+        // The four newest survive, in order, with their original seqs —
+        // shifted by one because the first eviction injected its
+        // `journal.evict` notice (seq 4) ahead of event 4.
         let seqs: Vec<u64> = recent.iter().map(|e| e.seq).collect();
-        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        assert_eq!(seqs, vec![7, 8, 9, 10]);
         assert_eq!(recent[3].message, "event 9");
-        assert_eq!(j.emitted(), 10);
+        assert_eq!(j.emitted(), 11, "10 events + the eviction notice");
+    }
+
+    #[test]
+    fn first_eviction_journals_a_notice_exactly_once() {
+        let j = Journal::new(4);
+        for i in 0..4 {
+            j.info("tick", format!("{i}"));
+        }
+        // No eviction yet, no notice.
+        assert!(j.recent(10).iter().all(|e| e.kind != "journal.evict"));
+        j.info("tick", "4".into()); // first eviction
+        let notices: Vec<Event> = j
+            .recent(10)
+            .into_iter()
+            .filter(|e| e.kind == "journal.evict")
+            .collect();
+        assert_eq!(notices.len(), 1);
+        assert_eq!(notices[0].level, Level::Info);
+        assert!(notices[0].message.contains("4 entries"), "{notices:?}");
+        // Later evictions stay silent — the latch fired.
+        j.info("tick", "5".into());
+        j.info("tick", "6".into());
+        let again = j
+            .recent(10)
+            .into_iter()
+            .filter(|e| e.kind == "journal.evict")
+            .count();
+        assert_eq!(again, 1);
     }
 
     #[test]

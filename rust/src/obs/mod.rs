@@ -10,9 +10,15 @@
 //! - [`Journal`]: a bounded ring of leveled structured [`Event`]s for
 //!   fleet lifecycle moments (checkpoint flushes, sync adoptions,
 //!   rebalance phases, slow queries).
-//! - [`Telemetry`]: one registry + journal + start instant, owned by a
-//!   [`crate::serve::VqService`] and exposed three ways — the `Metrics`
-//!   wire op, `dalvq top`, and `--metrics-file` JSON snapshots.
+//! - [`Tracer`] / [`TraceBuilder`]: distributed request tracing — 128-bit
+//!   trace ids, per-unit span trees, deterministic 1-in-N sampling, and a
+//!   bounded ring of completed traces. Trace context rides the wire
+//!   (`docs/PROTOCOL.md`), so one trace spans client, leader and
+//!   follower.
+//! - [`Telemetry`]: one registry + journal + tracer + start instant,
+//!   owned by a [`crate::serve::VqService`] and exposed three ways — the
+//!   `Metrics`/`Trace` wire ops, `dalvq top` / `dalvq trace`, and
+//!   `--metrics-file` JSON snapshots.
 //! - [`nearest_rank_index`]: the percentile definition shared with the
 //!   load generator, so server-side and client-side p99 are the same
 //!   statistic.
@@ -21,6 +27,7 @@ mod hist;
 mod journal;
 mod percentile;
 mod registry;
+mod trace;
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -31,23 +38,41 @@ pub use hist::{Histogram, HistogramSummary, NUM_BUCKETS};
 pub use journal::{Event, Journal, Level};
 pub use percentile::nearest_rank_index;
 pub use registry::{Counter, Gauge, Registry};
+pub use trace::{
+    FinishedTrace, SpanRec, TraceBuilder, TraceSink, Tracer, NO_PARENT,
+    TRACE_RING_CAP,
+};
 
-/// One service's telemetry: metric registry, event journal, start time.
+/// How many completed traces a snapshot carries (the ring may hold
+/// more; `--metrics-file` and the `Metrics` path stay bounded).
+pub const SNAPSHOT_TRACES: usize = 16;
+
+/// One service's telemetry: metric registry, event journal, tracer,
+/// start time.
 #[derive(Debug)]
 pub struct Telemetry {
     registry: Registry,
     journal: Arc<Journal>,
+    tracer: Tracer,
     start: Instant,
 }
 
 impl Telemetry {
-    /// A fresh plane retaining at most `journal_cap` events.
+    /// A fresh plane retaining at most `journal_cap` events. The tracer
+    /// comes up disarmed; [`Tracer::configure`] turns sampling on.
     pub fn new(journal_cap: usize) -> Arc<Self> {
         Arc::new(Self {
             registry: Registry::default(),
             journal: Arc::new(Journal::new(journal_cap)),
+            tracer: Tracer::new(TRACE_RING_CAP),
             start: Instant::now(),
         })
+    }
+
+    /// The distributed-tracing plane (sampling policy + completed-trace
+    /// ring).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
     }
 
     pub fn counter(&self, name: &str) -> Arc<Counter> {
@@ -72,14 +97,32 @@ impl Telemetry {
     }
 
     /// Point-in-time digest of everything: all metrics plus the newest
-    /// `max_events` journal entries.
+    /// `max_events` journal entries and [`SNAPSHOT_TRACES`] completed
+    /// traces. `trace.sampled` is synthesized into the counter list from
+    /// the tracer's commit count (it has no registry entry of its own),
+    /// preserving name order; it only appears once tracing has ever been
+    /// armed or kept a trace, so untraced deployments see an unchanged
+    /// catalog.
     pub fn snapshot(&self, max_events: usize) -> TelemetrySnapshot {
+        let mut counters = self.registry.counters();
+        let committed = self.tracer.committed();
+        if committed > 0 || self.tracer.armed() {
+            let at = counters
+                .binary_search_by(|(n, _)| n.as_str().cmp("trace.sampled"));
+            match at {
+                Ok(i) => counters[i].1 = committed,
+                Err(i) => {
+                    counters.insert(i, ("trace.sampled".to_string(), committed))
+                }
+            }
+        }
         TelemetrySnapshot {
             uptime_ms: self.uptime_ms(),
-            counters: self.registry.counters(),
+            counters,
             gauges: self.registry.gauges(),
             hists: self.registry.histograms(),
             events: self.journal.recent(max_events),
+            traces: self.tracer.recent(SNAPSHOT_TRACES),
         }
     }
 }
@@ -93,6 +136,7 @@ pub struct TelemetrySnapshot {
     pub gauges: Vec<(String, u64)>,
     pub hists: Vec<(String, HistogramSummary)>,
     pub events: Vec<Event>,
+    pub traces: Vec<FinishedTrace>,
 }
 
 impl TelemetrySnapshot {
@@ -132,12 +176,36 @@ impl TelemetrySnapshot {
                     .set("message", e.message.as_str())
             })
             .collect();
+        let traces: Vec<Json> = self
+            .traces
+            .iter()
+            .map(|t| {
+                let spans: Vec<Json> = t
+                    .spans
+                    .iter()
+                    .map(|s| {
+                        Json::obj()
+                            .set("id", s.id)
+                            .set("parent", s.parent)
+                            .set("name", s.name.as_str())
+                            .set("start_us", s.start_us)
+                            .set("dur_us", s.dur_us)
+                    })
+                    .collect();
+                Json::obj()
+                    .set("trace_id", t.id_hex().as_str())
+                    .set("ts_ms", t.ts_ms)
+                    .set("total_us", t.total_us())
+                    .set("spans", Json::Arr(spans))
+            })
+            .collect();
         Json::obj()
             .set("uptime_ms", self.uptime_ms)
             .set("counters", counters)
             .set("gauges", gauges)
             .set("histograms", hists)
             .set("events", Json::Arr(events))
+            .set("traces", Json::Arr(traces))
     }
 }
 
@@ -185,6 +253,53 @@ mod tests {
         assert_eq!(
             events[0].req("level").unwrap().as_str().unwrap(),
             "warn"
+        );
+    }
+
+    #[test]
+    fn snapshot_carries_traces_and_the_synthesized_sample_counter() {
+        let t = Telemetry::new(8);
+        // Disarmed: no trace.sampled counter, no traces.
+        let snap = t.snapshot(4);
+        assert!(snap.traces.is_empty());
+        assert!(snap.counters.iter().all(|(n, _)| n != "trace.sampled"));
+
+        t.tracer().configure(1, 0);
+        t.counter("op.encode.requests").inc();
+        t.counter("zz.last").inc();
+        let mut tb = t.tracer().begin().unwrap();
+        let root = tb.begin("req.nearest", NO_PARENT);
+        tb.end(root);
+        assert!(t.tracer().commit(tb));
+
+        let snap = t.snapshot(4);
+        assert_eq!(snap.traces.len(), 1);
+        assert_eq!(snap.traces[0].spans[0].name, "req.nearest");
+        // the synthesized counter lands in name-sorted position
+        let names: Vec<&str> =
+            snap.counters.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["op.encode.requests", "trace.sampled", "zz.last"]
+        );
+        let sampled = snap
+            .counters
+            .iter()
+            .find(|(n, _)| n == "trace.sampled")
+            .map(|(_, v)| *v);
+        assert_eq!(sampled, Some(1));
+
+        // ...and the JSON document renders the trace tree.
+        let text = snap.to_json().to_pretty();
+        let back = Json::parse(&text).unwrap();
+        let traces = back.req("traces").unwrap().as_arr().unwrap();
+        assert_eq!(traces.len(), 1);
+        let id = traces[0].req("trace_id").unwrap().as_str().unwrap();
+        assert_eq!(id.len(), 32);
+        let spans = traces[0].req("spans").unwrap().as_arr().unwrap();
+        assert_eq!(
+            spans[0].req("name").unwrap().as_str().unwrap(),
+            "req.nearest"
         );
     }
 

@@ -1,0 +1,577 @@
+//! Distributed request tracing: the causal companion to the metric plane.
+//!
+//! Histograms say *how much* time each stage takes in aggregate; a trace
+//! says *where one particular request's* wall clock went, across process
+//! boundaries. The paper's decomposition — per-point compute vs.
+//! communication vs. synchronization delay — becomes a span tree: one
+//! 128-bit trace id names a causal unit (a request, a follower sync
+//! cycle, a training exchange), and every layer that touches it records
+//! named child spans with microsecond offsets relative to the trace
+//! root.
+//!
+//! Design constraints mirror the registry's: recording is allocation-
+//! light and lock-free (a [`TraceBuilder`] is owned by exactly one
+//! thread — the connection handler, the sync loop, a worker — so span
+//! appends are plain `Vec` pushes); the only shared state is the bounded
+//! ring of *completed* traces behind a mutex, touched once per sampled
+//! unit at commit, never per span.
+//!
+//! Sampling is deterministic 1-in-N (`--trace-sample N`; 0 = off, 1 =
+//! every unit) with two always-keep overrides: units over the
+//! `--slow-query-us` threshold, and units that arrived with a wire
+//! trace context (a remote caller already paid for the trace — dropping
+//! our half would orphan theirs).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+/// Parent id of a root span (span ids start at 1, so 0 is never taken).
+pub const NO_PARENT: u64 = 0;
+
+/// How many completed traces the ring retains (oldest evicted). Small on
+/// purpose: a trace is for looking at, not for aggregating — the
+/// histograms already do that.
+pub const TRACE_RING_CAP: usize = 64;
+
+/// One recorded span: a named interval inside a trace, in microseconds
+/// relative to the trace root's start.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRec {
+    /// Span id, unique within the trace (never 0).
+    pub id: u64,
+    /// Parent span id, or [`NO_PARENT`] for the root.
+    pub parent: u64,
+    /// Catalog name (`req.nearest`, `scan`, `state.ship`, …).
+    pub name: String,
+    /// Start offset from the trace origin, µs.
+    pub start_us: u64,
+    /// Duration, µs (0 while the span is still open).
+    pub dur_us: u64,
+}
+
+/// A committed trace: id, commit wall-clock, and the finished span tree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FinishedTrace {
+    /// High 64 bits of the 128-bit trace id.
+    pub hi: u64,
+    /// Low 64 bits of the 128-bit trace id.
+    pub lo: u64,
+    /// Unix-epoch milliseconds at commit.
+    pub ts_ms: u64,
+    /// Spans in recording order (the root is first).
+    pub spans: Vec<SpanRec>,
+}
+
+impl FinishedTrace {
+    /// The 32-hex-digit rendering of the 128-bit id (what `dalvq trace`
+    /// prints and the loadgen report names).
+    pub fn id_hex(&self) -> String {
+        format!("{:016x}{:016x}", self.hi, self.lo)
+    }
+
+    /// End of the latest-ending span: the trace's total extent, µs.
+    pub fn total_us(&self) -> u64 {
+        self.spans.iter().map(|s| s.start_us + s.dur_us).max().unwrap_or(0)
+    }
+}
+
+/// A single-owner span recorder for one causal unit. Not shared, not
+/// `Sync` by construction (every method takes `&mut self`): the owning
+/// thread appends spans with plain pushes and hands the whole builder to
+/// [`Tracer::commit`] when the unit completes.
+#[derive(Debug)]
+pub struct TraceBuilder {
+    hi: u64,
+    lo: u64,
+    /// The trace origin: span offsets are measured from here.
+    t0: Instant,
+    /// Deterministically sampled at start (the 1-in-N draw); commit also
+    /// keeps forced and over-threshold traces.
+    lucky: bool,
+    /// Arrived with a wire trace context — always kept.
+    forced: bool,
+    next_id: u64,
+    spans: Vec<SpanRec>,
+    /// Open spans: (span id, start instant) — a handful at most, so a
+    /// linear scan beats any map.
+    open: Vec<(u64, Instant)>,
+}
+
+impl TraceBuilder {
+    fn new(hi: u64, lo: u64, lucky: bool, forced: bool, t0: Instant) -> Self {
+        Self { hi, lo, t0, lucky, forced, next_id: 1, spans: Vec::new(), open: Vec::new() }
+    }
+
+    /// The 128-bit trace id as (hi, lo) — what goes on the wire.
+    pub fn trace_id(&self) -> (u64, u64) {
+        (self.hi, self.lo)
+    }
+
+    /// True when a wire context forced this trace (it will be kept at
+    /// commit regardless of the sampler).
+    pub fn forced(&self) -> bool {
+        self.forced
+    }
+
+    /// Microseconds elapsed since the trace origin.
+    pub fn now_us(&self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+
+    /// Open a span starting now; returns its id for `end` / child spans.
+    pub fn begin(&mut self, name: &str, parent: u64) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        let now = Instant::now();
+        self.spans.push(SpanRec {
+            id,
+            parent,
+            name: name.to_string(),
+            start_us: now.duration_since(self.t0).as_micros() as u64,
+            dur_us: 0,
+        });
+        self.open.push((id, now));
+        id
+    }
+
+    /// Close an open span (a double-end or unknown id is a no-op — a
+    /// tracing slip must never take down the request it observes).
+    pub fn end(&mut self, id: u64) {
+        let Some(pos) = self.open.iter().position(|(i, _)| *i == id) else {
+            return;
+        };
+        let (_, started) = self.open.swap_remove(pos);
+        let dur = started.elapsed().as_micros() as u64;
+        if let Some(s) = self.spans.iter_mut().find(|s| s.id == id) {
+            s.dur_us = dur;
+        }
+    }
+
+    /// Record a span with explicit offsets — for stages whose timing was
+    /// measured elsewhere (the stage timers, a coalesced drain) and is
+    /// being replayed into the tree.
+    pub fn add(
+        &mut self,
+        name: &str,
+        parent: u64,
+        start_us: u64,
+        dur_us: u64,
+    ) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.spans.push(SpanRec {
+            id,
+            parent,
+            name: name.to_string(),
+            start_us,
+            dur_us,
+        });
+        id
+    }
+
+    /// Graft a remote process's spans (same trace id, shipped back over
+    /// the wire) under `parent`: every remote span gets a fresh local id
+    /// (parent links preserved), and remote offsets — relative to the
+    /// *remote* origin — are re-anchored at `anchor_us` on the local
+    /// timeline. Remote spans whose parent is not in the shipment attach
+    /// to `parent` — that is how the remote root lands: the server ships
+    /// it detached (parent 0), because span ids are sequential in both
+    /// processes and a raw foreign parent id could collide with one of
+    /// the shipment's own ids.
+    pub fn graft(
+        &mut self,
+        parent: u64,
+        anchor_us: u64,
+        remote: &[SpanRec],
+    ) {
+        let mut id_map: Vec<(u64, u64)> = Vec::with_capacity(remote.len());
+        for r in remote {
+            id_map.push((r.id, self.next_id));
+            self.next_id += 1;
+        }
+        let local = |rid: u64| id_map.iter().find(|(r, _)| *r == rid);
+        for r in remote {
+            let id = local(r.id).expect("just mapped").1;
+            let mapped_parent = match local(r.parent) {
+                Some((_, l)) => *l,
+                None => parent,
+            };
+            self.spans.push(SpanRec {
+                id,
+                parent: mapped_parent,
+                name: r.name.clone(),
+                start_us: anchor_us.saturating_add(r.start_us),
+                dur_us: r.dur_us,
+            });
+        }
+    }
+
+    /// The spans recorded so far (open spans carry `dur_us = 0`).
+    pub fn spans(&self) -> &[SpanRec] {
+        &self.spans
+    }
+
+    /// End of the latest-ending recorded span, µs from the origin.
+    pub fn total_us(&self) -> u64 {
+        self.spans.iter().map(|s| s.start_us + s.dur_us).max().unwrap_or(0)
+    }
+}
+
+/// The shared tracing plane: sampling policy + the ring of completed
+/// traces. One per [`super::Telemetry`].
+#[derive(Debug)]
+pub struct Tracer {
+    /// 0 = tracing off, 1 = every unit, N = deterministic 1-in-N.
+    sample_n: AtomicU64,
+    /// Always-keep threshold, µs (0 = no threshold). Mirrors
+    /// `--slow-query-us`, so the slow-query journal line and the kept
+    /// trace name the same request.
+    slow_us: AtomicU64,
+    /// The 1-in-N rotor.
+    draw: AtomicU64,
+    /// Trace-id sequence (mixed with wall clock so ids are unique across
+    /// processes, not just within one).
+    seq: AtomicU64,
+    /// Traces kept at commit (the `trace.sampled` counter's source).
+    committed: AtomicU64,
+    ring: Mutex<VecDeque<FinishedTrace>>,
+    cap: usize,
+}
+
+impl Tracer {
+    /// A tracer retaining at most `cap` completed traces, initially off.
+    pub fn new(cap: usize) -> Self {
+        Self {
+            sample_n: AtomicU64::new(0),
+            slow_us: AtomicU64::new(0),
+            draw: AtomicU64::new(0),
+            seq: AtomicU64::new(0),
+            committed: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::new()),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Arm (or disarm) sampling: `sample_n` as in `--trace-sample`,
+    /// `slow_us` the always-keep threshold shared with the slow-query
+    /// log.
+    pub fn configure(&self, sample_n: u64, slow_us: u64) {
+        self.sample_n.store(sample_n, Ordering::Relaxed);
+        self.slow_us.store(slow_us, Ordering::Relaxed);
+    }
+
+    /// Whether any tracing is armed at all (the hot-path early-out).
+    pub fn armed(&self) -> bool {
+        self.sample_n.load(Ordering::Relaxed) > 0
+    }
+
+    /// Traces kept at commit since startup.
+    pub fn committed(&self) -> u64 {
+        self.committed.load(Ordering::Relaxed)
+    }
+
+    /// One deterministic 1-in-N draw.
+    fn draw_lucky(&self) -> bool {
+        match self.sample_n.load(Ordering::Relaxed) {
+            0 => false,
+            1 => true,
+            n => self.draw.fetch_add(1, Ordering::Relaxed) % n == 0,
+        }
+    }
+
+    /// A fresh 128-bit trace id: a sequence counter mixed with the wall
+    /// clock through splitmix64, so two processes started in the same
+    /// millisecond still diverge.
+    fn fresh_id(&self) -> (u64, u64) {
+        let nanos = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map_or(0, |d| d.as_nanos() as u64);
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        (splitmix64(nanos ^ seq.rotate_left(32)), splitmix64(seq ^ nanos.rotate_left(17)))
+    }
+
+    /// Start a locally-rooted trace with origin `t0` (pass the instant
+    /// the unit actually began — e.g. when its frame arrived — so the
+    /// decode span can be replayed at offset 0). `None` when tracing is
+    /// off: the caller then records nothing at all.
+    pub fn begin_at(&self, t0: Instant) -> Option<TraceBuilder> {
+        if !self.armed() {
+            return None;
+        }
+        let (hi, lo) = self.fresh_id();
+        Some(TraceBuilder::new(hi, lo, self.draw_lucky(), false, t0))
+    }
+
+    /// Start a locally-rooted trace with origin now.
+    pub fn begin(&self) -> Option<TraceBuilder> {
+        self.begin_at(Instant::now())
+    }
+
+    /// Start a trace continuing a wire context: the remote caller's
+    /// trace id is adopted and the commit is unconditional. Available
+    /// even when local sampling is off — the remote side already decided
+    /// this unit is worth a trace.
+    pub fn begin_forced_at(
+        &self,
+        hi: u64,
+        lo: u64,
+        t0: Instant,
+    ) -> TraceBuilder {
+        TraceBuilder::new(hi, lo, false, true, t0)
+    }
+
+    /// Commit a finished unit: kept when it was forced, won its 1-in-N
+    /// draw, or ran past the slow threshold; dropped (cheaply) otherwise.
+    /// Returns whether it was kept.
+    pub fn commit(&self, tb: TraceBuilder) -> bool {
+        let slow = self.slow_us.load(Ordering::Relaxed);
+        let keep =
+            tb.forced || tb.lucky || (slow > 0 && tb.total_us() >= slow);
+        if !keep {
+            return false;
+        }
+        let ts_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map_or(0, |d| d.as_millis() as u64);
+        let trace =
+            FinishedTrace { hi: tb.hi, lo: tb.lo, ts_ms, spans: tb.spans };
+        let mut ring = self.ring();
+        if ring.len() == self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(trace);
+        drop(ring);
+        self.committed.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// The newest `max` completed traces, newest first.
+    pub fn recent(&self, max: usize) -> Vec<FinishedTrace> {
+        self.ring().iter().rev().take(max).cloned().collect()
+    }
+
+    fn ring(&self) -> MutexGuard<'_, VecDeque<FinishedTrace>> {
+        self.ring.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// `Option<&mut TraceBuilder>` — the shape every traced layer threads
+/// through: `None` costs one branch, `Some` costs a `Vec` push per span.
+pub type TraceSink<'a> = Option<&'a mut TraceBuilder>;
+
+/// SplitMix64: the standard 64-bit finalizer (public-domain constants),
+/// enough mixing that sequential seeds yield unrelated-looking ids.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_tracer_starts_nothing() {
+        let t = Tracer::new(4);
+        assert!(!t.armed());
+        assert!(t.begin().is_none());
+    }
+
+    #[test]
+    fn always_sampling_keeps_every_commit() {
+        let t = Tracer::new(4);
+        t.configure(1, 0);
+        for _ in 0..3 {
+            let mut tb = t.begin().unwrap();
+            let root = tb.begin("req.nearest", NO_PARENT);
+            tb.end(root);
+            assert!(t.commit(tb));
+        }
+        assert_eq!(t.committed(), 3);
+        assert_eq!(t.recent(10).len(), 3);
+    }
+
+    #[test]
+    fn one_in_n_sampling_is_deterministic() {
+        let t = Tracer::new(64);
+        t.configure(4, 0);
+        let kept: Vec<bool> = (0..12)
+            .map(|_| {
+                let tb = t.begin().unwrap();
+                t.commit(tb)
+            })
+            .collect();
+        let hits = kept.iter().filter(|k| **k).count();
+        assert_eq!(hits, 3, "{kept:?}");
+        // the rotor is a strict 1-in-4: every 4th draw wins
+        assert!(kept[0] && kept[4] && kept[8], "{kept:?}");
+    }
+
+    #[test]
+    fn slow_units_are_kept_even_when_the_draw_loses() {
+        let t = Tracer::new(4);
+        t.configure(1_000_000, 50); // draw practically never wins
+        let mut tb = t.begin().unwrap();
+        tb.add("req.nearest", NO_PARENT, 0, 75); // over the 50 µs bar
+        assert!(t.commit(tb));
+        let mut tb = t.begin().unwrap();
+        tb.add("req.nearest", NO_PARENT, 0, 10); // under it
+        assert!(!t.commit(tb));
+    }
+
+    #[test]
+    fn forced_traces_adopt_the_wire_id_and_always_commit() {
+        let t = Tracer::new(4);
+        // local sampling entirely off — the wire context still traces
+        let mut tb = t.begin_forced_at(7, 9, Instant::now());
+        assert_eq!(tb.trace_id(), (7, 9));
+        let root = tb.begin("req.fetch_state", NO_PARENT);
+        tb.end(root);
+        assert!(t.commit(tb));
+        let got = &t.recent(1)[0];
+        assert_eq!((got.hi, got.lo), (7, 9));
+    }
+
+    #[test]
+    fn ring_is_bounded_and_newest_first() {
+        let t = Tracer::new(2);
+        t.configure(1, 0);
+        for i in 0..5u64 {
+            let mut tb = t.begin().unwrap();
+            tb.add("tick", NO_PARENT, i, 1);
+            t.commit(tb);
+        }
+        let recent = t.recent(10);
+        assert_eq!(recent.len(), 2);
+        // newest first: the last-committed trace leads
+        assert_eq!(recent[0].spans[0].start_us, 4);
+        assert_eq!(recent[1].spans[0].start_us, 3);
+        assert_eq!(t.committed(), 5, "eviction does not uncount commits");
+    }
+
+    #[test]
+    fn span_tree_records_offsets_parents_and_explicit_stages() {
+        let t = Tracer::new(4);
+        t.configure(1, 0);
+        let mut tb = t.begin().unwrap();
+        let root = tb.begin("req.nearest", NO_PARENT);
+        tb.add("decode", root, 0, 12);
+        let scan = tb.begin("scan", root);
+        tb.end(scan);
+        tb.end(root);
+        assert!(t.commit(tb));
+        let trace = &t.recent(1)[0];
+        assert_eq!(trace.spans.len(), 3);
+        let root_rec = &trace.spans[0];
+        assert_eq!(root_rec.name, "req.nearest");
+        assert_eq!(root_rec.parent, NO_PARENT);
+        for child in &trace.spans[1..] {
+            assert_eq!(child.parent, root_rec.id);
+        }
+        assert!(trace.total_us() >= 12);
+        assert_eq!(trace.id_hex().len(), 32);
+    }
+
+    #[test]
+    fn ending_an_unknown_span_is_a_no_op() {
+        let t = Tracer::new(4);
+        t.configure(1, 0);
+        let mut tb = t.begin().unwrap();
+        tb.end(99); // nothing open — must not panic
+        let s = tb.begin("x", NO_PARENT);
+        tb.end(s);
+        tb.end(s); // double end — still fine
+        assert!(t.commit(tb));
+    }
+
+    #[test]
+    fn graft_remaps_ids_reanchors_offsets_and_preserves_structure() {
+        let t = Tracer::new(4);
+        t.configure(1, 0);
+        let mut tb = t.begin().unwrap();
+        let root = tb.begin("sync.cycle", NO_PARENT);
+        let fetch = tb.begin("sync.fetch", root);
+        // a remote tree: root (id 1) with two children, offsets relative
+        // to the remote origin
+        let remote = vec![
+            SpanRec {
+                id: 1,
+                parent: 0,
+                name: "req.fetch_state".into(),
+                start_us: 0,
+                dur_us: 40,
+            },
+            SpanRec {
+                id: 2,
+                parent: 1,
+                name: "state.cut".into(),
+                start_us: 5,
+                dur_us: 20,
+            },
+            SpanRec {
+                id: 3,
+                parent: 1,
+                name: "state.ship".into(),
+                start_us: 25,
+                dur_us: 10,
+            },
+        ];
+        tb.graft(fetch, 100, &remote);
+        tb.end(fetch);
+        tb.end(root);
+        t.commit(tb);
+        let trace = &t.recent(1)[0];
+        let by_name = |n: &str| {
+            trace.spans.iter().find(|s| s.name == n).unwrap_or_else(|| {
+                panic!("no span {n} in {:?}", trace.spans)
+            })
+        };
+        let remote_root = by_name("req.fetch_state");
+        assert_eq!(remote_root.parent, fetch, "remote root hangs off fetch");
+        assert_eq!(remote_root.start_us, 100, "re-anchored at the rpc start");
+        let cut = by_name("state.cut");
+        assert_eq!(cut.parent, remote_root.id, "remote structure preserved");
+        assert_eq!(cut.start_us, 105);
+        let ship = by_name("state.ship");
+        assert_eq!(ship.parent, remote_root.id);
+        assert_eq!(ship.start_us, 125);
+        // grafted ids never collide with local ones
+        let mut ids: Vec<u64> = trace.spans.iter().map(|s| s.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), trace.spans.len());
+    }
+
+    #[test]
+    fn graft_attaches_unknown_parent_spans_under_the_graft_point() {
+        // A remote span that kept a foreign parent id (one that is not
+        // in the shipment) still lands under the graft point — never
+        // dropped, never left dangling.
+        let t = Tracer::new(4);
+        t.configure(1, 0);
+        let mut tb = t.begin().unwrap();
+        let fetch = tb.begin("sync.fetch", NO_PARENT);
+        let remote = vec![SpanRec {
+            id: 1,
+            parent: 777, // lives in some other process's ring
+            name: "req.fetch_state".into(),
+            start_us: 0,
+            dur_us: 5,
+        }];
+        tb.graft(fetch, 10, &remote);
+        tb.end(fetch);
+        let grafted = tb
+            .spans()
+            .iter()
+            .find(|s| s.name == "req.fetch_state")
+            .unwrap()
+            .clone();
+        assert_eq!(grafted.parent, fetch);
+        assert_eq!(grafted.start_us, 10);
+        t.commit(tb);
+    }
+}

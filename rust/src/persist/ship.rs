@@ -34,6 +34,16 @@
 //! (the checkpointer writes shards before the manifest); that skew is
 //! harmless — a bundle's authority is its shard files, and the follower
 //! resumes from their versions exactly as a local warm restart would.
+//!
+//! ## Tracing
+//!
+//! In the serving stack, the whole of [`read_bundle`] — seqlock retries
+//! included — runs inside the leader's `state.cut` trace span (see
+//! `serve`'s `fetch_state`), and bundle-to-wire assembly inside
+//! `state.ship`. When a follower's `sync.cycle` trace shows a fat
+//! `state.cut`, the leader's cut raced its checkpointer through
+//! several `READ_ATTEMPTS` backoffs; a fat `state.ship` is payload
+//! size ([`StateBundle::total_bytes`]).
 
 use std::path::Path;
 use std::time::Duration;

@@ -53,6 +53,13 @@ pub(crate) struct BatchAnswer {
     pub dists: Vec<f32>,
     pub route_us: u64,
     pub scan_us: u64,
+    /// This member's queueing delay: enqueue to the fused scan starting.
+    /// Per-request (an opener waits the whole window; a last-moment
+    /// arrival waits almost nothing) — the `batch.wait` trace span.
+    pub wait_us: u64,
+    /// This member's fan-back delay: fused scan done to this slice being
+    /// sent — the `batch.scatter` trace span.
+    pub scatter_us: u64,
 }
 
 /// The coalescer. One per server, created only when
@@ -156,6 +163,7 @@ fn drain_loop(
         for p in &batch {
             all.extend_from_slice(&p.points);
         }
+        let t_scan = Instant::now();
         let q = service.query_nearest_timed(&all, service.probe_n());
 
         let tel = service.tel();
@@ -175,6 +183,8 @@ fn drain_loop(
                 dists: q.dists[off..off + n].to_vec(),
                 route_us: q.route_us,
                 scan_us: q.scan_us,
+                wait_us: t_scan.duration_since(p.enqueued).as_micros() as u64,
+                scatter_us: drained.elapsed().as_micros() as u64,
             };
             off += n;
             // A peer that hung up mid-wait just drops its slice.

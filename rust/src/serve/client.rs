@@ -9,7 +9,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::protocol::{
     read_frame, write_frame, MetricsReply, Request, Response, StateShipment,
-    StatsReply,
+    StatsReply, WireSpan, WireTrace,
 };
 
 /// Default per-attempt connect timeout.
@@ -21,6 +21,13 @@ const CONNECT_RETRIES: usize = 2;
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    /// Armed by [`Client::trace_next`]: `(trace_id_hi, trace_id_lo,
+    /// parent_span_id)` to stamp on the next request as a wire trace
+    /// context. One-shot — consumed by the next `call`.
+    trace_next: Option<(u64, u64, u64)>,
+    /// Server-side spans returned by the last traced call, kept until
+    /// [`Client::take_server_spans`] collects them.
+    server_spans: Vec<WireSpan>,
 }
 
 impl Client {
@@ -64,6 +71,8 @@ impl Client {
                         return Ok(Client {
                             reader: BufReader::new(stream.try_clone()?),
                             writer: BufWriter::new(stream),
+                            trace_next: None,
+                            server_spans: Vec::new(),
                         });
                     }
                     Err(e) => last_err = Some(e),
@@ -79,11 +88,44 @@ impl Client {
         })
     }
 
+    /// Stamp the next request with a wire trace context: the server
+    /// joins trace `(hi, lo)`, parents its handler span under
+    /// `parent_span`, and returns its span tree alongside the reply
+    /// (collect it with [`Client::take_server_spans`]). One-shot; the
+    /// call after the next one goes out bare again. A pre-tracing server
+    /// that answers the envelope with `Error` fails that call cleanly.
+    pub fn trace_next(&mut self, hi: u64, lo: u64, parent_span: u64) {
+        self.trace_next = Some((hi, lo, parent_span));
+    }
+
+    /// The server-side spans of the last traced call (empty when the
+    /// last call was untraced). Draining — a second take returns empty.
+    pub fn take_server_spans(&mut self) -> Vec<WireSpan> {
+        std::mem::take(&mut self.server_spans)
+    }
+
     fn call(&mut self, req: &Request) -> Result<Response> {
-        write_frame(&mut self.writer, &req.encode())?;
+        let frame = match self.trace_next.take() {
+            Some((hi, lo, parent)) => {
+                self.server_spans.clear();
+                Request::Traced {
+                    hi,
+                    lo,
+                    parent,
+                    inner: Box::new(req.clone()),
+                }
+                .encode()
+            }
+            None => req.encode(),
+        };
+        write_frame(&mut self.writer, &frame)?;
         let payload = read_frame(&mut self.reader)?
             .ok_or_else(|| anyhow!("server closed the connection"))?;
-        let resp = Response::decode(&payload)?;
+        let mut resp = Response::decode(&payload)?;
+        if let Response::Traced { spans, inner, .. } = resp {
+            self.server_spans = spans;
+            resp = *inner;
+        }
         if let Response::Error { message } = &resp {
             bail!("server error: {message}");
         }
@@ -202,6 +244,17 @@ impl Client {
     ) -> Result<StateShipment> {
         match self.call(&Request::FetchState { have_generation })? {
             Response::State(shipment) => Ok(shipment),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// The newest completed traces from the server's sampled-trace ring
+    /// (newest first), each a span tree with microsecond offsets.
+    /// Answered by leaders and followers alike; empty when tracing was
+    /// never armed (`--trace-sample 0` and no slow-query keeps).
+    pub fn trace(&mut self, max_traces: u32) -> Result<Vec<WireTrace>> {
+        match self.call(&Request::Trace { max_traces })? {
+            Response::Traces(traces) => Ok(traces),
             other => bail!("unexpected response {other:?}"),
         }
     }

@@ -13,6 +13,8 @@ use crate::metrics::{FigureReport, Series};
 use crate::util::Rng;
 
 use super::client::Client;
+use super::protocol::WireSpan;
+use super::traceview;
 
 /// Workload shape.
 #[derive(Debug, Clone, PartialEq)]
@@ -39,9 +41,21 @@ pub struct LoadSpec {
     /// --addr <follower>`), where an ingest would only collect
     /// `NotLeader` errors.
     pub read_only: bool,
+    /// Stamp a wire trace context on every [`TRACE_EVERY`]-th request of
+    /// each connection (`dalvq loadtest --trace`): the server joins the
+    /// trace and ships its span breakdown back in the response envelope,
+    /// and the report keeps the slowest traced request as
+    /// [`LoadReport::trace_sample`]. Needs a tracing-aware server; off by
+    /// default (zero wire overhead).
+    pub trace: bool,
     /// Seed of the deterministic per-connection point/op streams.
     pub seed: u64,
 }
+
+/// How often a tracing load connection stamps a wire trace context
+/// (every Nth request): frequent enough that the slow tail is sampled,
+/// rare enough that the envelope overhead never dominates the workload.
+pub const TRACE_EVERY: usize = 16;
 
 impl Default for LoadSpec {
     fn default() -> Self {
@@ -52,6 +66,7 @@ impl Default for LoadSpec {
             ingest_frac: 0.25,
             skew: 0.0,
             read_only: false,
+            trace: false,
             seed: 1,
         }
     }
@@ -189,6 +204,34 @@ pub struct LoadReport {
     pub max_us: f64,
     /// Requests-per-second curve over the run (100 ms buckets).
     pub series: Series,
+    /// The slowest traced request of the run (`--trace` only): its trace
+    /// id and the server-side span breakdown, rendered next to the
+    /// client-side percentiles so "where did my p99 go" is answered by
+    /// the same report that measured it.
+    pub trace_sample: Option<TraceSample>,
+}
+
+/// One traced request a load connection kept: the trace id it stamped,
+/// the client-observed latency, and the span tree the server shipped
+/// back in the response envelope.
+#[derive(Debug, Clone)]
+pub struct TraceSample {
+    /// Trace id, high half.
+    pub hi: u64,
+    /// Trace id, low half.
+    pub lo: u64,
+    /// Client-observed request latency, microseconds.
+    pub client_us: f64,
+    /// The server's spans for this request (offsets relative to the
+    /// server's frame arrival).
+    pub spans: Vec<WireSpan>,
+}
+
+impl TraceSample {
+    /// The 32-hex-digit trace id, as `dalvq trace` prints it.
+    pub fn id_hex(&self) -> String {
+        format!("{:016x}{:016x}", self.hi, self.lo)
+    }
 }
 
 /// Drive `spec` against a server at `addr`, generating query/ingest points
@@ -217,6 +260,7 @@ pub fn run_load(addr: &str, spec: &LoadSpec, mixture: &MixtureSpec) -> Result<Lo
     let mut stamps: Vec<f64> = Vec::new();
     let mut ops = OpCounts::default();
     let mut points_shed = 0u64;
+    let mut trace_sample: Option<TraceSample> = None;
     for j in joins {
         let conn = j.join().map_err(|_| anyhow!("load connection panicked"))??;
         latencies_ns.extend(conn.latencies_ns);
@@ -226,6 +270,14 @@ pub fn run_load(addr: &str, spec: &LoadSpec, mixture: &MixtureSpec) -> Result<Lo
         ops.distortion += conn.ops.distortion;
         ops.ingest += conn.ops.ingest;
         points_shed += conn.points_shed;
+        if let Some(s) = conn.trace_sample {
+            let slower = trace_sample
+                .as_ref()
+                .map_or(true, |best| s.client_us > best.client_us);
+            if slower {
+                trace_sample = Some(s);
+            }
+        }
     }
     let wall_secs = run_start.elapsed().as_secs_f64().max(1e-9);
     let requests = latencies_ns.len() as u64;
@@ -251,6 +303,7 @@ pub fn run_load(addr: &str, spec: &LoadSpec, mixture: &MixtureSpec) -> Result<Lo
         p99_us: percentile_us(&latencies_ns, 0.99),
         max_us: percentile_us(&latencies_ns, 1.0),
         series,
+        trace_sample,
     })
 }
 
@@ -292,6 +345,8 @@ struct ConnOutcome {
     stamps: Vec<f64>,
     ops: OpCounts,
     points_shed: u64,
+    /// This connection's slowest traced request (`spec.trace` only).
+    trace_sample: Option<TraceSample>,
 }
 
 fn drive_connection(
@@ -315,14 +370,25 @@ fn drive_connection(
         stamps: Vec::with_capacity(spec.requests_per_conn),
         ops: OpCounts::default(),
         points_shed: 0,
+        trace_sample: None,
     };
     gate.wait();
     let mut client = client?;
     let t0 = Instant::now();
     let mut read_rotor = conn_id; // stagger read ops across connections
-    for _ in 0..spec.requests_per_conn {
+    for i in 0..spec.requests_per_conn {
         let start = rng.usize(pool_points - spec.batch_points + 1);
         let batch = &pool[start * dim..(start + spec.batch_points) * dim];
+        // Every TRACE_EVERY-th request carries a wire trace context (a
+        // fresh client-minted id; the server forcibly samples it and
+        // ships its spans back). `traced` remembers the id so the
+        // response's spans can be attributed after the latency stamp.
+        let mut traced: Option<(u64, u64)> = None;
+        if spec.trace && i % TRACE_EVERY == 0 {
+            let (hi, lo) = (rng.next_u64() | 1, rng.next_u64() | 1);
+            client.trace_next(hi, lo, 0);
+            traced = Some((hi, lo));
+        }
         let req_start = Instant::now();
         match choose_op(spec, &mut rng, &mut read_rotor) {
             Op::Ingest => {
@@ -343,8 +409,24 @@ fn drive_connection(
                 out.ops.distortion += 1;
             }
         }
-        out.latencies_ns.push(req_start.elapsed().as_nanos() as u64);
+        let lat_ns = req_start.elapsed().as_nanos() as u64;
+        out.latencies_ns.push(lat_ns);
         out.stamps.push(t0.elapsed().as_secs_f64());
+        if let Some((hi, lo)) = traced {
+            let client_us = lat_ns as f64 / 1e3;
+            let slower = out
+                .trace_sample
+                .as_ref()
+                .map_or(true, |best| client_us > best.client_us);
+            if slower {
+                out.trace_sample = Some(TraceSample {
+                    hi,
+                    lo,
+                    client_us,
+                    spans: client.take_server_spans(),
+                });
+            }
+        }
     }
     Ok(out)
 }
@@ -380,6 +462,22 @@ impl LoadReport {
              max {:.0} us\n",
             self.p50_us, self.p95_us, self.p99_us, self.max_us,
         ));
+        if let Some(t) = &self.trace_sample {
+            s.push_str(&format!(
+                "  slowest traced request: {} ({:.0} us client-side)\n",
+                t.id_hex(),
+                t.client_us,
+            ));
+            if t.spans.is_empty() {
+                s.push_str(
+                    "    (server shipped no spans — is it tracing-aware?)\n",
+                );
+            } else {
+                for line in traceview::render_tree(&t.spans).lines() {
+                    s.push_str(&format!("    {line}\n"));
+                }
+            }
+        }
         s
     }
 
@@ -642,11 +740,62 @@ mod tests {
             p99_us: 300.0,
             max_us: 400.0,
             series: Series::new("rps"),
+            trace_sample: None,
         };
         let text = report.format();
         assert!(text.contains("p99"));
+        assert!(!text.contains("slowest traced"));
         let fig = report.to_figure_report();
         assert_eq!(fig.id, "loadtest");
         assert_eq!(fig.series.len(), 1);
+    }
+
+    #[test]
+    fn report_renders_the_trace_sample_as_a_span_tree() {
+        let mut report = LoadReport {
+            spec: LoadSpec::default(),
+            requests: 1,
+            ops: OpCounts::default(),
+            points_shed: 0,
+            wall_secs: 0.1,
+            throughput_rps: 10.0,
+            points_per_sec: 640.0,
+            p50_us: 100.0,
+            p95_us: 200.0,
+            p99_us: 300.0,
+            max_us: 400.0,
+            series: Series::new("rps"),
+            trace_sample: Some(TraceSample {
+                hi: 0xABCD,
+                lo: 0x1234,
+                client_us: 412.0,
+                spans: vec![
+                    WireSpan {
+                        id: 1,
+                        parent: 0,
+                        start_us: 0,
+                        dur_us: 400,
+                        name: "req.nearest".into(),
+                    },
+                    WireSpan {
+                        id: 2,
+                        parent: 1,
+                        start_us: 10,
+                        dur_us: 350,
+                        name: "scan".into(),
+                    },
+                ],
+            }),
+        };
+        let text = report.format();
+        assert!(text.contains("slowest traced request"));
+        assert!(text.contains(&format!("{:016x}{:016x}", 0xABCD, 0x1234)));
+        assert!(text.contains("req.nearest"));
+        assert!(text.contains("scan"));
+
+        // A pre-tracing server ships no spans; the report says so
+        // instead of printing an empty tree.
+        report.trace_sample.as_mut().unwrap().spans.clear();
+        assert!(report.format().contains("no spans"));
     }
 }

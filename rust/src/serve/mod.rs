@@ -61,6 +61,17 @@
 //!   queries), exposed three ways: the `Metrics` wire op, the live
 //!   `dalvq top` screen ([`run_top`]), and `--metrics-file` periodic
 //!   JSON snapshots. `docs/OBSERVABILITY.md` is the metric catalog.
+//! * **Distributed tracing** — `--trace-sample N` arms a deterministic
+//!   1-in-N request sampler ([`crate::obs::Tracer`]); a sampled request
+//!   records a span tree through every stage it crosses (handler stages,
+//!   the batch coalescer, training exchange intervals, reducer folds,
+//!   and whole replication sync cycles — the follower stamps its trace
+//!   id on `FetchState`, so the leader's cut/ship spans land inside the
+//!   follower's trace: ONE trace across two processes). Slow requests
+//!   are always kept. Exposed via the `Trace` wire op, `dalvq trace`
+//!   ([`run_trace`]), `dalvq loadtest --trace`, and `--metrics-file`
+//!   snapshots. `docs/OBSERVABILITY.md` §Distributed tracing is the
+//!   span catalog.
 //! * **Replication** — a service started with `follow: Some(leader)` is
 //!   a **read-only follower**: it warm-starts from the leader's shipped
 //!   checkpoint bundle (the `FetchState` wire op +
@@ -89,11 +100,13 @@ mod server;
 mod service;
 mod snapshot;
 mod top;
+mod traceview;
 mod worker;
 
 pub use client::Client;
 pub use loadgen::{
     component_shares, max_over_mean, run_load, LoadReport, LoadSpec, OpCounts,
+    TraceSample, TRACE_EVERY,
 };
 pub use router::Router;
 pub use server::Server;
@@ -103,4 +116,5 @@ pub use service::{
 };
 pub use snapshot::{Snapshot, SnapshotStore};
 pub use top::{run_top, TopSpec};
+pub use traceview::{run_trace, TraceSpec};
 pub use worker::{run_serve_worker, ServeWorkerOutcome, ServeWorkerParams};

@@ -69,6 +69,31 @@ pub enum Request {
         /// Cap on journal events in the reply (0 = metrics only).
         max_events: u32,
     },
+    /// Fetch the newest sampled traces from the server's completed-trace
+    /// ring (span trees with microsecond offsets). Read-only — answered
+    /// by leaders **and** followers, like `Metrics`.
+    Trace {
+        /// Cap on traces in the reply.
+        max_traces: u32,
+    },
+    /// The trace-context envelope: any *other* request wrapped together
+    /// with the caller's 128-bit trace id and parent span id. A server
+    /// handles the inner request exactly as if it arrived bare, but
+    /// records its spans under the caller's trace and ships them back in
+    /// a [`Response::Traced`] envelope. Clients that never trace emit
+    /// byte-identical frames to the pre-tracing protocol — the envelope
+    /// only exists on the wire when a trace is in flight. Nesting an
+    /// envelope inside an envelope is a decode error.
+    Traced {
+        /// High 64 bits of the caller's trace id.
+        hi: u64,
+        /// Low 64 bits of the caller's trace id.
+        lo: u64,
+        /// The caller-side span the server's root span hangs under.
+        parent: u64,
+        /// The wrapped request (never itself `Traced`).
+        inner: Box<Request>,
+    },
 }
 
 /// `have_generation` sentinel that never matches a real checkpoint
@@ -137,6 +162,24 @@ pub enum Response {
     State(StateShipment),
     /// `Metrics` reply: the telemetry digest.
     Metrics(MetricsReply),
+    /// `Trace` reply: the newest sampled traces, newest first.
+    Traces(Vec<WireTrace>),
+    /// The reply-side trace envelope: the server's recorded spans for
+    /// this request, wrapped around the ordinary reply. Only ever sent
+    /// in answer to a [`Request::Traced`] envelope; nesting is a decode
+    /// error.
+    Traced {
+        /// High 64 bits of the trace id (echoed from the request).
+        hi: u64,
+        /// Low 64 bits of the trace id (echoed from the request).
+        lo: u64,
+        /// The server-side spans, offsets relative to the server's
+        /// request arrival (the caller re-anchors them — see
+        /// `TraceBuilder::graft`).
+        spans: Vec<WireSpan>,
+        /// The wrapped reply (never itself `Traced`).
+        inner: Box<Response>,
+    },
     /// The addressed server is a read-only follower: ingest, checkpoint,
     /// rebalance and state-fetch belong on its leader. Distinct from
     /// `Error` so clients can redirect instead of just failing.
@@ -248,6 +291,38 @@ pub struct StatsReply {
     pub op_ingest: u64,
 }
 
+/// One span inside a [`WireTrace`] or a [`Response::Traced`] envelope.
+/// Offsets are microseconds relative to the owning trace's origin (for
+/// envelope spans: the server's request arrival).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct WireSpan {
+    /// Span id, unique within its trace (never 0).
+    pub id: u64,
+    /// Parent span id; 0 marks the root (or, in an envelope, a span of
+    /// the *caller's*, so the receiver re-parents it).
+    pub parent: u64,
+    /// Start offset from the trace origin, µs.
+    pub start_us: u64,
+    /// Duration, µs.
+    pub dur_us: u64,
+    /// Catalog name (`req.nearest`, `scan`, `state.ship`, …; see
+    /// `docs/OBSERVABILITY.md`).
+    pub name: String,
+}
+
+/// One completed trace inside a [`Response::Traces`] reply.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct WireTrace {
+    /// High 64 bits of the 128-bit trace id.
+    pub hi: u64,
+    /// Low 64 bits of the 128-bit trace id.
+    pub lo: u64,
+    /// Unix-epoch milliseconds when the trace committed.
+    pub ts_ms: u64,
+    /// The span tree in recording order (the root first).
+    pub spans: Vec<WireSpan>,
+}
+
 /// The `Metrics` payload: a point-in-time digest of the server's
 /// telemetry plane — name-sorted counters, gauges and histogram digests
 /// plus the newest journal events. The metric *names* are the catalog in
@@ -350,6 +425,8 @@ const OP_CHECKPOINT: u8 = 0x06;
 const OP_REBALANCE: u8 = 0x07;
 const OP_FETCH_STATE: u8 = 0x08;
 const OP_METRICS: u8 = 0x09;
+const OP_TRACE: u8 = 0x0A;
+const OP_TRACED_REQ: u8 = 0x0B;
 
 const OP_CODES: u8 = 0x81;
 const OP_NEIGHBORS: u8 = 0x82;
@@ -360,6 +437,8 @@ const OP_CHECKPOINT_ACK: u8 = 0x86;
 const OP_REBALANCE_ACK: u8 = 0x87;
 const OP_STATE: u8 = 0x88;
 const OP_METRICS_R: u8 = 0x89;
+const OP_TRACE_R: u8 = 0x8A;
+const OP_TRACED_RESP: u8 = 0x8B;
 const OP_NOT_LEADER: u8 = 0xFE;
 const OP_ERROR: u8 = 0xFF;
 
@@ -393,6 +472,36 @@ fn put_str(out: &mut Vec<u8>, s: &str) {
 fn put_bytes(out: &mut Vec<u8>, bytes: &[u8]) {
     out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
     out.extend_from_slice(bytes);
+}
+
+fn put_spans(out: &mut Vec<u8>, spans: &[WireSpan]) {
+    out.extend_from_slice(&(spans.len() as u32).to_le_bytes());
+    for s in spans {
+        out.extend_from_slice(&s.id.to_le_bytes());
+        out.extend_from_slice(&s.parent.to_le_bytes());
+        out.extend_from_slice(&s.start_us.to_le_bytes());
+        out.extend_from_slice(&s.dur_us.to_le_bytes());
+        put_str(out, &s.name);
+    }
+}
+
+/// Assemble a [`Response::Traced`] envelope around an already-encoded
+/// inner reply. The server uses this so the inner encode can be timed
+/// (and recorded as the `encode` span) *before* the envelope — whose
+/// span list must already be final — is written.
+pub fn encode_traced_response(
+    hi: u64,
+    lo: u64,
+    spans: &[WireSpan],
+    inner: &[u8],
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(inner.len() + 64);
+    out.push(OP_TRACED_RESP);
+    out.extend_from_slice(&hi.to_le_bytes());
+    out.extend_from_slice(&lo.to_le_bytes());
+    put_spans(&mut out, spans);
+    put_bytes(&mut out, inner);
+    out
 }
 
 /// A bounds-checked little-endian reader over a payload.
@@ -474,6 +583,23 @@ impl<'a> Cursor<'a> {
         Ok(self.bytes(n)?.to_vec())
     }
 
+    fn spans(&mut self) -> Result<Vec<WireSpan>> {
+        let n = self.u32()? as usize;
+        // Each span consumes at least 36 bytes of payload, so a lying
+        // count fails in `bytes` before any oversized allocation.
+        let mut spans = Vec::new();
+        for _ in 0..n {
+            spans.push(WireSpan {
+                id: self.u64()?,
+                parent: self.u64()?,
+                start_us: self.u64()?,
+                dur_us: self.u64()?,
+                name: self.str()?,
+            });
+        }
+        Ok(spans)
+    }
+
     fn finish(self) -> Result<()> {
         if self.pos == self.buf.len() {
             Ok(())
@@ -533,6 +659,21 @@ impl Request {
                 out.push(OP_METRICS);
                 out.extend_from_slice(&max_events.to_le_bytes());
             }
+            Request::Trace { max_traces } => {
+                out.push(OP_TRACE);
+                out.extend_from_slice(&max_traces.to_le_bytes());
+            }
+            Request::Traced { hi, lo, parent, inner } => {
+                debug_assert!(
+                    !matches!(**inner, Request::Traced { .. }),
+                    "trace envelopes do not nest"
+                );
+                out.push(OP_TRACED_REQ);
+                out.extend_from_slice(&hi.to_le_bytes());
+                out.extend_from_slice(&lo.to_le_bytes());
+                out.extend_from_slice(&parent.to_le_bytes());
+                put_bytes(&mut out, &inner.encode());
+            }
         }
         out
     }
@@ -558,6 +699,19 @@ impl Request {
                 Request::FetchState { have_generation: c.u64()? }
             }
             OP_METRICS => Request::Metrics { max_events: c.u32()? },
+            OP_TRACE => Request::Trace { max_traces: c.u32()? },
+            OP_TRACED_REQ => {
+                let hi = c.u64()?;
+                let lo = c.u64()?;
+                let parent = c.u64()?;
+                let inner_bytes = c.blob()?;
+                let inner = Request::decode(&inner_bytes)
+                    .map_err(|e| anyhow!("inside a trace envelope: {e}"))?;
+                if matches!(inner, Request::Traced { .. }) {
+                    bail!("nested trace envelopes are not allowed");
+                }
+                Request::Traced { hi, lo, parent, inner: Box::new(inner) }
+            }
             op => bail!("unknown request opcode 0x{op:02x}"),
         };
         c.finish()?;
@@ -674,6 +828,25 @@ impl Response {
                     put_str(&mut out, &e.kind);
                     put_str(&mut out, &e.message);
                 }
+            }
+            Response::Traces(traces) => {
+                out.push(OP_TRACE_R);
+                out.extend_from_slice(&(traces.len() as u32).to_le_bytes());
+                for t in traces {
+                    out.extend_from_slice(&t.hi.to_le_bytes());
+                    out.extend_from_slice(&t.lo.to_le_bytes());
+                    out.extend_from_slice(&t.ts_ms.to_le_bytes());
+                    put_spans(&mut out, &t.spans);
+                }
+            }
+            Response::Traced { hi, lo, spans, inner } => {
+                debug_assert!(
+                    !matches!(**inner, Response::Traced { .. }),
+                    "trace envelopes do not nest"
+                );
+                let bytes =
+                    encode_traced_response(*hi, *lo, spans, &inner.encode());
+                out.extend_from_slice(&bytes);
             }
             Response::NotLeader { leader } => {
                 out.push(OP_NOT_LEADER);
@@ -805,6 +978,33 @@ impl Response {
                     hists,
                     events,
                 })
+            }
+            OP_TRACE_R => {
+                let n = c.u32()? as usize;
+                // Each trace consumes at least 28 bytes, so a lying count
+                // fails in `bytes` before any oversized allocation.
+                let mut traces = Vec::new();
+                for _ in 0..n {
+                    traces.push(WireTrace {
+                        hi: c.u64()?,
+                        lo: c.u64()?,
+                        ts_ms: c.u64()?,
+                        spans: c.spans()?,
+                    });
+                }
+                Response::Traces(traces)
+            }
+            OP_TRACED_RESP => {
+                let hi = c.u64()?;
+                let lo = c.u64()?;
+                let spans = c.spans()?;
+                let inner_bytes = c.blob()?;
+                let inner = Response::decode(&inner_bytes)
+                    .map_err(|e| anyhow!("inside a trace envelope: {e}"))?;
+                if matches!(inner, Response::Traced { .. }) {
+                    bail!("nested trace envelopes are not allowed");
+                }
+                Response::Traced { hi, lo, spans, inner: Box::new(inner) }
             }
             OP_NOT_LEADER => Response::NotLeader { leader: c.str()? },
             OP_ERROR => Response::Error { message: c.str()? },
@@ -961,6 +1161,126 @@ mod tests {
             leader: "127.0.0.1:7171".into(),
         });
         round_trip_resp(Response::Error { message: "bad dim".into() });
+    }
+
+    #[test]
+    fn trace_op_and_envelopes_round_trip() {
+        round_trip_req(Request::Trace { max_traces: 0 });
+        round_trip_req(Request::Trace { max_traces: u32::MAX });
+        round_trip_req(Request::Traced {
+            hi: 0xDEAD_BEEF,
+            lo: 7,
+            parent: 3,
+            inner: Box::new(Request::Nearest { points: vec![1.0, -2.0] }),
+        });
+        round_trip_req(Request::Traced {
+            hi: 0,
+            lo: 0,
+            parent: 0,
+            inner: Box::new(Request::FetchState { have_generation: 9 }),
+        });
+        round_trip_resp(Response::Traces(vec![]));
+        round_trip_resp(Response::Traces(vec![
+            WireTrace {
+                hi: 1,
+                lo: 2,
+                ts_ms: 1_700_000_000_000,
+                spans: vec![
+                    WireSpan {
+                        id: 1,
+                        parent: 0,
+                        start_us: 0,
+                        dur_us: 120,
+                        name: "req.nearest".into(),
+                    },
+                    WireSpan {
+                        id: 2,
+                        parent: 1,
+                        start_us: 10,
+                        dur_us: 80,
+                        name: "scan".into(),
+                    },
+                ],
+            },
+            WireTrace::default(),
+        ]));
+        round_trip_resp(Response::Traced {
+            hi: 5,
+            lo: 6,
+            spans: vec![WireSpan {
+                id: 1,
+                parent: 0,
+                start_us: 0,
+                dur_us: 44,
+                name: "req.fetch_state".into(),
+            }],
+            inner: Box::new(Response::State(StateShipment::default())),
+        });
+    }
+
+    #[test]
+    fn nested_trace_envelopes_are_rejected_at_decode() {
+        // Hand-assemble a Traced wrapping a Traced (encode() would
+        // debug_assert, so build the bytes directly).
+        let inner = Request::Traced {
+            hi: 1,
+            lo: 2,
+            parent: 0,
+            inner: Box::new(Request::Stats),
+        }
+        .encode();
+        let mut wire = vec![0x0Bu8];
+        wire.extend_from_slice(&9u64.to_le_bytes());
+        wire.extend_from_slice(&9u64.to_le_bytes());
+        wire.extend_from_slice(&0u64.to_le_bytes());
+        put_bytes(&mut wire, &inner);
+        let err = Request::decode(&wire).unwrap_err().to_string();
+        assert!(err.contains("nested"), "{err}");
+
+        let inner = Response::Traced {
+            hi: 1,
+            lo: 2,
+            spans: vec![],
+            inner: Box::new(Response::Error { message: "x".into() }),
+        }
+        .encode();
+        let mut wire = vec![0x8Bu8];
+        wire.extend_from_slice(&9u64.to_le_bytes());
+        wire.extend_from_slice(&9u64.to_le_bytes());
+        wire.extend_from_slice(&0u32.to_le_bytes()); // no spans
+        put_bytes(&mut wire, &inner);
+        let err = Response::decode(&wire).unwrap_err().to_string();
+        assert!(err.contains("nested"), "{err}");
+    }
+
+    #[test]
+    fn traced_envelope_wraps_the_exact_bare_encoding() {
+        // The envelope carries the *unchanged* inner frame: stripping the
+        // context (hi, lo, parent, length prefix) yields bytes an old
+        // server would decode identically — the compat story in one
+        // assertion.
+        let bare = Request::Nearest { points: vec![3.0, 4.0] };
+        let enveloped = Request::Traced {
+            hi: 11,
+            lo: 22,
+            parent: 1,
+            inner: Box::new(bare.clone()),
+        }
+        .encode();
+        // opcode(1) + hi(8) + lo(8) + parent(8) + len(4) = 29-byte prefix
+        assert_eq!(&enveloped[29..], &bare.encode()[..]);
+        // and the server-side assembly helper agrees with the enum encoder
+        let reply = Response::Codes { version: 1, codes: vec![7] };
+        let via_enum = Response::Traced {
+            hi: 11,
+            lo: 22,
+            spans: vec![],
+            inner: Box::new(reply.clone()),
+        }
+        .encode();
+        let via_helper =
+            encode_traced_response(11, 22, &[], &reply.encode());
+        assert_eq!(via_enum, via_helper);
     }
 
     #[test]

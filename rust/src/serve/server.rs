@@ -17,12 +17,15 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::obs::TelemetrySnapshot;
+use crate::obs::{
+    FinishedTrace, SpanRec, TelemetrySnapshot, TraceBuilder, NO_PARENT,
+};
 
 use super::batch::Batcher;
 use super::protocol::{
-    read_frame, write_frame, MetricEvent, MetricHist, MetricsReply, Request,
-    Response, StatsReply, MAX_FRAME,
+    encode_traced_response, read_frame, write_frame, MetricEvent, MetricHist,
+    MetricsReply, Request, Response, StatsReply, WireSpan, WireTrace,
+    MAX_FRAME,
 };
 use super::service::{TimedQuery, VqService};
 
@@ -113,6 +116,13 @@ fn accept_loop(
 }
 
 /// One connection: frames in, frames out, until the peer hangs up.
+///
+/// Tracing wraps the whole per-frame lifetime: the trace origin is the
+/// instant the frame arrived, the `decode` span is replayed from the
+/// stage timer, the handler records its own children, and the `encode`
+/// span is measured on the inner reply *before* the optional
+/// [`Response::Traced`] envelope — whose span list must already be
+/// final — goes out.
 fn serve_connection(
     stream: TcpStream,
     service: &VqService,
@@ -122,25 +132,91 @@ fn serve_connection(
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     while let Some(payload) = read_frame(&mut reader)? {
-        let t_decode = Instant::now();
+        let t_start = Instant::now();
         let decoded = Request::decode(&payload);
-        service
-            .tel()
-            .decode_us
-            .record(t_decode.elapsed().as_micros() as u64);
-        let resp = match decoded {
-            Ok(req) => handle(service, batcher, req),
-            Err(e) => Response::Error { message: format!("{e:#}") },
+        let decode_us = t_start.elapsed().as_micros() as u64;
+        service.tel().decode_us.record(decode_us);
+        // Unwrap the optional trace-context envelope; the inner request
+        // is handled exactly as if it had arrived bare.
+        let (decoded, wire_ctx) = match decoded {
+            Ok(Request::Traced { hi, lo, parent, inner }) => {
+                (Ok(*inner), Some((hi, lo, parent)))
+            }
+            other => (other, None),
+        };
+        let tracer = service.telemetry().tracer();
+        let mut tb = match wire_ctx {
+            // A remote caller already committed to this trace: join it
+            // even when local sampling is off.
+            Some((hi, lo, _)) => Some(tracer.begin_forced_at(hi, lo, t_start)),
+            None => tracer.begin_at(t_start),
+        };
+        let wire_parent = wire_ctx.map_or(NO_PARENT, |(_, _, parent)| parent);
+        let (resp, root) = match decoded {
+            Ok(req) => {
+                handle(service, batcher, req, decode_us, wire_parent, &mut tb)
+            }
+            Err(e) => {
+                (Response::Error { message: format!("{e:#}") }, NO_PARENT)
+            }
         };
         let t_encode = Instant::now();
-        let bytes = resp.encode();
-        service
-            .tel()
-            .encode_us
-            .record(t_encode.elapsed().as_micros() as u64);
-        write_frame(&mut writer, &bytes)?;
+        let inner_bytes = resp.encode();
+        let encode_us = t_encode.elapsed().as_micros() as u64;
+        service.tel().encode_us.record(encode_us);
+        let frame = match tb.take() {
+            None => inner_bytes,
+            Some(mut tb) => {
+                if root != NO_PARENT {
+                    let enc_start =
+                        t_encode.duration_since(t_start).as_micros() as u64;
+                    tb.add("encode", root, enc_start, encode_us);
+                    tb.end(root);
+                }
+                let frame = match wire_ctx {
+                    Some((hi, lo, _)) => {
+                        // Ship the root span detached (parent 0). Its
+                        // true parent is a span id in the *caller's*
+                        // ring; span ids are sequential in both
+                        // processes, so shipping the raw foreign id
+                        // could collide with one of our own ids and
+                        // mis-nest the tree when the caller grafts.
+                        let mut spans = wire_spans(tb.spans());
+                        if let Some(r) =
+                            spans.iter_mut().find(|s| s.id == root)
+                        {
+                            r.parent = NO_PARENT;
+                        }
+                        encode_traced_response(hi, lo, &spans, &inner_bytes)
+                    }
+                    None => inner_bytes,
+                };
+                tracer.commit(tb);
+                frame
+            }
+        };
+        write_frame(&mut writer, &frame)?;
     }
     Ok(())
+}
+
+/// [`SpanRec`]s in wire shape.
+fn wire_spans(spans: &[SpanRec]) -> Vec<WireSpan> {
+    spans
+        .iter()
+        .map(|s| WireSpan {
+            id: s.id,
+            parent: s.parent,
+            start_us: s.start_us,
+            dur_us: s.dur_us,
+            name: s.name.clone(),
+        })
+        .collect()
+}
+
+/// A [`FinishedTrace`] in wire shape (for the `Trace` op's reply).
+fn wire_trace(t: FinishedTrace) -> WireTrace {
+    WireTrace { hi: t.hi, lo: t.lo, ts_ms: t.ts_ms, spans: wire_spans(&t.spans) }
 }
 
 /// Dispatch one request with per-op accounting wrapped around
@@ -148,23 +224,42 @@ fn serve_connection(
 /// handler into the op's latency histogram, and — when the slow-query
 /// log is armed — journal any request over the threshold with whatever
 /// stage breakdown the dispatch recorded.
+///
+/// When a trace is live, opens the root `req.<op>` span (under the wire
+/// context's parent, if any), replays the already-measured `decode`
+/// stage as its first child, and returns the root's id so the caller
+/// can hang the `encode` span off it and close it after framing.
 fn handle(
     service: &VqService,
     batcher: Option<&Batcher>,
     req: Request,
-) -> Response {
+    decode_us: u64,
+    wire_parent: u64,
+    tb: &mut Option<TraceBuilder>,
+) -> (Response, u64) {
     let tel = service.tel();
     let (op_name, op) = match &req {
         Request::Encode { .. } => ("encode", &tel.op_encode),
         Request::Nearest { .. } => ("nearest", &tel.op_nearest),
         Request::Distortion { .. } => ("distortion", &tel.op_distortion),
         Request::Ingest { .. } => ("ingest", &tel.op_ingest),
-        _ => ("other", &tel.op_other),
+        Request::Stats => ("stats", &tel.op_other),
+        Request::Checkpoint => ("checkpoint", &tel.op_other),
+        Request::Rebalance { .. } => ("rebalance", &tel.op_other),
+        Request::FetchState { .. } => ("fetch_state", &tel.op_other),
+        Request::Metrics { .. } => ("metrics", &tel.op_other),
+        Request::Trace { .. } => ("trace", &tel.op_other),
+        Request::Traced { .. } => ("traced", &tel.op_other),
     };
     op.requests.inc();
+    let mut root = NO_PARENT;
+    if let Some(tb) = tb.as_mut() {
+        root = tb.begin(&format!("req.{op_name}"), wire_parent);
+        tb.add("decode", root, 0, decode_us);
+    }
     let t0 = Instant::now();
     let mut stages: Option<(u64, u64)> = None;
-    let resp = dispatch(service, batcher, req, &mut stages);
+    let resp = dispatch(service, batcher, req, &mut stages, root, tb);
     let total_us = t0.elapsed().as_micros() as u64;
     op.total_us.record(total_us);
     let threshold = service.slow_query_us();
@@ -185,7 +280,7 @@ fn handle(
             ),
         );
     }
-    resp
+    (resp, root)
 }
 
 /// Dispatch one request through the service's routed query/ingest surface
@@ -204,6 +299,8 @@ fn dispatch(
     batcher: Option<&Batcher>,
     req: Request,
     stages: &mut Option<(u64, u64)>,
+    root: u64,
+    tb: &mut Option<TraceBuilder>,
 ) -> Response {
     if matches!(
         req,
@@ -263,7 +360,7 @@ fn dispatch(
                 return err;
             }
             count_query();
-            let q = run_query(service, batcher, &points);
+            let q = run_query(service, batcher, &points, root, tb);
             *stages = Some((q.route_us, q.scan_us));
             Response::Codes { version: q.version, codes: q.codes }
         }
@@ -276,7 +373,7 @@ fn dispatch(
                 return err;
             }
             count_query();
-            let q = run_query(service, batcher, &points);
+            let q = run_query(service, batcher, &points, root, tb);
             *stages = Some((q.route_us, q.scan_us));
             Response::Neighbors {
                 version: q.version,
@@ -289,7 +386,7 @@ fn dispatch(
                 return err;
             }
             count_query();
-            let q = run_query(service, batcher, &points);
+            let q = run_query(service, batcher, &points, root, tb);
             *stages = Some((q.route_us, q.scan_us));
             // check() rejected empty batches, so dists is never empty.
             let sum: f64 = q.dists.iter().map(|d| *d as f64).sum();
@@ -354,12 +451,30 @@ fn dispatch(
             Err(e) => Response::Error { message: format!("{e:#}") },
         },
         // Replication: ship the durable state as one consistent bundle.
+        // The service records `state.cut` / `state.ship` children when a
+        // trace is live (a follower's wire context joins them into its
+        // own sync-cycle trace).
         Request::FetchState { have_generation } => {
-            match service.fetch_state(have_generation) {
+            match service.fetch_state(have_generation, tb.as_mut(), root) {
                 Ok(shipment) => Response::State(shipment),
                 Err(e) => Response::Error { message: format!("{e:#}") },
             }
         }
+        Request::Trace { max_traces } => Response::Traces(
+            service
+                .telemetry()
+                .tracer()
+                .recent(max_traces as usize)
+                .into_iter()
+                .map(wire_trace)
+                .collect(),
+        ),
+        // The connection loop unwraps the envelope before dispatch, and
+        // the decoder rejects nesting — this arm is unreachable short of
+        // a bug, and answers cleanly rather than panicking.
+        Request::Traced { .. } => Response::Error {
+            message: "nested trace envelopes are not allowed".into(),
+        },
     }
 }
 
@@ -367,13 +482,34 @@ fn dispatch(
 /// (falling back to the direct path if it is already shut down), else an
 /// immediate fused scan on this connection thread. Either route answers
 /// bit-identically; only latency and staleness differ.
+///
+/// A live trace gets the stage breakdown as child spans of `root`:
+/// `route` + `scan` on both paths (the measurements come from the fused
+/// scan either way), plus `batch.wait` / `batch.scatter` around them
+/// when the coalescer carried the request — the queueing delay and the
+/// fan-back are exactly the latency the batching trade-off adds.
 fn run_query(
     service: &VqService,
     batcher: Option<&Batcher>,
     points: &[f32],
+    root: u64,
+    tb: &mut Option<TraceBuilder>,
 ) -> TimedQuery {
+    let s0 = tb.as_ref().map_or(0, |t| t.now_us());
     if let Some(b) = batcher {
         if let Some(a) = b.submit(points.to_vec()) {
+            if let Some(tb) = tb.as_mut() {
+                tb.add("batch.wait", root, s0, a.wait_us);
+                let r0 = s0 + a.wait_us;
+                tb.add("route", root, r0, a.route_us);
+                tb.add("scan", root, r0 + a.route_us, a.scan_us);
+                tb.add(
+                    "batch.scatter",
+                    root,
+                    r0 + a.route_us + a.scan_us,
+                    a.scatter_us,
+                );
+            }
             return TimedQuery {
                 version: a.version,
                 codes: a.codes,
@@ -383,7 +519,12 @@ fn run_query(
             };
         }
     }
-    service.query_nearest_timed(points, service.probe_n())
+    let q = service.query_nearest_timed(points, service.probe_n());
+    if let Some(tb) = tb.as_mut() {
+        tb.add("route", root, s0, q.route_us);
+        tb.add("scan", root, s0 + q.route_us, q.scan_us);
+    }
+    q
 }
 
 /// A telemetry snapshot in wire shape. By value: the snapshot is already

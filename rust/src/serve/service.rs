@@ -59,7 +59,10 @@ use crate::cloud::{
 };
 use crate::config::{ExperimentConfig, ServeConfig};
 use crate::data::Dataset;
-use crate::obs::{Counter, Gauge, Histogram, Telemetry, TelemetrySnapshot};
+use crate::obs::{
+    Counter, Gauge, Histogram, SpanRec, Telemetry, TelemetrySnapshot,
+    TraceSink, NO_PARENT,
+};
 use crate::persist::{
     self, CheckpointSpec, Checkpointer, Manifest, RestoredState, RouterState,
     ShardState,
@@ -76,10 +79,10 @@ use super::worker::{run_serve_worker, ServeWorkerOutcome, ServeWorkerParams};
 /// dead leader costs one short stall per poll, not a hang).
 const SYNC_CONNECT_TIMEOUT: Duration = Duration::from_secs(1);
 
-/// Events the telemetry journal retains (ring capacity). Also the event
-/// budget of a `--metrics-file` snapshot; the wire's `Metrics` op asks
-/// for its own count.
-const JOURNAL_CAP: usize = 256;
+// The journal ring capacity comes from `ServeConfig::journal_capacity`
+// (default 256, validated >= 16); it is also the event budget of a
+// `--metrics-file` snapshot, while the wire's `Metrics` op asks for its
+// own count.
 
 /// Pre-resolved handles for one wire op's hot-path metrics.
 pub(crate) struct OpTel {
@@ -440,7 +443,8 @@ impl VqService {
         let dim = cfg.dim();
         let s_count = serve.shards;
         let kappa_shard = cfg.vq.kappa / s_count;
-        let telemetry = Telemetry::new(JOURNAL_CAP);
+        let telemetry = Telemetry::new(serve.journal_capacity);
+        telemetry.tracer().configure(serve.trace_sample, serve.slow_query_us);
 
         // Warm restart: load and validate durable state before anything
         // is built (a mismatched state dir must fail here, loudly, not
@@ -608,7 +612,8 @@ impl VqService {
         }
         let m = restored.manifest.clone();
         let counters = Arc::new(ServeCounters::default());
-        let telemetry = Telemetry::new(JOURNAL_CAP);
+        let telemetry = Telemetry::new(serve.journal_capacity);
+        telemetry.tracer().configure(serve.trace_sample, serve.slow_query_us);
         let epoch = follower_epoch(&restored, &telemetry);
         let adopted: u64 = restored.shards.iter().map(|s| s.version).sum();
         counters.merges.store(adopted, Ordering::Relaxed);
@@ -682,12 +687,25 @@ impl VqService {
     /// and swap it in — in-flight reads keep their epoch, new reads see
     /// the new one, exactly the rebalance publication discipline.
     /// Returns `true` when a new generation was adopted.
+    ///
+    /// With tracing armed (`--trace-sample`), a sampled cycle records a
+    /// `sync.cycle` trace and stamps its trace id on the `FetchState`
+    /// call, so the leader's `state.cut` / `state.ship` spans come back
+    /// over the wire and are grafted under `sync.fetch` — ONE trace
+    /// spanning both processes. Only cycles that adopt files commit (an
+    /// empty 25 ms poll is not worth a ring slot).
     fn sync_once(&self) -> Result<bool> {
         let t0 = Instant::now();
         let f = self
             .follower
             .as_ref()
             .ok_or_else(|| anyhow!("sync_once on a leader"))?;
+        let tracer = self.telemetry.tracer();
+        let mut tb = tracer.begin_at(t0);
+        let root = match tb.as_mut() {
+            Some(t) => t.begin("sync.cycle", NO_PARENT),
+            None => NO_PARENT,
+        };
         let mut client = Client::connect_with(
             f.leader_addr.as_str(),
             SYNC_CONNECT_TIMEOUT,
@@ -696,10 +714,37 @@ impl VqService {
         // On a follower, `state_generation` IS the adopted generation
         // (there is no local checkpointer writing to it).
         let have = self.state_generation.load(Ordering::Acquire);
+        let mut fetch_ctx = None; // (fetch span id, its start offset µs)
+        if let Some(t) = tb.as_mut() {
+            let (hi, lo) = t.trace_id();
+            let anchor = t.now_us();
+            let fetch = t.begin("sync.fetch", root);
+            client.trace_next(hi, lo, fetch);
+            fetch_ctx = Some((fetch, anchor));
+        }
         let ship = client.fetch_state(have)?;
+        if let (Some(t), Some((fetch, anchor))) = (tb.as_mut(), fetch_ctx) {
+            // The leader's half of the trace, re-anchored at the moment
+            // the RPC went out (its spans are relative to its own frame
+            // arrival, which sits inside our fetch span).
+            let remote: Vec<SpanRec> = client
+                .take_server_spans()
+                .into_iter()
+                .map(|s| SpanRec {
+                    id: s.id,
+                    parent: s.parent,
+                    name: s.name,
+                    start_us: s.start_us,
+                    dur_us: s.dur_us,
+                })
+                .collect();
+            t.graft(fetch, anchor, &remote);
+            t.end(fetch);
+        }
         if ship.files.is_empty() {
             // Nothing new checkpointed; the poll still refreshes lag
-            // (the leader's live version advanced under us).
+            // (the leader's live version advanced under us). The trace
+            // builder drops uncommitted here, on purpose.
             let lag = ship.leader_version.saturating_sub(self.version());
             f.lag_folds.store(lag, Ordering::Release);
             self.telemetry.gauge("sync.lag_folds").set(lag);
@@ -707,8 +752,13 @@ impl VqService {
             return Ok(false);
         }
         let files = shipped_files(ship.files);
+        let decode_span =
+            tb.as_mut().map(|t| t.begin("sync.decode", root));
         let restored = persist::decode_bundle(&files)
             .context("decoding the leader's shipped bundle")?;
+        if let (Some(t), Some(id)) = (tb.as_mut(), decode_span) {
+            t.end(id);
+        }
         let m = &restored.manifest;
         if m.kappa != self.kappa || m.dim != self.dim {
             bail!(
@@ -730,10 +780,17 @@ impl VqService {
             );
         }
         if let Some(dir) = &self.state_dir {
+            let mirror_span =
+                tb.as_mut().map(|t| t.begin("sync.mirror", root));
             persist::write_bundle(dir, &files).with_context(|| {
                 format!("mirroring the bundle into {}", dir.display())
             })?;
+            if let (Some(t), Some(id)) = (tb.as_mut(), mirror_span) {
+                t.end(id);
+            }
         }
+        let adopt_span =
+            tb.as_mut().map(|t| t.begin("sync.adopt", root));
         let epoch = follower_epoch(&restored, &self.telemetry);
         let adopted: u64 = restored.shards.iter().map(|s| s.version).sum();
         for (s, st) in restored.shards.iter().enumerate() {
@@ -749,6 +806,13 @@ impl VqService {
         f.lag_folds.store(lag, Ordering::Release);
         self.telemetry.gauge("sync.lag_folds").set(lag);
         *f.last_sync.lock().unwrap_or_else(|e| e.into_inner()) = Instant::now();
+        if let Some(mut t) = tb {
+            if let Some(id) = adopt_span {
+                t.end(id);
+            }
+            t.end(root);
+            tracer.commit(t);
+        }
         self.telemetry.journal().info(
             "sync.adopt",
             format!(
@@ -774,7 +838,16 @@ impl VqService {
     /// `have_generation` makes polling cheap: when it matches the
     /// current generation the shipment carries no files. Leader-only;
     /// errors without durable state (there is nothing to ship).
-    pub fn fetch_state(&self, have_generation: u64) -> Result<StateShipment> {
+    ///
+    /// When a trace is live, the consistent-cut read and the shipment
+    /// assembly land as `state.cut` / `state.ship` spans under `parent`
+    /// — a follower's wire context joins them into its sync-cycle trace.
+    pub fn fetch_state(
+        &self,
+        have_generation: u64,
+        mut trace: TraceSink<'_>,
+        parent: u64,
+    ) -> Result<StateShipment> {
         if let Some(f) = &self.follower {
             bail!(
                 "this server is a read-only follower; fetch state from the \
@@ -802,9 +875,13 @@ impl VqService {
             });
         }
         let t0 = Instant::now();
+        let cut_span = trace.as_mut().map(|tb| tb.begin("state.cut", parent));
         let bundle = persist::read_bundle(dir)?.ok_or_else(|| {
             anyhow!("{} holds no checkpointed state yet", dir.display())
         })?;
+        if let (Some(tb), Some(id)) = (trace.as_mut(), cut_span) {
+            tb.end(id);
+        }
         if bundle.generation == have_generation {
             return Ok(StateShipment {
                 generation: bundle.generation,
@@ -812,6 +889,7 @@ impl VqService {
                 files: Vec::new(),
             });
         }
+        let ship_span = trace.as_mut().map(|tb| tb.begin("state.ship", parent));
         self.telemetry.journal().info(
             "state.ship",
             format!(
@@ -822,7 +900,7 @@ impl VqService {
                 t0.elapsed().as_millis()
             ),
         );
-        Ok(StateShipment {
+        let shipment = StateShipment {
             generation: bundle.generation,
             leader_version,
             files: bundle
@@ -830,7 +908,11 @@ impl VqService {
                 .into_iter()
                 .map(|(name, bytes)| StateFile { name, bytes })
                 .collect(),
-        })
+        };
+        if let (Some(tb), Some(id)) = (trace.as_mut(), ship_span) {
+            tb.end(id);
+        }
+        Ok(shipment)
     }
 
     /// The serving epoch — one consistent (router, fleets) pair. O(1)
@@ -1797,7 +1879,7 @@ fn spawn_epoch(
     cfg: &ExperimentConfig,
     serve: &ServeConfig,
     counters: &Arc<ServeCounters>,
-    telemetry: &Telemetry,
+    telemetry: &Arc<Telemetry>,
     router: Router,
     router_version: u64,
     seeds: Option<Vec<ShardSeed>>,
@@ -1873,6 +1955,7 @@ fn spawn_epoch(
             let w0 = seed.w0.clone();
             let publish_every = serve.publish_every;
             let merges0 = seed.version;
+            let telemetry = Arc::clone(telemetry);
             std::thread::Builder::new()
                 .name(format!("dalvq-serve-reducer-{s}"))
                 .spawn(move || {
@@ -1885,6 +1968,7 @@ fn spawn_epoch(
                         w0,
                         publish_every,
                         merges0,
+                        telemetry,
                     )
                 })
                 .expect("spawning serve reducer thread")
@@ -1915,6 +1999,7 @@ fn spawn_epoch(
                 t0: seed.t0,
                 fold_base: seed.version,
                 queue_depth: Arc::clone(&queue_depth),
+                telemetry: Arc::clone(telemetry),
             };
             let q = queue.clone().with_latency(LatencyInjector::new(
                 serve.service_latency,
@@ -2306,6 +2391,10 @@ fn spawn_follower_sync(service: &Arc<VqService>) -> JoinHandle<()> {
 /// loop), sleeps in short slices so shutdown never waits a full period,
 /// and writes one final snapshot on exit so the file always carries the
 /// end-of-life totals. A failed write logs and retries next tick.
+///
+/// Writes go through the persist layer's temp→fsync→rename protocol, so
+/// a reader never sees a partial document — every open of `path` yields
+/// either the previous complete snapshot or the new one.
 fn spawn_metrics_writer(
     service: &Arc<VqService>,
     path: PathBuf,
@@ -2313,8 +2402,19 @@ fn spawn_metrics_writer(
 ) -> JoinHandle<()> {
     let weak: Weak<VqService> = Arc::downgrade(service);
     let write = move |svc: &VqService| {
-        let doc = svc.metrics_snapshot(JOURNAL_CAP).to_json().to_pretty();
-        if let Err(e) = std::fs::write(&path, doc) {
+        let budget = svc.serve.journal_capacity;
+        let doc = svc.metrics_snapshot(budget).to_json().to_pretty();
+        let res = match (path.parent(), path.file_name()) {
+            (Some(dir), Some(name)) => persist::write_atomic(
+                // `Path::parent` of a bare filename is `""`; write into
+                // the working directory, not a directory named "".
+                if dir.as_os_str().is_empty() { Path::new(".") } else { dir },
+                &name.to_string_lossy(),
+                doc.as_bytes(),
+            ),
+            _ => Err(anyhow!("{} has no file name", path.display())),
+        };
+        if let Err(e) = res {
             eprintln!(
                 "dalvq metrics writer: writing {} failed (will retry): {e:#}",
                 path.display()
@@ -2372,6 +2472,11 @@ fn ensure_min_points(
 /// publication for the read path. One per shard. `initial_merges` seeds
 /// the fold clock on a warm restart or migration, so published versions
 /// continue the saved sequence instead of restarting at 1.
+///
+/// With tracing armed, a sampled fold records a `reduce.cycle` trace:
+/// `reduce.merge` covers the delta fold plus the blob put that makes it
+/// visible to workers, `reduce.publish` the read-epoch publication when
+/// this fold crosses a `publish_every` boundary.
 #[allow(clippy::too_many_arguments)]
 fn run_serving_reducer(
     rx: mpsc::Receiver<DeltaMsg>,
@@ -2382,17 +2487,37 @@ fn run_serving_reducer(
     w0: Codebook,
     publish_every: u64,
     initial_merges: u64,
+    telemetry: Arc<Telemetry>,
 ) -> Result<(u64, Codebook)> {
+    let tracer = telemetry.tracer();
     let mut w_srd = w0;
     let mut merges: u64 = initial_merges;
     for msg in rx.iter() {
+        let mut tb = tracer.begin();
+        let root = match tb.as_mut() {
+            Some(t) => t.begin("reduce.cycle", NO_PARENT),
+            None => NO_PARENT,
+        };
+        let merge_span = tb.as_mut().map(|t| t.begin("reduce.merge", root));
         w_srd.apply_delta(&msg.delta);
         merges += 1;
         shard_merges.store(merges, Ordering::Relaxed);
         counters.merges.fetch_add(1, Ordering::Relaxed);
         blob.put(w_srd.clone(), merges)?;
+        if let (Some(t), Some(id)) = (tb.as_mut(), merge_span) {
+            t.end(id);
+        }
         if merges % publish_every == 0 {
+            let publish_span =
+                tb.as_mut().map(|t| t.begin("reduce.publish", root));
             store.publish(w_srd.clone(), merges);
+            if let (Some(t), Some(id)) = (tb.as_mut(), publish_span) {
+                t.end(id);
+            }
+        }
+        if let Some(mut t) = tb {
+            t.end(root);
+            tracer.commit(t);
         }
     }
     // Queue closed: one final epoch so readers see everything folded.

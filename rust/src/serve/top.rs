@@ -87,6 +87,14 @@ pub fn render(addr: &str, stats: &StatsReply, metrics: &MetricsReply) -> String 
             stats.leader_addr, stats.sync_lag_folds, stats.last_sync,
         ));
     }
+    // Present only on tracing-armed servers (or after a slow-query keep).
+    if let Some((_, n)) =
+        metrics.counters.iter().find(|(n, _)| n == "trace.sampled")
+    {
+        s.push_str(&format!(
+            "traces sampled: {n}  (inspect with `dalvq trace --addr {addr}`)\n",
+        ));
+    }
     s.push('\n');
 
     // ------------------------------------------------------ per-op table
@@ -250,6 +258,17 @@ mod tests {
         // events tail with decoded level
         assert!(screen.contains("[warn ]"), "{screen}");
         assert!(screen.contains("slow_query"), "{screen}");
+        // no trace.sampled counter -> no tracing line
+        assert!(!screen.contains("traces sampled"), "{screen}");
+    }
+
+    #[test]
+    fn render_surfaces_the_trace_counter_when_tracing_is_armed() {
+        let mut metrics = sample_metrics();
+        metrics.counters.push(("trace.sampled".into(), 17));
+        let screen = render("127.0.0.1:7171", &sample_stats(), &metrics);
+        assert!(screen.contains("traces sampled: 17"), "{screen}");
+        assert!(screen.contains("dalvq trace --addr"), "{screen}");
     }
 
     #[test]

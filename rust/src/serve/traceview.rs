@@ -1,0 +1,274 @@
+//! `dalvq trace`: fetch and render the server's sampled distributed
+//! traces.
+//!
+//! Polls the `Trace` wire op once and prints each returned trace as an
+//! indented span tree (offset + duration per span, microseconds) followed
+//! by its critical path — the root-to-leaf chain that dominated the
+//! request's wall time. Rendering is a pure function of the wire reply
+//! ([`render`]), so the unit tests exercise it on synthetic traces
+//! without a server.
+//!
+//! Span parents may dangle: a trace joined over the wire (a follower's
+//! `sync.cycle` stamping its id on `FetchState`) leaves the remote
+//! server's root parented under a span id that lives in the *caller's*
+//! ring, not its own. Every span whose parent is not present in the same
+//! trace therefore renders as a root — never dropped, never trusted to
+//! recurse (a lying peer cannot hang the renderer with a parent cycle).
+
+use anyhow::Result;
+
+use super::client::Client;
+use super::protocol::{WireSpan, WireTrace};
+
+/// One `dalvq trace` invocation.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// Server address (`host:port`).
+    pub addr: String,
+    /// Newest-first traces to fetch and print.
+    pub max_traces: u32,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        Self { addr: "127.0.0.1:7171".into(), max_traces: 4 }
+    }
+}
+
+/// Fetch the newest `spec.max_traces` traces from `spec.addr` and print
+/// them, newest first.
+pub fn run_trace(spec: &TraceSpec) -> Result<()> {
+    let mut client = Client::connect(spec.addr.as_str())?;
+    let traces = client.trace(spec.max_traces)?;
+    print!("{}", render(&spec.addr, &traces));
+    Ok(())
+}
+
+/// Render a `Trace` reply. Pure: everything shown is a function of the
+/// arguments.
+pub fn render(addr: &str, traces: &[WireTrace]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "dalvq trace — {addr}: {} sampled trace(s), newest first\n",
+        traces.len()
+    ));
+    if traces.is_empty() {
+        s.push_str(
+            "  (none — arm sampling with --trace-sample, or wait for a \
+             slow-query keep)\n",
+        );
+    }
+    for t in traces {
+        let total: u64 = t
+            .spans
+            .iter()
+            .map(|sp| sp.start_us + sp.dur_us)
+            .max()
+            .unwrap_or(0);
+        s.push('\n');
+        s.push_str(&format!(
+            "trace {:016x}{:016x}  +{} ms  {} span(s)  {} us\n",
+            t.hi,
+            t.lo,
+            t.ts_ms,
+            t.spans.len(),
+            total,
+        ));
+        for line in render_tree(&t.spans).lines() {
+            s.push_str(&format!("  {line}\n"));
+        }
+        let path = critical_path(&t.spans);
+        if path.len() > 1 {
+            let names: Vec<&str> =
+                path.iter().map(|sp| sp.name.as_str()).collect();
+            let leaf = path.last().expect("non-empty path");
+            s.push_str(&format!(
+                "  critical path: {} ({} us of {} us)\n",
+                names.join(" > "),
+                leaf.dur_us,
+                total,
+            ));
+        }
+    }
+    s
+}
+
+/// Indices of the spans that act as tree roots: parent 0 or a parent id
+/// not present in the trace (a wire-joined trace's dangling parent).
+fn root_indices(spans: &[WireSpan]) -> Vec<usize> {
+    (0..spans.len())
+        .filter(|&i| {
+            let p = spans[i].parent;
+            p == 0 || !spans.iter().any(|sp| sp.id == p)
+        })
+        .collect()
+}
+
+/// Direct children of `spans[i]`, in span order.
+fn child_indices(spans: &[WireSpan], i: usize) -> Vec<usize> {
+    let id = spans[i].id;
+    (0..spans.len())
+        .filter(|&c| c != i && spans[c].parent == id)
+        .collect()
+}
+
+/// The span tree as indented text, one span per line:
+/// `name  @offset_us +dur_us`. Spans with unresolvable parents render
+/// as extra roots; a span is printed at most once, so even an
+/// adversarial parent cycle terminates.
+pub fn render_tree(spans: &[WireSpan]) -> String {
+    let mut s = String::new();
+    let mut seen = vec![false; spans.len()];
+    // name column width across the whole trace (indent included)
+    let width = spans
+        .iter()
+        .map(|sp| sp.name.len())
+        .max()
+        .unwrap_or(0)
+        .max(12)
+        + 6;
+    for root in root_indices(spans) {
+        // explicit stack: (index, depth)
+        let mut stack = vec![(root, 0usize)];
+        while let Some((i, depth)) = stack.pop() {
+            if seen[i] {
+                continue;
+            }
+            seen[i] = true;
+            let sp = &spans[i];
+            let label = format!("{}{}", "  ".repeat(depth), sp.name);
+            s.push_str(&format!(
+                "{label:<width$} @{:>7} us  +{:>7} us\n",
+                sp.start_us, sp.dur_us,
+            ));
+            // push children reversed so they pop in span order
+            for c in child_indices(spans, i).into_iter().rev() {
+                stack.push((c, depth + 1));
+            }
+        }
+    }
+    // anything unreachable (self-parenting cycles) still gets a line
+    for i in 0..spans.len() {
+        if !seen[i] {
+            let sp = &spans[i];
+            s.push_str(&format!(
+                "{:<width$} @{:>7} us  +{:>7} us\n",
+                sp.name, sp.start_us, sp.dur_us,
+            ));
+        }
+    }
+    s
+}
+
+/// The chain of spans that dominated the trace: from the slowest root,
+/// repeatedly descend into the slowest child. Each step is the span a
+/// latency investigation should open next.
+pub fn critical_path(spans: &[WireSpan]) -> Vec<&WireSpan> {
+    let mut path = Vec::new();
+    let Some(mut at) = root_indices(spans)
+        .into_iter()
+        .max_by_key(|&i| spans[i].dur_us)
+    else {
+        return path;
+    };
+    let mut hops = 0;
+    loop {
+        path.push(&spans[at]);
+        hops += 1;
+        if hops > spans.len() {
+            break; // adversarial cycle; never loop forever
+        }
+        match child_indices(spans, at)
+            .into_iter()
+            .max_by_key(|&c| spans[c].dur_us)
+        {
+            Some(next) => at = next,
+            None => break,
+        }
+    }
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(id: u64, parent: u64, start: u64, dur: u64, name: &str) -> WireSpan {
+        WireSpan { id, parent, start_us: start, dur_us: dur, name: name.into() }
+    }
+
+    fn sample_trace() -> WireTrace {
+        WireTrace {
+            hi: 0xDEAD,
+            lo: 0xBEEF,
+            ts_ms: 1234,
+            spans: vec![
+                span(1, 0, 0, 5_000, "req.nearest"),
+                span(2, 1, 0, 15, "decode"),
+                span(3, 1, 20, 4_800, "scan"),
+                span(4, 1, 4_850, 30, "encode"),
+            ],
+        }
+    }
+
+    #[test]
+    fn render_shows_ids_trees_and_the_critical_path() {
+        let screen = render("127.0.0.1:7171", &[sample_trace()]);
+        assert!(
+            screen.contains("000000000000dead000000000000beef"),
+            "{screen}"
+        );
+        assert!(screen.contains("req.nearest"), "{screen}");
+        // children are indented under the root
+        assert!(screen.contains("  scan"), "{screen}");
+        // the scan dominates: it IS the critical path's leaf
+        assert!(
+            screen.contains("critical path: req.nearest > scan"),
+            "{screen}"
+        );
+        assert!(screen.contains("4800 us of 5000 us"), "{screen}");
+    }
+
+    #[test]
+    fn render_empty_ring_explains_how_to_arm() {
+        let screen = render("x:1", &[]);
+        assert!(screen.contains("--trace-sample"), "{screen}");
+    }
+
+    #[test]
+    fn dangling_parents_render_as_roots_not_drops() {
+        // A wire-joined trace: the remote root's parent (99) lives in the
+        // caller's ring, not this trace. It must still print, un-indented.
+        let spans =
+            vec![span(1, 99, 0, 100, "req.fetch_state"), span(2, 1, 5, 80, "state.cut")];
+        let tree = render_tree(&spans);
+        assert!(tree.lines().next().unwrap().starts_with("req.fetch_state"));
+        assert!(tree.contains("  state.cut"));
+        let path = critical_path(&spans);
+        assert_eq!(path.len(), 2);
+        assert_eq!(path[1].name, "state.cut");
+    }
+
+    #[test]
+    fn adversarial_parent_cycles_terminate() {
+        // Two spans parenting each other: no root at all. Every span
+        // still renders exactly once, and the critical path terminates.
+        let spans = vec![span(1, 2, 0, 10, "a"), span(2, 1, 0, 10, "b")];
+        let tree = render_tree(&spans);
+        assert_eq!(tree.lines().count(), 2, "{tree}");
+        assert!(critical_path(&spans).len() <= 3);
+    }
+
+    #[test]
+    fn critical_path_follows_the_slowest_child_at_every_hop() {
+        let spans = vec![
+            span(1, 0, 0, 1_000, "root"),
+            span(2, 1, 0, 100, "fast"),
+            span(3, 1, 100, 800, "slow"),
+            span(4, 3, 100, 700, "slowest-leaf"),
+        ];
+        let names: Vec<&str> =
+            critical_path(&spans).iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["root", "slow", "slowest-leaf"]);
+    }
+}

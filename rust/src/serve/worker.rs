@@ -23,7 +23,7 @@ use anyhow::{anyhow, Result};
 
 use crate::cloud::{start_exchange, BlobHandle, DeltaMsg, QueueHandle};
 use crate::data::Shard;
-use crate::obs::Gauge;
+use crate::obs::{Gauge, Telemetry, TraceBuilder, NO_PARENT};
 use crate::runtime::EngineSpec;
 use crate::vq::{Codebook, Delta, Schedule};
 
@@ -76,6 +76,9 @@ pub struct ServeWorkerParams {
     /// the service increments it per batch accepted into `ingest_rx`;
     /// this worker decrements it once per batch taken off the channel.
     pub queue_depth: Arc<Gauge>,
+    /// The service's telemetry plane; its tracer samples exchange
+    /// intervals into `train.cycle` traces.
+    pub telemetry: Arc<Telemetry>,
 }
 
 /// What a serving worker reports at shutdown.
@@ -151,6 +154,21 @@ pub fn run_serve_worker(
     let mut carry: Option<(Vec<f32>, usize)> = None;
     let run_start = Instant::now();
 
+    // Tracing: one trace candidate per exchange interval. `train.fold`
+    // aggregates the interval's vq_chunk compute; `train.exchange_wait`
+    // covers the boundary's exchange (the blocking fold wait in sync
+    // mode, just the upload handoff in async mode — the compute-vs-
+    // synchronization split the paper's schemes differ on).
+    let tracer = params.telemetry.tracer();
+    let begin_cycle = |tr: &crate::obs::Tracer| -> Option<(TraceBuilder, u64)> {
+        tr.begin().map(|mut tb| {
+            let root = tb.begin("train.cycle", NO_PARENT);
+            (tb, root)
+        })
+    };
+    let mut cycle = begin_cycle(tracer);
+    let mut fold_us_acc: u64 = 0;
+
     while !params.stop.load(Ordering::Acquire)
         && (params.max_points == 0 || t - params.t0 < params.max_points)
     {
@@ -199,7 +217,11 @@ pub fn run_serve_worker(
         // One tau-point walk over the window (cyclic, like a shard).
         fill_cyclic(&window, dim, t, &mut chunk_buf);
         params.schedule.fill(t, &mut eps_buf);
+        let t_chunk = cycle.as_ref().map(|_| Instant::now());
         engine.vq_chunk(&mut w, &chunk_buf, &eps_buf, &mut delta_window)?;
+        if let Some(tc) = t_chunk {
+            fold_us_acc += tc.elapsed().as_micros() as u64;
+        }
         t += params.tau as u64;
 
         // Fold in a completed exchange, if any (non-blocking).
@@ -223,6 +245,7 @@ pub fn run_serve_worker(
         }
 
         if t % params.points_per_exchange as u64 == 0 {
+            let wait_start = cycle.as_mut().map(|(tb, _)| tb.now_us());
             if params.sync_exchange {
                 // Synchronous exchange: ship the window, then block until
                 // the reducer has folded every delta we delivered. With a
@@ -274,6 +297,23 @@ pub fn run_serve_worker(
                     &blob,
                 ));
             }
+            // The interval ends here: close its trace (fold is the
+            // interval's aggregate compute, anchored at the trace start)
+            // and open the next candidate.
+            if let Some((mut tb, root)) = cycle.take() {
+                let ws = wait_start.unwrap_or(0);
+                tb.add("train.fold", root, 0, fold_us_acc);
+                tb.add(
+                    "train.exchange_wait",
+                    root,
+                    ws,
+                    tb.now_us().saturating_sub(ws),
+                );
+                tb.end(root);
+                tracer.commit(tb);
+            }
+            fold_us_acc = 0;
+            cycle = begin_cycle(tracer);
         }
     }
 

@@ -13,7 +13,8 @@
 
 use dalvq::serve::protocol::{
     read_frame, write_frame, MetricEvent, MetricHist, MetricsReply, Request,
-    Response, StateFile, StateShipment, StatsReply, MAX_FRAME,
+    Response, StateFile, StateShipment, StatsReply, WireSpan, WireTrace,
+    MAX_FRAME,
 };
 use dalvq::util::Rng;
 
@@ -53,8 +54,10 @@ fn rand_bytes(rng: &mut Rng, max_len: usize) -> Vec<u8> {
     (0..n).map(|_| rng.next_u64() as u8).collect()
 }
 
-fn rand_request(rng: &mut Rng) -> Request {
-    match rng.usize(9) {
+/// Any request that is not a trace envelope (the envelope wraps exactly
+/// these — nesting is a decode error).
+fn rand_bare_request(rng: &mut Rng) -> Request {
+    match rng.usize(10) {
         0 => Request::Encode { points: rand_f32s(rng, 64) },
         1 => Request::Nearest { points: rand_f32s(rng, 64) },
         2 => Request::Distortion { points: rand_f32s(rng, 64) },
@@ -63,8 +66,48 @@ fn rand_request(rng: &mut Rng) -> Request {
         5 => Request::Rebalance { want_remap: rng.bool(0.5) },
         6 => Request::FetchState { have_generation: rng.next_u64() },
         7 => Request::Metrics { max_events: rng.next_u64() as u32 },
+        8 => Request::Trace { max_traces: rng.next_u64() as u32 },
         _ => Request::Stats,
     }
+}
+
+fn rand_request(rng: &mut Rng) -> Request {
+    if rng.bool(0.2) {
+        // One in five rides a trace envelope around any bare op.
+        Request::Traced {
+            hi: rng.next_u64(),
+            lo: rng.next_u64(),
+            parent: rng.next_u64(),
+            inner: Box::new(rand_bare_request(rng)),
+        }
+    } else {
+        rand_bare_request(rng)
+    }
+}
+
+fn rand_spans(rng: &mut Rng, max_len: usize) -> Vec<WireSpan> {
+    let n = rng.usize(max_len + 1);
+    (0..n)
+        .map(|_| WireSpan {
+            id: rng.next_u64(),
+            parent: rng.next_u64(),
+            start_us: rng.next_u64(),
+            dur_us: rng.next_u64(),
+            name: rand_string(rng, 24),
+        })
+        .collect()
+}
+
+fn rand_traces(rng: &mut Rng, max_len: usize) -> Vec<WireTrace> {
+    let n = rng.usize(max_len + 1);
+    (0..n)
+        .map(|_| WireTrace {
+            hi: rng.next_u64(),
+            lo: rng.next_u64(),
+            ts_ms: rng.next_u64(),
+            spans: rand_spans(rng, 6),
+        })
+        .collect()
 }
 
 fn rand_metric_pairs(rng: &mut Rng, max_len: usize) -> Vec<(String, u64)> {
@@ -72,8 +115,10 @@ fn rand_metric_pairs(rng: &mut Rng, max_len: usize) -> Vec<(String, u64)> {
     (0..n).map(|_| (rand_string(rng, 24), rng.next_u64())).collect()
 }
 
-fn rand_response(rng: &mut Rng) -> Response {
-    match rng.usize(11) {
+/// Any response that is not a trace envelope.
+fn rand_bare_response(rng: &mut Rng) -> Response {
+    match rng.usize(12) {
+        11 => Response::Traces(rand_traces(rng, 4)),
         10 => Response::Metrics(MetricsReply {
             uptime_ms: rng.next_u64(),
             counters: rand_metric_pairs(rng, 8),
@@ -177,6 +222,19 @@ fn rand_response(rng: &mut Rng) -> Response {
     }
 }
 
+fn rand_response(rng: &mut Rng) -> Response {
+    if rng.bool(0.2) {
+        Response::Traced {
+            hi: rng.next_u64(),
+            lo: rng.next_u64(),
+            spans: rand_spans(rng, 6),
+            inner: Box::new(rand_bare_response(rng)),
+        }
+    } else {
+        rand_bare_response(rng)
+    }
+}
+
 // --------------------------------------------------- roundtrip properties
 
 #[test]
@@ -250,9 +308,12 @@ fn empty_payload_is_an_error() {
 
 #[test]
 fn unknown_opcodes_err_for_both_directions() {
-    let known_req = [0x01, 0x02, 0x03, 0x04, 0x05, 0x06, 0x07, 0x08, 0x09];
-    let known_resp =
-        [0x81, 0x82, 0x83, 0x84, 0x85, 0x86, 0x87, 0x88, 0x89, 0xFE, 0xFF];
+    let known_req =
+        [0x01, 0x02, 0x03, 0x04, 0x05, 0x06, 0x07, 0x08, 0x09, 0x0A, 0x0B];
+    let known_resp = [
+        0x81, 0x82, 0x83, 0x84, 0x85, 0x86, 0x87, 0x88, 0x89, 0x8A, 0x8B,
+        0xFE, 0xFF,
+    ];
     for op in 0..=255u8 {
         if !known_req.contains(&op) {
             assert!(Request::decode(&[op]).is_err(), "req op 0x{op:02x}");
@@ -386,6 +447,51 @@ fn lying_element_counts_err_without_overallocating() {
     wire.extend_from_slice(&u32::MAX.to_le_bytes()); // message lies
     assert!(Response::decode(&wire).is_err());
 
+    // Traces whose trace count lies (claims u32::MAX, carries none) —
+    // each trace consumes at least 28 bytes, so the bounds check fires
+    // before any allocation sized by the lie
+    let mut wire = vec![0x8Au8];
+    wire.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert!(Response::decode(&wire).is_err());
+
+    // Traces whose span count lies (trace header fine, spans absent)
+    let mut wire = vec![0x8Au8];
+    wire.extend_from_slice(&1u32.to_le_bytes()); // one trace
+    wire.extend_from_slice(&1u64.to_le_bytes()); // hi
+    wire.extend_from_slice(&2u64.to_le_bytes()); // lo
+    wire.extend_from_slice(&3u64.to_le_bytes()); // ts_ms
+    wire.extend_from_slice(&u32::MAX.to_le_bytes()); // spans lie
+    assert!(Response::decode(&wire).is_err());
+
+    // Traces whose span-name length outruns the payload
+    let mut wire = vec![0x8Au8];
+    wire.extend_from_slice(&1u32.to_le_bytes()); // one trace
+    wire.extend_from_slice(&1u64.to_le_bytes()); // hi
+    wire.extend_from_slice(&2u64.to_le_bytes()); // lo
+    wire.extend_from_slice(&3u64.to_le_bytes()); // ts_ms
+    wire.extend_from_slice(&1u32.to_le_bytes()); // one span
+    wire.extend_from_slice(&4u64.to_le_bytes()); // id
+    wire.extend_from_slice(&0u64.to_le_bytes()); // parent
+    wire.extend_from_slice(&5u64.to_le_bytes()); // start_us
+    wire.extend_from_slice(&6u64.to_le_bytes()); // dur_us
+    wire.extend_from_slice(&u32::MAX.to_le_bytes()); // name lies
+    assert!(Response::decode(&wire).is_err());
+
+    // Traced request envelope whose inner length lies
+    let mut wire = vec![0x0Bu8];
+    wire.extend_from_slice(&1u64.to_le_bytes()); // hi
+    wire.extend_from_slice(&2u64.to_le_bytes()); // lo
+    wire.extend_from_slice(&3u64.to_le_bytes()); // parent
+    wire.extend_from_slice(&u32::MAX.to_le_bytes()); // inner lies
+    assert!(Request::decode(&wire).is_err());
+
+    // Traced response envelope whose span count lies
+    let mut wire = vec![0x8Bu8];
+    wire.extend_from_slice(&1u64.to_le_bytes()); // hi
+    wire.extend_from_slice(&2u64.to_le_bytes()); // lo
+    wire.extend_from_slice(&u32::MAX.to_le_bytes()); // spans lie
+    assert!(Response::decode(&wire).is_err());
+
     // NotLeader whose address length lies
     let mut wire = vec![0xFEu8];
     wire.extend_from_slice(&500u32.to_le_bytes());
@@ -487,6 +593,79 @@ fn stats_follower_fields_roundtrip_exactly() {
     let leader = StatsReply { role: "leader".into(), ..StatsReply::default() };
     let wire = Response::Stats(leader.clone()).encode();
     assert_eq!(Response::decode(&wire).unwrap(), Response::Stats(leader));
+}
+
+/// The trace envelope is a backward-compatible *extension*: a bare op's
+/// bytes are identical to what pre-tracing encoders emitted (no flag, no
+/// reserved field), the envelope's payload is the bare encoding verbatim,
+/// and envelopes never nest — in either direction.
+#[test]
+fn trace_envelopes_extend_the_protocol_without_changing_bare_frames() {
+    let mut rng = Rng::from_seed(0x7_2ACE);
+    for _ in 0..40 {
+        // Old-client-to-new-server direction: a bare request re-wrapped
+        // in an envelope carries the bare bytes verbatim after the
+        // 29-byte envelope prefix (opcode + hi + lo + parent + len).
+        let bare = rand_bare_request(&mut rng);
+        let bare_wire = bare.encode();
+        let enveloped = Request::Traced {
+            hi: 7,
+            lo: 9,
+            parent: 11,
+            inner: Box::new(bare.clone()),
+        }
+        .encode();
+        assert_eq!(&enveloped[29..], &bare_wire[..], "{bare:?}");
+        // …and the envelope decodes back to exactly the bare inner.
+        match Request::decode(&enveloped).unwrap() {
+            Request::Traced { hi: 7, lo: 9, parent: 11, inner } => {
+                assert_eq!(*inner, bare);
+            }
+            other => panic!("expected envelope, got {other:?}"),
+        }
+        // New-server-to-old-client direction: an untraced call is
+        // answered bare, so the old decoder never sees 0x8B. Here:
+        // bare responses still decode as themselves even with the
+        // envelope ops known.
+        let resp = rand_bare_response(&mut rng);
+        let wire = resp.encode();
+        assert_eq!(Response::decode(&wire).unwrap(), resp);
+    }
+
+    // Nested envelopes are rejected at decode, both directions: splice a
+    // valid envelope into another envelope's inner-blob slot by hand
+    // (the typed encoder debug-asserts against building one).
+    let inner_env = Request::Traced {
+        hi: 1,
+        lo: 2,
+        parent: 3,
+        inner: Box::new(Request::Stats),
+    }
+    .encode();
+    let mut wire = vec![0x0Bu8];
+    wire.extend_from_slice(&4u64.to_le_bytes());
+    wire.extend_from_slice(&5u64.to_le_bytes());
+    wire.extend_from_slice(&6u64.to_le_bytes());
+    wire.extend_from_slice(&(inner_env.len() as u32).to_le_bytes());
+    wire.extend_from_slice(&inner_env);
+    let err = Request::decode(&wire).unwrap_err().to_string();
+    assert!(err.contains("nested"), "{err}");
+
+    let inner_env = Response::Traced {
+        hi: 1,
+        lo: 2,
+        spans: vec![],
+        inner: Box::new(Response::Error { message: "x".into() }),
+    }
+    .encode();
+    let mut wire = vec![0x8Bu8];
+    wire.extend_from_slice(&4u64.to_le_bytes());
+    wire.extend_from_slice(&5u64.to_le_bytes());
+    wire.extend_from_slice(&0u32.to_le_bytes()); // no spans
+    wire.extend_from_slice(&(inner_env.len() as u32).to_le_bytes());
+    wire.extend_from_slice(&inner_env);
+    let err = Response::decode(&wire).unwrap_err().to_string();
+    assert!(err.contains("nested"), "{err}");
 }
 
 #[test]

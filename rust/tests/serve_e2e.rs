@@ -303,6 +303,7 @@ fn serve_preset_end_to_end_with_loadgen() {
         ingest_frac: 0.25,
         skew: 0.0,
         read_only: false,
+        trace: false,
         seed: p.base.seed,
     };
     let report = dalvq::serve::run_load(&addr, &spec, &p.base.data.mixture).unwrap();

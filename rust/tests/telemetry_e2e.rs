@@ -306,15 +306,28 @@ fn metrics_file_snapshots_parse_with_live_counters() {
     client.nearest(&eval).unwrap();
     client.ingest(&eval).unwrap();
 
-    // A periodic snapshot lands and parses with the driven counters.
-    // (`std::fs::write` is not atomic, so a sample racing the writer may
-    // see a partial document — keep polling, never panic mid-wait.)
+    // A periodic snapshot lands with the driven counters. Snapshots are
+    // written atomically (temp + fsync + rename), so any file a reader
+    // sees is a COMPLETE document: a parse failure here is a writer bug,
+    // never a benign race — panic, don't retry.
     let nearest_count = |path: &Path| -> Option<u64> {
-        let text = std::fs::read_to_string(path).ok()?;
-        let doc = Json::parse(&text).ok()?;
-        doc.req("counters").ok()?.req("op.nearest.requests").ok()?.as_u64().ok()
+        if !path.exists() {
+            return None; // first snapshot not due yet
+        }
+        let text = std::fs::read_to_string(path).unwrap();
+        let doc = Json::parse(&text).unwrap_or_else(|e| {
+            panic!("snapshot must parse (atomic writes): {e:#}\n{text}")
+        });
+        Some(
+            doc.req("counters")
+                .unwrap()
+                .req("op.nearest.requests")
+                .unwrap()
+                .as_u64()
+                .unwrap(),
+        )
     };
-    wait_for(15, "a parseable periodic snapshot", || {
+    wait_for(15, "a periodic snapshot with the driven counters", || {
         nearest_count(&path).is_some_and(|n| n >= 1)
     });
 

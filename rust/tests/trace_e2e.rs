@@ -1,0 +1,282 @@
+//! Distributed tracing end-to-end: the acceptance suite for
+//! wire-propagated spans.
+//!
+//! The paper's decomposition of wall time — per-point compute vs.
+//! communication vs. synchronization delay — only means something for a
+//! *particular* causal unit; aggregates can't say which stage a given
+//! sync cycle spent its 40 ms in. These tests pin the tracing plane's
+//! two contracts at full-stack scope:
+//!
+//! * a client that stamps a trace context on a request gets the server's
+//!   span breakdown shipped back in the reply envelope, and the server
+//!   keeps its half in the ring even with local sampling off (the caller
+//!   already committed to the trace);
+//! * one follower sync cycle is ONE trace spanning both processes: the
+//!   follower's `sync.cycle` tree contains the leader's `state.cut` /
+//!   `state.ship` spans grafted under `sync.fetch` (same 128-bit trace
+//!   id on both rings), and span durations nest within the cycle's wall
+//!   time.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use dalvq::config::{ExperimentConfig, SchemeConfig, ServeConfig};
+use dalvq::obs::NO_PARENT;
+use dalvq::serve::{Client, Server, VqService};
+use dalvq::sim::DelayModel;
+use dalvq::vq::Schedule;
+
+/// Real-time fleets; run tests one at a time (same discipline as
+/// serve_e2e.rs / replication_e2e.rs).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A fresh state directory unique to `tag` (removed first, so reruns of
+/// a failed test never see stale state).
+fn state_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("dalvq-trace-e2e-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The small sharded service of this suite (the replication_e2e preset:
+/// 4 shards x 4 prototypes, gentle pacing, frequent checkpoints).
+fn leader_cfg(dir: Option<&Path>) -> (ExperimentConfig, ServeConfig) {
+    let mut cfg = ExperimentConfig::default();
+    cfg.m = 1;
+    cfg.data.mixture.components = 4;
+    cfg.data.mixture.dim = 2;
+    cfg.data.mixture.noise_frac = 0.0;
+    cfg.data.n_total = 4_000;
+    cfg.data.eval_points = 512;
+    cfg.vq.kappa = 16;
+    cfg.vq.schedule = Schedule::Constant { eps0: 0.02 };
+    cfg.scheme = SchemeConfig::AsyncDelta {
+        tau: 10,
+        up_delay: DelayModel::Instant,
+        down_delay: DelayModel::Instant,
+    };
+    let mut serve = ServeConfig::default();
+    serve.shards = 4;
+    serve.probe_n = 2;
+    serve.points_per_exchange = 50;
+    serve.point_compute = 2e-5;
+    serve.ingest_queue = 1_024;
+    serve.state_dir = dir.map(|d| d.to_path_buf());
+    serve.checkpoint_every = 8;
+    (cfg, serve)
+}
+
+/// Block until `f` returns true or `secs` elapse (then panic with `what`).
+fn wait_for(secs: u64, what: &str, mut f: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while !f() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// A stamped request ships the server's stage breakdown back in the
+/// reply envelope — even with the server's local sampling OFF — and the
+/// server's half of the trace lands in its ring under the stamped id,
+/// fetchable through the `Trace` wire op.
+#[test]
+fn a_traced_request_ships_the_servers_span_breakdown_back() {
+    let _serial = serial();
+    let (cfg, serve) = leader_cfg(None); // trace_sample stays 0
+    let svc = VqService::start(&cfg, &serve).unwrap();
+    let srv = Server::start(Arc::clone(&svc), &serve.addr).unwrap();
+    let mut client = Client::connect(srv.local_addr()).unwrap();
+    let eval = cfg.data.mixture.eval_sample(64, cfg.seed);
+
+    // An untraced call ships nothing: the frame is byte-identical to the
+    // pre-tracing protocol, and there are no stale spans to take.
+    let _ = client.nearest(&eval).unwrap();
+    assert!(client.take_server_spans().is_empty());
+
+    // A stamped call comes back with the handler's stage tree.
+    client.trace_next(0xABCD, 0x1234, 0);
+    let _ = client.nearest(&eval).unwrap();
+    let spans = client.take_server_spans();
+    let find = |name: &str| {
+        spans
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("no {name} span in {spans:?}"))
+    };
+    let root = find("req.nearest");
+    assert_eq!(root.parent, 0, "the shipped root is detached");
+    for stage in ["decode", "route", "scan", "encode"] {
+        let s = find(stage);
+        assert_eq!(s.parent, root.id, "{stage} must hang off the root");
+        assert!(
+            s.start_us + s.dur_us <= root.start_us + root.dur_us + 1_000,
+            "{stage} must nest within the root: {spans:?}"
+        );
+    }
+    // Draining: a second take is empty.
+    assert!(client.take_server_spans().is_empty());
+
+    // The wire context forced the server to keep its half despite
+    // sampling being off; the Trace op serves it under the stamped id.
+    let traces = client.trace(8).unwrap();
+    let kept = traces
+        .iter()
+        .find(|t| t.hi == 0xABCD && t.lo == 0x1234)
+        .unwrap_or_else(|| panic!("stamped trace not in ring: {traces:?}"));
+    assert!(kept.spans.iter().any(|s| s.name == "scan"), "{kept:?}");
+    assert_eq!(traces.len(), 1, "sampling off: only the forced trace");
+
+    srv.shutdown().unwrap();
+    svc.shutdown().unwrap();
+}
+
+/// The tentpole acceptance pin: one follower sync cycle that adopts a
+/// generation yields ONE trace spanning both processes — shared 128-bit
+/// trace id in both rings, the leader's `state.cut` / `state.ship`
+/// grafted under the follower's `sync.fetch`, and every stage nesting
+/// within the cycle's wall time.
+#[test]
+fn one_sync_cycle_is_one_trace_across_both_processes() {
+    let _serial = serial();
+    let ldir = state_dir("one-trace-leader");
+    let fdir = state_dir("one-trace-follower");
+    let (cfg, serve) = leader_cfg(Some(&ldir));
+    let leader = VqService::start(&cfg, &serve).unwrap();
+    let lsrv = Server::start(Arc::clone(&leader), &serve.addr).unwrap();
+    let laddr = lsrv.local_addr().to_string();
+    let mut lclient = Client::connect(laddr.as_str()).unwrap();
+
+    // Train past the first checkpoints so the follower can bootstrap.
+    let eval = cfg.data.mixture.eval_sample(512, cfg.seed);
+    lclient.ingest(&eval).unwrap();
+    let v0 = leader.version();
+    wait_for(30, "leader folds", || leader.version() >= v0 + 20);
+
+    // Follower with every sync cycle sampled; the leader's own sampling
+    // stays OFF, so anything in the leader's ring got there through a
+    // wire-forced trace.
+    let mut fserve = ServeConfig::default();
+    fserve.follow = Some(laddr.clone());
+    fserve.sync_every_ms = 25;
+    fserve.probe_n = 2;
+    fserve.state_dir = Some(fdir.clone());
+    fserve.trace_sample = 1;
+    let follower = VqService::start(&cfg, &fserve).unwrap();
+
+    // Keep the leader checkpointing until the follower commits a sync
+    // trace that actually adopted files (empty polls drop uncommitted).
+    let mut stream_t = 0u64;
+    let mut found = None;
+    wait_for(30, "a traced sync cycle that adopted a generation", || {
+        let batch = cfg.data.mixture.generate(128, cfg.seed, 2 + stream_t);
+        stream_t += 1;
+        lclient.ingest(&batch).unwrap();
+        found = follower
+            .telemetry()
+            .tracer()
+            .recent(64)
+            .into_iter()
+            .find(|t| t.spans.iter().any(|s| s.name == "state.ship"));
+        found.is_some()
+    });
+    let trace = found.unwrap();
+    // Grab the leader's half right away (its ring holds one forced
+    // trace per poll, and the cap evicts oldest-first).
+    let leader_traces = lclient.trace(64).unwrap();
+
+    let span = |name: &str| {
+        trace
+            .spans
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("no {name} span in {:?}", trace.spans))
+    };
+    // The follower's half: the cycle root and its local stages.
+    let root = span("sync.cycle");
+    assert_eq!(root.parent, NO_PARENT);
+    let fetch = span("sync.fetch");
+    let decode = span("sync.decode");
+    let mirror = span("sync.mirror");
+    let adopt = span("sync.adopt");
+    for s in [fetch, decode, mirror, adopt] {
+        assert_eq!(s.parent, root.id, "{} must hang off the cycle", s.name);
+    }
+    // The leader's half, grafted over the wire: its handler root sits
+    // under sync.fetch, with the cut/ship stages below it. (This is also
+    // the regression pin for span-id collisions across processes — a
+    // raw foreign parent id would nest the leader's root under one of
+    // its own children.)
+    let lroot = span("req.fetch_state");
+    assert_eq!(lroot.parent, fetch.id, "leader root grafts under fetch");
+    let cut = span("state.cut");
+    let ship = span("state.ship");
+    assert_eq!(cut.parent, lroot.id);
+    assert_eq!(ship.parent, lroot.id);
+
+    // Durations nest: the leader's spans fit inside the RPC window, and
+    // the local stages fit inside (and roughly account for) the cycle.
+    const SLOP_US: u64 = 1_000;
+    for s in [lroot, cut, ship] {
+        assert!(
+            s.start_us + s.dur_us <= fetch.start_us + fetch.dur_us + SLOP_US,
+            "{} must fit inside sync.fetch: {:?}",
+            s.name,
+            trace.spans
+        );
+    }
+    let stages_us: u64 =
+        [fetch, decode, mirror, adopt].iter().map(|s| s.dur_us).sum();
+    let root_end = root.start_us + root.dur_us;
+    for s in [fetch, decode, mirror, adopt] {
+        assert!(
+            s.start_us + s.dur_us <= root_end + SLOP_US,
+            "{} must fit inside sync.cycle: {:?}",
+            s.name,
+            trace.spans
+        );
+    }
+    assert!(
+        stages_us <= root.dur_us + SLOP_US,
+        "stages ({stages_us} us) exceed the cycle ({} us)",
+        root.dur_us
+    );
+
+    // ONE trace: the leader's ring holds the same 128-bit id (kept by
+    // the wire force — its sampling is off), and its copy of the root is
+    // parented under the follower's actual sync.fetch span id.
+    let ltrace = leader_traces
+        .iter()
+        .find(|t| t.hi == trace.hi && t.lo == trace.lo)
+        .unwrap_or_else(|| {
+            panic!(
+                "trace {:016x}{:016x} not in the leader ring",
+                trace.hi, trace.lo
+            )
+        });
+    let lspan = |name: &str| {
+        ltrace
+            .spans
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("no {name} span in {:?}", ltrace.spans))
+    };
+    assert_eq!(
+        lspan("req.fetch_state").parent,
+        fetch.id,
+        "the leader's root must name the follower's fetch span as parent"
+    );
+    assert!(ltrace.spans.iter().any(|s| s.name == "state.cut"));
+    assert!(ltrace.spans.iter().any(|s| s.name == "state.ship"));
+
+    follower.shutdown().unwrap();
+    leader.shutdown().unwrap();
+    lsrv.shutdown().unwrap();
+    std::fs::remove_dir_all(&ldir).unwrap();
+    std::fs::remove_dir_all(&fdir).unwrap();
+}
