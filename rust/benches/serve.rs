@@ -14,17 +14,66 @@
 #[path = "kit/mod.rs"]
 mod kit;
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::hint::black_box;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::thread;
 use std::time::Instant;
 
 use dalvq::config::presets;
 use dalvq::data::MixtureSpec;
 use dalvq::runtime::{Engine, NativeEngine};
+use dalvq::serve::protocol::{
+    begin_frame, end_frame, read_frame_into, write_frame, Decoder, Request,
+    RequestRef, Response,
+};
 use dalvq::serve::{max_over_mean, run_load, LoadSpec, Server, VqService};
 use dalvq::vq::{nearest_batch, nearest_with_dist, Codebook};
 
+// The whole bench binary runs under a counting allocator: one relaxed
+// counter bump per alloc/realloc, the same overhead on both sides of the
+// wire A/B below, and it lets the decode probe *measure* the zero-copy
+// claim (allocations per parsed frame) instead of asserting it in prose.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
 fn main() {
+    // CI runs only the wire A/B (it has a regression gate on the
+    // artifact); the sweeps above it are by-hand benches.
+    if std::env::var_os("DALVQ_BENCH_WIRE_ONLY").is_some() {
+        wire_bench();
+        return;
+    }
     let p = presets::serve();
     kit::section("dalvq serve — in-process stack, native engine");
     println!(
@@ -53,6 +102,7 @@ fn main() {
             connections,
             requests_per_conn: 400,
             batch_points: 64,
+            pipeline: 1,
             ingest_frac,
             skew: 0.0,
             read_only: false,
@@ -187,6 +237,7 @@ fn main() {
         connections: 8,
         requests_per_conn: 200,
         batch_points: 64,
+        pipeline: 1,
         ingest_frac: 0.8,
         skew: 2.0,
         read_only: false,
@@ -259,6 +310,7 @@ fn main() {
             connections: 4,
             requests_per_conn: 300,
             batch_points: 64,
+            pipeline: 1,
             ingest_frac: 0.0,
             skew: 0.0,
             read_only: true,
@@ -387,6 +439,7 @@ fn main() {
             connections: 16,
             requests_per_conn: 300,
             batch_points: 16,
+            pipeline: 1,
             ingest_frac: 0.0,
             skew: 0.0,
             read_only: true,
@@ -451,6 +504,246 @@ fn main() {
     std::fs::write("BENCH_query_plane.json", &json)
         .expect("writing BENCH_query_plane.json");
     println!("\nwrote BENCH_query_plane.json");
+
+    wire_bench();
+}
+
+/// A/B of the server core this PR replaced: a thread-per-connection
+/// blocking server (rebuilt in miniature below — one OS thread per
+/// conn, one heap frame per request and reply, throwaway-connection
+/// shutdown) against the event-loop [`Server`], same service, same
+/// 32-connection mixed load. CI gates on the artifact: event-loop p99
+/// no worse than the baseline, and zero allocations per frame in the
+/// steady-state decode loop.
+fn wire_bench() {
+    kit::section("wire path — thread-per-conn baseline vs event loop");
+
+    let (frames_parsed, decode_allocs) = decode_alloc_probe();
+    let allocs_per_frame = decode_allocs as f64 / frames_parsed as f64;
+    println!(
+        "steady-state decode: {frames_parsed} frames, {decode_allocs} \
+         allocations ({allocs_per_frame:.3} per frame)"
+    );
+
+    let p = presets::serve();
+    let wire_spec = LoadSpec {
+        connections: 32,
+        requests_per_conn: 400,
+        batch_points: 64,
+        pipeline: 1,
+        ingest_frac: 0.25,
+        skew: 0.0,
+        read_only: false,
+        trace: false,
+        seed: p.base.seed,
+    };
+    println!(
+        "\n{:>16} {:>11} {:>9} {:>9} {:>9}",
+        "server", "req/s", "p50", "p95", "p99"
+    );
+
+    let service = VqService::start(&p.base, &p.serve).expect("service");
+    let baseline = BaselineServer::start(Arc::clone(&service));
+    let base_report = run_load(baseline.addr(), &wire_spec, &p.base.data.mixture)
+        .expect("baseline load");
+    baseline.shutdown();
+    print_wire_row("thread/conn", &base_report);
+
+    let server =
+        Server::start(Arc::clone(&service), &p.serve.addr).expect("server");
+    let addr = server.local_addr().to_string();
+    let ev_report =
+        run_load(&addr, &wire_spec, &p.base.data.mixture).expect("event load");
+    print_wire_row("event loop", &ev_report);
+
+    // The same load with eight requests in flight per connection — the
+    // regime the blocking baseline cannot express at all (it reads one
+    // frame, answers, reads the next). Recorded, not gated.
+    let mut piped_spec = wire_spec.clone();
+    piped_spec.pipeline = 8;
+    let piped_report = run_load(&addr, &piped_spec, &p.base.data.mixture)
+        .expect("pipelined load");
+    print_wire_row("event loop x8", &piped_report);
+
+    server.shutdown().expect("server shutdown");
+    service.shutdown().expect("service shutdown");
+
+    let json = format!(
+        "{{\n  \"bench\": \"wire\",\n  \"connections\": {},\n  \
+         \"requests_per_conn\": {},\n  \"batch_points\": {},\n  \
+         \"decode\": {{\"frames\": {frames_parsed}, \"allocs\": \
+         {decode_allocs}, \"allocs_per_frame\": {allocs_per_frame:.4}}},\n  \
+         \"baseline\": {},\n  \"eventloop\": {},\n  \
+         \"eventloop_pipelined\": {}\n}}\n",
+        wire_spec.connections,
+        wire_spec.requests_per_conn,
+        wire_spec.batch_points,
+        wire_row_json(1, &base_report),
+        wire_row_json(1, &ev_report),
+        wire_row_json(piped_spec.pipeline, &piped_report),
+    );
+    std::fs::write("BENCH_wire.json", &json).expect("writing BENCH_wire.json");
+    println!("\nwrote BENCH_wire.json");
+}
+
+/// One aligned row of the wire A/B table.
+fn print_wire_row(name: &str, report: &dalvq::serve::LoadReport) {
+    println!(
+        "{:>16} {:>11.0} {:>6.0} us {:>6.0} us {:>6.0} us",
+        name,
+        report.throughput_rps,
+        report.p50_us,
+        report.p95_us,
+        report.p99_us,
+    );
+}
+
+/// One server's slice of the `BENCH_wire.json` artifact.
+fn wire_row_json(pipeline: usize, report: &dalvq::serve::LoadReport) -> String {
+    format!(
+        "{{\"pipeline\": {pipeline}, \"rps\": {:.1}, \"p50_us\": {:.1}, \
+         \"p95_us\": {:.1}, \"p99_us\": {:.1}}}",
+        report.throughput_rps, report.p50_us, report.p95_us, report.p99_us,
+    )
+}
+
+/// Build a realistic request stream (64-point read and ingest payloads),
+/// then parse it twice through one [`Decoder`] in socket-sized chunks.
+/// Pass one warms the ring (growth allocates); pass two is the steady
+/// state the server lives in, and its allocation delta divided by frames
+/// parsed is the number CI gates at zero. `(frames, allocations)`.
+fn decode_alloc_probe() -> (u64, u64) {
+    let points: Vec<f32> =
+        (0..64 * 8).map(|i| i as f32 * 0.25 - 3.0).collect();
+    let reqs = [
+        Request::Encode { points: points.clone() },
+        Request::Nearest { points: points.clone() },
+        Request::Distortion { points: points.clone() },
+        Request::Ingest { points: points.clone() },
+        Request::Stats,
+    ];
+    let mut stream = Vec::new();
+    const FRAMES: usize = 256;
+    for i in 0..FRAMES {
+        let at = begin_frame(&mut stream);
+        reqs[i % reqs.len()].encode_into(&mut stream);
+        end_frame(&mut stream, at).expect("frame under cap");
+    }
+
+    let mut dec = Decoder::new();
+    let parse_pass = |dec: &mut Decoder| -> u64 {
+        let mut parsed = 0;
+        for chunk in stream.chunks(4096) {
+            dec.spare(chunk.len())[..chunk.len()].copy_from_slice(chunk);
+            dec.advance(chunk.len());
+            while let Some(frame) = dec.next_frame().expect("well-formed") {
+                black_box(RequestRef::decode(frame).expect("decodes"));
+                parsed += 1;
+            }
+        }
+        parsed
+    };
+    let warm = parse_pass(&mut dec);
+    assert_eq!(warm, FRAMES as u64, "warm pass must drain every frame");
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let parsed = parse_pass(&mut dec);
+    let allocs = ALLOCS.load(Ordering::Relaxed) - before;
+    assert_eq!(parsed, FRAMES as u64, "steady pass must drain every frame");
+    (parsed, allocs)
+}
+
+/// The server design this PR retired, rebuilt in miniature as the A/B
+/// baseline: a blocking accept loop, one OS thread per connection, a
+/// heap-allocated frame per request and per reply — and shutdown via
+/// the throwaway connection the event loop's wake token made obsolete.
+struct BaselineServer {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl BaselineServer {
+    fn start(service: Arc<VqService>) -> Self {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("local addr").to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handle = thread::spawn(move || {
+            let mut conns = Vec::new();
+            for stream in listener.incoming() {
+                if stop_flag.load(Ordering::Acquire) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let svc = Arc::clone(&service);
+                conns.push(thread::spawn(move || baseline_conn(&svc, stream)));
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        });
+        BaselineServer { addr, stop, handle: Some(handle) }
+    }
+
+    fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        let _ = TcpStream::connect(&self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn baseline_conn(service: &VqService, stream: TcpStream) {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let mut writer = BufWriter::new(stream);
+    let mut frame = Vec::new();
+    loop {
+        match read_frame_into(&mut reader, &mut frame) {
+            Ok(true) => {}
+            Ok(false) | Err(_) => return,
+        }
+        let reply = match Request::decode(&frame) {
+            Ok(req) => baseline_dispatch(service, req),
+            Err(e) => Response::Error { message: format!("{e:#}") },
+        };
+        if write_frame(&mut writer, &reply.encode()).is_err() {
+            return;
+        }
+        if writer.flush().is_err() {
+            return;
+        }
+    }
+}
+
+fn baseline_dispatch(service: &VqService, req: Request) -> Response {
+    match req {
+        Request::Encode { points } => {
+            let (version, codes) = service.query_encode(&points);
+            Response::Codes { version, codes }
+        }
+        Request::Nearest { points } => {
+            let (version, indices, dists) = service.query_nearest(&points);
+            Response::Neighbors { version, indices, dists }
+        }
+        Request::Distortion { points } => {
+            let (version, value) = service.query_distortion(&points);
+            Response::Distortion { version, value }
+        }
+        Request::Ingest { points } => match service.ingest(&points) {
+            Ok((accepted, shed)) => Response::IngestAck { accepted, shed },
+            Err(e) => Response::Error { message: format!("{e:#}") },
+        },
+        _ => Response::Error {
+            message: "baseline server answers query and ingest ops only"
+                .into(),
+        },
+    }
 }
 
 /// The PJRT side of the `nearest_chunk` comparison: `(median ns, note)`.
@@ -532,6 +825,7 @@ fn mixed_load_sweep(p: &presets::ServePreset) -> (dalvq::serve::LoadReport, u64)
         connections: 8,
         requests_per_conn: 400,
         batch_points: 64,
+        pipeline: 1,
         ingest_frac: 0.25,
         skew: 0.0,
         read_only: false,

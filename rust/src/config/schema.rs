@@ -262,6 +262,29 @@ pub struct ServeConfig {
     /// plus sync cycle can wrap a small ring before anyone reads it;
     /// raise this to keep more history. Validated `>= 16`.
     pub journal_capacity: usize,
+    /// Request-handler threads behind the event-loop front-end. `0`
+    /// (default) sizes the pool to the machine's available parallelism;
+    /// an explicit value pins it (validated `<= 1024`). The reactor
+    /// itself is always one thread — this pool only runs decode /
+    /// dispatch / encode.
+    pub io_workers: usize,
+    /// Per-connection in-flight quota: at most this many requests may
+    /// be parsed but not yet answered on one connection; excess
+    /// pipelined frames answer `Throttled` in-band (the connection
+    /// survives). `0` (default) disables the quota — backpressure then
+    /// falls to the reactor's parse-ahead bound and TCP flow control.
+    pub max_inflight: usize,
+    /// Per-connection rate quota in requests/second (token bucket with
+    /// a one-second burst). Requests past the budget answer `Throttled`
+    /// with a retry-after hint. `0` (default) disables the quota.
+    pub rate_limit: u64,
+    /// Brownout watermark over the `shard.<s>.queue_depth` gauges: when
+    /// any shard's ingest queue sits at or above this depth, the
+    /// front-end sheds *ingest* frames with `Throttled` — reads are
+    /// never shed — until the queues drain below it. Entry and exit are
+    /// journaled (`brownout.enter` / `brownout.exit`). `0` (default)
+    /// disables brownout.
+    pub brownout_depth: u64,
 }
 
 impl Default for ServeConfig {
@@ -296,6 +319,10 @@ impl Default for ServeConfig {
             batch_max_points: 4_096,
             trace_sample: 0,
             journal_capacity: 256,
+            io_workers: 0,
+            max_inflight: 0,
+            rate_limit: 0,
+            brownout_depth: 0,
         }
     }
 }
@@ -443,6 +470,13 @@ impl ServeConfig {
                 "journal_capacity = {} must be >= 16 (the ring must hold \
                  at least a burst of lifecycle events)",
                 self.journal_capacity
+            ));
+        }
+        if self.io_workers > 1024 {
+            errs.push(format!(
+                "io_workers = {} is past any plausible core count; use 0 \
+                 to size the pool automatically",
+                self.io_workers
             ));
         }
         if errs.is_empty() {
@@ -1102,6 +1136,28 @@ mod tests {
         let mut s = ServeConfig::default();
         s.batch_max_points = 0;
         s.validate(&base).unwrap();
+    }
+
+    #[test]
+    fn admission_knobs_are_validated() {
+        let base = ExperimentConfig::default();
+
+        // armed quotas and a pinned worker pool are accepted
+        let mut s = ServeConfig::default();
+        s.io_workers = 8;
+        s.max_inflight = 16;
+        s.rate_limit = 1_000;
+        s.brownout_depth = 4;
+        s.validate(&base).unwrap();
+
+        // everything-off is the default and stays valid
+        ServeConfig::default().validate(&base).unwrap();
+
+        // an absurd worker count is a typo, not a deployment
+        let mut s = ServeConfig::default();
+        s.io_workers = 4_096;
+        let msg = format!("{:#}", s.validate(&base).unwrap_err());
+        assert!(msg.contains("io_workers"), "{msg}");
     }
 
     #[test]

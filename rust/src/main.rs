@@ -120,6 +120,16 @@ OPTIONS (serve):
                              (answers stay bit-identical; 0 = off)
   --batch-max-points <N>     drain a coalesced batch early once it holds
                              this many points [default: 4096]
+  --io-workers <N>           request-handler threads behind the event loop
+                             [default: 0 = one per available core]
+  --max-inflight <N>         per-connection in-flight request quota; excess
+                             requests answer Throttled in-band (0 = off)
+  --rate-limit <N>           per-connection requests/second token bucket
+                             (one-second burst); excess answers Throttled
+                             with a retry-after hint (0 = off)
+  --brownout-depth <N>       brownout watermark: shed ingest (Throttled)
+                             while any shard.<s>.queue_depth gauge is at
+                             or above N; reads keep flowing (0 = off)
 
 OPTIONS (top):
   --addr <HOST:PORT>         server to poll (required)
@@ -147,6 +157,8 @@ OPTIONS (loadtest):
   --connections <N>          concurrent connections [default: 8]
   --requests <N>             requests per connection [default: 200]
   --batch <N>                points per request [default: 64]
+  --pipeline <N>             requests kept in flight per connection before
+                             reading replies (1 = classic request/reply)
   --ingest-frac <F>          fraction of ingest requests [default: 0.25]
   --skew <S>                 zipf exponent skewing the workload across
                              mixture components (0 = balanced) — the
@@ -368,6 +380,10 @@ fn run() -> Result<()> {
             let trace_sample = parse_opt_u64(&mut args, "--trace-sample")?;
             let journal_capacity =
                 parse_opt_u64(&mut args, "--journal-capacity")?;
+            let io_workers = parse_opt_u64(&mut args, "--io-workers")?;
+            let max_inflight = parse_opt_u64(&mut args, "--max-inflight")?;
+            let rate_limit = parse_opt_u64(&mut args, "--rate-limit")?;
+            let brownout_depth = parse_opt_u64(&mut args, "--brownout-depth")?;
             args.finish()?;
             let mut p = serve_preset(&preset)?;
             apply_sharding(&mut p, shards, probe);
@@ -412,6 +428,18 @@ fn run() -> Result<()> {
             }
             if let Some(n) = journal_capacity {
                 p.serve.journal_capacity = n as usize;
+            }
+            if let Some(n) = io_workers {
+                p.serve.io_workers = n as usize;
+            }
+            if let Some(n) = max_inflight {
+                p.serve.max_inflight = n as usize;
+            }
+            if let Some(n) = rate_limit {
+                p.serve.rate_limit = n;
+            }
+            if let Some(n) = brownout_depth {
+                p.serve.brownout_depth = n;
             }
             let service = VqService::start(&p.base, &p.serve)?;
             let server = Server::start(Arc::clone(&service), &p.serve.addr)?;
@@ -483,6 +511,18 @@ fn run() -> Result<()> {
                     server.local_addr(),
                 );
             }
+            if p.serve.max_inflight > 0
+                || p.serve.rate_limit > 0
+                || p.serve.brownout_depth > 0
+            {
+                println!(
+                    "dalvq serve: admission control armed (rate {}/s, \
+                     in-flight {}, brownout depth {}; 0 = off)",
+                    p.serve.rate_limit,
+                    p.serve.max_inflight,
+                    p.serve.brownout_depth,
+                );
+            }
             match duration {
                 Some(secs) => {
                     std::thread::sleep(std::time::Duration::from_secs(secs))
@@ -541,6 +581,9 @@ fn run() -> Result<()> {
             }
             if let Some(n) = parse_opt_u64(&mut args, "--batch")? {
                 spec.batch_points = n as usize;
+            }
+            if let Some(n) = parse_opt_u64(&mut args, "--pipeline")? {
+                spec.pipeline = n as usize;
             }
             if let Some(f) = parse_opt_f64(&mut args, "--ingest-frac")? {
                 spec.ingest_frac = f;

@@ -1,15 +1,16 @@
 //! The in-crate client: a blocking, connection-per-`Client` counterpart of
 //! the server, used by the CLI, the load generator and the e2e tests.
 
-use std::io::{BufReader, BufWriter};
+use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::protocol::{
-    read_frame, write_frame, MetricsReply, Request, Response, StateShipment,
-    StatsReply, WireSpan, WireTrace,
+    begin_frame, encode_traced_request_into, end_frame, read_frame_into,
+    MetricsReply, Request, Response, StateShipment, StatsReply, WireSpan,
+    WireTrace,
 };
 
 /// Default per-attempt connect timeout.
@@ -28,6 +29,13 @@ pub struct Client {
     /// Server-side spans returned by the last traced call, kept until
     /// [`Client::take_server_spans`] collects them.
     server_spans: Vec<WireSpan>,
+    /// Request-encode scratch: each [`Client::send`] builds its wire
+    /// frame (length prefix + payload) here, so only a request that
+    /// outgrows every earlier one allocates.
+    enc_buf: Vec<u8>,
+    /// Reply-payload scratch for [`super::protocol::read_frame_into`] —
+    /// the read-side counterpart of `enc_buf`.
+    frame_buf: Vec<u8>,
 }
 
 impl Client {
@@ -73,6 +81,8 @@ impl Client {
                             writer: BufWriter::new(stream),
                             trace_next: None,
                             server_spans: Vec::new(),
+                            enc_buf: Vec::new(),
+                            frame_buf: Vec::new(),
                         });
                     }
                     Err(e) => last_err = Some(e),
@@ -104,28 +114,62 @@ impl Client {
         std::mem::take(&mut self.server_spans)
     }
 
-    fn call(&mut self, req: &Request) -> Result<Response> {
-        let frame = match self.trace_next.take() {
+    /// Encode `req` — wrapped in a trace envelope when
+    /// [`Client::trace_next`] armed one — and queue it on the
+    /// connection's buffered writer *without* reading the reply: the
+    /// send half of a pipelined exchange. Pair with [`Client::flush`]
+    /// and [`Client::recv`]; every queued request is answered in order.
+    /// The frame is built in the connection's reused scratch buffer, so
+    /// a steady request stream allocates nothing per frame.
+    pub fn send(&mut self, req: &Request) -> Result<()> {
+        self.enc_buf.clear();
+        let at = begin_frame(&mut self.enc_buf);
+        match self.trace_next.take() {
             Some((hi, lo, parent)) => {
                 self.server_spans.clear();
-                Request::Traced {
+                encode_traced_request_into(
+                    &mut self.enc_buf,
                     hi,
                     lo,
                     parent,
-                    inner: Box::new(req.clone()),
-                }
-                .encode()
+                    req,
+                );
             }
-            None => req.encode(),
-        };
-        write_frame(&mut self.writer, &frame)?;
-        let payload = read_frame(&mut self.reader)?
-            .ok_or_else(|| anyhow!("server closed the connection"))?;
-        let mut resp = Response::decode(&payload)?;
+            None => req.encode_into(&mut self.enc_buf),
+        }
+        end_frame(&mut self.enc_buf, at)?;
+        self.writer.write_all(&self.enc_buf)?;
+        Ok(())
+    }
+
+    /// Push every queued [`Client::send`] frame onto the wire.
+    pub fn flush(&mut self) -> Result<()> {
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Read the next reply frame (the receive half of a pipelined
+    /// exchange). A trace envelope is unwrapped — its spans land in
+    /// [`Client::take_server_spans`] — but protocol-level refusals
+    /// (`Throttled`, `NotLeader`, `Error`) are returned as values, not
+    /// errors, so a pipelined caller can count or redirect them without
+    /// losing its place in the reply stream.
+    pub fn recv(&mut self) -> Result<Response> {
+        if !read_frame_into(&mut self.reader, &mut self.frame_buf)? {
+            bail!("server closed the connection");
+        }
+        let mut resp = Response::decode(&self.frame_buf)?;
         if let Response::Traced { spans, inner, .. } = resp {
             self.server_spans = spans;
             resp = *inner;
         }
+        Ok(resp)
+    }
+
+    fn call(&mut self, req: &Request) -> Result<Response> {
+        self.send(req)?;
+        self.flush()?;
+        let resp = self.recv()?;
         if let Response::Error { message } = &resp {
             bail!("server error: {message}");
         }
@@ -133,6 +177,12 @@ impl Client {
             bail!(
                 "server is a read-only follower; send writes (and state \
                  fetches) to its leader at {leader}"
+            );
+        }
+        if let Response::Throttled { retry_after_ms, message } = &resp {
+            bail!(
+                "server throttled the request: {message} (retry in \
+                 {retry_after_ms} ms)"
             );
         }
         Ok(resp)

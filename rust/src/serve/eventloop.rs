@@ -1,0 +1,989 @@
+//! The non-blocking connection engine behind [`super::Server`].
+//!
+//! One reactor thread owns every connection: it polls for readiness
+//! (`poll(2)` through a minimal FFI shim — std-only, no mio), reads
+//! into a growable per-connection [`Decoder`] buffer, parses as many
+//! complete frames as arrived (request pipelining), and hands each
+//! frame to a fixed worker pool sized to cores. Workers run the
+//! protocol handler and hand back a complete reply frame; the reactor
+//! emits replies in request order through per-connection reply slots
+//! and drains them with vectored writes. A socketpair wake token
+//! retires the old "throwaway connection" shutdown hack:
+//! `Server::shutdown` just sets the stop flag and wakes the loop.
+//!
+//! Admission control happens at parse time, before any worker is
+//! involved: a per-connection token bucket (`serve.rate_limit` req/s),
+//! a per-connection in-flight quota (`serve.max_inflight` parsed but
+//! unanswered frames), and a brownout watermark
+//! (`serve.brownout_depth`) that sheds ingest frames — reads are never
+//! shed — while any `shard.<s>.queue_depth` gauge sits at or above the
+//! watermark. Refusals answer in-band with a `Throttled` frame
+//! carrying a retry-after hint; the connection survives. With every
+//! quota off, backpressure is still bounded: a connection more than
+//! [`PARSE_AHEAD`] frames ahead of its replies (or holding more than
+//! [`WQ_HIGH`] queued reply bytes) simply stops being read until the
+//! backlog drains, which surfaces to the client as ordinary TCP flow
+//! control.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::protocol::{begin_frame, end_frame, is_ingest_frame, Decoder, Response};
+use super::service::VqService;
+
+#[cfg(unix)]
+use std::os::unix::io::AsRawFd;
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+
+/// A frame handler: decodes `payload` (arrived at `Instant`), appends
+/// exactly one complete reply frame — length prefix included — to
+/// `out`, and returns `true`. Returning `false` means no frame could
+/// be produced (reply over the frame cap, or the handler panicked);
+/// the reactor then drops the connection after flushing already-queued
+/// replies, which is the same fate the blocking server handed such
+/// connections.
+pub(crate) type Handler = Arc<dyn Fn(&[u8], Instant, &mut Vec<u8>) -> bool + Send + Sync>;
+
+/// Frames parsed but not yet answered per connection before the
+/// reactor stops reading from it. Quotas, when armed, throttle in-band
+/// well before this.
+const PARSE_AHEAD: usize = 64;
+/// Queued reply bytes per connection before reads pause.
+const WQ_HIGH: usize = 4 << 20;
+/// Queued reply frames covered by one vectored write.
+const WRITE_BATCH: usize = 8;
+/// How long shutdown waits for in-flight work to finish and flush.
+const DRAIN_DEADLINE: Duration = Duration::from_secs(5);
+/// Minimum spare capacity asked of the decoder per read.
+const READ_CHUNK: usize = 16 << 10;
+/// Recycled-buffer pool bounds: entries kept, and the per-buffer
+/// capacity above which a buffer is dropped instead of pooled.
+const POOL_MAX: usize = 1024;
+const POOL_BUF_CAP: usize = 1 << 20;
+
+/// Minimal readiness shim. On unix this is `poll(2)` through a
+/// hand-rolled FFI declaration (std exposes no readiness API); on
+/// other hosts it degrades to "everything you asked about is ready"
+/// after a ~1ms tick, which keeps the engine correct — nonblocking
+/// reads and writes just return `WouldBlock` — at the cost of an idle
+/// spin.
+mod sys {
+    #[cfg(not(unix))]
+    pub use fallback_impl::*;
+    #[cfg(unix)]
+    pub use unix_impl::*;
+
+    #[cfg(unix)]
+    mod unix_impl {
+        pub use std::os::unix::io::RawFd;
+
+        pub const POLLIN: i16 = 0x001;
+        pub const POLLOUT: i16 = 0x004;
+        pub const POLLERR: i16 = 0x008;
+        pub const POLLHUP: i16 = 0x010;
+        pub const POLLNVAL: i16 = 0x020;
+
+        #[repr(C)]
+        pub struct PollFd {
+            pub fd: RawFd,
+            pub events: i16,
+            pub revents: i16,
+        }
+
+        #[cfg(target_os = "linux")]
+        type Nfds = std::ffi::c_ulong;
+        #[cfg(not(target_os = "linux"))]
+        type Nfds = std::ffi::c_uint;
+
+        extern "C" {
+            fn poll(
+                fds: *mut PollFd,
+                nfds: Nfds,
+                timeout: std::ffi::c_int,
+            ) -> std::ffi::c_int;
+        }
+
+        /// `poll(2)` with EINTR retried; `timeout_ms < 0` blocks until
+        /// something is ready.
+        pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
+            loop {
+                let rc =
+                    unsafe { poll(fds.as_mut_ptr(), fds.len() as Nfds, timeout_ms) };
+                if rc >= 0 {
+                    return Ok(rc as usize);
+                }
+                let err = std::io::Error::last_os_error();
+                if err.kind() != std::io::ErrorKind::Interrupted {
+                    return Err(err);
+                }
+            }
+        }
+    }
+
+    #[cfg(not(unix))]
+    mod fallback_impl {
+        pub type RawFd = i32;
+
+        pub const POLLIN: i16 = 0x001;
+        pub const POLLOUT: i16 = 0x004;
+        pub const POLLERR: i16 = 0x008;
+        pub const POLLHUP: i16 = 0x010;
+        pub const POLLNVAL: i16 = 0x020;
+
+        pub struct PollFd {
+            pub fd: RawFd,
+            pub events: i16,
+            pub revents: i16,
+        }
+
+        pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
+            let tick = if timeout_ms < 0 { 1 } else { i64::from(timeout_ms).min(1) };
+            if tick > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(tick as u64));
+            }
+            let mut ready = 0;
+            for f in fds.iter_mut() {
+                f.revents = f.events;
+                if f.revents != 0 {
+                    ready += 1;
+                }
+            }
+            Ok(ready)
+        }
+    }
+}
+
+#[cfg(not(unix))]
+trait AsRawFd {
+    fn as_raw_fd(&self) -> sys::RawFd;
+}
+#[cfg(not(unix))]
+impl AsRawFd for TcpListener {
+    fn as_raw_fd(&self) -> sys::RawFd {
+        -1
+    }
+}
+#[cfg(not(unix))]
+impl AsRawFd for TcpStream {
+    fn as_raw_fd(&self) -> sys::RawFd {
+        -1
+    }
+}
+
+/// Wakes the reactor from another thread: worker completions and
+/// `Server::shutdown` both go through this instead of the old
+/// throwaway `TcpStream::connect` hack.
+pub(crate) struct Waker {
+    /// Write end of the wake socketpair; the reactor polls the read
+    /// end. On non-unix hosts the fallback loop self-ticks, so there
+    /// is nothing to signal.
+    #[cfg(unix)]
+    tx: UnixStream,
+}
+
+impl Waker {
+    pub(crate) fn wake(&self) {
+        // A full pipe means a wake is already pending — both are fine.
+        #[cfg(unix)]
+        {
+            let _ = (&self.tx).write(&[1u8]);
+        }
+    }
+}
+
+/// The reactor-side read end of the wake channel.
+pub(crate) struct WakeRx {
+    #[cfg(unix)]
+    rx: UnixStream,
+}
+
+pub(crate) fn wake_pair() -> Result<(Arc<Waker>, WakeRx)> {
+    #[cfg(unix)]
+    {
+        let (rx, tx) =
+            UnixStream::pair().context("creating the reactor wake socketpair")?;
+        rx.set_nonblocking(true)
+            .context("making the wake read end nonblocking")?;
+        tx.set_nonblocking(true)
+            .context("making the wake write end nonblocking")?;
+        Ok((Arc::new(Waker { tx }), WakeRx { rx }))
+    }
+    #[cfg(not(unix))]
+    {
+        Ok((Arc::new(Waker {}), WakeRx {}))
+    }
+}
+
+/// A parsed request on its way to the worker pool.
+struct Job {
+    conn: usize,
+    gen: u64,
+    seq: u64,
+    arrived: Instant,
+    payload: Vec<u8>,
+    out: Vec<u8>,
+}
+
+/// A finished job on its way back to the reactor.
+struct Done {
+    conn: usize,
+    gen: u64,
+    seq: u64,
+    payload: Vec<u8>,
+    out: Vec<u8>,
+    ok: bool,
+}
+
+/// Recycles payload and reply buffers so the steady-state wire path
+/// allocates nothing per frame.
+struct Pool(Vec<Vec<u8>>);
+
+impl Pool {
+    fn get(&mut self) -> Vec<u8> {
+        let mut buf = self.0.pop().unwrap_or_default();
+        buf.clear();
+        buf
+    }
+
+    fn put(&mut self, buf: Vec<u8>) {
+        if self.0.len() < POOL_MAX && buf.capacity() <= POOL_BUF_CAP {
+            self.0.push(buf);
+        }
+    }
+}
+
+/// Refill-and-take on a per-connection token bucket whose capacity is
+/// one second's worth of `rate`. `None` admits the request; `Some`
+/// carries the milliseconds until a token will exist.
+fn take_token(tokens: &mut f64, refilled: &mut Instant, rate: u64) -> Option<u64> {
+    if rate == 0 {
+        return None;
+    }
+    let now = Instant::now();
+    let dt = now.duration_since(*refilled).as_secs_f64();
+    *tokens = (*tokens + dt * rate as f64).min(rate as f64);
+    *refilled = now;
+    if *tokens >= 1.0 {
+        *tokens -= 1.0;
+        None
+    } else {
+        let wait_ms = (1.0 - *tokens) / rate as f64 * 1000.0;
+        Some(wait_ms.ceil().max(1.0) as u64)
+    }
+}
+
+/// Per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    /// Guards against completions for a previous occupant of this
+    /// slab slot.
+    gen: u64,
+    dec: Decoder,
+    /// Complete reply frames awaiting the socket, oldest first.
+    wq: VecDeque<Vec<u8>>,
+    /// Bytes of `wq[0]` already written.
+    wq_off: usize,
+    wq_bytes: usize,
+    /// Sequence number the next parsed frame gets.
+    seq_next: u64,
+    /// Sequence number the next emitted reply must carry.
+    emit_next: u64,
+    /// Reply frames indexed by `seq - emit_next`; `None` is a hole
+    /// whose answer is still being computed.
+    slots: VecDeque<Option<Vec<u8>>>,
+    /// Parsed request payloads awaiting their turn on the worker pool.
+    /// Dispatch is strictly serial per connection — like the blocking
+    /// server, pipelined requests never reorder service side effects.
+    pending: VecDeque<(u64, Instant, Vec<u8>)>,
+    dispatched: bool,
+    /// No more reads: peer EOF, a framing error, or a fatal reply
+    /// failure. The connection closes once outstanding work flushes.
+    closing: bool,
+    /// Token bucket for `rate_limit`.
+    tokens: f64,
+    refilled: Instant,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, gen: u64, rate: u64) -> Self {
+        Conn {
+            stream,
+            gen,
+            dec: Decoder::new(),
+            wq: VecDeque::new(),
+            wq_off: 0,
+            wq_bytes: 0,
+            seq_next: 0,
+            emit_next: 0,
+            slots: VecDeque::new(),
+            pending: VecDeque::new(),
+            dispatched: false,
+            closing: false,
+            tokens: rate as f64,
+            refilled: Instant::now(),
+        }
+    }
+
+    /// Parsed-but-unanswered frames.
+    fn backlog(&self) -> usize {
+        (self.seq_next - self.emit_next) as usize
+    }
+
+    fn wants_read(&self, stopping: bool) -> bool {
+        !stopping
+            && !self.closing
+            && self.backlog() < PARSE_AHEAD
+            && self.wq_bytes < WQ_HIGH
+    }
+
+    /// Nothing queued, in flight, or waiting to flush.
+    fn idle(&self) -> bool {
+        self.pending.is_empty() && !self.dispatched && self.wq.is_empty()
+    }
+
+    /// Record `frame` as the reply for `seq`, then emit every reply
+    /// that is now unblocked, in request order.
+    fn slot(&mut self, seq: u64, frame: Vec<u8>) {
+        let idx = (seq - self.emit_next) as usize;
+        while self.slots.len() <= idx {
+            self.slots.push_back(None);
+        }
+        self.slots[idx] = Some(frame);
+        while matches!(self.slots.front(), Some(Some(_))) {
+            let ready = self.slots.pop_front().unwrap().unwrap();
+            self.emit_next += 1;
+            self.wq_bytes += ready.len();
+            self.wq.push_back(ready);
+        }
+    }
+}
+
+fn conn_closable(conn: &Conn) -> bool {
+    conn.closing && conn.idle()
+}
+
+/// Admission verdict for one parsed frame.
+enum Admit {
+    /// Buffer holds a copy of the frame payload, ready to dispatch.
+    Run(Vec<u8>),
+    Throttle { retry_ms: u64, message: String },
+    /// Framing error — drop the connection without a reply.
+    Bad,
+    /// No complete frame buffered.
+    Empty,
+}
+
+enum Tok {
+    Listener,
+    #[cfg(unix)]
+    Waker,
+    Conn(usize),
+}
+
+/// Run the event loop until `stop` is observed; drains in-flight work
+/// (bounded by [`DRAIN_DEADLINE`]), closes every connection, and joins
+/// the worker pool before returning. Fatal reactor errors land in the
+/// journal — the serving process keeps running so an operator can
+/// still reach `Metrics` over a fresh bind.
+pub(crate) fn run(
+    listener: TcpListener,
+    service: Arc<VqService>,
+    handler: Handler,
+    stop: Arc<AtomicBool>,
+    waker: Arc<Waker>,
+    wake_rx: WakeRx,
+) {
+    if let Err(e) = run_inner(listener, &service, handler, &stop, &waker, wake_rx) {
+        service
+            .telemetry()
+            .journal()
+            .error("serve.reactor", format!("event loop failed: {e:#}"));
+    }
+}
+
+fn run_inner(
+    listener: TcpListener,
+    service: &Arc<VqService>,
+    handler: Handler,
+    stop: &AtomicBool,
+    waker: &Arc<Waker>,
+    wake_rx: WakeRx,
+) -> Result<()> {
+    listener
+        .set_nonblocking(true)
+        .context("making the serve listener nonblocking")?;
+
+    let worker_n = match service.io_workers() {
+        0 => thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        n => n,
+    };
+    let (job_tx, job_rx) = mpsc::channel::<Job>();
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    let (done_tx, done_rx) = mpsc::channel::<Done>();
+    let mut workers = Vec::with_capacity(worker_n);
+    for w in 0..worker_n {
+        let rx = Arc::clone(&job_rx);
+        let tx = done_tx.clone();
+        let handler = Arc::clone(&handler);
+        let waker = Arc::clone(waker);
+        let t = thread::Builder::new()
+            .name(format!("dalvq-io-{w}"))
+            .spawn(move || worker_loop(&rx, &tx, &handler, &waker))
+            .context("spawning an io worker")?;
+        workers.push(t);
+    }
+    drop(done_tx);
+
+    let mut reactor = Reactor {
+        listener,
+        service: Arc::clone(service),
+        wake_rx,
+        job_tx: Some(job_tx),
+        done_rx,
+        conns: Vec::new(),
+        free: Vec::new(),
+        next_gen: 0,
+        pool: Pool(Vec::new()),
+        in_brownout: false,
+        rate_limit: service.rate_limit(),
+        max_inflight: service.max_inflight(),
+        brownout_depth: service.brownout_depth(),
+    };
+    let outcome = reactor.run(stop);
+    reactor.teardown();
+    for t in workers {
+        let _ = t.join();
+    }
+    outcome
+}
+
+fn worker_loop(
+    rx: &Mutex<Receiver<Job>>,
+    tx: &Sender<Done>,
+    handler: &Handler,
+    waker: &Waker,
+) {
+    loop {
+        let job = {
+            let rx = rx.lock().unwrap_or_else(|e| e.into_inner());
+            rx.recv()
+        };
+        let Ok(job) = job else { return };
+        let Job { conn, gen, seq, arrived, payload, mut out } = job;
+        let ok = catch_unwind(AssertUnwindSafe(|| handler(&payload, arrived, &mut out)))
+            .unwrap_or(false);
+        let done = Done { conn, gen, seq, payload, out, ok };
+        if tx.send(done).is_err() {
+            return;
+        }
+        waker.wake();
+    }
+}
+
+struct Reactor {
+    listener: TcpListener,
+    service: Arc<VqService>,
+    wake_rx: WakeRx,
+    /// `Some` while accepting work; dropped at teardown so idle
+    /// workers see a closed queue and exit.
+    job_tx: Option<Sender<Job>>,
+    done_rx: Receiver<Done>,
+    /// Connection slab: `free` lists vacant indices for reuse, `gen`
+    /// inside each [`Conn`] disambiguates successive occupants.
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    next_gen: u64,
+    pool: Pool,
+    in_brownout: bool,
+    rate_limit: u64,
+    max_inflight: usize,
+    brownout_depth: u64,
+}
+
+impl Reactor {
+    fn run(&mut self, stop: &AtomicBool) -> Result<()> {
+        let mut fds: Vec<sys::PollFd> = Vec::new();
+        let mut toks: Vec<Tok> = Vec::new();
+        let mut drain_deadline: Option<Instant> = None;
+        loop {
+            let stopping = stop.load(Ordering::Acquire);
+            if stopping {
+                let deadline = *drain_deadline
+                    .get_or_insert_with(|| Instant::now() + DRAIN_DEADLINE);
+                self.drain_done();
+                let busy = self.conns.iter().flatten().any(|c| !c.idle());
+                if !busy || Instant::now() >= deadline {
+                    return Ok(());
+                }
+            }
+
+            fds.clear();
+            toks.clear();
+            for (i, slot) in self.conns.iter().enumerate() {
+                let Some(conn) = slot else { continue };
+                let mut events = 0i16;
+                if conn.wants_read(stopping) {
+                    events |= sys::POLLIN;
+                }
+                if !conn.wq.is_empty() {
+                    events |= sys::POLLOUT;
+                }
+                if events != 0 {
+                    fds.push(sys::PollFd {
+                        fd: conn.stream.as_raw_fd(),
+                        events,
+                        revents: 0,
+                    });
+                    toks.push(Tok::Conn(i));
+                }
+            }
+            #[cfg(unix)]
+            {
+                fds.push(sys::PollFd {
+                    fd: self.wake_rx.rx.as_raw_fd(),
+                    events: sys::POLLIN,
+                    revents: 0,
+                });
+                toks.push(Tok::Waker);
+            }
+            // The listener comes last so connection events in this
+            // batch are handled before a freed slab slot can be
+            // reoccupied by a fresh accept.
+            if !stopping {
+                fds.push(sys::PollFd {
+                    fd: self.listener.as_raw_fd(),
+                    events: sys::POLLIN,
+                    revents: 0,
+                });
+                toks.push(Tok::Listener);
+            }
+
+            let timeout_ms = if stopping { 50 } else { -1 };
+            sys::poll_fds(&mut fds, timeout_ms)
+                .context("polling for socket readiness")?;
+
+            let cycle_start = Instant::now();
+            self.drain_wakes();
+            self.drain_done();
+            for (k, tok) in toks.iter().enumerate() {
+                let revents = fds[k].revents;
+                if revents == 0 {
+                    continue;
+                }
+                match *tok {
+                    #[cfg(unix)]
+                    Tok::Waker => {}
+                    Tok::Listener => self.accept_ready(),
+                    Tok::Conn(i) => self.conn_ready(i, revents, stopping),
+                }
+            }
+            self.service
+                .tel()
+                .readiness_us
+                .record(cycle_start.elapsed().as_micros() as u64);
+        }
+    }
+
+    fn drain_wakes(&mut self) {
+        #[cfg(unix)]
+        {
+            let mut sink = [0u8; 64];
+            while matches!((&self.wake_rx.rx).read(&mut sink), Ok(n) if n > 0) {}
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let _ = stream.set_nodelay(true);
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    self.service.tel().conn_accepted.inc();
+                    self.service.tel().conn_active.add(1);
+                    self.next_gen += 1;
+                    let conn = Conn::new(stream, self.next_gen, self.rate_limit);
+                    match self.free.pop() {
+                        Some(i) => self.conns[i] = Some(conn),
+                        None => self.conns.push(Some(conn)),
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                // Transient accept failures (fd exhaustion, an aborted
+                // handshake): retry on the next readiness cycle
+                // instead of spinning here.
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn conn_ready(&mut self, i: usize, revents: i16, stopping: bool) {
+        let Some(mut conn) = self.conns[i].take() else { return };
+        if revents & (sys::POLLERR | sys::POLLNVAL) != 0 {
+            self.close(conn);
+            self.free.push(i);
+            return;
+        }
+        let mut dead = false;
+        if revents & (sys::POLLIN | sys::POLLHUP) != 0 && conn.wants_read(stopping) {
+            dead = !self.read_and_parse(i, &mut conn);
+        }
+        if !dead && !conn.wq.is_empty() {
+            dead = self.flush(&mut conn).is_err();
+        }
+        if dead || conn_closable(&conn) {
+            self.close(conn);
+            self.free.push(i);
+        } else {
+            self.conns[i] = Some(conn);
+        }
+    }
+
+    /// Read until `WouldBlock`, parsing and admitting every complete
+    /// frame along the way. Returns `false` on a socket error that
+    /// warrants dropping the connection immediately.
+    fn read_and_parse(&mut self, i: usize, conn: &mut Conn) -> bool {
+        loop {
+            let spare = conn.dec.spare(READ_CHUNK);
+            match conn.stream.read(spare) {
+                Ok(0) => {
+                    conn.closing = true;
+                    return true;
+                }
+                Ok(n) => conn.dec.advance(n),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+            if !self.parse_frames(i, conn) {
+                return true; // framing error: closing is set, stop reading
+            }
+            if !conn.wants_read(false) {
+                return true; // backlog or write-queue watermark reached
+            }
+        }
+    }
+
+    /// Parse every complete frame currently buffered, routing each
+    /// through admission. Returns `false` when the stream is
+    /// undecodable and the connection should stop reading.
+    fn parse_frames(&mut self, i: usize, conn: &mut Conn) -> bool {
+        loop {
+            if conn.backlog() >= PARSE_AHEAD || conn.wq_bytes >= WQ_HIGH {
+                return true;
+            }
+            match self.admit(conn) {
+                Admit::Empty => return true,
+                Admit::Bad => {
+                    // The blocking server dropped the connection on a
+                    // framing error without a reply; same here, after
+                    // queued replies flush.
+                    conn.closing = true;
+                    return false;
+                }
+                Admit::Throttle { retry_ms, message } => {
+                    let seq = conn.seq_next;
+                    conn.seq_next += 1;
+                    let frame = self.throttled_frame(retry_ms, message);
+                    conn.slot(seq, frame);
+                    self.service.tel().conn_rejected.inc();
+                }
+                Admit::Run(payload) => {
+                    let seq = conn.seq_next;
+                    conn.seq_next += 1;
+                    conn.pending.push_back((seq, Instant::now(), payload));
+                    self.try_dispatch(i, conn);
+                }
+            }
+        }
+    }
+
+    /// Pull the next frame out of the connection's decoder and decide
+    /// its fate. Quota checks run in the declared severity order: rate
+    /// first, then the in-flight cap, then the brownout watermark
+    /// (ingest frames only — reads are never shed).
+    fn admit(&mut self, conn: &mut Conn) -> Admit {
+        let payload = match conn.dec.next_frame() {
+            Ok(Some(payload)) => payload,
+            Ok(None) => return Admit::Empty,
+            Err(_) => return Admit::Bad,
+        };
+        if let Some(retry_ms) =
+            take_token(&mut conn.tokens, &mut conn.refilled, self.rate_limit)
+        {
+            return Admit::Throttle {
+                retry_ms,
+                message: format!(
+                    "rate quota exceeded: {} requests/s per connection",
+                    self.rate_limit
+                ),
+            };
+        }
+        if self.max_inflight > 0
+            && conn.pending.len() + usize::from(conn.dispatched) >= self.max_inflight
+        {
+            return Admit::Throttle {
+                retry_ms: 1,
+                message: format!(
+                    "in-flight quota exceeded: {} requests per connection",
+                    self.max_inflight
+                ),
+            };
+        }
+        if self.brownout_depth > 0 && is_ingest_frame(payload) {
+            let depth = self.service.max_queue_depth();
+            let shedding = depth >= self.brownout_depth;
+            if shedding != self.in_brownout {
+                self.in_brownout = shedding;
+                let journal = self.service.telemetry().journal();
+                if shedding {
+                    journal.warn(
+                        "brownout.enter",
+                        format!(
+                            "shedding ingest: shard queue depth {depth} at watermark {}",
+                            self.brownout_depth
+                        ),
+                    );
+                } else {
+                    journal.info(
+                        "brownout.exit",
+                        format!(
+                            "ingest restored: shard queue depth {depth} below watermark {}",
+                            self.brownout_depth
+                        ),
+                    );
+                }
+            }
+            if shedding {
+                return Admit::Throttle {
+                    retry_ms: 100,
+                    message: format!(
+                        "brownout: ingest shed at shard queue depth {depth} (watermark {})",
+                        self.brownout_depth
+                    ),
+                };
+            }
+        }
+        let mut buf = self.pool.get();
+        buf.extend_from_slice(payload);
+        Admit::Run(buf)
+    }
+
+    fn throttled_frame(&mut self, retry_after_ms: u64, message: String) -> Vec<u8> {
+        let mut out = self.pool.get();
+        let at = begin_frame(&mut out);
+        Response::Throttled { retry_after_ms, message }.encode_into(&mut out);
+        end_frame(&mut out, at).expect("throttled reply fits the frame cap");
+        out
+    }
+
+    /// Hand the connection's next pending frame to the worker pool, if
+    /// none of its frames is already there.
+    fn try_dispatch(&mut self, i: usize, conn: &mut Conn) {
+        if conn.dispatched {
+            return;
+        }
+        let Some((seq, arrived, payload)) = conn.pending.pop_front() else {
+            return;
+        };
+        let Some(job_tx) = &self.job_tx else { return };
+        let job = Job {
+            conn: i,
+            gen: conn.gen,
+            seq,
+            arrived,
+            payload,
+            out: self.pool.get(),
+        };
+        if job_tx.send(job).is_ok() {
+            conn.dispatched = true;
+        }
+    }
+
+    fn drain_done(&mut self) {
+        while let Ok(done) = self.done_rx.try_recv() {
+            self.pool.put(done.payload);
+            let live = self
+                .conns
+                .get(done.conn)
+                .and_then(|slot| slot.as_ref())
+                .is_some_and(|c| c.gen == done.gen);
+            if !live {
+                // The connection closed (or its slot was reused) while
+                // this job was in flight; just recycle the buffers.
+                self.pool.put(done.out);
+                continue;
+            }
+            let mut conn = self.conns[done.conn].take().unwrap();
+            conn.dispatched = false;
+            if done.ok {
+                conn.slot(done.seq, done.out);
+                self.try_dispatch(done.conn, &mut conn);
+            } else {
+                // The handler could not produce a frame (reply over
+                // the cap, or a panic): drop the connection once its
+                // queued replies flush, discarding unanswered pipeline
+                // work — the blocking server died at the same point.
+                self.pool.put(done.out);
+                conn.closing = true;
+                for (_, _, buf) in conn.pending.drain(..) {
+                    self.pool.put(buf);
+                }
+                for slot in conn.slots.drain(..) {
+                    if let Some(buf) = slot {
+                        self.pool.put(buf);
+                    }
+                }
+            }
+            let dead = !conn.wq.is_empty() && self.flush(&mut conn).is_err();
+            if dead || conn_closable(&conn) {
+                self.close(conn);
+                self.free.push(done.conn);
+            } else {
+                self.conns[done.conn] = Some(conn);
+            }
+        }
+    }
+
+    /// Vectored-write the reply queue until it empties or the socket
+    /// would block.
+    fn flush(&mut self, conn: &mut Conn) -> std::io::Result<()> {
+        use std::io::IoSlice;
+        while !conn.wq.is_empty() {
+            let mut iov: [IoSlice; WRITE_BATCH] =
+                std::array::from_fn(|_| IoSlice::new(&[]));
+            let mut cnt = 0;
+            for (k, frame) in conn.wq.iter().take(WRITE_BATCH).enumerate() {
+                iov[k] = IoSlice::new(if k == 0 { &frame[conn.wq_off..] } else { frame });
+                cnt += 1;
+            }
+            let wrote = match conn.stream.write_vectored(&iov[..cnt]) {
+                Ok(0) => return Err(std::io::ErrorKind::WriteZero.into()),
+                Ok(n) => n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            };
+            conn.wq_bytes -= wrote;
+            let mut left = wrote;
+            while left > 0 {
+                let front_rem = conn.wq[0].len() - conn.wq_off;
+                if left >= front_rem {
+                    left -= front_rem;
+                    conn.wq_off = 0;
+                    let done = conn.wq.pop_front().unwrap();
+                    self.pool.put(done);
+                } else {
+                    conn.wq_off += left;
+                    left = 0;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn close(&mut self, mut conn: Conn) {
+        self.service.tel().conn_active.sub(1);
+        for (_, _, buf) in conn.pending.drain(..) {
+            self.pool.put(buf);
+        }
+        for slot in conn.slots.drain(..) {
+            if let Some(buf) = slot {
+                self.pool.put(buf);
+            }
+        }
+        for buf in conn.wq.drain(..) {
+            self.pool.put(buf);
+        }
+        // `conn.stream` drops here, closing the socket.
+    }
+
+    /// Last act after the loop exits: flush whatever the drain phase
+    /// queued, close everything, and retire the job queue so workers
+    /// exit. Late completions die with the channel.
+    fn teardown(&mut self) {
+        let conns: Vec<Conn> = self.conns.iter_mut().filter_map(Option::take).collect();
+        for mut conn in conns {
+            let _ = self.flush(&mut conn);
+            self.close(conn);
+        }
+        self.job_tx = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_bucket_admits_rate_then_throttles() {
+        let mut tokens = 2.0;
+        let mut refilled = Instant::now();
+        assert!(take_token(&mut tokens, &mut refilled, 2).is_none());
+        assert!(take_token(&mut tokens, &mut refilled, 2).is_none());
+        let retry = take_token(&mut tokens, &mut refilled, 2)
+            .expect("third back-to-back request exceeds a 2/s bucket");
+        assert!((1..=501).contains(&retry), "retry hint {retry} ms out of range");
+        // A disabled limiter admits everything without touching state.
+        let mut tokens = 0.0;
+        assert!(take_token(&mut tokens, &mut refilled, 0).is_none());
+    }
+
+    #[test]
+    fn pool_recycles_cleared_buffers_and_caps_growth() {
+        let mut pool = Pool(Vec::new());
+        let mut buf = pool.get();
+        buf.extend_from_slice(b"payload");
+        let cap = buf.capacity();
+        pool.put(buf);
+        let again = pool.get();
+        assert!(again.is_empty());
+        assert_eq!(again.capacity(), cap, "recycled buffer keeps its allocation");
+        // Oversized buffers are dropped rather than hoarded.
+        pool.put(vec![0u8; POOL_BUF_CAP + 1]);
+        assert!(pool.0.is_empty());
+    }
+
+    #[test]
+    fn reply_slots_emit_in_request_order() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let mut conn = Conn::new(stream, 1, 0);
+        conn.seq_next = 3;
+        conn.slot(1, vec![1]);
+        conn.slot(2, vec![2]);
+        assert!(conn.wq.is_empty(), "seq 0 is still a hole");
+        conn.slot(0, vec![0]);
+        let order: Vec<u8> = conn.wq.iter().map(|f| f[0]).collect();
+        assert_eq!(order, vec![0, 1, 2]);
+        assert_eq!(conn.emit_next, 3);
+        assert_eq!(conn.wq_bytes, 3);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn poll_shim_reports_readiness_and_the_waker_unblocks_it() {
+        use std::os::unix::io::AsRawFd;
+        let (waker, wake_rx) = wake_pair().unwrap();
+        let mut fds = [sys::PollFd {
+            fd: wake_rx.rx.as_raw_fd(),
+            events: sys::POLLIN,
+            revents: 0,
+        }];
+        assert_eq!(sys::poll_fds(&mut fds, 0).unwrap(), 0, "nothing pending yet");
+        waker.wake();
+        assert_eq!(sys::poll_fds(&mut fds, 1000).unwrap(), 1);
+        assert_ne!(fds[0].revents & sys::POLLIN, 0);
+    }
+}

@@ -3,17 +3,18 @@
 //! percentiles and a throughput curve recorded into the crate's standard
 //! metrics types ([`Series`] / [`FigureReport`]).
 
+use std::collections::VecDeque;
 use std::sync::{Arc, Barrier};
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::data::MixtureSpec;
 use crate::metrics::{FigureReport, Series};
 use crate::util::Rng;
 
 use super::client::Client;
-use super::protocol::WireSpan;
+use super::protocol::{Request, Response, WireSpan};
 use super::traceview;
 
 /// Workload shape.
@@ -25,6 +26,12 @@ pub struct LoadSpec {
     pub requests_per_conn: usize,
     /// Points per request batch.
     pub batch_points: usize,
+    /// Requests each connection keeps in flight before reading replies
+    /// (`dalvq loadtest --pipeline`): 1 is the classic blocking
+    /// request/reply loop; N > 1 queues up to N requests on the wire and
+    /// drains replies in order, exercising the server's pipelined read
+    /// path. Latencies then measure send-to-reply including queueing.
+    pub pipeline: usize,
     /// Fraction of requests that are ingest (writes); the rest rotate
     /// through encode / nearest / distortion evenly.
     pub ingest_frac: f64,
@@ -63,6 +70,7 @@ impl Default for LoadSpec {
             connections: 8,
             requests_per_conn: 200,
             batch_points: 64,
+            pipeline: 1,
             ingest_frac: 0.25,
             skew: 0.0,
             read_only: false,
@@ -82,6 +90,16 @@ impl LoadSpec {
         {
             return Err(anyhow!(
                 "loadtest needs connections, requests and batch_points >= 1"
+            ));
+        }
+        if self.pipeline == 0 {
+            return Err(anyhow!("pipeline must be >= 1 (1 = no pipelining)"));
+        }
+        if self.trace && self.pipeline > 1 {
+            return Err(anyhow!(
+                "trace sampling needs pipeline = 1: a pipelined reply \
+                 stream cannot attribute server spans to the request \
+                 that minted the trace id"
             ));
         }
         if !(0.0..=1.0).contains(&self.ingest_frac) {
@@ -188,6 +206,11 @@ pub struct LoadReport {
     pub ops: OpCounts,
     /// Ingested points the server shed (admission control).
     pub points_shed: u64,
+    /// Requests the server answered `Throttled` (admission control:
+    /// quota or brownout refusals). Counted toward `requests` and the
+    /// latency percentiles — a refusal is a completed round trip — but
+    /// not toward the per-op counts, since no work ran.
+    pub throttled: u64,
     /// Wall-clock seconds from the start gate to the last join.
     pub wall_secs: f64,
     /// Completed requests per second over the whole run.
@@ -260,6 +283,7 @@ pub fn run_load(addr: &str, spec: &LoadSpec, mixture: &MixtureSpec) -> Result<Lo
     let mut stamps: Vec<f64> = Vec::new();
     let mut ops = OpCounts::default();
     let mut points_shed = 0u64;
+    let mut throttled = 0u64;
     let mut trace_sample: Option<TraceSample> = None;
     for j in joins {
         let conn = j.join().map_err(|_| anyhow!("load connection panicked"))??;
@@ -270,6 +294,7 @@ pub fn run_load(addr: &str, spec: &LoadSpec, mixture: &MixtureSpec) -> Result<Lo
         ops.distortion += conn.ops.distortion;
         ops.ingest += conn.ops.ingest;
         points_shed += conn.points_shed;
+        throttled += conn.throttled;
         if let Some(s) = conn.trace_sample {
             let slower = trace_sample
                 .as_ref()
@@ -295,6 +320,7 @@ pub fn run_load(addr: &str, spec: &LoadSpec, mixture: &MixtureSpec) -> Result<Lo
         requests,
         ops,
         points_shed,
+        throttled,
         wall_secs,
         throughput_rps: requests as f64 / wall_secs,
         points_per_sec: (requests * spec.batch_points as u64) as f64 / wall_secs,
@@ -345,6 +371,8 @@ struct ConnOutcome {
     stamps: Vec<f64>,
     ops: OpCounts,
     points_shed: u64,
+    /// Requests answered `Throttled` by admission control.
+    throttled: u64,
     /// This connection's slowest traced request (`spec.trace` only).
     trace_sample: Option<TraceSample>,
 }
@@ -370,10 +398,15 @@ fn drive_connection(
         stamps: Vec::with_capacity(spec.requests_per_conn),
         ops: OpCounts::default(),
         points_shed: 0,
+        throttled: 0,
         trace_sample: None,
     };
     gate.wait();
     let mut client = client?;
+    if spec.pipeline > 1 {
+        drive_pipelined(client, spec, &pool, dim, &mut rng, conn_id, &mut out)?;
+        return Ok(out);
+    }
     let t0 = Instant::now();
     let mut read_rotor = conn_id; // stagger read ops across connections
     for i in 0..spec.requests_per_conn {
@@ -431,17 +464,85 @@ fn drive_connection(
     Ok(out)
 }
 
+/// The windowed pipelining driver (`spec.pipeline > 1`): keep up to
+/// `pipeline` requests queued on the connection, then drain replies in
+/// order — the server answers pipelined frames strictly in request
+/// order, so reply K always belongs to the K-th send. Latencies measure
+/// send-to-reply and so include the queueing a deep window creates;
+/// `Throttled` refusals are counted, not failed, since admission
+/// control answering in-band is exactly what a pipelined burst probes.
+fn drive_pipelined(
+    mut client: Client,
+    spec: &LoadSpec,
+    pool: &[f32],
+    dim: usize,
+    rng: &mut Rng,
+    conn_id: usize,
+    out: &mut ConnOutcome,
+) -> Result<()> {
+    let pool_points = pool.len() / dim;
+    let t0 = Instant::now();
+    let mut read_rotor = conn_id;
+    let mut inflight: VecDeque<Instant> = VecDeque::new();
+    let mut issued = 0usize;
+    let n = spec.requests_per_conn;
+    while issued < n || !inflight.is_empty() {
+        while issued < n && inflight.len() < spec.pipeline {
+            let start = rng.usize(pool_points - spec.batch_points + 1);
+            let batch =
+                &pool[start * dim..(start + spec.batch_points) * dim];
+            let req = match choose_op(spec, rng, &mut read_rotor) {
+                Op::Ingest => Request::Ingest { points: batch.to_vec() },
+                Op::Encode => Request::Encode { points: batch.to_vec() },
+                Op::Nearest => Request::Nearest { points: batch.to_vec() },
+                Op::Distortion => {
+                    Request::Distortion { points: batch.to_vec() }
+                }
+            };
+            client.send(&req)?;
+            inflight.push_back(Instant::now());
+            issued += 1;
+        }
+        client.flush()?;
+        let started = inflight.pop_front().expect("window nonempty");
+        match client.recv()? {
+            Response::Codes { .. } => out.ops.encode += 1,
+            Response::Neighbors { .. } => out.ops.nearest += 1,
+            Response::Distortion { .. } => out.ops.distortion += 1,
+            Response::IngestAck { shed, .. } => {
+                out.points_shed += shed;
+                out.ops.ingest += 1;
+            }
+            Response::Throttled { .. } => out.throttled += 1,
+            Response::Error { message } => bail!("server error: {message}"),
+            Response::NotLeader { leader } => bail!(
+                "server is a read-only follower; send writes (and state \
+                 fetches) to its leader at {leader}"
+            ),
+            other => bail!("unexpected response {other:?}"),
+        }
+        out.latencies_ns.push(started.elapsed().as_nanos() as u64);
+        out.stamps.push(t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
 impl LoadReport {
     /// Human-readable table (what `dalvq loadtest` prints).
     pub fn format(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
             "loadtest: {} connections x {} requests, {} pts/batch, \
-             ingest frac {:.0}%{}\n",
+             ingest frac {:.0}%{}{}\n",
             self.spec.connections,
             self.spec.requests_per_conn,
             self.spec.batch_points,
             self.spec.ingest_frac * 100.0,
+            if self.spec.pipeline > 1 {
+                format!(", pipeline {}", self.spec.pipeline)
+            } else {
+                String::new()
+            },
             if self.spec.read_only { " (read-only)" } else { "" },
         ));
         s.push_str(&format!(
@@ -453,6 +554,13 @@ impl LoadReport {
             self.ops.ingest,
             self.points_shed,
         ));
+        if self.throttled > 0 {
+            s.push_str(&format!(
+                "  throttled: {} requests answered Throttled \
+                 (admission control)\n",
+                self.throttled,
+            ));
+        }
         s.push_str(&format!(
             "  throughput: {:.0} req/s ({:.0} pts/s) over {:.2}s\n",
             self.throughput_rps, self.points_per_sec, self.wall_secs,
@@ -602,6 +710,16 @@ mod tests {
         assert!(s.validate().is_err());
         s.skew = 2.0;
         assert!(s.validate().is_ok());
+        let mut s = LoadSpec::default();
+        s.pipeline = 0;
+        assert!(s.validate().is_err());
+        s.pipeline = 32;
+        assert!(s.validate().is_ok());
+        // trace attribution needs the classic one-at-a-time loop
+        s.trace = true;
+        assert!(s.validate().is_err());
+        s.pipeline = 1;
+        assert!(s.validate().is_ok());
     }
 
     /// Replay `n` draws of the op chooser and tally them.
@@ -732,6 +850,7 @@ mod tests {
             requests: 10,
             ops: OpCounts { encode: 4, nearest: 3, distortion: 2, ingest: 1 },
             points_shed: 0,
+            throttled: 0,
             wall_secs: 0.5,
             throughput_rps: 20.0,
             points_per_sec: 1280.0,
@@ -757,6 +876,7 @@ mod tests {
             requests: 1,
             ops: OpCounts::default(),
             points_shed: 0,
+            throttled: 0,
             wall_secs: 0.1,
             throughput_rps: 10.0,
             points_per_sec: 640.0,

@@ -42,9 +42,15 @@
 //!   requests into one fused scan per drain tick (opt-in, default off —
 //!   see `docs/ARCHITECTURE.md` §Batched query plane).
 //! * **Front-end** — a `std::net` TCP [`Server`] speaking a
-//!   length-prefixed binary [`protocol`], an in-crate [`Client`], and a
-//!   load generator ([`run_load`]) that measures throughput and latency
-//!   percentiles into [`crate::metrics`] types.
+//!   length-prefixed binary [`protocol`]: a non-blocking event loop
+//!   (readiness polling, request pipelining, vectored writes, zero-copy
+//!   frame decode) feeding a fixed worker pool sized to cores, with
+//!   per-connection admission control (rate and in-flight quotas, a
+//!   brownout watermark that sheds ingest before reads) answering
+//!   refusals in-band with `Throttled` + retry-after; an in-crate
+//!   [`Client`], and a load generator ([`run_load`]) that measures
+//!   throughput and latency percentiles into [`crate::metrics`] types
+//!   and can pipeline requests (`--pipeline`).
 //! * **Durability** — with a `state_dir`, a background checkpointer
 //!   ([`crate::persist`]) snapshots each shard's published epoch to disk
 //!   every `checkpoint_every` folds (atomic temp+fsync+rename; the read
@@ -92,6 +98,7 @@
 
 mod batch;
 mod client;
+mod eventloop;
 mod loadgen;
 /// The length-prefixed binary wire protocol (see `docs/PROTOCOL.md`).
 pub mod protocol;

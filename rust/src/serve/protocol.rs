@@ -180,6 +180,19 @@ pub enum Response {
         /// The wrapped reply (never itself `Traced`).
         inner: Box<Response>,
     },
+    /// The server refused to *start* this request: an admission-control
+    /// quota (per-connection rate or in-flight cap) or an overload
+    /// brownout turned it away before any work ran. In-band and
+    /// connection-preserving — the stream stays in sync and the client
+    /// may retry after the hint. Distinct from `Error` so clients can
+    /// back off instead of treating load shedding as a failure.
+    Throttled {
+        /// Suggested wait before retrying, milliseconds (0 = retry at
+        /// will — e.g. an in-flight cap that frees up as replies drain).
+        retry_after_ms: u64,
+        /// Human-readable reason (which quota tripped, or the brownout).
+        message: String,
+    },
     /// The addressed server is a read-only follower: ingest, checkpoint,
     /// rebalance and state-fetch belong on its leader. Distinct from
     /// `Error` so clients can redirect instead of just failing.
@@ -394,11 +407,22 @@ pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
 /// frame — mid-header or mid-payload — is an error, so a dying peer is
 /// never mistaken for a clean hang-up.
 pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut buf = Vec::new();
+    Ok(if read_frame_into(r, &mut buf)? { Some(buf) } else { None })
+}
+
+/// [`read_frame`] into a caller-owned buffer: `buf` is cleared and
+/// resized to the payload, so its *capacity* is what carries over — a
+/// client reading replies through one scratch buffer allocates only when
+/// a reply outgrows every earlier one. `Ok(false)` on clean EOF at a
+/// frame boundary; the mid-frame EOF and oversized-prefix errors are
+/// exactly [`read_frame`]'s.
+pub fn read_frame_into(r: &mut impl Read, buf: &mut Vec<u8>) -> Result<bool> {
     let mut len_buf = [0u8; 4];
     let mut filled = 0usize;
     while filled < 4 {
         match r.read(&mut len_buf[filled..]) {
-            Ok(0) if filled == 0 => return Ok(None),
+            Ok(0) if filled == 0 => return Ok(false),
             Ok(0) => bail!("EOF after {filled} bytes of a 4-byte frame header"),
             Ok(n) => filled += n,
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
@@ -409,9 +433,130 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
     if len > MAX_FRAME {
         bail!("incoming frame of {len} bytes exceeds cap {MAX_FRAME}");
     }
-    let mut payload = vec![0u8; len as usize];
-    r.read_exact(&mut payload)?;
-    Ok(Some(payload))
+    buf.clear();
+    buf.resize(len as usize, 0);
+    r.read_exact(buf)?;
+    Ok(true)
+}
+
+/// Begin a length-prefixed frame in `out`: append a 4-byte placeholder
+/// and return its offset for [`end_frame`]. Together they let a writer
+/// encode a payload straight into its write buffer — no staging `Vec`,
+/// no copy — and patch the length afterwards.
+pub fn begin_frame(out: &mut Vec<u8>) -> usize {
+    let at = out.len();
+    out.extend_from_slice(&[0u8; 4]);
+    at
+}
+
+/// Finish a frame begun at `at`: patch the length prefix to cover the
+/// bytes appended since. When the payload outgrew [`MAX_FRAME`] the
+/// frame is rolled back (`out` truncates to `at`) and this errors — the
+/// peer never sees a half-frame, mirroring [`write_frame`]'s refusal.
+pub fn end_frame(out: &mut Vec<u8>, at: usize) -> Result<()> {
+    let len = out.len() - at - 4;
+    if len > MAX_FRAME as usize {
+        out.truncate(at);
+        bail!("frame too large: {len} bytes (max {MAX_FRAME})");
+    }
+    let prefix = (len as u32).to_le_bytes();
+    out[at..at + 4].copy_from_slice(&prefix);
+    Ok(())
+}
+
+/// Does this frame payload carry an `Ingest` — bare, or wrapped in a
+/// trace envelope? A constant-time peek (the opcode byte, or the inner
+/// opcode behind the envelope's 29-byte prefix) so brownout shedding can
+/// classify a frame without decoding it.
+pub fn is_ingest_frame(payload: &[u8]) -> bool {
+    match payload.first() {
+        Some(&OP_INGEST) => true,
+        Some(&OP_TRACED_REQ) => payload.get(29) == Some(&OP_INGEST),
+        _ => false,
+    }
+}
+
+/// An incremental frame decoder over one growable buffer: feed raw bytes
+/// in however the transport chunks them, take complete frame payloads
+/// out as **borrowed slices** — the zero-copy counterpart of
+/// [`read_frame`] for nonblocking transports. The event-loop server owns
+/// one per connection; a frame split at any byte boundary across reads
+/// yields exactly the bytes a whole-frame read would have.
+pub struct Decoder {
+    buf: Vec<u8>,
+    start: usize,
+    end: usize,
+}
+
+impl Decoder {
+    pub fn new() -> Self {
+        Self::with_capacity(4 << 10)
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { buf: vec![0; cap.max(8)], start: 0, end: 0 }
+    }
+
+    /// Writable spare room of at least `min` bytes, compacting consumed
+    /// frames out of the way and growing the buffer only when compaction
+    /// is not enough. Fill some prefix of it from the transport, then
+    /// report how much arrived via [`Decoder::advance`].
+    pub fn spare(&mut self, min: usize) -> &mut [u8] {
+        if self.start == self.end {
+            // Empty: restart at the front so steady-state traffic never
+            // compacts at all.
+            self.start = 0;
+            self.end = 0;
+        }
+        if self.buf.len() - self.end < min {
+            if self.start > 0 {
+                self.buf.copy_within(self.start..self.end, 0);
+                self.end -= self.start;
+                self.start = 0;
+            }
+            if self.buf.len() - self.end < min {
+                let want = (self.end + min).next_power_of_two();
+                self.buf.resize(want, 0);
+            }
+        }
+        &mut self.buf[self.end..]
+    }
+
+    /// Mark `n` bytes of the spare region as filled.
+    pub fn advance(&mut self, n: usize) {
+        debug_assert!(self.end + n <= self.buf.len());
+        self.end += n;
+    }
+
+    /// Bytes buffered but not yet yielded as frames.
+    pub fn pending(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// The next complete frame payload, borrowed from the buffer (valid
+    /// until the next `spare`/`next_frame` call). `Ok(None)` when the
+    /// buffered bytes end mid-header or mid-payload — read more and ask
+    /// again. An oversized length prefix errors exactly like
+    /// [`read_frame`], before any allocation sized by it.
+    pub fn next_frame(&mut self) -> Result<Option<&[u8]>> {
+        let have = self.end - self.start;
+        if have < 4 {
+            return Ok(None);
+        }
+        let len_buf: [u8; 4] =
+            self.buf[self.start..self.start + 4].try_into().unwrap();
+        let len = u32::from_le_bytes(len_buf);
+        if len > MAX_FRAME {
+            bail!("incoming frame of {len} bytes exceeds cap {MAX_FRAME}");
+        }
+        let total = 4 + len as usize;
+        if have < total {
+            return Ok(None);
+        }
+        let at = self.start + 4;
+        self.start += total;
+        Ok(Some(&self.buf[at..at + len as usize]))
+    }
 }
 
 // ------------------------------------------------------------ encoders
@@ -439,6 +584,7 @@ const OP_STATE: u8 = 0x88;
 const OP_METRICS_R: u8 = 0x89;
 const OP_TRACE_R: u8 = 0x8A;
 const OP_TRACED_RESP: u8 = 0x8B;
+const OP_THROTTLED: u8 = 0xFD;
 const OP_NOT_LEADER: u8 = 0xFE;
 const OP_ERROR: u8 = 0xFF;
 
@@ -496,12 +642,53 @@ pub fn encode_traced_response(
     inner: &[u8],
 ) -> Vec<u8> {
     let mut out = Vec::with_capacity(inner.len() + 64);
+    encode_traced_response_into(&mut out, hi, lo, spans, inner);
+    out
+}
+
+/// [`encode_traced_response`] appending to a caller-owned buffer — the
+/// event-loop server assembles the envelope directly in a connection's
+/// reply frame instead of allocating an intermediate `Vec`.
+pub fn encode_traced_response_into(
+    out: &mut Vec<u8>,
+    hi: u64,
+    lo: u64,
+    spans: &[WireSpan],
+    inner: &[u8],
+) {
     out.push(OP_TRACED_RESP);
     out.extend_from_slice(&hi.to_le_bytes());
     out.extend_from_slice(&lo.to_le_bytes());
-    put_spans(&mut out, spans);
-    put_bytes(&mut out, inner);
-    out
+    put_spans(out, spans);
+    put_bytes(out, inner);
+}
+
+/// Append a [`Request::Traced`] envelope around `inner` to `out`,
+/// encoding the inner request in place behind a patched length field —
+/// byte-identical to `Request::Traced { .. }.encode_into(..)` without
+/// boxing a clone of the inner request. The client's trace stamping
+/// rides this so its per-connection scratch buffer stays the only
+/// allocation on the send path.
+pub fn encode_traced_request_into(
+    out: &mut Vec<u8>,
+    hi: u64,
+    lo: u64,
+    parent: u64,
+    inner: &Request,
+) {
+    debug_assert!(
+        !matches!(inner, Request::Traced { .. }),
+        "trace envelopes do not nest"
+    );
+    out.push(OP_TRACED_REQ);
+    out.extend_from_slice(&hi.to_le_bytes());
+    out.extend_from_slice(&lo.to_le_bytes());
+    out.extend_from_slice(&parent.to_le_bytes());
+    let len_at = out.len();
+    out.extend_from_slice(&[0u8; 4]);
+    inner.encode_into(out);
+    let inner_len = (out.len() - len_at - 4) as u32;
+    out[len_at..len_at + 4].copy_from_slice(&inner_len.to_le_bytes());
 }
 
 /// A bounds-checked little-endian reader over a payload.
@@ -549,6 +736,22 @@ impl<'a> Cursor<'a> {
             .chunks_exact(4)
             .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
             .collect())
+    }
+
+    /// A count-prefixed point vector as a borrowed, finite-validated
+    /// [`PointsRef`] — the zero-copy twin of `f32s` + finiteness. Same
+    /// bounds discipline (the `bytes` check fires before anything sized
+    /// by the count) and same error text, but no allocation either way.
+    fn points_ref(&mut self) -> Result<PointsRef<'a>> {
+        let n = self.u32()? as usize;
+        let raw = self.bytes(n * 4)?;
+        for (i, b) in raw.chunks_exact(4).enumerate() {
+            let x = f32::from_le_bytes(b.try_into().unwrap());
+            if !x.is_finite() {
+                bail!("non-finite point coordinate {x} at index {i}");
+            }
+        }
+        Ok(PointsRef { raw })
     }
 
     fn u32s(&mut self) -> Result<Vec<u32>> {
@@ -609,18 +812,148 @@ impl<'a> Cursor<'a> {
     }
 }
 
-/// Reject point payloads carrying NaN or ±Inf at the wire boundary. A
-/// non-finite coordinate would otherwise flow into the distance kernels
-/// — where NaN fails every `<` and silently answers code 0 at distance
-/// NaN — or, through `Ingest`, poison a codebook row for every later
-/// query. Decoding stays total: such a frame decodes to an error the
-/// server answers in-band, not a wedge or a panic.
-fn finite_points(points: Vec<f32>) -> Result<Vec<f32>> {
-    match points.iter().position(|x| !x.is_finite()) {
-        Some(i) => {
-            bail!("non-finite point coordinate {} at index {i}", points[i])
+/// A borrowed view of a point payload: the raw little-endian `f32` bytes
+/// straight out of a frame buffer, already validated finite at decode
+/// (a NaN that reached the distance kernels would fail every `<` and
+/// silently answer code 0; one that reached `Ingest` would poison a
+/// codebook row for every later query) but not yet copied anywhere.
+/// `copy_into` a reusable scratch buffer to hand the flat row-major
+/// floats to the VQ math — that copy is the *only* one a zero-copy
+/// request pays between socket and kernel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PointsRef<'a> {
+    raw: &'a [u8],
+}
+
+impl<'a> PointsRef<'a> {
+    /// Number of `f32` coordinates.
+    pub fn len(&self) -> usize {
+        self.raw.len() / 4
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.raw.is_empty()
+    }
+
+    /// Iterate the coordinates without allocating.
+    pub fn iter(&self) -> impl Iterator<Item = f32> + 'a {
+        self.raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    /// Replace `out`'s contents with the decoded coordinates, reusing
+    /// its capacity.
+    pub fn copy_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.len());
+        out.extend(self.iter());
+    }
+
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.iter().collect()
+    }
+}
+
+/// A request decoded *in place*: point payloads stay as borrowed
+/// [`PointsRef`] slices of the frame buffer instead of fresh
+/// `Vec<f32>`s. This is the server's hot-path view — [`Request::decode`]
+/// delegates here and copies out, so the two decoders can never drift.
+/// Acceptance set and error text are byte-for-byte the owned decoder's:
+/// bounds, finiteness, trailing bytes and envelope nesting all check
+/// identically.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RequestRef<'a> {
+    Encode { points: PointsRef<'a> },
+    Nearest { points: PointsRef<'a> },
+    Distortion { points: PointsRef<'a> },
+    Ingest { points: PointsRef<'a> },
+    Stats,
+    Checkpoint,
+    Rebalance { want_remap: bool },
+    FetchState { have_generation: u64 },
+    Metrics { max_events: u32 },
+    Trace { max_traces: u32 },
+    Traced { hi: u64, lo: u64, parent: u64, inner: Box<RequestRef<'a>> },
+}
+
+impl<'a> RequestRef<'a> {
+    /// Decode one request payload without copying point data. Total,
+    /// like [`Request::decode`].
+    pub fn decode(payload: &'a [u8]) -> Result<Self> {
+        let mut c = Cursor::new(payload);
+        let req = match c.u8()? {
+            OP_ENCODE => RequestRef::Encode { points: c.points_ref()? },
+            OP_NEAREST => RequestRef::Nearest { points: c.points_ref()? },
+            OP_DISTORTION => {
+                RequestRef::Distortion { points: c.points_ref()? }
+            }
+            OP_INGEST => RequestRef::Ingest { points: c.points_ref()? },
+            OP_STATS => RequestRef::Stats,
+            OP_CHECKPOINT => RequestRef::Checkpoint,
+            OP_REBALANCE => {
+                RequestRef::Rebalance { want_remap: c.u8()? != 0 }
+            }
+            OP_FETCH_STATE => {
+                RequestRef::FetchState { have_generation: c.u64()? }
+            }
+            OP_METRICS => RequestRef::Metrics { max_events: c.u32()? },
+            OP_TRACE => RequestRef::Trace { max_traces: c.u32()? },
+            OP_TRACED_REQ => {
+                let hi = c.u64()?;
+                let lo = c.u64()?;
+                let parent = c.u64()?;
+                let n = c.u32()? as usize;
+                let inner_bytes = c.bytes(n)?;
+                let inner = RequestRef::decode(inner_bytes)
+                    .map_err(|e| anyhow!("inside a trace envelope: {e}"))?;
+                if matches!(inner, RequestRef::Traced { .. }) {
+                    bail!("nested trace envelopes are not allowed");
+                }
+                RequestRef::Traced { hi, lo, parent, inner: Box::new(inner) }
+            }
+            op => bail!("unknown request opcode 0x{op:02x}"),
+        };
+        c.finish()?;
+        Ok(req)
+    }
+
+    /// Copy out into an owned [`Request`].
+    pub fn to_owned(&self) -> Request {
+        match self {
+            RequestRef::Encode { points } => {
+                Request::Encode { points: points.to_vec() }
+            }
+            RequestRef::Nearest { points } => {
+                Request::Nearest { points: points.to_vec() }
+            }
+            RequestRef::Distortion { points } => {
+                Request::Distortion { points: points.to_vec() }
+            }
+            RequestRef::Ingest { points } => {
+                Request::Ingest { points: points.to_vec() }
+            }
+            RequestRef::Stats => Request::Stats,
+            RequestRef::Checkpoint => Request::Checkpoint,
+            RequestRef::Rebalance { want_remap } => {
+                Request::Rebalance { want_remap: *want_remap }
+            }
+            RequestRef::FetchState { have_generation } => {
+                Request::FetchState { have_generation: *have_generation }
+            }
+            RequestRef::Metrics { max_events } => {
+                Request::Metrics { max_events: *max_events }
+            }
+            RequestRef::Trace { max_traces } => {
+                Request::Trace { max_traces: *max_traces }
+            }
+            RequestRef::Traced { hi, lo, parent, inner } => Request::Traced {
+                hi: *hi,
+                lo: *lo,
+                parent: *parent,
+                inner: Box::new(inner.to_owned()),
+            },
         }
-        None => Ok(points),
     }
 }
 
@@ -628,22 +961,33 @@ impl Request {
     /// Encode this request as one frame payload (opcode + fields).
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Append this request's frame payload to `out` — which is *not*
+    /// cleared, so a caller can reuse one scratch buffer across frames
+    /// (or build a frame in place behind a [`begin_frame`] prefix). The
+    /// trace envelope encodes its inner request directly into `out`
+    /// through a patched length field, so even enveloped encoding
+    /// allocates nothing beyond `out` itself.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
         match self {
             Request::Encode { points } => {
                 out.push(OP_ENCODE);
-                put_f32s(&mut out, points);
+                put_f32s(out, points);
             }
             Request::Nearest { points } => {
                 out.push(OP_NEAREST);
-                put_f32s(&mut out, points);
+                put_f32s(out, points);
             }
             Request::Distortion { points } => {
                 out.push(OP_DISTORTION);
-                put_f32s(&mut out, points);
+                put_f32s(out, points);
             }
             Request::Ingest { points } => {
                 out.push(OP_INGEST);
-                put_f32s(&mut out, points);
+                put_f32s(out, points);
             }
             Request::Stats => out.push(OP_STATS),
             Request::Checkpoint => out.push(OP_CHECKPOINT),
@@ -672,50 +1016,24 @@ impl Request {
                 out.extend_from_slice(&hi.to_le_bytes());
                 out.extend_from_slice(&lo.to_le_bytes());
                 out.extend_from_slice(&parent.to_le_bytes());
-                put_bytes(&mut out, &inner.encode());
+                let len_at = out.len();
+                out.extend_from_slice(&[0u8; 4]);
+                inner.encode_into(out);
+                let inner_len = (out.len() - len_at - 4) as u32;
+                out[len_at..len_at + 4]
+                    .copy_from_slice(&inner_len.to_le_bytes());
             }
         }
-        out
     }
 
     /// Decode one request payload. Total: any byte string either decodes
     /// to exactly the request that produced it or errors.
     ///
-    /// Point-carrying ops additionally reject non-finite coordinates
-    /// here, at the wire boundary — see [`finite_points`].
+    /// Point-carrying ops additionally reject non-finite coordinates at
+    /// the wire boundary — see [`PointsRef`]. Delegates to
+    /// [`RequestRef::decode`] (the borrowing decoder) and copies out.
     pub fn decode(payload: &[u8]) -> Result<Self> {
-        let mut c = Cursor::new(payload);
-        let req = match c.u8()? {
-            OP_ENCODE => Request::Encode { points: finite_points(c.f32s()?)? },
-            OP_NEAREST => Request::Nearest { points: finite_points(c.f32s()?)? },
-            OP_DISTORTION => {
-                Request::Distortion { points: finite_points(c.f32s()?)? }
-            }
-            OP_INGEST => Request::Ingest { points: finite_points(c.f32s()?)? },
-            OP_STATS => Request::Stats,
-            OP_CHECKPOINT => Request::Checkpoint,
-            OP_REBALANCE => Request::Rebalance { want_remap: c.u8()? != 0 },
-            OP_FETCH_STATE => {
-                Request::FetchState { have_generation: c.u64()? }
-            }
-            OP_METRICS => Request::Metrics { max_events: c.u32()? },
-            OP_TRACE => Request::Trace { max_traces: c.u32()? },
-            OP_TRACED_REQ => {
-                let hi = c.u64()?;
-                let lo = c.u64()?;
-                let parent = c.u64()?;
-                let inner_bytes = c.blob()?;
-                let inner = Request::decode(&inner_bytes)
-                    .map_err(|e| anyhow!("inside a trace envelope: {e}"))?;
-                if matches!(inner, Request::Traced { .. }) {
-                    bail!("nested trace envelopes are not allowed");
-                }
-                Request::Traced { hi, lo, parent, inner: Box::new(inner) }
-            }
-            op => bail!("unknown request opcode 0x{op:02x}"),
-        };
-        c.finish()?;
-        Ok(req)
+        Ok(RequestRef::decode(payload)?.to_owned())
     }
 }
 
@@ -723,17 +1041,24 @@ impl Response {
     /// Encode this response as one frame payload (opcode + fields).
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Append this response's frame payload to `out` (not cleared) —
+    /// see [`Request::encode_into`] for the reuse contract.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
         match self {
             Response::Codes { version, codes } => {
                 out.push(OP_CODES);
                 out.extend_from_slice(&version.to_le_bytes());
-                put_u32s(&mut out, codes);
+                put_u32s(out, codes);
             }
             Response::Neighbors { version, indices, dists } => {
                 out.push(OP_NEIGHBORS);
                 out.extend_from_slice(&version.to_le_bytes());
-                put_u32s(&mut out, indices);
-                put_f32s(&mut out, dists);
+                put_u32s(out, indices);
+                put_f32s(out, dists);
             }
             Response::Distortion { version, value } => {
                 out.push(OP_DISTORTION_R);
@@ -754,14 +1079,14 @@ impl Response {
                 ] {
                     out.extend_from_slice(&field.to_le_bytes());
                 }
-                put_u64s(&mut out, &s.shard_versions);
-                put_u64s(&mut out, &s.shard_merges);
-                put_u64s(&mut out, &s.shard_ingest);
-                put_u64s(&mut out, &s.shard_shed);
-                put_u64s(&mut out, &s.last_checkpoint);
-                put_str(&mut out, &s.state_dir);
-                put_str(&mut out, &s.role);
-                put_str(&mut out, &s.leader_addr);
+                put_u64s(out, &s.shard_versions);
+                put_u64s(out, &s.shard_merges);
+                put_u64s(out, &s.shard_ingest);
+                put_u64s(out, &s.shard_shed);
+                put_u64s(out, &s.last_checkpoint);
+                put_str(out, &s.state_dir);
+                put_str(out, &s.role);
+                put_str(out, &s.leader_addr);
                 out.extend_from_slice(&s.sync_lag_folds.to_le_bytes());
                 out.extend_from_slice(&s.last_sync.to_le_bytes());
                 for field in [
@@ -773,7 +1098,7 @@ impl Response {
             }
             Response::CheckpointAck { versions } => {
                 out.push(OP_CHECKPOINT_ACK);
-                put_u64s(&mut out, versions);
+                put_u64s(out, versions);
             }
             Response::RebalanceAck {
                 router_version,
@@ -784,8 +1109,8 @@ impl Response {
                 out.push(OP_REBALANCE_ACK);
                 out.extend_from_slice(&router_version.to_le_bytes());
                 out.extend_from_slice(&moved_rows.to_le_bytes());
-                put_u64s(&mut out, shard_versions);
-                put_u32s(&mut out, remap);
+                put_u64s(out, shard_versions);
+                put_u32s(out, remap);
             }
             Response::State(s) => {
                 out.push(OP_STATE);
@@ -793,8 +1118,8 @@ impl Response {
                 out.extend_from_slice(&s.leader_version.to_le_bytes());
                 out.extend_from_slice(&(s.files.len() as u32).to_le_bytes());
                 for f in &s.files {
-                    put_str(&mut out, &f.name);
-                    put_bytes(&mut out, &f.bytes);
+                    put_str(out, &f.name);
+                    put_bytes(out, &f.bytes);
                 }
             }
             Response::Metrics(m) => {
@@ -802,17 +1127,17 @@ impl Response {
                 out.extend_from_slice(&m.uptime_ms.to_le_bytes());
                 out.extend_from_slice(&(m.counters.len() as u32).to_le_bytes());
                 for (name, v) in &m.counters {
-                    put_str(&mut out, name);
+                    put_str(out, name);
                     out.extend_from_slice(&v.to_le_bytes());
                 }
                 out.extend_from_slice(&(m.gauges.len() as u32).to_le_bytes());
                 for (name, v) in &m.gauges {
-                    put_str(&mut out, name);
+                    put_str(out, name);
                     out.extend_from_slice(&v.to_le_bytes());
                 }
                 out.extend_from_slice(&(m.hists.len() as u32).to_le_bytes());
                 for h in &m.hists {
-                    put_str(&mut out, &h.name);
+                    put_str(out, &h.name);
                     out.extend_from_slice(&h.count.to_le_bytes());
                     for field in
                         [h.mean_us, h.p50_us, h.p95_us, h.p99_us, h.max_us]
@@ -825,8 +1150,8 @@ impl Response {
                     out.extend_from_slice(&e.seq.to_le_bytes());
                     out.extend_from_slice(&e.ts_ms.to_le_bytes());
                     out.push(e.level);
-                    put_str(&mut out, &e.kind);
-                    put_str(&mut out, &e.message);
+                    put_str(out, &e.kind);
+                    put_str(out, &e.message);
                 }
             }
             Response::Traces(traces) => {
@@ -836,7 +1161,7 @@ impl Response {
                     out.extend_from_slice(&t.hi.to_le_bytes());
                     out.extend_from_slice(&t.lo.to_le_bytes());
                     out.extend_from_slice(&t.ts_ms.to_le_bytes());
-                    put_spans(&mut out, &t.spans);
+                    put_spans(out, &t.spans);
                 }
             }
             Response::Traced { hi, lo, spans, inner } => {
@@ -844,20 +1169,31 @@ impl Response {
                     !matches!(**inner, Response::Traced { .. }),
                     "trace envelopes do not nest"
                 );
-                let bytes =
-                    encode_traced_response(*hi, *lo, spans, &inner.encode());
-                out.extend_from_slice(&bytes);
+                out.push(OP_TRACED_RESP);
+                out.extend_from_slice(&hi.to_le_bytes());
+                out.extend_from_slice(&lo.to_le_bytes());
+                put_spans(out, spans);
+                let len_at = out.len();
+                out.extend_from_slice(&[0u8; 4]);
+                inner.encode_into(out);
+                let inner_len = (out.len() - len_at - 4) as u32;
+                out[len_at..len_at + 4]
+                    .copy_from_slice(&inner_len.to_le_bytes());
+            }
+            Response::Throttled { retry_after_ms, message } => {
+                out.push(OP_THROTTLED);
+                out.extend_from_slice(&retry_after_ms.to_le_bytes());
+                put_str(out, message);
             }
             Response::NotLeader { leader } => {
                 out.push(OP_NOT_LEADER);
-                put_str(&mut out, leader);
+                put_str(out, leader);
             }
             Response::Error { message } => {
                 out.push(OP_ERROR);
-                put_str(&mut out, message);
+                put_str(out, message);
             }
         }
-        out
     }
 
     /// Decode one response payload. Total, like [`Request::decode`].
@@ -1006,6 +1342,10 @@ impl Response {
                 }
                 Response::Traced { hi, lo, spans, inner: Box::new(inner) }
             }
+            OP_THROTTLED => Response::Throttled {
+                retry_after_ms: c.u64()?,
+                message: c.str()?,
+            },
             OP_NOT_LEADER => Response::NotLeader { leader: c.str()? },
             OP_ERROR => Response::Error { message: c.str()? },
             op => bail!("unknown response opcode 0x{op:02x}"),
@@ -1312,5 +1652,236 @@ mod tests {
         wire.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
         let mut r = &wire[..];
         assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn throttled_round_trips_and_truncates_like_any_variant() {
+        round_trip_resp(Response::Throttled {
+            retry_after_ms: 0,
+            message: String::new(),
+        });
+        round_trip_resp(Response::Throttled {
+            retry_after_ms: 1_500,
+            message: "rate quota: 100 req/s".into(),
+        });
+        let wire = Response::Throttled {
+            retry_after_ms: 250,
+            message: "brownout".into(),
+        }
+        .encode();
+        assert_eq!(wire[0], 0xFD);
+        for cut in 0..wire.len() {
+            assert!(Response::decode(&wire[..cut]).is_err(), "cut {cut}");
+        }
+        let mut trailing = wire.clone();
+        trailing.push(0);
+        assert!(Response::decode(&trailing).is_err());
+        // and it rides a trace envelope like any other reply
+        round_trip_resp(Response::Traced {
+            hi: 1,
+            lo: 2,
+            spans: vec![],
+            inner: Box::new(Response::Throttled {
+                retry_after_ms: 9,
+                message: "in-flight quota: 4".into(),
+            }),
+        });
+    }
+
+    #[test]
+    fn encode_into_appends_without_clearing() {
+        let mut out = vec![0xAAu8, 0xBB];
+        Request::Stats.encode_into(&mut out);
+        assert_eq!(out[..2], [0xAA, 0xBB]);
+        assert_eq!(&out[2..], &Request::Stats.encode()[..]);
+        // the enveloped encoders patch their length prefix in place and
+        // still match the allocating encoder byte for byte
+        let req = Request::Traced {
+            hi: 7,
+            lo: 8,
+            parent: 9,
+            inner: Box::new(Request::Encode { points: vec![1.0, 2.0] }),
+        };
+        let mut appended = vec![0x55u8];
+        req.encode_into(&mut appended);
+        assert_eq!(&appended[1..], &req.encode()[..]);
+        let resp = Response::Traced {
+            hi: 7,
+            lo: 8,
+            spans: vec![WireSpan {
+                id: 1,
+                parent: 0,
+                start_us: 0,
+                dur_us: 3,
+                name: "req.encode".into(),
+            }],
+            inner: Box::new(Response::Codes { version: 1, codes: vec![4] }),
+        };
+        let mut appended = Vec::new();
+        resp.encode_into(&mut appended);
+        assert_eq!(appended, resp.encode());
+    }
+
+    #[test]
+    fn traced_request_helper_matches_the_boxed_encoder() {
+        // The client's clone-free envelope writer is byte-identical to
+        // encoding a boxed Request::Traced.
+        let inner = Request::Nearest { points: vec![0.25, -1.5, 3.0] };
+        let boxed = Request::Traced {
+            hi: 11,
+            lo: 22,
+            parent: 33,
+            inner: Box::new(inner.clone()),
+        };
+        let mut streamed = vec![0xEEu8]; // append semantics too
+        encode_traced_request_into(&mut streamed, 11, 22, 33, &inner);
+        assert_eq!(streamed[0], 0xEE);
+        assert_eq!(&streamed[1..], &boxed.encode()[..]);
+    }
+
+    #[test]
+    fn request_ref_matches_the_owned_decoder() {
+        // Same acceptance set, same values, same error text — on every
+        // variant, the non-finite rejections, and the envelope errors.
+        let reqs = [
+            Request::Encode { points: vec![1.0, -2.5] },
+            Request::Nearest { points: vec![] },
+            Request::Distortion { points: vec![0.5; 5] },
+            Request::Ingest { points: vec![f32::MIN, f32::MAX] },
+            Request::Stats,
+            Request::Checkpoint,
+            Request::Rebalance { want_remap: true },
+            Request::FetchState { have_generation: 3 },
+            Request::Metrics { max_events: 7 },
+            Request::Trace { max_traces: 2 },
+            Request::Traced {
+                hi: 1,
+                lo: 2,
+                parent: 3,
+                inner: Box::new(Request::Nearest { points: vec![4.0] }),
+            },
+        ];
+        for req in &reqs {
+            let wire = req.encode();
+            let by_ref = RequestRef::decode(&wire).unwrap();
+            assert_eq!(by_ref.to_owned(), *req);
+            for cut in 0..wire.len() {
+                let a = RequestRef::decode(&wire[..cut])
+                    .err()
+                    .map(|e| e.to_string());
+                let b = Request::decode(&wire[..cut])
+                    .err()
+                    .map(|e| e.to_string());
+                assert_eq!(a, b, "{req:?} cut {cut}");
+                assert!(a.is_some(), "{req:?} cut {cut} decoded");
+            }
+        }
+        let mut bad = vec![0x01u8];
+        bad.extend_from_slice(&1u32.to_le_bytes());
+        bad.extend_from_slice(&f32::NAN.to_le_bytes());
+        let a = RequestRef::decode(&bad).unwrap_err().to_string();
+        let b = Request::decode(&bad).unwrap_err().to_string();
+        assert_eq!(a, b);
+        assert!(a.contains("non-finite") && a.contains("index 0"), "{a}");
+    }
+
+    #[test]
+    fn points_ref_views_without_copying() {
+        let wire = Request::Nearest { points: vec![1.5, -2.0, 0.25] }.encode();
+        match RequestRef::decode(&wire).unwrap() {
+            RequestRef::Nearest { points } => {
+                assert_eq!(points.len(), 3);
+                assert!(!points.is_empty());
+                assert_eq!(points.to_vec(), vec![1.5, -2.0, 0.25]);
+                let mut scratch = vec![9.0f32; 17];
+                points.copy_into(&mut scratch);
+                assert_eq!(scratch, vec![1.5, -2.0, 0.25]);
+                assert_eq!(points.iter().count(), 3);
+            }
+            other => panic!("expected Nearest, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decoder_yields_whole_frames_from_any_chunking() {
+        let frames: Vec<Vec<u8>> = vec![
+            Request::Stats.encode(),
+            Request::Encode { points: vec![1.0, 2.0, 3.0] }.encode(),
+            Request::Ingest { points: vec![-4.5] }.encode(),
+        ];
+        let mut wire = Vec::new();
+        for f in &frames {
+            write_frame(&mut wire, f).unwrap();
+        }
+        // feed the byte stream in chunks of every size from 1 up
+        for chunk in 1..=wire.len() {
+            let mut dec = Decoder::with_capacity(8);
+            let mut got = Vec::new();
+            for piece in wire.chunks(chunk) {
+                let spare = dec.spare(piece.len());
+                spare[..piece.len()].copy_from_slice(piece);
+                dec.advance(piece.len());
+                while let Some(frame) = dec.next_frame().unwrap() {
+                    got.push(frame.to_vec());
+                }
+            }
+            assert_eq!(got, frames, "chunk size {chunk}");
+            assert_eq!(dec.pending(), 0);
+        }
+    }
+
+    #[test]
+    fn decoder_rejects_oversized_prefixes_like_read_frame() {
+        let mut dec = Decoder::new();
+        let bad = (MAX_FRAME + 1).to_le_bytes();
+        dec.spare(4)[..4].copy_from_slice(&bad);
+        dec.advance(4);
+        let err = dec.next_frame().unwrap_err().to_string();
+        assert!(err.contains("exceeds cap"), "{err}");
+    }
+
+    #[test]
+    fn frame_builders_match_write_frame() {
+        let payload = Request::Encode { points: vec![7.0] }.encode();
+        let mut via_write = Vec::new();
+        write_frame(&mut via_write, &payload).unwrap();
+        let mut via_builder = Vec::new();
+        let at = begin_frame(&mut via_builder);
+        via_builder.extend_from_slice(&payload);
+        end_frame(&mut via_builder, at).unwrap();
+        assert_eq!(via_builder, via_write);
+        // an over-cap frame rolls back to the begin mark
+        let mut out = vec![1u8, 2, 3];
+        let at = begin_frame(&mut out);
+        out.resize(at + 4 + MAX_FRAME as usize + 1, 0);
+        assert!(end_frame(&mut out, at).is_err());
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn ingest_frames_are_classified_without_decoding() {
+        let ingest = Request::Ingest { points: vec![1.0] }.encode();
+        assert!(is_ingest_frame(&ingest));
+        let traced_ingest = Request::Traced {
+            hi: 1,
+            lo: 2,
+            parent: 3,
+            inner: Box::new(Request::Ingest { points: vec![1.0] }),
+        }
+        .encode();
+        assert!(is_ingest_frame(&traced_ingest));
+        assert!(!is_ingest_frame(&Request::Stats.encode()));
+        assert!(!is_ingest_frame(
+            &Request::Nearest { points: vec![1.0] }.encode()
+        ));
+        let traced_read = Request::Traced {
+            hi: 1,
+            lo: 2,
+            parent: 3,
+            inner: Box::new(Request::Nearest { points: vec![1.0] }),
+        }
+        .encode();
+        assert!(!is_ingest_frame(&traced_read));
+        assert!(!is_ingest_frame(&[]));
     }
 }

@@ -1,15 +1,21 @@
-//! The TCP front-end: thread-per-connection over the length-prefixed
-//! protocol, answering every query from the current snapshot epoch.
+//! The TCP front-end: a non-blocking event loop over the
+//! length-prefixed protocol, answering every query from the current
+//! snapshot epoch.
 //!
-//! std-only by design (the offline build carries no async runtime), and
-//! consistent with the crate's substrate: a connection is a real
-//! preemptively-scheduled execution unit, like a worker. Queries touch the
-//! service only through [`VqService::snapshot`]/[`VqService::ingest`], so
-//! a slow client can never hold a lock the reducer or another reader
-//! needs.
+//! std-only by design (the offline build carries no async runtime). One
+//! reactor thread ([`super::eventloop`]) owns every socket: it polls
+//! for readiness, parses as many complete frames as each read delivers
+//! (request pipelining), runs admission control, and hands admitted
+//! frames to a fixed worker pool sized to cores. The per-frame work —
+//! zero-copy decode via [`RequestRef`], dispatch, and encoding the
+//! reply straight into a recycled frame buffer — happens here, on a
+//! worker thread, through [`process_frame`]. Queries touch the service
+//! only through [`VqService::snapshot`]/[`VqService::ingest`], so a
+//! slow client can never hold a lock the reducer or another reader
+//! needs; replies for one connection always leave in request order.
 
-use std::io::{BufReader, BufWriter};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::cell::RefCell;
+use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -22,18 +28,33 @@ use crate::obs::{
 };
 
 use super::batch::Batcher;
+use super::eventloop::{self, Handler, Waker};
 use super::protocol::{
-    encode_traced_response, read_frame, write_frame, MetricEvent, MetricHist,
-    MetricsReply, Request, Response, StatsReply, WireSpan, WireTrace,
-    MAX_FRAME,
+    begin_frame, encode_traced_response_into, end_frame, MetricEvent,
+    MetricHist, MetricsReply, RequestRef, Response, StatsReply, WireSpan,
+    WireTrace, MAX_FRAME,
 };
 use super::service::{TimedQuery, VqService};
+
+thread_local! {
+    /// Worker-local landing pad for request point batches: the wire
+    /// payload stays borrowed end to end, the floats are copied out
+    /// exactly once per request into this buffer, and the allocation is
+    /// reused for the life of the worker thread.
+    static POINTS: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    /// Worker-local scratch for the inner reply of a traced response:
+    /// the envelope's span list precedes the inner bytes on the wire,
+    /// but must be encoded after them (the `encode` span has to be
+    /// final), so traced replies stage the inner encode here.
+    static TRACE_INNER: RefCell<Vec<u8>> = const { RefCell::new(Vec::new()) };
+}
 
 /// A running TCP front-end over a [`VqService`].
 pub struct Server {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    accept: Option<JoinHandle<()>>,
+    waker: Arc<Waker>,
+    reactor: Option<JoinHandle<()>>,
     service: Arc<VqService>,
     /// The cross-request coalescer — `Some` only when the serve config
     /// arms `batch_window_us` (default off = the direct scan path).
@@ -53,16 +74,33 @@ impl Server {
         } else {
             None
         };
-        let accept = {
-            let stop = Arc::clone(&stop);
+        let (waker, wake_rx) = eventloop::wake_pair()?;
+        let handler: Handler = {
             let service = Arc::clone(&service);
             let batcher = batcher.clone();
-            std::thread::Builder::new()
-                .name("dalvq-serve-accept".into())
-                .spawn(move || accept_loop(listener, service, batcher, stop))
-                .expect("spawning accept thread")
+            Arc::new(move |payload: &[u8], arrived: Instant, out: &mut Vec<u8>| {
+                process_frame(&service, batcher.as_deref(), payload, arrived, out)
+            })
         };
-        Ok(Server { addr: local, stop, accept: Some(accept), service, batcher })
+        let reactor = {
+            let service = Arc::clone(&service);
+            let stop = Arc::clone(&stop);
+            let waker = Arc::clone(&waker);
+            std::thread::Builder::new()
+                .name("dalvq-serve-reactor".into())
+                .spawn(move || {
+                    eventloop::run(listener, service, handler, stop, waker, wake_rx)
+                })
+                .expect("spawning reactor thread")
+        };
+        Ok(Server {
+            addr: local,
+            stop,
+            waker,
+            reactor: Some(reactor),
+            service,
+            batcher,
+        })
     }
 
     /// The bound address (resolves `:0` to the actual port).
@@ -75,18 +113,21 @@ impl Server {
         &self.service
     }
 
-    /// Stop accepting. Existing connections finish on their own threads
-    /// and exit at client hang-up.
+    /// Deterministic shutdown through the reactor's wake token (the old
+    /// throwaway self-connection is gone): set the stop flag, wake the
+    /// loop, and join it. The reactor stops accepting and reading,
+    /// finishes every request already parsed or handed to a worker,
+    /// flushes the replies (bounded drain), closes every connection,
+    /// and joins its worker pool before its thread exits.
     pub fn shutdown(mut self) -> Result<()> {
         self.stop.store(true, Ordering::Release);
-        // Unblock the accept() call with a throwaway connection.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(j) = self.accept.take() {
-            j.join().map_err(|_| anyhow::anyhow!("accept thread panicked"))?;
+        self.waker.wake();
+        if let Some(j) = self.reactor.take() {
+            j.join().map_err(|_| anyhow::anyhow!("reactor thread panicked"))?;
         }
         // Stop the coalescer after the front door: queued requests are
-        // still answered, and stragglers on connections that outlive the
-        // server fall back to the direct scan path.
+        // still answered, and stragglers fall back to the direct scan
+        // path.
         if let Some(b) = &self.batcher {
             b.shutdown();
         }
@@ -94,110 +135,100 @@ impl Server {
     }
 }
 
-fn accept_loop(
-    listener: TcpListener,
-    service: Arc<VqService>,
-    batcher: Option<Arc<Batcher>>,
-    stop: Arc<AtomicBool>,
-) {
-    for conn in listener.incoming() {
-        if stop.load(Ordering::Acquire) {
-            return;
-        }
-        let Ok(stream) = conn else { continue };
-        let service = Arc::clone(&service);
-        let batcher = batcher.clone();
-        let _ = std::thread::Builder::new()
-            .name("dalvq-serve-conn".into())
-            .spawn(move || {
-                let _ = serve_connection(stream, &service, batcher.as_deref());
-            });
-    }
-}
-
-/// One connection: frames in, frames out, until the peer hangs up.
+/// One frame: decode (borrowing the payload — no per-frame copy),
+/// dispatch, and encode the reply as a complete wire frame appended to
+/// `out`. Runs on an event-loop worker thread. Returns `false` when no
+/// frame could be produced (the reply overflows [`MAX_FRAME`]); the
+/// reactor then drops the connection, as the blocking server did when
+/// `write_frame` refused the same reply.
 ///
 /// Tracing wraps the whole per-frame lifetime: the trace origin is the
-/// instant the frame arrived, the `decode` span is replayed from the
-/// stage timer, the handler records its own children, and the `encode`
-/// span is measured on the inner reply *before* the optional
-/// [`Response::Traced`] envelope — whose span list must already be
-/// final — goes out.
-fn serve_connection(
-    stream: TcpStream,
+/// instant the frame was parsed off the socket (queue time ahead of the
+/// worker is inside the trace, deliberately — it is latency the client
+/// saw), the `decode` span is replayed from the stage timer, the
+/// handler records its own children, and the `encode` span is measured
+/// on the inner reply *before* the optional [`Response::Traced`]
+/// envelope — whose span list must already be final — goes out.
+fn process_frame(
     service: &VqService,
     batcher: Option<&Batcher>,
-) -> Result<()> {
-    stream.set_nodelay(true).ok(); // request/response pattern
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
-    while let Some(payload) = read_frame(&mut reader)? {
-        let t_start = Instant::now();
-        let decoded = Request::decode(&payload);
-        let decode_us = t_start.elapsed().as_micros() as u64;
-        service.tel().decode_us.record(decode_us);
-        // Unwrap the optional trace-context envelope; the inner request
-        // is handled exactly as if it had arrived bare.
-        let (decoded, wire_ctx) = match decoded {
-            Ok(Request::Traced { hi, lo, parent, inner }) => {
-                (Ok(*inner), Some((hi, lo, parent)))
-            }
-            other => (other, None),
-        };
-        let tracer = service.telemetry().tracer();
-        let mut tb = match wire_ctx {
-            // A remote caller already committed to this trace: join it
-            // even when local sampling is off.
-            Some((hi, lo, _)) => Some(tracer.begin_forced_at(hi, lo, t_start)),
-            None => tracer.begin_at(t_start),
-        };
-        let wire_parent = wire_ctx.map_or(NO_PARENT, |(_, _, parent)| parent);
-        let (resp, root) = match decoded {
-            Ok(req) => {
-                handle(service, batcher, req, decode_us, wire_parent, &mut tb)
-            }
-            Err(e) => {
-                (Response::Error { message: format!("{e:#}") }, NO_PARENT)
-            }
-        };
-        let t_encode = Instant::now();
-        let inner_bytes = resp.encode();
-        let encode_us = t_encode.elapsed().as_micros() as u64;
-        service.tel().encode_us.record(encode_us);
-        let frame = match tb.take() {
-            None => inner_bytes,
-            Some(mut tb) => {
+    payload: &[u8],
+    arrived: Instant,
+    out: &mut Vec<u8>,
+) -> bool {
+    let at = begin_frame(out);
+    let t_start = arrived;
+    let t_decode = Instant::now();
+    let decoded = RequestRef::decode(payload);
+    let decode_us = t_decode.elapsed().as_micros() as u64;
+    service.tel().decode_us.record(decode_us);
+    // Unwrap the optional trace-context envelope; the inner request is
+    // handled exactly as if it had arrived bare.
+    let (decoded, wire_ctx) = match decoded {
+        Ok(RequestRef::Traced { hi, lo, parent, inner }) => {
+            (Ok(*inner), Some((hi, lo, parent)))
+        }
+        other => (other, None),
+    };
+    let tracer = service.telemetry().tracer();
+    let mut tb = match wire_ctx {
+        // A remote caller already committed to this trace: join it even
+        // when local sampling is off.
+        Some((hi, lo, _)) => Some(tracer.begin_forced_at(hi, lo, t_start)),
+        None => tracer.begin_at(t_start),
+    };
+    let wire_parent = wire_ctx.map_or(NO_PARENT, |(_, _, parent)| parent);
+    let (resp, root) = match decoded {
+        Ok(req) => handle(service, batcher, req, decode_us, wire_parent, &mut tb),
+        Err(e) => (Response::Error { message: format!("{e:#}") }, NO_PARENT),
+    };
+    let t_encode = Instant::now();
+    match tb.take() {
+        None => {
+            resp.encode_into(out);
+            let encode_us = t_encode.elapsed().as_micros() as u64;
+            service.tel().encode_us.record(encode_us);
+        }
+        Some(mut tb) => {
+            let finish = |tb: &mut TraceBuilder, encode_us: u64| {
                 if root != NO_PARENT {
                     let enc_start =
                         t_encode.duration_since(t_start).as_micros() as u64;
                     tb.add("encode", root, enc_start, encode_us);
                     tb.end(root);
                 }
-                let frame = match wire_ctx {
-                    Some((hi, lo, _)) => {
-                        // Ship the root span detached (parent 0). Its
-                        // true parent is a span id in the *caller's*
-                        // ring; span ids are sequential in both
-                        // processes, so shipping the raw foreign id
-                        // could collide with one of our own ids and
-                        // mis-nest the tree when the caller grafts.
-                        let mut spans = wire_spans(tb.spans());
-                        if let Some(r) =
-                            spans.iter_mut().find(|s| s.id == root)
-                        {
-                            r.parent = NO_PARENT;
-                        }
-                        encode_traced_response(hi, lo, &spans, &inner_bytes)
+            };
+            match wire_ctx {
+                None => {
+                    resp.encode_into(out);
+                    let encode_us = t_encode.elapsed().as_micros() as u64;
+                    service.tel().encode_us.record(encode_us);
+                    finish(&mut tb, encode_us);
+                }
+                Some((hi, lo, _)) => TRACE_INNER.with(|cell| {
+                    let inner = &mut *cell.borrow_mut();
+                    inner.clear();
+                    resp.encode_into(inner);
+                    let encode_us = t_encode.elapsed().as_micros() as u64;
+                    service.tel().encode_us.record(encode_us);
+                    finish(&mut tb, encode_us);
+                    // Ship the root span detached (parent 0). Its true
+                    // parent is a span id in the *caller's* ring; span
+                    // ids are sequential in both processes, so shipping
+                    // the raw foreign id could collide with one of our
+                    // own ids and mis-nest the tree when the caller
+                    // grafts.
+                    let mut spans = wire_spans(tb.spans());
+                    if let Some(r) = spans.iter_mut().find(|s| s.id == root) {
+                        r.parent = NO_PARENT;
                     }
-                    None => inner_bytes,
-                };
-                tracer.commit(tb);
-                frame
+                    encode_traced_response_into(out, hi, lo, &spans, inner);
+                }),
             }
-        };
-        write_frame(&mut writer, &frame)?;
+            tracer.commit(tb);
+        }
     }
-    Ok(())
+    end_frame(out, at).is_ok()
 }
 
 /// [`SpanRec`]s in wire shape.
@@ -232,24 +263,24 @@ fn wire_trace(t: FinishedTrace) -> WireTrace {
 fn handle(
     service: &VqService,
     batcher: Option<&Batcher>,
-    req: Request,
+    req: RequestRef<'_>,
     decode_us: u64,
     wire_parent: u64,
     tb: &mut Option<TraceBuilder>,
 ) -> (Response, u64) {
     let tel = service.tel();
     let (op_name, op) = match &req {
-        Request::Encode { .. } => ("encode", &tel.op_encode),
-        Request::Nearest { .. } => ("nearest", &tel.op_nearest),
-        Request::Distortion { .. } => ("distortion", &tel.op_distortion),
-        Request::Ingest { .. } => ("ingest", &tel.op_ingest),
-        Request::Stats => ("stats", &tel.op_other),
-        Request::Checkpoint => ("checkpoint", &tel.op_other),
-        Request::Rebalance { .. } => ("rebalance", &tel.op_other),
-        Request::FetchState { .. } => ("fetch_state", &tel.op_other),
-        Request::Metrics { .. } => ("metrics", &tel.op_other),
-        Request::Trace { .. } => ("trace", &tel.op_other),
-        Request::Traced { .. } => ("traced", &tel.op_other),
+        RequestRef::Encode { .. } => ("encode", &tel.op_encode),
+        RequestRef::Nearest { .. } => ("nearest", &tel.op_nearest),
+        RequestRef::Distortion { .. } => ("distortion", &tel.op_distortion),
+        RequestRef::Ingest { .. } => ("ingest", &tel.op_ingest),
+        RequestRef::Stats => ("stats", &tel.op_other),
+        RequestRef::Checkpoint => ("checkpoint", &tel.op_other),
+        RequestRef::Rebalance { .. } => ("rebalance", &tel.op_other),
+        RequestRef::FetchState { .. } => ("fetch_state", &tel.op_other),
+        RequestRef::Metrics { .. } => ("metrics", &tel.op_other),
+        RequestRef::Trace { .. } => ("trace", &tel.op_other),
+        RequestRef::Traced { .. } => ("traced", &tel.op_other),
     };
     op.requests.inc();
     let mut root = NO_PARENT;
@@ -286,7 +317,9 @@ fn handle(
 /// Dispatch one request through the service's routed query/ingest surface
 /// (multi-probe over the shard fleets happens inside [`VqService`]).
 /// Read queries run the timed path and report their (route, scan) µs
-/// through `stages` for the slow-query log.
+/// through `stages` for the slow-query log. Point batches arrive as
+/// borrowed [`super::protocol::PointsRef`] views and are copied exactly
+/// once into the worker's thread-local buffer.
 ///
 /// On a follower, every leader-only op — writes (`Ingest`,
 /// `Checkpoint`, `Rebalance`) and state shipping (`FetchState`) —
@@ -297,17 +330,17 @@ fn handle(
 fn dispatch(
     service: &VqService,
     batcher: Option<&Batcher>,
-    req: Request,
+    req: RequestRef<'_>,
     stages: &mut Option<(u64, u64)>,
     root: u64,
     tb: &mut Option<TraceBuilder>,
 ) -> Response {
     if matches!(
         req,
-        Request::Ingest { .. }
-            | Request::Checkpoint
-            | Request::Rebalance { .. }
-            | Request::FetchState { .. }
+        RequestRef::Ingest { .. }
+            | RequestRef::Checkpoint
+            | RequestRef::Rebalance { .. }
+            | RequestRef::FetchState { .. }
     ) {
         if let Some(leader) = service.follower_of() {
             return Response::NotLeader { leader };
@@ -351,42 +384,50 @@ fn dispatch(
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     };
     match req {
-        Request::Encode { points } => {
-            if let Some(err) = check(&points) {
+        RequestRef::Encode { points } => POINTS.with(|cell| {
+            let points_buf = &mut *cell.borrow_mut();
+            points.copy_into(points_buf);
+            if let Some(err) = check(points_buf) {
                 return err;
             }
             // Codes reply: op + version + len prefix + 4 bytes/code.
-            if let Some(err) = reply_cap("encode", 13, 4, points.len() / dim) {
+            if let Some(err) = reply_cap("encode", 13, 4, points_buf.len() / dim)
+            {
                 return err;
             }
             count_query();
-            let q = run_query(service, batcher, &points, root, tb);
+            let q = run_query(service, batcher, points_buf, root, tb);
             *stages = Some((q.route_us, q.scan_us));
             Response::Codes { version: q.version, codes: q.codes }
-        }
-        Request::Nearest { points } => {
-            if let Some(err) = check(&points) {
+        }),
+        RequestRef::Nearest { points } => POINTS.with(|cell| {
+            let points_buf = &mut *cell.borrow_mut();
+            points.copy_into(points_buf);
+            if let Some(err) = check(points_buf) {
                 return err;
             }
             // Neighbors reply: op + version + two prefixed f32/u32 runs.
-            if let Some(err) = reply_cap("nearest", 17, 8, points.len() / dim) {
+            if let Some(err) = reply_cap("nearest", 17, 8, points_buf.len() / dim)
+            {
                 return err;
             }
             count_query();
-            let q = run_query(service, batcher, &points, root, tb);
+            let q = run_query(service, batcher, points_buf, root, tb);
             *stages = Some((q.route_us, q.scan_us));
             Response::Neighbors {
                 version: q.version,
                 indices: q.codes,
                 dists: q.dists,
             }
-        }
-        Request::Distortion { points } => {
-            if let Some(err) = check(&points) {
+        }),
+        RequestRef::Distortion { points } => POINTS.with(|cell| {
+            let points_buf = &mut *cell.borrow_mut();
+            points.copy_into(points_buf);
+            if let Some(err) = check(points_buf) {
                 return err;
             }
             count_query();
-            let q = run_query(service, batcher, &points, root, tb);
+            let q = run_query(service, batcher, points_buf, root, tb);
             *stages = Some((q.route_us, q.scan_us));
             // check() rejected empty batches, so dists is never empty.
             let sum: f64 = q.dists.iter().map(|d| *d as f64).sum();
@@ -394,12 +435,16 @@ fn dispatch(
                 version: q.version,
                 value: sum / q.dists.len() as f64,
             }
-        }
-        Request::Ingest { points } => match service.ingest(&points) {
-            Ok((accepted, shed)) => Response::IngestAck { accepted, shed },
-            Err(e) => Response::Error { message: format!("{e:#}") },
-        },
-        Request::Stats => {
+        }),
+        RequestRef::Ingest { points } => POINTS.with(|cell| {
+            let points_buf = &mut *cell.borrow_mut();
+            points.copy_into(points_buf);
+            match service.ingest(points_buf) {
+                Ok((accepted, shed)) => Response::IngestAck { accepted, shed },
+                Err(e) => Response::Error { message: format!("{e:#}") },
+            }
+        }),
+        RequestRef::Stats => {
             let s = service.stats();
             Response::Stats(StatsReply {
                 version: s.version,
@@ -431,17 +476,17 @@ fn dispatch(
                 op_ingest: s.op_ingest,
             })
         }
-        Request::Metrics { max_events } => Response::Metrics(metrics_reply(
+        RequestRef::Metrics { max_events } => Response::Metrics(metrics_reply(
             service.metrics_snapshot(max_events as usize),
         )),
-        Request::Checkpoint => match service.checkpoint_now() {
+        RequestRef::Checkpoint => match service.checkpoint_now() {
             Ok(versions) => Response::CheckpointAck { versions },
             Err(e) => Response::Error { message: format!("{e:#}") },
         },
         // The epoch swap happens entirely inside the service; this
-        // connection blocks until the new partition serves, while reads
-        // on other connections keep answering from the old epoch.
-        Request::Rebalance { want_remap } => match service.rebalance() {
+        // request blocks its worker until the new partition serves,
+        // while reads keep answering from the old epoch.
+        RequestRef::Rebalance { want_remap } => match service.rebalance() {
             Ok(out) => Response::RebalanceAck {
                 router_version: out.router_version,
                 moved_rows: out.moved_rows,
@@ -454,13 +499,13 @@ fn dispatch(
         // The service records `state.cut` / `state.ship` children when a
         // trace is live (a follower's wire context joins them into its
         // own sync-cycle trace).
-        Request::FetchState { have_generation } => {
+        RequestRef::FetchState { have_generation } => {
             match service.fetch_state(have_generation, tb.as_mut(), root) {
                 Ok(shipment) => Response::State(shipment),
                 Err(e) => Response::Error { message: format!("{e:#}") },
             }
         }
-        Request::Trace { max_traces } => Response::Traces(
+        RequestRef::Trace { max_traces } => Response::Traces(
             service
                 .telemetry()
                 .tracer()
@@ -469,10 +514,10 @@ fn dispatch(
                 .map(wire_trace)
                 .collect(),
         ),
-        // The connection loop unwraps the envelope before dispatch, and
+        // The frame processor unwraps the envelope before dispatch, and
         // the decoder rejects nesting — this arm is unreachable short of
         // a bug, and answers cleanly rather than panicking.
-        Request::Traced { .. } => Response::Error {
+        RequestRef::Traced { .. } => Response::Error {
             message: "nested trace envelopes are not allowed".into(),
         },
     }
@@ -480,7 +525,7 @@ fn dispatch(
 
 /// One read batch through the query plane: the coalescer when armed
 /// (falling back to the direct path if it is already shut down), else an
-/// immediate fused scan on this connection thread. Either route answers
+/// immediate fused scan on this worker thread. Either route answers
 /// bit-identically; only latency and staleness differ.
 ///
 /// A live trace gets the stage breakdown as child spans of `root`:

@@ -120,6 +120,17 @@ pub(crate) struct ServeTel {
     /// Everything else (stats, checkpoint, rebalance, fetch-state,
     /// metrics itself).
     pub op_other: OpTel,
+    /// Connections currently open on the event-loop front-end.
+    pub conn_active: Arc<Gauge>,
+    /// Connections accepted, service lifetime.
+    pub conn_accepted: Arc<Counter>,
+    /// Requests refused by admission control (every `Throttled` answer:
+    /// rate quota, in-flight cap, or brownout shedding).
+    pub conn_rejected: Arc<Counter>,
+    /// One reactor cycle servicing readiness events, µs (the poll wait
+    /// itself is excluded — this is time the loop spent working, not
+    /// parked).
+    pub readiness_us: Arc<Histogram>,
 }
 
 impl ServeTel {
@@ -141,6 +152,10 @@ impl ServeTel {
             op_distortion: op("distortion"),
             op_ingest: op("ingest"),
             op_other: op("other"),
+            conn_active: t.gauge("conn.active"),
+            conn_accepted: t.counter("conn.accepted"),
+            conn_rejected: t.counter("conn.rejected"),
+            readiness_us: t.histogram("io.readiness_us"),
         }
     }
 }
@@ -1040,6 +1055,38 @@ impl VqService {
     /// as it holds this many points, even before the window closes.
     pub(crate) fn batch_max_points(&self) -> usize {
         self.serve.batch_max_points
+    }
+
+    /// Event-loop worker threads (0 = size to available cores).
+    pub(crate) fn io_workers(&self) -> usize {
+        self.serve.io_workers
+    }
+
+    /// Per-connection in-flight request cap (0 = unlimited).
+    pub(crate) fn max_inflight(&self) -> usize {
+        self.serve.max_inflight
+    }
+
+    /// Per-connection request rate quota, requests/s (0 = unlimited).
+    pub(crate) fn rate_limit(&self) -> u64 {
+        self.serve.rate_limit
+    }
+
+    /// Brownout watermark on shard ingest-queue depth (0 = brownout off).
+    pub(crate) fn brownout_depth(&self) -> u64 {
+        self.serve.brownout_depth
+    }
+
+    /// The deepest `shard.<s>.queue_depth` gauge of the serving epoch —
+    /// the overload signal the brownout ladder watches. Reads the live
+    /// gauges directly (no registry lookup; the epoch holds the handles).
+    pub(crate) fn max_queue_depth(&self) -> u64 {
+        self.current()
+            .shards
+            .iter()
+            .map(|s| s.queue_depth.get())
+            .max()
+            .unwrap_or(0)
     }
 
     /// The `Metrics` wire op and the `--metrics-file` writer land here:

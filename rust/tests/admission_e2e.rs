@@ -1,0 +1,405 @@
+//! Admission control and the event-loop front-end, end-to-end: the
+//! acceptance suite for PR "async event-loop server core".
+//!
+//! Pinned here: a tripped quota answers in-band (`Throttled` with a
+//! retry hint) on a connection that stays usable; a brownout sheds
+//! ingest while reads keep flowing, and both transitions land in the
+//! journal; hundreds of concurrently pipelined connections — far more
+//! than the worker pool — all complete with replies byte-identical to a
+//! sequential client against the same quiesced service; and shutdown is
+//! prompt with idle connections open (the event loop's wake token, not
+//! the old throwaway-connection hack).
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use dalvq::config::{ExperimentConfig, SchemeConfig, ServeConfig};
+use dalvq::serve::protocol::{MetricsReply, Request, Response};
+use dalvq::serve::{Client, Server, VqService};
+use dalvq::sim::DelayModel;
+use dalvq::vq::Schedule;
+
+/// Real-time fleets; run tests one at a time (same discipline as
+/// serve_e2e.rs).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A small, fast serving deployment on the native engine.
+fn tiny_preset() -> (ExperimentConfig, ServeConfig) {
+    let mut cfg = ExperimentConfig::default();
+    cfg.m = 2;
+    cfg.data.mixture.components = 4;
+    cfg.data.mixture.dim = 2;
+    cfg.data.mixture.noise_frac = 0.0;
+    cfg.data.n_total = 4_000;
+    cfg.data.eval_points = 512;
+    cfg.vq.kappa = 4;
+    cfg.vq.schedule = Schedule::Constant { eps0: 0.02 };
+    cfg.scheme = SchemeConfig::AsyncDelta {
+        tau: 10,
+        up_delay: DelayModel::Instant,
+        down_delay: DelayModel::Instant,
+    };
+    let mut serve = ServeConfig::default();
+    serve.points_per_exchange = 50;
+    serve.point_compute = 0.0;
+    (cfg, serve)
+}
+
+fn start_stack(
+    cfg: &ExperimentConfig,
+    serve: &ServeConfig,
+) -> (Arc<VqService>, Server) {
+    let service = VqService::start(cfg, serve).unwrap();
+    let server = Server::start(Arc::clone(&service), &serve.addr).unwrap();
+    (service, server)
+}
+
+/// Block until `f` returns true or `secs` elapse (then panic with `what`).
+fn wait_for(secs: u64, what: &str, mut f: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while !f() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn counter(m: &MetricsReply, name: &str) -> u64 {
+    m.counters.iter().find(|(n, _)| n == name).map_or(0, |(_, v)| *v)
+}
+
+fn gauge(m: &MetricsReply, name: &str) -> u64 {
+    m.gauges.iter().find(|(n, _)| n == name).map_or(0, |(_, v)| *v)
+}
+
+/// Pipeline `reqs` down one connection and collect every reply in order.
+fn burst(client: &mut Client, reqs: &[Request]) -> Vec<Response> {
+    for r in reqs {
+        client.send(r).unwrap();
+    }
+    client.flush().unwrap();
+    reqs.iter().map(|_| client.recv().unwrap()).collect()
+}
+
+/// A rate quota refuses in-band — `Throttled`, retry hint, which quota
+/// tripped — and the connection keeps answering afterwards: refusals
+/// are admission control, not connection failures.
+#[test]
+fn rate_quota_answers_throttled_and_the_connection_survives() {
+    let _serial = serial();
+    let (cfg, mut serve) = tiny_preset();
+    serve.rate_limit = 5; // 5 req/s per connection, one-second burst
+    let (service, server) = start_stack(&cfg, &serve);
+    let mut client = Client::connect(server.local_addr()).unwrap();
+
+    let reqs = vec![Request::Stats; 20];
+    let replies = burst(&mut client, &reqs);
+    let ok = replies
+        .iter()
+        .filter(|r| matches!(r, Response::Stats(_)))
+        .count();
+    let throttled: Vec<_> = replies
+        .iter()
+        .filter_map(|r| match r {
+            Response::Throttled { retry_after_ms, message } => {
+                Some((*retry_after_ms, message.clone()))
+            }
+            _ => None,
+        })
+        .collect();
+    // The bucket opens with one second of budget (5 tokens); refill
+    // during a sub-second burst admits at most a couple more.
+    assert!(ok >= 5, "only {ok} of 20 admitted at rate 5/s");
+    assert!(throttled.len() >= 10, "only {} throttled", throttled.len());
+    assert_eq!(ok + throttled.len(), 20);
+    let (retry_ms, message) = &throttled[0];
+    assert!(*retry_ms >= 1, "retry hint must be at least 1 ms");
+    assert!(
+        message.contains("rate quota"),
+        "throttle reason should name the quota: {message:?}"
+    );
+
+    // The bucket refills; the same connection serves again.
+    std::thread::sleep(Duration::from_millis(1_100));
+    client.stats().expect("connection must survive throttling");
+
+    let m = client.metrics(16).unwrap();
+    assert!(
+        counter(&m, "conn.rejected") >= throttled.len() as u64,
+        "conn.rejected must count every refusal"
+    );
+
+    server.shutdown().unwrap();
+    service.shutdown().unwrap();
+}
+
+/// An in-flight quota caps how deep one connection may pipeline: a
+/// burst parsed in one read admits the cap and throttles the rest,
+/// and the stream stays in order throughout.
+#[test]
+fn inflight_quota_throttles_a_pipelined_burst() {
+    let _serial = serial();
+    let (cfg, mut serve) = tiny_preset();
+    serve.max_inflight = 2;
+    let (service, server) = start_stack(&cfg, &serve);
+    let mut client = Client::connect(server.local_addr()).unwrap();
+
+    let reqs = vec![Request::Stats; 16];
+    let replies = burst(&mut client, &reqs);
+    let ok = replies
+        .iter()
+        .filter(|r| matches!(r, Response::Stats(_)))
+        .count();
+    let throttled: Vec<_> = replies
+        .iter()
+        .filter_map(|r| match r {
+            Response::Throttled { message, .. } => Some(message.clone()),
+            _ => None,
+        })
+        .collect();
+    // A 16-frame burst normally lands in one read: 2 admitted (the cap),
+    // 14 refused. A racy read split can only admit more, never fewer.
+    assert!(ok >= 2, "the in-flight cap itself must be admitted");
+    assert!(!throttled.is_empty(), "a 16-deep burst must trip a cap of 2");
+    assert_eq!(ok + throttled.len(), 16);
+    assert!(
+        throttled[0].contains("in-flight quota"),
+        "throttle reason should name the quota: {:?}",
+        throttled[0]
+    );
+
+    // One-at-a-time traffic never trips an in-flight cap of 2.
+    for _ in 0..4 {
+        client.stats().unwrap();
+    }
+
+    server.shutdown().unwrap();
+    service.shutdown().unwrap();
+}
+
+/// Brownout sheds ingest before reads: with the training fleet paused
+/// and the queue-depth gauge at the watermark, ingest answers
+/// `Throttled` while encode keeps serving; draining the queue restores
+/// ingest, and both transitions are journaled.
+#[test]
+fn brownout_sheds_ingest_before_reads_and_journals_transitions() {
+    let _serial = serial();
+    let (cfg, mut serve) = tiny_preset();
+    serve.start_paused = true; // nothing drains the ingest queues
+    serve.ingest_queue = 1_024;
+    serve.brownout_depth = 4;
+    let (service, server) = start_stack(&cfg, &serve);
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let batch = [0.5f32, -0.5];
+
+    // Four accepted batches park four entries on the paused queue.
+    for i in 0..4 {
+        match burst(&mut client, &[Request::Ingest { points: batch.to_vec() }])
+            .remove(0)
+        {
+            Response::IngestAck { .. } => {}
+            other => panic!("ingest {i} below the watermark: {other:?}"),
+        }
+    }
+    // The watermark is reached: the next ingest is shed, in-band.
+    match burst(&mut client, &[Request::Ingest { points: batch.to_vec() }])
+        .remove(0)
+    {
+        Response::Throttled { retry_after_ms, message } => {
+            assert!(retry_after_ms >= 1);
+            assert!(
+                message.contains("brownout"),
+                "shed reason should say brownout: {message:?}"
+            );
+        }
+        other => panic!("ingest at the watermark must shed: {other:?}"),
+    }
+    // …while the read path keeps answering on the same connection.
+    client.encode(&batch).expect("brownout must not shed reads");
+    client.stats().expect("brownout must not shed stats");
+
+    // Release the fleet: the queue drains, ingest is restored.
+    service.resume();
+    wait_for(10, "brownout exit after the queue drains", || {
+        matches!(
+            burst(&mut client, &[Request::Ingest { points: batch.to_vec() }])
+                .remove(0),
+            Response::IngestAck { .. }
+        )
+    });
+    let m = client.metrics(64).unwrap();
+    let kinds: Vec<&str> = m.events.iter().map(|e| e.kind.as_str()).collect();
+    assert!(kinds.contains(&"brownout.enter"), "journal: {kinds:?}");
+    assert!(kinds.contains(&"brownout.exit"), "journal: {kinds:?}");
+
+    server.shutdown().unwrap();
+    service.shutdown().unwrap();
+}
+
+/// Raise the soft fd limit toward the hard one (the 512-connection test
+/// needs ~3 fds per connection); returns the resulting soft limit.
+#[cfg(target_os = "linux")]
+fn raise_fd_limit() -> u64 {
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    unsafe {
+        let mut r = RLimit { cur: 0, max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut r) != 0 {
+            return 1_024;
+        }
+        let want = r.max.min(1 << 16);
+        if want > r.cur {
+            let bumped = RLimit { cur: want, max: r.max };
+            if setrlimit(RLIMIT_NOFILE, &bumped) == 0 {
+                return want;
+            }
+        }
+        r.cur
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn raise_fd_limit() -> u64 {
+    1_024
+}
+
+/// The scale test: hundreds of concurrently *pipelined* connections —
+/// far more than the worker pool — against a quiesced service, every
+/// reply identical to a sequential client issuing the same requests.
+/// Quiescing first freezes the snapshots, so "identical" is exact, not
+/// statistical: any reply misordering, cross-connection mixup, or
+/// buffer corruption in the event loop shows up as a diff.
+#[test]
+fn hundreds_of_pipelined_connections_match_a_sequential_client() {
+    let _serial = serial();
+    let fd_limit = raise_fd_limit();
+    // ~3 fds per connection (client stream + its try_clone + the server
+    // side) plus generous slack for the harness.
+    let connections: usize = if fd_limit >= 2_600 { 512 } else { 64 };
+    const WINDOW: usize = 32;
+
+    let (cfg, serve) = tiny_preset();
+    let (service, server) = start_stack(&cfg, &serve);
+    // Freeze the codebooks: reads now answer from immutable snapshots.
+    service.shutdown().unwrap();
+    let addr = server.local_addr().to_string();
+
+    // One deterministic request script, shared by every connection.
+    let points = cfg.data.mixture.eval_sample(64, cfg.seed);
+    let reqs: Arc<Vec<Request>> = Arc::new(
+        (0..24)
+            .map(|i| {
+                let batch =
+                    points[(i % 8) * 16..(i % 8) * 16 + 16].to_vec();
+                match i % 3 {
+                    0 => Request::Encode { points: batch },
+                    1 => Request::Nearest { points: batch },
+                    _ => Request::Distortion { points: batch },
+                }
+            })
+            .collect(),
+    );
+
+    // The oracle: one connection, classic request/reply.
+    let mut oracle = Client::connect(addr.as_str()).unwrap();
+    let expected: Arc<Vec<String>> = Arc::new(
+        reqs.iter()
+            .map(|r| {
+                oracle.send(r).unwrap();
+                oracle.flush().unwrap();
+                format!("{:?}", oracle.recv().unwrap())
+            })
+            .collect(),
+    );
+
+    let joins: Vec<_> = (0..connections)
+        .map(|c| {
+            let addr = addr.clone();
+            let reqs = Arc::clone(&reqs);
+            let expected = Arc::clone(&expected);
+            std::thread::Builder::new()
+                .name(format!("dalvq-adm-{c}"))
+                .spawn(move || {
+                    let mut client = Client::connect(addr.as_str()).unwrap();
+                    let (mut sent, mut recvd) = (0usize, 0usize);
+                    while recvd < reqs.len() {
+                        while sent < reqs.len() && sent - recvd < WINDOW {
+                            client.send(&reqs[sent]).unwrap();
+                            sent += 1;
+                        }
+                        client.flush().unwrap();
+                        let got = format!("{:?}", client.recv().unwrap());
+                        assert_eq!(
+                            got, expected[recvd],
+                            "conn {c}: reply {recvd} diverged"
+                        );
+                        recvd += 1;
+                    }
+                })
+                .unwrap()
+        })
+        .collect();
+    for j in joins {
+        j.join().expect("pipelined connection panicked");
+    }
+
+    let m = oracle.metrics(16).unwrap();
+    assert!(
+        counter(&m, "conn.accepted") >= connections as u64 + 1,
+        "every connection must be accepted"
+    );
+
+    server.shutdown().unwrap();
+}
+
+/// Shutdown is deterministic with idle connections open: the wake token
+/// interrupts the poll — no throwaway self-connection, no waiting out a
+/// timeout — and the connection gauges track accepts and hangups.
+#[test]
+fn shutdown_is_prompt_with_idle_connections_open() {
+    let _serial = serial();
+    let (cfg, serve) = tiny_preset();
+    let (service, server) = start_stack(&cfg, &serve);
+    let addr = server.local_addr().to_string();
+
+    let mut clients: Vec<Client> = (0..4)
+        .map(|_| Client::connect(addr.as_str()).unwrap())
+        .collect();
+    for c in clients.iter_mut() {
+        c.stats().unwrap();
+    }
+    let m = clients[0].metrics(16).unwrap();
+    assert!(counter(&m, "conn.accepted") >= 4);
+    assert!(gauge(&m, "conn.active") >= 4);
+
+    // A hangup is noticed by readiness, not by a read timeout.
+    let before = gauge(&m, "conn.active");
+    drop(clients.pop());
+    wait_for(5, "conn.active to drop after a hangup", || {
+        let m = clients[0].metrics(16).unwrap();
+        gauge(&m, "conn.active") < before
+    });
+
+    let t = Instant::now();
+    server.shutdown().unwrap();
+    let took = t.elapsed();
+    assert!(
+        took < Duration::from_secs(3),
+        "shutdown with idle connections took {took:?}"
+    );
+    service.shutdown().unwrap();
+
+    // The remaining clients see a closed connection, not a hang.
+    assert!(clients[0].stats().is_err());
+}

@@ -12,9 +12,9 @@
 //!   trailing garbage, and `read_frame` against mid-frame EOF.
 
 use dalvq::serve::protocol::{
-    read_frame, write_frame, MetricEvent, MetricHist, MetricsReply, Request,
-    Response, StateFile, StateShipment, StatsReply, WireSpan, WireTrace,
-    MAX_FRAME,
+    read_frame, write_frame, Decoder, MetricEvent, MetricHist, MetricsReply,
+    Request, Response, StateFile, StateShipment, StatsReply, WireSpan,
+    WireTrace, MAX_FRAME,
 };
 use dalvq::util::Rng;
 
@@ -117,7 +117,11 @@ fn rand_metric_pairs(rng: &mut Rng, max_len: usize) -> Vec<(String, u64)> {
 
 /// Any response that is not a trace envelope.
 fn rand_bare_response(rng: &mut Rng) -> Response {
-    match rng.usize(12) {
+    match rng.usize(13) {
+        12 => Response::Throttled {
+            retry_after_ms: rng.next_u64(),
+            message: rand_string(rng, 40),
+        },
         11 => Response::Traces(rand_traces(rng, 4)),
         10 => Response::Metrics(MetricsReply {
             uptime_ms: rng.next_u64(),
@@ -312,7 +316,7 @@ fn unknown_opcodes_err_for_both_directions() {
         [0x01, 0x02, 0x03, 0x04, 0x05, 0x06, 0x07, 0x08, 0x09, 0x0A, 0x0B];
     let known_resp = [
         0x81, 0x82, 0x83, 0x84, 0x85, 0x86, 0x87, 0x88, 0x89, 0x8A, 0x8B,
-        0xFE, 0xFF,
+        0xFD, 0xFE, 0xFF,
     ];
     for op in 0..=255u8 {
         if !known_req.contains(&op) {
@@ -755,4 +759,85 @@ fn write_frame_refuses_oversized_payloads() {
     let mut sink = Vec::new();
     assert!(write_frame(&mut sink, &payload).is_err());
     assert!(sink.is_empty(), "nothing may be written for a rejected frame");
+}
+
+/// The event loop's incremental decoder must be byte-split-invariant:
+/// however the kernel slices a frame stream across reads, the frames it
+/// yields are identical. Replays a 3-frame stream (a points request, a
+/// trace envelope, a `Throttled` reply payload among them) split at
+/// *every* byte boundary, plus in jittered random chunks, against a
+/// one-shot parse of the whole stream.
+#[test]
+fn frames_split_at_every_byte_boundary_decode_identically() {
+    let mut rng = Rng::from_seed(0xD1CE);
+    let frames: Vec<Vec<u8>> = vec![
+        Request::Encode { points: rand_f32s(&mut rng, 32) }.encode(),
+        Request::Traced {
+            hi: rng.next_u64(),
+            lo: rng.next_u64(),
+            parent: rng.next_u64(),
+            inner: Box::new(Request::Ingest {
+                points: rand_f32s(&mut rng, 32),
+            }),
+        }
+        .encode(),
+        Response::Throttled {
+            retry_after_ms: 42,
+            message: "rate quota exceeded: 5 requests/s".into(),
+        }
+        .encode(),
+    ];
+    let mut stream = Vec::new();
+    for f in &frames {
+        stream.extend_from_slice(&(f.len() as u32).to_le_bytes());
+        stream.extend_from_slice(f);
+    }
+
+    // Feed the stream to a Decoder in two chunks cut at `split`, for
+    // every split point, and collect the frames it yields.
+    let parse_split = |cuts: &[usize]| -> Vec<Vec<u8>> {
+        let mut dec = Decoder::new();
+        let mut got = Vec::new();
+        let mut at = 0usize;
+        for &cut in cuts.iter().chain(std::iter::once(&stream.len())) {
+            let chunk = &stream[at..cut];
+            at = cut;
+            let spare = dec.spare(chunk.len().max(1));
+            spare[..chunk.len()].copy_from_slice(chunk);
+            dec.advance(chunk.len());
+            while let Some(frame) = dec.next_frame().unwrap() {
+                got.push(frame.to_vec());
+            }
+        }
+        got
+    };
+
+    let whole = parse_split(&[]);
+    assert_eq!(whole, frames, "one-shot parse must yield the input frames");
+    for split in 0..=stream.len() {
+        assert_eq!(
+            parse_split(&[split]),
+            frames,
+            "stream split at byte {split} diverged"
+        );
+    }
+    // Random multi-way jitter: many small cuts at once.
+    for _ in 0..200 {
+        let mut cuts: Vec<usize> =
+            (0..rng.usize(12)).map(|_| rng.usize(stream.len() + 1)).collect();
+        cuts.sort_unstable();
+        assert_eq!(parse_split(&cuts), frames, "cuts {cuts:?} diverged");
+    }
+    // Leftover partial bytes stay pending, never yield a frame.
+    let mut dec = Decoder::new();
+    let cut = stream.len() - 3;
+    let spare = dec.spare(cut);
+    spare[..cut].copy_from_slice(&stream[..cut]);
+    dec.advance(cut);
+    let mut n = 0;
+    while dec.next_frame().unwrap().is_some() {
+        n += 1;
+    }
+    assert_eq!(n, frames.len() - 1, "a partial tail frame must not yield");
+    assert!(dec.pending() > 0);
 }

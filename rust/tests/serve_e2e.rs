@@ -300,6 +300,7 @@ fn serve_preset_end_to_end_with_loadgen() {
         connections: 4,
         requests_per_conn: 50,
         batch_points: 32,
+        pipeline: 1,
         ingest_frac: 0.25,
         skew: 0.0,
         read_only: false,
