@@ -266,13 +266,21 @@ pub struct ServeConfig {
     /// (default) sizes the pool to the machine's available parallelism;
     /// an explicit value pins it (validated `<= 1024`). The reactor
     /// itself is always one thread — this pool only runs decode /
-    /// dispatch / encode.
+    /// dispatch / encode. The pool is shared by every connection, so a
+    /// slow op (`Rebalance`'s epoch swap, `FetchState` shipping,
+    /// `Checkpoint`, a coalesced-batch wait) occupies a worker for its
+    /// whole duration; deployments that issue admin ops under load
+    /// should raise this above the core count to keep fast reads from
+    /// queueing behind them.
     pub io_workers: usize,
     /// Per-connection in-flight quota: at most this many requests may
-    /// be parsed but not yet answered on one connection; excess
-    /// pipelined frames answer `Throttled` in-band (the connection
-    /// survives). `0` (default) disables the quota — backpressure then
-    /// falls to the reactor's parse-ahead bound and TCP flow control.
+    /// be parsed but not yet answered on one connection — queued,
+    /// executing, or completed but still waiting behind an earlier
+    /// reply; excess pipelined frames answer `Throttled` in-band (the
+    /// connection survives). `0` (default) disables the quota —
+    /// backpressure then falls to the reactor's parse-ahead bound and
+    /// TCP flow control. Values at or above that bound (64) never trip:
+    /// the reactor pauses parsing before the quota is reached.
     pub max_inflight: usize,
     /// Per-connection rate quota in requests/second (token bucket with
     /// a one-second burst). Requests past the budget answer `Throttled`

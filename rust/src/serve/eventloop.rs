@@ -12,18 +12,23 @@
 //! `Server::shutdown` just sets the stop flag and wakes the loop.
 //!
 //! Admission control happens at parse time, before any worker is
-//! involved: a per-connection token bucket (`serve.rate_limit` req/s),
-//! a per-connection in-flight quota (`serve.max_inflight` parsed but
-//! unanswered frames), and a brownout watermark
+//! involved: a per-connection in-flight quota (`serve.max_inflight`
+//! parsed but unanswered frames), a brownout watermark
 //! (`serve.brownout_depth`) that sheds ingest frames — reads are never
 //! shed — while any `shard.<s>.queue_depth` gauge sits at or above the
-//! watermark. Refusals answer in-band with a `Throttled` frame
-//! carrying a retry-after hint; the connection survives. With every
-//! quota off, backpressure is still bounded: a connection more than
-//! [`PARSE_AHEAD`] frames ahead of its replies (or holding more than
-//! [`WQ_HIGH`] queued reply bytes) simply stops being read until the
-//! backlog drains, which surfaces to the client as ordinary TCP flow
-//! control.
+//! watermark, and a per-connection token bucket (`serve.rate_limit`
+//! req/s), checked last so a request refused by a non-consuming gate
+//! never burns a rate token. Refusals answer in-band with a
+//! `Throttled` frame carrying a retry-after hint; the connection
+//! survives. With every quota off, backpressure is still bounded: a
+//! connection more than [`PARSE_AHEAD`] frames ahead of its replies
+//! (or holding more than [`WQ_HIGH`] queued reply bytes) simply stops
+//! being read until the backlog drains, which surfaces to the client
+//! as ordinary TCP flow control. That pause is level-triggered, not
+//! edge-triggered: frames already sitting whole in the decoder when
+//! parsing stops at a watermark are revisited as completions and
+//! flushes drain the backlog ([`Reactor::resume_parse`]) — the socket
+//! may be empty by then, so `POLLIN` alone would never fire again.
 
 use std::collections::VecDeque;
 use std::io::{Read, Write};
@@ -309,6 +314,12 @@ struct Conn {
     /// No more reads: peer EOF, a framing error, or a fatal reply
     /// failure. The connection closes once outstanding work flushes.
     closing: bool,
+    /// The decoder's buffered bytes are garbage (framing error) or the
+    /// connection is past saving (handler failure): never parse them.
+    /// Implies `closing`. A plain EOF leaves this unset so frames the
+    /// peer pipelined before half-closing are still parsed and
+    /// answered, as the blocking server did.
+    poisoned: bool,
     /// Token bucket for `rate_limit`.
     tokens: f64,
     refilled: Instant,
@@ -329,6 +340,7 @@ impl Conn {
             pending: VecDeque::new(),
             dispatched: false,
             closing: false,
+            poisoned: false,
             tokens: rate as f64,
             refilled: Instant::now(),
         }
@@ -369,7 +381,10 @@ impl Conn {
 }
 
 fn conn_closable(conn: &Conn) -> bool {
-    conn.closing && conn.idle()
+    // A half-closed peer may still be owed answers for frames that sat
+    // whole in the decoder when parsing paused at a watermark; only a
+    // poisoned connection abandons buffered frames.
+    conn.closing && conn.idle() && (conn.poisoned || !conn.dec.has_frame())
 }
 
 /// Admission verdict for one parsed frame.
@@ -520,7 +535,7 @@ impl Reactor {
             if stopping {
                 let deadline = *drain_deadline
                     .get_or_insert_with(|| Instant::now() + DRAIN_DEADLINE);
-                self.drain_done();
+                self.drain_done(true);
                 let busy = self.conns.iter().flatten().any(|c| !c.idle());
                 if !busy || Instant::now() >= deadline {
                     return Ok(());
@@ -574,7 +589,7 @@ impl Reactor {
 
             let cycle_start = Instant::now();
             self.drain_wakes();
-            self.drain_done();
+            self.drain_done(stopping);
             for (k, tok) in toks.iter().enumerate() {
                 let revents = fds[k].revents;
                 if revents == 0 {
@@ -642,6 +657,15 @@ impl Reactor {
         if !dead && !conn.wq.is_empty() {
             dead = self.flush(&mut conn).is_err();
         }
+        if !dead && !stopping {
+            // The flush may have dropped wq_bytes below WQ_HIGH: frames
+            // already buffered in the decoder can proceed now even if
+            // the socket itself stays silent.
+            self.resume_parse(i, &mut conn);
+            if !conn.wq.is_empty() {
+                dead = self.flush(&mut conn).is_err();
+            }
+        }
         if dead || conn_closable(&conn) {
             self.close(conn);
             self.free.push(i);
@@ -690,6 +714,7 @@ impl Reactor {
                     // framing error without a reply; same here, after
                     // queued replies flush.
                     conn.closing = true;
+                    conn.poisoned = true;
                     return false;
                 }
                 Admit::Throttle { retry_ms, message } => {
@@ -710,29 +735,23 @@ impl Reactor {
     }
 
     /// Pull the next frame out of the connection's decoder and decide
-    /// its fate. Quota checks run in the declared severity order: rate
-    /// first, then the in-flight cap, then the brownout watermark
-    /// (ingest frames only — reads are never shed).
+    /// its fate. The non-consuming gates run first — the in-flight cap,
+    /// then the brownout watermark (ingest frames only — reads are
+    /// never shed) — and the rate-limit token bucket last, so a request
+    /// another gate refuses never burns a rate token and the retry
+    /// hints a throttled burst sees stay honest.
     fn admit(&mut self, conn: &mut Conn) -> Admit {
         let payload = match conn.dec.next_frame() {
             Ok(Some(payload)) => payload,
             Ok(None) => return Admit::Empty,
             Err(_) => return Admit::Bad,
         };
-        if let Some(retry_ms) =
-            take_token(&mut conn.tokens, &mut conn.refilled, self.rate_limit)
-        {
-            return Admit::Throttle {
-                retry_ms,
-                message: format!(
-                    "rate quota exceeded: {} requests/s per connection",
-                    self.rate_limit
-                ),
-            };
-        }
-        if self.max_inflight > 0
-            && conn.pending.len() + usize::from(conn.dispatched) >= self.max_inflight
-        {
+        // The backlog (spelled out field-wise — `payload` still borrows
+        // the decoder) is exactly the documented quota: frames parsed
+        // but not yet answered — queued, executing, or finished but
+        // still held in a reorder slot behind an earlier reply.
+        let backlog = (conn.seq_next - conn.emit_next) as usize;
+        if self.max_inflight > 0 && backlog >= self.max_inflight {
             return Admit::Throttle {
                 retry_ms: 1,
                 message: format!(
@@ -775,6 +794,17 @@ impl Reactor {
                 };
             }
         }
+        if let Some(retry_ms) =
+            take_token(&mut conn.tokens, &mut conn.refilled, self.rate_limit)
+        {
+            return Admit::Throttle {
+                retry_ms,
+                message: format!(
+                    "rate quota exceeded: {} requests/s per connection",
+                    self.rate_limit
+                ),
+            };
+        }
         let mut buf = self.pool.get();
         buf.extend_from_slice(payload);
         Admit::Run(buf)
@@ -811,7 +841,24 @@ impl Reactor {
         }
     }
 
-    fn drain_done(&mut self) {
+    /// Re-run the frame parser over bytes already buffered in the
+    /// connection's decoder. Watermark pauses are level-triggered: a
+    /// burst of pipelined frames can be consumed off the socket in one
+    /// read but parsed only up to [`PARSE_AHEAD`]/[`WQ_HIGH`] — after
+    /// that the socket may never signal `POLLIN` again, so every place
+    /// that drains the backlog (worker completions, write flushes) must
+    /// revisit the leftovers or the connection deadlocks on its own
+    /// buffer. `parse_frames` re-checks the watermarks itself, so this
+    /// only has to ask whether a whole frame is waiting.
+    fn resume_parse(&mut self, i: usize, conn: &mut Conn) {
+        if !conn.poisoned && conn.dec.has_frame() {
+            // A framing error here sets `closing`/`poisoned`, which the
+            // caller's closable check picks up after the next flush.
+            let _ = self.parse_frames(i, conn);
+        }
+    }
+
+    fn drain_done(&mut self, stopping: bool) {
         while let Ok(done) = self.done_rx.try_recv() {
             self.pool.put(done.payload);
             let live = self
@@ -837,6 +884,7 @@ impl Reactor {
                 // work — the blocking server died at the same point.
                 self.pool.put(done.out);
                 conn.closing = true;
+                conn.poisoned = true;
                 for (_, _, buf) in conn.pending.drain(..) {
                     self.pool.put(buf);
                 }
@@ -846,7 +894,16 @@ impl Reactor {
                     }
                 }
             }
-            let dead = !conn.wq.is_empty() && self.flush(&mut conn).is_err();
+            let mut dead = !conn.wq.is_empty() && self.flush(&mut conn).is_err();
+            if !dead && !stopping {
+                // This completion lowered the backlog below PARSE_AHEAD
+                // (and the flush may have drained wq_bytes): frames
+                // still buffered in the decoder are parsable again.
+                self.resume_parse(done.conn, &mut conn);
+                if !conn.wq.is_empty() {
+                    dead = self.flush(&mut conn).is_err();
+                }
+            }
             if dead || conn_closable(&conn) {
                 self.close(conn);
                 self.free.push(done.conn);

@@ -533,6 +533,22 @@ impl Decoder {
         self.end - self.start
     }
 
+    /// Whether [`Decoder::next_frame`] would make progress without more
+    /// bytes: a complete frame is buffered, or the buffered length
+    /// prefix is over the cap and the next call will report the error.
+    /// Callers that pause mid-buffer (watermarks) poll this to know the
+    /// leftovers still need a visit.
+    pub fn has_frame(&self) -> bool {
+        let have = self.end - self.start;
+        if have < 4 {
+            return false;
+        }
+        let len_buf: [u8; 4] =
+            self.buf[self.start..self.start + 4].try_into().unwrap();
+        let len = u32::from_le_bytes(len_buf);
+        len > MAX_FRAME || have >= 4 + len as usize
+    }
+
     /// The next complete frame payload, borrowed from the buffer (valid
     /// until the next `spare`/`next_frame` call). `Ok(None)` when the
     /// buffered bytes end mid-header or mid-payload — read more and ask
@@ -1836,8 +1852,35 @@ mod tests {
         let bad = (MAX_FRAME + 1).to_le_bytes();
         dec.spare(4)[..4].copy_from_slice(&bad);
         dec.advance(4);
+        assert!(dec.has_frame(), "an oversized prefix is reportable progress");
         let err = dec.next_frame().unwrap_err().to_string();
         assert!(err.contains("exceeds cap"), "{err}");
+    }
+
+    #[test]
+    fn decoder_has_frame_tracks_complete_frames_without_consuming() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Request::Stats.encode()).unwrap();
+        let cut = wire.len(); // first frame ends here
+        write_frame(&mut wire, &Request::Encode { points: vec![1.0] }.encode())
+            .unwrap();
+
+        let mut dec = Decoder::new();
+        assert!(!dec.has_frame(), "empty buffer");
+        // Everything up to one byte short of the first frame: no frame yet.
+        dec.spare(cut - 1)[..cut - 1].copy_from_slice(&wire[..cut - 1]);
+        dec.advance(cut - 1);
+        assert!(!dec.has_frame(), "mid-frame bytes are not a frame");
+        // The rest of the stream: both frames whole, peeking consumes nothing.
+        let rest = wire.len() - (cut - 1);
+        dec.spare(rest)[..rest].copy_from_slice(&wire[cut - 1..]);
+        dec.advance(rest);
+        assert!(dec.has_frame());
+        assert!(dec.has_frame(), "peeking is idempotent");
+        assert!(dec.next_frame().unwrap().is_some());
+        assert!(dec.has_frame(), "second frame still whole after the first pops");
+        assert!(dec.next_frame().unwrap().is_some());
+        assert!(!dec.has_frame(), "drained");
     }
 
     #[test]

@@ -10,11 +10,15 @@
 //! prompt with idle connections open (the event loop's wake token, not
 //! the old throwaway-connection hack).
 
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use dalvq::config::{ExperimentConfig, SchemeConfig, ServeConfig};
-use dalvq::serve::protocol::{MetricsReply, Request, Response};
+use dalvq::serve::protocol::{
+    read_frame, write_frame, MetricsReply, Request, Response,
+};
 use dalvq::serve::{Client, Server, VqService};
 use dalvq::sim::DelayModel;
 use dalvq::vq::Schedule;
@@ -175,6 +179,72 @@ fn inflight_quota_throttles_a_pipelined_burst() {
     for _ in 0..4 {
         client.stats().unwrap();
     }
+
+    server.shutdown().unwrap();
+    service.shutdown().unwrap();
+}
+
+/// A burst pipelined deeper than the reactor's parse-ahead bound (64
+/// frames) must still answer completely. The whole burst is consumed
+/// off the socket into the decoder in one or two reads; parsing pauses
+/// at the watermark and the socket goes silent, so only the
+/// level-triggered re-parse on worker completions can reach the
+/// leftover frames — an edge-triggered loop deadlocks here with the
+/// client waiting forever for the tail of its replies. The second leg
+/// half-closes right after writing: frames the peer pipelined before
+/// EOF are still owed answers, then the server hangs up cleanly.
+#[test]
+fn bursts_deeper_than_parse_ahead_answer_completely() {
+    let _serial = serial();
+    const BURST: usize = 200; // > PARSE_AHEAD = 64, by a wide margin
+    let (cfg, serve) = tiny_preset();
+    let (service, server) = start_stack(&cfg, &serve);
+    let addr = server.local_addr();
+
+    // One contiguous byte blob of BURST Stats frames (5 bytes each —
+    // the whole burst fits one TCP segment and lands in one read).
+    let payload = Request::Stats.encode();
+    let mut blob = Vec::new();
+    for _ in 0..BURST {
+        write_frame(&mut blob, &payload).unwrap();
+    }
+
+    // Leg 1: write the burst, only then start reading replies. The
+    // read timeout turns a reactor deadlock into a loud failure
+    // instead of a hung test.
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    stream.write_all(&blob).unwrap();
+    for i in 0..BURST {
+        let frame = read_frame(&mut stream)
+            .unwrap_or_else(|e| panic!("reply {i} of {BURST}: {e:#}"))
+            .unwrap_or_else(|| panic!("server hung up before reply {i}"));
+        match Response::decode(&frame).unwrap() {
+            Response::Stats(_) => {}
+            other => panic!("reply {i}: unexpected {other:?}"),
+        }
+    }
+
+    // Leg 2: same burst, then an immediate write-side half-close. The
+    // peer going quiet must not discard frames it already sent.
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    stream.write_all(&blob).unwrap();
+    stream.shutdown(Shutdown::Write).unwrap();
+    for i in 0..BURST {
+        let frame = read_frame(&mut stream)
+            .unwrap_or_else(|e| panic!("half-close reply {i}: {e:#}"))
+            .unwrap_or_else(|| panic!("half-close: hangup before reply {i}"));
+        match Response::decode(&frame).unwrap() {
+            Response::Stats(_) => {}
+            other => panic!("half-close reply {i}: unexpected {other:?}"),
+        }
+    }
+    // Every owed reply arrived; now the server closes its side.
+    assert!(
+        read_frame(&mut stream).unwrap().is_none(),
+        "clean EOF after the last owed reply"
+    );
 
     server.shutdown().unwrap();
     service.shutdown().unwrap();
