@@ -221,6 +221,14 @@ pub struct ServeConfig {
     /// Milliseconds between a follower's sync polls of the leader's
     /// checkpoint generation. Only meaningful with `follow`.
     pub sync_every_ms: u64,
+    /// Consecutive failed sync polls after which a mirrored follower
+    /// **promotes itself to leader** from its byte-identical local
+    /// mirror (automatic failover): lost-contact budget ≈
+    /// `sync_every_ms * miss_threshold`. `0` (default) disarms failover
+    /// — the follower retries forever. Arming it requires both `follow`
+    /// and `state_dir` (a mirror-less follower has nothing to promote
+    /// from).
+    pub miss_threshold: u64,
     /// Slow-query log threshold in microseconds: any request whose
     /// end-to-end handling exceeds this emits a `slow_query` journal
     /// event (op, total µs, route/scan stage breakdown) and bumps the
@@ -320,6 +328,7 @@ impl Default for ServeConfig {
             rebalance_min_folds: 64,
             follow: None,
             sync_every_ms: 500,
+            miss_threshold: 0,
             slow_query_us: 0,
             metrics_file: None,
             metrics_every_ms: 1_000,
@@ -359,6 +368,14 @@ impl ServeConfig {
             if self.sync_every_ms == 0 {
                 errs.push("sync_every_ms must be >= 1".into());
             }
+            if self.miss_threshold > 0 && self.state_dir.is_none() {
+                errs.push(
+                    "miss_threshold (automatic failover) requires \
+                     state_dir: promotion serves from the follower's \
+                     local mirror"
+                        .into(),
+                );
+            }
             if self.rebalance_skew > 0.0 {
                 errs.push(
                     "a follower is read-only and cannot rebalance; arm \
@@ -393,6 +410,13 @@ impl ServeConfig {
                     base.data.n_total, self.shards, base.m
                 ));
             }
+        }
+        if self.miss_threshold > 0 && self.follow.is_none() {
+            errs.push(
+                "miss_threshold (automatic failover) only applies to a \
+                 follower; set follow"
+                    .into(),
+            );
         }
         if self.sync_exchange && self.drop_prob > 0.0 {
             errs.push(
@@ -1039,6 +1063,22 @@ mod tests {
         s.sync_every_ms = 0;
         let msg = format!("{:#}", s.validate(&base).unwrap_err());
         assert!(msg.contains("sync_every_ms"), "{msg}");
+
+        // failover needs a mirror to promote from
+        let mut s = ServeConfig::default();
+        s.follow = Some("127.0.0.1:7171".into());
+        s.miss_threshold = 3;
+        let msg = format!("{:#}", s.validate(&base).unwrap_err());
+        assert!(msg.contains("state_dir"), "{msg}");
+        s.state_dir = Some(std::path::PathBuf::from("/tmp/x"));
+        s.validate(&base).unwrap();
+
+        // ... and only makes sense on a follower
+        let mut s = ServeConfig::default();
+        s.miss_threshold = 3;
+        s.state_dir = Some(std::path::PathBuf::from("/tmp/x"));
+        let msg = format!("{:#}", s.validate(&base).unwrap_err());
+        assert!(msg.contains("follow"), "{msg}");
     }
 
     #[test]

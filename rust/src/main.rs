@@ -99,6 +99,10 @@ OPTIONS (serve):
                              --state-dir mirrors the bundles locally
   --sync-every <MS>          follower sync-poll interval in milliseconds
                              [default: 500]
+  --miss-threshold <N>       AUTOMATIC FAILOVER: after N consecutive missed
+                             sync polls a mirrored follower promotes itself
+                             to leader from its local mirror (needs
+                             --follow and --state-dir; 0 = off)
   --metrics-file <FILE>      write periodic telemetry snapshots (counters,
                              gauges, latency digests, recent events) to
                              this file as JSON, plus once at shutdown
@@ -371,6 +375,8 @@ fn run() -> Result<()> {
                 parse_opt_u64(&mut args, "--rebalance-min-folds")?;
             let follow = args.take_value("--follow")?;
             let sync_every = parse_opt_u64(&mut args, "--sync-every")?;
+            let miss_threshold =
+                parse_opt_u64(&mut args, "--miss-threshold")?;
             let metrics_file = args.take_value("--metrics-file")?.map(PathBuf::from);
             let metrics_every = parse_opt_u64(&mut args, "--metrics-every")?;
             let slow_query_us = parse_opt_u64(&mut args, "--slow-query-us")?;
@@ -407,6 +413,9 @@ fn run() -> Result<()> {
             }
             if let Some(ms) = sync_every {
                 p.serve.sync_every_ms = ms;
+            }
+            if let Some(n) = miss_threshold {
+                p.serve.miss_threshold = n;
             }
             if let Some(f) = metrics_file {
                 p.serve.metrics_file = Some(f);
@@ -463,6 +472,13 @@ fn run() -> Result<()> {
                     p.base.dim(),
                     p.serve.probe_n,
                 ),
+            }
+            if p.serve.miss_threshold > 0 {
+                println!(
+                    "dalvq serve: automatic failover armed — promote from \
+                     the local mirror after {} consecutive missed polls",
+                    p.serve.miss_threshold,
+                );
             }
             if let Some(dir) = service.state_dir() {
                 println!(

@@ -295,6 +295,7 @@ mod tests {
             dim: 2,
             points_per_exchange: 50,
             router_version: 0,
+            generation: 0,
             shard_versions: vec![1, 2, 3],
         };
         assert!(Manifest::from_json(&m.to_json()).is_err());

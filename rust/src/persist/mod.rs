@@ -34,7 +34,11 @@
 //!   generation-stamped read of a live state dir as one raw-byte bundle
 //!   ([`ship::read_bundle`]), plus decoding and mirroring it on the far
 //!   side — how a read-only follower warm-starts, and keeps re-syncing,
-//!   from a leader's checkpoints.
+//!   from a leader's checkpoints. Replication v2 adds the delta codec
+//!   ([`ship::delta_files`] / [`ship::apply_delta`]: ship only the
+//!   shard files whose version advanced) and bounded chunking
+//!   ([`ship::chunk_files`] / [`ship::reassemble_chunks`]) so a cut of
+//!   any size fits the wire's frame cap.
 //!
 //! The shard is the save/restore/migrate unit (the `ShardOutcome` /
 //! `shard_versions` granularity): shards checkpoint independently, a
@@ -61,4 +65,7 @@ pub use manifest::{
 };
 pub use rebalance::{rebalance_state_dir, RebalanceReport};
 pub use restore::{decode_state, load_state, RestoredState};
-pub use ship::{decode_bundle, read_bundle, write_bundle, StateBundle};
+pub use ship::{
+    apply_delta, chunk_files, decode_bundle, delta_files, read_bundle,
+    reassemble_chunks, write_bundle, FilePart, StateBundle,
+};

@@ -35,6 +35,17 @@
 //! harmless — a bundle's authority is its shard files, and the follower
 //! resumes from their versions exactly as a local warm restart would.
 //!
+//! ## Deltas and chunks
+//!
+//! Replication v2 ships *less* and ships it in *pieces*. A shipper that
+//! knows what cut the requester already holds can send only the files
+//! that changed ([`delta_files`]); the receiver merges them over its
+//! held set with [`apply_delta`], which reproduces the full bundle
+//! byte-for-byte (property-tested below). Independently, a file set of
+//! any size can be split into bounded chunks ([`chunk_files`]) and
+//! reassembled ([`reassemble_chunks`]) with strict contiguity checks,
+//! so a shipment never has to fit one wire frame.
+//!
 //! ## Tracing
 //!
 //! In the serving stack, the whole of [`read_bundle`] — seqlock retries
@@ -283,6 +294,244 @@ pub fn write_bundle(dir: &Path, files: &[(String, Vec<u8>)]) -> Result<()> {
     Ok(())
 }
 
+/// The subset of `bundle` a requester already holding a consistent cut
+/// at `have_router_version` / `have_shard_versions` still needs: the
+/// manifest (every shipment names its cut) plus exactly the shard
+/// files whose version advanced. `None` when no delta is expressible —
+/// the router epoch or the shard count changed, so the full bundle
+/// must ship (the shipper falls back rather than guessing).
+pub fn delta_files(
+    bundle: &StateBundle,
+    have_router_version: u64,
+    have_shard_versions: &[u64],
+) -> Option<Vec<(String, Vec<u8>)>> {
+    let m = &bundle.manifest;
+    if m.router_version != have_router_version
+        || m.shard_versions.len() != have_shard_versions.len()
+    {
+        return None;
+    }
+    let mut out = Vec::new();
+    for (name, bytes) in &bundle.files {
+        let keep = if name == MANIFEST_FILE {
+            true
+        } else if name == ROUTER_FILE {
+            // Same router version ⇒ byte-identical router file (the
+            // router is only rewritten on an epoch bump).
+            false
+        } else if let Some(s) = parse_shard_name(name, m.shards) {
+            m.shard_versions[s] != have_shard_versions[s]
+        } else {
+            return None;
+        };
+        if keep {
+            out.push((name.clone(), bytes.clone()));
+        }
+    }
+    Some(out)
+}
+
+/// Merge a delta shipment over the file set of the cut the receiver
+/// already holds, reproducing the shipper's full bundle byte-for-byte
+/// in canonical order (manifest, router, shards). The delta must carry
+/// a manifest; names outside the manifest's file set are rejected in
+/// both inputs — a lying peer must not smuggle bytes through the merge
+/// any more than through [`decode_bundle`]. Callers still validate the
+/// merged set with `decode_bundle` before adopting it.
+pub fn apply_delta(
+    held: &[(String, Vec<u8>)],
+    delta: &[(String, Vec<u8>)],
+) -> Result<Vec<(String, Vec<u8>)>> {
+    let mut manifest_bytes: Option<&Vec<u8>> = None;
+    for (name, bytes) in delta {
+        if name == MANIFEST_FILE && manifest_bytes.replace(bytes).is_some() {
+            bail!("delta carries {MANIFEST_FILE} twice");
+        }
+    }
+    let manifest_bytes = manifest_bytes.ok_or_else(|| {
+        anyhow::anyhow!(
+            "delta carries no {MANIFEST_FILE} (every shipment names its cut)"
+        )
+    })?;
+    let manifest =
+        parse_manifest_bytes(manifest_bytes).context("delta manifest")?;
+    let mut router_slot: Option<Vec<u8>> = None;
+    let mut shard_slots: Vec<Option<Vec<u8>>> = vec![None; manifest.shards];
+    // Later sources overwrite earlier ones by name; duplicates *within*
+    // one source are a protocol violation.
+    let mut merge = |files: &[(String, Vec<u8>)],
+                     source: &str,
+                     router_slot: &mut Option<Vec<u8>>,
+                     shard_slots: &mut Vec<Option<Vec<u8>>>|
+     -> Result<()> {
+        let mut seen = std::collections::HashSet::new();
+        for (name, bytes) in files {
+            if !seen.insert(name.as_str()) {
+                bail!("{source} carries {name:?} twice");
+            }
+            if name == MANIFEST_FILE {
+                // The merged manifest is always the delta's.
+            } else if name == ROUTER_FILE {
+                *router_slot = Some(bytes.clone());
+            } else if let Some(s) = parse_shard_name(name, manifest.shards) {
+                shard_slots[s] = Some(bytes.clone());
+            } else {
+                bail!("{source} carries unexpected file {name:?}");
+            }
+        }
+        Ok(())
+    };
+    merge(held, "held state", &mut router_slot, &mut shard_slots)?;
+    merge(delta, "delta", &mut router_slot, &mut shard_slots)?;
+    let mut out = Vec::with_capacity(2 + manifest.shards);
+    out.push((MANIFEST_FILE.to_string(), manifest_bytes.clone()));
+    out.push((
+        ROUTER_FILE.to_string(),
+        router_slot.ok_or_else(|| {
+            anyhow::anyhow!(
+                "neither held state nor delta carries {ROUTER_FILE}"
+            )
+        })?,
+    ));
+    for (s, slot) in shard_slots.into_iter().enumerate() {
+        out.push((
+            shard_file(s),
+            slot.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "neither held state nor delta carries {}",
+                    shard_file(s)
+                )
+            })?,
+        ));
+    }
+    Ok(out)
+}
+
+/// One piece of one file in a chunked shipment: `bytes` is the
+/// `[offset, offset + bytes.len())` range of a file whose complete
+/// length is `file_len`. A zero-length file ships as a single empty
+/// part (its name must still travel).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FilePart {
+    pub name: String,
+    pub offset: u64,
+    pub file_len: u64,
+    pub bytes: Vec<u8>,
+}
+
+/// Split a file set into chunks whose *payload* (file bytes, not
+/// framing) stays within `max_bytes` each, splitting large files
+/// across chunks by byte range. Deterministic: the same input and
+/// budget always yield the same chunks, so a requester can fetch chunk
+/// `k` of a cut it started on and get the same bytes. Returns no
+/// chunks for an empty file set.
+pub fn chunk_files(
+    files: &[(String, Vec<u8>)],
+    max_bytes: usize,
+) -> Vec<Vec<FilePart>> {
+    let budget = max_bytes.max(1);
+    let mut chunks: Vec<Vec<FilePart>> = Vec::new();
+    let mut cur: Vec<FilePart> = Vec::new();
+    let mut cur_bytes = 0usize;
+    for (name, bytes) in files {
+        let mut offset = 0usize;
+        loop {
+            let room = budget - cur_bytes;
+            let rest = bytes.len() - offset;
+            if rest > 0 && room == 0 {
+                chunks.push(std::mem::take(&mut cur));
+                cur_bytes = 0;
+                continue;
+            }
+            let take = rest.min(room);
+            cur.push(FilePart {
+                name: name.clone(),
+                offset: offset as u64,
+                file_len: bytes.len() as u64,
+                bytes: bytes[offset..offset + take].to_vec(),
+            });
+            cur_bytes += take;
+            offset += take;
+            if offset == bytes.len() {
+                break;
+            }
+        }
+    }
+    if !cur.is_empty() {
+        chunks.push(cur);
+    }
+    chunks
+}
+
+/// Reassemble the parts of a chunked shipment back into whole files,
+/// in first-appearance order. Strict: for every named file the parts
+/// must agree on its length, tile it contiguously from offset zero
+/// with no gap, overlap, or spill past the end, and a zero-length file
+/// must arrive as exactly one empty part — so adversarial reordering,
+/// truncation, or duplication of parts is an error, never silent
+/// corruption. (A *whole missing* zero-length or never-mentioned file
+/// is invisible here; [`decode_bundle`] catches absent files.)
+pub fn reassemble_chunks(parts: &[FilePart]) -> Result<Vec<(String, Vec<u8>)>> {
+    let mut order: Vec<&str> = Vec::new();
+    let mut groups: std::collections::HashMap<&str, Vec<&FilePart>> =
+        std::collections::HashMap::new();
+    for part in parts {
+        groups
+            .entry(part.name.as_str())
+            .or_insert_with(|| {
+                order.push(part.name.as_str());
+                Vec::new()
+            })
+            .push(part);
+    }
+    let mut out = Vec::with_capacity(order.len());
+    for name in order {
+        let mut group = groups.remove(name).expect("grouped above");
+        let file_len = group[0].file_len;
+        if group.iter().any(|p| p.file_len != file_len) {
+            bail!("parts of {name:?} disagree on its length");
+        }
+        if file_len == 0 {
+            if group.len() != 1 || !group[0].bytes.is_empty() {
+                bail!("zero-length {name:?} must ship as one empty part");
+            }
+            out.push((name.to_string(), Vec::new()));
+            continue;
+        }
+        group.sort_by_key(|p| p.offset);
+        let mut bytes = Vec::with_capacity(file_len as usize);
+        for part in &group {
+            if part.bytes.is_empty() {
+                bail!("empty part of non-empty {name:?}");
+            }
+            let covered = bytes.len() as u64;
+            if part.offset < covered {
+                bail!(
+                    "parts of {name:?} overlap at offset {}",
+                    part.offset
+                );
+            }
+            if part.offset > covered {
+                bail!(
+                    "parts of {name:?} leave a gap at offset {covered}"
+                );
+            }
+            if part.offset + part.bytes.len() as u64 > file_len {
+                bail!("part of {name:?} runs past its declared length");
+            }
+            bytes.extend_from_slice(&part.bytes);
+        }
+        if bytes.len() as u64 != file_len {
+            bail!(
+                "{name:?} truncated: {} of {file_len} bytes arrived",
+                bytes.len()
+            );
+        }
+        out.push((name.to_string(), bytes));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -431,6 +680,252 @@ mod tests {
             .collect();
         assert!(decode_bundle(&headless).is_err());
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Deterministic xorshift64* for property rounds — no external
+    /// crates, reproducible failures.
+    fn xorshift(state: &mut u64) -> u64 {
+        let mut x = *state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        *state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Like `write_good_state` but parameterized: one shard per entry
+    /// of `versions`, codebook bytes salted by the version so a shard
+    /// file actually changes when its version does.
+    fn write_state_at(dir: &Path, router_version: u64, versions: &[u64]) {
+        let shards = versions.len();
+        let dim = 2usize;
+        Manifest {
+            format: crate::persist::FORMAT,
+            shards,
+            kappa: 2 * shards,
+            dim,
+            points_per_exchange: 50,
+            router_version,
+            generation: versions.iter().sum::<u64>() + 10 * router_version,
+            shard_versions: versions.to_vec(),
+        }
+        .save(dir)
+        .unwrap();
+        let centroids: Vec<f32> =
+            (0..shards * dim).map(|i| i as f32 * 10.0).collect();
+        let router = RouterState {
+            version: router_version,
+            centroids: Codebook::from_flat(shards, dim, centroids),
+        };
+        write_atomic(dir, ROUTER_FILE, &router.encode()).unwrap();
+        for (s, &v) in versions.iter().enumerate() {
+            let state = ShardState {
+                shard: s as u32,
+                version: v,
+                merges: v,
+                rng_cursor: v * 50,
+                ingested: v,
+                shed: 0,
+                router_version,
+                codebook: Codebook::from_flat(
+                    2,
+                    dim,
+                    vec![s as f32 + v as f32 * 0.25; 2 * dim],
+                ),
+            };
+            write_atomic(dir, &shard_file(s), &state.encode()).unwrap();
+        }
+    }
+
+    #[test]
+    fn delta_applied_to_held_equals_the_full_bundle_byte_for_byte() {
+        let dir = tmp_dir("delta-prop");
+        let mut rng = 0x9E3779B97F4A7C15u64;
+        for round in 0..20 {
+            let shards = 2 + (xorshift(&mut rng) % 3) as usize;
+            let have: Vec<u64> =
+                (0..shards).map(|_| 1 + xorshift(&mut rng) % 8).collect();
+            let want: Vec<u64> = have
+                .iter()
+                .map(|&v| v + xorshift(&mut rng) % 4)
+                .collect();
+            let _ = std::fs::remove_dir_all(&dir);
+            write_state_at(&dir, 3, &have);
+            let held = read_bundle(&dir).unwrap().unwrap();
+            write_state_at(&dir, 3, &want);
+            let full = read_bundle(&dir).unwrap().unwrap();
+            let delta = delta_files(
+                &full,
+                held.manifest.router_version,
+                &held.manifest.shard_versions,
+            )
+            .expect("same router version and shard count must delta");
+            let changed =
+                want.iter().zip(&have).filter(|(w, h)| w != h).count();
+            assert_eq!(
+                delta.len(),
+                1 + changed,
+                "round {round}: manifest + advanced shards only"
+            );
+            let merged = apply_delta(&held.files, &delta).unwrap();
+            assert_eq!(merged, full.files, "round {round}");
+            decode_bundle(&merged).unwrap();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn router_or_shape_changes_force_a_full_bundle() {
+        let dir = tmp_dir("delta-full");
+        write_state_at(&dir, 3, &[4, 6]);
+        let bundle = read_bundle(&dir).unwrap().unwrap();
+        // router epoch moved ⇒ no delta
+        assert!(delta_files(&bundle, 2, &[4, 6]).is_none());
+        // shard count changed ⇒ no delta
+        assert!(delta_files(&bundle, 3, &[4, 6, 1]).is_none());
+        // nothing advanced ⇒ manifest-only delta
+        let same = delta_files(&bundle, 3, &[4, 6]).unwrap();
+        assert_eq!(same.len(), 1);
+        assert_eq!(same[0].0, MANIFEST_FILE);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn apply_delta_rejects_smuggled_duplicate_and_headless_deltas() {
+        let dir = tmp_dir("delta-hygiene");
+        write_state_at(&dir, 3, &[4, 6]);
+        let held = read_bundle(&dir).unwrap().unwrap();
+        write_state_at(&dir, 3, &[5, 6]);
+        let full = read_bundle(&dir).unwrap().unwrap();
+        let delta = delta_files(&full, 3, &[4, 6]).unwrap();
+
+        // a delta without a manifest names no cut
+        let headless: Vec<_> = delta
+            .iter()
+            .filter(|(n, _)| n != MANIFEST_FILE)
+            .cloned()
+            .collect();
+        let err =
+            format!("{:#}", apply_delta(&held.files, &headless).unwrap_err());
+        assert!(err.contains(MANIFEST_FILE), "{err}");
+
+        // smuggled names are rejected in either input
+        let mut smuggled = delta.clone();
+        smuggled.push(("../escape".into(), b"junk".to_vec()));
+        let err =
+            format!("{:#}", apply_delta(&held.files, &smuggled).unwrap_err());
+        assert!(err.contains("unexpected file"), "{err}");
+        let mut bad_held = held.files.clone();
+        bad_held.push(("shard-9.state".into(), b"junk".to_vec()));
+        let err = format!("{:#}", apply_delta(&bad_held, &delta).unwrap_err());
+        assert!(err.contains("unexpected file"), "{err}");
+
+        // duplicates within one source are rejected
+        let mut dup = delta.clone();
+        dup.push(delta[1].clone());
+        let err = format!("{:#}", apply_delta(&held.files, &dup).unwrap_err());
+        assert!(err.contains("twice"), "{err}");
+
+        // a delta over nothing must still be complete
+        let err = format!("{:#}", apply_delta(&[], &delta).unwrap_err());
+        assert!(err.contains("neither held state nor delta"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn chunks_reassemble_under_adversarial_ordering() {
+        let mut rng = 0xDEADBEEFCAFEF00Du64;
+        for round in 0..30 {
+            let nfiles = 1 + (xorshift(&mut rng) % 4) as usize;
+            let files: Vec<(String, Vec<u8>)> = (0..nfiles)
+                .map(|i| {
+                    let len = (xorshift(&mut rng) % 40) as usize;
+                    (
+                        format!("f{i}"),
+                        (0..len).map(|_| xorshift(&mut rng) as u8).collect(),
+                    )
+                })
+                .collect();
+            for budget in [1usize, 3, 7, 64, 1 << 20] {
+                let chunks = chunk_files(&files, budget);
+                for chunk in &chunks {
+                    let payload: usize =
+                        chunk.iter().map(|p| p.bytes.len()).sum();
+                    assert!(payload <= budget, "round {round}");
+                }
+                let mut parts: Vec<FilePart> =
+                    chunks.into_iter().flatten().collect();
+                // deterministic Fisher-Yates shuffle: reassembly must
+                // not depend on arrival order
+                for i in (1..parts.len()).rev() {
+                    let j = (xorshift(&mut rng) % (i as u64 + 1)) as usize;
+                    parts.swap(i, j);
+                }
+                let mut got = reassemble_chunks(&parts).unwrap();
+                got.sort();
+                let mut want = files.clone();
+                want.sort();
+                assert_eq!(got, want, "round {round} budget {budget}");
+            }
+        }
+    }
+
+    #[test]
+    fn reassembly_rejects_truncation_duplicates_and_lies() {
+        let files = vec![
+            ("a".to_string(), vec![1u8; 10]),
+            ("b".to_string(), Vec::new()),
+            ("c".to_string(), vec![7u8; 5]),
+        ];
+        let parts: Vec<FilePart> =
+            chunk_files(&files, 4).into_iter().flatten().collect();
+        assert!(parts.len() > 4);
+        assert_eq!(reassemble_chunks(&parts).unwrap(), files);
+
+        for i in 0..parts.len() {
+            // dropping a part of a non-empty file is a detected
+            // truncation; a dropped zero-length part just omits the
+            // file (decode_bundle catches wholly absent files)
+            let mut cut = parts.clone();
+            let dropped = cut.remove(i);
+            match reassemble_chunks(&cut) {
+                Ok(got) => {
+                    assert_eq!(dropped.file_len, 0, "part {i}");
+                    assert!(got.iter().all(|(n, _)| *n != dropped.name));
+                }
+                Err(_) => assert!(dropped.file_len > 0, "part {i}"),
+            }
+            // duplicating any part is always rejected
+            let mut dup = parts.clone();
+            dup.push(parts[i].clone());
+            assert!(
+                reassemble_chunks(&dup).is_err(),
+                "duplicated part {i}"
+            );
+        }
+
+        // a part lying about its file's length
+        let mut lies = parts.clone();
+        lies[0].file_len += 1;
+        assert!(reassemble_chunks(&lies).is_err());
+        // a part claiming bytes past the declared end
+        let mut past = parts.clone();
+        let last = past
+            .iter_mut()
+            .filter(|p| p.name == "a")
+            .next_back()
+            .unwrap();
+        last.bytes.push(0);
+        assert!(reassemble_chunks(&past).is_err());
+        // an empty part of a non-empty file
+        let mut hollow = parts.clone();
+        hollow.push(FilePart {
+            name: "a".into(),
+            offset: 10,
+            file_len: 10,
+            bytes: Vec::new(),
+        });
+        assert!(reassemble_chunks(&hollow).is_err());
     }
 
     #[test]

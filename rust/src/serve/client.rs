@@ -7,16 +7,23 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::faults;
 use super::protocol::{
     begin_frame, encode_traced_request_into, end_frame, read_frame_into,
-    MetricsReply, Request, Response, StateShipment, StatsReply, WireSpan,
-    WireTrace,
+    MetricsReply, Request, Response, StateFile, StateShipment, StatsReply,
+    WireSpan, WireTrace,
 };
+use crate::persist;
 
 /// Default per-attempt connect timeout.
 const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
 /// Default extra attempts after the first (3 attempts total).
 const CONNECT_RETRIES: usize = 2;
+/// Maximum `NotLeader` redirects one call follows before giving up.
+/// Bounds the pathological case of two nodes each claiming the other
+/// leads (a failover in flight): the client backs off between hops and
+/// errors out after this many instead of ping-ponging forever.
+const MAX_REDIRECTS: usize = 4;
 
 /// One connection to a `dalvq serve` instance.
 pub struct Client {
@@ -36,6 +43,11 @@ pub struct Client {
     /// Reply-payload scratch for [`super::protocol::read_frame_into`] —
     /// the read-side counterpart of `enc_buf`.
     frame_buf: Vec<u8>,
+    /// Where the last `NotLeader` redirect landed this connection (the
+    /// address now on the other end), if any call ever redirected. Sync
+    /// code reads it through [`Client::redirected_to`] to re-point its
+    /// poll target after a failover.
+    redirected: Option<String>,
 }
 
 impl Client {
@@ -83,6 +95,7 @@ impl Client {
                             server_spans: Vec::new(),
                             enc_buf: Vec::new(),
                             frame_buf: Vec::new(),
+                            redirected: None,
                         });
                     }
                     Err(e) => last_err = Some(e),
@@ -166,26 +179,74 @@ impl Client {
         Ok(resp)
     }
 
+    /// The address the connection last redirected to via `NotLeader`
+    /// (and is now speaking to), or `None` when no call ever
+    /// redirected. A follower's sync loop reads this after a fetch to
+    /// re-point its poll target at whoever actually leads.
+    pub fn redirected_to(&self) -> Option<String> {
+        self.redirected.clone()
+    }
+
+    /// Send `req` and read its reply, following `NotLeader` redirects:
+    /// the client reconnects to the advertised leader (with a short
+    /// growing backoff) and resends, up to [`MAX_REDIRECTS`] hops — a
+    /// failover in flight can leave two nodes briefly pointing at each
+    /// other, and the bound turns that ping-pong into a clean error
+    /// instead of an infinite loop. `Error` and `Throttled` refusals
+    /// surface as errors.
     fn call(&mut self, req: &Request) -> Result<Response> {
-        self.send(req)?;
-        self.flush()?;
-        let resp = self.recv()?;
-        if let Response::Error { message } = &resp {
-            bail!("server error: {message}");
+        let trace = self.trace_next.take();
+        for hop in 0..=MAX_REDIRECTS {
+            self.trace_next = trace;
+            self.send(req)?;
+            self.flush()?;
+            let resp = self.recv()?;
+            match resp {
+                Response::Error { message } => {
+                    bail!("server error: {message}")
+                }
+                Response::NotLeader { leader } => {
+                    if leader.is_empty() {
+                        bail!(
+                            "server is a read-only follower that has not \
+                             named a leader yet; retry shortly"
+                        );
+                    }
+                    if hop == MAX_REDIRECTS {
+                        bail!(
+                            "gave up after {MAX_REDIRECTS} NotLeader \
+                             redirects (last one pointed at {leader}) — \
+                             the replica set may be mid-failover, retry \
+                             shortly"
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(
+                        50 * (hop as u64 + 1),
+                    ));
+                    let next = Client::connect_with(
+                        leader.as_str(),
+                        CONNECT_TIMEOUT,
+                        CONNECT_RETRIES,
+                    )
+                    .with_context(|| {
+                        format!(
+                            "following a NotLeader redirect to {leader}"
+                        )
+                    })?;
+                    self.reader = next.reader;
+                    self.writer = next.writer;
+                    self.redirected = Some(leader);
+                }
+                Response::Throttled { retry_after_ms, message } => {
+                    bail!(
+                        "server throttled the request: {message} (retry \
+                         in {retry_after_ms} ms)"
+                    );
+                }
+                other => return Ok(other),
+            }
         }
-        if let Response::NotLeader { leader } = &resp {
-            bail!(
-                "server is a read-only follower; send writes (and state \
-                 fetches) to its leader at {leader}"
-            );
-        }
-        if let Response::Throttled { retry_after_ms, message } = &resp {
-            bail!(
-                "server throttled the request: {message} (retry in \
-                 {retry_after_ms} ms)"
-            );
-        }
-        Ok(resp)
+        unreachable!("redirect loop exits via return or bail");
     }
 
     /// Quantize a batch: nearest-prototype code per point, plus the
@@ -283,17 +344,98 @@ impl Client {
     }
 
     /// Fetch the server's durable state as one consistent checkpoint
-    /// bundle (replication's sync primitive). Pass the generation
-    /// already held — an unchanged leader answers with an empty file
-    /// list — or [`super::protocol::FETCH_ANY_GENERATION`] to force the
-    /// full bundle. Errors on a follower (`NotLeader`) and on a leader
-    /// without `--state-dir`.
+    /// shipment (replication's sync primitive). Pass the generation
+    /// already held — a shipper that indexed it answers with a *delta*
+    /// (`delta: true`, only the advanced files), an unchanged one with
+    /// an empty file list — or
+    /// [`super::protocol::FETCH_ANY_GENERATION`] to force the full
+    /// bundle. A cut too big for one frame arrives chunked; this method
+    /// collects every chunk and returns the reassembled whole-file
+    /// shipment (`chunks == 1`, every file at offset 0), so callers
+    /// never see a partial file. Errors on a mirror-less follower
+    /// (`NotLeader`, auto-redirected) and on a leader without
+    /// `--state-dir`.
     pub fn fetch_state(
         &mut self,
         have_generation: u64,
     ) -> Result<StateShipment> {
-        match self.call(&Request::FetchState { have_generation })? {
+        let first = match self.call(&Request::FetchState { have_generation })?
+        {
+            Response::State(shipment) => shipment,
+            other => bail!("unexpected response {other:?}"),
+        };
+        if first.chunks <= 1 {
+            return Ok(first);
+        }
+        let (generation, leader_version, chunks, delta) =
+            (first.generation, first.leader_version, first.chunks, first.delta);
+        let mut parts = file_parts(first.files);
+        for chunk in 2..=chunks {
+            faults::hit("sync.chunk")?;
+            let piece = self.fetch_chunk(generation, chunk)?;
+            if piece.generation != generation || piece.chunks != chunks {
+                bail!(
+                    "chunked fetch raced a new checkpoint: started on \
+                     generation {generation} ({chunks} chunks), chunk \
+                     {chunk} answered from generation {} ({} chunks); \
+                     restart the fetch",
+                    piece.generation,
+                    piece.chunks
+                );
+            }
+            parts.extend(file_parts(piece.files));
+        }
+        let files = persist::reassemble_chunks(parts).with_context(|| {
+            format!(
+                "reassembling {chunks} shipped chunks of generation \
+                 {generation}"
+            )
+        })?;
+        Ok(StateShipment {
+            generation,
+            leader_version,
+            chunk: 1,
+            chunks: 1,
+            delta,
+            files: files
+                .into_iter()
+                .map(|(name, bytes)| StateFile {
+                    name,
+                    offset: 0,
+                    file_len: bytes.len() as u64,
+                    bytes,
+                })
+                .collect(),
+        })
+    }
+
+    /// Fetch one chunk of a multi-chunk cut by `(generation, chunk)`
+    /// (1-based; the chunk count came back on the first
+    /// [`Client::fetch_state`] frame). Chunking is deterministic per
+    /// generation, so chunks can be collected in any order — but the
+    /// shipper errors if its state dir has moved past `generation`.
+    pub fn fetch_chunk(
+        &mut self,
+        generation: u64,
+        chunk: u32,
+    ) -> Result<StateShipment> {
+        match self.call(&Request::FetchChunk { generation, chunk })? {
             Response::State(shipment) => Ok(shipment),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Tell a stale leader (or a rival promotee) that `leader` now
+    /// serves `generation`, which must be strictly above the
+    /// receiver's own: the receiver steps down and redirects its
+    /// writers there. Sent by a promoted follower's demote patrol when
+    /// the old leader comes back; never redirected by the receiver.
+    pub fn demote(&mut self, generation: u64, leader: &str) -> Result<()> {
+        match self.call(&Request::Demote {
+            generation,
+            leader: leader.to_string(),
+        })? {
+            Response::DemoteAck => Ok(()),
             other => bail!("unexpected response {other:?}"),
         }
     }
@@ -307,5 +449,83 @@ impl Client {
             Response::Traces(traces) => Ok(traces),
             other => bail!("unexpected response {other:?}"),
         }
+    }
+}
+
+/// Wire [`StateFile`] pieces → [`persist::FilePart`]s for
+/// [`persist::reassemble_chunks`].
+fn file_parts(files: Vec<StateFile>) -> Vec<persist::FilePart> {
+    files
+        .into_iter()
+        .map(|f| persist::FilePart {
+            name: f.name,
+            offset: f.offset,
+            file_len: f.file_len,
+            bytes: f.bytes,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// A fake server that answers every request on every connection
+    /// with `NotLeader { leader }` — half of a redirect ping-pong.
+    fn not_leader_server(listener: TcpListener, leader: String) {
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { break };
+                let leader = leader.clone();
+                std::thread::spawn(move || {
+                    let mut reader = BufReader::new(match stream.try_clone()
+                    {
+                        Ok(s) => s,
+                        Err(_) => return,
+                    });
+                    let mut writer = BufWriter::new(stream);
+                    let mut payload = Vec::new();
+                    while let Ok(true) =
+                        read_frame_into(&mut reader, &mut payload)
+                    {
+                        let mut out = Vec::new();
+                        let at = begin_frame(&mut out);
+                        Response::NotLeader { leader: leader.clone() }
+                            .encode_into(&mut out);
+                        end_frame(&mut out, at).unwrap();
+                        if writer.write_all(&out).is_err()
+                            || writer.flush().is_err()
+                        {
+                            return;
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn redirect_ping_pong_is_bounded() {
+        // Two nodes each claim the other leads — the degenerate
+        // mid-failover topology. The client must follow a few hops,
+        // then give up with an error naming the bound, not spin.
+        let la = TcpListener::bind("127.0.0.1:0").unwrap();
+        let lb = TcpListener::bind("127.0.0.1:0").unwrap();
+        let aa = la.local_addr().unwrap().to_string();
+        let ab = lb.local_addr().unwrap().to_string();
+        not_leader_server(la, ab.clone());
+        not_leader_server(lb, aa.clone());
+
+        let mut client = Client::connect(aa.as_str()).unwrap();
+        let err = client.stats().expect_err("ping-pong must not succeed");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains(&format!("{MAX_REDIRECTS} NotLeader redirects")),
+            "error should name the redirect bound, got: {msg}"
+        );
+        // The client still knows where it last got pointed.
+        let to = client.redirected_to().expect("redirects were followed");
+        assert!(to == aa || to == ab, "redirected inside the pair: {to}");
     }
 }

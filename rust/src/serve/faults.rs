@@ -1,0 +1,331 @@
+//! Deterministic fault injection for the replication path.
+//!
+//! The replication v2 acceptance suite has to *prove* failover: kill a
+//! leader mid-ship, partition a mid-tree relay, and show every survivor
+//! converges. Doing that with real signals and raw sockets is flaky;
+//! doing it with named fault points is deterministic. The sync and
+//! shipping code visits [`hit`] / [`hit_bytes`] at well-known points
+//! (below), and a test arms a [`FaultPlan`] — a seeded, scriptable list
+//! of rules saying *which* visits at *which* points drop, stall, or
+//! truncate. Disarmed (the production state), a hit is one relaxed
+//! atomic load.
+//!
+//! ## Points
+//!
+//! | point            | where                                             |
+//! |------------------|---------------------------------------------------|
+//! | `sync.fetch`     | follower, before each `FetchState` poll           |
+//! | `sync.chunk`     | follower, before each `FetchChunk` fetch          |
+//! | `sync.files`     | follower, shipped bytes in hand (byte-carrying)   |
+//! | `sync.decode`    | follower, before validating the assembled bundle  |
+//! | `sync.mirror`    | follower, before mirroring the bundle to disk     |
+//! | `sync.adopt`     | follower, before swapping the serving epoch       |
+//! | `state.cut`      | shipper, before cutting a bundle from its dir     |
+//! | `state.ship`     | shipper, cut in hand, before answering            |
+//! | `promote.manifest` | promoting follower, before bumping the manifest |
+//! | `promote.swap`   | promoting follower, before flipping its role      |
+//! | `demote.patrol`  | promoted leader, before each old-leader probe     |
+//!
+//! A *kill-at-phase* is orchestrated from the test side: arm a
+//! `DelayMs` rule on the phase's point, wait for [`hits`] to show the
+//! victim is inside it, and shut the victim down — the peer dies
+//! exactly mid-phase, deterministically.
+//!
+//! Rules fire by visit count (`after` skips, `count` firings) and,
+//! optionally, a seeded coin (`prob` under the plan's xorshift64* RNG)
+//! — the same seed always drops the same visits, and the CI flake
+//! guard runs the suite under two seeds to shake out
+//! order-dependencies.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+/// What a matched rule does to the visiting operation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultAction {
+    /// Drop the operation: the hook errors and the visitor's normal
+    /// failure path runs (a dropped poll, a dead connection).
+    Drop,
+    /// Stall the operation this long, then let it proceed (a slow or
+    /// partitioned link; pair with a test-side kill for kill-at-phase).
+    DelayMs(u64),
+    /// At a byte-carrying point ([`hit_bytes`]), chop the tail off the
+    /// payload and let the visitor trip over the damage; at a plain
+    /// point, same as `Drop`.
+    Truncate,
+}
+
+/// One scripted rule: after `after` visits of `point`, fire on up to
+/// `count` of the following visits, each gated by a coin of bias
+/// `prob` drawn from the plan's seeded RNG.
+#[derive(Debug, Clone)]
+pub struct FaultRule {
+    /// Fault point this rule watches (table in the module docs).
+    pub point: String,
+    /// Visits of `point` to let pass before the rule becomes eligible.
+    pub after: u64,
+    /// Maximum firings; the rule is spent afterwards.
+    pub count: u64,
+    /// Probability an eligible visit fires (1.0 = every one). Drawn
+    /// from the plan RNG, so a seed fixes the exact firing pattern.
+    pub prob: f64,
+    pub action: FaultAction,
+}
+
+impl FaultRule {
+    /// An always-firing rule at `point` — the common deterministic case.
+    pub fn every(point: &str, action: FaultAction) -> Self {
+        Self { point: point.into(), after: 0, count: u64::MAX, prob: 1.0, action }
+    }
+
+    /// Fire exactly once, on the `after + 1`-th visit.
+    pub fn once_after(point: &str, after: u64, action: FaultAction) -> Self {
+        Self { point: point.into(), after, count: 1, prob: 1.0, action }
+    }
+}
+
+/// A seeded set of rules; [`arm`] it, run the scenario, [`disarm`].
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Seed of the xorshift64* stream behind every `prob` coin (0 is
+    /// remapped — xorshift has a fixed point at 0).
+    pub seed: u64,
+    pub rules: Vec<FaultRule>,
+}
+
+struct ArmedRule {
+    rule: FaultRule,
+    seen: u64,
+    fired: u64,
+}
+
+struct Armed {
+    rng: u64,
+    rules: Vec<ArmedRule>,
+    /// Visit counts per point, every point ever hit while armed — how a
+    /// test waits for a victim to reach a phase.
+    counts: Vec<(String, u64)>,
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<Armed>> = Mutex::new(None);
+
+/// Install `plan` process-wide. Replaces any previous plan; visit
+/// counts restart at zero.
+pub fn arm(plan: FaultPlan) {
+    let armed = Armed {
+        rng: if plan.seed == 0 { 0x9E3779B97F4A7C15 } else { plan.seed },
+        rules: plan
+            .rules
+            .into_iter()
+            .map(|rule| ArmedRule { rule, seen: 0, fired: 0 })
+            .collect(),
+        counts: Vec::new(),
+    };
+    *PLAN.lock().unwrap() = Some(armed);
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Remove the armed plan; every later hit is free and cannot fire.
+pub fn disarm() {
+    ARMED.store(false, Ordering::Release);
+    *PLAN.lock().unwrap() = None;
+}
+
+/// How many times `point` has been visited since [`arm`] (0 when
+/// disarmed) — the synchronization primitive for kill-at-phase tests.
+pub fn hits(point: &str) -> u64 {
+    if !ARMED.load(Ordering::Acquire) {
+        return 0;
+    }
+    let plan = PLAN.lock().unwrap();
+    plan.as_ref()
+        .and_then(|p| {
+            p.counts.iter().find(|(n, _)| n == point).map(|(_, c)| *c)
+        })
+        .unwrap_or(0)
+}
+
+fn xorshift(state: &mut u64) -> u64 {
+    let mut x = *state;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *state = x;
+    x.wrapping_mul(0x2545F4914F6CDD1D)
+}
+
+/// Consult the plan for a visit of `point`. Returns the action to
+/// perform, with any delay already slept (sleeping under the plan lock
+/// would serialize unrelated points).
+fn consult(point: &str) -> Option<FaultAction> {
+    if !ARMED.load(Ordering::Acquire) {
+        return None;
+    }
+    let mut fired = None;
+    {
+        let mut plan = PLAN.lock().unwrap();
+        let Some(plan) = plan.as_mut() else { return None };
+        match plan.counts.iter_mut().find(|(n, _)| n == point) {
+            Some((_, c)) => *c += 1,
+            None => plan.counts.push((point.to_string(), 1)),
+        }
+        let mut rng = plan.rng;
+        for armed in &mut plan.rules {
+            if armed.rule.point != point {
+                continue;
+            }
+            armed.seen += 1;
+            if fired.is_some()
+                || armed.seen <= armed.rule.after
+                || armed.fired >= armed.rule.count
+            {
+                continue;
+            }
+            // A coin is drawn per eligible visit whether or not it
+            // fires, so one seed fixes the whole pattern.
+            let coin =
+                (xorshift(&mut rng) >> 11) as f64 / (1u64 << 53) as f64;
+            if coin < armed.rule.prob {
+                armed.fired += 1;
+                fired = Some(armed.rule.action.clone());
+            }
+        }
+        plan.rng = rng;
+    }
+    if let Some(FaultAction::DelayMs(ms)) = &fired {
+        std::thread::sleep(std::time::Duration::from_millis(*ms));
+    }
+    fired
+}
+
+/// Visit a fault point. `Err` when an armed rule drops the operation;
+/// a delay has already been served.
+pub fn hit(point: &str) -> Result<()> {
+    match consult(point) {
+        None | Some(FaultAction::DelayMs(_)) => Ok(()),
+        Some(FaultAction::Drop) | Some(FaultAction::Truncate) => {
+            bail!("fault injected: {point} dropped")
+        }
+    }
+}
+
+/// Visit a byte-carrying fault point. `Truncate` chops the tail off
+/// `bytes` (at least one byte, at most half) and lets the visitor
+/// proceed into the damage — downstream validation must catch it.
+pub fn hit_bytes(point: &str, bytes: &mut Vec<u8>) -> Result<()> {
+    match consult(point) {
+        None | Some(FaultAction::DelayMs(_)) => Ok(()),
+        Some(FaultAction::Drop) => bail!("fault injected: {point} dropped"),
+        Some(FaultAction::Truncate) => {
+            let cut = (bytes.len() / 2).max(1).min(bytes.len());
+            bytes.truncate(bytes.len() - cut);
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global; tests that arm it serialize here
+    // (the integration suites each run in their own process).
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disarmed_hits_are_free_and_uncounted() {
+        let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+        disarm();
+        assert!(hit("sync.fetch").is_ok());
+        assert_eq!(hits("sync.fetch"), 0);
+    }
+
+    #[test]
+    fn rules_fire_by_visit_window() {
+        let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+        arm(FaultPlan {
+            seed: 1,
+            rules: vec![FaultRule {
+                point: "sync.fetch".into(),
+                after: 2,
+                count: 2,
+                prob: 1.0,
+                action: FaultAction::Drop,
+            }],
+        });
+        let outcomes: Vec<bool> =
+            (0..6).map(|_| hit("sync.fetch").is_ok()).collect();
+        assert_eq!(outcomes, [true, true, false, false, true, true]);
+        assert_eq!(hits("sync.fetch"), 6);
+        assert_eq!(hits("sync.adopt"), 0);
+        disarm();
+    }
+
+    #[test]
+    fn seeded_coins_are_reproducible_and_seed_sensitive() {
+        let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+        let pattern = |seed: u64| -> Vec<bool> {
+            arm(FaultPlan {
+                seed,
+                rules: vec![FaultRule {
+                    point: "p".into(),
+                    after: 0,
+                    count: u64::MAX,
+                    prob: 0.5,
+                    action: FaultAction::Drop,
+                }],
+            });
+            let got = (0..64).map(|_| hit("p").is_ok()).collect();
+            disarm();
+            got
+        };
+        let a1 = pattern(7);
+        let a2 = pattern(7);
+        assert_eq!(a1, a2, "same seed, same drops");
+        let b = pattern(8);
+        assert_ne!(a1, b, "different seed, different drops");
+        assert!(a1.iter().any(|ok| *ok) && a1.iter().any(|ok| !*ok));
+    }
+
+    #[test]
+    fn truncate_damages_bytes_without_dropping() {
+        let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+        arm(FaultPlan {
+            seed: 1,
+            rules: vec![FaultRule::once_after(
+                "sync.files",
+                0,
+                FaultAction::Truncate,
+            )],
+        });
+        let mut bytes = vec![9u8; 100];
+        assert!(hit_bytes("sync.files", &mut bytes).is_ok());
+        assert!(bytes.len() < 100, "tail chopped");
+        let len = bytes.len();
+        assert!(hit_bytes("sync.files", &mut bytes).is_ok());
+        assert_eq!(bytes.len(), len, "rule spent after one firing");
+        // at a plain point the same action is a drop
+        arm(FaultPlan {
+            seed: 1,
+            rules: vec![FaultRule::every("x", FaultAction::Truncate)],
+        });
+        assert!(hit("x").is_err());
+        disarm();
+    }
+
+    #[test]
+    fn delay_stalls_then_proceeds() {
+        let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+        arm(FaultPlan {
+            seed: 1,
+            rules: vec![FaultRule::every("slow", FaultAction::DelayMs(30))],
+        });
+        let t0 = std::time::Instant::now();
+        assert!(hit("slow").is_ok());
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(25));
+        disarm();
+    }
+}

@@ -86,7 +86,17 @@
 //!   and keeps polling for new checkpoint generations — query capacity
 //!   scales out across processes with zero coordination on the write
 //!   path, the paper's asynchronous delayed-exchange argument applied to
-//!   serving.
+//!   serving. Replication v2 makes this a production sync *tier*:
+//!   steady-state polls ship **deltas** (only the shard files whose
+//!   version advanced, chunked under the frame cap), a follower with a
+//!   mirror dir answers `FetchState` itself so sync load forms a
+//!   **fan-out tree** instead of a star, clients follow `NotLeader`
+//!   redirects automatically, and `--miss-threshold` arms **automatic
+//!   failover**: a follower that loses leader contact promotes from its
+//!   byte-identical mirror at a bumped generation, and a returning old
+//!   leader demotes on seeing it (the `Demote` wire op). The
+//!   deterministic fault-injection layer ([`faults`]) drives the
+//!   `replication_v2_e2e` proof suite.
 //!
 //! `dalvq serve` / `dalvq serve --follow` / `dalvq loadtest` / `dalvq
 //! top` / `dalvq state inspect` / `dalvq state rebalance` are the CLI
@@ -99,6 +109,9 @@
 mod batch;
 mod client;
 mod eventloop;
+/// Deterministic, seeded fault injection on the replication path
+/// (test-facing; disarmed in production).
+pub mod faults;
 mod loadgen;
 /// The length-prefixed binary wire protocol (see `docs/PROTOCOL.md`).
 pub mod protocol;

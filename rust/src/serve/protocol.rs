@@ -50,16 +50,45 @@ pub enum Request {
         /// `u32`s — cheap, but only useful to clients that cache codes).
         want_remap: bool,
     },
-    /// Fetch the leader's durable state as one consistent bundle of raw
+    /// Fetch the server's durable state as a consistent bundle of raw
     /// checkpoint files, cut at a checkpoint generation. Pass the
-    /// generation already adopted to make the poll cheap: a leader whose
-    /// current generation equals it answers with an empty file list.
-    /// Bootstrap with [`FETCH_ANY_GENERATION`]. Leader-only (a follower
-    /// answers [`Response::NotLeader`]); errors without a state dir.
+    /// generation already adopted to make the poll cheap: a server whose
+    /// current generation equals it answers with an empty file list, and
+    /// one that remembers the shard versions of `have_generation` ships
+    /// a *delta* — manifest plus only the shard files whose version
+    /// advanced (`StateShipment::delta`). Bootstrap with
+    /// [`FETCH_ANY_GENERATION`]. Answered by the leader and by any
+    /// follower serving from a mirror directory (that is the fan-out
+    /// tree); a mirror-less follower answers [`Response::NotLeader`].
+    /// Errors without a state dir. When the cut outgrows one frame the
+    /// reply is chunk 1 of `chunks` — fetch the rest with
+    /// [`Request::FetchChunk`].
     FetchState {
-        /// Generation the requester already holds; any other generation
-        /// on the leader ships the full bundle.
+        /// Generation the requester already holds; a server that cannot
+        /// relate its cut to it ships the full bundle.
         have_generation: u64,
+    },
+    /// Fetch one chunk of a multi-chunk state cut, by the generation the
+    /// [`Request::FetchState`] reply announced. Chunking is
+    /// deterministic per generation, so chunks can be fetched in any
+    /// order over any connection; a server whose generation moved on
+    /// answers with an error (re-start from `FetchState`).
+    FetchChunk {
+        /// Generation of the cut being assembled.
+        generation: u64,
+        /// 1-based chunk index in `1..=chunks`.
+        chunk: u32,
+    },
+    /// Failover: tell a (possibly returning) leader that a follower
+    /// promoted at a higher checkpoint generation. The receiver demotes
+    /// into a follower of `leader` iff `generation` is strictly above
+    /// its own; otherwise it answers [`Response::Error`] and keeps its
+    /// role (a stale promoter must not depose a live leader).
+    Demote {
+        /// The promoted leader's checkpoint generation.
+        generation: u64,
+        /// Address the demoted server should re-point to (`host:port`).
+        leader: String,
     },
     /// Fetch the server's telemetry plane: every counter, gauge and
     /// latency-histogram digest plus the newest journal events. Read-only
@@ -158,8 +187,12 @@ pub enum Response {
         /// the request set `want_remap`.
         remap: Vec<u32>,
     },
-    /// `FetchState` reply: a consistent bundle of checkpoint files.
+    /// `FetchState` / `FetchChunk` reply: a consistent bundle (or one
+    /// chunk, or the delta) of checkpoint files.
     State(StateShipment),
+    /// `Demote` reply: the receiver accepted the higher generation and
+    /// is now a follower of the requested leader.
+    DemoteAck,
     /// `Metrics` reply: the telemetry digest.
     Metrics(MetricsReply),
     /// `Trace` reply: the newest sampled traces, newest first.
@@ -208,31 +241,60 @@ pub enum Response {
     },
 }
 
-/// The `FetchState` payload: the leader's durable checkpoint files, cut
+/// The `FetchState` / `FetchChunk` payload: checkpoint files cut
 /// consistently at one checkpoint generation (see
-/// [`crate::persist::ship`]).
-#[derive(Debug, Clone, PartialEq, Default)]
+/// [`crate::persist::ship`]), possibly one chunk of a larger cut,
+/// possibly a delta against the requester's held cut.
+#[derive(Debug, Clone, PartialEq)]
 pub struct StateShipment {
     /// Checkpoint generation the bundle was cut at. Equal to the
     /// request's `have_generation` when nothing changed (then `files` is
     /// empty).
     pub generation: u64,
-    /// The leader's *live* summed snapshot version at answer time — what
+    /// The shipper's *live* summed snapshot version at answer time — what
     /// a follower measures its `sync_lag_folds` against (the bundle
     /// itself only carries the last-checkpointed versions).
     pub leader_version: u64,
-    /// Raw checkpoint files (`manifest.json`, `router.bin`,
-    /// `shard-<s>.state`), byte-identical to the leader's directory.
+    /// 1-based index of this chunk within the cut.
+    pub chunk: u32,
+    /// Total chunks in the cut (≥ 1; 1 = the whole cut fit one frame).
+    /// Chunking is deterministic per generation, so `FetchChunk` can
+    /// collect the rest in any order.
+    pub chunks: u32,
+    /// Whether `files` is a *delta* against the cut the requester said
+    /// it holds (merge with [`crate::persist::ship::apply_delta`])
+    /// rather than a complete bundle (adopt wholesale).
+    pub delta: bool,
+    /// Raw checkpoint file pieces (`manifest.json`, `router.bin`,
+    /// `shard-<s>.state`), byte-identical to the shipper's directory.
     /// Empty when the requester's generation is already current.
     pub files: Vec<StateFile>,
 }
 
-/// One shipped checkpoint file.
+impl Default for StateShipment {
+    fn default() -> Self {
+        Self {
+            generation: 0,
+            leader_version: 0,
+            chunk: 1,
+            chunks: 1,
+            delta: false,
+            files: Vec::new(),
+        }
+    }
+}
+
+/// One shipped checkpoint file piece.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StateFile {
     /// File name inside the state directory (no path separators).
     pub name: String,
-    /// The file's raw bytes.
+    /// Byte offset of this piece within the whole file (0 when the file
+    /// travels whole).
+    pub offset: u64,
+    /// Complete length of the file this piece belongs to.
+    pub file_len: u64,
+    /// The piece's raw bytes.
     pub bytes: Vec<u8>,
 }
 
@@ -302,6 +364,10 @@ pub struct StatsReply {
     /// `Ingest` requests answered (requests, not points), service
     /// lifetime.
     pub op_ingest: u64,
+    /// How the last sync adoption arrived: `"delta"` or `"full"` on a
+    /// follower that has adopted at least once, `""` otherwise (leaders
+    /// included).
+    pub sync_source: String,
 }
 
 /// One span inside a [`WireTrace`] or a [`Response::Traced`] envelope.
@@ -588,6 +654,8 @@ const OP_FETCH_STATE: u8 = 0x08;
 const OP_METRICS: u8 = 0x09;
 const OP_TRACE: u8 = 0x0A;
 const OP_TRACED_REQ: u8 = 0x0B;
+const OP_FETCH_CHUNK: u8 = 0x0C;
+const OP_DEMOTE: u8 = 0x0D;
 
 const OP_CODES: u8 = 0x81;
 const OP_NEIGHBORS: u8 = 0x82;
@@ -600,6 +668,7 @@ const OP_STATE: u8 = 0x88;
 const OP_METRICS_R: u8 = 0x89;
 const OP_TRACE_R: u8 = 0x8A;
 const OP_TRACED_RESP: u8 = 0x8B;
+const OP_DEMOTE_ACK: u8 = 0x8C;
 const OP_THROTTLED: u8 = 0xFD;
 const OP_NOT_LEADER: u8 = 0xFE;
 const OP_ERROR: u8 = 0xFF;
@@ -888,6 +957,8 @@ pub enum RequestRef<'a> {
     Checkpoint,
     Rebalance { want_remap: bool },
     FetchState { have_generation: u64 },
+    FetchChunk { generation: u64, chunk: u32 },
+    Demote { generation: u64, leader: String },
     Metrics { max_events: u32 },
     Trace { max_traces: u32 },
     Traced { hi: u64, lo: u64, parent: u64, inner: Box<RequestRef<'a>> },
@@ -913,6 +984,14 @@ impl<'a> RequestRef<'a> {
             OP_FETCH_STATE => {
                 RequestRef::FetchState { have_generation: c.u64()? }
             }
+            OP_FETCH_CHUNK => RequestRef::FetchChunk {
+                generation: c.u64()?,
+                chunk: c.u32()?,
+            },
+            OP_DEMOTE => RequestRef::Demote {
+                generation: c.u64()?,
+                leader: c.str()?,
+            },
             OP_METRICS => RequestRef::Metrics { max_events: c.u32()? },
             OP_TRACE => RequestRef::Trace { max_traces: c.u32()? },
             OP_TRACED_REQ => {
@@ -957,6 +1036,16 @@ impl<'a> RequestRef<'a> {
             RequestRef::FetchState { have_generation } => {
                 Request::FetchState { have_generation: *have_generation }
             }
+            RequestRef::FetchChunk { generation, chunk } => {
+                Request::FetchChunk {
+                    generation: *generation,
+                    chunk: *chunk,
+                }
+            }
+            RequestRef::Demote { generation, leader } => Request::Demote {
+                generation: *generation,
+                leader: leader.clone(),
+            },
             RequestRef::Metrics { max_events } => {
                 Request::Metrics { max_events: *max_events }
             }
@@ -1014,6 +1103,16 @@ impl Request {
             Request::FetchState { have_generation } => {
                 out.push(OP_FETCH_STATE);
                 out.extend_from_slice(&have_generation.to_le_bytes());
+            }
+            Request::FetchChunk { generation, chunk } => {
+                out.push(OP_FETCH_CHUNK);
+                out.extend_from_slice(&generation.to_le_bytes());
+                out.extend_from_slice(&chunk.to_le_bytes());
+            }
+            Request::Demote { generation, leader } => {
+                out.push(OP_DEMOTE);
+                out.extend_from_slice(&generation.to_le_bytes());
+                put_str(out, leader);
             }
             Request::Metrics { max_events } => {
                 out.push(OP_METRICS);
@@ -1111,6 +1210,7 @@ impl Response {
                 ] {
                     out.extend_from_slice(&field.to_le_bytes());
                 }
+                put_str(out, &s.sync_source);
             }
             Response::CheckpointAck { versions } => {
                 out.push(OP_CHECKPOINT_ACK);
@@ -1132,12 +1232,18 @@ impl Response {
                 out.push(OP_STATE);
                 out.extend_from_slice(&s.generation.to_le_bytes());
                 out.extend_from_slice(&s.leader_version.to_le_bytes());
+                out.extend_from_slice(&s.chunk.to_le_bytes());
+                out.extend_from_slice(&s.chunks.to_le_bytes());
+                out.push(s.delta as u8);
                 out.extend_from_slice(&(s.files.len() as u32).to_le_bytes());
                 for f in &s.files {
                     put_str(out, &f.name);
+                    out.extend_from_slice(&f.offset.to_le_bytes());
+                    out.extend_from_slice(&f.file_len.to_le_bytes());
                     put_bytes(out, &f.bytes);
                 }
             }
+            Response::DemoteAck => out.push(OP_DEMOTE_ACK),
             Response::Metrics(m) => {
                 out.push(OP_METRICS_R);
                 out.extend_from_slice(&m.uptime_ms.to_le_bytes());
@@ -1256,6 +1362,7 @@ impl Response {
                 op_nearest: c.u64()?,
                 op_distortion: c.u64()?,
                 op_ingest: c.u64()?,
+                sync_source: c.str()?,
             }),
             OP_CHECKPOINT_ACK => {
                 Response::CheckpointAck { versions: c.u64s()? }
@@ -1269,20 +1376,32 @@ impl Response {
             OP_STATE => {
                 let generation = c.u64()?;
                 let leader_version = c.u64()?;
+                let chunk = c.u32()?;
+                let chunks = c.u32()?;
+                let delta = c.u8()? != 0;
                 let n = c.u32()? as usize;
                 // Bounded by the frame cap: each entry consumes at least
-                // 8 bytes of payload, so a lying count fails in `bytes`
+                // 24 bytes of payload, so a lying count fails in `bytes`
                 // before any oversized allocation.
                 let mut files = Vec::new();
                 for _ in 0..n {
-                    files.push(StateFile { name: c.str()?, bytes: c.blob()? });
+                    files.push(StateFile {
+                        name: c.str()?,
+                        offset: c.u64()?,
+                        file_len: c.u64()?,
+                        bytes: c.blob()?,
+                    });
                 }
                 Response::State(StateShipment {
                     generation,
                     leader_version,
+                    chunk,
+                    chunks,
+                    delta,
                     files,
                 })
             }
+            OP_DEMOTE_ACK => Response::DemoteAck,
             OP_METRICS_R => {
                 let uptime_ms = c.u64()?;
                 // Every count-prefixed loop below is bounded by the frame
@@ -1397,6 +1516,19 @@ mod tests {
         round_trip_req(Request::FetchState {
             have_generation: FETCH_ANY_GENERATION,
         });
+        round_trip_req(Request::FetchChunk { generation: 0, chunk: 1 });
+        round_trip_req(Request::FetchChunk {
+            generation: u64::MAX,
+            chunk: u32::MAX,
+        });
+        round_trip_req(Request::Demote {
+            generation: 12,
+            leader: "10.0.0.9:7171".into(),
+        });
+        round_trip_req(Request::Demote {
+            generation: 0,
+            leader: String::new(),
+        });
         round_trip_req(Request::Metrics { max_events: 0 });
         round_trip_req(Request::Metrics { max_events: u32::MAX });
     }
@@ -1462,6 +1594,7 @@ mod tests {
             op_nearest: 11,
             op_distortion: 12,
             op_ingest: 13,
+            sync_source: "delta".into(),
         }));
         round_trip_resp(Response::Stats(StatsReply::default()));
         round_trip_resp(Response::CheckpointAck { versions: vec![9, 8, 7] });
@@ -1481,13 +1614,45 @@ mod tests {
         round_trip_resp(Response::State(StateShipment {
             generation: 4,
             leader_version: 97,
+            chunk: 1,
+            chunks: 1,
+            delta: false,
             files: vec![
-                StateFile { name: "manifest.json".into(), bytes: b"{}".to_vec() },
-                StateFile { name: "router.bin".into(), bytes: vec![0, 1, 255] },
-                StateFile { name: "shard-0.state".into(), bytes: vec![] },
+                StateFile {
+                    name: "manifest.json".into(),
+                    offset: 0,
+                    file_len: 2,
+                    bytes: b"{}".to_vec(),
+                },
+                StateFile {
+                    name: "router.bin".into(),
+                    offset: 0,
+                    file_len: 3,
+                    bytes: vec![0, 1, 255],
+                },
+                StateFile {
+                    name: "shard-0.state".into(),
+                    offset: 0,
+                    file_len: 0,
+                    bytes: vec![],
+                },
             ],
         }));
+        round_trip_resp(Response::State(StateShipment {
+            generation: 9,
+            leader_version: 40,
+            chunk: 2,
+            chunks: 3,
+            delta: true,
+            files: vec![StateFile {
+                name: "shard-1.state".into(),
+                offset: 4096,
+                file_len: 1 << 20,
+                bytes: vec![7; 16],
+            }],
+        }));
         round_trip_resp(Response::State(StateShipment::default()));
+        round_trip_resp(Response::DemoteAck);
         round_trip_resp(Response::Metrics(MetricsReply {
             uptime_ms: 12_345,
             counters: vec![
@@ -1768,6 +1933,8 @@ mod tests {
             Request::Checkpoint,
             Request::Rebalance { want_remap: true },
             Request::FetchState { have_generation: 3 },
+            Request::FetchChunk { generation: 3, chunk: 2 },
+            Request::Demote { generation: 5, leader: "h:1".into() },
             Request::Metrics { max_events: 7 },
             Request::Trace { max_traces: 2 },
             Request::Traced {

@@ -68,6 +68,8 @@ impl Server {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding serve front-end to {addr}"))?;
         let local = listener.local_addr()?;
+        // Where a promotion's demote patrol advertises this service.
+        service.set_advertise_addr(local.to_string());
         let stop = Arc::new(AtomicBool::new(false));
         let batcher = if service.batch_window_us() > 0 {
             Some(Batcher::start(Arc::clone(&service)))
@@ -278,6 +280,8 @@ fn handle(
         RequestRef::Checkpoint => ("checkpoint", &tel.op_other),
         RequestRef::Rebalance { .. } => ("rebalance", &tel.op_other),
         RequestRef::FetchState { .. } => ("fetch_state", &tel.op_other),
+        RequestRef::FetchChunk { .. } => ("fetch_chunk", &tel.op_other),
+        RequestRef::Demote { .. } => ("demote", &tel.op_other),
         RequestRef::Metrics { .. } => ("metrics", &tel.op_other),
         RequestRef::Trace { .. } => ("trace", &tel.op_other),
         RequestRef::Traced { .. } => ("traced", &tel.op_other),
@@ -321,12 +325,17 @@ fn handle(
 /// borrowed [`super::protocol::PointsRef`] views and are copied exactly
 /// once into the worker's thread-local buffer.
 ///
-/// On a follower, every leader-only op — writes (`Ingest`,
-/// `Checkpoint`, `Rebalance`) and state shipping (`FetchState`) —
-/// answers `NotLeader` with the leader's address, so a client can
-/// redirect instead of parsing an error string. The read surface —
-/// `Metrics` included (a follower's telemetry is its own, not the
-/// leader's) — is identical on both roles.
+/// On a follower, writes (`Ingest`, `Checkpoint`, `Rebalance`) answer
+/// `NotLeader` with the leader's address, so a client can redirect
+/// instead of parsing an error string. State shipping (`FetchState` /
+/// `FetchChunk`) redirects only when the follower keeps no mirror
+/// `--state-dir` — a mirror-keeping follower serves the sync path
+/// itself, which is what lets replication form a fan-out tree instead
+/// of a star on the leader. `Demote` is never redirected: it is
+/// addressed to *this* node's role, and bouncing it would ping-pong a
+/// failover. The read surface — `Metrics` included (a follower's
+/// telemetry is its own, not the leader's) — is identical on both
+/// roles.
 fn dispatch(
     service: &VqService,
     batcher: Option<&Batcher>,
@@ -335,13 +344,17 @@ fn dispatch(
     root: u64,
     tb: &mut Option<TraceBuilder>,
 ) -> Response {
-    if matches!(
+    let leader_only = matches!(
         req,
         RequestRef::Ingest { .. }
             | RequestRef::Checkpoint
             | RequestRef::Rebalance { .. }
-            | RequestRef::FetchState { .. }
-    ) {
+    );
+    let ship_op = matches!(
+        req,
+        RequestRef::FetchState { .. } | RequestRef::FetchChunk { .. }
+    );
+    if leader_only || (ship_op && !service.can_ship_state()) {
         if let Some(leader) = service.follower_of() {
             return Response::NotLeader { leader };
         }
@@ -469,6 +482,7 @@ fn dispatch(
                 leader_addr: s.leader_addr.unwrap_or_default(),
                 sync_lag_folds: s.sync_lag_folds,
                 last_sync: s.last_sync_ms,
+                sync_source: s.sync_source,
                 uptime_ms: s.uptime_ms,
                 op_encode: s.op_encode,
                 op_nearest: s.op_nearest,
@@ -502,6 +516,23 @@ fn dispatch(
         RequestRef::FetchState { have_generation } => {
             match service.fetch_state(have_generation, tb.as_mut(), root) {
                 Ok(shipment) => Response::State(shipment),
+                Err(e) => Response::Error { message: format!("{e:#}") },
+            }
+        }
+        // Chunk 2..=N of a shipment that outgrew one frame. Same cut
+        // discipline as FetchState; a generation that moved mid-fetch
+        // answers an error and the client restarts the collection.
+        RequestRef::FetchChunk { generation, chunk } => {
+            match service.fetch_chunk(generation, chunk, tb.as_mut(), root) {
+                Ok(shipment) => Response::State(shipment),
+                Err(e) => Response::Error { message: format!("{e:#}") },
+            }
+        }
+        // Failover fencing: a promoted peer presenting a strictly higher
+        // generation turns this node into a redirect to it.
+        RequestRef::Demote { generation, leader } => {
+            match service.demote(generation, &leader) {
+                Ok(()) => Response::DemoteAck,
                 Err(e) => Response::Error { message: format!("{e:#}") },
             }
         }

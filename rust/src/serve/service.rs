@@ -70,6 +70,7 @@ use crate::persist::{
 use crate::vq::{init_codebook, nearest_batch_into, Codebook};
 
 use super::client::Client;
+use super::faults;
 use super::protocol::{StateFile, StateShipment, FETCH_ANY_GENERATION};
 use super::router::Router;
 use super::snapshot::{Snapshot, SnapshotStore};
@@ -78,6 +79,24 @@ use super::worker::{run_serve_worker, ServeWorkerOutcome, ServeWorkerParams};
 /// Per-attempt connect timeout of a follower's sync poll (bounded so a
 /// dead leader costs one short stall per poll, not a hang).
 const SYNC_CONNECT_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// Payload budget of one `FetchState`/`FetchChunk` frame: just under
+/// the wire's 64 MiB frame cap, leaving a megabyte of headroom for the
+/// shipment envelope (names, offsets, counts). A cut that outgrows this
+/// ships as `chunks > 1` numbered frames.
+const SHIP_CHUNK_BUDGET: usize = 63 << 20;
+
+/// Generations the delta index remembers. A requester whose adopted
+/// generation aged out of the index simply gets a full bundle — the
+/// index is a bandwidth optimisation, never a correctness input.
+const SHIP_HISTORY: usize = 32;
+
+/// How far a promotion jumps the checkpoint generation past the adopted
+/// one. A fencing margin, not a +1: the dead leader's on-disk manifest
+/// may have advanced past the last generation it *shipped*, and a
+/// returning leader only accepts demotion under a strictly higher
+/// generation — the jump dwarfs any drift a miss window could produce.
+const PROMOTE_GENERATION_JUMP: u64 = 1 << 20;
 
 // The journal ring capacity comes from `ServeConfig::journal_capacity`
 // (default 256, validated >= 16); it is also the event budget of a
@@ -248,6 +267,9 @@ pub struct ServeStats {
     pub sync_lag_folds: u64,
     /// Milliseconds since the last successful sync poll (0 on a leader).
     pub last_sync_ms: u64,
+    /// How the last adopted bundle arrived on a follower: `"delta"` or
+    /// `"full"`; empty on a leader (or before the first adoption).
+    pub sync_source: String,
     /// Milliseconds since the service came up.
     pub uptime_ms: u64,
     /// `Encode` requests handled by the front-end.
@@ -402,6 +424,20 @@ pub struct VqService {
     /// the checkpointer (which bumps it on every manifest write) and
     /// re-seeded by rebalances; what `FetchState` pollers compare.
     state_generation: Arc<AtomicU64>,
+    /// The delta index: `(generation, router_version, shard_versions)`
+    /// of recently cut or adopted bundles, so a `FetchState` poll whose
+    /// `have_generation` is remembered ships only the shard files whose
+    /// version advanced. Bounded ([`SHIP_HISTORY`]); a miss means a full
+    /// bundle, never an error.
+    ship_history: Mutex<Vec<(u64, u64, Vec<u64>)>>,
+    /// `Some(new leader)` once a `Demote` fenced this leader off: writes
+    /// and state fetches answer `NotLeader` there (set only on services
+    /// started as leaders; a follower re-points [`FollowerCtl`] instead).
+    demoted: Mutex<Option<String>>,
+    /// The address this service is reachable at (set by the TCP
+    /// front-end when it binds) — what a promoted follower advertises
+    /// in its `Demote` patrol.
+    advertise: Mutex<Option<String>>,
     /// Follower-mode state (`None` on a leader).
     follower: Option<FollowerCtl>,
     /// The telemetry plane: metric registry + event journal + uptime.
@@ -418,9 +454,10 @@ pub struct VqService {
 /// Everything follower-specific: who the leader is, the sync cadence,
 /// and the freshness the sync loop publishes for `Stats`.
 struct FollowerCtl {
-    /// `host:port` of the leader (the `--follow` value, verbatim — also
-    /// what `NotLeader` redirects clients to).
-    leader_addr: String,
+    /// `host:port` of the current sync source (the `--follow` value at
+    /// start — also what `NotLeader` redirects clients to). Mutable:
+    /// a `NotLeader` bounce mid-sync or a `Demote` re-points it.
+    leader_addr: Mutex<String>,
     /// Pause between sync polls.
     sync_every: Duration,
     /// Leader's live version at the last poll minus the version served
@@ -428,6 +465,26 @@ struct FollowerCtl {
     lag_folds: AtomicU64,
     /// When the last successful poll completed.
     last_sync: Mutex<Instant>,
+    /// Raw file set of the last adopted bundle — the base a shipped
+    /// delta merges into ([`persist::apply_delta`]).
+    held: Mutex<Vec<(String, Vec<u8>)>>,
+    /// `"delta"` or `"full"`: how the last adoption arrived (what
+    /// `ServeStats::sync_source` reports).
+    sync_source: Mutex<String>,
+    /// Consecutive failed sync polls; reset by every success. Crossing
+    /// `miss_threshold` (when armed) triggers promotion.
+    misses: AtomicU64,
+    /// The next poll must fetch the full bundle (set when a delta
+    /// failed to apply — re-asking for the same delta would loop on the
+    /// same damage forever).
+    force_full: AtomicBool,
+    /// This follower promoted itself to leader (automatic failover):
+    /// the sync loop becomes a demote patrol, `NotLeader` redirects
+    /// stop, and `FetchState` serves peers from the mirror dir.
+    promoted: AtomicBool,
+    /// The demote patrol reached the old leader and it acknowledged;
+    /// nothing left to patrol.
+    patrol_done: AtomicBool,
     /// The sync-loop thread; taken at shutdown (an empty slot after
     /// `start` means the service was already shut down).
     thread: Mutex<Option<JoinHandle<()>>>,
@@ -576,6 +633,9 @@ impl VqService {
             lifecycle: Mutex::new(()),
             monitor: Mutex::new(None),
             state_generation,
+            ship_history: Mutex::new(Vec::new()),
+            demoted: Mutex::new(None),
+            advertise: Mutex::new(None),
             follower: None,
             tel: ServeTel::new(&telemetry),
             telemetry,
@@ -617,6 +677,9 @@ impl VqService {
                      (is the leader running with --state-dir?)"
                 )
             })?;
+        // A bootstrap fetch may have bounced off a follower or a
+        // demoted leader: whoever actually answered is the sync source.
+        let leader_addr = client.redirected_to().unwrap_or(leader_addr);
         let files = shipped_files(ship.files);
         let restored = persist::decode_bundle(&files)
             .context("follower bootstrap: decoding the shipped bundle")?;
@@ -629,6 +692,9 @@ impl VqService {
         let counters = Arc::new(ServeCounters::default());
         let telemetry = Telemetry::new(serve.journal_capacity);
         telemetry.tracer().configure(serve.trace_sample, serve.slow_query_us);
+        telemetry
+            .counter("sync.full_bytes")
+            .add(files.iter().map(|(_, b)| b.len() as u64).sum());
         let epoch = follower_epoch(&restored, &telemetry);
         let adopted: u64 = restored.shards.iter().map(|s| s.version).sum();
         counters.merges.store(adopted, Ordering::Relaxed);
@@ -666,19 +732,35 @@ impl VqService {
             lifecycle: Mutex::new(()),
             monitor: Mutex::new(None),
             state_generation: Arc::new(AtomicU64::new(ship.generation)),
+            ship_history: Mutex::new(Vec::new()),
+            demoted: Mutex::new(None),
+            advertise: Mutex::new(None),
             follower: Some(FollowerCtl {
-                leader_addr,
+                leader_addr: Mutex::new(leader_addr),
                 sync_every: Duration::from_millis(serve.sync_every_ms.max(1)),
                 lag_folds: AtomicU64::new(
                     ship.leader_version.saturating_sub(adopted),
                 ),
                 last_sync: Mutex::new(Instant::now()),
+                held: Mutex::new(files),
+                sync_source: Mutex::new("full".to_string()),
+                misses: AtomicU64::new(0),
+                force_full: AtomicBool::new(false),
+                promoted: AtomicBool::new(false),
+                patrol_done: AtomicBool::new(false),
                 thread: Mutex::new(None),
             }),
             tel: ServeTel::new(&telemetry),
             telemetry,
             metrics_writer: Mutex::new(None),
         });
+        // Seed the delta index with the adopted cut, so this follower
+        // can itself ship deltas down the tree (and promote cheaply).
+        service.remember_versions(
+            ship.generation,
+            m.router_version,
+            m.shard_versions.clone(),
+        );
         let follower = service.follower.as_ref().expect("just constructed");
         *follower.thread.lock().unwrap_or_else(|e| e.into_inner()) =
             Some(spawn_follower_sync(&service));
@@ -715,20 +797,29 @@ impl VqService {
             .follower
             .as_ref()
             .ok_or_else(|| anyhow!("sync_once on a leader"))?;
+        let leader_addr =
+            f.leader_addr.lock().unwrap_or_else(|e| e.into_inner()).clone();
         let tracer = self.telemetry.tracer();
         let mut tb = tracer.begin_at(t0);
         let root = match tb.as_mut() {
             Some(t) => t.begin("sync.cycle", NO_PARENT),
             None => NO_PARENT,
         };
+        faults::hit("sync.fetch")?;
         let mut client = Client::connect_with(
-            f.leader_addr.as_str(),
+            leader_addr.as_str(),
             SYNC_CONNECT_TIMEOUT,
             0,
         )?;
         // On a follower, `state_generation` IS the adopted generation
-        // (there is no local checkpointer writing to it).
-        let have = self.state_generation.load(Ordering::Acquire);
+        // (there is no local checkpointer writing to it). After a failed
+        // delta apply the next poll re-fetches the full bundle —
+        // re-asking for the same delta would loop on the same damage.
+        let have = if f.force_full.swap(false, Ordering::AcqRel) {
+            FETCH_ANY_GENERATION
+        } else {
+            self.state_generation.load(Ordering::Acquire)
+        };
         let mut fetch_ctx = None; // (fetch span id, its start offset µs)
         if let Some(t) = tb.as_mut() {
             let (hi, lo) = t.trace_id();
@@ -738,6 +829,17 @@ impl VqService {
             fetch_ctx = Some((fetch, anchor));
         }
         let ship = client.fetch_state(have)?;
+        // A `NotLeader` bounce mid-fetch means the tree re-shaped under
+        // us (a failover, a demoted relay): whoever actually answered
+        // becomes the sync source from here on.
+        if let Some(to) = client.redirected_to() {
+            *f.leader_addr.lock().unwrap_or_else(|e| e.into_inner()) =
+                to.clone();
+            self.telemetry.journal().info(
+                "sync.repoint",
+                format!("sync source moved: {leader_addr} -> {to}"),
+            );
+        }
         if let (Some(t), Some((fetch, anchor))) = (tb.as_mut(), fetch_ctx) {
             // The leader's half of the trace, re-anchored at the moment
             // the RPC went out (its spans are relative to its own frame
@@ -766,11 +868,52 @@ impl VqService {
             *f.last_sync.lock().unwrap_or_else(|e| e.into_inner()) = Instant::now();
             return Ok(false);
         }
-        let files = shipped_files(ship.files);
+        // A stale peer (an old leader back from the dead, a lagging
+        // relay) must never run the adopted state backwards.
+        if have != FETCH_ANY_GENERATION && ship.generation < have {
+            bail!(
+                "sync source {leader_addr} shipped stale generation {} \
+                 (this follower already adopted {have})",
+                ship.generation
+            );
+        }
+        let delta = ship.delta;
+        let mut files = shipped_files(ship.files);
+        if let Some((_, bytes)) = files.last_mut() {
+            // One byte-carrying fault visit per shipment: an injected
+            // truncation chews the tail file, and decode below must
+            // catch the damage.
+            faults::hit_bytes("sync.files", bytes)?;
+        }
+        self.telemetry
+            .counter(if delta { "sync.delta_bytes" } else { "sync.full_bytes" })
+            .add(files.iter().map(|(_, b)| b.len() as u64).sum());
+        if delta {
+            let held = f.held.lock().unwrap_or_else(|e| e.into_inner());
+            match persist::apply_delta(&held, &files) {
+                Ok(merged) => files = merged,
+                Err(e) => {
+                    f.force_full.store(true, Ordering::Release);
+                    return Err(e).context(
+                        "applying the shipped delta to the held bundle \
+                         (the next poll re-fetches the full bundle)",
+                    );
+                }
+            }
+        }
+        faults::hit("sync.decode")?;
         let decode_span =
             tb.as_mut().map(|t| t.begin("sync.decode", root));
-        let restored = persist::decode_bundle(&files)
-            .context("decoding the leader's shipped bundle")?;
+        let restored = match persist::decode_bundle(&files) {
+            Ok(r) => r,
+            Err(e) => {
+                if delta {
+                    f.force_full.store(true, Ordering::Release);
+                }
+                return Err(e)
+                    .context("decoding the leader's shipped bundle");
+            }
+        };
         if let (Some(t), Some(id)) = (tb.as_mut(), decode_span) {
             t.end(id);
         }
@@ -795,6 +938,7 @@ impl VqService {
             );
         }
         if let Some(dir) = &self.state_dir {
+            faults::hit("sync.mirror")?;
             let mirror_span =
                 tb.as_mut().map(|t| t.begin("sync.mirror", root));
             persist::write_bundle(dir, &files).with_context(|| {
@@ -804,6 +948,7 @@ impl VqService {
                 t.end(id);
             }
         }
+        faults::hit("sync.adopt")?;
         let adopt_span =
             tb.as_mut().map(|t| t.begin("sync.adopt", root));
         let epoch = follower_epoch(&restored, &self.telemetry);
@@ -817,6 +962,18 @@ impl VqService {
         // run the clock backwards).
         self.counters.merges.fetch_max(adopted, Ordering::AcqRel);
         self.state_generation.store(ship.generation, Ordering::Release);
+        // Remember the adopted cut so this follower can ship deltas down
+        // the tree (and promote at a remembered generation).
+        self.remember_versions(
+            ship.generation,
+            m.router_version,
+            m.shard_versions.clone(),
+        );
+        let n_files = files.len();
+        *f.held.lock().unwrap_or_else(|e| e.into_inner()) = files;
+        let source = if delta { "delta" } else { "full" };
+        *f.sync_source.lock().unwrap_or_else(|e| e.into_inner()) =
+            source.to_string();
         let lag = ship.leader_version.saturating_sub(adopted);
         f.lag_folds.store(lag, Ordering::Release);
         self.telemetry.gauge("sync.lag_folds").set(lag);
@@ -832,27 +989,120 @@ impl VqService {
             "sync.adopt",
             format!(
                 "adopted generation {} at version {adopted} (router v{}, \
-                 {} files, lag {lag} folds) in {} ms",
+                 {n_files} files via {source}, lag {lag} folds) in {} ms",
                 ship.generation,
                 m.router_version,
-                files.len(),
                 t0.elapsed().as_millis()
             ),
         );
         Ok(true)
     }
 
-    /// `Some(leader address)` when this service is a read-only follower
-    /// — what the front-end turns into `NotLeader` redirects.
+    /// `Some(leader address)` when this service redirects writes — a
+    /// read-only follower (its current sync source) or a demoted leader
+    /// (whoever fenced it). `None` on a serving leader, including a
+    /// follower that promoted itself.
     pub fn follower_of(&self) -> Option<String> {
-        self.follower.as_ref().map(|f| f.leader_addr.clone())
+        if let Some(f) = &self.follower {
+            if f.promoted.load(Ordering::Acquire) {
+                return None;
+            }
+            return Some(
+                f.leader_addr.lock().unwrap_or_else(|e| e.into_inner()).clone(),
+            );
+        }
+        self.demoted.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
-    /// Ship the durable state as one consistent bundle, cut at a
-    /// checkpoint generation (the `FetchState` wire op lands here).
-    /// `have_generation` makes polling cheap: when it matches the
-    /// current generation the shipment carries no files. Leader-only;
-    /// errors without durable state (there is nothing to ship).
+    /// Whether `FetchState` / `FetchChunk` can be answered here instead
+    /// of redirected: leaders (and promoted followers) always — shipping
+    /// still needs a `--state-dir`, which `fetch_state` checks; an
+    /// un-promoted follower only when it mirrors adopted bundles into
+    /// its own `--state-dir` (that is what makes it a relay of the
+    /// fan-out tree); a demoted leader never (its cut is fenced stale).
+    pub fn can_ship_state(&self) -> bool {
+        match &self.follower {
+            Some(_) => self.state_dir.is_some(),
+            None => self
+                .demoted
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .is_none(),
+        }
+    }
+
+    /// Service-level twin of [`VqService::can_ship_state`] for callers
+    /// that bypass the front-end guard (in-process tests, the CLI).
+    fn shippable(&self) -> Result<()> {
+        if let Some(f) = &self.follower {
+            if self.state_dir.is_none() {
+                bail!(
+                    "this follower keeps no mirror --state-dir and cannot \
+                     ship state; fetch it from the leader at {}",
+                    f.leader_addr.lock().unwrap_or_else(|e| e.into_inner())
+                );
+            }
+        } else if let Some(leader) =
+            self.demoted.lock().unwrap_or_else(|e| e.into_inner()).clone()
+        {
+            bail!(
+                "this leader was demoted; fetch state from the new leader \
+                 at {leader}"
+            );
+        }
+        Ok(())
+    }
+
+    /// Remember `(generation → router version, shard versions)` in the
+    /// bounded delta index. Every consistent cut and every adoption
+    /// passes through here, so any generation a requester can
+    /// legitimately hold is indexable until it ages out.
+    fn remember_versions(
+        &self,
+        generation: u64,
+        router_version: u64,
+        shard_versions: Vec<u64>,
+    ) {
+        let mut hist =
+            self.ship_history.lock().unwrap_or_else(|e| e.into_inner());
+        if hist.iter().any(|(g, _, _)| *g == generation) {
+            return;
+        }
+        hist.push((generation, router_version, shard_versions));
+        if hist.len() > SHIP_HISTORY {
+            let drop = hist.len() - SHIP_HISTORY;
+            hist.drain(..drop);
+        }
+    }
+
+    /// The delta against a requester holding `have_generation`, when
+    /// the index still remembers that cut and [`persist::delta_files`]
+    /// agrees the router and shard shape are unchanged. `None` → ship
+    /// the full bundle.
+    fn delta_for(
+        &self,
+        have_generation: u64,
+        bundle: &persist::StateBundle,
+    ) -> Option<Vec<(String, Vec<u8>)>> {
+        let (router_version, shard_versions) = {
+            let hist =
+                self.ship_history.lock().unwrap_or_else(|e| e.into_inner());
+            let (_, rv, sv) =
+                hist.iter().find(|(g, _, _)| *g == have_generation)?;
+            (*rv, sv.clone())
+        };
+        persist::delta_files(bundle, router_version, &shard_versions)
+    }
+
+    /// Ship the durable state, cut at a checkpoint generation (the
+    /// `FetchState` wire op lands here). `have_generation` makes polling
+    /// cheap: when it matches the current generation the shipment
+    /// carries no files. When the requester's generation is in the
+    /// delta index and the router has not moved, only the shard files
+    /// whose version advanced are shipped (`delta = true`); a full
+    /// bundle that outgrows one frame ships as chunk 1 of N, the rest
+    /// via `FetchChunk`. Served by leaders and by mirror-keeping
+    /// followers (the fan-out tree); errors without durable state.
     ///
     /// When a trace is live, the consistent-cut read and the shipment
     /// assembly land as `state.cut` / `state.ship` spans under `parent`
@@ -863,13 +1113,7 @@ impl VqService {
         mut trace: TraceSink<'_>,
         parent: u64,
     ) -> Result<StateShipment> {
-        if let Some(f) = &self.follower {
-            bail!(
-                "this server is a read-only follower; fetch state from the \
-                 leader at {}",
-                f.leader_addr
-            );
-        }
+        self.shippable()?;
         let dir = self.state_dir.as_ref().ok_or_else(|| {
             anyhow!(
                 "state shipping needs durable state (start the leader with \
@@ -886,10 +1130,11 @@ impl VqService {
             return Ok(StateShipment {
                 generation: have_generation,
                 leader_version,
-                files: Vec::new(),
+                ..StateShipment::default()
             });
         }
         let t0 = Instant::now();
+        faults::hit("state.cut")?;
         let cut_span = trace.as_mut().map(|tb| tb.begin("state.cut", parent));
         let bundle = persist::read_bundle(dir)?.ok_or_else(|| {
             anyhow!("{} holds no checkpointed state yet", dir.display())
@@ -897,37 +1142,286 @@ impl VqService {
         if let (Some(tb), Some(id)) = (trace.as_mut(), cut_span) {
             tb.end(id);
         }
+        // Index this cut so the requester's NEXT poll can be a delta.
+        self.remember_cut(&bundle);
         if bundle.generation == have_generation {
             return Ok(StateShipment {
                 generation: bundle.generation,
                 leader_version,
-                files: Vec::new(),
+                ..StateShipment::default()
             });
         }
+        faults::hit("state.ship")?;
         let ship_span = trace.as_mut().map(|tb| tb.begin("state.ship", parent));
-        self.telemetry.journal().info(
-            "state.ship",
-            format!(
-                "shipped generation {} ({} files, {} bytes) in {} ms",
-                bundle.generation,
-                bundle.files.len(),
-                bundle.total_bytes(),
-                t0.elapsed().as_millis()
-            ),
-        );
-        let shipment = StateShipment {
-            generation: bundle.generation,
-            leader_version,
-            files: bundle
-                .files
-                .into_iter()
-                .map(|(name, bytes)| StateFile { name, bytes })
-                .collect(),
-        };
+        let shipment =
+            self.cut_to_shipment(bundle, have_generation, leader_version, t0);
         if let (Some(tb), Some(id)) = (trace.as_mut(), ship_span) {
             tb.end(id);
         }
         Ok(shipment)
+    }
+
+    /// [`VqService::fetch_state`]'s delta index entry for `bundle`.
+    fn remember_cut(&self, bundle: &persist::StateBundle) {
+        self.remember_versions(
+            bundle.generation,
+            bundle.manifest.router_version,
+            bundle.manifest.shard_versions.clone(),
+        );
+    }
+
+    /// Shape a consistent cut into the wire's first shipment frame: a
+    /// single-frame **delta** when the requester's generation is in the
+    /// delta index and the delta fits the chunk budget; otherwise the
+    /// full bundle — chunk 1 of N when it outgrows one frame.
+    fn cut_to_shipment(
+        &self,
+        bundle: persist::StateBundle,
+        have_generation: u64,
+        leader_version: u64,
+        t0: Instant,
+    ) -> StateShipment {
+        if let Some(files) = self.delta_for(have_generation, &bundle) {
+            let bytes: usize = files.iter().map(|(_, b)| b.len()).sum();
+            if bytes <= SHIP_CHUNK_BUDGET {
+                self.telemetry.journal().info(
+                    "state.ship",
+                    format!(
+                        "shipped generation {} as a delta over \
+                         {have_generation} ({} files, {bytes} bytes) in \
+                         {} ms",
+                        bundle.generation,
+                        files.len(),
+                        t0.elapsed().as_millis()
+                    ),
+                );
+                return StateShipment {
+                    generation: bundle.generation,
+                    leader_version,
+                    chunk: 1,
+                    chunks: 1,
+                    delta: true,
+                    files: whole_state_files(files),
+                };
+            }
+        }
+        let total_bytes = bundle.total_bytes();
+        let parts = persist::chunk_files(&bundle.files, SHIP_CHUNK_BUDGET);
+        let chunks = parts.len().max(1) as u32;
+        self.telemetry.journal().info(
+            "state.ship",
+            format!(
+                "shipped generation {} ({} files, {total_bytes} bytes, \
+                 {chunks} chunks) in {} ms",
+                bundle.generation,
+                bundle.files.len(),
+                t0.elapsed().as_millis()
+            ),
+        );
+        StateShipment {
+            generation: bundle.generation,
+            leader_version,
+            chunk: 1,
+            chunks,
+            delta: false,
+            files: parts
+                .into_iter()
+                .next()
+                .map_or(Vec::new(), part_state_files),
+        }
+    }
+
+    /// One numbered chunk of a full-bundle shipment (the `FetchChunk`
+    /// wire op). Deterministic: the same generation always cuts into
+    /// the same parts, so a client fetches 2..=N after the first frame
+    /// — and a new checkpoint generation landing mid-collection errors
+    /// loudly instead of splicing two different cuts together.
+    pub fn fetch_chunk(
+        &self,
+        generation: u64,
+        chunk: u32,
+        mut trace: TraceSink<'_>,
+        parent: u64,
+    ) -> Result<StateShipment> {
+        self.shippable()?;
+        let dir = self.state_dir.as_ref().ok_or_else(|| {
+            anyhow!(
+                "state shipping needs durable state (start the leader with \
+                 --state-dir)"
+            )
+        })?;
+        faults::hit("state.cut")?;
+        let cut_span = trace.as_mut().map(|tb| tb.begin("state.cut", parent));
+        let bundle = persist::read_bundle(dir)?.ok_or_else(|| {
+            anyhow!("{} holds no checkpointed state yet", dir.display())
+        })?;
+        if let (Some(tb), Some(id)) = (trace.as_mut(), cut_span) {
+            tb.end(id);
+        }
+        if bundle.generation != generation {
+            bail!(
+                "chunk fetch raced a new checkpoint generation (chunk \
+                 {chunk} of generation {generation} asked, the state dir \
+                 now carries {}); restart the fetch",
+                bundle.generation
+            );
+        }
+        let parts = persist::chunk_files(&bundle.files, SHIP_CHUNK_BUDGET);
+        let chunks = parts.len().max(1) as u32;
+        if chunk == 0 || chunk > chunks {
+            bail!(
+                "generation {generation} cuts into {chunks} chunks; there \
+                 is no chunk {chunk}"
+            );
+        }
+        faults::hit("state.ship")?;
+        let files = parts
+            .into_iter()
+            .nth(chunk as usize - 1)
+            .map_or(Vec::new(), part_state_files);
+        Ok(StateShipment {
+            generation,
+            leader_version: self.version(),
+            chunk,
+            chunks,
+            delta: false,
+            files,
+        })
+    }
+
+    /// The `Demote` wire op lands here: a peer claiming leadership at
+    /// `generation` — strictly above ours, the fencing rule — tells
+    /// this service to stand down and redirect to `new_leader`. On an
+    /// old leader that returned after a failover this flips every write
+    /// and state fetch into a `NotLeader` redirect; on a follower it
+    /// re-points the sync source (and un-promotes a rival promotee, so
+    /// a partitioned pair converges on the higher generation).
+    pub fn demote(&self, generation: u64, new_leader: &str) -> Result<()> {
+        let own = self.state_generation.load(Ordering::Acquire);
+        if generation <= own {
+            bail!(
+                "refusing demotion: presented generation {generation} is \
+                 not above this service's {own}"
+            );
+        }
+        if new_leader.is_empty() {
+            bail!("refusing demotion: no leader address to redirect to");
+        }
+        match &self.follower {
+            Some(f) => {
+                *f.leader_addr.lock().unwrap_or_else(|e| e.into_inner()) =
+                    new_leader.to_string();
+                f.promoted.store(false, Ordering::Release);
+                f.patrol_done.store(false, Ordering::Release);
+                f.force_full.store(true, Ordering::Release);
+                f.misses.store(0, Ordering::Release);
+            }
+            None => {
+                *self.demoted.lock().unwrap_or_else(|e| e.into_inner()) =
+                    Some(new_leader.to_string());
+            }
+        }
+        self.telemetry.journal().info(
+            "failover.demote",
+            format!(
+                "demoted under generation {generation} (own {own}); \
+                 redirecting to the leader at {new_leader}"
+            ),
+        );
+        Ok(())
+    }
+
+    /// Automatic failover: this follower missed `misses` consecutive
+    /// sync polls, crossing `--miss-threshold`. Its mirror dir is a
+    /// byte-identical cut of the last adopted generation, so taking
+    /// leadership is: rewrite the mirror's manifest a fencing jump
+    /// ahead (any generation comparison now sees this copy as strictly
+    /// newer) and stop redirecting. Reads never drop — the adopted
+    /// epoch keeps serving throughout.
+    fn promote(&self, misses: u64) -> Result<()> {
+        let f = self
+            .follower
+            .as_ref()
+            .ok_or_else(|| anyhow!("promote on a leader"))?;
+        let dir = self.state_dir.as_ref().ok_or_else(|| {
+            anyhow!("failover needs a mirror --state-dir to promote from")
+        })?;
+        faults::hit("promote.manifest")?;
+        let bundle = persist::read_bundle(dir)?.ok_or_else(|| {
+            anyhow!("{} holds no mirrored state to promote", dir.display())
+        })?;
+        let mut m = bundle.manifest;
+        let adopted = m.generation;
+        m.generation += PROMOTE_GENERATION_JUMP;
+        m.save(dir)?;
+        faults::hit("promote.swap")?;
+        self.remember_versions(
+            m.generation,
+            m.router_version,
+            m.shard_versions.clone(),
+        );
+        self.state_generation.store(m.generation, Ordering::Release);
+        f.lag_folds.store(0, Ordering::Release);
+        self.telemetry.gauge("sync.lag_folds").set(0);
+        f.promoted.store(true, Ordering::Release);
+        self.telemetry.counter("failover.promotions").add(1);
+        let old = f.leader_addr.lock().unwrap_or_else(|e| e.into_inner());
+        self.telemetry.journal().info(
+            "failover.promote",
+            format!(
+                "promoted to leader at generation {} (adopted {adopted}, \
+                 {misses} missed sync polls against {old})",
+                m.generation
+            ),
+        );
+        Ok(())
+    }
+
+    /// One probe of the demote patrol: a promoted leader keeps knocking
+    /// on the OLD leader's address, and the moment something answers
+    /// there, sends `Demote` with its own (higher) generation and
+    /// advertised address. A dead address is silence (the common case);
+    /// an acknowledged demote ends the patrol — the old leader now
+    /// redirects its clients here.
+    fn demote_patrol(&self) {
+        let Some(f) = &self.follower else { return };
+        let Some(me) = self
+            .advertise
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+        else {
+            return; // not serving over TCP; nothing to redirect to
+        };
+        if faults::hit("demote.patrol").is_err() {
+            return; // injected partition: skip this probe
+        }
+        let old =
+            f.leader_addr.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        let Ok(mut client) =
+            Client::connect_with(old.as_str(), SYNC_CONNECT_TIMEOUT, 0)
+        else {
+            return;
+        };
+        let generation = self.state_generation.load(Ordering::Acquire);
+        if client.demote(generation, me.as_str()).is_ok() {
+            f.patrol_done.store(true, Ordering::Release);
+            self.telemetry.journal().info(
+                "failover.demote",
+                format!(
+                    "old leader {old} acknowledged demotion under \
+                     generation {generation}; its clients now redirect \
+                     to {me}"
+                ),
+            );
+        }
+    }
+
+    /// Record the address this service serves on (the TCP front-end
+    /// calls this once it binds) — what a promotion advertises.
+    pub(crate) fn set_advertise_addr(&self, addr: String) {
+        *self.advertise.lock().unwrap_or_else(|e| e.into_inner()) =
+            Some(addr);
     }
 
     /// The serving epoch — one consistent (router, fleets) pair. O(1)
@@ -1133,10 +1627,17 @@ impl VqService {
     /// checkpointed versions (the protocol's `Checkpoint` op lands here).
     pub fn checkpoint_now(&self) -> Result<Vec<u64>> {
         if let Some(f) = &self.follower {
+            if f.promoted.load(Ordering::Acquire) {
+                return Err(anyhow!(
+                    "this server was promoted from a follower; its mirror \
+                     dir already carries the adopted state (restart it as \
+                     a leader to resume checkpointing)"
+                ));
+            }
             return Err(anyhow!(
                 "this server is a read-only follower; checkpoints belong on \
                  the leader at {}",
-                f.leader_addr
+                f.leader_addr.lock().unwrap_or_else(|e| e.into_inner())
             ));
         }
         if self.state_dir.is_none() {
@@ -1173,11 +1674,18 @@ impl VqService {
     /// not any live fleet, are the migration source.
     pub fn rebalance(&self) -> Result<RebalanceOutcome> {
         if let Some(f) = &self.follower {
+            if f.promoted.load(Ordering::Acquire) {
+                bail!(
+                    "this server was promoted from a follower and has no \
+                     training fleets to migrate; restart it as a leader on \
+                     its mirror --state-dir first"
+                );
+            }
             bail!(
                 "this server is a read-only follower; rebalances belong on \
                  the leader at {} (the bumped epoch replicates here on the \
                  next sync)",
-                f.leader_addr
+                f.leader_addr.lock().unwrap_or_else(|e| e.into_inner())
             );
         }
         let _lifecycle = self.lifecycle.lock().unwrap_or_else(|e| e.into_inner());
@@ -1627,10 +2135,17 @@ impl VqService {
     /// counts.
     pub fn ingest(&self, points: &[f32]) -> Result<(u64, u64)> {
         if let Some(f) = &self.follower {
+            if f.promoted.load(Ordering::Acquire) {
+                return Err(anyhow!(
+                    "this server was promoted from a follower and serves \
+                     reads only; restart it as a leader on its mirror \
+                     --state-dir to resume training"
+                ));
+            }
             return Err(anyhow!(
                 "this server is a read-only follower; ingest belongs on the \
                  leader at {}",
-                f.leader_addr
+                f.leader_addr.lock().unwrap_or_else(|e| e.into_inner())
             ));
         }
         if points.is_empty() {
@@ -1742,11 +2257,13 @@ impl VqService {
                 .as_ref()
                 .map(|d| d.display().to_string()),
             last_checkpoint: self.last_checkpoint(),
-            role: match &self.follower {
+            // A promoted follower reports (and serves) as a leader; a
+            // demoted leader as a follower of whoever fenced it.
+            role: match self.follower_of() {
                 Some(_) => "follower".into(),
                 None => "leader".into(),
             },
-            leader_addr: self.follower.as_ref().map(|f| f.leader_addr.clone()),
+            leader_addr: self.follower_of(),
             sync_lag_folds: self
                 .follower
                 .as_ref()
@@ -1757,6 +2274,9 @@ impl VqService {
                     .unwrap_or_else(|e| e.into_inner())
                     .elapsed()
                     .as_millis() as u64
+            }),
+            sync_source: self.follower.as_ref().map_or_else(String::new, |f| {
+                f.sync_source.lock().unwrap_or_else(|e| e.into_inner()).clone()
             }),
             uptime_ms: self.telemetry.uptime_ms(),
             op_encode: self.tel.op_encode.requests.get(),
@@ -2344,6 +2864,32 @@ fn shipped_files(files: Vec<StateFile>) -> Vec<(String, Vec<u8>)> {
     files.into_iter().map(|f| (f.name, f.bytes)).collect()
 }
 
+/// Whole files as wire shipment entries (offset 0, full length).
+fn whole_state_files(files: Vec<(String, Vec<u8>)>) -> Vec<StateFile> {
+    files
+        .into_iter()
+        .map(|(name, bytes)| StateFile {
+            name,
+            offset: 0,
+            file_len: bytes.len() as u64,
+            bytes,
+        })
+        .collect()
+}
+
+/// One chunk's file parts as wire shipment entries.
+fn part_state_files(parts: Vec<persist::FilePart>) -> Vec<StateFile> {
+    parts
+        .into_iter()
+        .map(|p| StateFile {
+            name: p.name,
+            offset: p.offset,
+            file_len: p.file_len,
+            bytes: p.bytes,
+        })
+        .collect()
+}
+
 /// Build a fleetless epoch out of restored (shipped) state: the shard
 /// stores hold the shipped codebooks verbatim at their shipped versions,
 /// ingest channels are empty (the service-level follower guard answers
@@ -2396,6 +2942,11 @@ fn follower_epoch(restored: &RestoredState, telemetry: &Telemetry) -> Epoch {
 /// retries on the next tick; the follower keeps serving its current
 /// epoch throughout, which is the whole point of asynchronous, delayed
 /// state exchange.
+///
+/// With `--miss-threshold N` armed, `N` *consecutive* failed polls
+/// promote this follower from its mirror dir ([`VqService::promote`]);
+/// the loop then turns into the demote patrol against the old leader's
+/// address. Any successful poll resets the miss count.
 fn spawn_follower_sync(service: &Arc<VqService>) -> JoinHandle<()> {
     let weak: Weak<VqService> = Arc::downgrade(service);
     let sync_every = service
@@ -2403,6 +2954,7 @@ fn spawn_follower_sync(service: &Arc<VqService>) -> JoinHandle<()> {
         .as_ref()
         .expect("spawn_follower_sync on a leader")
         .sync_every;
+    let miss_threshold = service.serve.miss_threshold;
     std::thread::Builder::new()
         .name("dalvq-follower-sync".into())
         .spawn(move || loop {
@@ -2420,12 +2972,34 @@ fn spawn_follower_sync(service: &Arc<VqService>) -> JoinHandle<()> {
             if svc.closing.load(Ordering::Acquire) {
                 return;
             }
-            if let Err(e) = svc.sync_once() {
-                if !svc.closing.load(Ordering::Acquire) {
-                    eprintln!(
-                        "dalvq follower: sync with the leader failed (still \
-                         serving the last adopted epoch; will retry): {e:#}"
-                    );
+            let Some(f) = svc.follower.as_ref() else { return };
+            if f.promoted.load(Ordering::Acquire) {
+                // Promoted: no leader to sync from. Patrol the old
+                // address instead, so a returning stale leader demotes.
+                if !f.patrol_done.load(Ordering::Acquire) {
+                    svc.demote_patrol();
+                }
+                continue;
+            }
+            match svc.sync_once() {
+                Ok(_) => f.misses.store(0, Ordering::Release),
+                Err(e) => {
+                    let misses = f.misses.fetch_add(1, Ordering::AcqRel) + 1;
+                    if !svc.closing.load(Ordering::Acquire) {
+                        eprintln!(
+                            "dalvq follower: sync with the leader failed \
+                             (still serving the last adopted epoch; will \
+                             retry): {e:#}"
+                        );
+                    }
+                    if miss_threshold > 0 && misses >= miss_threshold {
+                        if let Err(pe) = svc.promote(misses) {
+                            eprintln!(
+                                "dalvq follower: failover promotion failed \
+                                 (will retry next poll): {pe:#}"
+                            );
+                        }
+                    }
                 }
             }
         })

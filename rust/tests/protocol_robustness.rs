@@ -14,7 +14,7 @@
 use dalvq::serve::protocol::{
     read_frame, write_frame, Decoder, MetricEvent, MetricHist, MetricsReply,
     Request, Response, StateFile, StateShipment, StatsReply, WireSpan,
-    WireTrace, MAX_FRAME,
+    WireTrace, FETCH_ANY_GENERATION, MAX_FRAME,
 };
 use dalvq::util::Rng;
 
@@ -57,7 +57,7 @@ fn rand_bytes(rng: &mut Rng, max_len: usize) -> Vec<u8> {
 /// Any request that is not a trace envelope (the envelope wraps exactly
 /// these — nesting is a decode error).
 fn rand_bare_request(rng: &mut Rng) -> Request {
-    match rng.usize(10) {
+    match rng.usize(12) {
         0 => Request::Encode { points: rand_f32s(rng, 64) },
         1 => Request::Nearest { points: rand_f32s(rng, 64) },
         2 => Request::Distortion { points: rand_f32s(rng, 64) },
@@ -67,6 +67,14 @@ fn rand_bare_request(rng: &mut Rng) -> Request {
         6 => Request::FetchState { have_generation: rng.next_u64() },
         7 => Request::Metrics { max_events: rng.next_u64() as u32 },
         8 => Request::Trace { max_traces: rng.next_u64() as u32 },
+        9 => Request::FetchChunk {
+            generation: rng.next_u64(),
+            chunk: rng.next_u64() as u32,
+        },
+        10 => Request::Demote {
+            generation: rng.next_u64(),
+            leader: rand_string(rng, 32),
+        },
         _ => Request::Stats,
     }
 }
@@ -117,7 +125,8 @@ fn rand_metric_pairs(rng: &mut Rng, max_len: usize) -> Vec<(String, u64)> {
 
 /// Any response that is not a trace envelope.
 fn rand_bare_response(rng: &mut Rng) -> Response {
-    match rng.usize(13) {
+    match rng.usize(14) {
+        13 => Response::DemoteAck,
         12 => Response::Throttled {
             retry_after_ms: rng.next_u64(),
             message: rand_string(rng, 40),
@@ -158,11 +167,16 @@ fn rand_bare_response(rng: &mut Rng) -> Response {
         9 => Response::State(StateShipment {
             generation: rng.next_u64(),
             leader_version: rng.next_u64(),
+            chunk: rng.next_u64() as u32,
+            chunks: rng.next_u64() as u32,
+            delta: rng.bool(0.5),
             files: {
                 let n = rng.usize(5);
                 (0..n)
                     .map(|_| StateFile {
                         name: rand_string(rng, 24),
+                        offset: rng.next_u64(),
+                        file_len: rng.next_u64(),
                         bytes: rand_bytes(rng, 96),
                     })
                     .collect()
@@ -221,6 +235,7 @@ fn rand_bare_response(rng: &mut Rng) -> Response {
             op_nearest: rng.next_u64(),
             op_distortion: rng.next_u64(),
             op_ingest: rng.next_u64(),
+            sync_source: rand_string(rng, 8),
         }),
         _ => Response::Error { message: rand_string(rng, 40) },
     }
@@ -312,11 +327,13 @@ fn empty_payload_is_an_error() {
 
 #[test]
 fn unknown_opcodes_err_for_both_directions() {
-    let known_req =
-        [0x01, 0x02, 0x03, 0x04, 0x05, 0x06, 0x07, 0x08, 0x09, 0x0A, 0x0B];
+    let known_req = [
+        0x01, 0x02, 0x03, 0x04, 0x05, 0x06, 0x07, 0x08, 0x09, 0x0A, 0x0B,
+        0x0C, 0x0D,
+    ];
     let known_resp = [
         0x81, 0x82, 0x83, 0x84, 0x85, 0x86, 0x87, 0x88, 0x89, 0x8A, 0x8B,
-        0xFD, 0xFE, 0xFF,
+        0x8C, 0xFD, 0xFE, 0xFF,
     ];
     for op in 0..=255u8 {
         if !known_req.contains(&op) {
@@ -356,11 +373,12 @@ fn lying_element_counts_err_without_overallocating() {
     // default tail — six empty vectors/strings at one u32 count each
     // (shard_versions, shard_merges, shard_ingest, shard_shed,
     // last_checkpoint, state_dir), the two empty replication strings
-    // (role, leader_addr) and the seven trailing u64s (sync_lag_folds,
-    // last_sync, uptime_ms and the four per-op counters) = 8 * 4 +
-    // 7 * 8 = 88 bytes — and replace with a lying pair
+    // (role, leader_addr), the seven trailing u64s (sync_lag_folds,
+    // last_sync, uptime_ms and the four per-op counters) and the empty
+    // sync_source string = 9 * 4 + 7 * 8 = 92 bytes — and replace with
+    // a lying pair
     let good = Response::Stats(StatsReply::default()).encode();
-    let mut wire = good[..good.len() - 88].to_vec();
+    let mut wire = good[..good.len() - 92].to_vec();
     wire.extend_from_slice(&9u32.to_le_bytes()); // shard_versions: claims 9
     wire.extend_from_slice(&0u32.to_le_bytes()); // shard_merges: 0
     assert!(Response::decode(&wire).is_err());
@@ -386,30 +404,69 @@ fn lying_element_counts_err_without_overallocating() {
     assert!(Response::decode(&wire).is_err());
 
     // Stats whose state_dir length outruns the payload: strip the
-    // post-state_dir tail (role + leader_addr counts, seven u64s = 64
-    // bytes) plus the state_dir count itself, then lie about its length
+    // post-state_dir tail (role + leader_addr + sync_source counts,
+    // seven u64s = 68 bytes) plus the state_dir count itself, then lie
+    // about its length
     let good = Response::Stats(StatsReply::default()).encode();
-    let mut wire = good[..good.len() - 68].to_vec();
+    let mut wire = good[..good.len() - 72].to_vec();
     wire.extend_from_slice(&1_000u32.to_le_bytes());
     wire.extend_from_slice(b"short");
+    assert!(Response::decode(&wire).is_err());
+
+    // Stats whose sync_source length lies: drop the trailing empty
+    // sync_source string (one u32 count) and replace it with a count
+    // that outruns the payload
+    let good = Response::Stats(StatsReply::default()).encode();
+    let mut wire = good[..good.len() - 4].to_vec();
+    wire.extend_from_slice(&64u32.to_le_bytes());
+    wire.extend_from_slice(b"delta");
     assert!(Response::decode(&wire).is_err());
 
     // State whose file count lies (claims a file, carries none)
     let mut wire = vec![0x88u8];
     wire.extend_from_slice(&1u64.to_le_bytes()); // generation
     wire.extend_from_slice(&2u64.to_le_bytes()); // leader_version
+    wire.extend_from_slice(&1u32.to_le_bytes()); // chunk
+    wire.extend_from_slice(&1u32.to_le_bytes()); // chunks
+    wire.push(0); // delta: full
     wire.extend_from_slice(&1u32.to_le_bytes()); // claims 1 file
     assert!(Response::decode(&wire).is_err());
 
-    // State whose file-bytes length outruns the payload
+    // State whose file-bytes length outruns the payload (the per-file
+    // offset and file_len fields present and sane — only the bytes lie)
     let mut wire = vec![0x88u8];
     wire.extend_from_slice(&1u64.to_le_bytes());
     wire.extend_from_slice(&2u64.to_le_bytes());
-    wire.extend_from_slice(&1u32.to_le_bytes());
+    wire.extend_from_slice(&2u32.to_le_bytes()); // chunk 2
+    wire.extend_from_slice(&3u32.to_le_bytes()); // of 3
+    wire.push(1); // delta
+    wire.extend_from_slice(&1u32.to_le_bytes()); // one file
     wire.extend_from_slice(&1u32.to_le_bytes()); // name len 1
     wire.push(b'x');
+    wire.extend_from_slice(&4096u64.to_le_bytes()); // offset
+    wire.extend_from_slice(&8192u64.to_le_bytes()); // file_len
     wire.extend_from_slice(&u32::MAX.to_le_bytes()); // bytes len lies
     assert!(Response::decode(&wire).is_err());
+
+    // State cut off inside the chunk header (pre-v2 encoders stopped
+    // after leader_version — their frames must now be rejected, not
+    // misread as a zero-file shipment)
+    let mut wire = vec![0x88u8];
+    wire.extend_from_slice(&1u64.to_le_bytes());
+    wire.extend_from_slice(&2u64.to_le_bytes());
+    assert!(Response::decode(&wire).is_err());
+
+    // FetchChunk cut off after the generation (chunk index missing)
+    let mut wire = vec![0x0Cu8];
+    wire.extend_from_slice(&7u64.to_le_bytes());
+    assert!(Request::decode(&wire).is_err());
+
+    // Demote whose leader-address length outruns the payload
+    let mut wire = vec![0x0Du8];
+    wire.extend_from_slice(&7u64.to_le_bytes()); // generation
+    wire.extend_from_slice(&500u32.to_le_bytes()); // addr len lies
+    wire.extend_from_slice(b"1.2.3.4:5");
+    assert!(Request::decode(&wire).is_err());
 
     // Metrics whose counter count lies (claims u32::MAX, carries none) —
     // each counter consumes at least 12 bytes (name count + value), so
@@ -581,6 +638,7 @@ fn stats_follower_fields_roundtrip_exactly() {
         op_nearest: 500,
         op_distortion: 125,
         op_ingest: 0, // a follower answers NotLeader to every ingest
+        sync_source: "delta".into(),
     };
     let wire = Response::Stats(follower.clone()).encode();
     match Response::decode(&wire).unwrap() {
@@ -590,6 +648,7 @@ fn stats_follower_fields_roundtrip_exactly() {
             assert_eq!(s.leader_addr, "10.1.2.3:7171");
             assert_eq!(s.sync_lag_folds, 7);
             assert_eq!(s.last_sync, 312);
+            assert_eq!(s.sync_source, "delta");
         }
         other => panic!("expected Stats, got {other:?}"),
     }
@@ -597,6 +656,60 @@ fn stats_follower_fields_roundtrip_exactly() {
     let leader = StatsReply { role: "leader".into(), ..StatsReply::default() };
     let wire = Response::Stats(leader.clone()).encode();
     assert_eq!(Response::decode(&wire).unwrap(), Response::Stats(leader));
+}
+
+/// The replication-v2 wire shapes survive exactly: a whole-cut shipment
+/// carries the default chunk header (chunk 1 of 1, not a delta), a
+/// mid-cut delta piece keeps its byte offsets verbatim, and the three
+/// new ops (`FetchChunk`, `Demote`, `DemoteAck`) roundtrip at their
+/// extremes.
+#[test]
+fn replication_v2_shapes_roundtrip_exactly() {
+    // A whole cut: the default header is what single-frame replies carry.
+    let whole = StateShipment {
+        generation: 3,
+        leader_version: 41,
+        files: vec![StateFile {
+            name: "manifest.json".into(),
+            offset: 0,
+            file_len: 2,
+            bytes: vec![b'{', b'}'],
+        }],
+        ..StateShipment::default()
+    };
+    assert_eq!((whole.chunk, whole.chunks, whole.delta), (1, 1, false));
+    let wire = Response::State(whole.clone()).encode();
+    assert_eq!(Response::decode(&wire).unwrap(), Response::State(whole));
+
+    // A mid-cut piece: offsets and the delta flag must not be coerced.
+    let piece = StateShipment {
+        generation: u64::MAX - 1,
+        leader_version: u64::MAX,
+        chunk: 2,
+        chunks: 7,
+        delta: true,
+        files: vec![StateFile {
+            name: "shard_0003.bin".into(),
+            offset: 63 << 20,
+            file_len: 1 << 40,
+            bytes: vec![0xAB; 17],
+        }],
+    };
+    let wire = Response::State(piece.clone()).encode();
+    assert_eq!(Response::decode(&wire).unwrap(), Response::State(piece));
+
+    for req in [
+        Request::FetchState { have_generation: FETCH_ANY_GENERATION },
+        Request::FetchChunk { generation: 0, chunk: 1 },
+        Request::FetchChunk { generation: u64::MAX, chunk: u32::MAX },
+        Request::Demote { generation: 1 << 20, leader: "10.0.0.1:7171".into() },
+        Request::Demote { generation: u64::MAX, leader: String::new() },
+    ] {
+        let wire = req.encode();
+        assert_eq!(Request::decode(&wire).unwrap(), req, "{req:?}");
+    }
+    let wire = Response::DemoteAck.encode();
+    assert_eq!(Response::decode(&wire).unwrap(), Response::DemoteAck);
 }
 
 /// The trace envelope is a backward-compatible *extension*: a bare op's

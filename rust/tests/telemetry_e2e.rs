@@ -119,15 +119,19 @@ fn follower_reports_sync_adoptions_and_lag_through_the_metrics_op() {
     );
 
     // Drive leader training until the follower adopts a *new* generation
-    // (a second sync.adopt event beyond the bootstrap one).
+    // (a second sync.adopt event beyond the bootstrap one) — and that
+    // steady-state adoption must arrive as a delta, not a full refetch.
     let v0 = follower.version();
     let mut stream_t = 0u64;
-    wait_for(30, "a post-bootstrap adoption", || {
+    wait_for(30, "a post-bootstrap delta adoption", || {
         let batch = cfg.data.mixture.generate(128, cfg.seed, 2 + stream_t);
         stream_t += 1;
         lclient.ingest(&batch).unwrap();
         std::thread::sleep(Duration::from_millis(20));
         follower.version() > v0
+            && fclient.metrics(64).unwrap().events.iter().any(|e| {
+                e.kind == "sync.adopt" && e.message.contains("via delta")
+            })
     });
 
     let m = fclient.metrics(64).unwrap();
@@ -146,6 +150,38 @@ fn follower_reports_sync_adoptions_and_lag_through_the_metrics_op() {
         m.gauges
     );
     assert!(m.uptime_ms > 0);
+
+    // The sync tier accounts its wire bytes by source. The bootstrap
+    // restore was a full bundle; the steady-state adoptions above were
+    // deltas — and a delta sync must move strictly fewer bytes per
+    // adoption than a full one (the whole point of shipping deltas).
+    let delta_bytes = counter(&m, "sync.delta_bytes");
+    let full_bytes = counter(&m, "sync.full_bytes");
+    assert!(delta_bytes > 0, "no delta bytes accounted in {:?}", m.counters);
+    assert!(full_bytes > 0, "the bootstrap full fetch went unaccounted");
+    let deltas = m
+        .events
+        .iter()
+        .filter(|e| e.kind == "sync.adopt" && e.message.contains("via delta"))
+        .count() as u64;
+    let fulls = 1 + m
+        .events
+        .iter()
+        .filter(|e| e.kind == "sync.adopt" && e.message.contains("via full"))
+        .count() as u64; // the bootstrap restore + any forced refetches
+    assert!(
+        delta_bytes / deltas < full_bytes / fulls,
+        "a delta sync ({delta_bytes} B / {deltas}) must move fewer bytes \
+         than a full one ({full_bytes} B / {fulls})"
+    );
+    // a healthy follower never promotes itself
+    assert_eq!(counter(&m, "failover.promotions"), 0, "{:?}", m.counters);
+
+    // The Stats surface tells the same story: the last adoption arrived
+    // as a delta on the follower, while the leader (which never syncs)
+    // reports no source at all.
+    assert_eq!(fclient.stats().unwrap().sync_source, "delta");
+    assert_eq!(lclient.stats().unwrap().sync_source, "");
 
     // The leader's plane journals the producer side of the same story:
     // checkpoint flushes and the state bundles it shipped to the follower.
